@@ -1,0 +1,72 @@
+//! END-TO-END DRIVER (Fig 8c analogue): the full system on a real workload.
+//!
+//! Generates the paper's large synthetic tensor (1024x512^3 at --scale 1;
+//! default --scale 8 -> 128x64^3 ~ 0.26 GB f64) *blockwise and distributed*
+//! (never materializing the tensor on one rank), spills chunks through the
+//! disk-backed chunk store (the Zarr path), runs the distributed nTT on a
+//! 2x2x2x2 thread grid with the PJRT backend where artifact shapes match,
+//! and reports the paper's headline metrics: compression ratio, per-stage
+//! relative error, and the full compute/comm/IO time breakdown + cluster
+//! model. Recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example large_compression [-- --scale 8]
+
+use dntt::coordinator::{run_job, BackendChoice, InputSpec, JobConfig};
+use dntt::dist::chunkstore::SpillMode;
+use dntt::dist::ProcGrid;
+use dntt::nmf::NmfConfig;
+use dntt::ttrain::{SyntheticTt, TtConfig};
+use std::path::{Path, PathBuf};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    dntt::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let scale: usize = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let nd = |x: usize| (x / scale).max(8);
+    let dims = vec![nd(1024), nd(512), nd(512), nd(512)];
+    let ranks: Vec<usize> = [20usize, 30, 40].iter().map(|&r| r.min(nd(512) / 2)).collect();
+    let nbytes = dims.iter().product::<usize>() * 8;
+    println!(
+        "workload: {:?} (ranks {:?}, {:.2} GB f64, scale {})",
+        dims,
+        ranks,
+        nbytes as f64 / 1e9,
+        scale
+    );
+
+    let spill_dir = std::env::temp_dir().join("dntt_e2e_spill");
+    let job = JobConfig {
+        tt: TtConfig {
+            // Fixed ranks, as in the paper's 500 GB experiment.
+            fixed_ranks: Some(ranks.clone()),
+            nmf: NmfConfig { max_iters: 30, ..Default::default() },
+            ..Default::default()
+        },
+        backend: if Path::new("artifacts/manifest.json").exists() {
+            BackendChoice::Pjrt(PathBuf::from("artifacts"))
+        } else {
+            BackendChoice::Native
+        },
+        spill: SpillMode::Disk(spill_dir.clone()),
+        check_error: dims.iter().product::<usize>() <= 20_000_000,
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(dims, ranks, 500_000_000)),
+            ProcGrid::new(vec![2, 2, 2, 2])?,
+        )
+    };
+    let report = run_job(&job)?;
+    println!("{}", report.summary());
+    assert!(report.output.tt.is_nonneg());
+    assert!(report.compression > 100.0, "expected high compression, got {}", report.compression);
+    println!(
+        "E2E OK: compression {:.0}x, wall {:.1}s, pjrt hits {}",
+        report.compression, report.wall_secs, report.pjrt_hits
+    );
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Figs 5-7: strong scaling, weak scaling and TT-rank scaling of the
+//! distributed nTT, with the paper's compute/communication/I-O breakdown
+//! (GR/MM/MAD/Norm/INIT vs AG/AR/RSC vs IO/Reshape) and the α-β cluster
+//! model projecting thread-rank measurements onto a Grizzly-like machine.
+//!
+//!     cargo run --release --example scaling_study [-- --full]
+
+use dntt::bench::workloads::{print_scaling, scaling_run, ScalingMode, ScalingParams};
+use dntt::nmf::NmfAlgo;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    dntt::util::logging::init();
+    let full = std::env::args().any(|a| a == "--full");
+    // Scaled-down defaults (one physical core): 32^4 tensor, p = 16..64.
+    let params = ScalingParams {
+        shrink: if full { 4 } else { 8 },
+        ks: if full { vec![1, 2, 3, 4, 5] } else { vec![1, 2, 3] },
+        iters: if full { 100 } else { 5 },
+        algos: vec![NmfAlgo::Bcd, NmfAlgo::Mu],
+        ..Default::default()
+    };
+
+    println!("=== strong scaling (Fig 5) ===");
+    let pts = scaling_run(ScalingMode::Strong, &params)?;
+    print_scaling(&pts);
+
+    println!("\n=== weak scaling (Fig 6) ===");
+    let pts = scaling_run(ScalingMode::Weak, &params)?;
+    print_scaling(&pts);
+
+    println!("\n=== TT-rank scaling (Fig 7) ===");
+    let params7 = ScalingParams {
+        ranks_p_exp: if full { 5 } else { 2 },
+        rank_sweep: vec![2, 4, 8, 16],
+        ..params
+    };
+    let pts = scaling_run(ScalingMode::Ranks, &params7)?;
+    print_scaling(&pts);
+    Ok(())
+}

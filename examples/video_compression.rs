@@ -1,0 +1,25 @@
+//! Fig 8b: compression-vs-error curve on the high-speed-video tensor,
+//! TT (SVD) vs nTT (BCD-NMF).
+//!
+//!     cargo run --release --example video_compression
+
+use dntt::bench::workloads::{fig8_sweep, print_sweep, Fig8Data, PAPER_EPS};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    dntt::util::logging::init();
+    let rows = fig8_sweep(Fig8Data::Video, &PAPER_EPS, 80, 4)?;
+    print_sweep(&rows);
+    // Looser eps ⇒ more compression for both methods (the paper's trend).
+    for algo in ["TT", "nTT-BCD"] {
+        let series: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.algo == algo)
+            .map(|r| r.compression)
+            .collect();
+        assert!(
+            series.windows(2).all(|w| w[1] <= w[0] * 1.5 + 1e9),
+            "{algo}: compression not roughly monotone vs eps"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Fig 9: image denoising with SVD-TT vs NMF-TT (nTT).
+//!
+//! Generates the Yale-B-like face tensor, injects N(0, (0.12·peak)^2)
+//! noise, decomposes at a sweep of fixed TT ranks with both methods, and
+//! reports SSIM against the clean data — reproducing the paper's finding
+//! that at matched ranks the non-negative TT reconstructs with equal or
+//! better SSIM than the unconstrained TT.
+//!
+//!     cargo run --release --example yale_denoise
+
+use dntt::bench::workloads::{denoise_run, print_denoise};
+use dntt::data::FaceConfig;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    dntt::util::logging::init();
+    let faces = FaceConfig { height: 24, width: 21, illuminations: 16, subjects: 10, seed: 3435 };
+    let rows = denoise_run(&faces, 0.12, &[16, 12, 8, 6, 4, 2], 150)?;
+    print_denoise(&rows);
+    // The paper's qualitative claim: for given TT ranks, nTT SSIM >= TT SSIM
+    // on most of the sweep (Fig 9: best 0.88 vs 0.85).
+    let wins = rows.iter().filter(|r| r.ssim_ntt >= r.ssim_tt - 0.01).count();
+    println!("\nnTT matches or beats TT SSIM on {}/{} rank settings", wins, rows.len());
+    let best_tt = rows.iter().map(|r| r.ssim_tt).fold(0.0, f64::max);
+    let best_ntt = rows.iter().map(|r| r.ssim_ntt).fold(0.0, f64::max);
+    println!("best SSIM: TT {best_tt:.4} | nTT {best_ntt:.4}");
+    Ok(())
+}

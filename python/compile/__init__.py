@@ -1,0 +1,2 @@
+"""Build-time compile path: L2 JAX graphs + L1 Pallas kernels + AOT lowering.
+Never imported at runtime — the Rust binary loads the HLO artifacts directly."""

@@ -1,0 +1,178 @@
+"""AOT lowering: JAX/Pallas graphs → HLO text artifacts + manifest.
+
+Runs ONCE at build time (`make artifacts`); the Rust runtime loads the HLO
+text through `HloModuleProto::from_text_file` and compiles it on the PJRT
+CPU client. HLO **text** (not serialized proto) is the interchange format:
+jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Shape sets are derived from experiment presets by mirroring the TT driver's
+stage arithmetic (Alg 2): for fixed dims/grid/ranks every local-op shape a
+rank will request is known in advance. Shapes that don't divide evenly on
+the grid are skipped — the Rust PJRT backend falls back to the native
+backend for any shape missing from the manifest.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--preset default]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(fn, *args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# --------------------------------------------------------------------------
+# Op catalog: key -> (fn, arg specs)
+# --------------------------------------------------------------------------
+
+def op_entry(op: str, *dims):
+    """Build (key, fn, arg_specs) for an op instance."""
+    if op == "gram":
+        rows, r = dims
+        return f"gram_{rows}x{r}", model.gram, [spec(rows, r)]
+    if op == "xht":
+        mi, nj, r = dims
+        return f"xht_{mi}x{nj}x{r}", model.xht, [spec(mi, nj), spec(nj, r)]
+    if op == "wtx":
+        mi, nj, r = dims
+        return f"wtx_{mi}x{nj}x{r}", model.wtx, [spec(mi, nj), spec(mi, r)]
+    if op == "bcd":
+        rows, r = dims
+        return (
+            f"bcd_{rows}x{r}",
+            model.bcd_update,
+            [spec(rows, r), spec(r, r), spec(rows, r), spec(1, 1)],
+        )
+    if op == "mu":
+        rows, r = dims
+        return (
+            f"mu_{rows}x{r}",
+            model.mu_update,
+            [spec(rows, r), spec(r, r), spec(rows, r)],
+        )
+    if op == "nmf_iter_bcd":
+        m, n, r = dims
+        return (
+            f"nmf_iter_bcd_{m}x{n}x{r}",
+            model.nmf_iter_bcd,
+            [spec(m, n), spec(m, r), spec(n, r)],
+        )
+    raise ValueError(f"unknown op {op}")
+
+
+def stage_shapes(dims, ranks, pr, pc):
+    """Mirror Alg 2's stage arithmetic: yield every local-op shape the
+    distributed driver requests for fixed dims/grid/ranks."""
+    out = []
+    d = len(dims)
+    r_prev = 1
+    s_rest = 1
+    for n in dims:
+        s_rest *= n
+    for l in range(d - 1):
+        n_l = dims[l]
+        m = r_prev * n_l
+        ncols = s_rest // n_l
+        r = ranks[l]
+        if m % pr == 0 and ncols % pc == 0:
+            mi, nj = m // pr, ncols // pc
+            if mi % pc == 0 and nj % pr == 0:
+                mw, nh = mi // pc, nj // pr
+                out.append(("xht", (mi, nj, r)))
+                out.append(("wtx", (mi, nj, r)))
+                for rows in {mw, nh}:
+                    out.append(("gram", (rows, r)))
+                    out.append(("bcd", (rows, r)))
+                    out.append(("mu", (rows, r)))
+                if pr == 1 and pc == 1:
+                    out.append(("nmf_iter_bcd", (m, ncols, r)))
+        r_prev = r
+        s_rest = ncols
+    return out
+
+
+def preset_ops(name: str):
+    """Named shape presets. 'default' covers the quickstart + integration
+    tests; 'bench' adds the figure-bench shapes."""
+    ops = []
+    if name in ("default", "bench"):
+        # Tiny shapes exercised by Rust integration tests.
+        ops += [
+            ("gram", (6, 2)),
+            ("xht", (4, 6, 2)),
+            ("wtx", (4, 6, 2)),
+            ("bcd", (6, 2)),
+            ("mu", (6, 2)),
+            ("nmf_iter_bcd", (8, 12, 2)),
+        ]
+        # Quickstart: 16^4 tensor, ranks 4, serial + 2x2 grid.
+        ops += stage_shapes([16] * 4, [4, 4, 4], 1, 1)
+        ops += stage_shapes([16] * 4, [4, 4, 4], 2, 2)
+    if name == "bench":
+        # Figure-bench workload (scaled 64^4 strong-scaling stage shapes).
+        for k in range(1, 4):
+            pr, pc = 2**k, 8 // (2 ** min(k, 3)) or 1
+            ops += stage_shapes([64] * 4, [10, 10, 10], pr, max(pc, 1))
+        ops += stage_shapes([64] * 4, [10, 10, 10], 1, 1)
+    # Dedup by key.
+    seen = {}
+    for op, dims in ops:
+        key = (op, dims)
+        seen[key] = True
+    return list(seen)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--preset", default="default", choices=["default", "bench"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"dtype": "f32", "ops": []}
+    entries = preset_ops(args.preset)
+    print(f"lowering {len(entries)} op instances (preset={args.preset})")
+    for op, dims in entries:
+        key, fn, specs = op_entry(op, *dims)
+        path = os.path.join(args.out, f"{key}.hlo.txt")
+        text = to_hlo_text(fn, *specs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["ops"].append(
+            {
+                "key": key,
+                "op": op,
+                "dims": list(dims),
+                "file": f"{key}.hlo.txt",
+                "outputs": 4 if op == "nmf_iter_bcd" else 1,
+            }
+        )
+        print(f"  {key:<28} -> {len(text)} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['ops'])} ops -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Layer-1 Pallas kernels for the distributed-NMF hot spots.
+
+Each local (per-rank) operation of Algs 3–6 is written as a Pallas kernel
+with an explicit ``BlockSpec`` HBM→VMEM schedule:
+
+* ``gram``        — Fᵀ·F, row-tile reduction into an (r × r) accumulator;
+* ``xht``         — X·H̃, 2-D tiling with k-dimension accumulation (MXU-
+                    shaped (128,128) tiles when the shape allows);
+* ``wtx``         — Xᵀ·W, the transposed variant;
+* ``bcd_update``  — the fused projected-gradient step: the (rows × r)
+                    factor tile stays resident in VMEM across the GEMM,
+                    subtraction, scaling and ReLU projection — one HBM
+                    round-trip where a naive composition needs four;
+* ``mu_update``   — the fused multiplicative step.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper targets a
+CPU cluster where BLAS does the blocking implicitly; here the same blocking
+is explicit so the kernels are MXU/VMEM-shaped. On this CPU-only image they
+MUST run ``interpret=True`` — real TPU lowering emits Mosaic custom-calls
+the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MU_EPS
+
+# Preferred tile sizes (MXU-aligned on TPU).
+TILE_ROWS = 128
+TILE_K = 128
+
+
+def _tile(n: int, pref: int) -> int:
+    """Largest divisor of n that is ≤ pref (so BlockSpecs tile exactly)."""
+    t = min(n, pref)
+    while n % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+# --------------------------------------------------------------------------
+# gram: Fᵀ·F
+# --------------------------------------------------------------------------
+
+def _gram_kernel(f_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    f = f_ref[...]
+    o_ref[...] += jnp.dot(f.T, f, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gram(f):
+    rows, r = f.shape
+    bm = _tile(rows, TILE_ROWS)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(rows // bm,),
+        in_specs=[pl.BlockSpec((bm, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), f.dtype),
+        interpret=True,
+    )(f)
+
+
+# --------------------------------------------------------------------------
+# xht: X·H̃  (mi × nj)·(nj × r) with k-accumulation
+# --------------------------------------------------------------------------
+
+def _matmul_acc_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def xht(x, ht):
+    mi, nj = x.shape
+    _, r = ht.shape
+    bm = _tile(mi, TILE_ROWS)
+    bk = _tile(nj, TILE_K)
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=(mi // bm, nj // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, r), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mi, r), x.dtype),
+        interpret=True,
+    )(x, ht)
+
+
+# --------------------------------------------------------------------------
+# wtx: Xᵀ·W  -> (nj × r), accumulating over the mi dimension
+# --------------------------------------------------------------------------
+
+def _matmul_at_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...].T, w_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def wtx(x, w):
+    mi, nj = x.shape
+    _, r = w.shape
+    bn = _tile(nj, TILE_ROWS)
+    bk = _tile(mi, TILE_K)
+    return pl.pallas_call(
+        _matmul_at_kernel,
+        grid=(nj // bn, mi // bk),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((bk, r), lambda j, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda j, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nj, r), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# --------------------------------------------------------------------------
+# Fused BCD projected-gradient step
+# --------------------------------------------------------------------------
+
+def _bcd_kernel(fm_ref, g_ref, p_ref, lip_ref, o_ref):
+    fm = fm_ref[...]
+    grad = jnp.dot(fm, g_ref[...], preferred_element_type=fm.dtype) - p_ref[...]
+    o_ref[...] = jnp.maximum(0.0, fm - grad / lip_ref[0, 0])
+
+
+def bcd_update(fm, g, p, lip):
+    rows, r = fm.shape
+    bm = _tile(rows, TILE_ROWS)
+    return pl.pallas_call(
+        _bcd_kernel,
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, r), fm.dtype),
+        interpret=True,
+    )(fm, g, p, lip)
+
+
+# --------------------------------------------------------------------------
+# Fused MU step
+# --------------------------------------------------------------------------
+
+def _mu_kernel(f_ref, g_ref, p_ref, o_ref):
+    f = f_ref[...]
+    den = jnp.dot(f, g_ref[...], preferred_element_type=f.dtype) + MU_EPS
+    o_ref[...] = f * p_ref[...] / den
+
+
+def mu_update(f, g, p):
+    rows, r = f.shape
+    bm = _tile(rows, TILE_ROWS)
+    return pl.pallas_call(
+        _mu_kernel,
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, r), f.dtype),
+        interpret=True,
+    )(f, g, p)

@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these definitions by
+``python/tests/test_kernels_vs_ref.py`` (hypothesis sweeps shapes/dtypes)
+— this is the L1 correctness signal for the whole stack: the Rust native
+backend mirrors these same formulas, and the PJRT backend runs the lowered
+kernels, so agreement here + agreement in `tests/integration_runtime.rs`
+closes the loop.
+"""
+
+import jax.numpy as jnp
+
+# Epsilon guarding MU divisions; must match rust/src/runtime/backend.rs.
+MU_EPS = 1e-16
+
+
+def gram_ref(f):
+    """Fᵀ·F for a (rows × r) factor block -> (r × r)."""
+    return f.T @ f
+
+
+def xht_ref(x, ht):
+    """X·H̃ for X (mi × nj), Ht (nj × r) -> (mi × r). The local Alg-5 GEMM."""
+    return x @ ht
+
+
+def wtx_ref(x, w):
+    """Xᵀ·W for X (mi × nj), W (mi × r) -> (nj × r). The local Alg-6 GEMM."""
+    return x.T @ w
+
+
+def bcd_update_ref(fm, g, p, lip):
+    """Projected-gradient BCD step (Alg 3 lines 6-8 / 11-14).
+
+    max(0, Fm − (Fm·G − P) / lip); `lip` is a (1,1) array so the same HLO
+    signature serves any step size.
+    """
+    return jnp.maximum(0.0, fm - (fm @ g - p) / lip[0, 0])
+
+
+def mu_update_ref(f, g, p):
+    """Lee–Seung multiplicative step: F ⊙ P ⊘ (F·G + ε)."""
+    return f * p / (f @ g + MU_EPS)

@@ -1,0 +1,9 @@
+"""Enable 64-bit mode so the f64 dtype sweeps really run in f64.
+
+The AOT artifacts are f32 (aot.py pins dtypes explicitly); enabling x64
+here only affects the in-process correctness tests.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,96 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for the compile path (see ref.py's module docs).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import nmf_update as k
+from compile.kernels import ref
+
+DTYPES = [np.float32, np.float64]
+
+
+def arr(rng, shape, dtype):
+    return jnp.asarray(rng.random(shape).astype(dtype))
+
+
+dims = st.integers(min_value=1, max_value=40)
+ranks = st.integers(min_value=1, max_value=9)
+dtypes = st.sampled_from(DTYPES)
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-5) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, r=ranks, dtype=dtypes, seed=st.integers(0, 2**31))
+def test_gram_matches_ref(rows, r, dtype, seed):
+    rng = np.random.default_rng(seed)
+    f = arr(rng, (rows, r), dtype)
+    np.testing.assert_allclose(k.gram(f), ref.gram_ref(f), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(mi=dims, nj=dims, r=ranks, dtype=dtypes, seed=st.integers(0, 2**31))
+def test_xht_matches_ref(mi, nj, r, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (mi, nj), dtype)
+    ht = arr(rng, (nj, r), dtype)
+    np.testing.assert_allclose(k.xht(x, ht), ref.xht_ref(x, ht), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(mi=dims, nj=dims, r=ranks, dtype=dtypes, seed=st.integers(0, 2**31))
+def test_wtx_matches_ref(mi, nj, r, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (mi, nj), dtype)
+    w = arr(rng, (mi, r), dtype)
+    np.testing.assert_allclose(k.wtx(x, w), ref.wtx_ref(x, w), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, r=ranks, dtype=dtypes, seed=st.integers(0, 2**31))
+def test_bcd_update_matches_ref(rows, r, dtype, seed):
+    rng = np.random.default_rng(seed)
+    fm = arr(rng, (rows, r), dtype)
+    g = ref.gram_ref(arr(rng, (rows + 1, r), dtype))
+    p = arr(rng, (rows, r), dtype)
+    lip = jnp.asarray([[np.float64(np.linalg.norm(g)) + 1e-6]], dtype=dtype)
+    got = k.bcd_update(fm, g, p, lip)
+    want = ref.bcd_update_ref(fm, g, p, lip)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, r=ranks, dtype=dtypes, seed=st.integers(0, 2**31))
+def test_mu_update_matches_ref(rows, r, dtype, seed):
+    rng = np.random.default_rng(seed)
+    f = arr(rng, (rows, r), dtype)
+    g = ref.gram_ref(arr(rng, (rows + 1, r), dtype))
+    p = arr(rng, (rows, r), dtype)
+    got = k.mu_update(f, g, p)
+    np.testing.assert_allclose(got, ref.mu_update_ref(f, g, p), **tol(dtype))
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@pytest.mark.parametrize("rows,r", [(1, 1), (128, 4), (129, 7), (256, 1)])
+def test_gram_tile_boundaries(rows, r):
+    """Exact multiples, sub-tile and non-dividing sizes all tile correctly."""
+    rng = np.random.default_rng(0)
+    f = arr(rng, (rows, r), np.float32)
+    np.testing.assert_allclose(k.gram(f), ref.gram_ref(f), rtol=2e-4, atol=1e-5)
+
+
+def test_tile_helper_divides():
+    for n in [1, 7, 64, 100, 128, 129, 1000]:
+        t = k._tile(n, 128)
+        assert 1 <= t <= min(n, 128)
+        assert n % t == 0

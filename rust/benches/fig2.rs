@@ -1,0 +1,18 @@
+//! Fig 2: compression vs relative error — TT, nTT, Tucker, nTucker on a
+//! synthetic n^4 tensor (paper: 32^4). Prints the four curves and saves
+//! them to bench_results/fig2.json.
+
+use dntt::bench::workloads::{fig2_sweep, print_sweep, save_rows, PAPER_EPS};
+
+fn main() {
+    let fast = std::env::var("DNTT_BENCH_FAST").as_deref() == Ok("1");
+    let (n, iters, eps): (usize, usize, &[f64]) = if fast {
+        (8, 25, &[0.5, 0.075, 0.001])
+    } else {
+        (16, 100, &PAPER_EPS)
+    };
+    println!("fig2: {n}^4 synthetic, {iters} NMF iters");
+    let rows = fig2_sweep(n, eps, iters).expect("fig2 sweep");
+    print_sweep(&rows);
+    save_rows("fig2", rows.iter().map(|r| r.to_json()).collect()).unwrap();
+}

@@ -1,0 +1,20 @@
+//! Fig 5: strong scaling — fixed tensor, grids 2^k x2x2x2 (k=1..5 in the
+//! paper, BCD and MU, 100 NMF iterations), with the GR/MM/MAD/Norm/INIT +
+//! AG/AR/RSC + IO breakdown and the alpha-beta cluster projection.
+
+use dntt::bench::workloads::{print_scaling, save_rows, scaling_run, ScalingMode, ScalingParams};
+use dntt::nmf::NmfAlgo;
+
+fn main() {
+    let fast = std::env::var("DNTT_BENCH_FAST").as_deref() == Ok("1");
+    let params = ScalingParams {
+        shrink: if fast { 16 } else { 8 },  // 16^4 / 32^4 tensor
+        ks: if fast { vec![1, 2] } else { vec![1, 2, 3, 4, 5] },
+        iters: if fast { 3 } else { 20 },
+        algos: vec![NmfAlgo::Bcd, NmfAlgo::Mu],
+        ..Default::default()
+    };
+    let pts = scaling_run(ScalingMode::Strong, &params).expect("fig5");
+    print_scaling(&pts);
+    save_rows("fig5_strong", pts.iter().map(|p| p.to_json()).collect()).unwrap();
+}

@@ -1,0 +1,19 @@
+//! Fig 6: weak scaling — per-rank data fixed; tensor first dim and grid
+//! first dim both scale as 2^(k-1).
+
+use dntt::bench::workloads::{print_scaling, save_rows, scaling_run, ScalingMode, ScalingParams};
+use dntt::nmf::NmfAlgo;
+
+fn main() {
+    let fast = std::env::var("DNTT_BENCH_FAST").as_deref() == Ok("1");
+    let params = ScalingParams {
+        shrink: if fast { 16 } else { 8 },
+        ks: if fast { vec![1, 2] } else { vec![1, 2, 3, 4, 5] },
+        iters: if fast { 3 } else { 20 },
+        algos: vec![NmfAlgo::Bcd, NmfAlgo::Mu],
+        ..Default::default()
+    };
+    let pts = scaling_run(ScalingMode::Weak, &params).expect("fig6");
+    print_scaling(&pts);
+    save_rows("fig6_weak", pts.iter().map(|p| p.to_json()).collect()).unwrap();
+}

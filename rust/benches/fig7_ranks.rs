@@ -1,0 +1,19 @@
+//! Fig 7: TT-rank scaling — p fixed, r in {2,4,8,16}.
+
+use dntt::bench::workloads::{print_scaling, save_rows, scaling_run, ScalingMode, ScalingParams};
+use dntt::nmf::NmfAlgo;
+
+fn main() {
+    let fast = std::env::var("DNTT_BENCH_FAST").as_deref() == Ok("1");
+    let params = ScalingParams {
+        shrink: if fast { 16 } else { 8 },
+        ranks_p_exp: if fast { 2 } else { 5 }, // paper: 2^5*8 = 256 ranks
+        rank_sweep: vec![2, 4, 8, 16],
+        iters: if fast { 3 } else { 20 },
+        algos: vec![NmfAlgo::Bcd, NmfAlgo::Mu],
+        ..Default::default()
+    };
+    let pts = scaling_run(ScalingMode::Ranks, &params).expect("fig7");
+    print_scaling(&pts);
+    save_rows("fig7_ranks", pts.iter().map(|p| p.to_json()).collect()).unwrap();
+}

@@ -1,0 +1,25 @@
+//! Fig 8a/8b/8c: compression vs error on faces, video and the large
+//! synthetic tensor (BCD vs MU on 8c).
+
+use dntt::bench::workloads::{fig8_sweep, print_sweep, save_rows, Fig8Data, PAPER_EPS};
+
+fn main() {
+    let fast = std::env::var("DNTT_BENCH_FAST").as_deref() == Ok("1");
+    let (iters, eps): (usize, &[f64]) =
+        if fast { (20, &[0.5, 0.075, 0.005]) } else { (80, &PAPER_EPS) };
+    // Per-figure scales: 8a/8b at the paper's true sizes in full mode; the
+    // 8c tensor is the paper's 500 GB workload divided by 16 per mode
+    // (2.1M elements — compression ratios are size-independent at fixed
+    // ranks; examples/large_compression.rs runs the bigger instances).
+    for (tag, which, scale) in [
+        ("fig8a_faces", Fig8Data::Faces, if fast { 8 } else { 1 }),
+        ("fig8b_video", Fig8Data::Video, if fast { 8 } else { 1 }),
+        ("fig8c_large", Fig8Data::LargeSynthetic, if fast { 32 } else { 16 }),
+    ] {
+        println!("=== {tag} ===");
+        let rows = fig8_sweep(which, eps, iters, scale).expect(tag);
+        print_sweep(&rows);
+        save_rows(tag, rows.iter().map(|r| r.to_json()).collect()).unwrap();
+        println!();
+    }
+}

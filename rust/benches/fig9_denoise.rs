@@ -1,0 +1,18 @@
+//! Fig 9: denoising SSIM — SVD-TT vs NMF-TT on the noisy face tensor
+//! across decreasing TT ranks / increasing compression.
+
+use dntt::bench::workloads::{denoise_run, print_denoise, save_rows};
+use dntt::data::FaceConfig;
+
+fn main() {
+    let fast = std::env::var("DNTT_BENCH_FAST").as_deref() == Ok("1");
+    let faces = if fast {
+        FaceConfig { height: 16, width: 14, illuminations: 8, subjects: 4, seed: 3435 }
+    } else {
+        FaceConfig { height: 24, width: 21, illuminations: 16, subjects: 10, seed: 3435 }
+    };
+    let ranks: &[usize] = if fast { &[8, 4, 2] } else { &[16, 12, 8, 6, 4, 2] };
+    let rows = denoise_run(&faces, 0.12, ranks, if fast { 40 } else { 150 }).expect("fig9");
+    print_denoise(&rows);
+    save_rows("fig9_denoise", rows.iter().map(|r| r.to_json()).collect()).unwrap();
+}

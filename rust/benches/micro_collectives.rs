@@ -1,0 +1,29 @@
+//! Micro: thread-rank collectives at NMF-realistic message sizes.
+
+use dntt::bench::harness::Bench;
+use dntt::dist::Comm;
+
+fn bench_collective(b: &mut Bench, name: &str, p: usize, len: usize, which: u8) {
+    b.run(&format!("{name} p={p} len={len}"), || {
+        Comm::run(p, move |mut c| match which {
+            0 => {
+                let mut v = vec![1.0f64; len];
+                c.all_reduce_sum(&mut v);
+                v[0]
+            }
+            1 => c.all_gather(&vec![1.0f64; len])[0],
+            _ => c.reduce_scatter_sum(&vec![1.0f64; len * c.size()]).unwrap()[0],
+        })
+    });
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    for &p in &[4usize, 16] {
+        bench_collective(&mut b, "all_reduce", p, 100, 0); // r x r gram
+        bench_collective(&mut b, "all_reduce", p, 10_000, 0);
+        bench_collective(&mut b, "all_gather", p, 10_000, 1); // factor panel
+        bench_collective(&mut b, "reduce_scatter", p, 10_000, 2);
+    }
+    b.save("micro_collectives").unwrap();
+}

@@ -1,0 +1,33 @@
+//! Micro: GEMM kernel suite (the MM/GR hot path). Reports GFLOP/s per
+//! shape so the §Perf roofline discussion in EXPERIMENTS.md is grounded.
+
+use dntt::bench::harness::Bench;
+use dntt::linalg::gemm::{gram_mt_m, matmul, matmul_a_bt, matmul_at_b};
+use dntt::linalg::Mat;
+use dntt::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(1);
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (1024, 64, 16), (64, 4096, 16)] {
+        let a = Mat::<f64>::rand_uniform(m, k, &mut rng);
+        let bm = Mat::<f64>::rand_uniform(k, n, &mut rng);
+        let stats = b.run(&format!("matmul {m}x{k}x{n}"), || matmul(&a, &bm)).clone();
+        let gflops = 2.0 * (m * k * n) as f64 / stats.median_s / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s");
+    }
+    for &(rows, r) in &[(4096usize, 10usize), (65536, 10), (4096, 40)] {
+        let f = Mat::<f64>::rand_uniform(rows, r, &mut rng);
+        let stats = b.run(&format!("gram {rows}x{r}"), || gram_mt_m(&f)).clone();
+        let gflops = (rows * r * r) as f64 / stats.median_s / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s");
+    }
+    let x = Mat::<f64>::rand_uniform(1024, 2048, &mut rng);
+    let ht = Mat::<f64>::rand_uniform(2048, 10, &mut rng);
+    b.run("xht 1024x2048x10 (A*B)", || matmul(&x, &ht));
+    let w = Mat::<f64>::rand_uniform(1024, 10, &mut rng);
+    b.run("wtx 1024x2048x10 (At*B)", || matmul_at_b(&x, &w));
+    let h2 = Mat::<f64>::rand_uniform(10, 2048, &mut rng);
+    b.run("a_bt 1024x2048x10 (A*Bt)", || matmul_a_bt(&x, &h2));
+    b.save("micro_gemm").unwrap();
+}

@@ -1,0 +1,53 @@
+//! Micro: one distributed NMF iteration, native vs PJRT backend, plus the
+//! fused serial PJRT iteration — the ablation for the L2 fusion claim.
+
+use dntt::bench::harness::Bench;
+use dntt::linalg::gemm::matmul;
+use dntt::linalg::Mat;
+use dntt::runtime::backend::ComputeBackend;
+use dntt::runtime::native::NativeBackend;
+use dntt::runtime::pjrt::{pjrt_nmf_iter, PjrtBackend};
+use dntt::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(2);
+    // The quickstart stage-0 serial shape: X 16x4096, r 4.
+    let (m, n, r) = (16usize, 4096usize, 4usize);
+    let x = {
+        let a = Mat::<f64>::rand_uniform(m, r, &mut rng);
+        let c = Mat::<f64>::rand_uniform(r, n, &mut rng);
+        matmul(&a, &c)
+    };
+    let w = Mat::<f64>::rand_uniform(m, r, &mut rng);
+    let ht = Mat::<f64>::rand_uniform(n, r, &mut rng);
+
+    let native = NativeBackend;
+    b.run("native: gram+xht+bcd step", || {
+        let hht = native.gram(&ht);
+        let xht = native.xht(&x, &ht);
+        native.bcd_update(&w, &hht, &xht, hht.fro_norm())
+    });
+
+    if Path::new("artifacts/manifest.json").exists() {
+        let pjrt = PjrtBackend::from_dir(Path::new("artifacts")).expect("pjrt");
+        // Warm the executable cache outside the timer.
+        let _ = pjrt.gram(&ht);
+        b.run("pjrt: gram+xht+bcd step (op-per-call)", || {
+            let hht = pjrt.gram(&ht);
+            let xht = pjrt.xht(&x, &ht);
+            pjrt.bcd_update(&w, &hht, &xht, hht.fro_norm())
+        });
+        if pjrt_nmf_iter(&pjrt, &x, &w, &ht).is_some() {
+            b.run("pjrt: fused full BCD iteration", || {
+                pjrt_nmf_iter(&pjrt, &x, &w, &ht).unwrap()
+            });
+        }
+        let hits = pjrt.engine().stats.hits.load(std::sync::atomic::Ordering::Relaxed);
+        println!("    (pjrt hits: {hits})");
+    } else {
+        println!("(artifacts missing; pjrt comparison skipped)");
+    }
+    b.save("micro_nmf").unwrap();
+}

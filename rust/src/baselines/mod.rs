@@ -1,0 +1,11 @@
+//! Baseline decompositions the paper compares against (Fig 2, Fig 8,
+//! Fig 9): classical TT-SVD, Tucker via HOSVD/HOOI, and non-negative
+//! Tucker via multiplicative updates.
+
+pub mod ntucker;
+pub mod ttsvd;
+pub mod tucker_hooi;
+
+pub use ntucker::{ntucker_eps, ntucker_mu};
+pub use ttsvd::{tt_svd, tt_svd_fixed};
+pub use tucker_hooi::{tucker_hooi, tucker_hooi_fixed};

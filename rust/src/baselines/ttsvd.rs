@@ -1,0 +1,117 @@
+//! Sequential TT-SVD (Oseledets) — the unconstrained baseline.
+//!
+//! The paper's Figs 2, 8 and 9 compare nTT against the classical SVD-based
+//! tensor train ("TT"/"SVD-TT"). This is the standard sweep: left-unfold,
+//! thin SVD, truncate by the same ε-threshold heuristic (or fixed ranks),
+//! keep `U` as the core, continue with `diag(σ)·Vᵀ`. Cores may be negative.
+
+use crate::error::Result;
+use crate::linalg::svd::{rank_for_eps, thin_svd};
+use crate::linalg::Mat;
+use crate::tensor::{DenseTensor, TTensor};
+
+/// TT-SVD with per-stage ε-threshold rank selection.
+pub fn tt_svd(tensor: &DenseTensor<f64>, eps: f64) -> Result<TTensor<f64>> {
+    tt_svd_impl(tensor, RankRule::Eps(eps))
+}
+
+/// TT-SVD with fixed TT ranks (length `d-1`).
+pub fn tt_svd_fixed(tensor: &DenseTensor<f64>, ranks: &[usize]) -> Result<TTensor<f64>> {
+    tt_svd_impl(tensor, RankRule::Fixed(ranks.to_vec()))
+}
+
+enum RankRule {
+    Eps(f64),
+    Fixed(Vec<usize>),
+}
+
+fn tt_svd_impl(tensor: &DenseTensor<f64>, rule: RankRule) -> Result<TTensor<f64>> {
+    let dims = tensor.dims().to_vec();
+    let d = dims.len();
+    let mut cores: Vec<Mat<f64>> = Vec::with_capacity(d);
+    let mut r_prev = 1usize;
+    let mut rest: usize = dims.iter().product();
+    // Current remainder as an (r_prev × rest) matrix, row-major.
+    let mut cur = Mat::from_vec(1, rest, tensor.as_slice().to_vec());
+
+    for l in 0..d - 1 {
+        let n_l = dims[l];
+        let m = r_prev * n_l;
+        rest /= n_l;
+        let x = cur.reshaped(m, rest);
+        let svd = thin_svd(&x);
+        let rank = match &rule {
+            RankRule::Eps(eps) => rank_for_eps(&svd.s, *eps),
+            RankRule::Fixed(rs) => rs[l].clamp(1, svd.s.len().max(1)),
+        };
+        let tr = svd.truncate(rank);
+        cores.push(tr.u.clone());
+        // Remainder = diag(σ)·Vᵀ (rank × rest).
+        let mut sv = tr.vt.clone();
+        for c in 0..rank {
+            let s = tr.s[c];
+            for v in sv.row_mut(c) {
+                *v *= s;
+            }
+        }
+        cur = sv;
+        r_prev = rank;
+    }
+    cores.push(cur.reshaped(r_prev * dims[d - 1], 1));
+    TTensor::new(dims, cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttrain::datagen::SyntheticTt;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_recovery_of_tt_tensor() {
+        let syn = SyntheticTt::new(vec![4, 5, 6], vec![2, 3], 1);
+        let t = syn.dense();
+        let tt = tt_svd(&t, 1e-10).unwrap();
+        assert_eq!(tt.ranks(), &[1, 2, 3, 1]);
+        assert!(tt.rel_error(&t) < 1e-9);
+    }
+
+    #[test]
+    fn eps_controls_error() {
+        let mut rng = Rng::new(2);
+        let t = DenseTensor::<f64>::rand_uniform(&[6, 6, 6, 6], &mut rng);
+        for eps in [0.5, 0.1, 0.01] {
+            let tt = tt_svd(&t, eps).unwrap();
+            // Per-stage eps: total error ≤ sqrt(d-1)·eps (Oseledets Thm 2.2).
+            let bound = eps * ((t.ndim() - 1) as f64).sqrt() + 1e-12;
+            let err = tt.rel_error(&t);
+            assert!(err <= bound, "eps={eps}: err {err} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn tighter_eps_larger_ranks() {
+        let mut rng = Rng::new(3);
+        let t = DenseTensor::<f64>::rand_uniform(&[5, 5, 5], &mut rng);
+        let loose = tt_svd(&t, 0.3).unwrap();
+        let tight = tt_svd(&t, 1e-6).unwrap();
+        assert!(tight.num_params() >= loose.num_params());
+        assert!(tight.rel_error(&t) <= loose.rel_error(&t) + 1e-12);
+    }
+
+    #[test]
+    fn fixed_ranks_respected() {
+        let mut rng = Rng::new(4);
+        let t = DenseTensor::<f64>::rand_uniform(&[4, 4, 4], &mut rng);
+        let tt = tt_svd_fixed(&t, &[2, 3]).unwrap();
+        assert_eq!(tt.ranks(), &[1, 2, 3, 1]);
+    }
+
+    #[test]
+    fn full_rank_is_exact() {
+        let mut rng = Rng::new(5);
+        let t = DenseTensor::<f64>::rand_uniform(&[3, 4, 3], &mut rng);
+        let tt = tt_svd(&t, 0.0).unwrap();
+        assert!(tt.rel_error(&t) < 1e-9);
+    }
+}

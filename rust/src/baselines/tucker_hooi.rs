@@ -1,0 +1,128 @@
+//! Tucker decomposition via HOSVD + HOOI — the Fig-2 "Tucker" baseline.
+//!
+//! HOSVD initializes each factor with the leading eigenvectors of the
+//! mode-`k` unfolding's Gram matrix (`n_k × n_k`, small); HOOI then
+//! alternates, recomputing each factor against the partially-projected
+//! tensor. Ranks come from the same ε-threshold heuristic as the TT path
+//! (per-mode, with the threshold split as `ε/√d`) or can be fixed.
+
+use crate::error::Result;
+use crate::linalg::eig::sym_eig;
+use crate::linalg::gemm::gram_m_mt;
+use crate::linalg::svd::rank_for_eps;
+use crate::linalg::Mat;
+use crate::tensor::{DenseTensor, Tucker};
+
+/// Tucker with ε-threshold per-mode rank selection.
+pub fn tucker_hooi(tensor: &DenseTensor<f64>, eps: f64, sweeps: usize) -> Result<Tucker<f64>> {
+    let per_mode = eps / (tensor.ndim() as f64).sqrt();
+    let ranks: Vec<usize> = (0..tensor.ndim())
+        .map(|k| {
+            let unf = tensor.unfold_mode(k);
+            let sig = gram_singular_values(&unf);
+            rank_for_eps(&sig, per_mode)
+        })
+        .collect();
+    tucker_hooi_fixed(tensor, &ranks, sweeps)
+}
+
+/// Tucker with fixed multilinear ranks.
+pub fn tucker_hooi_fixed(
+    tensor: &DenseTensor<f64>,
+    ranks: &[usize],
+    sweeps: usize,
+) -> Result<Tucker<f64>> {
+    let d = tensor.ndim();
+    assert_eq!(ranks.len(), d);
+    // HOSVD init.
+    let mut factors: Vec<Mat<f64>> = (0..d)
+        .map(|k| {
+            let unf = tensor.unfold_mode(k);
+            leading_eigvecs(&unf, ranks[k].min(tensor.dims()[k]))
+        })
+        .collect();
+    // HOOI sweeps.
+    for _ in 0..sweeps {
+        for k in 0..d {
+            // Project all modes except k.
+            let mut proj = tensor.clone();
+            for (m, f) in factors.iter().enumerate() {
+                if m != k {
+                    proj = proj.mode_product(m, &f.transpose());
+                }
+            }
+            let unf = proj.unfold_mode(k);
+            factors[k] = leading_eigvecs(&unf, ranks[k].min(tensor.dims()[k]));
+        }
+    }
+    // Core = A ×₁ U₁ᵀ … ×_d U_dᵀ.
+    let mut core = tensor.clone();
+    for (m, f) in factors.iter().enumerate() {
+        core = core.mode_product(m, &f.transpose());
+    }
+    Tucker::new(core, factors)
+}
+
+/// Singular values of `unf` via the small-side Gram.
+fn gram_singular_values(unf: &Mat<f64>) -> Vec<f64> {
+    let g = gram_m_mt(unf); // rows are the mode dim (small side)
+    sym_eig(&g).values.into_iter().map(|l| l.max(0.0).sqrt()).collect()
+}
+
+/// Leading `r` eigenvectors of `unf·unfᵀ` as an `n_k × r` factor.
+fn leading_eigvecs(unf: &Mat<f64>, r: usize) -> Mat<f64> {
+    let g = gram_m_mt(unf);
+    let e = sym_eig(&g);
+    e.vectors.cols_slice(0, r.min(e.vectors.cols()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn low_multilinear(dims: &[usize], ranks: &[usize], seed: u64) -> DenseTensor<f64> {
+        let mut rng = Rng::new(seed);
+        let core = DenseTensor::<f64>::rand_uniform(ranks, &mut rng);
+        let factors: Vec<Mat<f64>> =
+            dims.iter().zip(ranks).map(|(&n, &r)| Mat::rand_uniform(n, r, &mut rng)).collect();
+        Tucker::new(core, factors).unwrap().reconstruct()
+    }
+
+    #[test]
+    fn exact_recovery_at_true_ranks() {
+        let t = low_multilinear(&[6, 7, 5], &[2, 3, 2], 1);
+        let tk = tucker_hooi_fixed(&t, &[2, 3, 2], 2).unwrap();
+        let err = t.rel_error(&tk.reconstruct());
+        assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn eps_rank_selection_finds_true_ranks() {
+        let t = low_multilinear(&[6, 6, 6], &[2, 2, 3], 2);
+        let tk = tucker_hooi(&t, 1e-6, 2).unwrap();
+        assert_eq!(tk.ranks(), &[2, 2, 3]);
+    }
+
+    #[test]
+    fn truncation_reduces_params_increases_error() {
+        let mut rng = Rng::new(3);
+        let t = DenseTensor::<f64>::rand_uniform(&[6, 6, 6], &mut rng);
+        let full = tucker_hooi_fixed(&t, &[6, 6, 6], 1).unwrap();
+        let trunc = tucker_hooi_fixed(&t, &[3, 3, 3], 2).unwrap();
+        assert!(trunc.num_params() < full.num_params());
+        assert!(t.rel_error(&full.reconstruct()) < 1e-9);
+        assert!(t.rel_error(&trunc.reconstruct()) > 1e-3);
+    }
+
+    #[test]
+    fn hooi_improves_or_matches_hosvd() {
+        let mut rng = Rng::new(4);
+        let t = DenseTensor::<f64>::rand_uniform(&[5, 6, 7], &mut rng);
+        let hosvd = tucker_hooi_fixed(&t, &[2, 2, 2], 0).unwrap();
+        let hooi = tucker_hooi_fixed(&t, &[2, 2, 2], 3).unwrap();
+        let e0 = t.rel_error(&hosvd.reconstruct());
+        let e1 = t.rel_error(&hooi.reconstruct());
+        assert!(e1 <= e0 + 1e-10, "HOOI {e1} worse than HOSVD {e0}");
+    }
+}

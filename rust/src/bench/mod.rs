@@ -1,0 +1,5 @@
+//! Benchmark infrastructure: the mini-criterion harness plus the shared
+//! workload definitions used by the per-figure bench targets.
+
+pub mod harness;
+pub mod workloads;

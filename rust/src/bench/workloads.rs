@@ -1,0 +1,474 @@
+//! Shared experiment harness: one function per paper figure.
+//!
+//! Both the `cargo bench` targets (`rust/benches/fig*.rs`) and the CLI
+//! (`dntt sweep|scaling|denoise`) call into these, so the numbers in
+//! EXPERIMENTS.md are regenerable from either entry point. Sizes default
+//! to laptop-scale (this image has one core); `--scale`-style parameters
+//! accept the paper's full sizes.
+
+use crate::baselines::{ntucker_eps, tt_svd, tt_svd_fixed, tucker_hooi};
+use crate::coordinator::{run_job, InputSpec, JobConfig};
+use crate::data::{
+    add_gaussian_noise, generate_faces, generate_video, mean_ssim_images, FaceConfig, VideoConfig,
+};
+use crate::dist::{CostModel, ProcGrid};
+use crate::error::Result;
+use crate::nmf::{NmfAlgo, NmfConfig};
+use crate::tensor::DenseTensor;
+use crate::ttrain::{ntt_serial, SyntheticTt, TtConfig};
+use crate::util::json::Json;
+use crate::util::timer::Breakdown;
+use std::time::Instant;
+
+/// The ε schedule used for the paper's compression sweeps (§IV-C2).
+pub const PAPER_EPS: [f64; 7] = [0.5, 0.25, 0.125, 0.075, 0.01, 0.005, 0.001];
+
+// ===========================================================================
+// Fig 2 / Fig 8 — compression vs relative error
+// ===========================================================================
+
+/// One point of a compression-vs-error curve.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub algo: String,
+    pub eps: f64,
+    pub compression: f64,
+    pub rel_err: f64,
+    pub secs: f64,
+}
+
+impl SweepRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            ("eps", Json::Num(self.eps)),
+            ("compression", Json::Num(self.compression)),
+            ("rel_err", Json::Num(self.rel_err)),
+            ("secs", Json::Num(self.secs)),
+        ])
+    }
+}
+
+pub fn print_sweep(rows: &[SweepRow]) {
+    println!("{:<10} {:>8} {:>14} {:>12} {:>9}", "algo", "eps", "compression", "rel_err", "secs");
+    for r in rows {
+        println!(
+            "{:<10} {:>8.4} {:>14.4} {:>12.6} {:>9.3}",
+            r.algo, r.eps, r.compression, r.rel_err, r.secs
+        );
+    }
+}
+
+fn ntt_cfg(eps: f64, iters: usize, algo: NmfAlgo) -> TtConfig {
+    TtConfig {
+        eps,
+        nmf: NmfConfig { max_iters: iters, tol: 1e-10, algo, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Fig 2: TT vs nTT vs Tucker vs nTucker on an `n⁴` synthetic tensor.
+pub fn fig2_sweep(n: usize, eps_list: &[f64], nmf_iters: usize) -> Result<Vec<SweepRow>> {
+    let syn = SyntheticTt::new(vec![n; 4], vec![5, 5, 5], 32323232);
+    let t = syn.dense();
+    let mut rows = Vec::new();
+    for &eps in eps_list {
+        // TT-SVD.
+        let t0 = Instant::now();
+        let tt = tt_svd(&t, eps)?;
+        rows.push(SweepRow {
+            algo: "TT".into(),
+            eps,
+            compression: tt.compression_ratio(),
+            rel_err: tt.rel_error(&t),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        // nTT (BCD).
+        let t0 = Instant::now();
+        let out = ntt_serial(&t, &ntt_cfg(eps, nmf_iters, NmfAlgo::Bcd))?;
+        rows.push(SweepRow {
+            algo: "nTT".into(),
+            eps,
+            compression: out.tt.compression_ratio(),
+            rel_err: out.tt.rel_error(&t),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        // Tucker.
+        let t0 = Instant::now();
+        let tk = tucker_hooi(&t, eps, 2)?;
+        rows.push(SweepRow {
+            algo: "Tucker".into(),
+            eps,
+            compression: tk.compression_ratio(),
+            rel_err: t.rel_error(&tk.reconstruct()),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        // nTucker.
+        let t0 = Instant::now();
+        let ntk = ntucker_eps(&t, eps, nmf_iters, 99)?;
+        rows.push(SweepRow {
+            algo: "nTucker".into(),
+            eps,
+            compression: ntk.compression_ratio(),
+            rel_err: t.rel_error(&ntk.reconstruct()),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Which Fig-8 dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fig8Data {
+    /// 8a — Yale-like faces (48×42×64×38 by default; `scale` shrinks).
+    Faces,
+    /// 8b — video (100×260×3×85 by default).
+    Video,
+    /// 8c — large synthetic (1024×512³ at scale=1; default scale shrinks).
+    LargeSynthetic,
+}
+
+/// Fig 8: TT vs nTT compression curves on the real-world-style datasets.
+/// For 8c the paper also contrasts BCD vs MU — both are emitted.
+pub fn fig8_sweep(
+    which: Fig8Data,
+    eps_list: &[f64],
+    nmf_iters: usize,
+    scale: usize,
+) -> Result<Vec<SweepRow>> {
+    let s = scale.max(1);
+    let t: DenseTensor<f64> = match which {
+        Fig8Data::Faces => generate_faces(&FaceConfig {
+            height: 48 / s.min(4),
+            width: 42 / s.min(3),
+            illuminations: 64 / s,
+            subjects: (38 / s).max(2),
+            ..Default::default()
+        }),
+        Fig8Data::Video => generate_video(&VideoConfig {
+            height: (100 / s).max(8),
+            width: (260 / s).max(8),
+            channels: 3,
+            frames: (85 / s).max(4),
+            ..Default::default()
+        }),
+        Fig8Data::LargeSynthetic => {
+            let nd = |x: usize| (x / s).max(8);
+            SyntheticTt::new(
+                vec![nd(1024), nd(512), nd(512), nd(512)],
+                vec![20usize, 30, 40].iter().map(|&r| r.min(nd(512) / 2)).collect(),
+                500_000_000,
+            )
+            .dense()
+        }
+    };
+    let mut rows = Vec::new();
+    for &eps in eps_list {
+        let t0 = Instant::now();
+        let tt = tt_svd(&t, eps)?;
+        rows.push(SweepRow {
+            algo: "TT".into(),
+            eps,
+            compression: tt.compression_ratio(),
+            rel_err: tt.rel_error(&t),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        let t0 = Instant::now();
+        let out = ntt_serial(&t, &ntt_cfg(eps, nmf_iters, NmfAlgo::Bcd))?;
+        rows.push(SweepRow {
+            algo: "nTT-BCD".into(),
+            eps,
+            compression: out.tt.compression_ratio(),
+            rel_err: out.tt.rel_error(&t),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        if which == Fig8Data::LargeSynthetic {
+            let t0 = Instant::now();
+            let out = ntt_serial(&t, &ntt_cfg(eps, nmf_iters, NmfAlgo::Mu))?;
+            rows.push(SweepRow {
+                algo: "nTT-MU".into(),
+                eps,
+                compression: out.tt.compression_ratio(),
+                rel_err: out.tt.rel_error(&t),
+                secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+// ===========================================================================
+// Figs 5–7 — scaling
+// ===========================================================================
+
+/// One point of a scaling series.
+pub struct ScalePoint {
+    pub p: usize,
+    pub grid: Vec<usize>,
+    pub dims: Vec<usize>,
+    pub tt_ranks: Vec<usize>,
+    pub algo: String,
+    pub wall_secs: f64,
+    pub measured: Breakdown,
+    pub modeled: Breakdown,
+}
+
+impl ScalePoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p", Json::Num(self.p as f64)),
+            ("grid", Json::arr_usize(&self.grid)),
+            ("dims", Json::arr_usize(&self.dims)),
+            ("tt_ranks", Json::arr_usize(&self.tt_ranks)),
+            ("algo", Json::Str(self.algo.clone())),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("measured_total", Json::Num(self.measured.total_secs())),
+            ("modeled_total", Json::Num(self.modeled.total_secs())),
+            ("modeled_compute", Json::Num(self.modeled.compute_secs())),
+            ("modeled_comm", Json::Num(self.modeled.comm_secs())),
+        ])
+    }
+}
+
+pub fn print_scaling(points: &[ScalePoint]) {
+    println!(
+        "{:<6} {:<14} {:<8} {:>10} {:>12} {:>12} {:>12}",
+        "p", "grid", "algo", "wall(s)", "model_tot", "model_comp", "model_comm"
+    );
+    for pt in points {
+        println!(
+            "{:<6} {:<14} {:<8} {:>10.3} {:>12.4} {:>12.4} {:>12.4}",
+            pt.p,
+            format!("{:?}", pt.grid),
+            pt.algo,
+            pt.wall_secs,
+            pt.modeled.total_secs(),
+            pt.modeled.compute_secs(),
+            pt.modeled.comm_secs()
+        );
+    }
+}
+
+/// Scaling mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingMode {
+    /// Fig 5: fixed tensor, grids 2^k×2×2×2.
+    Strong,
+    /// Fig 6: per-rank data fixed — first dim grows with p.
+    Weak,
+    /// Fig 7: p fixed, TT rank sweeps {2,4,8,16}.
+    Ranks,
+}
+
+/// Parameters for a scaling study.
+pub struct ScalingParams {
+    /// Mode-size divisor vs the paper's 256 (default 4 → 64⁴ base tensor).
+    pub shrink: usize,
+    /// 2^k first-dim grid exponents to sweep (paper: 1..=5).
+    pub ks: Vec<usize>,
+    /// NMF iterations (paper fixes 100).
+    pub iters: usize,
+    /// BCD and/or MU.
+    pub algos: Vec<NmfAlgo>,
+    /// TT ranks (paper: 10,10,10 for Figs 5–6).
+    pub ranks: Vec<usize>,
+    /// Fixed 2^k exponent for the rank sweep (Fig 7; paper: 5 → 256 ranks).
+    pub ranks_p_exp: usize,
+    /// TT-rank values for Fig 7.
+    pub rank_sweep: Vec<usize>,
+    pub cost_model: CostModel,
+}
+
+impl Default for ScalingParams {
+    fn default() -> Self {
+        ScalingParams {
+            shrink: 4,
+            ks: vec![1, 2, 3, 4, 5],
+            iters: 10,
+            algos: vec![NmfAlgo::Bcd, NmfAlgo::Mu],
+            ranks: vec![10, 10, 10],
+            ranks_p_exp: 5,
+            rank_sweep: vec![2, 4, 8, 16],
+            cost_model: CostModel::default(),
+        }
+    }
+}
+
+/// Run a scaling study (Figs 5, 6 or 7).
+pub fn scaling_run(mode: ScalingMode, params: &ScalingParams) -> Result<Vec<ScalePoint>> {
+    let base = (256 / params.shrink.max(1)).max(4);
+    let mut points = Vec::new();
+    let cases: Vec<(usize, Vec<usize>, Vec<usize>)> = match mode {
+        ScalingMode::Strong => params
+            .ks
+            .iter()
+            .map(|&k| (k, vec![base; 4], params.ranks.clone()))
+            .collect(),
+        ScalingMode::Weak => params
+            .ks
+            .iter()
+            .map(|&k| {
+                let mut dims = vec![base; 4];
+                dims[0] = base << (k - 1); // per-rank volume constant
+                (k, dims, params.ranks.clone())
+            })
+            .collect(),
+        ScalingMode::Ranks => params
+            .rank_sweep
+            .iter()
+            .map(|&r| (params.ranks_p_exp, vec![base; 4], vec![r; 3]))
+            .collect(),
+    };
+    for (k, dims, ranks) in cases {
+        let grid = ProcGrid::paper_grid(k, 4)?;
+        for &algo in &params.algos {
+            let job = JobConfig {
+                tt: TtConfig {
+                    fixed_ranks: Some(ranks.clone()),
+                    nmf: NmfConfig { max_iters: params.iters, algo, ..Default::default() },
+                    ..Default::default()
+                },
+                check_error: false,
+                cost_model: Some(params.cost_model),
+                ..JobConfig::new(
+                    InputSpec::Synthetic(SyntheticTt::new(dims.clone(), ranks.clone(), 20190020)),
+                    grid.clone(),
+                )
+            };
+            let rep = run_job(&job)?;
+            points.push(ScalePoint {
+                p: grid.size(),
+                grid: grid.dims().to_vec(),
+                dims: dims.clone(),
+                tt_ranks: ranks.clone(),
+                algo: algo.name().into(),
+                wall_secs: rep.wall_secs,
+                measured: rep.measured.clone(),
+                modeled: rep.modeled.clone().unwrap(),
+            });
+        }
+    }
+    Ok(points)
+}
+
+// ===========================================================================
+// Fig 9 — denoising (SSIM)
+// ===========================================================================
+
+/// One row of the denoising comparison.
+pub struct DenoiseRow {
+    pub rank: usize,
+    pub compression_tt: f64,
+    pub compression_ntt: f64,
+    pub ssim_noisy: f64,
+    pub ssim_tt: f64,
+    pub ssim_ntt: f64,
+}
+
+impl DenoiseRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rank", Json::Num(self.rank as f64)),
+            ("compression_tt", Json::Num(self.compression_tt)),
+            ("compression_ntt", Json::Num(self.compression_ntt)),
+            ("ssim_noisy", Json::Num(self.ssim_noisy)),
+            ("ssim_tt", Json::Num(self.ssim_tt)),
+            ("ssim_ntt", Json::Num(self.ssim_ntt)),
+        ])
+    }
+}
+
+pub fn print_denoise(rows: &[DenoiseRow]) {
+    println!(
+        "{:<6} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "rank", "comp_TT", "comp_nTT", "ssim_in", "ssim_TT", "ssim_nTT"
+    );
+    for r in rows {
+        println!(
+            "{:<6} {:>10.2} {:>10.2} {:>10.4} {:>10.4} {:>10.4}",
+            r.rank, r.compression_tt, r.compression_ntt, r.ssim_noisy, r.ssim_tt, r.ssim_ntt
+        );
+    }
+}
+
+/// Fig 9: decompose noisy faces at decreasing TT ranks; SSIM of the
+/// reconstruction vs the clean tensor, for SVD-TT vs NMF-TT.
+pub fn denoise_run(
+    faces: &FaceConfig,
+    sigma_frac: f64,
+    rank_sweep: &[usize],
+    nmf_iters: usize,
+) -> Result<Vec<DenoiseRow>> {
+    let clean = generate_faces(faces);
+    let peak = clean.as_slice().iter().cloned().fold(0.0f64, f64::max);
+    let noisy = add_gaussian_noise(&clean, sigma_frac * peak, 900);
+    let ssim_noisy = mean_ssim_images(&clean, &noisy);
+    let mut rows = Vec::new();
+    for &r in rank_sweep {
+        let ranks = vec![r, r, r];
+        let tt = tt_svd_fixed(&noisy, &ranks)?;
+        let mut cfg = ntt_cfg(0.0, nmf_iters, NmfAlgo::Bcd);
+        cfg.fixed_ranks = Some(ranks.clone());
+        let ntt = ntt_serial(&noisy, &cfg)?;
+        rows.push(DenoiseRow {
+            rank: r,
+            compression_tt: tt.compression_ratio(),
+            compression_ntt: ntt.tt.compression_ratio(),
+            ssim_noisy,
+            ssim_tt: mean_ssim_images(&clean, &tt.reconstruct()),
+            ssim_ntt: mean_ssim_images(&clean, &ntt.tt.reconstruct()),
+        });
+    }
+    Ok(rows)
+}
+
+/// Save any JSON rows under `bench_results/<label>.json`.
+pub fn save_rows(label: &str, rows: Vec<Json>) -> std::io::Result<()> {
+    std::fs::create_dir_all("bench_results")?;
+    let path = format!("bench_results/{label}.json");
+    std::fs::write(&path, Json::Arr(rows).to_pretty())?;
+    println!("(series written to {path})");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_tiny_sweep_shapes() {
+        let rows = fig2_sweep(6, &[0.5, 0.01], 25).unwrap();
+        assert_eq!(rows.len(), 8); // 4 algos × 2 eps
+        // Tight eps must not have worse error than loose for the SVD-TT.
+        let tt: Vec<&SweepRow> = rows.iter().filter(|r| r.algo == "TT").collect();
+        assert!(tt[1].rel_err <= tt[0].rel_err + 1e-9);
+        assert!(tt[1].compression <= tt[0].compression + 1e-9);
+    }
+
+    #[test]
+    fn scaling_strong_tiny() {
+        let params = ScalingParams {
+            shrink: 32, // 8^4 tensor
+            ks: vec![1, 2],
+            iters: 3,
+            algos: vec![NmfAlgo::Bcd],
+            ranks: vec![2, 2, 2],
+            ..Default::default()
+        };
+        let pts = scaling_run(ScalingMode::Strong, &params).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].p, 16);
+        assert_eq!(pts[1].p, 32);
+    }
+
+    #[test]
+    fn denoise_tiny() {
+        let faces = FaceConfig { height: 16, width: 14, illuminations: 6, subjects: 4, seed: 2 };
+        let rows = denoise_run(&faces, 0.1, &[6, 2], 40).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.ssim_tt > 0.0 && r.ssim_tt <= 1.0);
+            assert!(r.ssim_ntt > 0.0 && r.ssim_ntt <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Job specification: what to decompose, on what (logical) cluster, with
+//! which backend and algorithm.
+
+use crate::data::{FaceConfig, VideoConfig};
+use crate::dist::chunkstore::SpillMode;
+use crate::dist::{CostModel, ProcGrid};
+use crate::tensor::DenseTensor;
+use crate::ttrain::{SyntheticTt, TtConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Where the input tensor comes from.
+#[derive(Clone)]
+pub enum InputSpec {
+    /// §IV-A synthetic TT tensor — blocks are generated per rank without
+    /// ever materializing the full tensor (scales to out-of-core sizes).
+    Synthetic(SyntheticTt),
+    /// Synthetic Yale-B-like face tensor (materialized once, shared).
+    Faces(FaceConfig),
+    /// Synthetic high-speed video tensor.
+    Video(VideoConfig),
+    /// A caller-provided dense tensor.
+    Dense(Arc<DenseTensor<f64>>),
+}
+
+impl InputSpec {
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            InputSpec::Synthetic(s) => s.dims.clone(),
+            InputSpec::Faces(c) => vec![c.height, c.width, c.illuminations, c.subjects],
+            InputSpec::Video(c) => vec![c.height, c.width, c.channels, c.frames],
+            InputSpec::Dense(t) => t.dims().to_vec(),
+        }
+    }
+
+    /// Materialize the full tensor when feasible (None for Synthetic,
+    /// which is generated blockwise).
+    pub fn materialize(&self) -> Option<Arc<DenseTensor<f64>>> {
+        match self {
+            InputSpec::Synthetic(_) => None,
+            InputSpec::Faces(c) => Some(Arc::new(crate::data::generate_faces(c))),
+            InputSpec::Video(c) => Some(Arc::new(crate::data::generate_video(c))),
+            InputSpec::Dense(t) => Some(t.clone()),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            InputSpec::Synthetic(s) => format!("synthetic{:?}r{:?}", s.dims, s.ranks),
+            InputSpec::Faces(_) => "faces".into(),
+            InputSpec::Video(_) => "video".into(),
+            InputSpec::Dense(t) => format!("dense{:?}", t.dims()),
+        }
+    }
+}
+
+/// Which compute backend the ranks use.
+#[derive(Clone, Debug, Default)]
+pub enum BackendChoice {
+    #[default]
+    Native,
+    /// PJRT over the artifact directory (native fallback per shape).
+    Pjrt(PathBuf),
+}
+
+/// A full decomposition job.
+#[derive(Clone)]
+pub struct JobConfig {
+    pub input: InputSpec,
+    pub grid: ProcGrid,
+    pub tt: TtConfig,
+    pub backend: BackendChoice,
+    pub spill: SpillMode,
+    /// Model cluster timings with this α-β model (None = measured only).
+    pub cost_model: Option<CostModel>,
+    /// Compute the reconstruction error afterwards (requires materializing
+    /// the tensor — skip for very large inputs).
+    pub check_error: bool,
+}
+
+impl JobConfig {
+    pub fn new(input: InputSpec, grid: ProcGrid) -> Self {
+        JobConfig {
+            input,
+            grid,
+            tt: TtConfig::default(),
+            backend: BackendChoice::Native,
+            spill: SpillMode::Memory,
+            cost_model: Some(CostModel::default()),
+            check_error: true,
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Job reports: human tables + machine-readable JSON.
+
+use super::job::JobConfig;
+use crate::ttrain::TtOutput;
+use crate::util::json::Json;
+use crate::util::timer::{Breakdown, ALL_CATS};
+
+/// Aggregated result of one decomposition job.
+pub struct JobReport {
+    pub label: String,
+    pub dims: Vec<usize>,
+    pub grid: Vec<usize>,
+    pub ranks: Vec<usize>,
+    pub compression: f64,
+    pub rel_error: Option<f64>,
+    pub wall_secs: f64,
+    /// Critical-path measured breakdown (max over ranks).
+    pub measured: Breakdown,
+    /// α-β-modeled cluster breakdown (if a cost model was configured).
+    pub modeled: Option<Breakdown>,
+    pub pjrt_hits: u64,
+    pub output: TtOutput,
+}
+
+impl JobReport {
+    pub fn new(
+        job: &JobConfig,
+        output: TtOutput,
+        wall_secs: f64,
+        rel_error: Option<f64>,
+        modeled: Option<Breakdown>,
+        pjrt_hits: u64,
+    ) -> Self {
+        JobReport {
+            label: job.input.label(),
+            dims: job.input.dims(),
+            grid: job.grid.dims().to_vec(),
+            ranks: output.tt.ranks().to_vec(),
+            compression: output.tt.compression_ratio(),
+            rel_error,
+            wall_secs,
+            measured: output.breakdown.clone(),
+            modeled,
+            pjrt_hits,
+            output,
+        }
+    }
+
+    /// Multi-line human summary (the tables printed by the CLI).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "input {} | grid {:?} ({} ranks)\n",
+            self.label,
+            self.grid,
+            self.grid.iter().product::<usize>()
+        ));
+        s.push_str(&format!("TT ranks      : {:?}\n", self.ranks));
+        s.push_str(&format!("compression   : {:.4}x\n", self.compression));
+        if let Some(e) = self.rel_error {
+            s.push_str(&format!("rel error     : {:.6}\n", e));
+        }
+        s.push_str(&format!("wall time     : {:.3}s\n", self.wall_secs));
+        if self.pjrt_hits > 0 {
+            s.push_str(&format!("pjrt op hits  : {}\n", self.pjrt_hits));
+        }
+        s.push_str("\nmeasured breakdown (critical path over ranks):\n");
+        s.push_str(&self.measured.table());
+        if let Some(m) = &self.modeled {
+            s.push_str("\nmodeled cluster breakdown (α-β model):\n");
+            s.push_str(&m.table());
+        }
+        // Per-stage table.
+        s.push_str("\nstage   m        n          rank  svd_eps    nmf_relerr  restarts\n");
+        for st in &self.output.stages {
+            s.push_str(&format!(
+                "{:<7} {:<8} {:<10} {:<5} {:<10.3e} {:<11.4e} {}\n",
+                st.mode, st.m, st.n, st.rank, st.svd_eps, st.nmf.rel_err, st.nmf.restarts
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable record (one row of a bench series).
+    pub fn to_json(&self) -> Json {
+        let breakdown_json = |b: &Breakdown| {
+            Json::Obj(
+                ALL_CATS
+                    .iter()
+                    .filter(|&&c| b.calls(c) > 0 || b.secs(c) > 0.0)
+                    .map(|&c| {
+                        (
+                            c.name().to_string(),
+                            Json::obj(vec![
+                                ("secs", Json::Num(b.secs(c))),
+                                ("calls", Json::Num(b.calls(c) as f64)),
+                                ("bytes", Json::Num(b.bytes(c) as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        let mut fields = vec![
+            ("label", Json::Str(self.label.clone())),
+            ("dims", Json::arr_usize(&self.dims)),
+            ("grid", Json::arr_usize(&self.grid)),
+            ("ranks", Json::arr_usize(&self.ranks)),
+            ("compression", Json::Num(self.compression)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("measured", breakdown_json(&self.measured)),
+            ("pjrt_hits", Json::Num(self.pjrt_hits as f64)),
+        ];
+        if let Some(e) = self.rel_error {
+            fields.push(("rel_error", Json::Num(e)));
+        }
+        if let Some(m) = &self.modeled {
+            fields.push(("modeled", breakdown_json(m)));
+            fields.push(("modeled_total", Json::Num(m.total_secs())));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_job, InputSpec, JobConfig};
+    use crate::dist::ProcGrid;
+    use crate::nmf::NmfConfig;
+    use crate::ttrain::{SyntheticTt, TtConfig};
+
+    #[test]
+    fn summary_and_json_render() {
+        let job = JobConfig {
+            tt: TtConfig {
+                eps: 1e-6,
+                nmf: NmfConfig { max_iters: 20, ..Default::default() },
+                ..Default::default()
+            },
+            ..JobConfig::new(
+                InputSpec::Synthetic(SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 5)),
+                ProcGrid::new(vec![1, 1, 1]).unwrap(),
+            )
+        };
+        let rep = run_job(&job).unwrap();
+        let s = rep.summary();
+        assert!(s.contains("TT ranks"));
+        assert!(s.contains("compression"));
+        let j = rep.to_json();
+        assert!(j.get("compression").as_f64().unwrap() > 0.0);
+        assert!(j.get("measured").as_obj().is_some());
+        // JSON roundtrips.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

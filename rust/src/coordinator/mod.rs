@@ -1,0 +1,161 @@
+//! The L3 coordinator: turns a [`JobConfig`] into thread ranks, feeds them
+//! their tensor blocks, runs the distributed nTT, and aggregates results,
+//! timings and cluster-model estimates into a [`JobReport`].
+
+pub mod job;
+pub mod metrics;
+
+pub use job::{BackendChoice, InputSpec, JobConfig};
+pub use metrics::JobReport;
+
+use crate::dist::{Comm, SharedStore};
+use crate::error::{DnttError, Result};
+use crate::runtime::{NativeBackend, PjrtBackend, PjrtEngine};
+use crate::ttrain::driver::{dist_ntt, extract_block};
+use crate::ttrain::TtOutput;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Run a decomposition job end-to-end.
+pub fn run_job(job: &JobConfig) -> Result<JobReport> {
+    let dims = job.input.dims();
+    if dims.len() != job.grid.dims().len() {
+        return Err(DnttError::config(format!(
+            "grid has {} modes, tensor has {}",
+            job.grid.dims().len(),
+            dims.len()
+        )));
+    }
+    let p = job.grid.size();
+    let grid2 = job.grid.to_2d();
+    let store = SharedStore::new(job.spill.clone());
+    let dense = job.input.materialize();
+    let engine: Option<Arc<PjrtEngine>> = match &job.backend {
+        BackendChoice::Native => None,
+        BackendChoice::Pjrt(dir) => Some(PjrtEngine::start(dir)?),
+    };
+
+    let t0 = Instant::now();
+    let input = job.input.clone();
+    let grid = job.grid.clone();
+    let tt_cfg = job.tt.clone();
+    let dims2 = dims.clone();
+    let dense2 = dense.clone();
+    let eng2 = engine.clone();
+    let mut outs: Vec<Result<TtOutput>> = Comm::run(p, move |mut world| {
+        let rank = world.rank();
+        // Build this rank's block.
+        let block = match (&input, &dense2) {
+            (InputSpec::Synthetic(s), _) => s.block(&grid, rank)?,
+            (_, Some(t)) => extract_block(t, &grid, rank),
+            _ => unreachable!("non-synthetic inputs materialize"),
+        };
+        let (mut row, mut col) = grid2.make_subcomms(&mut world);
+        match &eng2 {
+            Some(e) => {
+                let backend = PjrtBackend::new(Arc::clone(e));
+                dist_ntt(
+                    &mut world, &mut row, &mut col, &store, &grid, grid2, &dims2, block,
+                    &backend, &tt_cfg,
+                )
+            }
+            None => dist_ntt(
+                &mut world, &mut row, &mut col, &store, &grid, grid2, &dims2, block,
+                &NativeBackend, &tt_cfg,
+            ),
+        }
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    // Propagate the first error, if any.
+    let mut output = None;
+    for o in outs.drain(..) {
+        match o {
+            Ok(v) if output.is_none() => output = Some(v),
+            Ok(_) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let output = output.unwrap();
+
+    // Reconstruction error against the input (small tensors only).
+    let rel_error = if job.check_error {
+        match (&job.input, &dense) {
+            (InputSpec::Synthetic(s), _) if s.len() <= 20_000_000 => {
+                Some(output.tt.rel_error(&s.dense()))
+            }
+            (_, Some(t)) => Some(output.tt.rel_error(t)),
+            _ => None,
+        }
+    } else {
+        None
+    };
+
+    let modeled = job.cost_model.map(|m| m.model_breakdown(&output.breakdown, p));
+    let pjrt_hits = engine
+        .as_ref()
+        .map(|e| e.stats.hits.load(std::sync::atomic::Ordering::Relaxed))
+        .unwrap_or(0);
+    Ok(JobReport::new(job, output, wall_secs, rel_error, modeled, pjrt_hits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ProcGrid;
+    use crate::nmf::NmfConfig;
+    use crate::ttrain::{SyntheticTt, TtConfig};
+
+    fn quick_tt() -> TtConfig {
+        TtConfig {
+            eps: 1e-6,
+            nmf: NmfConfig { max_iters: 60, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn synthetic_job_end_to_end() {
+        let job = JobConfig {
+            tt: quick_tt(),
+            ..JobConfig::new(
+                InputSpec::Synthetic(SyntheticTt::new(vec![6, 6, 6], vec![2, 2], 3)),
+                ProcGrid::new(vec![2, 1, 2]).unwrap(),
+            )
+        };
+        let rep = run_job(&job).unwrap();
+        assert_eq!(rep.ranks, vec![1, 2, 2, 1]);
+        assert!(rep.rel_error.unwrap() < 0.1);
+        assert!(rep.compression > 1.0);
+        assert!(rep.wall_secs > 0.0);
+        assert!(rep.modeled.is_some());
+    }
+
+    #[test]
+    fn faces_job_runs() {
+        let job = JobConfig {
+            tt: quick_tt(),
+            ..JobConfig::new(
+                InputSpec::Faces(crate::data::FaceConfig {
+                    height: 12,
+                    width: 10,
+                    illuminations: 6,
+                    subjects: 4,
+                    seed: 1,
+                }),
+                ProcGrid::new(vec![2, 1, 1, 1]).unwrap(),
+            )
+        };
+        let rep = run_job(&job).unwrap();
+        assert!(rep.rel_error.unwrap() < 0.6);
+        assert!(rep.output.tt.is_nonneg());
+    }
+
+    #[test]
+    fn grid_mismatch_rejected() {
+        let job = JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(vec![4, 4], vec![2], 1)),
+            ProcGrid::new(vec![2, 2, 2]).unwrap(),
+        );
+        assert!(run_job(&job).is_err());
+    }
+}

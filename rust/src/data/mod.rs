@@ -1,0 +1,13 @@
+//! Dataset substrates: synthetic Yale-B-like faces, synthetic high-speed
+//! video, noise injection and image-quality metrics (SSIM/PSNR) for the
+//! real-world experiments of §IV-C.
+
+pub mod faces;
+pub mod noise;
+pub mod ssim;
+pub mod video;
+
+pub use faces::{generate_faces, FaceConfig};
+pub use noise::{add_gaussian_noise, psnr};
+pub use ssim::{mean_ssim_images, ssim};
+pub use video::{generate_video, VideoConfig};

@@ -1,0 +1,131 @@
+//! Structural similarity index (SSIM) — the Fig-9 denoising metric.
+//!
+//! Standard Wang et al. SSIM with an 8×8 sliding window (uniform weights)
+//! and the usual stabilizers `C1 = (0.01·L)²`, `C2 = (0.03·L)²` where `L`
+//! is the dynamic range. Computed per image and averaged over windows.
+
+/// SSIM between two images given as row-major `h×w` slices.
+/// `dynamic_range` is `L` (e.g. 255 for 8-bit, or the data max).
+pub fn ssim(a: &[f64], b: &[f64], h: usize, w: usize, dynamic_range: f64) -> f64 {
+    assert_eq!(a.len(), h * w);
+    assert_eq!(b.len(), h * w);
+    let win = 8usize.min(h).min(w);
+    if win == 0 {
+        return 1.0;
+    }
+    let c1 = (0.01 * dynamic_range).powi(2);
+    let c2 = (0.03 * dynamic_range).powi(2);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let step = 1usize;
+    let nw = win * win;
+    for y0 in (0..=h - win).step_by(step) {
+        for x0 in (0..=w - win).step_by(step) {
+            let (mut ma, mut mb) = (0.0, 0.0);
+            for y in y0..y0 + win {
+                for x in x0..x0 + win {
+                    ma += a[y * w + x];
+                    mb += b[y * w + x];
+                }
+            }
+            ma /= nw as f64;
+            mb /= nw as f64;
+            let (mut va, mut vb, mut cov) = (0.0, 0.0, 0.0);
+            for y in y0..y0 + win {
+                for x in x0..x0 + win {
+                    let da = a[y * w + x] - ma;
+                    let db = b[y * w + x] - mb;
+                    va += da * da;
+                    vb += db * db;
+                    cov += da * db;
+                }
+            }
+            va /= (nw - 1) as f64;
+            vb /= (nw - 1) as f64;
+            cov /= (nw - 1) as f64;
+            let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+            total += s;
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+/// Mean SSIM over the leading two modes of a 4-D tensor (each `[:, :, i, j]`
+/// slice is an image) — the Fig-9 aggregation for the Yale tensor.
+pub fn mean_ssim_images(
+    a: &crate::tensor::DenseTensor<f64>,
+    b: &crate::tensor::DenseTensor<f64>,
+) -> f64 {
+    assert_eq!(a.dims(), b.dims());
+    assert!(a.ndim() >= 2);
+    let dims = a.dims();
+    let (h, w) = (dims[0], dims[1]);
+    let rest: usize = dims[2..].iter().product();
+    let peak = a.as_slice().iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    let mut total = 0.0;
+    // Extract image (h×w) for each trailing index combo.
+    let mut img_a = vec![0.0; h * w];
+    let mut img_b = vec![0.0; h * w];
+    for t in 0..rest {
+        for y in 0..h {
+            for x in 0..w {
+                let idx = (y * w + x) * rest + t;
+                img_a[y * w + x] = a.as_slice()[idx];
+                img_b[y * w + x] = b.as_slice()[idx];
+            }
+        }
+        total += ssim(&img_a, &img_b, h, w, peak);
+    }
+    total / rest as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_images_score_one() {
+        let mut rng = Rng::new(1);
+        let img: Vec<f64> = (0..256).map(|_| rng.uniform()).collect();
+        let s = ssim(&img, &img, 16, 16, 1.0);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_lowers_ssim() {
+        let mut rng = Rng::new(2);
+        // A structured image, not pure noise.
+        let img: Vec<f64> =
+            (0..400).map(|i| ((i / 20) as f64 * 0.3).sin().abs() + 0.2).collect();
+        let noisy: Vec<f64> = img.iter().map(|&v| (v + rng.normal_ms(0.0, 0.3)).max(0.0)).collect();
+        let very_noisy: Vec<f64> =
+            img.iter().map(|&v| (v + rng.normal_ms(0.0, 1.0)).max(0.0)).collect();
+        let s1 = ssim(&img, &noisy, 20, 20, 1.4);
+        let s2 = ssim(&img, &very_noisy, 20, 20, 1.4);
+        assert!(s1 < 1.0);
+        assert!(s2 < s1, "{s2} !< {s1}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut rng = Rng::new(3);
+        let a: Vec<f64> = (0..144).map(|_| rng.uniform()).collect();
+        let b: Vec<f64> = (0..144).map(|_| rng.uniform()).collect();
+        let s1 = ssim(&a, &b, 12, 12, 1.0);
+        let s2 = ssim(&b, &a, 12, 12, 1.0);
+        assert!((s1 - s2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_mean_ssim() {
+        let mut rng = Rng::new(4);
+        let t = DenseTensor::<f64>::rand_uniform(&[12, 12, 2, 3], &mut rng);
+        assert!((mean_ssim_images(&t, &t) - 1.0).abs() < 1e-12);
+        let noisy = crate::data::noise::add_gaussian_noise(&t, 0.5, 5);
+        assert!(mean_ssim_images(&t, &noisy) < 0.9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Synthetic high-speed-video tensor (gun-shot video substitute).
+//!
+//! The paper's video tensor (100×260×3×85: monochrome image × RGB channel
+//! × frame) comes from a YouTube high-speed recording of a pistol shot.
+//! The substitute renders the same *kind* of scene synthetically: a static
+//! background, a translating projectile, a muzzle flash decaying over
+//! frames and an expanding smoke plume — smooth temporal structure with a
+//! sharp transient, non-negative by construction.
+
+use crate::tensor::DenseTensor;
+use crate::util::rng::Rng;
+
+/// Video dimensions (defaults match the paper: 100×260×3×85).
+#[derive(Clone, Debug)]
+pub struct VideoConfig {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub frames: usize,
+    pub seed: u64,
+}
+
+impl Default for VideoConfig {
+    fn default() -> Self {
+        VideoConfig { height: 100, width: 260, channels: 3, frames: 85, seed: 73000 }
+    }
+}
+
+/// Generate the video tensor (`height × width × channel × frame`).
+pub fn generate_video(cfg: &VideoConfig) -> DenseTensor<f64> {
+    let mut rng = Rng::new(cfg.seed);
+    let (h, w, c, f) = (cfg.height, cfg.width, cfg.channels, cfg.frames);
+
+    // Static background: smooth horizontal gradient + fixed texture.
+    let bg: Vec<f64> = (0..h * w)
+        .map(|p| {
+            let (y, x) = (p / w, p % w);
+            0.25 + 0.1 * (x as f64 / w as f64) + 0.05 * ((y as f64 * 0.31).sin().abs())
+        })
+        .collect();
+    // Per-channel tint of flash/smoke (flash is warm, smoke is grey).
+    let flash_tint: Vec<f64> = (0..c).map(|ch| 1.0 - 0.25 * ch as f64 / c.max(1) as f64).collect();
+    let smoke_tint: Vec<f64> = (0..c).map(|_| 0.8 + 0.05 * rng.uniform()).collect();
+
+    let muzzle = (h as f64 * 0.5, w as f64 * 0.12);
+    let bullet_speed = w as f64 * 0.8 / f as f64;
+
+    let mut t = DenseTensor::<f64>::zeros(&[h, w, c, f]);
+    let data = t.as_mut_slice();
+    for fr in 0..f {
+        let time = fr as f64;
+        let bullet_x = muzzle.1 + 8.0 + bullet_speed * time;
+        let flash = (-time / 4.0).exp(); // fast decay
+        let smoke_r = 4.0 + 1.8 * time; // expanding plume
+        let smoke_a = 0.5 * (-time / 40.0).exp();
+        for y in 0..h {
+            for x in 0..w {
+                let pix = y * w + x;
+                // Bullet: small bright Gaussian.
+                let bdy = y as f64 - muzzle.0;
+                let bdx = x as f64 - bullet_x;
+                let bullet = 1.2 * (-(bdy * bdy + bdx * bdx) / 8.0).exp();
+                // Muzzle flash.
+                let fdy = y as f64 - muzzle.0;
+                let fdx = x as f64 - muzzle.1;
+                let r2 = fdy * fdy + fdx * fdx;
+                let flash_v = 2.0 * flash * (-r2 / 60.0).exp();
+                // Smoke plume drifting up-right.
+                let sdy = y as f64 - (muzzle.0 - 0.4 * time);
+                let sdx = x as f64 - (muzzle.1 + 0.8 * time);
+                let smoke_v = smoke_a * (-(sdy * sdy + sdx * sdx) / (2.0 * smoke_r * smoke_r)).exp();
+                for ch in 0..c {
+                    let idx = ((y * w + x) * c + ch) * f + fr;
+                    data[idx] = bg[pix]
+                        + bullet * flash_tint[ch]
+                        + flash_v * flash_tint[ch]
+                        + smoke_v * smoke_tint[ch];
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> VideoConfig {
+        VideoConfig { height: 20, width: 40, channels: 3, frames: 12, seed: 1 }
+    }
+
+    #[test]
+    fn dims_and_nonneg() {
+        let t = generate_video(&small());
+        assert_eq!(t.dims(), &[20, 40, 3, 12]);
+        assert!(t.is_nonneg());
+    }
+
+    #[test]
+    fn temporal_structure_compresses() {
+        let t = generate_video(&small());
+        let tt = crate::baselines::ttsvd::tt_svd(&t, 0.05).unwrap();
+        assert!(tt.compression_ratio() > 2.0, "got {}", tt.compression_ratio());
+    }
+
+    #[test]
+    fn flash_decays_over_frames() {
+        let t = generate_video(&small());
+        // Mean intensity near the muzzle should decrease from frame 0 to late frames.
+        let mean_at = |fr: usize| {
+            let mut s = 0.0;
+            for y in 8..12 {
+                for x in 2..8 {
+                    s += t.get(&[y, x, 0, fr]);
+                }
+            }
+            s
+        };
+        assert!(mean_at(0) > mean_at(11));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate_video(&small()).as_slice(), generate_video(&small()).as_slice());
+    }
+}

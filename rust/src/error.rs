@@ -1,0 +1,41 @@
+//! Error type for the dntt library.
+
+use thiserror::Error;
+
+/// Library-level error.
+#[derive(Error, Debug)]
+pub enum DnttError {
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("communicator error: {0}")]
+    Comm(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DnttError>;
+
+impl From<crate::util::json::JsonError> for DnttError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        DnttError::Config(e.to_string())
+    }
+}
+
+/// Shorthand constructors.
+impl DnttError {
+    pub fn shape(msg: impl Into<String>) -> Self {
+        DnttError::Shape(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        DnttError::Config(msg.into())
+    }
+}

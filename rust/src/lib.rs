@@ -1,0 +1,32 @@
+//! # dntt — Distributed Non-Negative Tensor Train Decomposition
+//!
+//! A production-grade reproduction of *"Distributed Non-Negative Tensor
+//! Train Decomposition"* (Bhattarai et al., LANL 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed coordinator: thread-rank
+//!   communicator with MPI-style collectives, chunked array store with
+//!   global reshape (Alg 1), distributed SVD rank selection, distributed
+//!   BCD/MU NMF (Algs 3–6), and the tensor-train driver (Alg 2).
+//! * **L2/L1 (`python/compile/`)** — the NMF inner iteration as a JAX
+//!   graph built from Pallas kernels, AOT-lowered to HLO text at build time.
+//! * **Runtime (`runtime`)** — loads the AOT artifacts through the `xla`
+//!   crate's PJRT CPU client; Python is never on the execution path.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for the paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod error;
+pub mod linalg;
+pub mod nmf;
+pub mod runtime;
+pub mod tensor;
+pub mod ttrain;
+pub mod util;
+
+pub use error::Result;

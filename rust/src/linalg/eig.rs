@@ -1,0 +1,183 @@
+//! Symmetric eigendecomposition (cyclic Jacobi).
+//!
+//! Used by the distributed SVD: ranks all-reduce a small Gram matrix
+//! `G = X·Xᵀ` (size `r_{l-1}·n_l` — at most a few thousand) and each rank
+//! solves the symmetric eigenproblem locally; `σ_i = sqrt(λ_i)`. Jacobi is
+//! chosen over QR iteration for its simplicity, unconditional stability and
+//! high relative accuracy on the small clustered spectra the rank-selection
+//! heuristic inspects.
+
+use super::matrix::Mat;
+use super::scalar::Scalar;
+
+/// Result of a symmetric eigendecomposition: `A = V diag(λ) Vᵀ` with
+/// eigenvalues sorted in descending order and eigenvectors as columns of V.
+#[derive(Clone, Debug)]
+pub struct SymEig<T: Scalar> {
+    pub values: Vec<f64>,
+    pub vectors: Mat<T>,
+}
+
+/// Cyclic-Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Panics if `a` is not square. Symmetry is assumed (the lower triangle is
+/// ignored when sweeping but rotations keep the working copy symmetric).
+pub fn sym_eig<T: Scalar>(a: &Mat<T>) -> SymEig<T> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "sym_eig: matrix must be square");
+    if n == 0 {
+        return SymEig { values: vec![], vectors: Mat::zeros(0, 0) };
+    }
+    // Work in f64 regardless of input width for accuracy.
+    let mut m: Vec<f64> = a.as_slice().iter().map(|&x| x.tof()).collect();
+    let idx = |i: usize, j: usize| i * n + j;
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[idx(i, i)] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    let tol = 1e-14 * off_diag_norm(&m, n).max(1e-300);
+    for _sweep in 0..max_sweeps {
+        let off = off_diag_norm(&m, n);
+        if off <= tol || off == 0.0 {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                // Stable rotation computation (Golub & Van Loan §8.4).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ) on both sides.
+                for k in 0..n {
+                    let akp = m[idx(k, p)];
+                    let akq = m[idx(k, q)];
+                    m[idx(k, p)] = c * akp - s * akq;
+                    m[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[idx(p, k)];
+                    let aqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * apk - s * aqk;
+                    m[idx(q, k)] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    let vectors = Mat::from_fn(n, n, |i, j| T::fromf(v[idx(i, pairs[j].1)]));
+    SymEig { values, vectors }
+}
+
+fn off_diag_norm(m: &[f64], n: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                s += m[i * n + j] * m[i * n + j];
+            }
+        }
+    }
+    s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram_mt_m, matmul};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::<f64>::from_fn(3, 3, |i, j| if i == j { (3 - i) as f64 } else { 0.0 });
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        check(201, |rng| {
+            let n = 1 + rng.below(12);
+            let b = Mat::<f64>::rand_uniform(n + 2, n, rng);
+            let a = gram_mt_m(&b); // symmetric PSD
+            let e = sym_eig(&a);
+            // A ≈ V Λ Vᵀ
+            let mut lam = Mat::<f64>::zeros(n, n);
+            for i in 0..n {
+                lam[(i, i)] = e.values[i];
+            }
+            let rec = matmul(&matmul(&e.vectors, &lam), &e.vectors.transpose());
+            let err = {
+                let mut d = rec.clone();
+                d.sub_assign(&a);
+                d.fro_norm() / a.fro_norm().max(1e-300)
+            };
+            if err > 1e-9 {
+                return Err(format!("reconstruction error {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Rng::new(5);
+        let b = Mat::<f64>::rand_uniform(20, 8, &mut rng);
+        let a = gram_mt_m(&b);
+        let e = sym_eig(&a);
+        let vtv = matmul(&e.vectors.transpose(), &e.vectors);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-9, "vtv[{i},{j}]={}", vtv[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        let mut rng = Rng::new(6);
+        let b = Mat::<f64>::rand_uniform(30, 10, &mut rng);
+        let e = sym_eig(&gram_mt_m(&b));
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn psd_eigenvalues_nonnegative() {
+        let mut rng = Rng::new(8);
+        let b = Mat::<f64>::rand_uniform(15, 6, &mut rng);
+        let e = sym_eig(&gram_mt_m(&b));
+        assert!(e.values.iter().all(|&l| l > -1e-10));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = sym_eig(&Mat::<f64>::zeros(0, 0));
+        assert!(e.values.is_empty());
+        let a = Mat::<f64>::from_vec(1, 1, vec![4.0]);
+        let e = sym_eig(&a);
+        assert_eq!(e.values, vec![4.0]);
+    }
+}

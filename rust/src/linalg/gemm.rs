@@ -1,0 +1,287 @@
+//! Matrix-multiplication kernels.
+//!
+//! These are the MM/GR hot paths of the distributed NMF (Algs 3–6): local
+//! `X·Hᵀ`, `Wᵀ·X`, and Gram products `M·Mᵀ` / `Mᵀ·M`. The implementation is
+//! a cache-blocked i-k-j loop with the innermost loop written over
+//! contiguous rows so LLVM autovectorizes it; `matmul_at_b` avoids an
+//! explicit transpose by walking A column-wise per block. Tuning history
+//! lives in EXPERIMENTS.md §Perf.
+
+use super::matrix::Mat;
+use super::scalar::Scalar;
+
+/// Cache block size along the k dimension (L1-friendly for f64).
+const KB: usize = 64;
+/// Cache block size along the i dimension.
+const IB: usize = 64;
+
+/// `C = A · B` into a fresh matrix.
+pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` into a caller-provided buffer (zeroed first; no allocation).
+pub fn matmul_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "matmul: bad out shape");
+    for x in c.as_mut_slice() {
+        *x = T::zero();
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    // Blocked i-k-j: C[i,:] += A[i,kk] * B[kk,:]; inner loop contiguous in C and B.
+    for i0 in (0..m).step_by(IB) {
+        let i1 = (i0 + IB).min(m);
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == T::zero() {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    // Contiguous axpy over row of B into row of C.
+                    for j in 0..n {
+                        crow[j] = brow[j].fma(aik, crow[j]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` (A is m×r stored row-major; result r×n). Used for `Wᵀ·X`.
+pub fn matmul_at_b<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` into a caller buffer.
+pub fn matmul_at_b_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()));
+    for x in c.as_mut_slice() {
+        *x = T::zero();
+    }
+    let (k, r, n) = (a.rows(), a.cols(), b.cols());
+    // For each shared row `kk`: C[p,:] += A[kk,p] * B[kk,:]  — all contiguous.
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for p in 0..r {
+            let apk = arow[p];
+            if apk == T::zero() {
+                continue;
+            }
+            let crow = c.row_mut(p);
+            for j in 0..n {
+                crow[j] = brow[j].fma(apk, crow[j]);
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ` (dot products of rows; result m×q). Used for `X·Hᵀ`.
+pub fn matmul_a_bt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` into a caller buffer.
+pub fn matmul_a_bt_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()));
+    let (m, k, q) = (a.rows(), a.cols(), b.rows());
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..q {
+            let brow = b.row(j);
+            // 4-way unrolled dot product over contiguous rows.
+            let mut s0 = T::zero();
+            let mut s1 = T::zero();
+            let mut s2 = T::zero();
+            let mut s3 = T::zero();
+            let chunks = k / 4 * 4;
+            let mut t = 0;
+            while t < chunks {
+                s0 = arow[t].fma(brow[t], s0);
+                s1 = arow[t + 1].fma(brow[t + 1], s1);
+                s2 = arow[t + 2].fma(brow[t + 2], s2);
+                s3 = arow[t + 3].fma(brow[t + 3], s3);
+                t += 4;
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            while t < k {
+                s = arow[t].fma(brow[t], s);
+                t += 1;
+            }
+            crow[j] = s;
+        }
+    }
+}
+
+/// Gram `G = M · Mᵀ` (q×q, symmetric — only the upper triangle is computed
+/// then mirrored). The local GR kernel of Alg 4 when M = H-block.
+pub fn gram_m_mt<T: Scalar>(m: &Mat<T>) -> Mat<T> {
+    let q = m.rows();
+    let k = m.cols();
+    let mut g = Mat::zeros(q, q);
+    for i in 0..q {
+        let ri = m.row(i);
+        for j in i..q {
+            let rj = m.row(j);
+            let mut s = T::zero();
+            for t in 0..k {
+                s = ri[t].fma(rj[t], s);
+            }
+            g[(i, j)] = s;
+            g[(j, i)] = s;
+        }
+    }
+    g
+}
+
+/// Gram `G = Mᵀ · M` (r×r). The local GR kernel when M = W-block (m×r).
+///
+/// Accumulates full rank-1 outer products (`G[p,:] += row[p] * row`) rather
+/// than only the upper triangle: for the small `r` of NMF factors the
+/// contiguous full-row inner loop vectorizes, which beats halving the flop
+/// count (§Perf log: 1.5→3.9 GFLOP/s at r=10).
+pub fn gram_mt_m<T: Scalar>(m: &Mat<T>) -> Mat<T> {
+    let r = m.cols();
+    let mut g = Mat::zeros(r, r);
+    for i in 0..m.rows() {
+        let row = m.row(i);
+        for p in 0..r {
+            let v = row[p];
+            if v == T::zero() {
+                continue;
+            }
+            let grow = g.row_mut(p);
+            for q in 0..r {
+                grow[q] = row[q].fma(v, grow[q]);
+            }
+        }
+    }
+    g
+}
+
+/// Naive reference matmul (for tests only).
+pub fn matmul_naive<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    assert_eq!(a.cols(), b.rows());
+    Mat::from_fn(a.rows(), b.cols(), |i, j| {
+        let mut s = T::zero();
+        for t in 0..a.cols() {
+            s += a[(i, t)] * b[(t, j)];
+        }
+        s
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    fn to64(m: &Mat<f64>) -> Vec<f64> {
+        m.as_slice().to_vec()
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        check(101, |rng| {
+            let m = 1 + rng.below(40);
+            let k = 1 + rng.below(40);
+            let n = 1 + rng.below(40);
+            let a = Mat::<f64>::rand_uniform(m, k, rng);
+            let b = Mat::<f64>::rand_uniform(k, n, rng);
+            assert_close(&to64(&matmul(&a, &b)), &to64(&matmul_naive(&a, &b)), 1e-10)
+        });
+    }
+
+    #[test]
+    fn at_b_matches_transpose_then_matmul() {
+        check(102, |rng| {
+            let k = 1 + rng.below(30);
+            let r = 1 + rng.below(10);
+            let n = 1 + rng.below(30);
+            let a = Mat::<f64>::rand_uniform(k, r, rng);
+            let b = Mat::<f64>::rand_uniform(k, n, rng);
+            assert_close(&to64(&matmul_at_b(&a, &b)), &to64(&matmul(&a.transpose(), &b)), 1e-10)
+        });
+    }
+
+    #[test]
+    fn a_bt_matches_transpose_then_matmul() {
+        check(103, |rng| {
+            let m = 1 + rng.below(30);
+            let k = 1 + rng.below(30);
+            let q = 1 + rng.below(10);
+            let a = Mat::<f64>::rand_uniform(m, k, rng);
+            let b = Mat::<f64>::rand_uniform(q, k, rng);
+            assert_close(&to64(&matmul_a_bt(&a, &b)), &to64(&matmul(&a, &b.transpose())), 1e-10)
+        });
+    }
+
+    #[test]
+    fn gram_kernels_match() {
+        check(104, |rng| {
+            let r = 1 + rng.below(12);
+            let n = 1 + rng.below(50);
+            let h = Mat::<f64>::rand_uniform(r, n, rng);
+            assert_close(&to64(&gram_m_mt(&h)), &to64(&matmul(&h, &h.transpose())), 1e-10)?;
+            let w = Mat::<f64>::rand_uniform(n, r, rng);
+            assert_close(&to64(&gram_mt_m(&w)), &to64(&matmul(&w.transpose(), &w)), 1e-10)
+        });
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let m = Mat::<f64>::rand_uniform(5, 20, &mut rng);
+        let g = gram_m_mt(&m);
+        for i in 0..5 {
+            assert!(g[(i, i)] >= 0.0);
+            for j in 0..5 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inner_dim() {
+        let a = Mat::<f64>::zeros(3, 0);
+        let b = Mat::<f64>::zeros(0, 2);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape(), (3, 2));
+        assert!(c.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a = Mat::<f64>::rand_uniform(8, 8, &mut rng);
+        let i = Mat::<f64>::eye(8);
+        assert_close(&to64(&matmul(&a, &i)), &to64(&a), 1e-12).unwrap();
+        assert_close(&to64(&matmul(&i, &a)), &to64(&a), 1e-12).unwrap();
+    }
+
+    #[test]
+    fn f32_path_works() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let a = Mat::<f32>::rand_uniform(16, 9, &mut rng);
+        let b = Mat::<f32>::rand_uniform(9, 12, &mut rng);
+        let c = matmul(&a, &b);
+        let c64 = matmul(&a.cast::<f64>(), &b.cast::<f64>());
+        for (x, y) in c.as_slice().iter().zip(c64.as_slice()) {
+            assert!((x.tof() - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,396 @@
+//! Dense row-major matrix.
+//!
+//! The workhorse container for every local (per-rank) computation: NMF
+//! factor blocks, Gram matrices, unfolded tensor blocks. Deliberately
+//! minimal — heavy kernels live in [`crate::linalg::gemm`] and friends so
+//! they can be profiled and tuned in isolation.
+
+use super::scalar::Scalar;
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of `Scalar` elements.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T: Scalar = f64> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Mat<T> {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![T::zero(); rows * cols] }
+    }
+
+    /// Constant-filled matrix.
+    pub fn filled(rows: usize, cols: usize, v: T) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = T::one();
+        }
+        m
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Uniform [0,1) entries — the factor initialization used by Alg 3.
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat::from_fn(rows, cols, |_, _| T::fromf(rng.uniform()))
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Sub-matrix of rows [r0, r1).
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat<T> {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+
+    /// Sub-matrix of columns [c0, c1).
+    pub fn cols_slice(&self, c0: usize, c1: usize) -> Mat<T> {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        Mat::from_fn(self.rows, c1 - c0, |i, j| self[(i, c0 + j)])
+    }
+
+    /// Transposed copy (blocked for cache friendliness).
+    pub fn transpose(&self) -> Mat<T> {
+        const B: usize = 32;
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reinterpret as a new shape (row-major order preserved, zero-copy).
+    pub fn reshaped(self, rows: usize, cols: usize) -> Mat<T> {
+        assert_eq!(rows * cols, self.data.len(), "reshape size mismatch");
+        Mat { rows, cols, data: self.data }
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Mat<T> {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Element-wise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(T) -> T) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: T, other: &Mat<T>) {
+        assert_eq!(self.shape(), other.shape());
+        for (x, &y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x = y.fma(alpha, *x);
+        }
+    }
+
+    /// `self -= other`.
+    pub fn sub_assign(&mut self, other: &Mat<T>) {
+        assert_eq!(self.shape(), other.shape());
+        for (x, &y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x -= y;
+        }
+    }
+
+    /// Scale all elements.
+    pub fn scale(&mut self, alpha: T) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Project onto the non-negative orthant: `max(0, x)` element-wise.
+    pub fn project_nonneg(&mut self) {
+        for x in &mut self.data {
+            if *x < T::zero() {
+                *x = T::zero();
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x.tof() * x.tof()).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| x.tof() * x.tof()).sum::<f64>()
+    }
+
+    /// Entry-wise L1 norm.
+    pub fn l1_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x.tof().abs()).sum::<f64>()
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|&x| x.tof().abs()).fold(0.0, f64::max)
+    }
+
+    /// Minimum element.
+    pub fn min_elem(&self) -> f64 {
+        self.data.iter().map(|&x| x.tof()).fold(f64::INFINITY, f64::min)
+    }
+
+    /// True if all entries are ≥ 0 (the nTT invariant).
+    pub fn is_nonneg(&self) -> bool {
+        self.data.iter().all(|&x| x >= T::zero())
+    }
+
+    /// Convert the element type.
+    pub fn cast<U: Scalar>(&self) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| U::fromf(x.tof())).collect(),
+        }
+    }
+
+    /// Stack vertically: rows of `self` then rows of `other`.
+    pub fn vstack(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Stack horizontally: columns of `self` then columns of `other`.
+    pub fn hstack(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+}
+
+impl<T: Scalar> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> IndexMut<(usize, usize)> for Mat<T> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat<{}> {}x{}", T::NAME, self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  [")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4}", self[(i, j)].tof())?;
+            }
+            writeln!(f, "{}]", if self.cols > show_c { " …" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut m = Mat::<f64>::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let m = Mat::<f64>::from_fn(2, 2, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.as_slice(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::<f64>::rand_uniform(37, 53, &mut rng);
+        let t = m.transpose().transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let m = Mat::<f64>::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (2, 3));
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(m[(i, j)], t[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::<f64>::from_vec(1, 2, vec![3.0, -4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.l1_norm(), 7.0);
+        assert_eq!(m.max_abs(), 4.0);
+        assert_eq!(m.min_elem(), -4.0);
+    }
+
+    #[test]
+    fn project_nonneg() {
+        let mut m = Mat::<f64>::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        assert!(!m.is_nonneg());
+        m.project_nonneg();
+        assert_eq!(m.as_slice(), &[0.0, 0.0, 2.0]);
+        assert!(m.is_nonneg());
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let mut a = Mat::<f64>::filled(2, 2, 1.0);
+        let b = Mat::<f64>::filled(2, 2, 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.as_slice(), &[2.0; 4]);
+        a.sub_assign(&b);
+        assert_eq!(a.as_slice(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn stacking() {
+        let a = Mat::<f64>::filled(1, 2, 1.0);
+        let b = Mat::<f64>::filled(2, 2, 2.0);
+        let v = a.vstack(&b);
+        assert_eq!(v.shape(), (3, 2));
+        assert_eq!(v.row(2), &[2.0, 2.0]);
+        let h = a.hstack(&Mat::filled(1, 3, 3.0));
+        assert_eq!(h.shape(), (1, 5));
+        assert_eq!(h.row(0), &[1.0, 1.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn slices() {
+        let m = Mat::<f64>::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let r = m.rows_slice(1, 3);
+        assert_eq!(r.shape(), (2, 3));
+        assert_eq!(r[(0, 0)], 3.0);
+        let c = m.cols_slice(1, 3);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn reshape_preserves_order() {
+        let m = Mat::<f64>::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let r = m.clone().reshaped(3, 2);
+        assert_eq!(r.as_slice(), m.as_slice());
+        assert_eq!(r[(2, 1)], 5.0);
+    }
+
+    #[test]
+    fn cast_widths() {
+        let m = Mat::<f64>::from_vec(1, 2, vec![1.5, 2.5]);
+        let f: Mat<f32> = m.cast();
+        assert_eq!(f.as_slice(), &[1.5f32, 2.5f32]);
+    }
+
+    #[test]
+    fn eye() {
+        let m = Mat::<f64>::eye(3);
+        assert_eq!(m[(1, 1)], 1.0);
+        assert_eq!(m[(0, 1)], 0.0);
+        assert!((m.fro_norm_sq() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's implementation leans on NumPy/LAPACK; everything it uses is
+//! re-implemented here: row-major matrices, blocked GEMM variants shaped
+//! like the NMF kernels (`X·Hᵀ`, `Wᵀ·X`, Gram products), Jacobi symmetric
+//! eigendecomposition, one-sided-Jacobi thin SVD, Householder QR.
+
+pub mod eig;
+pub mod gemm;
+pub mod matrix;
+pub mod qr;
+pub mod scalar;
+pub mod svd;
+
+pub use matrix::Mat;
+pub use scalar::Scalar;

@@ -1,0 +1,156 @@
+//! Thin Householder QR.
+//!
+//! Needed by the Tucker/HOOI baseline (orthonormal factor bases) and usable
+//! as a preprocessing step for tall-skinny SVDs (`A = QR`, SVD of small R).
+
+use super::matrix::Mat;
+use super::scalar::Scalar;
+
+/// Thin QR: `A = Q · R` with `Q: m×k` orthonormal columns, `R: k×n` upper
+/// triangular, `k = min(m, n)`.
+pub struct Qr<T: Scalar> {
+    pub q: Mat<T>,
+    pub r: Mat<T>,
+}
+
+/// Householder QR (working in f64 internally).
+pub fn thin_qr<T: Scalar>(a: &Mat<T>) -> Qr<T> {
+    let m = a.rows();
+    let n = a.cols();
+    let k = m.min(n);
+    // Working copy in f64, row-major.
+    let mut r: Vec<f64> = a.as_slice().iter().map(|&x| x.tof()).collect();
+    let idx = |i: usize, j: usize| i * n + j;
+    // Householder vectors, stored per reflection.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Compute the reflector for column j, rows j..m.
+        let mut normx = 0.0;
+        for i in j..m {
+            normx += r[idx(i, j)] * r[idx(i, j)];
+        }
+        let normx = normx.sqrt();
+        let mut v = vec![0.0; m - j];
+        if normx == 0.0 {
+            vs.push(v); // zero column: identity reflector
+            continue;
+        }
+        let alpha = if r[idx(j, j)] >= 0.0 { -normx } else { normx };
+        for i in j..m {
+            v[i - j] = r[idx(i, j)];
+        }
+        v[0] -= alpha;
+        let vnorm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if vnorm > 0.0 {
+            for x in &mut v {
+                *x /= vnorm;
+            }
+            // Apply H = I - 2vvᵀ to R[j.., j..].
+            for c in j..n {
+                let mut dot = 0.0;
+                for i in j..m {
+                    dot += v[i - j] * r[idx(i, c)];
+                }
+                for i in j..m {
+                    r[idx(i, c)] -= 2.0 * v[i - j] * dot;
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // R is the top k×n of the working copy (zero the sub-diagonal noise).
+    let mut rm = Mat::<T>::zeros(k, n);
+    for i in 0..k {
+        for j in 0..n {
+            rm[(i, j)] = if j >= i { T::fromf(r[idx(i, j)]) } else { T::zero() };
+        }
+    }
+
+    // Accumulate Q by applying reflections to the first k columns of I.
+    let mut q = vec![0.0f64; m * k];
+    for j in 0..k {
+        q[j * k + j] = 1.0;
+    }
+    for (j, v) in vs.iter().enumerate().rev() {
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q[i * k + c];
+            }
+            for i in j..m {
+                q[i * k + c] -= 2.0 * v[i - j] * dot;
+            }
+        }
+    }
+    let qm = Mat::<T>::from_fn(m, k, |i, j| T::fromf(q[i * k + j]));
+    Qr { q: qm, r: rm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn rel_err(a: &Mat<f64>, b: &Mat<f64>) -> f64 {
+        let mut d = a.clone();
+        d.sub_assign(b);
+        d.fro_norm() / a.fro_norm().max(1e-300)
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        check(401, |rng| {
+            let m = 1 + rng.below(30);
+            let n = 1 + rng.below(30);
+            let a = Mat::<f64>::rand_uniform(m, n, rng);
+            let qr = thin_qr(&a);
+            let err = rel_err(&a, &matmul(&qr.q, &qr.r));
+            if err > 1e-10 {
+                return Err(format!("{m}x{n}: err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Mat::<f64>::rand_uniform(25, 10, &mut rng);
+        let qr = thin_qr(&a);
+        let qtq = matmul(&qr.q.transpose(), &qr.q);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = Mat::<f64>::rand_uniform(12, 8, &mut rng);
+        let qr = thin_qr(&a);
+        for i in 0..qr.r.rows() {
+            for j in 0..i.min(qr.r.cols()) {
+                assert_eq!(qr.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_handled() {
+        let mut a = Mat::<f64>::zeros(5, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 2)] = 2.0; // middle column zero
+        let qr = thin_qr(&a);
+        assert!(rel_err(&a, &matmul(&qr.q, &qr.r)) < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Scalar abstraction: the library's numeric kernels are generic over
+//! `f32`/`f64`. The native backend defaults to `f64` (matching the paper's
+//! NumPy implementation); the PJRT/XLA path runs `f32` (the artifact dtype),
+//! and parity between the two is asserted in tests.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+
+/// Floating-point element type for all linear-algebra kernels.
+pub trait Scalar:
+    num_traits::Float
+    + num_traits::NumAssign
+    + num_traits::FromPrimitive
+    + Copy
+    + Send
+    + Sync
+    + Debug
+    + Display
+    + Default
+    + Sum
+    + 'static
+{
+    const NAME: &'static str;
+
+    fn fromf(x: f64) -> Self;
+    fn tof(self) -> f64;
+
+    /// Fused multiply-add when available.
+    #[inline]
+    fn fma(self, a: Self, b: Self) -> Self {
+        self.mul_add(a, b)
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    #[inline]
+    fn fromf(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn tof(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    #[inline]
+    fn fromf(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn tof(self) -> f64 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_sum<T: Scalar>() -> f64 {
+        let xs = [T::fromf(1.5), T::fromf(2.5)];
+        xs.iter().copied().sum::<T>().tof()
+    }
+
+    #[test]
+    fn works_for_both_widths() {
+        assert_eq!(generic_sum::<f32>(), 4.0);
+        assert_eq!(generic_sum::<f64>(), 4.0);
+        assert_eq!(f32::NAME, "f32");
+        assert_eq!(f64::NAME, "f64");
+    }
+
+    #[test]
+    fn fma_matches() {
+        let x = 2.0f64;
+        assert_eq!(x.fma(3.0, 4.0), 10.0);
+    }
+}

@@ -1,0 +1,342 @@
+//! Singular value decomposition.
+//!
+//! Two entry points, matching the two uses in the paper:
+//!
+//! * [`singular_values_gram`] — singular values only, computed from the
+//!   small Gram matrix. This is what the *distributed* SVD of Alg 2 reduces
+//!   to: ranks all-reduce `G = X Xᵀ` (whose side is the short dimension
+//!   `r_{l-1}·n_l`), then every rank takes `sqrt(eig(G))` locally. Fast and
+//!   exactly what the ε-threshold rank selection needs.
+//! * [`thin_svd`] — full thin SVD via one-sided Jacobi (Hestenes), used by
+//!   the TT-SVD baseline where the factors themselves are needed.
+
+use super::eig::sym_eig;
+use super::gemm::{gram_m_mt, gram_mt_m, matmul};
+use super::matrix::Mat;
+use super::scalar::Scalar;
+
+/// Thin SVD `A = U diag(s) Vᵀ`, `U: m×k`, `s: k`, `Vt: k×n`, `k = min(m,n)`.
+#[derive(Clone, Debug)]
+pub struct Svd<T: Scalar> {
+    pub u: Mat<T>,
+    pub s: Vec<f64>,
+    pub vt: Mat<T>,
+}
+
+/// Singular values of `A` via the Gram-matrix route (descending, length
+/// `min(m, n)`). Negative eigenvalues from roundoff are clamped to zero.
+pub fn singular_values_gram<T: Scalar>(a: &Mat<T>) -> Vec<f64> {
+    let g = if a.rows() <= a.cols() { gram_m_mt(a) } else { gram_mt_m(a) };
+    sym_eig(&g).values.into_iter().map(|l| l.max(0.0).sqrt()).collect()
+}
+
+/// Singular values from a precomputed Gram matrix (the distributed path:
+/// the Gram has already been all-reduced across ranks).
+pub fn singular_values_of_gram<T: Scalar>(g: &Mat<T>) -> Vec<f64> {
+    sym_eig(g).values.into_iter().map(|l| l.max(0.0).sqrt()).collect()
+}
+
+/// The paper's ε-threshold rank selection: smallest `k` such that
+/// `sqrt(σ_{k+1}² + … + σ_N²) / sqrt(σ_1² + … + σ_N²) ≤ ε`.
+///
+/// Returns at least 1 (a rank-0 factorization is meaningless) and at most N.
+pub fn rank_for_eps(singular_values: &[f64], eps: f64) -> usize {
+    let n = singular_values.len();
+    if n == 0 {
+        return 1;
+    }
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 1;
+    }
+    // tail(k) = sum_{i>k} σ_i²; find smallest k with sqrt(tail/total) <= eps.
+    let mut tail = total;
+    for k in 1..=n {
+        tail -= singular_values[k - 1] * singular_values[k - 1];
+        if (tail.max(0.0) / total).sqrt() <= eps {
+            return k;
+        }
+    }
+    n
+}
+
+/// Thin SVD via one-sided Jacobi (Hestenes) with eigen-fallback for rank
+/// deficiency. Operates on the transpose when `m < n` so the rotated matrix
+/// always has at least as many rows as columns.
+pub fn thin_svd<T: Scalar>(a: &Mat<T>) -> Svd<T> {
+    // Extreme aspect ratios (the TT sweep's `m × n_rest` unfoldings):
+    // the Gram route costs O(min²·max) for the product + O(min³) for the
+    // eig, vs O(min²·max·sweeps) for one-sided Jacobi — an ~8x win on the
+    // Fig-8c stage matrices (§Perf log).
+    let (m, n) = a.shape();
+    let (lo, hi) = (m.min(n), m.max(n));
+    if lo > 0 && lo <= 512 && hi >= 4 * lo {
+        return thin_svd_gram(a);
+    }
+    if m >= n {
+        thin_svd_tall(a)
+    } else {
+        // A = U S Vᵀ  ⇔  Aᵀ = V S Uᵀ.
+        let s = thin_svd_tall(&a.transpose());
+        Svd { u: s.vt.transpose(), s: s.s, vt: s.u.transpose() }
+    }
+}
+
+/// Gram-route thin SVD for strongly rectangular matrices:
+/// `G = A·Aᵀ = U Λ Uᵀ` (small side), `σ = sqrt(λ)`, `Vᵀ = Σ⁻¹·Uᵀ·A`.
+/// Columns with σ below the roundoff floor are zeroed (rank deficiency).
+fn thin_svd_gram<T: Scalar>(a: &Mat<T>) -> Svd<T> {
+    if a.rows() <= a.cols() {
+        let g = gram_m_mt(a); // m×m
+        let e = sym_eig(&g);
+        let s: Vec<f64> = e.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
+        let u = e.vectors; // m×m
+        // Vᵀ = Σ⁻¹ Uᵀ A, zero rows for negligible σ.
+        let mut vt = crate::linalg::gemm::matmul_at_b(&u, a); // m×n
+        let floor = s.first().copied().unwrap_or(0.0) * 1e-14;
+        for (i, &si) in s.iter().enumerate() {
+            let inv = if si > floor && si > 0.0 { T::fromf(1.0 / si) } else { T::zero() };
+            for v in vt.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        Svd { u, s, vt }
+    } else {
+        let t = thin_svd_gram(&a.transpose());
+        Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() }
+    }
+}
+
+/// One-sided Jacobi on a tall matrix (m ≥ n): rotate column pairs of a
+/// working copy until all pairs are orthogonal; then σ_j = ‖a_j‖,
+/// U = A·diag(1/σ), V = accumulated rotations.
+fn thin_svd_tall<T: Scalar>(a: &Mat<T>) -> Svd<T> {
+    let m = a.rows();
+    let n = a.cols();
+    if n == 0 || m == 0 {
+        return Svd { u: Mat::zeros(m, 0), s: vec![], vt: Mat::zeros(0, n) };
+    }
+    // Work column-major in f64: cols[j] is column j.
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j).iter().map(|x| x.tof()).collect()).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let frob: f64 = cols.iter().flat_map(|c| c.iter()).map(|x| x * x).sum::<f64>();
+    let tol = 1e-28 * frob.max(1e-300); // on |aᵢ·aⱼ|² relative to ‖A‖⁴-ish scale
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut converged = true;
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                let (cp, cq) = (&cols[p], &cols[q]);
+                for i in 0..m {
+                    app += cp[i] * cp[i];
+                    aqq += cq[i] * cq[i];
+                    apq += cp[i] * cq[i];
+                }
+                if apq * apq <= tol * 1e-2 || apq.abs() <= 1e-30 {
+                    continue;
+                }
+                if apq * apq > 1e-30 * app * aqq {
+                    converged = false;
+                }
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate the column pair.
+                let (left, right) = cols.split_at_mut(q);
+                let cp = &mut left[p];
+                let cq = &mut right[0];
+                for i in 0..m {
+                    let xp = cp[i];
+                    let xq = cq[i];
+                    cp[i] = c * xp - s * xq;
+                    cq[i] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if converged {
+            break;
+        }
+    }
+
+    // Extract singular values and sort descending.
+    let mut sig: Vec<(f64, usize)> =
+        (0..n).map(|j| (cols[j].iter().map(|x| x * x).sum::<f64>().sqrt(), j)).collect();
+    sig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let s: Vec<f64> = sig.iter().map(|&(x, _)| x).collect();
+
+    let mut u = Mat::<T>::zeros(m, n);
+    let mut vt = Mat::<T>::zeros(n, n);
+    let smax = s.first().copied().unwrap_or(0.0);
+    for (jj, &(sj, j)) in sig.iter().enumerate() {
+        if sj > smax * 1e-300 && sj > 0.0 {
+            for i in 0..m {
+                u[(i, jj)] = T::fromf(cols[j][i] / sj);
+            }
+        } // else leave a zero column (rank-deficient tail).
+        for i in 0..n {
+            vt[(jj, i)] = T::fromf(v[i * n + j]);
+        }
+    }
+    Svd { u, s, vt: vt.rows_slice(0, n) }
+}
+
+impl<T: Scalar> Svd<T> {
+    /// Keep only the leading `k` triplets.
+    pub fn truncate(&self, k: usize) -> Svd<T> {
+        let k = k.min(self.s.len());
+        Svd {
+            u: self.u.cols_slice(0, k),
+            s: self.s[..k].to_vec(),
+            vt: self.vt.rows_slice(0, k),
+        }
+    }
+
+    /// Reconstruct `U diag(s) Vt` (for tests / baselines).
+    pub fn reconstruct(&self) -> Mat<T> {
+        let k = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            let row = us.row_mut(i);
+            for j in 0..k {
+                row[j] *= T::fromf(self.s[j]);
+            }
+        }
+        matmul(&us, &self.vt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn rel_err(a: &Mat<f64>, b: &Mat<f64>) -> f64 {
+        let mut d = a.clone();
+        d.sub_assign(b);
+        d.fro_norm() / a.fro_norm().max(1e-300)
+    }
+
+    #[test]
+    fn svd_reconstructs_random_matrices() {
+        check(301, |rng| {
+            let m = 1 + rng.below(25);
+            let n = 1 + rng.below(25);
+            let a = Mat::<f64>::rand_uniform(m, n, rng);
+            let svd = thin_svd(&a);
+            let err = rel_err(&a, &svd.reconstruct());
+            if err > 1e-8 {
+                return Err(format!("{m}x{n}: reconstruction error {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_and_match_gram_route() {
+        check(302, |rng| {
+            let m = 1 + rng.below(20);
+            let n = 1 + rng.below(20);
+            let a = Mat::<f64>::rand_uniform(m, n, rng);
+            let s1 = thin_svd(&a).s;
+            let s2 = singular_values_gram(&a);
+            for w in s1.windows(2) {
+                if w[0] < w[1] - 1e-10 {
+                    return Err("unsorted".into());
+                }
+            }
+            for (x, y) in s1.iter().zip(s2.iter()) {
+                let scale = 1.0_f64.max(*x);
+                if (x - y).abs() > 1e-7 * scale {
+                    return Err(format!("σ mismatch {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn u_v_orthonormal() {
+        let mut rng = Rng::new(3);
+        let a = Mat::<f64>::rand_uniform(30, 12, &mut rng);
+        let svd = thin_svd(&a);
+        let utu = matmul(&svd.u.transpose(), &svd.u);
+        let vvt = matmul(&svd.vt, &svd.vt.transpose());
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu[(i, j)] - want).abs() < 1e-8);
+                assert!((vvt[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn low_rank_matrix_detected() {
+        let mut rng = Rng::new(4);
+        // rank-3 matrix
+        let b = Mat::<f64>::rand_uniform(20, 3, &mut rng);
+        let c = Mat::<f64>::rand_uniform(3, 15, &mut rng);
+        let a = matmul(&b, &c);
+        let s = thin_svd(&a).s;
+        assert!(s[2] > 1e-6);
+        assert!(s[3] < 1e-8 * s[0], "s[3]={} s[0]={}", s[3], s[0]);
+        assert_eq!(rank_for_eps(&s, 1e-6), 3);
+    }
+
+    #[test]
+    fn truncation_gives_best_rank_k_error() {
+        let mut rng = Rng::new(5);
+        let a = Mat::<f64>::rand_uniform(15, 10, &mut rng);
+        let svd = thin_svd(&a);
+        let k = 4;
+        let tr = svd.truncate(k);
+        let err = rel_err(&a, &tr.reconstruct());
+        // Eckart–Young: error² = tail of σ².
+        let tail: f64 = svd.s[k..].iter().map(|s| s * s).sum();
+        let want = (tail / a.fro_norm_sq()).sqrt();
+        assert!((err - want).abs() < 1e-8, "err={err} want={want}");
+    }
+
+    #[test]
+    fn rank_for_eps_edges() {
+        assert_eq!(rank_for_eps(&[], 0.1), 1);
+        assert_eq!(rank_for_eps(&[0.0, 0.0], 0.1), 1);
+        // All energy in first value → rank 1 at any reasonable eps.
+        assert_eq!(rank_for_eps(&[10.0, 0.0, 0.0], 1e-9), 1);
+        // eps = 0 → full rank.
+        assert_eq!(rank_for_eps(&[3.0, 2.0, 1.0], 0.0), 3);
+        // eps = 1 → rank 1 (threshold met immediately... sqrt(tail/total) <= 1 always).
+        assert_eq!(rank_for_eps(&[3.0, 2.0, 1.0], 1.0), 1);
+    }
+
+    #[test]
+    fn wide_matrix_svd() {
+        let mut rng = Rng::new(6);
+        let a = Mat::<f64>::rand_uniform(5, 40, &mut rng);
+        let svd = thin_svd(&a);
+        assert_eq!(svd.u.shape(), (5, 5));
+        assert_eq!(svd.vt.shape(), (5, 40));
+        assert!(rel_err(&a, &svd.reconstruct()) < 1e-8);
+    }
+
+    #[test]
+    fn rank_deficient_zero_columns() {
+        let a = Mat::<f64>::zeros(6, 4);
+        let svd = thin_svd(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert_eq!(svd.reconstruct().fro_norm(), 0.0);
+    }
+}

@@ -1,0 +1,333 @@
+//! `dntt` — the distributed non-negative tensor-train coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! * `decompose` — run the dnTT on a synthetic/faces/video tensor;
+//! * `scaling`   — Figs 5/6/7 series (strong / weak / TT-rank scaling);
+//! * `sweep`     — Figs 2/8a/8b/8c compression-vs-error curves;
+//! * `denoise`   — Fig 9 SSIM comparison (SVD-TT vs NMF-TT);
+//! * `info`      — platform + artifact manifest report.
+
+use dntt::bench::workloads::{self, Fig8Data, ScalingMode, ScalingParams, PAPER_EPS};
+use dntt::coordinator::{run_job, BackendChoice, InputSpec, JobConfig};
+use dntt::data::FaceConfig;
+use dntt::dist::chunkstore::SpillMode;
+use dntt::dist::ProcGrid;
+use dntt::nmf::{NmfAlgo, NmfConfig};
+use dntt::ttrain::{SyntheticTt, TtConfig};
+use dntt::util::argparse::ArgSpec;
+use std::path::PathBuf;
+use std::process::exit;
+
+fn main() {
+    dntt::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", top_usage());
+            exit(2);
+        }
+    };
+    let result = match cmd {
+        "decompose" => cmd_decompose(&rest),
+        "inspect" => cmd_inspect(&rest),
+        "scaling" => cmd_scaling(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "denoise" => cmd_denoise(&rest),
+        "info" => cmd_info(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{}", top_usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("{e}");
+        exit(1);
+    }
+}
+
+fn top_usage() -> String {
+    "dntt — distributed non-negative tensor-train decomposition\n\n\
+     USAGE: dntt <COMMAND> [OPTIONS]\n\n\
+     COMMANDS:\n\
+     \x20 decompose   decompose a tensor (synthetic | faces | video)\n\
+     \x20 inspect     inspect / evaluate a saved .dntt tensor train\n\
+     \x20 scaling     strong/weak/TT-rank scaling series (Figs 5-7)\n\
+     \x20 sweep       compression-vs-error curves (Figs 2, 8a-c)\n\
+     \x20 denoise     SSIM denoising comparison (Fig 9)\n\
+     \x20 info        platform + artifact info\n\n\
+     Run `dntt <COMMAND> --help` for options."
+        .into()
+}
+
+fn parse_grid(s: &str, d: usize) -> Result<ProcGrid, String> {
+    let dims: Vec<usize> = s
+        .split('x')
+        .map(|x| x.trim().parse().map_err(|_| format!("bad grid '{s}'")))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != d {
+        return Err(format!("grid '{s}' has {} modes; tensor has {d}", dims.len()));
+    }
+    ProcGrid::new(dims).map_err(|e| e.to_string())
+}
+
+fn cmd_decompose(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dntt decompose", "run the distributed nTT on a tensor")
+        .opt("input", "synthetic", "input kind: synthetic|faces|video")
+        .opt("dims", "16,16,16,16", "tensor dims (synthetic)")
+        .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
+        .opt("grid", "1x1x1x1", "processor grid, e.g. 2x2x2x2")
+        .opt("eps", "0.01", "per-stage rank-selection threshold")
+        .opt("ranks", "", "fixed TT ranks (skip SVD), e.g. 10,10,10")
+        .opt("algo", "bcd", "NMF update rule: bcd|mu|hals")
+        .opt("iters", "100", "NMF iterations per stage")
+        .opt("backend", "native", "compute backend: native|pjrt")
+        .opt("artifacts", "artifacts", "artifact dir for --backend pjrt")
+        .opt("spill", "", "spill chunks to this directory (out-of-core)")
+        .opt("seed", "42", "random seed")
+        .opt("save-tt", "", "write the decomposition to this .dntt file")
+        .opt("round", "", "TT-round the result to this tolerance (SVD; drops non-negativity)")
+        .flag("json", "emit the report as JSON")
+        .flag("no-check", "skip reconstruction-error check");
+    let a = spec.parse(argv)?;
+
+    let input = match a.get("input") {
+        "synthetic" => {
+            let dims = a.usize_list("dims")?;
+            let ranks = a.usize_list("true-ranks")?;
+            if ranks.len() + 1 != dims.len() {
+                return Err("--true-ranks must have dims-1 entries".into());
+            }
+            InputSpec::Synthetic(SyntheticTt::new(dims, ranks, a.usize("seed")? as u64))
+        }
+        "faces" => InputSpec::Faces(FaceConfig::default()),
+        "video" => InputSpec::Video(dntt::data::VideoConfig::default()),
+        other => return Err(format!("unknown input '{other}'")),
+    };
+    let d = input.dims().len();
+    let grid = parse_grid(a.get("grid"), d)?;
+    let algo: NmfAlgo = a.get("algo").parse()?;
+    let fixed_ranks =
+        if a.get("ranks").is_empty() { None } else { Some(a.usize_list("ranks")?) };
+    let job = JobConfig {
+        tt: TtConfig {
+            eps: a.f64("eps")?,
+            fixed_ranks,
+            nmf: NmfConfig {
+                max_iters: a.usize("iters")?,
+                algo,
+                seed: a.usize("seed")? as u64,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        backend: match a.get("backend") {
+            "native" => BackendChoice::Native,
+            "pjrt" => BackendChoice::Pjrt(PathBuf::from(a.get("artifacts"))),
+            other => return Err(format!("unknown backend '{other}'")),
+        },
+        spill: if a.get("spill").is_empty() {
+            SpillMode::Memory
+        } else {
+            SpillMode::Disk(PathBuf::from(a.get("spill")))
+        },
+        check_error: !a.flag("no-check"),
+        ..JobConfig::new(input, grid)
+    };
+    let rep = run_job(&job).map_err(|e| e.to_string())?;
+    if a.flag("json") {
+        println!("{}", rep.to_json().to_pretty());
+    } else {
+        println!("{}", rep.summary());
+    }
+    let mut tt = rep.output.tt.clone();
+    if !a.get("round").is_empty() {
+        let eps: f64 = a.f64("round")?;
+        tt = dntt::ttrain::tt_round(&tt, eps).map_err(|e| e.to_string())?;
+        println!(
+            "rounded to eps {eps}: ranks {:?}, compression {:.4}x (cores now signed)",
+            tt.ranks(),
+            tt.compression_ratio()
+        );
+    }
+    if !a.get("save-tt").is_empty() {
+        let path = std::path::PathBuf::from(a.get("save-tt"));
+        dntt::tensor::io::save_tt(&tt, &path).map_err(|e| e.to_string())?;
+        println!("saved TT to {path:?} ({} params)", tt.num_params());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dntt inspect", "inspect a saved .dntt tensor train")
+        .pos("file", "path to a .dntt tensor-train file")
+        .opt("at", "", "evaluate one element, e.g. --at 3,1,4,1")
+        .opt("round", "", "TT-round to this tolerance and report new ranks");
+    let a = spec.parse(argv)?;
+    let path = a
+        .positionals()
+        .first()
+        .ok_or_else(|| format!("missing <file>\n\n{}", spec.usage()))?;
+    let tt = dntt::tensor::io::load_tt(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+    println!("file          : {path}");
+    println!("dims          : {:?}", tt.dims());
+    println!("TT ranks      : {:?}", tt.ranks());
+    println!("parameters    : {}", tt.num_params());
+    println!("compression   : {:.4}x", tt.compression_ratio());
+    println!("non-negative  : {}", tt.is_nonneg());
+    if !a.get("at").is_empty() {
+        let idx = a.usize_list("at")?;
+        if idx.len() != tt.dims().len() {
+            return Err(format!("--at needs {} indices", tt.dims().len()));
+        }
+        println!("A{idx:?}       = {}", tt.element(&idx));
+    }
+    if !a.get("round").is_empty() {
+        let eps = a.f64("round")?;
+        let r = dntt::ttrain::tt_round(&tt, eps).map_err(|e| e.to_string())?;
+        println!(
+            "rounded(ε={eps}) : ranks {:?}, compression {:.4}x",
+            r.ranks(),
+            r.compression_ratio()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_scaling(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dntt scaling", "scaling series (Figs 5-7)")
+        .opt("mode", "strong", "strong|weak|ranks")
+        .opt("shrink", "4", "divide the paper's 256 mode size by this")
+        .opt("ks", "1,2,3,4,5", "grid exponents k (grid 2^k x2x2x2)")
+        .opt("iters", "10", "NMF iterations (paper: 100)")
+        .opt("algos", "bcd,mu", "update rules to run")
+        .opt("ranks", "10,10,10", "fixed TT ranks (Figs 5-6)")
+        .opt("rank-sweep", "2,4,8,16", "rank values (Fig 7)")
+        .opt("rank-p-exp", "5", "grid exponent for Fig 7 (5 = 256 ranks)")
+        .flag("json", "emit the series as JSON")
+        .opt("save", "", "save series under bench_results/<label>.json");
+    let a = spec.parse(argv)?;
+    let mode = match a.get("mode") {
+        "strong" => ScalingMode::Strong,
+        "weak" => ScalingMode::Weak,
+        "ranks" => ScalingMode::Ranks,
+        other => return Err(format!("unknown mode '{other}'")),
+    };
+    let algos: Vec<NmfAlgo> =
+        a.get("algos").split(',').map(|s| s.trim().parse()).collect::<Result<_, _>>()?;
+    let params = ScalingParams {
+        shrink: a.usize("shrink")?,
+        ks: a.usize_list("ks")?,
+        iters: a.usize("iters")?,
+        algos,
+        ranks: a.usize_list("ranks")?,
+        ranks_p_exp: a.usize("rank-p-exp")?,
+        rank_sweep: a.usize_list("rank-sweep")?,
+        ..Default::default()
+    };
+    let points = workloads::scaling_run(mode, &params).map_err(|e| e.to_string())?;
+    if a.flag("json") {
+        let rows: Vec<_> = points.iter().map(|p| p.to_json()).collect();
+        println!("{}", dntt::util::json::Json::Arr(rows).to_pretty());
+    } else {
+        workloads::print_scaling(&points);
+    }
+    if !a.get("save").is_empty() {
+        workloads::save_rows(a.get("save"), points.iter().map(|p| p.to_json()).collect())
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dntt sweep", "compression-vs-error curves (Figs 2, 8a-c)")
+        .opt("figure", "2", "which figure: 2|8a|8b|8c")
+        .opt("size", "16", "mode size for Fig 2 (paper: 32)")
+        .opt("scale", "4", "shrink factor for Fig 8 datasets")
+        .opt("iters", "100", "NMF iterations")
+        .opt("eps", "", "comma-separated eps list (default: paper schedule)")
+        .flag("json", "emit rows as JSON")
+        .opt("save", "", "save series under bench_results/<label>.json");
+    let a = spec.parse(argv)?;
+    let eps: Vec<f64> =
+        if a.get("eps").is_empty() { PAPER_EPS.to_vec() } else { a.f64_list("eps")? };
+    let iters = a.usize("iters")?;
+    let rows = match a.get("figure") {
+        "2" => workloads::fig2_sweep(a.usize("size")?, &eps, iters),
+        "8a" => workloads::fig8_sweep(Fig8Data::Faces, &eps, iters, a.usize("scale")?),
+        "8b" => workloads::fig8_sweep(Fig8Data::Video, &eps, iters, a.usize("scale")?),
+        "8c" => workloads::fig8_sweep(Fig8Data::LargeSynthetic, &eps, iters, a.usize("scale")?),
+        other => return Err(format!("unknown figure '{other}'")),
+    }
+    .map_err(|e| e.to_string())?;
+    if a.flag("json") {
+        let out: Vec<_> = rows.iter().map(|r| r.to_json()).collect();
+        println!("{}", dntt::util::json::Json::Arr(out).to_pretty());
+    } else {
+        workloads::print_sweep(&rows);
+    }
+    if !a.get("save").is_empty() {
+        workloads::save_rows(a.get("save"), rows.iter().map(|r| r.to_json()).collect())
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_denoise(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dntt denoise", "denoising SSIM comparison (Fig 9)")
+        .opt("scale", "2", "shrink factor for the face dataset")
+        .opt("sigma", "0.12", "noise std as a fraction of the data peak")
+        .opt("ranks", "16,12,8,6,4,2", "TT ranks to sweep (uniform)")
+        .opt("iters", "150", "NMF iterations")
+        .flag("json", "emit rows as JSON")
+        .opt("save", "", "save series under bench_results/<label>.json");
+    let a = spec.parse(argv)?;
+    let s = a.usize("scale")?.max(1);
+    let faces = FaceConfig {
+        height: 48 / s.min(4),
+        width: 42 / s.min(3),
+        illuminations: (64 / s).max(4),
+        subjects: (38 / s).max(2),
+        ..Default::default()
+    };
+    let rows = workloads::denoise_run(
+        &faces,
+        a.f64("sigma")?,
+        &a.usize_list("ranks")?,
+        a.usize("iters")?,
+    )
+    .map_err(|e| e.to_string())?;
+    if a.flag("json") {
+        let out: Vec<_> = rows.iter().map(|r| r.to_json()).collect();
+        println!("{}", dntt::util::json::Json::Arr(out).to_pretty());
+    } else {
+        workloads::print_denoise(&rows);
+    }
+    if !a.get("save").is_empty() {
+        workloads::save_rows(a.get("save"), rows.iter().map(|r| r.to_json()).collect())
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dntt info", "platform + artifact info")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let a = spec.parse(argv)?;
+    println!("dntt {}", env!("CARGO_PKG_VERSION"));
+    let dir = PathBuf::from(a.get("artifacts"));
+    match dntt::runtime::Manifest::load(&dir) {
+        Ok(m) if !m.is_empty() => {
+            println!("artifacts     : {} ops in {:?}", m.len(), dir);
+        }
+        _ => println!("artifacts     : none (run `make artifacts`)"),
+    }
+    match dntt::runtime::PjrtEngine::start(&dir) {
+        Ok(_) => println!("pjrt client   : ok (cpu)"),
+        Err(e) => println!("pjrt client   : unavailable ({e})"),
+    }
+    println!("logical ranks : thread-based (see DESIGN.md §Substitutions)");
+    Ok(())
+}

@@ -1,0 +1,628 @@
+//! The SPMD distributed-NMF engine (Algs 3–6).
+//!
+//! Every rank `(i,j)` of the `p_r × p_c` grid holds:
+//! * `X^(i,j)` — its block of `X` (`m_i × n_j`, uneven blocks allowed);
+//! * `(Wⁱ)ʲ`  — rows `j`-th sub-block of `W^(i)` (`mw × r`);
+//! * `(Hʲ)ⁱᵀ` — the transposed `i`-th sub-block of `H^(j)` (`nh × r`).
+//!
+//! The three global products (Algs 4–6) map to:
+//! * Gram:  local `FᵀF` + world all_reduce                       (GR + AR)
+//! * X·Hᵀ:  col-comm all_gather(Ht) → local GEMM → row-comm
+//!          reduce_scatter                                       (AG+MM+RSC)
+//! * Wᵀ·X:  row-comm all_gather(W)  → local GEMM → col-comm
+//!          reduce_scatter                                       (AG+MM+RSC)
+//!
+//! Factor initialization is a pure function of `(seed, global row, column)`
+//! so any grid shape produces the *same global factors* — this is what lets
+//! tests assert that `p = 1` and `p = 4` runs converge identically.
+
+use crate::dist::{BlockDim, Comm, Grid2d};
+use crate::error::{DnttError, Result};
+use crate::linalg::Mat;
+use crate::nmf::{NmfAlgo, NmfConfig, NmfStats};
+use crate::runtime::backend::ComputeBackend;
+use crate::util::timer::Cat;
+
+/// Result of a distributed NMF on one rank.
+pub struct NmfOutput {
+    /// This rank's rows of `W` (`mw × r`).
+    pub w: Mat<f64>,
+    /// This rank's transposed columns of `H` (`nh × r`).
+    pub ht: Mat<f64>,
+    /// Global row range of `w` within `W` and column range of `ht` within `H`.
+    pub w_rows: (usize, usize),
+    pub h_cols: (usize, usize),
+    pub stats: NmfStats,
+}
+
+/// Deterministic U(0,1) init value for factor entry `(global_row, col)` —
+/// identical across any processor grid.
+#[inline]
+fn init_value(seed: u64, tag: u64, grow: usize, col: usize) -> f64 {
+    let mut z = seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z ^= (grow as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= (col as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+    // SplitMix64 finalizer.
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut x = z;
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+fn init_factor(seed: u64, tag: u64, gstart: usize, rows: usize, r: usize) -> Mat<f64> {
+    Mat::from_fn(rows, r, |i, c| init_value(seed, tag, gstart + i, c))
+}
+
+/// SPMD context: local block + comms + index arithmetic.
+struct Ctx<'a> {
+    x: &'a Mat<f64>,
+    backend: &'a dyn ComputeBackend,
+    world: &'a mut Comm,
+    row: &'a mut Comm,
+    col: &'a mut Comm,
+    r: usize,
+    /// W sub-block sizes across my row comm (per j), in elements of rows.
+    w_counts: Vec<usize>,
+    /// H sub-block sizes across my col comm (per i).
+    h_counts: Vec<usize>,
+}
+
+impl<'a> Ctx<'a> {
+    /// Global Gram `FᵀF` of a factor distributed by rows over the world.
+    fn gram_global(&mut self, f: &Mat<f64>) -> Mat<f64> {
+        let t0 = std::time::Instant::now();
+        let mut g = self.backend.gram(f);
+        self.world.breakdown.add_secs(Cat::Gram, t0.elapsed().as_secs_f64());
+        self.world.all_reduce_sum(g.as_mut_slice());
+        g
+    }
+
+    /// Distributed `X·Hᵀ` (Alg 5): returns this rank's `mw × r` block.
+    fn dist_xht(&mut self, ht: &Mat<f64>) -> Result<Mat<f64>> {
+        // Gather H^(j) across the column communicator.
+        let parts = self.col.all_gather_varied(ht.as_slice());
+        let nj: usize = parts.iter().map(|p| p.len()).sum::<usize>() / self.r;
+        let mut htj = Vec::with_capacity(nj * self.r);
+        for p in &parts {
+            htj.extend_from_slice(p);
+        }
+        let htj = Mat::from_vec(nj, self.r, htj);
+        // Local V = X^(i,j) · Ht^(j).
+        let t0 = std::time::Instant::now();
+        let v = self.backend.xht(self.x, &htj);
+        self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
+        // Reduce-scatter across the row communicator into W's distribution.
+        let counts: Vec<usize> = self.w_counts.iter().map(|&c| c * self.r).collect();
+        let mine = self.row.reduce_scatter_uneven(v.as_slice(), &counts)?;
+        Ok(Mat::from_vec(mine.len() / self.r, self.r, mine))
+    }
+
+    /// Distributed `Wᵀ·X` (Alg 6): returns this rank's transposed `nh × r` block.
+    fn dist_wtx(&mut self, w: &Mat<f64>) -> Result<Mat<f64>> {
+        // Gather W^(i) across the row communicator.
+        let parts = self.row.all_gather_varied(w.as_slice());
+        let mi: usize = parts.iter().map(|p| p.len()).sum::<usize>() / self.r;
+        let mut wi = Vec::with_capacity(mi * self.r);
+        for p in &parts {
+            wi.extend_from_slice(p);
+        }
+        let wi = Mat::from_vec(mi, self.r, wi);
+        // Local Y = X^(i,j)ᵀ · W^(i)  (the transposed (WᵀX) block).
+        let t0 = std::time::Instant::now();
+        let y = self.backend.wtx(self.x, &wi);
+        self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
+        // Reduce-scatter across the column communicator into H's distribution.
+        let counts: Vec<usize> = self.h_counts.iter().map(|&c| c * self.r).collect();
+        let mine = self.col.reduce_scatter_uneven(y.as_slice(), &counts)?;
+        Ok(Mat::from_vec(mine.len() / self.r, self.r, mine))
+    }
+
+    /// Global squared Frobenius norm of a row-distributed factor.
+    fn global_fro_sq(&mut self, f: &Mat<f64>) -> f64 {
+        let t0 = std::time::Instant::now();
+        let local = f.fro_norm_sq();
+        self.world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
+        self.world.all_reduce_scalar(local)
+    }
+
+    /// Objective `½‖X − WH‖²` from cached pieces:
+    /// `½(‖X‖² − 2·Σ_b ⟨(XᵀW)_b, Ht_b⟩ + ⟨WᵀW, HHᵀ⟩)`.
+    fn objective(&mut self, xtw: &Mat<f64>, ht: &Mat<f64>, wtw: &Mat<f64>, hht: &Mat<f64>, xsq: f64) -> f64 {
+        let t0 = std::time::Instant::now();
+        let mut cross = 0.0;
+        for (a, b) in xtw.as_slice().iter().zip(ht.as_slice()) {
+            cross += a * b;
+        }
+        self.world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
+        let cross = self.world.all_reduce_scalar(cross);
+        let mut quad = 0.0;
+        for (a, b) in wtw.as_slice().iter().zip(hht.as_slice()) {
+            quad += a * b;
+        }
+        0.5 * (xsq - 2.0 * cross + quad).max(0.0)
+    }
+
+    /// Per-column global L1 norms of a row-distributed factor.
+    fn col_l1(&mut self, f: &Mat<f64>) -> Vec<f64> {
+        let t0 = std::time::Instant::now();
+        let mut sums = vec![0.0; self.r];
+        for i in 0..f.rows() {
+            for (c, s) in sums.iter_mut().enumerate() {
+                *s += f.row(i)[c].abs();
+            }
+        }
+        self.world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
+        self.world.all_reduce_sum(&mut sums);
+        sums
+    }
+}
+
+fn scale_cols(f: &mut Mat<f64>, scale: &[f64]) {
+    for i in 0..f.rows() {
+        for (c, &s) in scale.iter().enumerate() {
+            f.row_mut(i)[c] *= s;
+        }
+    }
+}
+
+/// Run the distributed NMF on this rank. Collective over `world`
+/// (`row`/`col` must be the grid sub-communicators of `world`).
+///
+/// `x` is this rank's `m_i × n_j` block of the `m×n` matrix.
+pub fn dist_nmf(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+) -> Result<NmfOutput> {
+    if cfg.rank == 0 {
+        return Err(DnttError::config("NMF rank must be ≥ 1"));
+    }
+    let r = cfg.rank;
+    let (i, j) = grid.coords(world.rank());
+    let rows = BlockDim::new(m, grid.pr);
+    let cols = BlockDim::new(n, grid.pc);
+    let (mi, nj) = (rows.size_of(i), cols.size_of(j));
+    if (x.rows(), x.cols()) != (mi, nj) {
+        return Err(DnttError::shape(format!(
+            "rank {}: X block is {}x{}, expected {}x{}",
+            world.rank(),
+            x.rows(),
+            x.cols(),
+            mi,
+            nj
+        )));
+    }
+    // W rows: sub-split of my block-row's rows across the row comm.
+    let wsub = BlockDim::new(mi, grid.pc);
+    let w_g0 = rows.start_of(i) + wsub.start_of(j);
+    let mw = wsub.size_of(j);
+    // H cols: sub-split of my block-col's cols across the col comm.
+    let hsub = BlockDim::new(nj, grid.pr);
+    let h_g0 = cols.start_of(j) + hsub.start_of(i);
+    let nh = hsub.size_of(i);
+
+    let mut ctx = Ctx {
+        x,
+        backend,
+        world,
+        row,
+        col,
+        r,
+        w_counts: (0..grid.pc).map(|jj| wsub.size_of(jj)).collect(),
+        h_counts: (0..grid.pr).map(|ii| hsub.size_of(ii)).collect(),
+    };
+
+    // --- Initialization (Alg 3 lines 1–4) ------------------------------
+    let t0 = std::time::Instant::now();
+    let mut w = init_factor(cfg.seed, 1, w_g0, mw, r);
+    let mut ht = init_factor(cfg.seed, 2, h_g0, nh, r);
+    ctx.world.breakdown.add_secs(Cat::Init, t0.elapsed().as_secs_f64());
+
+    let t = std::time::Instant::now();
+    let local_xsq = x.fro_norm_sq();
+    ctx.world.breakdown.add_secs(Cat::Norm, t.elapsed().as_secs_f64());
+    let xsq = ctx.world.all_reduce_scalar(local_xsq);
+    let xnorm = xsq.sqrt();
+    // Normalize: ‖W‖ = ‖H‖ = sqrt(‖X‖).
+    let wn = ctx.global_fro_sq(&w).sqrt();
+    let hn = ctx.global_fro_sq(&ht).sqrt();
+    if wn > 0.0 {
+        w.scale(xnorm.sqrt() / wn);
+    }
+    if hn > 0.0 {
+        ht.scale(xnorm.sqrt() / hn);
+    }
+
+    let mut stats = NmfStats {
+        iters: 0,
+        objective: 0.5 * xsq,
+        rel_err: 1.0,
+        restarts: 0,
+        history: Vec::with_capacity(cfg.max_iters),
+    };
+
+    match cfg.algo {
+        NmfAlgo::Bcd => bcd_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats)?,
+        NmfAlgo::Mu => mu_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats)?,
+        NmfAlgo::Hals => hals_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats)?,
+    }
+
+    stats.rel_err = (2.0 * stats.objective).max(0.0).sqrt() / xnorm.max(1e-300);
+    Ok(NmfOutput {
+        w,
+        ht,
+        w_rows: (w_g0, w_g0 + mw),
+        h_cols: (h_g0, h_g0 + nh),
+        stats,
+    })
+}
+
+/// Alg 3: BCD with extrapolation and correction.
+fn bcd_loop(
+    ctx: &mut Ctx<'_>,
+    w: &mut Mat<f64>,
+    ht: &mut Mat<f64>,
+    xsq: f64,
+    cfg: &NmfConfig,
+    stats: &mut NmfStats,
+) -> Result<()> {
+    let delta = cfg.delta;
+    // Momentum state.
+    let mut wm = w.clone();
+    let mut htm = ht.clone();
+    let mut w_prev = w.clone();
+    let mut ht_prev = ht.clone();
+
+    // Line 3: HHᵀ and XHᵀ for the first W update.
+    let mut hht = ctx.gram_global(&htm);
+    let mut xht = ctx.dist_xht(&htm)?;
+
+    let mut t = 1.0f64;
+    let mut obj = 0.5 * xsq; // line 4
+    let mut prev_lip_w = hht.fro_norm().max(1e-300);
+    let mut prev_lip_h = 1.0f64;
+
+    for _l in 0..cfg.max_iters {
+        // --- W given H (lines 6–10) --------------------------------
+        let lip_w = hht.fro_norm().max(1e-300);
+        let tu = std::time::Instant::now();
+        let w_new = ctx.backend.bcd_update(&wm, &hht, &xht, lip_w);
+        ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+        *w = w_new;
+        if cfg.normalize {
+            // Line 9, norm-preserving form: W columns to unit L1, fold the
+            // scale into the momentum/previous state so the next H-update
+            // (which re-fits H against the normalized W) stays consistent.
+            let l1 = ctx.col_l1(w);
+            let scale: Vec<f64> = l1.iter().map(|&s| if s > 1e-300 { 1.0 / s } else { 1.0 }).collect();
+            scale_cols(w, &scale);
+            scale_cols(&mut w_prev, &scale);
+        }
+        let wtw = ctx.gram_global(w); // line 10
+        let xtw = ctx.dist_wtx(w)?; // line 12
+
+        // --- H given W (lines 11–14) --------------------------------
+        let lip_h = wtw.fro_norm().max(1e-300);
+        let tu = std::time::Instant::now();
+        let ht_new = ctx.backend.bcd_update(&htm, &wtw, &xtw, lip_h);
+        ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+        *ht = ht_new;
+
+        // Lines 15–16: refresh HHᵀ, XHᵀ with the new H.
+        hht = ctx.gram_global(ht);
+        xht = ctx.dist_xht(ht)?;
+
+        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht, xsq);
+
+        if obj_new >= obj {
+            // --- Correction (lines 17–20): revert to the last accepted
+            // iterate and restart the momentum sequence.
+            *w = w_prev.clone();
+            *ht = ht_prev.clone();
+            wm = w.clone();
+            htm = ht.clone();
+            hht = ctx.gram_global(ht);
+            xht = ctx.dist_xht(ht)?;
+            t = 1.0;
+            stats.restarts += 1;
+        } else {
+            // --- Extrapolation (lines 21–27).
+            let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+            let wgt = (t - 1.0) / t_new;
+            let w_w = wgt.min(delta * (prev_lip_w / lip_w).sqrt());
+            let w_h = wgt.min(delta * (prev_lip_h / lip_h).sqrt());
+            let tu = std::time::Instant::now();
+            wm = w.clone();
+            for (m_, (cur, prev)) in
+                wm.as_mut_slice().iter_mut().zip(w.as_slice().iter().zip(w_prev.as_slice()))
+            {
+                *m_ = cur + w_w * (cur - prev);
+            }
+            htm = ht.clone();
+            for (m_, (cur, prev)) in
+                htm.as_mut_slice().iter_mut().zip(ht.as_slice().iter().zip(ht_prev.as_slice()))
+            {
+                *m_ = cur + w_h * (cur - prev);
+            }
+            ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+            w_prev = w.clone();
+            ht_prev = ht.clone();
+            t = t_new;
+            let rel_change = (obj - obj_new).abs() / (0.5 * xsq).max(1e-300);
+            obj = obj_new;
+            prev_lip_w = lip_w;
+            prev_lip_h = lip_h;
+            if cfg.tol > 0.0 && rel_change < cfg.tol {
+                stats.iters += 1;
+                stats.history.push(obj);
+                break;
+            }
+        }
+        stats.iters += 1;
+        stats.history.push(obj);
+    }
+    // Return the last *accepted* iterate.
+    *w = w_prev;
+    *ht = ht_prev;
+    stats.objective = obj;
+    Ok(())
+}
+
+/// Multiplicative updates (the paper's MU comparison).
+fn mu_loop(
+    ctx: &mut Ctx<'_>,
+    w: &mut Mat<f64>,
+    ht: &mut Mat<f64>,
+    xsq: f64,
+    cfg: &NmfConfig,
+    stats: &mut NmfStats,
+) -> Result<()> {
+    let mut obj = 0.5 * xsq;
+    for _l in 0..cfg.max_iters {
+        let hht = ctx.gram_global(ht);
+        let xht = ctx.dist_xht(ht)?;
+        let tu = std::time::Instant::now();
+        *w = ctx.backend.mu_update(w, &hht, &xht);
+        ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+
+        let wtw = ctx.gram_global(w);
+        let xtw = ctx.dist_wtx(w)?;
+        let tu = std::time::Instant::now();
+        *ht = ctx.backend.mu_update(ht, &wtw, &xtw);
+        ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+
+        let hht2 = ctx.gram_global(ht);
+        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht2, xsq);
+        let rel = (obj - obj_new).abs() / (0.5 * xsq).max(1e-300);
+        obj = obj_new;
+        stats.iters += 1;
+        stats.history.push(obj);
+        if cfg.tol > 0.0 && rel < cfg.tol {
+            break;
+        }
+    }
+    stats.objective = obj;
+    Ok(())
+}
+
+/// HALS: per-column closed-form updates (local once the global Gram and
+/// product blocks are in place — no extra communication per column).
+fn hals_loop(
+    ctx: &mut Ctx<'_>,
+    w: &mut Mat<f64>,
+    ht: &mut Mat<f64>,
+    xsq: f64,
+    cfg: &NmfConfig,
+    stats: &mut NmfStats,
+) -> Result<()> {
+    let r = ctx.r;
+    let mut obj = 0.5 * xsq;
+    for _l in 0..cfg.max_iters {
+        let hht = ctx.gram_global(ht);
+        let xht = ctx.dist_xht(ht)?;
+        let tu = std::time::Instant::now();
+        hals_update(w, &hht, &xht, r);
+        ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+
+        let wtw = ctx.gram_global(w);
+        let xtw = ctx.dist_wtx(w)?;
+        let tu = std::time::Instant::now();
+        hals_update(ht, &wtw, &xtw, r);
+        ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
+
+        let hht2 = ctx.gram_global(ht);
+        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht2, xsq);
+        let rel = (obj - obj_new).abs() / (0.5 * xsq).max(1e-300);
+        obj = obj_new;
+        stats.iters += 1;
+        stats.history.push(obj);
+        if cfg.tol > 0.0 && rel < cfg.tol {
+            break;
+        }
+    }
+    stats.objective = obj;
+    Ok(())
+}
+
+/// One HALS sweep over columns: `f_c ← max(0, f_c + (p_c − F·g_c)/g_cc)`.
+fn hals_update(f: &mut Mat<f64>, g: &Mat<f64>, p: &Mat<f64>, r: usize) {
+    for c in 0..r {
+        let gcc = g[(c, c)].max(1e-300);
+        for i in 0..f.rows() {
+            let frow = f.row(i);
+            let mut fg = 0.0;
+            for k in 0..r {
+                fg += frow[k] * g[(k, c)];
+            }
+            let v = frow[c] + (p[(i, c)] - fg) / gcc;
+            f.row_mut(i)[c] = if v > 0.0 { v } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::BlockDim;
+    use crate::linalg::gemm::matmul;
+    use crate::runtime::native::NativeBackend;
+
+    /// Run dist_nmf over `grid` on a full matrix; returns (W, H, stats)
+    /// reassembled globally.
+    fn run_dist(
+        x: &Mat<f64>,
+        grid: Grid2d,
+        cfg: &NmfConfig,
+    ) -> (Mat<f64>, Mat<f64>, NmfStats) {
+        let (m, n) = x.shape();
+        let x = x.clone();
+        let r = cfg.rank;
+        let cfg = cfg.clone();
+        let outs = Comm::run(grid.size(), move |mut world| {
+            let (i, j) = grid.coords(world.rank());
+            let rows = BlockDim::new(m, grid.pr);
+            let cols = BlockDim::new(n, grid.pc);
+            let xb = Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
+                x[(rows.start_of(i) + a, cols.start_of(j) + b)]
+            });
+            let (mut row, mut col) = grid.make_subcomms(&mut world);
+            dist_nmf(&xb, m, n, grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg)
+                .unwrap()
+        });
+        let mut wfull = Mat::zeros(m, r);
+        let mut hfull = Mat::zeros(r, n);
+        for o in &outs {
+            for (li, gi) in (o.w_rows.0..o.w_rows.1).enumerate() {
+                wfull.row_mut(gi).copy_from_slice(o.w.row(li));
+            }
+            for (lb, gb) in (o.h_cols.0..o.h_cols.1).enumerate() {
+                for c in 0..r {
+                    hfull[(c, gb)] = o.ht[(lb, c)];
+                }
+            }
+        }
+        (wfull, hfull, outs[0].stats.clone())
+    }
+
+    fn low_rank_x(m: usize, n: usize, r: usize, seed: u64) -> Mat<f64> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let a = Mat::<f64>::rand_uniform(m, r, &mut rng);
+        let b = Mat::<f64>::rand_uniform(r, n, &mut rng);
+        matmul(&a, &b)
+    }
+
+    fn fit_err(x: &Mat<f64>, w: &Mat<f64>, h: &Mat<f64>) -> f64 {
+        let mut d = matmul(w, h);
+        d.sub_assign(x);
+        d.fro_norm() / x.fro_norm()
+    }
+
+    #[test]
+    fn bcd_converges_on_low_rank_serial() {
+        let x = low_rank_x(24, 30, 3, 1);
+        let cfg = NmfConfig { rank: 3, max_iters: 300, ..Default::default() };
+        let (w, h, stats) = run_dist(&x, Grid2d::new(1, 1), &cfg);
+        assert!(w.is_nonneg() && h.is_nonneg());
+        let err = fit_err(&x, &w, &h);
+        assert!(err < 1e-3, "err={err}, stats={stats:?}");
+        assert!((stats.rel_err - err).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bcd_objective_monotone_over_accepted() {
+        let x = low_rank_x(20, 25, 4, 2);
+        let cfg = NmfConfig { rank: 4, max_iters: 120, ..Default::default() };
+        let (_, _, stats) = run_dist(&x, Grid2d::new(1, 1), &cfg);
+        // The history records the running best (correction reverts), so it
+        // must be non-increasing.
+        for w in stats.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-12), "objective increased: {} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn dist_matches_serial_bcd() {
+        let x = low_rank_x(12, 18, 2, 3);
+        let cfg = NmfConfig { rank: 2, max_iters: 40, ..Default::default() };
+        let (w1, h1, s1) = run_dist(&x, Grid2d::new(1, 1), &cfg);
+        let (w2, h2, s2) = run_dist(&x, Grid2d::new(2, 3), &cfg);
+        // Same deterministic init → same trajectory up to reduction order.
+        assert!((s1.objective - s2.objective).abs() <= 1e-6 * (1.0 + s1.objective));
+        for (a, b) in w1.as_slice().iter().zip(w2.as_slice()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        for (a, b) in h1.as_slice().iter().zip(h2.as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mu_converges_and_matches_across_grids() {
+        let x = low_rank_x(16, 14, 3, 4);
+        let cfg =
+            NmfConfig { rank: 3, max_iters: 200, algo: NmfAlgo::Mu, ..Default::default() };
+        let (w1, h1, s1) = run_dist(&x, Grid2d::new(1, 1), &cfg);
+        let (_, _, s2) = run_dist(&x, Grid2d::new(2, 2), &cfg);
+        assert!(s1.rel_err < 0.05, "mu rel_err={}", s1.rel_err);
+        assert!((s1.objective - s2.objective).abs() <= 1e-6 * (1.0 + s1.objective));
+        assert!(w1.is_nonneg() && h1.is_nonneg());
+    }
+
+    #[test]
+    fn hals_converges() {
+        let x = low_rank_x(16, 14, 3, 5);
+        let cfg =
+            NmfConfig { rank: 3, max_iters: 150, algo: NmfAlgo::Hals, ..Default::default() };
+        let (w, h, s) = run_dist(&x, Grid2d::new(1, 1), &cfg);
+        assert!(s.rel_err < 1e-2, "hals rel_err={}", s.rel_err);
+        assert!(w.is_nonneg() && h.is_nonneg());
+    }
+
+    #[test]
+    fn uneven_blocks_work() {
+        // 13 x 17 over a 2x3 grid: every block dimension is uneven.
+        let x = low_rank_x(13, 17, 2, 6);
+        let cfg = NmfConfig { rank: 2, max_iters: 60, ..Default::default() };
+        let (w, h, s) = run_dist(&x, Grid2d::new(2, 3), &cfg);
+        assert_eq!(w.shape(), (13, 2));
+        assert_eq!(h.shape(), (2, 17));
+        assert!(s.rel_err < 0.05, "rel_err={}", s.rel_err);
+    }
+
+    #[test]
+    fn early_stop_with_tol() {
+        let x = low_rank_x(20, 20, 2, 7);
+        let cfg = NmfConfig { rank: 2, max_iters: 500, tol: 1e-8, ..Default::default() };
+        let (_, _, s) = run_dist(&x, Grid2d::new(1, 1), &cfg);
+        assert!(s.iters < 500, "should early-stop, ran {}", s.iters);
+    }
+
+    #[test]
+    fn rank_one_factorization() {
+        // Rank-1 outer product is recovered by rank-1 NMF.
+        let x = low_rank_x(10, 12, 1, 8);
+        let cfg = NmfConfig { rank: 1, max_iters: 100, ..Default::default() };
+        let (_, _, s) = run_dist(&x, Grid2d::new(2, 2), &cfg);
+        assert!(s.rel_err < 1e-4, "rel_err={}", s.rel_err);
+    }
+
+    #[test]
+    fn init_is_grid_invariant() {
+        let a = init_factor(9, 1, 5, 4, 3);
+        let b = init_factor(9, 1, 7, 2, 3);
+        // rows 7,8 of the global factor must agree.
+        assert_eq!(a.row(2), b.row(0));
+        assert_eq!(a.row(3), b.row(1));
+        for &v in a.as_slice() {
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Local compute backend abstraction.
+//!
+//! Every *local* (per-rank) kernel of the distributed NMF goes through this
+//! trait so the same SPMD code can run on:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure-Rust linalg, any shape;
+//! * [`crate::runtime::pjrt::PjrtBackend`] — AOT-compiled JAX/Pallas
+//!   artifacts executed through the XLA PJRT CPU client (Python never runs
+//!   at execution time), falling back to native for shapes missing from the
+//!   artifact manifest.
+//!
+//! Backends must agree numerically (asserted in `tests/integration_runtime`).
+//!
+//! Shape conventions (the `Ht` convention — H is stored transposed so all
+//! kernels see contiguous rows):
+//! * factor blocks are `rows × r` (`W` block or `Hᵀ` block);
+//! * `gram(F) = Fᵀ·F` is `r × r`;
+//! * `xht(X, Ht) = X·H̃` is `m_i × r` for `X: m_i × n_j`, `Ht: n_j × r`;
+//! * `wtx(X, W) = Xᵀ·W` is `n_j × r`.
+
+use crate::linalg::Mat;
+
+/// Per-rank dense kernels used by the NMF inner loop.
+pub trait ComputeBackend: Send + Sync {
+    /// `Fᵀ·F` for a `rows × r` factor block → `r × r` partial Gram.
+    fn gram(&self, f: &Mat<f64>) -> Mat<f64>;
+
+    /// `X · Ht` (`m_i × n_j` times `n_j × r`) → `m_i × r` (local X·Hᵀ).
+    fn xht(&self, x: &Mat<f64>, ht: &Mat<f64>) -> Mat<f64>;
+
+    /// `Xᵀ · W` (`m_i × n_j`ᵀ times `m_i × r`) → `n_j × r` (local (WᵀX)ᵀ).
+    fn wtx(&self, x: &Mat<f64>, w: &Mat<f64>) -> Mat<f64>;
+
+    /// BCD projected-gradient step (Alg 3 lines 6–8 / 11–14):
+    /// `max(0, Fm − (Fm·G − P) / lip)` where `G` is the `r×r` Gram of the
+    /// other factor, `P` the `rows × r` product block and `lip` the
+    /// Lipschitz step (‖G‖).
+    fn bcd_update(&self, fm: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>, lip: f64) -> Mat<f64>;
+
+    /// Multiplicative (Lee–Seung) step: `F ⊙ P ⊘ (F·G + ε)`.
+    fn mu_update(&self, f: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>) -> Mat<f64>;
+
+    /// Backend label for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Small epsilon guarding MU divisions (matches the JAX kernel).
+pub const MU_EPS: f64 = 1e-16;

@@ -1,0 +1,151 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use crate::error::{DnttError, Result};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled op instance.
+#[derive(Clone, Debug)]
+pub struct OpArtifact {
+    pub key: String,
+    pub op: String,
+    pub dims: Vec<usize>,
+    pub path: PathBuf,
+    pub outputs: usize,
+}
+
+/// Parsed manifest: op-key → artifact.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, OpArtifact>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`. Missing manifest is not an error —
+    /// it yields an empty manifest (pure native fallback).
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(Manifest::default());
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let json = Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for op in json.get("ops").as_arr().unwrap_or(&[]) {
+            let key = op
+                .get("key")
+                .as_str()
+                .ok_or_else(|| DnttError::Artifact("manifest op missing key".into()))?
+                .to_string();
+            let file = op
+                .get("file")
+                .as_str()
+                .ok_or_else(|| DnttError::Artifact(format!("op {key}: missing file")))?;
+            let dims = op
+                .get("dims")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_default();
+            let artifact = OpArtifact {
+                key: key.clone(),
+                op: op.get("op").as_str().unwrap_or("").to_string(),
+                dims,
+                path: dir.join(file),
+                outputs: op.get("outputs").as_usize().unwrap_or(1),
+            };
+            if !artifact.path.exists() {
+                return Err(DnttError::Artifact(format!(
+                    "manifest references missing file {:?}",
+                    artifact.path
+                )));
+            }
+            entries.insert(key, artifact);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&OpArtifact> {
+        self.entries.get(key)
+    }
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Conventional op keys.
+    pub fn key_gram(rows: usize, r: usize) -> String {
+        format!("gram_{rows}x{r}")
+    }
+    pub fn key_xht(mi: usize, nj: usize, r: usize) -> String {
+        format!("xht_{mi}x{nj}x{r}")
+    }
+    pub fn key_wtx(mi: usize, nj: usize, r: usize) -> String {
+        format!("wtx_{mi}x{nj}x{r}")
+    }
+    pub fn key_bcd(rows: usize, r: usize) -> String {
+        format!("bcd_{rows}x{r}")
+    }
+    pub fn key_mu(rows: usize, r: usize) -> String {
+        format!("mu_{rows}x{r}")
+    }
+    pub fn key_nmf_iter(m: usize, n: usize, r: usize) -> String {
+        format!("nmf_iter_bcd_{m}x{n}x{r}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_when_missing() {
+        let m = Manifest::load(Path::new("/nonexistent-dir")).unwrap();
+        assert!(m.is_empty());
+        assert!(!m.contains("gram_6x2"));
+    }
+
+    #[test]
+    fn key_formats() {
+        assert_eq!(Manifest::key_gram(6, 2), "gram_6x2");
+        assert_eq!(Manifest::key_xht(4, 6, 2), "xht_4x6x2");
+        assert_eq!(Manifest::key_nmf_iter(8, 12, 2), "nmf_iter_bcd_8x12x2");
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("dntt_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("gram_6x2.hlo.txt"), "fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dtype":"f32","ops":[{"key":"gram_6x2","op":"gram","dims":[6,2],"file":"gram_6x2.hlo.txt","outputs":1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("gram_6x2").unwrap();
+        assert_eq!(a.dims, vec![6, 2]);
+        assert_eq!(a.outputs, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join(format!("dntt_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"ops":[{"key":"a","file":"nope.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,13 @@
+//! Execution backends: the `ComputeBackend` trait, the pure-Rust native
+//! backend, the artifact manifest, and the PJRT backend that runs the
+//! AOT-compiled JAX/Pallas artifacts through the `xla` crate.
+
+pub mod backend;
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use backend::ComputeBackend;
+pub use manifest::Manifest;
+pub use native::NativeBackend;
+pub use pjrt::{PjrtBackend, PjrtEngine};

@@ -1,0 +1,104 @@
+//! Pure-Rust compute backend (reference implementation, any shape).
+
+use super::backend::{ComputeBackend, MU_EPS};
+use crate::linalg::gemm::{gram_mt_m, matmul, matmul_at_b, matmul_into};
+use crate::linalg::Mat;
+
+/// Native backend built on `crate::linalg`.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn gram(&self, f: &Mat<f64>) -> Mat<f64> {
+        gram_mt_m(f)
+    }
+
+    fn xht(&self, x: &Mat<f64>, ht: &Mat<f64>) -> Mat<f64> {
+        matmul(x, ht)
+    }
+
+    fn wtx(&self, x: &Mat<f64>, w: &Mat<f64>) -> Mat<f64> {
+        matmul_at_b(x, w)
+    }
+
+    fn bcd_update(&self, fm: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>, lip: f64) -> Mat<f64> {
+        debug_assert!(lip > 0.0);
+        let mut fg = Mat::zeros(fm.rows(), g.cols());
+        matmul_into(fm, g, &mut fg);
+        // max(0, fm - (fm·g - p)/lip), fused elementwise.
+        let inv = 1.0 / lip;
+        let mut out = fm.clone();
+        let (o, fgs, ps) = (out.as_mut_slice(), fg.as_slice(), p.as_slice());
+        for i in 0..o.len() {
+            let v = o[i] - (fgs[i] - ps[i]) * inv;
+            o[i] = if v > 0.0 { v } else { 0.0 };
+        }
+        out
+    }
+
+    fn mu_update(&self, f: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>) -> Mat<f64> {
+        let mut fg = Mat::zeros(f.rows(), g.cols());
+        matmul_into(f, g, &mut fg);
+        let mut out = f.clone();
+        let (o, fgs, ps) = (out.as_mut_slice(), fg.as_slice(), p.as_slice());
+        for i in 0..o.len() {
+            o[i] *= ps[i] / (fgs[i] + MU_EPS);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bcd_update_projects_nonneg() {
+        let mut rng = Rng::new(1);
+        let b = NativeBackend;
+        let fm = Mat::rand_uniform(6, 3, &mut rng);
+        let g = gram_mt_m(&Mat::<f64>::rand_uniform(10, 3, &mut rng));
+        let p = Mat::rand_uniform(6, 3, &mut rng);
+        let out = b.bcd_update(&fm, &g, &p, g.fro_norm());
+        assert!(out.is_nonneg());
+        assert_eq!(out.shape(), (6, 3));
+    }
+
+    #[test]
+    fn bcd_update_is_projected_gradient() {
+        // With lip = 1 and g = I: out = max(0, fm - fm + p) = max(0, p).
+        let fm = Mat::from_vec(1, 2, vec![3.0, 5.0]);
+        let g = Mat::eye(2);
+        let p = Mat::from_vec(1, 2, vec![-1.0, 2.0]);
+        let out = NativeBackend.bcd_update(&fm, &g, &p, 1.0);
+        assert_eq!(out.as_slice(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn mu_update_fixed_point_at_exact_factorization() {
+        // If F·G == P elementwise then F is (almost) unchanged.
+        let mut rng = Rng::new(2);
+        let f = Mat::<f64>::rand_uniform(5, 3, &mut rng);
+        let g = gram_mt_m(&Mat::<f64>::rand_uniform(7, 3, &mut rng));
+        let p = matmul(&f, &g);
+        let out = NativeBackend.mu_update(&f, &g, &p);
+        for (a, b) in out.as_slice().iter().zip(f.as_slice()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn mu_preserves_nonnegativity_and_zeros() {
+        let f = Mat::from_vec(1, 2, vec![0.0, 1.0]);
+        let g = Mat::eye(2);
+        let p = Mat::from_vec(1, 2, vec![5.0, 5.0]);
+        let out = NativeBackend.mu_update(&f, &g, &p);
+        assert_eq!(out.as_slice()[0], 0.0); // zeros stay zero under MU
+        assert!(out.as_slice()[1] > 0.0);
+    }
+}

@@ -1,0 +1,316 @@
+//! PJRT execution backend: runs the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The `xla` crate's PJRT handles are raw C++ pointers without `Send`
+//! impls, so a single **engine thread** owns the client and all compiled
+//! executables; rank threads submit `(op key, input buffers)` requests over
+//! a channel and block on the reply. On this single-core image the
+//! serialization costs nothing; on a real deployment there is one engine
+//! (= one PJRT device) per process, exactly like one GPU stream.
+//!
+//! Executables are compiled lazily from `artifacts/*.hlo.txt` on first use
+//! and cached for the life of the engine. Any op/shape not present in the
+//! manifest transparently falls back to the native Rust backend (and is
+//! counted in [`PjrtStats`], so tests can assert the hot path really ran
+//! on XLA).
+
+use super::backend::ComputeBackend;
+use super::manifest::Manifest;
+use super::native::NativeBackend;
+use crate::error::{DnttError, Result};
+use crate::linalg::Mat;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// One input tensor for an execution request.
+struct TensorArg {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+struct ExecRequest {
+    key: String,
+    args: Vec<TensorArg>,
+    /// Number of outputs expected (the lowered fns return tuples).
+    outputs: usize,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    Shutdown,
+}
+
+/// Hit/miss counters (miss = native fallback).
+#[derive(Default, Debug)]
+pub struct PjrtStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+/// Handle to the engine thread. Cheap to clone via `Arc`.
+pub struct PjrtEngine {
+    tx: Mutex<Sender<Msg>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    manifest: Manifest,
+    pub stats: PjrtStats,
+}
+
+impl PjrtEngine {
+    /// Start the engine for the artifact directory (conventionally
+    /// `artifacts/`). Fails fast if the PJRT client cannot initialize.
+    pub fn start(artifact_dir: &Path) -> Result<Arc<PjrtEngine>> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let (tx, rx) = channel::<Msg>();
+        let man = manifest.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(DnttError::Xla(e.to_string())));
+                        return;
+                    }
+                };
+                let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Exec(req) => {
+                            let result = serve(&client, &man, &mut cache, &req);
+                            let _ = req.reply.send(result);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| DnttError::Other(format!("spawn pjrt engine: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| DnttError::Xla("pjrt engine died during init".into()))??;
+        Ok(Arc::new(PjrtEngine {
+            tx: Mutex::new(tx),
+            join: Mutex::new(Some(join)),
+            manifest,
+            stats: PjrtStats::default(),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `key` with the given (data, dims) inputs.
+    fn exec(&self, key: &str, args: Vec<TensorArg>, outputs: usize) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Msg::Exec(ExecRequest { key: key.to_string(), args, outputs, reply }))
+                .map_err(|_| DnttError::Xla("pjrt engine gone".into()))?;
+        }
+        rx.recv().map_err(|_| DnttError::Xla("pjrt engine dropped request".into()))?
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Engine-thread service loop body: compile (cached) + execute.
+fn serve(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecRequest,
+) -> Result<Vec<Vec<f32>>> {
+    if !cache.contains_key(&req.key) {
+        let artifact = manifest
+            .get(&req.key)
+            .ok_or_else(|| DnttError::Artifact(format!("no artifact for {}", req.key)))?;
+        let proto = xla::HloModuleProto::from_text_file(&artifact.path)
+            .map_err(|e| DnttError::Xla(format!("{}: {e}", req.key)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| DnttError::Xla(format!("compile {}: {e}", req.key)))?;
+        cache.insert(req.key.clone(), exe);
+        log::debug!("pjrt: compiled {}", req.key);
+    }
+    let exe = cache.get(&req.key).unwrap();
+    let literals: Vec<xla::Literal> = req
+        .args
+        .iter()
+        .map(|a| {
+            xla::Literal::vec1(&a.data)
+                .reshape(&a.dims)
+                .map_err(|e| DnttError::Xla(format!("literal reshape: {e}")))
+        })
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| DnttError::Xla(format!("execute {}: {e}", req.key)))?;
+    let mut tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| DnttError::Xla(format!("fetch {}: {e}", req.key)))?;
+    // Lowered with return_tuple=True: decompose.
+    let elems = tuple
+        .decompose_tuple()
+        .map_err(|e| DnttError::Xla(format!("untuple {}: {e}", req.key)))?;
+    if elems.len() != req.outputs {
+        return Err(DnttError::Xla(format!(
+            "{}: expected {} outputs, got {}",
+            req.key,
+            req.outputs,
+            elems.len()
+        )));
+    }
+    elems
+        .into_iter()
+        .map(|l| l.to_vec::<f32>().map_err(|e| DnttError::Xla(e.to_string())))
+        .collect()
+}
+
+/// `ComputeBackend` running on the PJRT engine with native fallback.
+pub struct PjrtBackend {
+    engine: Arc<PjrtEngine>,
+    native: NativeBackend,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Arc<PjrtEngine>) -> Self {
+        PjrtBackend { engine, native: NativeBackend }
+    }
+
+    /// Convenience: start an engine on `artifacts/` and wrap it.
+    pub fn from_dir(dir: &Path) -> Result<Self> {
+        Ok(Self::new(PjrtEngine::start(dir)?))
+    }
+
+    pub fn engine(&self) -> &Arc<PjrtEngine> {
+        &self.engine
+    }
+
+    fn arg(m: &Mat<f64>) -> TensorArg {
+        TensorArg {
+            data: m.as_slice().iter().map(|&x| x as f32).collect(),
+            dims: vec![m.rows() as i64, m.cols() as i64],
+        }
+    }
+
+    fn back(data: &[f32], rows: usize, cols: usize) -> Mat<f64> {
+        Mat::from_vec(rows, cols, data.iter().map(|&x| x as f64).collect())
+    }
+
+    /// Try the artifact path; fall back to native on a missing key.
+    fn run1(
+        &self,
+        key: &str,
+        args: Vec<TensorArg>,
+        rows: usize,
+        cols: usize,
+        fallback: impl FnOnce() -> Mat<f64>,
+    ) -> Mat<f64> {
+        if self.engine.manifest.contains(key) {
+            match self.engine.exec(key, args, 1) {
+                Ok(outs) => {
+                    self.engine.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    return Self::back(&outs[0], rows, cols);
+                }
+                Err(e) => log::warn!("pjrt {key} failed ({e}); using native"),
+            }
+        }
+        self.engine.stats.misses.fetch_add(1, Ordering::Relaxed);
+        fallback()
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn gram(&self, f: &Mat<f64>) -> Mat<f64> {
+        let r = f.cols();
+        let key = Manifest::key_gram(f.rows(), r);
+        self.run1(&key, vec![Self::arg(f)], r, r, || self.native.gram(f))
+    }
+
+    fn xht(&self, x: &Mat<f64>, ht: &Mat<f64>) -> Mat<f64> {
+        let key = Manifest::key_xht(x.rows(), x.cols(), ht.cols());
+        self.run1(&key, vec![Self::arg(x), Self::arg(ht)], x.rows(), ht.cols(), || {
+            self.native.xht(x, ht)
+        })
+    }
+
+    fn wtx(&self, x: &Mat<f64>, w: &Mat<f64>) -> Mat<f64> {
+        let key = Manifest::key_wtx(x.rows(), x.cols(), w.cols());
+        self.run1(&key, vec![Self::arg(x), Self::arg(w)], x.cols(), w.cols(), || {
+            self.native.wtx(x, w)
+        })
+    }
+
+    fn bcd_update(&self, fm: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>, lip: f64) -> Mat<f64> {
+        let key = Manifest::key_bcd(fm.rows(), fm.cols());
+        let lip_arg = TensorArg { data: vec![lip as f32], dims: vec![1, 1] };
+        self.run1(
+            &key,
+            vec![Self::arg(fm), Self::arg(g), Self::arg(p), lip_arg],
+            fm.rows(),
+            fm.cols(),
+            || self.native.bcd_update(fm, g, p, lip),
+        )
+    }
+
+    fn mu_update(&self, f: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>) -> Mat<f64> {
+        let key = Manifest::key_mu(f.rows(), f.cols());
+        self.run1(&key, vec![Self::arg(f), Self::arg(g), Self::arg(p)], f.rows(), f.cols(), || {
+            self.native.mu_update(f, g, p)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Fused serial BCD iteration (see `python/compile/model.py::nmf_iter_bcd`).
+/// Returns `(w_new, ht_new, cross, quad)`; `None` if the shape has no
+/// artifact.
+pub fn pjrt_nmf_iter(
+    backend: &PjrtBackend,
+    x: &Mat<f64>,
+    wm: &Mat<f64>,
+    htm: &Mat<f64>,
+) -> Option<(Mat<f64>, Mat<f64>, f64, f64)> {
+    let (m, n) = x.shape();
+    let r = wm.cols();
+    let key = Manifest::key_nmf_iter(m, n, r);
+    if !backend.engine.manifest.contains(&key) {
+        return None;
+    }
+    let args = vec![PjrtBackend::arg(x), PjrtBackend::arg(wm), PjrtBackend::arg(htm)];
+    match backend.engine.exec(&key, args, 4) {
+        Ok(outs) => {
+            backend.engine.stats.hits.fetch_add(1, Ordering::Relaxed);
+            Some((
+                PjrtBackend::back(&outs[0], m, r),
+                PjrtBackend::back(&outs[1], n, r),
+                outs[2][0] as f64,
+                outs[3][0] as f64,
+            ))
+        }
+        Err(e) => {
+            log::warn!("pjrt {key} failed: {e}");
+            None
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Dense d-dimensional tensor in row-major (C) order.
+//!
+//! The host-side container for whole tensors (synthetic generators, small
+//! baselines, reconstruction checks). Large distributed tensors never
+//! materialize through this type — they live in the chunk store — but the
+//! semantics of `reshape`/`unfold` here define what the distributed
+//! versions must agree with (and tests enforce that agreement).
+
+use crate::error::{DnttError, Result};
+use crate::linalg::{Mat, Scalar};
+use crate::util::rng::Rng;
+
+/// Dense tensor with shape `dims`, stored row-major (last index fastest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTensor<T: Scalar = f64> {
+    dims: Vec<usize>,
+    data: Vec<T>,
+}
+
+/// Row-major linear index of `idx` within `dims`.
+pub fn linear_index(dims: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(dims.len(), idx.len());
+    let mut lin = 0;
+    for (d, i) in dims.iter().zip(idx.iter()) {
+        debug_assert!(i < d);
+        lin = lin * d + i;
+    }
+    lin
+}
+
+/// Inverse of [`linear_index`].
+pub fn multi_index(dims: &[usize], mut lin: usize) -> Vec<usize> {
+    let mut idx = vec![0; dims.len()];
+    for k in (0..dims.len()).rev() {
+        idx[k] = lin % dims[k];
+        lin /= dims[k];
+    }
+    idx
+}
+
+impl<T: Scalar> DenseTensor<T> {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        DenseTensor { dims: dims.to_vec(), data: vec![T::zero(); n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(DnttError::shape(format!(
+                "dims {:?} product {} != buffer len {}",
+                dims,
+                n,
+                data.len()
+            )));
+        }
+        Ok(DenseTensor { dims: dims.to_vec(), data })
+    }
+
+    /// Uniform [0,1) entries.
+    pub fn rand_uniform(dims: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = dims.iter().product();
+        DenseTensor { dims: dims.to_vec(), data: (0..n).map(|_| T::fromf(rng.uniform())).collect() }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    pub fn get(&self, idx: &[usize]) -> T {
+        self.data[linear_index(&self.dims, idx)]
+    }
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        self.data[linear_index(&self.dims, idx)] = v;
+    }
+
+    /// Reshape (row-major order preserved; zero-copy).
+    pub fn reshape(self, dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != self.data.len() {
+            return Err(DnttError::shape(format!(
+                "cannot reshape {:?} ({} elems) to {:?} ({n} elems)",
+                self.dims,
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(DenseTensor { dims: dims.to_vec(), data: self.data })
+    }
+
+    /// Left unfolding after `k` modes: matrix of shape
+    /// `(n_1⋯n_k) × (n_{k+1}⋯n_d)`. For row-major data this is zero-copy.
+    ///
+    /// The TT sweep (Alg 2) uses `k = 1` on the current remainder tensor.
+    pub fn unfold_left(&self, k: usize) -> Mat<T> {
+        assert!(k <= self.dims.len());
+        let rows: usize = self.dims[..k].iter().product();
+        let cols: usize = self.dims[k..].iter().product();
+        Mat::from_vec(rows, cols, self.data.clone())
+    }
+
+    /// Mode-k unfolding in the Kolda–Bader sense: rows indexed by mode `k`,
+    /// columns by the remaining modes in order (used by Tucker/HOOI).
+    pub fn unfold_mode(&self, k: usize) -> Mat<T> {
+        let d = self.dims.len();
+        assert!(k < d);
+        let nk = self.dims[k];
+        let ncols = self.data.len() / nk;
+        let mut out = Mat::zeros(nk, ncols);
+        // Iterate all elements; compute (row=i_k, col=position among other modes).
+        let mut idx = vec![0usize; d];
+        for lin in 0..self.data.len() {
+            // Column index: row-major order over dims without mode k.
+            let mut col = 0;
+            for (m, &i) in idx.iter().enumerate() {
+                if m != k {
+                    col = col * self.dims[m] + i;
+                }
+            }
+            out[(idx[k], col)] = self.data[lin];
+            // Increment row-major multi-index.
+            for m in (0..d).rev() {
+                idx[m] += 1;
+                if idx[m] < self.dims[m] {
+                    break;
+                }
+                idx[m] = 0;
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`unfold_mode`].
+    pub fn fold_mode(mat: &Mat<T>, k: usize, dims: &[usize]) -> Self {
+        let d = dims.len();
+        assert!(k < d);
+        assert_eq!(mat.rows(), dims[k]);
+        let mut t = DenseTensor::zeros(dims);
+        let mut idx = vec![0usize; d];
+        for lin in 0..t.data.len() {
+            let mut col = 0;
+            for (m, &i) in idx.iter().enumerate() {
+                if m != k {
+                    col = col * dims[m] + i;
+                }
+            }
+            t.data[lin] = mat[(idx[k], col)];
+            for m in (0..d).rev() {
+                idx[m] += 1;
+                if idx[m] < dims[m] {
+                    break;
+                }
+                idx[m] = 0;
+            }
+        }
+        t
+    }
+
+    /// Mode-k product with a matrix: `(A ×_k U)` where `U: q × n_k`.
+    pub fn mode_product(&self, k: usize, u: &Mat<T>) -> Self {
+        assert_eq!(u.cols(), self.dims[k], "mode_product: dim mismatch");
+        let unf = self.unfold_mode(k);
+        let prod = crate::linalg::gemm::matmul(u, &unf);
+        let mut new_dims = self.dims.clone();
+        new_dims[k] = u.rows();
+        Self::fold_mode(&prod, k, &new_dims)
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x.tof() * x.tof()).sum::<f64>().sqrt()
+    }
+
+    /// Relative Frobenius error `‖self − other‖ / ‖self‖` (Eq. 3).
+    pub fn rel_error(&self, other: &Self) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let diff: f64 = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = a.tof() - b.tof();
+                d * d
+            })
+            .sum();
+        diff.sqrt() / self.fro_norm().max(1e-300)
+    }
+
+    pub fn is_nonneg(&self) -> bool {
+        self.data.iter().all(|&x| x >= T::zero())
+    }
+
+    /// Element-wise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(T) -> T) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn cast<U: Scalar>(&self) -> DenseTensor<U> {
+        DenseTensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().map(|&x| U::fromf(x.tof())).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn linear_index_roundtrip() {
+        check(501, |rng| {
+            let d = 1 + rng.below(5);
+            let dims: Vec<usize> = (0..d).map(|_| 1 + rng.below(6)).collect();
+            let n: usize = dims.iter().product();
+            let lin = rng.below(n);
+            let idx = multi_index(&dims, lin);
+            if linear_index(&dims, &idx) != lin {
+                return Err(format!("roundtrip failed dims={dims:?} lin={lin}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn get_set() {
+        let mut t = DenseTensor::<f64>::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.get(&[1, 2, 3]), 7.0);
+        assert_eq!(t.as_slice()[1 * 12 + 2 * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn unfold_left_is_reshape() {
+        let mut rng = Rng::new(1);
+        let t = DenseTensor::<f64>::rand_uniform(&[3, 4, 5], &mut rng);
+        let m = t.unfold_left(1);
+        assert_eq!(m.shape(), (3, 20));
+        assert_eq!(m.as_slice(), t.as_slice());
+        let m2 = t.unfold_left(2);
+        assert_eq!(m2.shape(), (12, 5));
+    }
+
+    #[test]
+    fn unfold_fold_mode_roundtrip() {
+        check(502, |rng| {
+            let d = 2 + rng.below(3);
+            let dims: Vec<usize> = (0..d).map(|_| 1 + rng.below(5)).collect();
+            let t = DenseTensor::<f64>::rand_uniform(&dims, rng);
+            for k in 0..d {
+                let m = t.unfold_mode(k);
+                let t2 = DenseTensor::fold_mode(&m, k, &dims);
+                if t2 != t {
+                    return Err(format!("mode {k} roundtrip failed for dims {dims:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mode_product_identity() {
+        let mut rng = Rng::new(2);
+        let t = DenseTensor::<f64>::rand_uniform(&[3, 4, 5], &mut rng);
+        let i = Mat::<f64>::eye(4);
+        let p = t.mode_product(1, &i);
+        assert_eq!(p, t);
+    }
+
+    #[test]
+    fn mode_product_shape_and_values() {
+        // 2x2 tensor as matrix: mode-0 product == U * T.
+        let t = DenseTensor::<f64>::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let u = Mat::<f64>::from_vec(1, 2, vec![1.0, 1.0]);
+        let p = t.mode_product(0, &u);
+        assert_eq!(p.dims(), &[1, 2]);
+        assert_eq!(p.as_slice(), &[4.0, 6.0]);
+    }
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let mut rng = Rng::new(3);
+        let t = DenseTensor::<f64>::rand_uniform(&[4, 4, 4], &mut rng);
+        assert_eq!(t.rel_error(&t.clone()), 0.0);
+    }
+
+    #[test]
+    fn reshape_checks_size() {
+        let t = DenseTensor::<f64>::zeros(&[2, 3]);
+        assert!(t.clone().reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(DenseTensor::<f64>::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Binary persistence for tensors and tensor trains.
+//!
+//! A decomposition is only useful if the compressed representation can be
+//! stored and reloaded — this module gives the TT format a simple,
+//! versioned, endian-stable container (`.dntt`):
+//!
+//! ```text
+//! magic "DNTT" | u32 version | u32 kind | u64 d
+//! dims: d × u64 | ranks: (d+1) × u64
+//! cores: concatenated f64 LE, core i = (r_{i-1}·n_i·r_i) values
+//! ```
+//!
+//! Dense tensors use kind=2 with the same header minus ranks. Everything is
+//! written through a CRC-checked footer so truncated files are detected.
+
+use crate::error::{DnttError, Result};
+use crate::linalg::Mat;
+use crate::tensor::{DenseTensor, TTensor};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DNTT";
+const VERSION: u32 = 1;
+const KIND_TT: u32 = 1;
+const KIND_DENSE: u32 = 2;
+
+/// Simple CRC-32 (IEEE, bitwise) — enough to catch truncation/corruption.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(kind: u32) -> Self {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&kind.to_le_bytes());
+        Writer { buf }
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f64s(&mut self, xs: &[f64]) {
+        self.buf.reserve(xs.len() * 8);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn finish(mut self, path: &Path) -> Result<()> {
+        let crc = crc32(&self.buf);
+        self.buf.extend_from_slice(&crc.to_le_bytes());
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.buf)?;
+        Ok(())
+    }
+}
+
+struct Reader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Reader {
+    fn open(path: &Path, kind: u32) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        if buf.len() < 16 {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "file too short",
+            )));
+        }
+        let body = &buf[..buf.len() - 4];
+        let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "CRC mismatch (truncated or corrupted file)",
+            )));
+        }
+        if &buf[..4] != MAGIC {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "not a .dntt file",
+            )));
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unsupported version {version}"),
+            )));
+        }
+        let k = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if k != kind {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("wrong payload kind {k} (expected {kind})"),
+            )));
+        }
+        buf.truncate(buf.len() - 4);
+        Ok(Reader { buf, pos: 12 })
+    }
+    fn u64(&mut self) -> Result<u64> {
+        if self.pos + 8 > self.buf.len() {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "short read",
+            )));
+        }
+        let x = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(x)
+    }
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        if self.pos + 8 * n > self.buf.len() {
+            return Err(DnttError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "short read",
+            )));
+        }
+        let out = self.buf[self.pos..self.pos + 8 * n]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += 8 * n;
+        Ok(out)
+    }
+}
+
+/// Save a tensor train.
+pub fn save_tt(tt: &TTensor<f64>, path: &Path) -> Result<()> {
+    let mut w = Writer::new(KIND_TT);
+    w.u64(tt.dims().len() as u64);
+    for &n in tt.dims() {
+        w.u64(n as u64);
+    }
+    for &r in tt.ranks() {
+        w.u64(r as u64);
+    }
+    for core in tt.cores() {
+        w.f64s(core.as_slice());
+    }
+    w.finish(path)
+}
+
+/// Load a tensor train.
+pub fn load_tt(path: &Path) -> Result<TTensor<f64>> {
+    let mut r = Reader::open(path, KIND_TT)?;
+    let d = r.u64()? as usize;
+    if d == 0 || d > 64 {
+        return Err(DnttError::shape(format!("implausible order {d}")));
+    }
+    let dims: Vec<usize> = (0..d).map(|_| r.u64().map(|x| x as usize)).collect::<Result<_>>()?;
+    let ranks: Vec<usize> =
+        (0..=d).map(|_| r.u64().map(|x| x as usize)).collect::<Result<_>>()?;
+    let mut cores = Vec::with_capacity(d);
+    for i in 0..d {
+        let rows = ranks[i] * dims[i];
+        let data = r.f64s(rows * ranks[i + 1])?;
+        cores.push(Mat::from_vec(rows, ranks[i + 1], data));
+    }
+    TTensor::new(dims, cores)
+}
+
+/// Save a dense tensor.
+pub fn save_dense(t: &DenseTensor<f64>, path: &Path) -> Result<()> {
+    let mut w = Writer::new(KIND_DENSE);
+    w.u64(t.ndim() as u64);
+    for &n in t.dims() {
+        w.u64(n as u64);
+    }
+    w.f64s(t.as_slice());
+    w.finish(path)
+}
+
+/// Load a dense tensor.
+pub fn load_dense(path: &Path) -> Result<DenseTensor<f64>> {
+    let mut r = Reader::open(path, KIND_DENSE)?;
+    let d = r.u64()? as usize;
+    if d == 0 || d > 64 {
+        return Err(DnttError::shape(format!("implausible order {d}")));
+    }
+    let dims: Vec<usize> = (0..d).map(|_| r.u64().map(|x| x as usize)).collect::<Result<_>>()?;
+    let n: usize = dims.iter().product();
+    let data = r.f64s(n)?;
+    DenseTensor::from_vec(&dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dntt_io_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn tt_roundtrip() {
+        let mut rng = Rng::new(1);
+        let tt = TTensor::<f64>::rand_uniform(&[4, 5, 6], &[2, 3], &mut rng).unwrap();
+        let p = tmp("tt.dntt");
+        save_tt(&tt, &p).unwrap();
+        let back = load_tt(&p).unwrap();
+        assert_eq!(back.dims(), tt.dims());
+        assert_eq!(back.ranks(), tt.ranks());
+        for (a, b) in tt.cores().iter().zip(back.cores()) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(2);
+        let t = DenseTensor::<f64>::rand_uniform(&[3, 7, 2], &mut rng);
+        let p = tmp("dense.dntt");
+        save_dense(&t, &p).unwrap();
+        assert_eq!(load_dense(&p).unwrap(), t);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut rng = Rng::new(3);
+        let tt = TTensor::<f64>::rand_uniform(&[3, 3], &[2], &mut rng).unwrap();
+        let p = tmp("corrupt.dntt");
+        save_tt(&tt, &p).unwrap();
+        // Flip a byte in the middle.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_tt(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut rng = Rng::new(4);
+        let tt = TTensor::<f64>::rand_uniform(&[3, 3], &[2], &mut rng).unwrap();
+        let p = tmp("trunc.dntt");
+        save_tt(&tt, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(load_tt(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn kind_mismatch_detected() {
+        let mut rng = Rng::new(5);
+        let t = DenseTensor::<f64>::rand_uniform(&[2, 2], &mut rng);
+        let p = tmp("kind.dntt");
+        save_dense(&t, &p).unwrap();
+        assert!(load_tt(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

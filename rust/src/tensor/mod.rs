@@ -1,0 +1,11 @@
+//! Tensor containers: dense N-d tensors, the tensor-train format (the
+//! paper's output representation) and the Tucker format (baselines).
+
+pub mod dense;
+pub mod tt;
+pub mod io;
+pub mod tucker;
+
+pub use dense::DenseTensor;
+pub use tt::TTensor;
+pub use tucker::Tucker;

@@ -1,0 +1,266 @@
+//! Tensor-train (TT) format.
+//!
+//! `A ≈ G(1) ∘ G(2) ∘ … ∘ G(d)` with cores `G(i): r_{i-1} × n_i × r_i`,
+//! `r_0 = r_d = 1` (Eq. 1–2 of the paper). Cores are stored as matrices of
+//! shape `(r_{i-1}·n_i) × r_i` — exactly the `W` factors the NMF sweep
+//! produces — with helpers for element access, full reconstruction, storage
+//! accounting and the paper's compression ratio (Eq. 4).
+
+use crate::error::{DnttError, Result};
+use crate::linalg::gemm::matmul;
+use crate::linalg::{Mat, Scalar};
+use crate::tensor::dense::DenseTensor;
+
+/// A tensor train: `cores[i]` holds core `i` flattened to
+/// `(r_{i-1}·n_i) × r_i` (row-major over `(k_{i-1}, j_i)` pairs).
+#[derive(Clone, Debug)]
+pub struct TTensor<T: Scalar = f64> {
+    dims: Vec<usize>,
+    ranks: Vec<usize>, // length d+1, ranks[0] = ranks[d] = 1
+    cores: Vec<Mat<T>>,
+}
+
+impl<T: Scalar> TTensor<T> {
+    /// Assemble from core matrices; validates the chain shapes.
+    pub fn new(dims: Vec<usize>, cores: Vec<Mat<T>>) -> Result<Self> {
+        if dims.len() != cores.len() || dims.is_empty() {
+            return Err(DnttError::shape("TT: need one core per mode"));
+        }
+        let d = dims.len();
+        let mut ranks = Vec::with_capacity(d + 1);
+        ranks.push(1usize);
+        for (i, core) in cores.iter().enumerate() {
+            let r_prev = *ranks.last().unwrap();
+            if core.rows() % (r_prev * dims[i]) != 0 && core.rows() != r_prev * dims[i] {
+                return Err(DnttError::shape(format!(
+                    "core {i}: rows {} != r_prev {} * n_i {}",
+                    core.rows(),
+                    r_prev,
+                    dims[i]
+                )));
+            }
+            if core.rows() != r_prev * dims[i] {
+                return Err(DnttError::shape(format!(
+                    "core {i}: rows {} != {}x{}",
+                    core.rows(),
+                    r_prev,
+                    dims[i]
+                )));
+            }
+            ranks.push(core.cols());
+        }
+        if *ranks.last().unwrap() != 1 {
+            return Err(DnttError::shape("TT: final rank must be 1"));
+        }
+        Ok(TTensor { dims, ranks, cores })
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// TT ranks `r_0..r_d` (length d+1, both ends 1).
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    pub fn cores(&self) -> &[Mat<T>] {
+        &self.cores
+    }
+
+    /// Core `i` as a `(r_{i-1}·n_i) × r_i` matrix.
+    pub fn core(&self, i: usize) -> &Mat<T> {
+        &self.cores[i]
+    }
+
+    /// Number of stored parameters: `Σ r_{i-1}·n_i·r_i`.
+    pub fn num_params(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    /// Compression ratio `Π n_i / Σ n_i·r_{i-1}·r_i` (Eq. 4).
+    pub fn compression_ratio(&self) -> f64 {
+        let full: f64 = self.dims.iter().map(|&n| n as f64).product();
+        full / self.num_params() as f64
+    }
+
+    /// All cores elementwise non-negative (the nTT invariant).
+    pub fn is_nonneg(&self) -> bool {
+        self.cores.iter().all(|c| c.is_nonneg())
+    }
+
+    /// Evaluate a single element (Eq. 2): cost `O(d · r²)`.
+    pub fn element(&self, idx: &[usize]) -> T {
+        assert_eq!(idx.len(), self.dims.len());
+        // v starts as the i1-th row of core 1 (1×r1) and is propagated.
+        let mut v: Vec<T> = self.cores[0].row(idx[0]).to_vec();
+        for (m, core) in self.cores.iter().enumerate().skip(1) {
+            let r_prev = self.ranks[m];
+            let r_next = self.ranks[m + 1];
+            let mut out = vec![T::zero(); r_next];
+            for (k, &vk) in v.iter().enumerate().take(r_prev) {
+                if vk == T::zero() {
+                    continue;
+                }
+                // Row (k, idx[m]) of the flattened core.
+                let row = core.row(k * self.dims[m] + idx[m]);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = row[j].fma(vk, *o);
+                }
+            }
+            v = out;
+        }
+        debug_assert_eq!(v.len(), 1);
+        v[0]
+    }
+
+    /// Full dense reconstruction `G(1)∘…∘G(d)` via a chain of matrix
+    /// products: maintains `B: (n_1⋯n_m) × r_m` and multiplies by the next
+    /// reshaped core. Cost `O(Π n · max r²)`, memory one full tensor.
+    pub fn reconstruct(&self) -> DenseTensor<T> {
+        // B ← core 1: n1 × r1.
+        let mut b = self.cores[0].clone();
+        for (m, core) in self.cores.iter().enumerate().skip(1) {
+            let r_prev = self.ranks[m];
+            let n_m = self.dims[m];
+            let r_next = self.ranks[m + 1];
+            // core as r_prev × (n_m·r_next): need B·Ĝ where Ĝ flattens (n_m,r_next).
+            // cores[m] is (r_prev·n_m) × r_next row-major: entry ((k,j), r).
+            // Reinterpret as r_prev × (n_m·r_next) — same memory layout.
+            let g = core.clone().reshaped(r_prev, n_m * r_next);
+            let prod = matmul(&b, &g); // (N_prev) × (n_m·r_next)
+            let rows = prod.rows() * n_m;
+            b = prod.reshaped(rows, r_next);
+        }
+        debug_assert_eq!(b.cols(), 1);
+        let data = b.into_vec();
+        DenseTensor::from_vec(&self.dims, data).expect("TT reconstruct shape")
+    }
+
+    /// Relative reconstruction error vs a reference tensor (Eq. 3).
+    pub fn rel_error(&self, reference: &DenseTensor<T>) -> f64 {
+        reference.rel_error(&self.reconstruct())
+    }
+
+    /// Generate a random TT with given dims/ranks, uniform [0,1) cores —
+    /// the paper's §IV-A synthetic-data construction (before assembling).
+    pub fn rand_uniform(dims: &[usize], inner_ranks: &[usize], rng: &mut crate::util::rng::Rng) -> Result<Self> {
+        if inner_ranks.len() + 1 != dims.len() {
+            return Err(DnttError::shape(format!(
+                "need {} inner ranks for {} dims",
+                dims.len() - 1,
+                dims.len()
+            )));
+        }
+        let mut ranks = vec![1usize];
+        ranks.extend_from_slice(inner_ranks);
+        ranks.push(1);
+        let cores = (0..dims.len())
+            .map(|i| Mat::rand_uniform(ranks[i] * dims[i], ranks[i + 1], rng))
+            .collect();
+        TTensor::new(dims.to_vec(), cores)
+    }
+
+    pub fn cast<U: Scalar>(&self) -> TTensor<U> {
+        TTensor {
+            dims: self.dims.clone(),
+            ranks: self.ranks.clone(),
+            cores: self.cores.iter().map(|c| c.cast()).collect(),
+        }
+    }
+}
+
+/// Compression ratio from dims + ranks without building a TT (Eq. 4).
+pub fn compression_ratio(dims: &[usize], ranks: &[usize]) -> f64 {
+    assert_eq!(ranks.len(), dims.len() + 1);
+    let full: f64 = dims.iter().map(|&n| n as f64).product();
+    let params: f64 =
+        dims.iter().enumerate().map(|(i, &n)| (n * ranks[i] * ranks[i + 1]) as f64).sum();
+    full / params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn construction_validates_chain() {
+        let dims = vec![3, 4];
+        let good = vec![Mat::<f64>::zeros(3, 2), Mat::<f64>::zeros(8, 1)];
+        assert!(TTensor::new(dims.clone(), good).is_ok());
+        let bad = vec![Mat::<f64>::zeros(3, 2), Mat::<f64>::zeros(7, 1)];
+        assert!(TTensor::new(dims.clone(), bad).is_err());
+        let bad_end = vec![Mat::<f64>::zeros(3, 2), Mat::<f64>::zeros(8, 2)];
+        assert!(TTensor::new(dims, bad_end).is_err());
+    }
+
+    #[test]
+    fn element_matches_reconstruct() {
+        check(601, |rng| {
+            let d = 2 + rng.below(3);
+            let dims: Vec<usize> = (0..d).map(|_| 2 + rng.below(4)).collect();
+            let ranks: Vec<usize> = (0..d - 1).map(|_| 1 + rng.below(3)).collect();
+            let tt = TTensor::<f64>::rand_uniform(&dims, &ranks, rng).unwrap();
+            let full = tt.reconstruct();
+            for _ in 0..5 {
+                let idx: Vec<usize> = dims.iter().map(|&n| rng.below(n)).collect();
+                let a = tt.element(&idx);
+                let b = full.get(&idx);
+                if (a - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                    return Err(format!("element {idx:?}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank_one_tt_is_outer_product() {
+        // dims [2,2], ranks [1]: A[i,j] = u[i]·v[j].
+        let u = Mat::<f64>::from_vec(2, 1, vec![2.0, 3.0]);
+        let v = Mat::<f64>::from_vec(2, 1, vec![5.0, 7.0]);
+        let tt = TTensor::new(vec![2, 2], vec![u, v]).unwrap();
+        let full = tt.reconstruct();
+        assert_eq!(full.as_slice(), &[10.0, 14.0, 15.0, 21.0]);
+    }
+
+    #[test]
+    fn compression_ratio_formula() {
+        // 32^4 with ranks (1,10,10,10,1): params = 32*10 + 10*32*10 + 10*32*10 + 10*32.
+        let dims = [32usize; 4];
+        let ranks = [1usize, 10, 10, 10, 1];
+        let c = compression_ratio(&dims, &ranks);
+        let params = 32 * 10 + 3200 + 3200 + 320;
+        assert!((c - (32f64.powi(4) / params as f64)).abs() < 1e-9);
+        let mut rng = Rng::new(1);
+        let tt = TTensor::<f64>::rand_uniform(&dims, &ranks[1..4], &mut rng).unwrap();
+        assert_eq!(tt.num_params(), params);
+        assert!((tt.compression_ratio() - c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_cores_nonneg_reconstruction_nonneg() {
+        let mut rng = Rng::new(2);
+        let tt = TTensor::<f64>::rand_uniform(&[3, 3, 3], &[2, 2], &mut rng).unwrap();
+        assert!(tt.is_nonneg());
+        assert!(tt.reconstruct().is_nonneg());
+    }
+
+    #[test]
+    fn rel_error_of_exact_tt_is_zero() {
+        let mut rng = Rng::new(3);
+        let tt = TTensor::<f64>::rand_uniform(&[4, 5, 3], &[2, 3], &mut rng).unwrap();
+        let full = tt.reconstruct();
+        assert!(tt.rel_error(&full) < 1e-12);
+    }
+
+    #[test]
+    fn ranks_recorded() {
+        let mut rng = Rng::new(4);
+        let tt = TTensor::<f64>::rand_uniform(&[4, 5, 6, 7], &[2, 3, 4], &mut rng).unwrap();
+        assert_eq!(tt.ranks(), &[1, 2, 3, 4, 1]);
+        assert_eq!(tt.dims(), &[4, 5, 6, 7]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Synthetic tensor generation (§IV-A of the paper).
+//!
+//! A ground-truth tensor train with prescribed dims and ranks is sampled
+//! with uniform [0,1) cores and the full tensor is its contraction. In the
+//! distributed setting every rank generates the (small) cores from the
+//! shared seed and contracts *only its own block* — the index-restricted
+//! cores form a valid TT whose reconstruction is exactly the block. This is
+//! communication-free and numerically identical to the paper's distributed
+//! matmul chain.
+
+use crate::dist::{BlockDim, ProcGrid};
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::tensor::{DenseTensor, TTensor};
+use crate::util::rng::Rng;
+
+/// Ground-truth description of a synthetic TT tensor.
+#[derive(Clone, Debug)]
+pub struct SyntheticTt {
+    pub dims: Vec<usize>,
+    pub ranks: Vec<usize>, // inner ranks, length d-1
+    pub seed: u64,
+}
+
+impl SyntheticTt {
+    pub fn new(dims: Vec<usize>, ranks: Vec<usize>, seed: u64) -> Self {
+        assert_eq!(ranks.len() + 1, dims.len());
+        SyntheticTt { dims, ranks, seed }
+    }
+
+    /// The paper's strong-scaling workload: 256⁴ with ranks (10,10,10),
+    /// scaled down by `shrink` per mode.
+    pub fn paper_strong_scaling(shrink: usize) -> Self {
+        let n = (256 / shrink.max(1)).max(4);
+        SyntheticTt::new(vec![n; 4], vec![10, 10, 10], 20190020)
+    }
+
+    /// Generate the ground-truth TT (cores only; cheap).
+    pub fn ground_truth(&self) -> TTensor<f64> {
+        let mut rng = Rng::new(self.seed);
+        TTensor::rand_uniform(&self.dims, &self.ranks, &mut rng).expect("synthetic TT")
+    }
+
+    /// Full dense tensor (small cases / tests).
+    pub fn dense(&self) -> DenseTensor<f64> {
+        self.ground_truth().reconstruct()
+    }
+
+    /// This rank's `TensorGrid` block of the full tensor: restrict every
+    /// core to the block's index range along its mode and contract.
+    pub fn block(&self, grid: &ProcGrid, rank: usize) -> Result<Vec<f64>> {
+        let tt = self.ground_truth();
+        let coords = grid.coords(rank);
+        let mut block_dims = Vec::with_capacity(self.dims.len());
+        let mut cores = Vec::with_capacity(self.dims.len());
+        let mut r_prev = 1usize;
+        for (k, core) in tt.cores().iter().enumerate() {
+            let bd = BlockDim::new(self.dims[k], grid.dims()[k]);
+            let (lo, len) = (bd.start_of(coords[k]), bd.size_of(coords[k]));
+            let r_next = core.cols();
+            // Rows of the flattened core are (prev_rank_index, mode_index);
+            // keep mode indices in [lo, lo+len).
+            let mut sub = Mat::<f64>::zeros(r_prev * len, r_next);
+            for kk in 0..r_prev {
+                for (li, gi) in (lo..lo + len).enumerate() {
+                    sub.row_mut(kk * len + li).copy_from_slice(core.row(kk * self.dims[k] + gi));
+                }
+            }
+            cores.push(sub);
+            block_dims.push(len);
+            r_prev = r_next;
+        }
+        let block_tt = TTensor::new(block_dims, cores)?;
+        Ok(block_tt.reconstruct().into_vec())
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Size in bytes at f64.
+    pub fn nbytes(&self) -> usize {
+        self.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dense::multi_index;
+    use crate::util::prop::check;
+
+    #[test]
+    fn blocks_tile_the_dense_tensor() {
+        check(901, |rng| {
+            let d = 2 + rng.below(3);
+            let dims: Vec<usize> = (0..d).map(|_| 2 + rng.below(5)).collect();
+            let ranks: Vec<usize> = (0..d - 1).map(|_| 1 + rng.below(3)).collect();
+            let grid_dims: Vec<usize> = dims.iter().map(|&n| 1 + rng.below(n.min(3))).collect();
+            let syn = SyntheticTt::new(dims.clone(), ranks, rng.next_u64());
+            let grid = ProcGrid::new(grid_dims.clone()).unwrap();
+            let full = syn.dense();
+            // Reassemble all blocks and compare element-wise.
+            for r in 0..grid.size() {
+                let block = syn.block(&grid, r).unwrap();
+                let coords = grid.coords(r);
+                let bds: Vec<BlockDim> = dims
+                    .iter()
+                    .zip(grid_dims.iter())
+                    .map(|(&n, &p)| BlockDim::new(n, p))
+                    .collect();
+                let block_dims: Vec<usize> =
+                    bds.iter().zip(&coords).map(|(bd, &c)| bd.size_of(c)).collect();
+                for (loff, &v) in block.iter().enumerate() {
+                    let lidx = multi_index(&block_dims, loff);
+                    let gidx: Vec<usize> = lidx
+                        .iter()
+                        .zip(bds.iter().zip(&coords))
+                        .map(|(&li, (bd, &c))| bd.start_of(c) + li)
+                        .collect();
+                    let want = full.get(&gidx);
+                    if (v - want).abs() > 1e-10 * (1.0 + want.abs()) {
+                        return Err(format!("block {r} mismatch at {gidx:?}: {v} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let syn = SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 99);
+        assert_eq!(syn.dense().as_slice(), syn.dense().as_slice());
+        let grid = ProcGrid::new(vec![2, 1, 2]).unwrap();
+        assert_eq!(syn.block(&grid, 1).unwrap(), syn.block(&grid, 1).unwrap());
+    }
+
+    #[test]
+    fn nonneg_by_construction() {
+        let syn = SyntheticTt::new(vec![5, 6, 4], vec![3, 2], 7);
+        assert!(syn.dense().is_nonneg());
+    }
+
+    #[test]
+    fn paper_workload_scaled() {
+        let s = SyntheticTt::paper_strong_scaling(4);
+        assert_eq!(s.dims, vec![64; 4]);
+        assert_eq!(s.ranks, vec![10, 10, 10]);
+        assert_eq!(s.nbytes(), 64usize.pow(4) * 8);
+    }
+}

@@ -1,0 +1,360 @@
+//! The distributed non-negative tensor-train driver (Alg 2).
+//!
+//! Sweeps modes left-to-right; at stage `l` the remainder (logical shape
+//! `r_{l-1} × n_l ⋯ n_d`) is redistributed by [`dist_reshape`] into the
+//! stage matrix `X: (r_{l-1}·n_l) × (n_{l+1}⋯n_d)` on the 2-D grid, the TT
+//! rank is selected by the distributed ε-threshold SVD, the distributed
+//! BCD/MU/HALS NMF factorizes `X ≈ W·H`, `W` is all_gathered into core
+//! `G(l)`, and the distributed `H` becomes the next remainder. The final
+//! `H` is gathered as core `G(d)`.
+
+use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
+use crate::error::{DnttError, Result};
+use crate::linalg::Mat;
+use crate::nmf::{dist_nmf, NmfConfig, NmfStats};
+use crate::runtime::backend::ComputeBackend;
+use crate::tensor::TTensor;
+use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
+use crate::util::timer::{Breakdown, Cat};
+use std::sync::Arc;
+
+/// Tensor-train decomposition parameters.
+#[derive(Clone, Debug)]
+pub struct TtConfig {
+    /// Per-stage relative-error threshold ε for rank selection.
+    pub eps: f64,
+    /// Fixed TT ranks (skips the SVD — the paper's scaling experiments fix
+    /// ranks to isolate NMF cost). Length must be `d-1`.
+    pub fixed_ranks: Option<Vec<usize>>,
+    /// NMF settings (`rank` is overridden per stage).
+    pub nmf: NmfConfig,
+    /// Rank-selection settings (`eps` is overridden from `self.eps`).
+    pub rank_select: RankSelectConfig,
+}
+
+impl Default for TtConfig {
+    fn default() -> Self {
+        TtConfig {
+            eps: 0.01,
+            fixed_ranks: None,
+            nmf: NmfConfig::default(),
+            rank_select: RankSelectConfig::default(),
+        }
+    }
+}
+
+/// Per-stage record.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub mode: usize,
+    /// Stage matrix shape.
+    pub m: usize,
+    pub n: usize,
+    /// Selected (or fixed) TT rank.
+    pub rank: usize,
+    /// `sqrt(tail/total)` the SVD heuristic achieved (NaN when fixed).
+    pub svd_eps: f64,
+    /// NMF convergence record.
+    pub nmf: NmfStats,
+}
+
+/// Decomposition result (identical on every rank).
+pub struct TtOutput {
+    pub tt: TTensor<f64>,
+    pub stages: Vec<StageStats>,
+    /// Critical-path (max-over-ranks) cost breakdown.
+    pub breakdown: Breakdown,
+}
+
+/// Run the distributed nTT on this rank (collective).
+///
+/// * `my_block` — this rank's chunk of the input tensor under
+///   `Layout::TensorGrid { dims, grid: proc_grid.dims() }`.
+/// * `grid` — the 2-D NMF grid (must satisfy `grid.size() == world.size()`
+///   and be the collapse of `proc_grid`).
+#[allow(clippy::too_many_arguments)]
+pub fn dist_ntt(
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    store: &Arc<SharedStore>,
+    proc_grid: &ProcGrid,
+    grid: Grid2d,
+    dims: &[usize],
+    my_block: Vec<f64>,
+    backend: &dyn ComputeBackend,
+    cfg: &TtConfig,
+) -> Result<TtOutput> {
+    let d = dims.len();
+    if d < 2 {
+        return Err(DnttError::shape("tensor train needs at least 2 modes"));
+    }
+    if let Some(fr) = &cfg.fixed_ranks {
+        if fr.len() != d - 1 {
+            return Err(DnttError::config(format!(
+                "fixed_ranks needs {} entries, got {}",
+                d - 1,
+                fr.len()
+            )));
+        }
+    }
+    if grid.size() != world.size() {
+        return Err(DnttError::Comm("grid size != world size".into()));
+    }
+
+    let mut cores: Vec<Mat<f64>> = Vec::with_capacity(d);
+    let mut stages: Vec<StageStats> = Vec::with_capacity(d - 1);
+    let mut cur_layout = Layout::TensorGrid { dims: dims.to_vec(), grid: proc_grid.dims().to_vec() };
+    let mut cur_data = my_block;
+    let mut r_prev = 1usize;
+    let mut s_rest: usize = dims.iter().product();
+
+    for l in 0..d - 1 {
+        let n_l = dims[l];
+        let m = r_prev * n_l;
+        let ncols = s_rest / n_l;
+        // --- Alg 2 line 4: distributed reshape into the stage matrix.
+        let x = dist_reshape(world, store, &format!("tt.stage{l}"), &cur_layout, cur_data, m, ncols, grid)?;
+
+        // --- Lines 5–6: rank selection.
+        let (rank, svd_eps) = match &cfg.fixed_ranks {
+            Some(fr) => (fr[l].max(1), f64::NAN),
+            None => {
+                let rs = RankSelectConfig { eps: cfg.eps, ..cfg.rank_select.clone() };
+                let sel = dist_rank_select(&x, m, ncols, grid, world, row, col, &rs)?;
+                (sel.rank, sel.achieved_eps)
+            }
+        };
+
+        // --- Line 7: distributed NMF.
+        let nmf_cfg = NmfConfig { rank, seed: cfg.nmf.seed.wrapping_add(l as u64), ..cfg.nmf.clone() };
+        let out = dist_nmf(&x, m, ncols, grid, world, row, col, backend, &nmf_cfg)?;
+
+        // --- Line 8: gather W into core G(l). World-rank order concatenates
+        // W blocks in global row order (see nmf::dist block layout).
+        let parts = world.all_gather_varied(out.w.as_slice());
+        let mut wfull = Vec::with_capacity(m * rank);
+        for p in &parts {
+            wfull.extend_from_slice(p);
+        }
+        cores.push(Mat::from_vec(m, rank, wfull));
+
+        stages.push(StageStats { mode: l, m, n: ncols, rank, svd_eps, nmf: out.stats });
+
+        // --- Line 10: H becomes the next remainder (kept distributed).
+        cur_layout = Layout::HtGrid { r: rank, n: ncols, pr: grid.pr, pc: grid.pc };
+        cur_data = out.ht.into_vec();
+        r_prev = rank;
+        s_rest = ncols;
+    }
+
+    // --- Line 11: gather the final H as core G(d) ((r_{d-1}·n_d) × 1).
+    let rank_id = world.rank();
+    let t0 = std::time::Instant::now();
+    store.publish("tt.final", &cur_layout, rank_id, cur_data)?;
+    world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
+    world.barrier();
+    let view = store.view("tt.final")?;
+    let t1 = std::time::Instant::now();
+    let hfull = view.to_dense(); // r_prev × n_d row-major = flattened G(d)
+    world.breakdown.add_secs(Cat::Reshape, t1.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+    drop(view);
+    world.barrier();
+    if rank_id == 0 {
+        store.remove("tt.final");
+    }
+    cores.push(Mat::from_vec(r_prev * dims[d - 1], 1, hfull));
+
+    // Merge sub-communicator costs, then take the critical path over ranks.
+    world.breakdown.merge_sum(&row.breakdown.clone());
+    world.breakdown.merge_sum(&col.breakdown.clone());
+    let all = world.all_gather_any(world.breakdown.clone());
+    let mut merged = Breakdown::new();
+    for b in &all {
+        merged.merge_max(b);
+    }
+
+    Ok(TtOutput { tt: TTensor::new(dims.to_vec(), cores)?, stages, breakdown: merged })
+}
+
+/// Convenience wrapper: decompose a replicated dense tensor on `p` thread
+/// ranks arranged as `proc_grid` (tests, examples, small data).
+pub fn ntt_on_threads(
+    tensor: &crate::tensor::DenseTensor<f64>,
+    proc_grid: &ProcGrid,
+    cfg: &TtConfig,
+) -> Result<TtOutput> {
+    use crate::dist::chunkstore::SpillMode;
+    let dims = tensor.dims().to_vec();
+    let grid = proc_grid.to_2d();
+    let store = SharedStore::new(SpillMode::Memory);
+    let pg = proc_grid.clone();
+    let cfg = cfg.clone();
+    let tensor = tensor.clone();
+    let mut outs = Comm::run(proc_grid.size(), move |mut world| {
+        let my = extract_block(&tensor, &pg, world.rank());
+        let (mut row, mut col) = grid.make_subcomms(&mut world);
+        dist_ntt(
+            &mut world,
+            &mut row,
+            &mut col,
+            &store,
+            &pg,
+            grid,
+            &dims,
+            my,
+            &crate::runtime::native::NativeBackend,
+            &cfg,
+        )
+    });
+    outs.swap_remove(0)
+}
+
+/// Serial (single-rank) nTT.
+pub fn ntt_serial(
+    tensor: &crate::tensor::DenseTensor<f64>,
+    cfg: &TtConfig,
+) -> Result<TtOutput> {
+    let grid = ProcGrid::new(vec![1; tensor.ndim()])?;
+    ntt_on_threads(tensor, &grid, cfg)
+}
+
+/// Extract the `TensorGrid` block of `rank` from a dense tensor.
+pub fn extract_block(
+    t: &crate::tensor::DenseTensor<f64>,
+    grid: &ProcGrid,
+    rank: usize,
+) -> Vec<f64> {
+    use crate::dist::BlockDim;
+    let dims = t.dims();
+    let coords = grid.coords(rank);
+    let bds: Vec<BlockDim> = dims
+        .iter()
+        .zip(grid.dims().iter())
+        .map(|(&n, &p)| BlockDim::new(n, p))
+        .collect();
+    let block_dims: Vec<usize> = bds.iter().zip(&coords).map(|(b, &c)| b.size_of(c)).collect();
+    let total: usize = block_dims.iter().product();
+    let mut out = Vec::with_capacity(total);
+    let mut lidx = vec![0usize; dims.len()];
+    for _ in 0..total {
+        let gidx: Vec<usize> = lidx
+            .iter()
+            .zip(bds.iter().zip(&coords))
+            .map(|(&li, (b, &c))| b.start_of(c) + li)
+            .collect();
+        out.push(t.get(&gidx));
+        // increment local index row-major
+        for k in (0..dims.len()).rev() {
+            lidx[k] += 1;
+            if lidx[k] < block_dims[k] {
+                break;
+            }
+            lidx[k] = 0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttrain::datagen::SyntheticTt;
+
+    fn cfg_iters(iters: usize) -> TtConfig {
+        TtConfig {
+            eps: 1e-6,
+            nmf: NmfConfig { max_iters: iters, tol: 1e-12, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn recovers_ranks_and_reconstructs_serial() {
+        let syn = SyntheticTt::new(vec![4, 5, 6], vec![2, 3], 11);
+        let t = syn.dense();
+        let out = ntt_serial(&t, &cfg_iters(400)).unwrap();
+        assert_eq!(out.tt.ranks(), &[1, 2, 3, 1]);
+        assert!(out.tt.is_nonneg());
+        let err = out.tt.rel_error(&t);
+        assert!(err < 0.05, "rel err {err}");
+    }
+
+    #[test]
+    fn distributed_matches_serial() {
+        let syn = SyntheticTt::new(vec![4, 4, 6], vec![2, 2], 13);
+        let t = syn.dense();
+        let serial = ntt_serial(&t, &cfg_iters(150)).unwrap();
+        let grid = ProcGrid::new(vec![2, 1, 2]).unwrap();
+        let dist = ntt_on_threads(&t, &grid, &cfg_iters(150)).unwrap();
+        assert_eq!(serial.tt.ranks(), dist.tt.ranks());
+        // Same deterministic init ⇒ same cores up to reduction roundoff.
+        for (a, b) in serial.tt.cores().iter().zip(dist.tt.cores()) {
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_ranks_skip_svd() {
+        let syn = SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 17);
+        let t = syn.dense();
+        let mut cfg = cfg_iters(100);
+        cfg.fixed_ranks = Some(vec![3, 3]);
+        let out = ntt_serial(&t, &cfg).unwrap();
+        assert_eq!(out.tt.ranks(), &[1, 3, 3, 1]);
+        assert!(out.stages.iter().all(|s| s.svd_eps.is_nan()));
+    }
+
+    #[test]
+    fn stage_shapes_follow_alg2() {
+        let syn = SyntheticTt::new(vec![3, 4, 5, 6], vec![2, 2, 2], 19);
+        let t = syn.dense();
+        let out = ntt_serial(&t, &cfg_iters(60)).unwrap();
+        // stage 0: m = n1 = 3, n = 4*5*6
+        assert_eq!((out.stages[0].m, out.stages[0].n), (3, 120));
+        // stage 1: m = r1*n2, n = 5*6
+        let r1 = out.stages[0].rank;
+        assert_eq!((out.stages[1].m, out.stages[1].n), (r1 * 4, 30));
+        // stage 2: m = r2*n3, n = 6
+        let r2 = out.stages[1].rank;
+        assert_eq!((out.stages[2].m, out.stages[2].n), (r2 * 5, 6));
+        // compression ratio consistent with Eq. 4
+        let c = out.tt.compression_ratio();
+        assert!(c > 0.0 && c.is_finite());
+    }
+
+    #[test]
+    fn breakdown_populated() {
+        let syn = SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 23);
+        let t = syn.dense();
+        let grid = ProcGrid::new(vec![2, 2, 1]).unwrap();
+        let out = ntt_on_threads(&t, &grid, &cfg_iters(20)).unwrap();
+        let b = &out.breakdown;
+        assert!(b.secs(Cat::MatMul) > 0.0);
+        assert!(b.calls(Cat::AllReduce) > 0);
+        assert!(b.calls(Cat::AllGather) > 0);
+        assert!(b.calls(Cat::ReduceScatter) > 0);
+        assert!(b.secs(Cat::Reshape) > 0.0);
+    }
+
+    #[test]
+    fn two_mode_tensor_is_plain_nmf() {
+        let syn = SyntheticTt::new(vec![8, 9], vec![2], 29);
+        let t = syn.dense();
+        let out = ntt_serial(&t, &cfg_iters(300)).unwrap();
+        assert_eq!(out.tt.ranks(), &[1, 2, 1]);
+        assert!(out.tt.rel_error(&t) < 0.05);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let syn = SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 31);
+        let t = syn.dense();
+        let mut cfg = cfg_iters(5);
+        cfg.fixed_ranks = Some(vec![2]); // wrong length
+        assert!(ntt_serial(&t, &cfg).is_err());
+    }
+}

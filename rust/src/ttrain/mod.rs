@@ -1,0 +1,13 @@
+//! The paper's contribution: distributed non-negative tensor-train
+//! decomposition — rank selection (distributed ε-threshold SVD), the
+//! Alg-2 sweep driver, and the §IV-A synthetic workload generator.
+
+pub mod datagen;
+pub mod driver;
+pub mod rankselect;
+pub mod round;
+
+pub use datagen::SyntheticTt;
+pub use driver::{dist_ntt, ntt_on_threads, ntt_serial, StageStats, TtConfig, TtOutput};
+pub use rankselect::{dist_rank_select, RankSelectConfig, RankSelection};
+pub use round::tt_round;

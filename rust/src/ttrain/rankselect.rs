@@ -1,0 +1,297 @@
+//! Distributed SVD-based TT-rank selection (Alg 2 lines 5–6).
+//!
+//! The paper selects each TT rank as the smallest `k` with
+//! `sqrt(σ_{k+1}²+…+σ_N²)/sqrt(σ_1²+…+σ_N²) ≤ ε`. Only singular values are
+//! needed, never factors, so the distributed SVD reduces to a randomized
+//! range sketch (Halko–Martinsson–Tropp):
+//!
+//! 1. `Y = X·Ω` with a seeded Gaussian `Ω: n×k` — local GEMM + row-comm
+//!    all_reduce + col-comm all_gather (Y is `m×k`, small);
+//! 2. `Q = qr(Y).q` locally (deterministic, identical on all ranks);
+//! 3. `B = Qᵀ·X` — local GEMM + col-comm all_reduce (kept distributed);
+//! 4. `σ = sqrt(eig(B·Bᵀ))` after a world all_reduce of the `k×k` Gram.
+//!
+//! When `k = min(m, n)` the sketch is exact (Q spans the full column
+//! space); otherwise the top-k values are accurate and the *tail energy*
+//! is recovered exactly from `‖X‖²_F − Σσᵢ²` (a cheap all_reduce), which is
+//! all the ε-threshold needs. If the threshold is not reached within `k`
+//! values the sketch doubles and retries (up to `min(m,n)`).
+
+use crate::dist::{BlockDim, Comm, Grid2d};
+use crate::error::Result;
+use crate::linalg::eig::sym_eig;
+use crate::linalg::gemm::{gram_m_mt, matmul, matmul_at_b};
+use crate::linalg::qr::thin_qr;
+use crate::linalg::Mat;
+use crate::util::timer::Cat;
+
+/// Rank-selection parameters.
+#[derive(Clone, Debug)]
+pub struct RankSelectConfig {
+    /// Target relative-error threshold ε.
+    pub eps: f64,
+    /// Cap on the returned rank (paper TT ranks are ≤ 40; default 128).
+    pub max_rank: usize,
+    /// Oversampling columns added to the sketch.
+    pub oversample: usize,
+    /// Sketch seed (deterministic across ranks).
+    pub seed: u64,
+}
+
+impl Default for RankSelectConfig {
+    fn default() -> Self {
+        RankSelectConfig { eps: 0.01, max_rank: 128, oversample: 10, seed: 777 }
+    }
+}
+
+/// Deterministic standard-normal entry for `Ω[(row, col)]`.
+#[inline]
+fn gauss_entry(seed: u64, row: usize, col: usize) -> f64 {
+    #[inline]
+    fn u(seed: u64, row: usize, col: usize, salt: u64) -> f64 {
+        let mut z = seed ^ salt.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        z ^= (row as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z ^= (col as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut x = z;
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+    let u1 = u(seed, row, col, 1).max(1e-300);
+    let u2 = u(seed, row, col, 2);
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Result of the distributed rank selection.
+#[derive(Clone, Debug)]
+pub struct RankSelection {
+    /// The selected TT rank `r_l`.
+    pub rank: usize,
+    /// Leading singular values (length = sketch size actually used).
+    pub singular_values: Vec<f64>,
+    /// Achieved tail bound `sqrt(tail/total)` at the selected rank.
+    pub achieved_eps: f64,
+}
+
+/// Distributed ε-threshold rank selection on the `m×n` matrix whose local
+/// block (on grid position derived from `world.rank()`) is `x`.
+/// Collective over `world`/`row`/`col`.
+pub fn dist_rank_select(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    cfg: &RankSelectConfig,
+) -> Result<RankSelection> {
+    let (i, j) = grid.coords(world.rank());
+    let rows = BlockDim::new(m, grid.pr);
+    let cols = BlockDim::new(n, grid.pc);
+    debug_assert_eq!((x.rows(), x.cols()), (rows.size_of(i), cols.size_of(j)));
+
+    // Exact total energy.
+    let t0 = std::time::Instant::now();
+    let local_sq = x.fro_norm_sq();
+    world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
+    let total = world.all_reduce_scalar(local_sq);
+    if total <= 0.0 {
+        return Ok(RankSelection { rank: 1, singular_values: vec![0.0], achieved_eps: 0.0 });
+    }
+
+    let nmin = m.min(n);
+    let mut k = (cfg.max_rank + cfg.oversample).min(nmin);
+    loop {
+        let sigma = sketch_singular_values(x, m, n, grid, world, row, col, cfg.seed, k)?;
+        // Smallest rank whose tail energy is under eps (bounded by max_rank).
+        let mut cum = 0.0;
+        let mut chosen = None;
+        for (idx, s) in sigma.iter().enumerate() {
+            cum += s * s;
+            let tail = ((total - cum).max(0.0) / total).sqrt();
+            if tail <= cfg.eps {
+                chosen = Some((idx + 1, tail));
+                break;
+            }
+            if idx + 1 >= cfg.max_rank {
+                chosen = Some((cfg.max_rank, tail));
+                break;
+            }
+        }
+        match chosen {
+            Some((rank, achieved)) => {
+                return Ok(RankSelection { rank, singular_values: sigma, achieved_eps: achieved })
+            }
+            None if k >= nmin => {
+                // Even the full spectrum can't reach eps (eps below noise
+                // floor): return full rank.
+                let cum: f64 = sigma.iter().map(|s| s * s).sum();
+                let achieved = ((total - cum).max(0.0) / total).sqrt();
+                return Ok(RankSelection {
+                    rank: sigma.len().min(cfg.max_rank).max(1),
+                    singular_values: sigma,
+                    achieved_eps: achieved,
+                });
+            }
+            None => {
+                k = (k * 2).min(nmin);
+                log::debug!("rank selection: sketch too small, doubling to {k}");
+            }
+        }
+    }
+}
+
+/// Top-`k` singular values of the distributed matrix via a randomized
+/// range sketch (see module docs). Identical on every rank.
+#[allow(clippy::too_many_arguments)]
+fn sketch_singular_values(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    seed: u64,
+    k: usize,
+) -> Result<Vec<f64>> {
+    let (i, j) = grid.coords(world.rank());
+    let rows = BlockDim::new(m, grid.pr);
+    let cols = BlockDim::new(n, grid.pc);
+
+    // Ω block for my columns.
+    let t0 = std::time::Instant::now();
+    let omega_j =
+        Mat::from_fn(x.cols(), k, |lb, c| gauss_entry(seed, cols.start_of(j) + lb, c));
+    // Y_loc = X^(i,j) · Ω_j.
+    let mut y = matmul(x, &omega_j);
+    world.breakdown.add_secs(Cat::Svd, t0.elapsed().as_secs_f64());
+    // Sum over the block-row (row comm), then assemble full Y (col comm).
+    row.all_reduce_sum(y.as_mut_slice());
+    let parts = col.all_gather_varied(y.as_slice());
+    let mut yfull = Vec::with_capacity(m * k);
+    for p in &parts {
+        yfull.extend_from_slice(p);
+    }
+    let yfull = Mat::from_vec(m, k, yfull);
+
+    // Q = qr(Y).q — every rank computes the same Q.
+    let t1 = std::time::Instant::now();
+    let q = thin_qr(&yfull).q; // m × k
+    let qi = q.rows_slice(rows.start_of(i), rows.start_of(i) + rows.size_of(i));
+    // Partial B^(j) = Q^(i)ᵀ · X^(i,j)  (k × n_j).
+    let mut b = matmul_at_b(&qi, x);
+    world.breakdown.add_secs(Cat::Svd, t1.elapsed().as_secs_f64());
+    col.all_reduce_sum(b.as_mut_slice());
+
+    // G = B·Bᵀ summed over column blocks (only one rank per column block
+    // contributes to avoid double counting).
+    let t2 = std::time::Instant::now();
+    let mut g = if col.rank() == 0 { gram_m_mt(&b) } else { Mat::zeros(k, k) };
+    world.breakdown.add_secs(Cat::Svd, t2.elapsed().as_secs_f64());
+    world.all_reduce_sum(g.as_mut_slice());
+
+    let t3 = std::time::Instant::now();
+    let vals = sym_eig(&g).values;
+    world.breakdown.add_secs(Cat::Svd, t3.elapsed().as_secs_f64());
+    Ok(vals.into_iter().map(|l| l.max(0.0).sqrt()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::thin_svd;
+    use crate::util::rng::Rng;
+
+    /// Run dist_rank_select on a full matrix over a grid.
+    fn run(x: &Mat<f64>, grid: Grid2d, cfg: &RankSelectConfig) -> RankSelection {
+        let (m, n) = x.shape();
+        let x = x.clone();
+        let cfg = cfg.clone();
+        let outs = Comm::run(grid.size(), move |mut world| {
+            let (i, j) = grid.coords(world.rank());
+            let rows = BlockDim::new(m, grid.pr);
+            let cols = BlockDim::new(n, grid.pc);
+            let xb = Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
+                x[(rows.start_of(i) + a, cols.start_of(j) + b)]
+            });
+            let (mut row, mut col) = grid.make_subcomms(&mut world);
+            dist_rank_select(&xb, m, n, grid, &mut world, &mut row, &mut col, &cfg).unwrap()
+        });
+        // All ranks must agree.
+        for o in &outs[1..] {
+            assert_eq!(o.rank, outs[0].rank);
+        }
+        outs[0].clone()
+    }
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat<f64> {
+        let mut rng = Rng::new(seed);
+        let a = Mat::<f64>::rand_uniform(m, r, &mut rng);
+        let b = Mat::<f64>::rand_uniform(r, n, &mut rng);
+        matmul(&a, &b)
+    }
+
+    #[test]
+    fn exact_rank_detected() {
+        let x = low_rank(20, 30, 4, 1);
+        let sel = run(&x, Grid2d::new(2, 2), &RankSelectConfig { eps: 1e-8, ..Default::default() });
+        assert_eq!(sel.rank, 4);
+        assert!(sel.achieved_eps <= 1e-8);
+    }
+
+    #[test]
+    fn sigma_matches_serial_svd() {
+        let mut rng = Rng::new(2);
+        let x = Mat::<f64>::rand_uniform(18, 24, &mut rng);
+        let sel = run(&x, Grid2d::new(3, 2), &RankSelectConfig { eps: 0.0, max_rank: 18, oversample: 18, ..Default::default() });
+        let svd = thin_svd(&x);
+        for (a, b) in sel.singular_values.iter().zip(svd.s.iter()).take(18) {
+            assert!((a - b).abs() < 1e-6 * (1.0 + b), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn looser_eps_gives_smaller_rank() {
+        let x = low_rank(30, 40, 8, 3);
+        let tight = run(&x, Grid2d::new(2, 2), &RankSelectConfig { eps: 1e-8, ..Default::default() });
+        let loose = run(&x, Grid2d::new(2, 2), &RankSelectConfig { eps: 0.3, ..Default::default() });
+        assert!(loose.rank <= tight.rank);
+        assert!(loose.rank >= 1);
+    }
+
+    #[test]
+    fn max_rank_caps_selection() {
+        let mut rng = Rng::new(4);
+        let x = Mat::<f64>::rand_uniform(30, 30, &mut rng); // full rank
+        let sel = run(
+            &x,
+            Grid2d::new(1, 1),
+            &RankSelectConfig { eps: 1e-12, max_rank: 5, ..Default::default() },
+        );
+        assert_eq!(sel.rank, 5);
+        assert!(sel.achieved_eps > 1e-12);
+    }
+
+    #[test]
+    fn zero_matrix_rank_one() {
+        let x = Mat::<f64>::zeros(8, 8);
+        let sel = run(&x, Grid2d::new(2, 2), &RankSelectConfig::default());
+        assert_eq!(sel.rank, 1);
+    }
+
+    #[test]
+    fn grid_invariance() {
+        let x = low_rank(24, 36, 5, 5);
+        let cfg = RankSelectConfig { eps: 1e-6, ..Default::default() };
+        let a = run(&x, Grid2d::new(1, 1), &cfg);
+        let b = run(&x, Grid2d::new(2, 3), &cfg);
+        assert_eq!(a.rank, b.rank);
+        for (x1, x2) in a.singular_values.iter().zip(b.singular_values.iter()).take(5) {
+            assert!((x1 - x2).abs() < 1e-6 * (1.0 + x1));
+        }
+    }
+}

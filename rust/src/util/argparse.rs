@@ -1,0 +1,248 @@
+//! Tiny command-line parser (the offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Every option is declared with a help string so `--help`
+//! output stays accurate; unknown options are hard errors (catching typos in
+//! experiment scripts matters more than leniency).
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative parser for one (sub)command.
+pub struct ArgSpec {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        ArgSpec { program: program.to_string(), about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default.into()) });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Declare a positional argument (for help text only; all positionals
+    /// are collected in order).
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p:<14}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let lhs = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if o.takes_value => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {lhs:<22} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse a raw argument list (not including argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name, d.clone());
+            }
+            if !o.takes_value {
+                flags.insert(o.name, false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    values.insert(opt.name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    flags.insert(opt.name, true);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Required options.
+        for o in &self.opts {
+            if o.takes_value && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(Args { values, flags, positionals })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be an integer"))
+    }
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be a number"))
+    }
+    /// Parse a comma-separated list of usize, e.g. `--dims 32,32,32,32`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.get(name)
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| format!("--{name}: bad integer '{s}'")))
+            .collect()
+    }
+    /// Parse a comma-separated list of f64.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.get(name)
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| format!("--{name}: bad number '{s}'")))
+            .collect()
+    }
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("dntt decompose", "decompose a tensor")
+            .opt("dims", "32,32,32,32", "tensor dimensions")
+            .opt("eps", "0.01", "target relative error")
+            .req("out", "output path")
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&sv(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.get("dims"), "32,32,32,32");
+        assert_eq!(a.f64("eps").unwrap(), 0.01);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = spec().parse(&sv(&["--out=o", "--eps=0.5", "--verbose"])).unwrap();
+        assert_eq!(a.f64("eps").unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&sv(&["--out", "o", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = spec().parse(&sv(&["--out", "o", "--dims", "4, 8,16"])).unwrap();
+        assert_eq!(a.usize_list("dims").unwrap(), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = spec().parse(&sv(&["--out", "o", "input.bin"])).unwrap();
+        assert_eq!(a.positionals(), &["input.bin".to_string()]);
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = spec().parse(&sv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--eps"));
+    }
+}

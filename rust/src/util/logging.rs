@@ -1,0 +1,56 @@
+//! Minimal `log`-facade backend (stderr, level from `DNTT_LOG`).
+//!
+//! The offline environment has the `log` facade but no `env_logger`, so the
+//! library ships a small implementation. Level is read once from the
+//! `DNTT_LOG` environment variable (`error|warn|info|debug|trace`,
+//! default `info`).
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5} {}] {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent). Call at the top of binaries.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("DNTT_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        let logger = Box::leak(Box::new(StderrLogger { level }));
+        if log::set_logger(logger).is_ok() {
+            log::set_max_level(LevelFilter::from(level.to_level_filter()));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging works");
+    }
+}

@@ -1,0 +1,11 @@
+//! Cross-cutting substrates: PRNG, JSON, CLI parsing, timing, logging,
+//! property-test driver. These replace crates (`rand`, `serde_json`,
+//! `clap`, `env_logger`, `proptest`) that are unreachable in the offline
+//! build environment — see DESIGN.md §4.
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod timer;

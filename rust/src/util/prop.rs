@@ -1,0 +1,83 @@
+//! Lightweight property-testing driver (offline substitute for `proptest`).
+//!
+//! Runs a property over many PRNG-generated cases; on failure it reports the
+//! case index and the seed that reproduces it, so failures are one-line
+//! reproducible: `check_with_seed(<seed>, ...)`.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` random inputs derived from `seed`.
+///
+/// `prop` receives a per-case RNG and returns `Err(msg)` to fail. Panics
+/// inside the property are *not* caught (the test harness reports them with
+/// the case banner printed beforehand via `eprintln!` on failure paths).
+pub fn check_cases(seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.split(case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case} (reproduce with seed={seed}, case={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check(seed: u64, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_cases(seed, DEFAULT_CASES, prop)
+}
+
+/// Helper: assert two f64 slices are close within `tol` (absolute+relative).
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, |rng| {
+            let x = rng.uniform();
+            if x < 0.5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

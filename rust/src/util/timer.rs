@@ -1,0 +1,248 @@
+//! Instrumented timing with the paper's cost categories.
+//!
+//! §IV-B of the paper breaks the TT runtime into compute categories
+//! (GR, MM, MAD, Norm, INIT), communication categories (AG, AR, RSC) and
+//! data-movement (I/O, reshape). Every rank accumulates a [`Breakdown`];
+//! the coordinator merges them (SPMD time = max over ranks per category)
+//! and prints the same tables the paper plots in Figs 5–7.
+
+use std::time::Instant;
+
+/// Cost category, matching the paper's legend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Cat {
+    /// GR — local Gram matrix computation (`W^T W` or `H H^T`).
+    Gram = 0,
+    /// MM — local matrix-matrix multiplications (`X H^T`, `W^T X`, updates).
+    MatMul = 1,
+    /// MAD — element-wise multiply/add/divide and projections.
+    Mad = 2,
+    /// Norm — local norm computations.
+    Norm = 3,
+    /// INIT — factor initialization.
+    Init = 4,
+    /// AG — all_gather communication.
+    AllGather = 5,
+    /// AR — all_reduce communication.
+    AllReduce = 6,
+    /// RSC — reduce_scatter communication.
+    ReduceScatter = 7,
+    /// I/O — chunk-store reads/writes.
+    Io = 8,
+    /// Reshape — distributed reshape index mapping + copies.
+    Reshape = 9,
+    /// SVD — distributed rank-selection SVD.
+    Svd = 10,
+    /// Everything else (driver logic, etc.).
+    Other = 11,
+}
+
+pub const NUM_CATS: usize = 12;
+
+pub const ALL_CATS: [Cat; NUM_CATS] = [
+    Cat::Gram,
+    Cat::MatMul,
+    Cat::Mad,
+    Cat::Norm,
+    Cat::Init,
+    Cat::AllGather,
+    Cat::AllReduce,
+    Cat::ReduceScatter,
+    Cat::Io,
+    Cat::Reshape,
+    Cat::Svd,
+    Cat::Other,
+];
+
+impl Cat {
+    /// Paper-legend short name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Gram => "GR",
+            Cat::MatMul => "MM",
+            Cat::Mad => "MAD",
+            Cat::Norm => "Norm",
+            Cat::Init => "INIT",
+            Cat::AllGather => "AG",
+            Cat::AllReduce => "AR",
+            Cat::ReduceScatter => "RSC",
+            Cat::Io => "IO",
+            Cat::Reshape => "Reshape",
+            Cat::Svd => "SVD",
+            Cat::Other => "Other",
+        }
+    }
+
+    /// True for the communication categories (AG/AR/RSC).
+    pub fn is_comm(self) -> bool {
+        matches!(self, Cat::AllGather | Cat::AllReduce | Cat::ReduceScatter)
+    }
+
+    /// True for the local-compute categories.
+    pub fn is_compute(self) -> bool {
+        matches!(self, Cat::Gram | Cat::MatMul | Cat::Mad | Cat::Norm | Cat::Init)
+    }
+}
+
+/// Per-rank accumulated costs.
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    secs: [f64; NUM_CATS],
+    calls: [u64; NUM_CATS],
+    /// Bytes moved, for communication / IO categories (used by the α-β model).
+    bytes: [u64; NUM_CATS],
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a category.
+    #[inline]
+    pub fn time<R>(&mut self, cat: Cat, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add_secs(cat, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    #[inline]
+    pub fn add_secs(&mut self, cat: Cat, secs: f64) {
+        self.secs[cat as usize] += secs;
+        self.calls[cat as usize] += 1;
+    }
+
+    #[inline]
+    pub fn add_bytes(&mut self, cat: Cat, bytes: u64) {
+        self.bytes[cat as usize] += bytes;
+    }
+
+    pub fn secs(&self, cat: Cat) -> f64 {
+        self.secs[cat as usize]
+    }
+    pub fn calls(&self, cat: Cat) -> u64 {
+        self.calls[cat as usize]
+    }
+    pub fn bytes(&self, cat: Cat) -> u64 {
+        self.bytes[cat as usize]
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+    pub fn compute_secs(&self) -> f64 {
+        ALL_CATS.iter().filter(|c| c.is_compute()).map(|&c| self.secs(c)).sum()
+    }
+    pub fn comm_secs(&self) -> f64 {
+        ALL_CATS.iter().filter(|c| c.is_comm()).map(|&c| self.secs(c)).sum()
+    }
+
+    /// SPMD merge: per-category max over ranks (the critical path).
+    pub fn merge_max(&mut self, other: &Breakdown) {
+        for i in 0..NUM_CATS {
+            self.secs[i] = self.secs[i].max(other.secs[i]);
+            self.calls[i] = self.calls[i].max(other.calls[i]);
+            self.bytes[i] = self.bytes[i].max(other.bytes[i]);
+        }
+    }
+
+    /// Aggregate merge: per-category sum (total work).
+    pub fn merge_sum(&mut self, other: &Breakdown) {
+        for i in 0..NUM_CATS {
+            self.secs[i] += other.secs[i];
+            self.calls[i] += other.calls[i];
+            self.bytes[i] += other.bytes[i];
+        }
+    }
+
+    /// Render a paper-style table (category, time, calls, bytes).
+    pub fn table(&self) -> String {
+        let mut s = String::from("category      time(s)      calls      bytes\n");
+        for &c in &ALL_CATS {
+            if self.calls(c) == 0 && self.secs(c) == 0.0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "{:<10} {:>10.4} {:>10} {:>12}\n",
+                c.name(),
+                self.secs(c),
+                self.calls(c),
+                self.bytes(c)
+            ));
+        }
+        s.push_str(&format!(
+            "{:<10} {:>10.4}   (compute {:.4}, comm {:.4})\n",
+            "TOTAL",
+            self.total_secs(),
+            self.compute_secs(),
+            self.comm_secs()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates() {
+        let mut b = Breakdown::new();
+        let x = b.time(Cat::Gram, || 21 * 2);
+        assert_eq!(x, 42);
+        assert_eq!(b.calls(Cat::Gram), 1);
+        assert!(b.secs(Cat::Gram) >= 0.0);
+    }
+
+    #[test]
+    fn merge_max_takes_critical_path() {
+        let mut a = Breakdown::new();
+        a.add_secs(Cat::MatMul, 2.0);
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::MatMul, 3.0);
+        b.add_secs(Cat::AllGather, 1.0);
+        a.merge_max(&b);
+        assert_eq!(a.secs(Cat::MatMul), 3.0);
+        assert_eq!(a.secs(Cat::AllGather), 1.0);
+    }
+
+    #[test]
+    fn merge_sum_accumulates() {
+        let mut a = Breakdown::new();
+        a.add_secs(Cat::Io, 1.0);
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::Io, 2.5);
+        a.merge_sum(&b);
+        assert_eq!(a.secs(Cat::Io), 3.5);
+    }
+
+    #[test]
+    fn compute_comm_split() {
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::Gram, 1.0);
+        b.add_secs(Cat::AllReduce, 2.0);
+        b.add_secs(Cat::Io, 4.0);
+        assert_eq!(b.compute_secs(), 1.0);
+        assert_eq!(b.comm_secs(), 2.0);
+        assert_eq!(b.total_secs(), 7.0);
+    }
+
+    #[test]
+    fn table_renders_nonzero_rows() {
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::Gram, 1.0);
+        let t = b.table();
+        assert!(t.contains("GR"));
+        assert!(!t.contains("RSC"));
+    }
+
+    #[test]
+    fn bytes_tracked() {
+        let mut b = Breakdown::new();
+        b.add_bytes(Cat::AllGather, 1024);
+        b.add_bytes(Cat::AllGather, 1024);
+        assert_eq!(b.bytes(Cat::AllGather), 2048);
+    }
+}

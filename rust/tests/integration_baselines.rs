@@ -1,0 +1,74 @@
+//! Integration: baselines vs nTT — the qualitative relationships the
+//! paper's Fig 2 depends on must hold on this implementation.
+
+use dntt::baselines::{ntucker_mu, tt_svd, tucker_hooi_fixed};
+use dntt::nmf::NmfConfig;
+use dntt::tensor::DenseTensor;
+use dntt::ttrain::{ntt_serial, SyntheticTt, TtConfig};
+use dntt::util::rng::Rng;
+
+fn ntt_cfg(iters: usize) -> TtConfig {
+    TtConfig {
+        eps: 1e-6,
+        nmf: NmfConfig { max_iters: iters, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// On a TT-structured tensor, TT formats store far fewer parameters than
+/// Tucker at matched (small) error — the core Fig-2 relationship.
+#[test]
+fn tt_compresses_better_than_tucker_on_tt_data() {
+    let syn = SyntheticTt::new(vec![10, 10, 10, 10], vec![3, 3, 3], 1);
+    let t = syn.dense();
+    let tt = tt_svd(&t, 1e-8).unwrap();
+    assert!(tt.rel_error(&t) < 1e-6);
+    // Tucker needs multilinear ranks >= TT ranks; even at (3,3,3,3) its core
+    // adds 3^4 params. Compare at ranks that give comparable error.
+    let tucker = tucker_hooi_fixed(&t, &[3, 9, 9, 3], 2).unwrap();
+    let terr = t.rel_error(&tucker.reconstruct());
+    assert!(terr < 0.05, "tucker err {terr}");
+    assert!(
+        tt.compression_ratio() > tucker.compression_ratio(),
+        "TT {} vs Tucker {}",
+        tt.compression_ratio(),
+        tucker.compression_ratio()
+    );
+}
+
+/// nTT tracks TT closely in compression but keeps non-negativity; at equal
+/// eps the SVD-TT error is a lower bound (Eckart-Young per stage).
+#[test]
+fn ntt_error_lower_bounded_by_tt() {
+    let syn = SyntheticTt::new(vec![8, 8, 8], vec![3, 3], 2);
+    let t = syn.dense();
+    let tt = tt_svd(&t, 0.05).unwrap();
+    let ntt = ntt_serial(&t, &TtConfig { eps: 0.05, ..ntt_cfg(200) }).unwrap();
+    assert!(ntt.tt.rel_error(&t) + 1e-12 >= tt.rel_error(&t));
+    assert!(ntt.tt.is_nonneg());
+}
+
+/// Non-negative Tucker is dominated by nTT on TT-structured data, mirroring
+/// Fig 2's nTucker-vs-nTT gap.
+#[test]
+fn ntucker_worse_compression_than_ntt() {
+    let syn = SyntheticTt::new(vec![8, 8, 8, 8], vec![2, 2, 2], 3);
+    let t = syn.dense();
+    let ntt = ntt_serial(&t, &ntt_cfg(150)).unwrap();
+    let ntk = ntucker_mu(&t, &[2, 4, 4, 2], 150, 9).unwrap();
+    let (e1, e2) = (ntt.tt.rel_error(&t), t.rel_error(&ntk.reconstruct()));
+    // At comparable error, nTT stores fewer parameters.
+    if e2 < 2.0 * e1.max(0.01) {
+        assert!(ntt.tt.compression_ratio() > ntk.compression_ratio());
+    }
+}
+
+/// A full-rank random tensor defeats all compressors at tight eps — sanity
+/// that nothing "compresses" noise for free.
+#[test]
+fn random_tensor_incompressible_at_tight_eps() {
+    let mut rng = Rng::new(4);
+    let t = DenseTensor::<f64>::rand_uniform(&[6, 6, 6], &mut rng);
+    let tt = tt_svd(&t, 1e-9).unwrap();
+    assert!(tt.compression_ratio() <= 1.0 + 1e-9);
+}

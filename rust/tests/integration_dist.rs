@@ -1,0 +1,123 @@
+//! Integration: the distributed substrate as a whole — collectives against
+//! serial references, distReshape against the dense reshape semantics,
+//! disk-spilled stores, and the cost model's qualitative behaviour.
+
+use dntt::dist::chunkstore::{dist_reshape, Layout, SharedStore, SpillMode};
+use dntt::dist::{BlockDim, Comm, CostModel, Grid2d, ProcGrid};
+use dntt::tensor::DenseTensor;
+use dntt::ttrain::driver::extract_block;
+use dntt::util::rng::Rng;
+use dntt::util::timer::Cat;
+
+/// distReshape from a 4-D TensorGrid into the stage matrix must equal the
+/// serial `reshape` (which in row-major is the identity on linear order).
+#[test]
+fn dist_reshape_matches_serial_4d() {
+    let mut rng = Rng::new(10);
+    let dims = vec![4, 6, 2, 3];
+    let t = DenseTensor::<f64>::rand_uniform(&dims, &mut rng);
+    let grid = ProcGrid::new(vec![2, 2, 1, 1]).unwrap();
+    let g2 = grid.to_2d(); // 2x2
+    let (m, n) = (4, 36);
+    let serial = t.clone().reshape(&[m, n]).unwrap();
+
+    let t2 = t.clone();
+    let grid2 = grid.clone();
+    let store = SharedStore::new(SpillMode::Memory);
+    let blocks = Comm::run(4, move |mut world| {
+        let my = extract_block(&t2, &grid2, world.rank());
+        let layout =
+            Layout::TensorGrid { dims: vec![4, 6, 2, 3], grid: grid2.dims().to_vec() };
+        dist_reshape(&mut world, &store, "x", &layout, my, m, n, g2).unwrap()
+    });
+    let rows = BlockDim::new(m, 2);
+    let cols = BlockDim::new(n, 2);
+    for (rank, blk) in blocks.iter().enumerate() {
+        let (i, j) = g2.coords(rank);
+        for li in 0..blk.rows() {
+            for lj in 0..blk.cols() {
+                let want = serial.as_slice()
+                    [(rows.start_of(i) + li) * n + cols.start_of(j) + lj];
+                assert_eq!(blk[(li, lj)], want);
+            }
+        }
+    }
+}
+
+/// The same reshape through a disk-backed store gives identical data and
+/// records I/O bytes.
+#[test]
+fn dist_reshape_disk_spill_identical() {
+    let mut rng = Rng::new(11);
+    let dims = vec![4, 4, 4];
+    let t = DenseTensor::<f64>::rand_uniform(&dims, &mut rng);
+    let grid = ProcGrid::new(vec![2, 1, 2]).unwrap();
+    let g2 = grid.to_2d();
+    let dir = std::env::temp_dir().join(format!("dntt_it_spill_{}", std::process::id()));
+
+    let run = |spill: SpillMode, t: DenseTensor<f64>, grid: ProcGrid| {
+        let store = SharedStore::new(spill);
+        Comm::run(4, move |mut world| {
+            let my = extract_block(&t, &grid, world.rank());
+            let layout =
+                Layout::TensorGrid { dims: t.dims().to_vec(), grid: grid.dims().to_vec() };
+            let out =
+                dist_reshape(&mut world, &store, "x", &layout, my, 4, 16, g2).unwrap();
+            (out, world.breakdown.bytes(Cat::Io))
+        })
+    };
+    let mem = run(SpillMode::Memory, t.clone(), grid.clone());
+    let disk = run(SpillMode::Disk(dir.clone()), t, grid);
+    for ((a, _), (b, io_bytes)) in mem.iter().zip(disk.iter()) {
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert!(*io_bytes > 0, "disk mode must record IO bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Collectives compose: a row/col split of a 2-D grid partitions the world,
+/// and world all_reduce == reduce over rows of reduced cols.
+#[test]
+fn grid_collectives_compose() {
+    let grid = Grid2d::new(2, 3);
+    let outs = Comm::run(6, move |mut world| {
+        let v = (world.rank() + 1) as f64;
+        let (mut row, mut col) = grid.make_subcomms(&mut world);
+        let world_sum = world.all_reduce_scalar(v);
+        let row_sum = row.all_reduce_scalar(v);
+        let cross = col.all_reduce_scalar(row_sum);
+        (world_sum, cross)
+    });
+    for (ws, cross) in outs {
+        assert_eq!(ws, 21.0);
+        assert_eq!(cross, 21.0, "col-reduce of row-reduces must equal world reduce");
+    }
+}
+
+/// Cost model: strong-scaling comm time must grow with p at fixed volume,
+/// and compute time is preserved.
+#[test]
+fn cost_model_qualitative() {
+    let m = CostModel::default();
+    let mut b = dntt::util::timer::Breakdown::new();
+    b.add_secs(Cat::MatMul, 1.0);
+    b.add_secs(Cat::AllReduce, 0.001);
+    b.add_bytes(Cat::AllReduce, 64 << 20);
+    let t16 = m.model_breakdown(&b, 16);
+    let t256 = m.model_breakdown(&b, 256);
+    assert_eq!(t16.secs(Cat::MatMul), 1.0);
+    assert!(t256.comm_secs() > t16.comm_secs());
+}
+
+/// Thread-rank worlds are reusable and deterministic across runs.
+#[test]
+fn comm_world_deterministic() {
+    for _ in 0..3 {
+        let sums = Comm::run(8, |mut c| {
+            let mut v = vec![c.rank() as f64; 4];
+            c.all_reduce_sum(&mut v);
+            v[0]
+        });
+        assert!(sums.iter().all(|&s| s == 28.0));
+    }
+}

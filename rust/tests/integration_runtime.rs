@@ -1,0 +1,141 @@
+//! Integration: PJRT backend (AOT JAX/Pallas artifacts) vs native backend.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`;
+//! tests that need artifacts are skipped (with a note) when missing so
+//! `cargo test` stays meaningful before the first artifact build.
+
+use dntt::linalg::Mat;
+use dntt::runtime::backend::ComputeBackend;
+use dntt::runtime::native::NativeBackend;
+use dntt::runtime::pjrt::{pjrt_nmf_iter, PjrtBackend};
+use dntt::util::rng::Rng;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("NOTE: artifacts/manifest.json missing — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn close(a: &Mat<f64>, b: &Mat<f64>, tol: f64) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        assert!((x - y).abs() <= tol * scale, "{x} vs {y}");
+    }
+}
+
+/// The f32 artifacts vs f64 native tolerance.
+const TOL: f64 = 2e-4;
+
+#[test]
+fn pjrt_matches_native_on_manifest_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::from_dir(dir).expect("pjrt engine");
+    let native = NativeBackend;
+    let mut rng = Rng::new(1);
+
+    // Shapes present in the default preset: gram/bcd/mu 6x2, xht/wtx 4x6x2.
+    let f = Mat::<f64>::rand_uniform(6, 2, &mut rng);
+    close(&pjrt.gram(&f), &native.gram(&f), TOL);
+
+    let x = Mat::<f64>::rand_uniform(4, 6, &mut rng);
+    let ht = Mat::<f64>::rand_uniform(6, 2, &mut rng);
+    close(&pjrt.xht(&x, &ht), &native.xht(&x, &ht), TOL);
+
+    let w = Mat::<f64>::rand_uniform(4, 2, &mut rng);
+    close(&pjrt.wtx(&x, &w), &native.wtx(&x, &w), TOL);
+
+    let g = native.gram(&ht);
+    let p = Mat::<f64>::rand_uniform(6, 2, &mut rng);
+    let lip = g.fro_norm();
+    close(&pjrt.bcd_update(&f, &g, &p, lip), &native.bcd_update(&f, &g, &p, lip), TOL);
+    close(&pjrt.mu_update(&f, &g, &p), &native.mu_update(&f, &g, &p), TOL);
+
+    let hits = pjrt.engine().stats.hits.load(Ordering::Relaxed);
+    assert!(hits >= 5, "expected all ops on the XLA path, hits={hits}");
+}
+
+#[test]
+fn pjrt_falls_back_on_unknown_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::from_dir(dir).expect("pjrt engine");
+    let mut rng = Rng::new(2);
+    // 7x3 is deliberately not in any preset.
+    let f = Mat::<f64>::rand_uniform(7, 3, &mut rng);
+    let out = pjrt.gram(&f);
+    close(&out, &NativeBackend.gram(&f), 1e-12);
+    assert!(pjrt.engine().stats.misses.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn fused_nmf_iter_matches_stepwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::from_dir(dir).expect("pjrt engine");
+    let native = NativeBackend;
+    let mut rng = Rng::new(3);
+    // Preset shape: nmf_iter_bcd_8x12x2.
+    let x = Mat::<f64>::rand_uniform(8, 12, &mut rng);
+    let wm = Mat::<f64>::rand_uniform(8, 2, &mut rng);
+    let htm = Mat::<f64>::rand_uniform(12, 2, &mut rng);
+
+    let (w1, ht1, cross, quad) = pjrt_nmf_iter(&pjrt, &x, &wm, &htm).expect("artifact present");
+
+    // Native step-by-step replication of model.nmf_iter_bcd.
+    let hht = native.gram(&htm);
+    let xht = native.xht(&x, &htm);
+    let w2 = native.bcd_update(&wm, &hht, &xht, hht.fro_norm());
+    let wtw = native.gram(&w2);
+    let xtw = native.wtx(&x, &w2);
+    let ht2 = native.bcd_update(&htm, &wtw, &xtw, wtw.fro_norm());
+    close(&w1, &w2, TOL);
+    close(&ht1, &ht2, TOL);
+
+    let hht2 = native.gram(&ht2);
+    let cross2: f64 =
+        xtw.as_slice().iter().zip(ht2.as_slice()).map(|(a, b)| a * b).sum();
+    let quad2: f64 =
+        wtw.as_slice().iter().zip(hht2.as_slice()).map(|(a, b)| a * b).sum();
+    assert!((cross - cross2).abs() < 1e-2 * (1.0 + cross2.abs()), "{cross} vs {cross2}");
+    assert!((quad - quad2).abs() < 1e-2 * (1.0 + quad2.abs()), "{quad} vs {quad2}");
+}
+
+#[test]
+fn dist_nmf_runs_on_pjrt_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    use dntt::dist::{Comm, Grid2d};
+    use dntt::nmf::{dist_nmf, NmfConfig};
+    use std::sync::Arc;
+
+    // 2x2 grid over the quickstart stage-0 shapes (16^4 tensor): X is
+    // 16x4096, blocks 8x2048. The backend falls back natively wherever a
+    // shape is missing, so this asserts correctness end-to-end and that at
+    // least some ops took the XLA path.
+    let engine = dntt::runtime::PjrtEngine::start(dir).expect("engine");
+    let x = {
+        let mut rng = Rng::new(4);
+        let a = Mat::<f64>::rand_uniform(16, 4, &mut rng);
+        let b = Mat::<f64>::rand_uniform(4, 4096, &mut rng);
+        dntt::linalg::gemm::matmul(&a, &b)
+    };
+    let grid = Grid2d::new(2, 2);
+    let x2 = x.clone();
+    let eng = Arc::clone(&engine);
+    let outs = Comm::run(4, move |mut world| {
+        let (i, j) = grid.coords(world.rank());
+        let xb = Mat::from_fn(8, 2048, |a, b| x2[(i * 8 + a, j * 2048 + b)]);
+        let (mut row, mut col) = grid.make_subcomms(&mut world);
+        let backend = PjrtBackend::new(Arc::clone(&eng));
+        let cfg = NmfConfig { rank: 4, max_iters: 30, ..Default::default() };
+        dist_nmf(&xb, 16, 4096, grid, &mut world, &mut row, &mut col, &backend, &cfg).unwrap()
+    });
+    let rel = outs[0].stats.rel_err;
+    assert!(rel < 0.1, "pjrt-backed dist NMF rel_err={rel}");
+    let hits = engine.stats.hits.load(Ordering::Relaxed);
+    assert!(hits > 0, "expected XLA hits in dist NMF, got 0");
+}

