@@ -1,0 +1,624 @@
+//! The chunked array store and the distributed global reshape (Alg 1).
+//!
+//! Between TT sweep stages the remainder array must be *globally*
+//! redistributed: each rank owns a chunk under the current [`Layout`] and
+//! needs its block of the next stage matrix under the 2-D `MatGrid`
+//! distribution. The paper does this through a Zarr chunk store shared by
+//! all MPI ranks; here [`SharedStore`] plays that role for thread ranks,
+//! with an optional out-of-core [`SpillMode::Disk`] backend whose traffic
+//! is accounted under the `IO` cost category.
+//!
+//! # Layouts
+//!
+//! A [`Layout`] maps the store's chunks onto one *logical row-major
+//! array*; `Layout::locate` sends a global linear index to
+//! `(chunk, offset within chunk)`:
+//!
+//! * [`Layout::TensorGrid`] — the input tensor blocked over the d-dim
+//!   [`crate::dist::ProcGrid`]; chunk `r` is world rank `r`'s block,
+//!   itself row-major (what [`crate::ttrain::driver::extract_block`]
+//!   produces).
+//! * [`Layout::MatGrid`] — an `m × n` matrix 2-D-blocked over a
+//!   `pr × pc` [`crate::dist::Grid2d`].
+//! * [`Layout::HtGrid`] — the NMF output `H: r × n` held transposed:
+//!   rank `(i, j)` stores the `nh × r` row-major block `(Hʲ)ⁱᵀ` of
+//!   `nmf::dist`. The logical array is `H` itself in row-major order,
+//!   which *is* the next remainder tensor of Alg 2 — so the next stage's
+//!   [`dist_reshape`] can consume `H` without any pre-pass.
+//!
+//! # Collective protocol
+//!
+//! [`dist_reshape`] is the one-call version of Alg 1: every rank
+//! publishes its chunk, barriers, assembles its target block through a
+//! [`StoreView`], barriers again, and rank 0 drops the array from the
+//! store. `publish`/`view`/`remove` are also usable directly (the driver
+//! does so for the final core gather).
+
+use crate::dist::comm::Comm;
+use crate::dist::topology::{BlockDim, Grid2d};
+use crate::error::{DnttError, Result};
+use crate::linalg::Mat;
+use crate::util::timer::Cat;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Where published chunks live.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpillMode {
+    /// Chunks stay in memory (shared by reference between ranks).
+    Memory,
+    /// Chunks are written to `<dir>/<name>.<chunk>.chunk` as little-endian
+    /// `f64` and dropped from memory — the out-of-core path. Reads are
+    /// counted by [`StoreView::disk_bytes_read`].
+    Disk(PathBuf),
+}
+
+/// How a named array's chunks tile its logical row-major order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// A dense tensor of shape `dims` blocked over the processor grid
+    /// `grid` (same length, row-major rank order, per-mode [`BlockDim`]
+    /// partition). Chunk data is the block in row-major order.
+    TensorGrid { dims: Vec<usize>, grid: Vec<usize> },
+    /// An `m × n` row-major matrix 2-D-blocked over a `pr × pc` grid;
+    /// chunk `i·pc + j` is block `(i, j)` in row-major order.
+    MatGrid { m: usize, n: usize, pr: usize, pc: usize },
+    /// The transposed-H layout: logical array `H: r × n` (row-major);
+    /// chunk `i·pc + j` holds columns
+    /// `[cols.start_of(j) + sub.start_of(i), …)` of `H` — where
+    /// `cols = BlockDim(n, pc)` and `sub = BlockDim(cols.size_of(j), pr)`
+    /// — stored **transposed** as an `nh × r` row-major block.
+    HtGrid { r: usize, n: usize, pr: usize, pc: usize },
+}
+
+impl Layout {
+    /// Total number of elements in the logical array.
+    pub fn total_len(&self) -> usize {
+        match self {
+            Layout::TensorGrid { dims, .. } => dims.iter().product(),
+            Layout::MatGrid { m, n, .. } => m * n,
+            Layout::HtGrid { r, n, .. } => r * n,
+        }
+    }
+
+    /// Number of chunks the layout is split into.
+    pub fn num_chunks(&self) -> usize {
+        match self {
+            Layout::TensorGrid { grid, .. } => grid.iter().product(),
+            Layout::MatGrid { pr, pc, .. } | Layout::HtGrid { pr, pc, .. } => pr * pc,
+        }
+    }
+
+    /// Number of elements in chunk `c`.
+    pub fn chunk_len(&self, c: usize) -> usize {
+        match self {
+            Layout::TensorGrid { dims, grid } => {
+                let mut rem = c;
+                let mut coords = vec![0; grid.len()];
+                for k in (0..grid.len()).rev() {
+                    coords[k] = rem % grid[k];
+                    rem /= grid[k];
+                }
+                dims.iter()
+                    .zip(grid)
+                    .zip(&coords)
+                    .map(|((&n, &p), &ci)| BlockDim::new(n, p).size_of(ci))
+                    .product()
+            }
+            Layout::MatGrid { m, n, pr, pc } => {
+                let (i, j) = (c / pc, c % pc);
+                BlockDim::new(*m, *pr).size_of(i) * BlockDim::new(*n, *pc).size_of(j)
+            }
+            Layout::HtGrid { r, n, pr, pc } => {
+                let (i, j) = (c / pc, c % pc);
+                let cols = BlockDim::new(*n, *pc);
+                BlockDim::new(cols.size_of(j), *pr).size_of(i) * r
+            }
+        }
+    }
+
+    /// Map a global linear index of the logical row-major array to
+    /// `(chunk, offset within chunk)`.
+    pub fn locate(&self, lin: usize) -> (usize, usize) {
+        let (chunk, offset, _) = self.locate_run(lin);
+        (chunk, offset)
+    }
+
+    /// Like [`Layout::locate`], but also returns the number of consecutive
+    /// linear indices starting at `lin` that map to *consecutive offsets in
+    /// the same chunk* — the unit of contiguous copying. Runs follow the
+    /// fastest axis: the last tensor mode within its block (`TensorGrid`),
+    /// the columns within a column block (`MatGrid`); `HtGrid` stores `H`
+    /// transposed so its runs are single elements.
+    pub fn locate_run(&self, lin: usize) -> (usize, usize, usize) {
+        debug_assert!(lin < self.total_len());
+        match self {
+            Layout::TensorGrid { dims, grid } => {
+                let d = dims.len();
+                let mut gidx = vec![0; d];
+                let mut rem = lin;
+                for k in (0..d).rev() {
+                    gidx[k] = rem % dims[k];
+                    rem /= dims[k];
+                }
+                let mut chunk = 0;
+                let mut offset = 0;
+                let mut run = 1;
+                for k in 0..d {
+                    let bd = BlockDim::new(dims[k], grid[k]);
+                    let c = bd.owner_of(gidx[k]);
+                    chunk = chunk * grid[k] + c;
+                    offset = offset * bd.size_of(c) + (gidx[k] - bd.start_of(c));
+                    if k == d - 1 {
+                        // Contiguous along the last mode until its block ends.
+                        run = bd.end_of(c) - gidx[k];
+                    }
+                }
+                (chunk, offset, run)
+            }
+            Layout::MatGrid { n, m, pr, pc } => {
+                let (gi, gj) = (lin / n, lin % n);
+                let rows = BlockDim::new(*m, *pr);
+                let cols = BlockDim::new(*n, *pc);
+                let (i, j) = (rows.owner_of(gi), cols.owner_of(gj));
+                let offset = (gi - rows.start_of(i)) * cols.size_of(j) + (gj - cols.start_of(j));
+                (i * pc + j, offset, cols.end_of(j) - gj)
+            }
+            Layout::HtGrid { r, n, pr, pc } => {
+                let (row, gcol) = (lin / n, lin % n);
+                let cols = BlockDim::new(*n, *pc);
+                let j = cols.owner_of(gcol);
+                let within = gcol - cols.start_of(j);
+                let sub = BlockDim::new(cols.size_of(j), *pr);
+                let i = sub.owner_of(within);
+                let local_col = within - sub.start_of(i);
+                // Chunk data is nh × r row-major (H transposed): consecutive
+                // columns of H are r elements apart, so runs are length 1.
+                (i * pc + j, local_col * r + row, 1)
+            }
+        }
+    }
+}
+
+/// One published chunk.
+enum ChunkData {
+    Mem(Arc<Vec<f64>>),
+    Disk(PathBuf),
+}
+
+struct Entry {
+    layout: Layout,
+    chunks: Vec<Option<ChunkData>>,
+}
+
+/// A named-array store shared by all ranks of a world.
+///
+/// [`SharedStore::new`] returns an `Arc` handle because each rank closure
+/// of [`Comm::run`] captures its own clone of the handle while all ranks
+/// must address the same store. Concurrent `publish` calls to distinct
+/// chunks are safe; the publish → barrier → [`SharedStore::view`]
+/// discipline (what [`dist_reshape`] does internally) makes the data race
+/// free.
+pub struct SharedStore {
+    spill: SpillMode,
+    entries: Mutex<HashMap<String, Entry>>,
+}
+
+impl SharedStore {
+    /// Create a store (see [`SpillMode`] for where chunks live).
+    pub fn new(spill: SpillMode) -> Arc<SharedStore> {
+        Arc::new(SharedStore { spill, entries: Mutex::new(HashMap::new()) })
+    }
+
+    /// The store's spill configuration.
+    pub fn spill_mode(&self) -> &SpillMode {
+        &self.spill
+    }
+
+    /// Publish chunk `chunk` of array `name` under `layout`.
+    ///
+    /// The first publisher fixes the layout; later publishers must pass an
+    /// equal layout. `data.len()` must match `layout.chunk_len(chunk)`.
+    /// In disk mode the data is written out and dropped from memory.
+    /// `name` must be filesystem-safe (the crate uses names like
+    /// `"tt.stage0"`).
+    pub fn publish(&self, name: &str, layout: &Layout, chunk: usize, data: Vec<f64>) -> Result<()> {
+        if chunk >= layout.num_chunks() {
+            return Err(DnttError::shape(format!(
+                "publish {name}: chunk {chunk} out of range for {} chunks",
+                layout.num_chunks()
+            )));
+        }
+        let want = layout.chunk_len(chunk);
+        if data.len() != want {
+            return Err(DnttError::shape(format!(
+                "publish {name}: chunk {chunk} has {} elements, layout expects {want}",
+                data.len()
+            )));
+        }
+        let layout_clash = || {
+            DnttError::shape(format!("publish {name}: layout disagrees with the first publisher"))
+        };
+        // Validate layout agreement before touching the filesystem so a
+        // clashing publish cannot leak an orphan spill file.
+        {
+            let entries = self.entries.lock().unwrap();
+            if let Some(entry) = entries.get(name) {
+                if entry.layout != *layout {
+                    return Err(layout_clash());
+                }
+            }
+        }
+        let stored = match &self.spill {
+            SpillMode::Memory => ChunkData::Mem(Arc::new(data)),
+            SpillMode::Disk(dir) => {
+                std::fs::create_dir_all(dir)?;
+                let path = dir.join(format!("{name}.{chunk}.chunk"));
+                let mut bytes = Vec::with_capacity(data.len() * 8);
+                for x in &data {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+                std::fs::write(&path, &bytes)?;
+                ChunkData::Disk(path)
+            }
+        };
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            layout: layout.clone(),
+            chunks: (0..layout.num_chunks()).map(|_| None).collect(),
+        });
+        if entry.layout != *layout {
+            // Lost a race with a conflicting first publisher: clean up.
+            if let ChunkData::Disk(path) = &stored {
+                let _ = std::fs::remove_file(path);
+            }
+            return Err(layout_clash());
+        }
+        entry.chunks[chunk] = Some(stored);
+        Ok(())
+    }
+
+    /// Open a read view of array `name`. Errors if the array is unknown or
+    /// not all chunks have been published yet (callers barrier between the
+    /// last publish and the first view).
+    pub fn view(&self, name: &str) -> Result<StoreView> {
+        let entries = self.entries.lock().unwrap();
+        let entry = entries
+            .get(name)
+            .ok_or_else(|| DnttError::Comm(format!("store view: no array named '{name}'")))?;
+        let mut slots = Vec::with_capacity(entry.chunks.len());
+        for (c, chunk) in entry.chunks.iter().enumerate() {
+            match chunk {
+                Some(ChunkData::Mem(data)) => slots.push(ViewSlot::Mem(Arc::clone(data))),
+                Some(ChunkData::Disk(path)) => {
+                    slots.push(ViewSlot::Disk { path: path.clone(), cache: RefCell::new(None) })
+                }
+                None => {
+                    return Err(DnttError::Comm(format!(
+                        "store view: array '{name}' is missing chunk {c} (publish not complete?)"
+                    )))
+                }
+            }
+        }
+        Ok(StoreView { layout: entry.layout.clone(), slots, bytes_read: Cell::new(0) })
+    }
+
+    /// Drop array `name` (and delete its spill files). Missing names are
+    /// ignored. Live [`StoreView`]s of a memory-mode array stay valid;
+    /// disk-mode views must be dropped first (ranks barrier before the
+    /// owning rank removes).
+    pub fn remove(&self, name: &str) {
+        let entry = self.entries.lock().unwrap().remove(name);
+        if let Some(entry) = entry {
+            for chunk in entry.chunks.into_iter().flatten() {
+                if let ChunkData::Disk(path) = chunk {
+                    let _ = std::fs::remove_file(path);
+                }
+            }
+        }
+    }
+}
+
+enum ViewSlot {
+    Mem(Arc<Vec<f64>>),
+    Disk { path: PathBuf, cache: RefCell<Option<Vec<f64>>> },
+}
+
+/// A read snapshot of one stored array.
+///
+/// Disk-mode chunks are loaded lazily (whole chunks at a time) and cached
+/// for the life of the view; loaded bytes accumulate in
+/// [`StoreView::disk_bytes_read`]. A view is a single-rank object — it is
+/// deliberately `!Sync` (interior caches), matching its use inside one
+/// rank closure.
+pub struct StoreView {
+    layout: Layout,
+    slots: Vec<ViewSlot>,
+    bytes_read: Cell<u64>,
+}
+
+impl StoreView {
+    /// Layout the array was published under.
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Total logical element count.
+    pub fn len(&self) -> usize {
+        self.layout.total_len()
+    }
+
+    /// True when the logical array has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes loaded from spill files so far (0 in memory mode).
+    pub fn disk_bytes_read(&self) -> u64 {
+        self.bytes_read.get()
+    }
+
+    /// Element at global linear index `lin` of the logical row-major
+    /// array.
+    ///
+    /// # Panics
+    /// Panics if a spill file disappeared or is malformed (the spill
+    /// directory must outlive every view of it).
+    pub fn get(&self, lin: usize) -> f64 {
+        let (chunk, offset) = self.layout.locate(lin);
+        self.with_chunk(chunk, |data| data[offset])
+    }
+
+    /// Copy `dst.len()` consecutive logical elements starting at `lin`
+    /// into `dst`, chunk-contiguous run by run (the hot path of
+    /// [`dist_reshape`] — constant index arithmetic per run, not per
+    /// element).
+    pub fn read_into(&self, lin: usize, dst: &mut [f64]) {
+        let mut done = 0;
+        while done < dst.len() {
+            let (chunk, offset, run) = self.layout.locate_run(lin + done);
+            let take = run.min(dst.len() - done);
+            self.with_chunk(chunk, |data| {
+                dst[done..done + take].copy_from_slice(&data[offset..offset + take]);
+            });
+            done += take;
+        }
+    }
+
+    /// Assemble the whole logical array in row-major order. Intended for
+    /// final gathers and tests; large arrays should be consumed blockwise
+    /// via [`dist_reshape`] instead.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        self.read_into(0, &mut out);
+        out
+    }
+
+    fn with_chunk<R>(&self, chunk: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+        match &self.slots[chunk] {
+            ViewSlot::Mem(data) => f(data),
+            ViewSlot::Disk { path, cache } => {
+                let mut cache = cache.borrow_mut();
+                if cache.is_none() {
+                    let bytes = std::fs::read(path).unwrap_or_else(|e| {
+                        panic!("chunk store: failed to read spill file {path:?}: {e}")
+                    });
+                    assert!(
+                        bytes.len() % 8 == 0,
+                        "chunk store: spill file {path:?} is not a whole number of f64s"
+                    );
+                    self.bytes_read.set(self.bytes_read.get() + bytes.len() as u64);
+                    let data = bytes
+                        .chunks_exact(8)
+                        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+                        .collect();
+                    *cache = Some(data);
+                }
+                f(cache.as_ref().unwrap())
+            }
+        }
+    }
+}
+
+/// Alg 1: globally reshape/redistribute the array held as `my_data` under
+/// `layout` into this rank's block of the `m × n` stage matrix on `grid`.
+///
+/// Collective over `world` (`grid.size() == world.size()`); `my_data` is
+/// the chunk for `world.rank()`. Because every layout's logical order is
+/// row-major and a row-major reshape is the identity on linear order, the
+/// returned block `(i, j) = grid.coords(world.rank())` satisfies
+/// `block[(li, lj)] == A[rows.start_of(i) + li, cols.start_of(j) + lj]`
+/// for the serial reshape `A` of the logical array (`rows`/`cols` the
+/// [`BlockDim`]s of `m`/`n` over `pr`/`pc`) — asserted against the dense
+/// reshape in `tests/integration_dist.rs`.
+///
+/// Cost accounting on `world.breakdown`: publish and spill reads under
+/// `IO` (bytes included), index mapping + block assembly under `Reshape`.
+/// The store entry `name` is removed before returning — rank 0 drops it
+/// between two trailing barriers, so the same name may be safely reused
+/// by the next collective call.
+pub fn dist_reshape(
+    world: &mut Comm,
+    store: &SharedStore,
+    name: &str,
+    layout: &Layout,
+    my_data: Vec<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+) -> Result<Mat<f64>> {
+    if layout.total_len() != m * n {
+        return Err(DnttError::shape(format!(
+            "dist_reshape {name}: layout has {} elements, target is {m}x{n}",
+            layout.total_len()
+        )));
+    }
+    if grid.size() != world.size() {
+        return Err(DnttError::Comm(format!(
+            "dist_reshape {name}: grid {}x{} vs world of {}",
+            grid.pr,
+            grid.pc,
+            world.size()
+        )));
+    }
+    if layout.num_chunks() != world.size() {
+        return Err(DnttError::Comm(format!(
+            "dist_reshape {name}: layout has {} chunks for {} ranks",
+            layout.num_chunks(),
+            world.size()
+        )));
+    }
+    let rank = world.rank();
+
+    let t0 = Instant::now();
+    if let Err(e) = store.publish(name, layout, rank, my_data) {
+        // Divergent failure (e.g. this rank's spill write failed): peers
+        // are already heading into the barrier — abort so they fail fast
+        // instead of deadlocking.
+        world.abort(&format!("dist_reshape {name}: publish failed: {e}"));
+        return Err(e);
+    }
+    world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
+    world.barrier();
+
+    let view = store.view(name)?;
+    let (i, j) = grid.coords(rank);
+    let rows = BlockDim::new(m, grid.pr);
+    let cols = BlockDim::new(n, grid.pc);
+    let (r0, c0) = (rows.start_of(i), cols.start_of(j));
+    let width = cols.size_of(j);
+    let t1 = Instant::now();
+    let mut block = Mat::zeros(rows.size_of(i), width);
+    for li in 0..block.rows() {
+        view.read_into((r0 + li) * n + c0, block.row_mut(li));
+    }
+    world.breakdown.add_secs(Cat::Reshape, t1.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Reshape, (block.len() * 8) as u64);
+    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+    drop(view);
+
+    // Two barriers around the drop: the first keeps the owner from
+    // removing while peers still read; the second keeps peers from
+    // republishing the same name before it is removed.
+    world.barrier();
+    if rank == 0 {
+        store.remove(name);
+    }
+    world.barrier();
+    Ok(block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_grid_locate_is_block_row_major() {
+        // dims [4, 3], grid [2, 1]: chunk 0 = rows 0..2, chunk 1 = rows 2..4.
+        let l = Layout::TensorGrid { dims: vec![4, 3], grid: vec![2, 1] };
+        assert_eq!(l.total_len(), 12);
+        assert_eq!(l.num_chunks(), 2);
+        assert_eq!(l.chunk_len(0), 6);
+        assert_eq!(l.locate(0), (0, 0));
+        assert_eq!(l.locate(5), (0, 5));
+        assert_eq!(l.locate(6), (1, 0));
+        assert_eq!(l.locate(11), (1, 5));
+    }
+
+    #[test]
+    fn mat_grid_locate_uneven() {
+        // 3x5 over 2x2: blocks (2x3, 2x2, 1x3, 1x2).
+        let l = Layout::MatGrid { m: 3, n: 5, pr: 2, pc: 2 };
+        assert_eq!(
+            (0..4).map(|c| l.chunk_len(c)).collect::<Vec<_>>(),
+            vec![6, 4, 3, 2]
+        );
+        // element (2, 4) = lin 14 -> chunk (1,1), local (0,1).
+        assert_eq!(l.locate(14), (3, 1));
+        // element (0, 3) = lin 3 -> chunk (0,1), local (0,0).
+        assert_eq!(l.locate(3), (1, 0));
+    }
+
+    #[test]
+    fn locate_run_spans_to_block_edges() {
+        let l = Layout::MatGrid { m: 3, n: 5, pr: 2, pc: 2 };
+        // Row 0: a 3-wide run in chunk (0,0), then a 2-wide run in (0,1).
+        assert_eq!(l.locate_run(0), (0, 0, 3));
+        assert_eq!(l.locate_run(3), (1, 0, 2));
+        let t = Layout::TensorGrid { dims: vec![4, 6], grid: vec![2, 3] };
+        // lin 2 = index (0, 2): column block 1 spans 2..4 → run of 2.
+        assert_eq!(t.locate_run(2), (1, 0, 2));
+        // HtGrid is transposed: runs never exceed one element.
+        let h = Layout::HtGrid { r: 3, n: 4, pr: 1, pc: 2 };
+        for lin in 0..h.total_len() {
+            assert_eq!(h.locate_run(lin).2, 1);
+        }
+    }
+
+    #[test]
+    fn ht_grid_roundtrips_through_store() {
+        // H: 2x5 over a 1x2 grid, pr=1 -> chunk j holds cols of block j,
+        // transposed.
+        let (r, n, pr, pc) = (2usize, 5usize, 1usize, 2usize);
+        let l = Layout::HtGrid { r, n, pr, pc };
+        let h: Vec<f64> = (0..r * n).map(|x| x as f64).collect(); // row-major H
+        let store = SharedStore::new(SpillMode::Memory);
+        let cols = BlockDim::new(n, pc);
+        for j in 0..pc {
+            let nj = cols.size_of(j);
+            // nh x r row-major transposed block (pr = 1 -> whole col block).
+            let mut chunk = Vec::with_capacity(nj * r);
+            for lc in 0..nj {
+                for row in 0..r {
+                    chunk.push(h[row * n + cols.start_of(j) + lc]);
+                }
+            }
+            store.publish("h", &l, j, chunk).unwrap();
+        }
+        assert_eq!(store.view("h").unwrap().to_dense(), h);
+    }
+
+    #[test]
+    fn publish_validates_shapes() {
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        assert!(store.publish("x", &l, 1, vec![0.0; 4]).is_err()); // bad chunk
+        assert!(store.publish("x", &l, 0, vec![0.0; 3]).is_err()); // bad len
+        assert!(store.publish("x", &l, 0, vec![0.0; 4]).is_ok());
+        let other = Layout::MatGrid { m: 4, n: 1, pr: 1, pc: 1 };
+        assert!(store.publish("x", &other, 0, vec![0.0; 4]).is_err()); // layout clash
+    }
+
+    #[test]
+    fn view_requires_all_chunks() {
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 2, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        store.publish("x", &l, 0, vec![1.0, 2.0]).unwrap();
+        assert!(store.view("x").is_err());
+        store.publish("x", &l, 1, vec![3.0, 4.0]).unwrap();
+        assert_eq!(store.view("x").unwrap().to_dense(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(store.view("y").is_err());
+    }
+
+    #[test]
+    fn disk_spill_roundtrip_counts_bytes() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_unit_{}", std::process::id()));
+        let l = Layout::MatGrid { m: 2, n: 3, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Disk(dir.clone()));
+        let data: Vec<f64> = (0..6).map(|x| x as f64 * 0.5).collect();
+        store.publish("x", &l, 0, data.clone()).unwrap();
+        let view = store.view("x").unwrap();
+        assert_eq!(view.to_dense(), data);
+        assert_eq!(view.disk_bytes_read(), 48);
+        // Cached: a second read does not re-load.
+        let _ = view.get(0);
+        assert_eq!(view.disk_bytes_read(), 48);
+        drop(view);
+        store.remove("x");
+        assert!(!dir.join("x.0.chunk").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,475 @@
+//! The SPMD thread-rank communicator.
+//!
+//! [`Comm::run`] spawns `p` OS threads ("ranks") that execute the same
+//! closure — the thread-rank analogue of `mpiexec -n p` in the paper's
+//! mpi4py implementation. Ranks communicate only through MPI-style
+//! collectives (`all_reduce_sum`, `all_gather_varied`,
+//! `reduce_scatter_uneven`, …), so the SPMD code in `nmf::dist`,
+//! `ttrain::rankselect` and `ttrain::driver` is structured exactly like a
+//! real MPI program and could be retargeted to one communicator-call for
+//! communicator-call.
+//!
+//! # Semantics (the contract the rest of the crate compiles against)
+//!
+//! * Every collective is **bulk-synchronous**: all members of a
+//!   communicator must call the same sequence of collectives in the same
+//!   order (SPMD discipline). A rank that diverges deadlocks its peers; a
+//!   rank that panics *poisons* the world so every other rank panics
+//!   instead of hanging (important for `cargo test` robustness).
+//! * Reductions are **deterministic and rank-identical**: contributions
+//!   are combined in rank order `0..p` on every rank, so all ranks obtain
+//!   bitwise-identical results. Tests rely on this to compare `p = 1`
+//!   and `p > 1` runs exactly.
+//! * Every collective records wall time and payload bytes into the public
+//!   [`Breakdown`] under the paper's cost categories (AG / AR / RSC),
+//!   which is what Figs 5–7 plot and what [`crate::dist::CostModel`]
+//!   extrapolates to a cluster.
+//!
+//! Collectives are implemented over a shared rendezvous table (one slot
+//! per `(communicator, sequence-number)` pair) rather than point-to-point
+//! queues; with `p` ≤ a few dozen thread ranks the `O(p²)` copy cost of
+//! the dense exchange is irrelevant next to the GEMMs it synchronizes.
+
+use crate::error::{DnttError, Result};
+use crate::util::timer::{Breakdown, Cat};
+use std::any::Any;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long a waiting rank sleeps between poison-flag checks. Collectives
+/// are woken by `notify_all` when the last member arrives; the timeout
+/// only bounds how long a rank can be stuck behind a crashed peer.
+const POISON_POLL: Duration = Duration::from_millis(25);
+
+/// Key of one in-flight collective: (communicator id, op sequence number).
+type SlotKey = (u64, u64);
+
+/// One in-flight collective exchange.
+struct Slot {
+    items: Vec<Option<Box<dyn Any + Send>>>,
+    deposited: usize,
+    taken: usize,
+}
+
+impl Slot {
+    fn new(size: usize) -> Self {
+        Slot { items: (0..size).map(|_| None).collect(), deposited: 0, taken: 0 }
+    }
+}
+
+/// State shared by every rank of one [`Comm::run`] world (and all of its
+/// sub-communicators).
+struct WorldState {
+    slots: Mutex<HashMap<SlotKey, Slot>>,
+    cv: Condvar,
+    poisoned: AtomicBool,
+}
+
+impl WorldState {
+    fn new() -> Self {
+        WorldState {
+            slots: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let _guard = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        self.cv.notify_all();
+    }
+
+    fn check_poison(&self) {
+        if self.poisoned.load(Ordering::SeqCst) {
+            panic!("SPMD world poisoned: another rank panicked inside Comm::run");
+        }
+    }
+}
+
+/// An MPI-style communicator handle for one thread rank.
+///
+/// Obtained from [`Comm::run`] (the world) or
+/// [`crate::dist::Grid2d::make_subcomms`] (row/column sub-communicators).
+/// All methods that communicate take `&mut self` because each handle
+/// carries its own op-sequence counter and its own cost [`Breakdown`].
+pub struct Comm {
+    shared: Arc<WorldState>,
+    /// Communicator id; equal on all members, distinct between
+    /// communicators that are alive at the same time.
+    id: u64,
+    rank: usize,
+    size: usize,
+    /// Per-handle op counter; advances in lockstep across members because
+    /// collectives are called in SPMD order.
+    seq: u64,
+    /// Next child-communicator id to hand out (world handles only).
+    next_child: u64,
+    /// Per-rank accumulated cost categories (public by design: SPMD code
+    /// charges its local compute phases here too).
+    pub breakdown: Breakdown,
+}
+
+impl Comm {
+    /// Run `f` on `p` thread ranks and return the per-rank results in rank
+    /// order. Blocks until every rank finishes.
+    ///
+    /// `f` must be `Clone` because each rank runs its own copy (captured
+    /// state that must be *shared* rather than duplicated should be
+    /// wrapped in `Arc`, e.g. [`crate::dist::SharedStore`]). If any rank
+    /// panics the world is poisoned, all ranks unwind, and the panic is
+    /// propagated to the caller.
+    pub fn run<T, F>(p: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce(Comm) -> T + Clone + Send,
+    {
+        assert!(p > 0, "Comm::run needs at least one rank");
+        let shared = Arc::new(WorldState::new());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..p)
+                .map(|rank| {
+                    let f = f.clone();
+                    let comm = Comm {
+                        shared: Arc::clone(&shared),
+                        id: 0,
+                        rank,
+                        size: p,
+                        seq: 0,
+                        next_child: 1,
+                        breakdown: Breakdown::new(),
+                    };
+                    let ws = Arc::clone(&shared);
+                    scope.spawn(move || {
+                        let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
+                        if out.is_err() {
+                            ws.poison();
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(Ok(v)) => v,
+                    Ok(Err(payload)) => resume_unwind(payload),
+                    Err(payload) => resume_unwind(payload),
+                })
+                .collect()
+        })
+    }
+
+    /// This rank's index within the communicator, in `0..size()`.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in the communicator.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Create a sub-communicator handle over the same world.
+    ///
+    /// Used by [`crate::dist::Grid2d::make_subcomms`]; `id` must be equal
+    /// on all members and unique among live communicators.
+    pub(crate) fn subcomm(&self, id: u64, rank: usize, size: usize) -> Comm {
+        debug_assert!(rank < size);
+        Comm {
+            shared: Arc::clone(&self.shared),
+            id,
+            rank,
+            size,
+            seq: 0,
+            next_child: u64::MAX,
+            breakdown: Breakdown::new(),
+        }
+    }
+
+    /// Reserve `n` child-communicator ids (SPMD-identical on all ranks
+    /// because every rank performs the same reservations in the same
+    /// order). Returns the first reserved id.
+    pub(crate) fn alloc_child_ids(&mut self, n: u64) -> u64 {
+        assert!(
+            self.next_child != u64::MAX,
+            "sub-communicators cannot currently spawn their own sub-communicators"
+        );
+        let base = self.next_child;
+        self.next_child += n;
+        base
+    }
+
+    /// The rendezvous primitive every collective is built on: deposit
+    /// `value`, wait for all members, return everyone's contribution in
+    /// rank order. Identical result vector on every member.
+    fn exchange<T: Clone + Send + 'static>(&mut self, value: T) -> Vec<T> {
+        let key: SlotKey = (self.id, self.seq);
+        self.seq += 1;
+        let mut slots = self.shared.slots.lock().unwrap();
+        {
+            let slot = slots.entry(key).or_insert_with(|| Slot::new(self.size));
+            debug_assert!(
+                slot.items[self.rank].is_none(),
+                "collective misuse: rank {} deposited twice into op {:?}",
+                self.rank,
+                key
+            );
+            slot.items[self.rank] = Some(Box::new(value));
+            slot.deposited += 1;
+            if slot.deposited == self.size {
+                self.shared.cv.notify_all();
+            }
+        }
+        loop {
+            self.shared.check_poison();
+            if slots.get(&key).map(|s| s.deposited == self.size).unwrap_or(false) {
+                break;
+            }
+            slots = self.shared.cv.wait_timeout(slots, POISON_POLL).unwrap().0;
+        }
+        let out: Vec<T> = {
+            let slot = slots.get(&key).expect("collective slot vanished");
+            slot.items
+                .iter()
+                .map(|it| {
+                    it.as_ref()
+                        .expect("collective slot incomplete")
+                        .downcast_ref::<T>()
+                        .expect("collective type mismatch between ranks")
+                        .clone()
+                })
+                .collect()
+        };
+        let all_taken = {
+            let slot = slots.get_mut(&key).expect("collective slot vanished");
+            slot.taken += 1;
+            slot.taken == self.size
+        };
+        if all_taken {
+            slots.remove(&key);
+        }
+        out
+    }
+
+    /// Abort the whole world: every rank blocked in a collective panics
+    /// instead of waiting forever (the thread-rank `MPI_Abort`).
+    ///
+    /// For *rank-divergent* failures — e.g. one rank's spill write failing
+    /// while its peers proceed into a barrier — where returning an error
+    /// from just this rank would deadlock the SPMD program. Symmetric
+    /// errors (same validation failing on every rank) should return
+    /// `Err` normally instead.
+    pub fn abort(&self, reason: &str) {
+        log::error!("SPMD abort by rank {}: {reason}", self.rank);
+        self.shared.poison();
+    }
+
+    /// Synchronize all members. Reusable any number of times; charged to
+    /// the `Other` category (barriers separate phases, they are not one of
+    /// the paper's plotted costs).
+    pub fn barrier(&mut self) {
+        let t0 = Instant::now();
+        let _ = self.exchange(());
+        self.breakdown.add_secs(Cat::Other, t0.elapsed().as_secs_f64());
+    }
+
+    /// Element-wise sum of `data` over all members, written back into
+    /// `data` (MPI `MPI_Allreduce(+)`). Every rank sums contributions in
+    /// rank order, so results are bitwise identical across ranks.
+    pub fn all_reduce_sum(&mut self, data: &mut [f64]) {
+        let t0 = Instant::now();
+        let parts = self.exchange(data.to_vec());
+        data.iter_mut().for_each(|x| *x = 0.0);
+        for part in &parts {
+            debug_assert_eq!(part.len(), data.len(), "all_reduce_sum length mismatch");
+            for (d, s) in data.iter_mut().zip(part) {
+                *d += *s;
+            }
+        }
+        self.breakdown.add_secs(Cat::AllReduce, t0.elapsed().as_secs_f64());
+        self.breakdown.add_bytes(Cat::AllReduce, (data.len() * 8) as u64);
+    }
+
+    /// Sum one scalar over all members (in rank order on every rank).
+    pub fn all_reduce_scalar(&mut self, x: f64) -> f64 {
+        let t0 = Instant::now();
+        let sum: f64 = self.exchange(x).iter().sum();
+        self.breakdown.add_secs(Cat::AllReduce, t0.elapsed().as_secs_f64());
+        self.breakdown.add_bytes(Cat::AllReduce, 8);
+        sum
+    }
+
+    /// Gather equal-size contributions and concatenate them in rank order
+    /// (MPI `MPI_Allgather`).
+    pub fn all_gather(&mut self, data: &[f64]) -> Vec<f64> {
+        let parts = self.all_gather_varied(data);
+        let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+        for p in parts {
+            out.extend_from_slice(&p);
+        }
+        out
+    }
+
+    /// Gather possibly different-size contributions; returns one `Vec` per
+    /// rank, in rank order (MPI `MPI_Allgatherv`). Empty contributions are
+    /// allowed.
+    pub fn all_gather_varied(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+        let t0 = Instant::now();
+        let parts = self.exchange(data.to_vec());
+        let total: usize = parts.iter().map(Vec::len).sum();
+        self.breakdown.add_secs(Cat::AllGather, t0.elapsed().as_secs_f64());
+        self.breakdown.add_bytes(Cat::AllGather, (total * 8) as u64);
+        parts
+    }
+
+    /// Gather one arbitrary `Clone + Send` value per rank, in rank order.
+    /// Used for metadata (e.g. merging per-rank [`Breakdown`]s); payload
+    /// bytes are not tracked because the size is unknown.
+    pub fn all_gather_any<T: Clone + Send + 'static>(&mut self, value: T) -> Vec<T> {
+        let t0 = Instant::now();
+        let parts = self.exchange(value);
+        self.breakdown.add_secs(Cat::AllGather, t0.elapsed().as_secs_f64());
+        parts
+    }
+
+    /// Reduce (sum) full-length contributions, then scatter contiguous
+    /// segments of `counts[k]` elements to rank `k` (MPI
+    /// `MPI_Reduce_scatter`). `counts` must have one entry per rank (zeros
+    /// allowed) and sum to `data.len()`, identically on every rank.
+    pub fn reduce_scatter_uneven(&mut self, data: &[f64], counts: &[usize]) -> Result<Vec<f64>> {
+        if counts.len() != self.size {
+            return Err(DnttError::Comm(format!(
+                "reduce_scatter_uneven: {} counts for {} ranks",
+                counts.len(),
+                self.size
+            )));
+        }
+        let total: usize = counts.iter().sum();
+        if total != data.len() {
+            return Err(DnttError::Comm(format!(
+                "reduce_scatter_uneven: counts sum to {total}, buffer has {}",
+                data.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let parts = self.exchange(data.to_vec());
+        let offset: usize = counts[..self.rank].iter().sum();
+        let mine = counts[self.rank];
+        let mut out = vec![0.0; mine];
+        for part in &parts {
+            debug_assert_eq!(part.len(), data.len(), "reduce_scatter length mismatch");
+            for (d, s) in out.iter_mut().zip(&part[offset..offset + mine]) {
+                *d += *s;
+            }
+        }
+        self.breakdown.add_secs(Cat::ReduceScatter, t0.elapsed().as_secs_f64());
+        self.breakdown.add_bytes(Cat::ReduceScatter, (data.len() * 8) as u64);
+        Ok(out)
+    }
+
+    /// Even [`Comm::reduce_scatter_uneven`]: `data.len()` must be a
+    /// multiple of `size()`; rank `k` receives elements
+    /// `[k·len/p, (k+1)·len/p)` of the sum.
+    pub fn reduce_scatter_sum(&mut self, data: &[f64]) -> Result<Vec<f64>> {
+        if data.len() % self.size != 0 {
+            return Err(DnttError::Comm(format!(
+                "reduce_scatter_sum: buffer of {} not divisible by {} ranks",
+                data.len(),
+                self.size
+            )));
+        }
+        let each = data.len() / self.size;
+        let counts = vec![each; self.size];
+        self.reduce_scatter_uneven(data, &counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_rank_order() {
+        let outs = Comm::run(5, |c| c.rank() * 10);
+        assert_eq!(outs, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn all_reduce_bitwise_identical_across_ranks() {
+        let outs = Comm::run(4, |mut c| {
+            let mut v = vec![0.1 * (c.rank() as f64 + 1.0); 3];
+            c.all_reduce_sum(&mut v);
+            v
+        });
+        for o in &outs[1..] {
+            assert_eq!(o.as_slice(), outs[0].as_slice(), "ranks must agree bitwise");
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sum_even_split() {
+        let outs = Comm::run(2, |mut c| {
+            let data = vec![1.0, 2.0, 3.0, 4.0];
+            c.reduce_scatter_sum(&data).unwrap()
+        });
+        assert_eq!(outs[0], vec![2.0, 4.0]);
+        assert_eq!(outs[1], vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_rejects_bad_counts() {
+        let outs = Comm::run(1, |mut c| {
+            let bad_len = c.reduce_scatter_uneven(&[1.0, 2.0], &[1]).is_err();
+            let bad_ranks = c.reduce_scatter_uneven(&[1.0], &[1, 0]).is_err();
+            (bad_len, bad_ranks)
+        });
+        assert_eq!(outs[0], (true, true));
+    }
+
+    #[test]
+    fn gather_any_carries_structs() {
+        let outs = Comm::run(3, |mut c| {
+            let mut b = Breakdown::new();
+            b.add_secs(Cat::MatMul, c.rank() as f64);
+            let all = c.all_gather_any(b);
+            all.iter().map(|x| x.secs(Cat::MatMul)).sum::<f64>()
+        });
+        assert!(outs.iter().all(|&s| s == 3.0));
+    }
+
+    #[test]
+    fn breakdown_records_collective_costs() {
+        let outs = Comm::run(2, |mut c| {
+            let mut v = vec![1.0; 8];
+            c.all_reduce_sum(&mut v);
+            let _ = c.all_gather(&v);
+            let _ = c.reduce_scatter_sum(&v).unwrap();
+            (
+                c.breakdown.calls(Cat::AllReduce),
+                c.breakdown.calls(Cat::AllGather),
+                c.breakdown.calls(Cat::ReduceScatter),
+                c.breakdown.bytes(Cat::AllReduce),
+            )
+        });
+        assert_eq!(outs[0], (1, 1, 1, 64));
+    }
+
+    #[test]
+    fn panicking_rank_poisons_instead_of_hanging() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            Comm::run(2, |mut c| {
+                if c.rank() == 1 {
+                    panic!("boom");
+                }
+                c.barrier(); // would deadlock without poisoning
+            })
+        }));
+        assert!(result.is_err());
+    }
+}

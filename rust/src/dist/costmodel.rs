@@ -1,0 +1,159 @@
+//! The α-β cluster cost model (§IV-B).
+//!
+//! Thread ranks measure *work* (GEMM seconds, collective payload bytes)
+//! faithfully but measure *communication time* as shared-memory copies.
+//! [`CostModel::model_breakdown`] projects a measured [`Breakdown`] onto a
+//! `p`-node cluster: compute categories keep their measured time, while
+//! each communication category is re-priced as
+//!
+//! ```text
+//! t(cat) = calls · α · ⌈log₂ p⌉  +  bytes · volume(cat, p) / bandwidth
+//! ```
+//!
+//! with `volume = 2(p−1)/p` for all_reduce (reduce + broadcast sweep) and
+//! `(p−1)/p` for all_gather / reduce_scatter — the standard
+//! latency-bandwidth costs of tree/ring collectives. Spilled-chunk `IO`
+//! is re-priced against the filesystem bandwidth. Both terms grow with
+//! `p` at fixed volume, reproducing the paper's strong-scaling
+//! communication trend (asserted in `tests/integration_dist.rs`).
+
+use crate::util::timer::{Breakdown, Cat, ALL_CATS};
+
+/// Latency-bandwidth model of a target cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Per-message latency of one collective hop, seconds.
+    pub alpha: f64,
+    /// Interconnect bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// Parallel-filesystem bandwidth per rank, bytes/second (spilled IO).
+    pub disk_bandwidth: f64,
+    /// Multiplier on measured compute time (1.0 = cluster cores match the
+    /// measuring machine).
+    pub compute_scale: f64,
+}
+
+impl Default for CostModel {
+    /// A Grizzly-like commodity cluster: ~1 µs MPI latency, 100 Gb/s
+    /// interconnect, 500 MB/s parallel filesystem per rank, compute as
+    /// measured.
+    fn default() -> Self {
+        CostModel { alpha: 1.0e-6, bandwidth: 12.5e9, disk_bandwidth: 500.0e6, compute_scale: 1.0 }
+    }
+}
+
+impl CostModel {
+    /// Modeled seconds for one communication category at `p` ranks.
+    pub fn comm_secs(&self, cat: Cat, calls: u64, bytes: u64, p: usize) -> f64 {
+        let p = p.max(1);
+        let hops = (p.max(2) as f64).log2().ceil();
+        let volume = match cat {
+            Cat::AllReduce => 2.0,
+            _ => 1.0,
+        } * (p as f64 - 1.0)
+            / p as f64;
+        calls as f64 * self.alpha * hops + bytes as f64 * volume / self.bandwidth
+    }
+
+    /// Project a measured per-rank breakdown onto a `p`-rank cluster.
+    ///
+    /// Compute categories (GR/MM/MAD/Norm/INIT, SVD, Reshape, Other) keep
+    /// their measured seconds (scaled by `compute_scale` for the
+    /// NMF-kernel categories); AG/AR/RSC are re-priced by
+    /// [`CostModel::comm_secs`]; `IO` with recorded bytes is re-priced
+    /// against `disk_bandwidth`. Call and byte counters carry over.
+    pub fn model_breakdown(&self, measured: &Breakdown, p: usize) -> Breakdown {
+        let mut out = Breakdown::new();
+        for &cat in &ALL_CATS {
+            let secs = measured.secs(cat);
+            let calls = measured.calls(cat);
+            let bytes = measured.bytes(cat);
+            if secs == 0.0 && calls == 0 && bytes == 0 {
+                continue;
+            }
+            let modeled = if cat.is_comm() {
+                self.comm_secs(cat, calls, bytes, p)
+            } else if cat == Cat::Io && bytes > 0 {
+                bytes as f64 / self.disk_bandwidth
+            } else if cat.is_compute() {
+                secs * self.compute_scale
+            } else {
+                secs
+            };
+            out.add_secs_untallied(cat, modeled);
+            out.add_bytes(cat, bytes);
+            out.add_calls(cat, calls);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_is_preserved() {
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::MatMul, 2.5);
+        b.add_secs(Cat::Gram, 0.5);
+        let m = CostModel::default();
+        let out = m.model_breakdown(&b, 64);
+        assert_eq!(out.secs(Cat::MatMul), 2.5);
+        assert_eq!(out.secs(Cat::Gram), 0.5);
+        assert_eq!(out.calls(Cat::MatMul), 1);
+    }
+
+    #[test]
+    fn comm_grows_with_p_at_fixed_volume() {
+        let m = CostModel::default();
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::AllGather, 1e-3);
+        b.add_bytes(Cat::AllGather, 1 << 30);
+        let prev = m.model_breakdown(&b, 2).comm_secs();
+        let mut last = prev;
+        for p in [4, 16, 64, 256] {
+            let t = m.model_breakdown(&b, p).comm_secs();
+            assert!(t > last, "comm time must grow: p={p}, {t} vs {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn allreduce_costs_double_volume() {
+        let m = CostModel::default();
+        let ar = m.comm_secs(Cat::AllReduce, 0, 1 << 20, 16);
+        let ag = m.comm_secs(Cat::AllGather, 0, 1 << 20, 16);
+        assert!((ar - 2.0 * ag).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disk_io_repriced_by_bandwidth() {
+        let m = CostModel::default();
+        let mut b = Breakdown::new();
+        b.add_secs(Cat::Io, 1e-4);
+        b.add_bytes(Cat::Io, 500_000_000);
+        let out = m.model_breakdown(&b, 8);
+        assert!((out.secs(Cat::Io) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_only_category_gets_no_phantom_calls() {
+        let mut b = Breakdown::new();
+        b.add_bytes(Cat::AllGather, 4096);
+        let out = CostModel::default().model_breakdown(&b, 8);
+        assert_eq!(out.calls(Cat::AllGather), 0);
+        assert!(out.secs(Cat::AllGather) > 0.0);
+        assert_eq!(out.bytes(Cat::AllGather), 4096);
+    }
+
+    #[test]
+    fn call_counters_carry_over() {
+        let mut b = Breakdown::new();
+        for _ in 0..5 {
+            b.add_secs(Cat::AllReduce, 1e-5);
+        }
+        let out = CostModel::default().model_breakdown(&b, 4);
+        assert_eq!(out.calls(Cat::AllReduce), 5);
+    }
+}

@@ -1,0 +1,29 @@
+//! The distributed substrate: SPMD communicator, processor-grid layouts,
+//! the shared chunk store with the Alg-1 global reshape, and the α-β
+//! cluster cost model.
+//!
+//! This module is the API the rest of the crate compiles against:
+//!
+//! * [`Comm`] — thread-rank SPMD world ([`Comm::run`]) with MPI-style
+//!   collectives and per-category cost accounting;
+//! * [`ProcGrid`] / [`Grid2d`] / [`BlockDim`] — the d-dim tensor grid,
+//!   its 2-D collapse for the NMF stages (with row/column
+//!   sub-communicators via [`Grid2d::make_subcomms`]), and the 1-D block
+//!   partition both are built from;
+//! * [`chunkstore`] — [`SharedStore`] (+ [`SpillMode`] disk spill) and
+//!   [`dist_reshape`], the paper's Algorithm 1;
+//! * [`CostModel`] — projects thread-rank measurements onto a cluster.
+//!
+//! The full contract (collective semantics, determinism guarantees,
+//! layout definitions, spill behavior) is documented in `rust/DESIGN.md`
+//! and in the submodules' rustdoc.
+
+pub mod chunkstore;
+pub mod comm;
+pub mod costmodel;
+pub mod topology;
+
+pub use chunkstore::{dist_reshape, Layout, SharedStore, SpillMode, StoreView};
+pub use comm::Comm;
+pub use costmodel::CostModel;
+pub use topology::{BlockDim, Grid2d, ProcGrid};

@@ -1,0 +1,310 @@
+//! Processor-grid topology: the d-dimensional tensor grid, its 2-D
+//! collapse for the NMF stage, and the 1-D block distribution.
+//!
+//! The paper distributes the input tensor over a `p_1 × ⋯ × p_d` grid
+//! ([`ProcGrid`]) and every stage matrix over the collapsed
+//! `p_1 × (p_2⋯p_d)` grid ([`ProcGrid::to_2d`], a [`Grid2d`]). Both grids
+//! linearize ranks **row-major** (last coordinate fastest), matching the
+//! row-major data layout everywhere else in the crate. [`BlockDim`] is the
+//! shared 1-D block partition: `n` items over `p` parts, contiguous, the
+//! first `n mod p` parts one element larger — uneven and empty blocks are
+//! first-class (tests exercise `13×17` over `2×3`).
+
+use crate::dist::comm::Comm;
+use crate::error::{DnttError, Result};
+
+/// Contiguous block distribution of `n` items over `p` parts.
+///
+/// Part `i` holds `[start_of(i), end_of(i))`; sizes differ by at most one
+/// and parts beyond `n` (when `p > n`) are empty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockDim {
+    n: usize,
+    p: usize,
+}
+
+impl BlockDim {
+    /// Distribution of `n` items over `p ≥ 1` parts.
+    pub fn new(n: usize, p: usize) -> Self {
+        assert!(p >= 1, "BlockDim needs at least one part");
+        BlockDim { n, p }
+    }
+
+    /// Total item count.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of parts.
+    #[inline]
+    pub fn parts(&self) -> usize {
+        self.p
+    }
+
+    /// Number of items in part `i`.
+    #[inline]
+    pub fn size_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.p);
+        self.n / self.p + usize::from(i < self.n % self.p)
+    }
+
+    /// First global index of part `i`.
+    #[inline]
+    pub fn start_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.p);
+        i * (self.n / self.p) + i.min(self.n % self.p)
+    }
+
+    /// One past the last global index of part `i`.
+    #[inline]
+    pub fn end_of(&self, i: usize) -> usize {
+        self.start_of(i) + self.size_of(i)
+    }
+
+    /// The part that owns global index `g < n`.
+    #[inline]
+    pub fn owner_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.n);
+        let q = self.n / self.p;
+        let r = self.n % self.p;
+        let boundary = (q + 1) * r; // first r parts have q+1 items
+        if g < boundary {
+            g / (q + 1)
+        } else {
+            r + (g - boundary) / q
+        }
+    }
+}
+
+/// A `d`-dimensional processor grid over the tensor modes.
+///
+/// Ranks are linearized row-major: rank = coords[0]·(p_2⋯p_d) + … .
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProcGrid {
+    dims: Vec<usize>,
+}
+
+impl ProcGrid {
+    /// A grid with the given per-mode extents (all ≥ 1, at least 1 mode).
+    pub fn new(dims: Vec<usize>) -> Result<ProcGrid> {
+        if dims.is_empty() {
+            return Err(DnttError::config("processor grid needs at least one mode"));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(DnttError::config(format!("processor grid {dims:?} has a zero extent")));
+        }
+        Ok(ProcGrid { dims })
+    }
+
+    /// The paper's scaling-study grid `2^k × 2 × ⋯ × 2` over `d` modes
+    /// (Figs 5–7 use `d = 4`, k = 1..=5).
+    pub fn paper_grid(k: usize, d: usize) -> Result<ProcGrid> {
+        if d == 0 {
+            return Err(DnttError::config("paper_grid needs at least one mode"));
+        }
+        let mut dims = vec![2; d];
+        dims[0] = 1usize << k;
+        ProcGrid::new(dims)
+    }
+
+    /// Per-mode grid extents.
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of modes.
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total rank count (product of extents).
+    pub fn size(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major grid coordinates of `rank`.
+    pub fn coords(&self, rank: usize) -> Vec<usize> {
+        debug_assert!(rank < self.size());
+        let mut c = vec![0; self.dims.len()];
+        let mut rem = rank;
+        for k in (0..self.dims.len()).rev() {
+            c[k] = rem % self.dims[k];
+            rem /= self.dims[k];
+        }
+        c
+    }
+
+    /// Inverse of [`ProcGrid::coords`].
+    pub fn rank_of(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.dims.len());
+        coords.iter().zip(&self.dims).fold(0, |acc, (&c, &d)| {
+            debug_assert!(c < d);
+            acc * d + c
+        })
+    }
+
+    /// Collapse to the 2-D NMF grid: `p_r = p_1`, `p_c = p_2⋯p_d`
+    /// (Alg 2 reshapes every stage matrix onto this grid). Rank numbering
+    /// is preserved: a rank's 2-D coordinates are
+    /// `(coords[0], row-major(coords[1..]))`.
+    pub fn to_2d(&self) -> Grid2d {
+        let pr = self.dims[0];
+        let pc: usize = self.dims[1..].iter().product::<usize>().max(1);
+        Grid2d::new(pr, pc)
+    }
+}
+
+/// A 2-D `p_r × p_c` processor grid (the NMF stage grid), row-major.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid2d {
+    /// Row count (block-rows of the stage matrix).
+    pub pr: usize,
+    /// Column count (block-columns of the stage matrix).
+    pub pc: usize,
+}
+
+impl Grid2d {
+    /// A `pr × pc` grid (both ≥ 1).
+    pub fn new(pr: usize, pc: usize) -> Self {
+        assert!(pr >= 1 && pc >= 1, "Grid2d extents must be at least 1");
+        Grid2d { pr, pc }
+    }
+
+    /// Total rank count.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    /// `(i, j)` grid coordinates of `rank` (row-major).
+    #[inline]
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.size());
+        (rank / self.pc, rank % self.pc)
+    }
+
+    /// Inverse of [`Grid2d::coords`].
+    #[inline]
+    pub fn rank_of(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.pr && j < self.pc);
+        i * self.pc + j
+    }
+
+    /// Split the world into this grid's row and column communicators.
+    ///
+    /// Collective: every world rank must call it, and `world.size()` must
+    /// equal `self.size()`. For world rank `(i, j)`:
+    /// * the **row** communicator spans the ranks of grid row `i`; its
+    ///   internal rank is `j` (size `pc`);
+    /// * the **column** communicator spans grid column `j`; its internal
+    ///   rank is `i` (size `pr`).
+    ///
+    /// The sub-communicators partition the world, so a column-reduce of
+    /// row-reduces equals a world reduce (asserted in
+    /// `tests/integration_dist.rs`). May be called repeatedly; each call
+    /// reserves fresh communicator ids. Sub-communicators cannot
+    /// currently be split further.
+    pub fn make_subcomms(&self, world: &mut Comm) -> (Comm, Comm) {
+        assert_eq!(
+            self.size(),
+            world.size(),
+            "grid {}x{} does not cover a world of {} ranks",
+            self.pr,
+            self.pc,
+            world.size()
+        );
+        let (i, j) = self.coords(world.rank());
+        let base = world.alloc_child_ids((self.pr + self.pc) as u64);
+        let row = world.subcomm(base + i as u64, j, self.pc);
+        let col = world.subcomm(base + self.pr as u64 + j as u64, i, self.pr);
+        (row, col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blockdim_partitions_exactly() {
+        for (n, p) in [(10, 3), (17, 5), (4, 4), (3, 7), (0, 2), (1, 1)] {
+            let bd = BlockDim::new(n, p);
+            let total: usize = (0..p).map(|i| bd.size_of(i)).sum();
+            assert_eq!(total, n, "n={n} p={p}");
+            let mut next = 0;
+            for i in 0..p {
+                assert_eq!(bd.start_of(i), next, "n={n} p={p} i={i}");
+                next = bd.end_of(i);
+            }
+            for g in 0..n {
+                let o = bd.owner_of(g);
+                assert!(bd.start_of(o) <= g && g < bd.end_of(o), "n={n} p={p} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn blockdim_uneven_sizes_differ_by_at_most_one() {
+        let bd = BlockDim::new(13, 3);
+        assert_eq!((bd.size_of(0), bd.size_of(1), bd.size_of(2)), (5, 4, 4));
+    }
+
+    #[test]
+    fn procgrid_roundtrip_and_to_2d() {
+        let g = ProcGrid::new(vec![2, 3, 2]).unwrap();
+        assert_eq!(g.size(), 12);
+        for r in 0..g.size() {
+            assert_eq!(g.rank_of(&g.coords(r)), r);
+        }
+        let g2 = g.to_2d();
+        assert_eq!((g2.pr, g2.pc), (2, 6));
+        // 2-D coords are (first coord, row-major of the rest).
+        for r in 0..g.size() {
+            let c = g.coords(r);
+            let (i, j) = g2.coords(r);
+            assert_eq!(i, c[0]);
+            assert_eq!(j, c[1] * 2 + c[2]);
+        }
+    }
+
+    #[test]
+    fn procgrid_rejects_degenerate() {
+        assert!(ProcGrid::new(vec![]).is_err());
+        assert!(ProcGrid::new(vec![2, 0, 2]).is_err());
+    }
+
+    #[test]
+    fn paper_grid_shapes() {
+        let g = ProcGrid::paper_grid(1, 4).unwrap();
+        assert_eq!(g.dims(), &[2, 2, 2, 2]);
+        assert_eq!(g.size(), 16);
+        let g = ProcGrid::paper_grid(3, 4).unwrap();
+        assert_eq!(g.dims(), &[8, 2, 2, 2]);
+        assert_eq!(g.size(), 64);
+    }
+
+    #[test]
+    fn grid2d_rank_numbering() {
+        let g = Grid2d::new(2, 3);
+        assert_eq!(g.coords(0), (0, 0));
+        assert_eq!(g.coords(4), (1, 1));
+        assert_eq!(g.rank_of(1, 2), 5);
+    }
+
+    #[test]
+    fn subcomms_partition_world() {
+        let grid = Grid2d::new(2, 2);
+        let outs = Comm::run(4, move |mut world| {
+            let (row, col) = grid.make_subcomms(&mut world);
+            (row.rank(), row.size(), col.rank(), col.size())
+        });
+        // world rank 0=(0,0), 1=(0,1), 2=(1,0), 3=(1,1)
+        assert_eq!(outs[0], (0, 2, 0, 2));
+        assert_eq!(outs[1], (1, 2, 0, 2));
+        assert_eq!(outs[2], (0, 2, 1, 2));
+        assert_eq!(outs[3], (1, 2, 1, 2));
+    }
+}

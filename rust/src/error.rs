@@ -1,24 +1,57 @@
 //! Error type for the dntt library.
+//!
+//! Hand-rolled `Display`/`Error` impls rather than `thiserror` — the
+//! offline build environment has no access to proc-macro crates (see
+//! DESIGN.md §4, Substitutions).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-level error.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DnttError {
-    #[error("shape error: {0}")]
+    /// Dimension / shape mismatch.
     Shape(String),
-    #[error("config error: {0}")]
+    /// Invalid configuration or arguments.
     Config(String),
-    #[error("communicator error: {0}")]
+    /// Communicator / collective misuse.
     Comm(String),
-    #[error("artifact error: {0}")]
+    /// AOT artifact problems (missing manifest entries, bad files).
     Artifact(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// XLA / PJRT runtime failure.
     Xla(String),
-    #[error("{0}")]
+    /// Anything else.
     Other(String),
+}
+
+impl fmt::Display for DnttError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DnttError::Shape(m) => write!(f, "shape error: {m}"),
+            DnttError::Config(m) => write!(f, "config error: {m}"),
+            DnttError::Comm(m) => write!(f, "communicator error: {m}"),
+            DnttError::Artifact(m) => write!(f, "artifact error: {m}"),
+            DnttError::Io(e) => write!(f, "io error: {e}"),
+            DnttError::Xla(m) => write!(f, "xla error: {m}"),
+            DnttError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for DnttError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DnttError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DnttError {
+    fn from(e: std::io::Error) -> Self {
+        DnttError::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -37,5 +70,27 @@ impl DnttError {
     }
     pub fn config(msg: impl Into<String>) -> Self {
         DnttError::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(DnttError::shape("bad").to_string(), "shape error: bad");
+        assert_eq!(DnttError::config("bad").to_string(), "config error: bad");
+        assert_eq!(DnttError::Comm("x".into()).to_string(), "communicator error: x");
+        assert_eq!(DnttError::Other("plain".into()).to_string(), "plain");
+    }
+
+    #[test]
+    fn io_conversion_keeps_source() {
+        use std::error::Error;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: DnttError = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source().is_some());
     }
 }

@@ -13,8 +13,12 @@
 //! * **Runtime (`runtime`)** — loads the AOT artifacts through the `xla`
 //!   crate's PJRT CPU client; Python is never on the execution path.
 //!
-//! See DESIGN.md for the full system inventory and experiment index, and
-//! EXPERIMENTS.md for the paper-vs-measured results.
+//! See `rust/DESIGN.md` for the full system inventory, the `dist` API
+//! contract, and the experiment index (each figure's bench target and CLI
+//! command).
+
+// Keep rustdoc references like `crate::dist::Layout::HtGrid` honest.
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod baselines;
 pub mod bench;

@@ -119,6 +119,20 @@ impl Breakdown {
         self.bytes[cat as usize] += bytes;
     }
 
+    /// Bump the call counter without adding time (used by the cost model
+    /// to carry measured call counts into a modeled breakdown).
+    #[inline]
+    pub fn add_calls(&mut self, cat: Cat, calls: u64) {
+        self.calls[cat as usize] += calls;
+    }
+
+    /// Add seconds without bumping the call counter (the cost model
+    /// reconstructs modeled time and carries call counts separately).
+    #[inline]
+    pub fn add_secs_untallied(&mut self, cat: Cat, secs: f64) {
+        self.secs[cat as usize] += secs;
+    }
+
     pub fn secs(&self, cat: Cat) -> f64 {
         self.secs[cat as usize]
     }

@@ -1,0 +1,140 @@
+//! Integration: communicator edge cases beyond the seed suites —
+//! single-rank worlds, uneven (and empty) reduce_scatter partitions,
+//! barrier reuse across phases, and varied gathers with an empty
+//! contribution on one rank.
+
+use dntt::dist::{Comm, Grid2d};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Every collective degenerates to the identity (of the local
+/// contribution) on a single-rank world.
+#[test]
+fn single_rank_world_collectives() {
+    let outs = Comm::run(1, |mut c| {
+        assert_eq!((c.rank(), c.size()), (0, 1));
+        c.barrier();
+        let mut v = vec![1.5, -2.0, 0.25];
+        c.all_reduce_sum(&mut v);
+        assert_eq!(v, vec![1.5, -2.0, 0.25]);
+        let s = c.all_reduce_scalar(3.5);
+        assert_eq!(s, 3.5);
+        let gathered = c.all_gather_varied(&[7.0, 8.0]);
+        assert_eq!(gathered, vec![vec![7.0, 8.0]]);
+        let scattered = c.reduce_scatter_uneven(&[1.0, 2.0, 3.0], &[3]).unwrap();
+        assert_eq!(scattered, vec![1.0, 2.0, 3.0]);
+        c.barrier();
+        42usize
+    });
+    assert_eq!(outs, vec![42]);
+}
+
+/// Uneven reduce_scatter partitions, including a rank whose share is
+/// empty: sums land in the right segments and the empty rank gets an
+/// empty vector.
+#[test]
+fn reduce_scatter_uneven_partitions_with_empty_share() {
+    let counts = [3usize, 0, 2];
+    let outs = Comm::run(3, move |mut c| {
+        // Rank r contributes [r+1, r+1, ...] over the 5 slots.
+        let data = vec![(c.rank() + 1) as f64; 5];
+        c.reduce_scatter_uneven(&data, &counts).unwrap()
+    });
+    // Column sums are 1+2+3 = 6 everywhere.
+    assert_eq!(outs[0], vec![6.0, 6.0, 6.0]);
+    assert_eq!(outs[1], Vec::<f64>::new());
+    assert_eq!(outs[2], vec![6.0, 6.0]);
+}
+
+/// Mis-sized partitions are rejected with an error, not a deadlock.
+#[test]
+fn reduce_scatter_uneven_rejects_mismatches() {
+    let outs = Comm::run(1, |mut c| {
+        let wrong_rank_count = c.reduce_scatter_uneven(&[1.0, 2.0], &[1, 1]).is_err();
+        let wrong_total = c.reduce_scatter_uneven(&[1.0, 2.0], &[3]).is_err();
+        let divisible_ok = c.reduce_scatter_sum(&[1.0, 2.0, 3.0]).is_ok();
+        (wrong_rank_count, wrong_total, divisible_ok)
+    });
+    assert_eq!(outs[0], (true, true, true)); // p=1 divides everything
+    let outs = Comm::run(2, |mut c| {
+        if c.rank() == 0 {
+            // Validation happens before any exchange, so a single rank can
+            // observe the error without desynchronizing the world.
+            assert!(c.reduce_scatter_uneven(&[1.0], &[2, 2]).is_err());
+        }
+        c.barrier();
+        true
+    });
+    assert!(outs.iter().all(|&x| x));
+}
+
+/// Barriers are reusable across phases: after the phase-k barrier, every
+/// rank observes all phase-k contributions.
+#[test]
+fn barrier_reuse_across_phases() {
+    let p = 4;
+    let phases = 3;
+    let counter = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&counter);
+    Comm::run(p, move |mut world| {
+        for k in 0..phases {
+            c2.fetch_add(1, Ordering::SeqCst);
+            world.barrier();
+            let seen = c2.load(Ordering::SeqCst);
+            assert!(
+                seen >= p * (k + 1),
+                "after barrier {k}: saw {seen}, expected at least {}",
+                p * (k + 1)
+            );
+            // A second barrier in the same phase must also work.
+            world.barrier();
+        }
+    });
+    assert_eq!(counter.load(Ordering::SeqCst), p * phases);
+}
+
+/// all_gather_varied with an empty slice on one rank: the empty part is
+/// preserved in rank order on every rank.
+#[test]
+fn all_gather_varied_with_empty_rank() {
+    let outs = Comm::run(3, |mut c| {
+        let mine: Vec<f64> = match c.rank() {
+            0 => vec![10.0, 11.0],
+            1 => Vec::new(),
+            _ => vec![30.0],
+        };
+        c.all_gather_varied(&mine)
+    });
+    for parts in &outs {
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], vec![10.0, 11.0]);
+        assert_eq!(parts[1], Vec::<f64>::new());
+        assert_eq!(parts[2], vec![30.0]);
+    }
+    // Concatenating skips the empty contribution cleanly.
+    let outs = Comm::run(3, |mut c| {
+        let mine: Vec<f64> = if c.rank() == 1 { Vec::new() } else { vec![c.rank() as f64] };
+        c.all_gather(&mine)
+    });
+    assert!(outs.iter().all(|o| o == &[0.0, 2.0]));
+}
+
+/// Degenerate grids (one row / one column) still produce working
+/// sub-communicators whose reduces compose to the world reduce.
+#[test]
+fn degenerate_grid_subcomms() {
+    for (pr, pc) in [(1usize, 4usize), (4, 1)] {
+        let grid = Grid2d::new(pr, pc);
+        let outs = Comm::run(grid.size(), move |mut world| {
+            let (mut row, mut col) = grid.make_subcomms(&mut world);
+            let v = (world.rank() + 1) as f64;
+            let row_sum = row.all_reduce_scalar(v);
+            let total = col.all_reduce_scalar(row_sum);
+            (total, world.all_reduce_scalar(v))
+        });
+        for (composed, world_sum) in outs {
+            assert_eq!(world_sum, 10.0, "grid {pr}x{pc}");
+            assert_eq!(composed, 10.0, "grid {pr}x{pc}");
+        }
+    }
+}

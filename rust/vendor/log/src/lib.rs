@@ -1,0 +1,273 @@
+//! Offline std-only subset of the `log` logging facade.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides exactly the surface the workspace uses: the five severity
+//! macros, [`Level`] / [`LevelFilter`], the [`Log`] trait, and the global
+//! `set_logger` / `set_max_level` registry. Semantics match the real
+//! facade for that subset (same level ordering, same `max_level` fast
+//! path), so swapping the real `log` crate back in is a one-line
+//! `Cargo.toml` change.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Logging severity, most severe first (matches the `log` crate: a record
+/// is enabled when `record.level() <= max_level`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    /// The filter that admits exactly this level and above.
+    pub fn to_level_filter(self) -> LevelFilter {
+        match self {
+            Level::Error => LevelFilter::Error,
+            Level::Warn => LevelFilter::Warn,
+            Level::Info => LevelFilter::Info,
+            Level::Debug => LevelFilter::Debug,
+            Level::Trace => LevelFilter::Trace,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Verbosity ceiling for the global logger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl LevelFilter {
+    fn from_usize(v: usize) -> LevelFilter {
+        match v {
+            1 => LevelFilter::Error,
+            2 => LevelFilter::Warn,
+            3 => LevelFilter::Info,
+            4 => LevelFilter::Debug,
+            5 => LevelFilter::Trace,
+            _ => LevelFilter::Off,
+        }
+    }
+}
+
+/// Metadata of one log record.
+#[derive(Clone, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn builder() -> MetadataBuilder<'a> {
+        MetadataBuilder { level: Level::Info, target: "" }
+    }
+    pub fn level(&self) -> Level {
+        self.level
+    }
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// Builder for [`Metadata`].
+pub struct MetadataBuilder<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> MetadataBuilder<'a> {
+    pub fn level(mut self, level: Level) -> Self {
+        self.level = level;
+        self
+    }
+    pub fn target(mut self, target: &'a str) -> Self {
+        self.target = target;
+        self
+    }
+    pub fn build(self) -> Metadata<'a> {
+        Metadata { level: self.level, target: self.target }
+    }
+}
+
+/// One log record: metadata plus the formatted message arguments.
+#[derive(Clone, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool;
+    fn log(&self, record: &Record<'_>);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata<'_>) -> bool {
+        false
+    }
+    fn log(&self, _: &Record<'_>) {}
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: Mutex<Option<&'static dyn Log>> = Mutex::new(None);
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let mut slot = LOGGER.lock().unwrap();
+    if slot.is_some() {
+        return Err(SetLoggerError(()));
+    }
+    *slot = Some(logger);
+    Ok(())
+}
+
+/// Set the global verbosity ceiling (records above it are skipped before
+/// reaching the logger).
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current global verbosity ceiling.
+pub fn max_level() -> LevelFilter {
+    LevelFilter::from_usize(MAX_LEVEL.load(Ordering::Relaxed))
+}
+
+/// The installed logger (a no-op logger when none is installed).
+pub fn logger() -> &'static dyn Log {
+    LOGGER.lock().unwrap().unwrap_or(&NOP)
+}
+
+/// Implementation detail of the macros.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed) {
+        let record = Record { metadata: Metadata { level, target }, args };
+        let l = logger();
+        if l.enabled(record.metadata()) {
+            l.log(&record);
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_facade() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Debug <= Level::Debug);
+        assert_eq!(Level::Warn.to_level_filter(), LevelFilter::Warn);
+    }
+
+    #[test]
+    fn max_level_gates_records() {
+        set_max_level(LevelFilter::Warn);
+        assert_eq!(max_level(), LevelFilter::Warn);
+        // Debug (4) > Warn (2): skipped before the logger is consulted.
+        debug!("not delivered {}", 1);
+        set_max_level(LevelFilter::Off);
+    }
+
+    #[test]
+    fn display_pads() {
+        assert_eq!(format!("{:<5}", Level::Warn), "WARN ");
+    }
+}

@@ -1,0 +1,256 @@
+//! Offline std-only subset of the `num-traits` crate.
+//!
+//! Provides exactly the trait surface `dntt::linalg::scalar` bounds on —
+//! [`Float`], [`NumAssign`], [`FromPrimitive`] — implemented for `f32`
+//! and `f64` by delegating to the std inherent methods (which always
+//! take precedence over these trait methods, so no recursion). Swapping
+//! the real `num-traits` back in is a one-line `Cargo.toml` change.
+
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Rem, RemAssign, Sub, SubAssign};
+
+/// Floating-point numbers: arithmetic, ordering, and the usual
+/// transcendental / rounding methods.
+pub trait Float:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + Neg<Output = Self>
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Rem<Output = Self>
+{
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn nan() -> Self;
+    fn infinity() -> Self;
+    fn neg_infinity() -> Self;
+    fn epsilon() -> Self;
+    fn min_positive_value() -> Self;
+
+    fn is_nan(self) -> bool;
+    fn is_finite(self) -> bool;
+    fn is_sign_negative(self) -> bool;
+
+    fn abs(self) -> Self;
+    fn signum(self) -> Self;
+    fn recip(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn powf(self, n: Self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn log2(self) -> Self;
+    fn log10(self) -> Self;
+    fn floor(self) -> Self;
+    fn ceil(self) -> Self;
+    fn round(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn hypot(self, other: Self) -> Self;
+}
+
+macro_rules! impl_float {
+    ($t:ty) => {
+        impl Float for $t {
+            #[inline]
+            fn zero() -> Self {
+                0.0
+            }
+            #[inline]
+            fn one() -> Self {
+                1.0
+            }
+            #[inline]
+            fn nan() -> Self {
+                <$t>::NAN
+            }
+            #[inline]
+            fn infinity() -> Self {
+                <$t>::INFINITY
+            }
+            #[inline]
+            fn neg_infinity() -> Self {
+                <$t>::NEG_INFINITY
+            }
+            #[inline]
+            fn epsilon() -> Self {
+                <$t>::EPSILON
+            }
+            #[inline]
+            fn min_positive_value() -> Self {
+                <$t>::MIN_POSITIVE
+            }
+            #[inline]
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            #[inline]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline]
+            fn is_sign_negative(self) -> bool {
+                <$t>::is_sign_negative(self)
+            }
+            #[inline]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline]
+            fn signum(self) -> Self {
+                <$t>::signum(self)
+            }
+            #[inline]
+            fn recip(self) -> Self {
+                <$t>::recip(self)
+            }
+            #[inline]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline]
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            #[inline]
+            fn powf(self, n: Self) -> Self {
+                <$t>::powf(self, n)
+            }
+            #[inline]
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            #[inline]
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            #[inline]
+            fn log2(self) -> Self {
+                <$t>::log2(self)
+            }
+            #[inline]
+            fn log10(self) -> Self {
+                <$t>::log10(self)
+            }
+            #[inline]
+            fn floor(self) -> Self {
+                <$t>::floor(self)
+            }
+            #[inline]
+            fn ceil(self) -> Self {
+                <$t>::ceil(self)
+            }
+            #[inline]
+            fn round(self) -> Self {
+                <$t>::round(self)
+            }
+            #[inline]
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline]
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            #[inline]
+            fn mul_add(self, a: Self, b: Self) -> Self {
+                <$t>::mul_add(self, a, b)
+            }
+            #[inline]
+            fn hypot(self, other: Self) -> Self {
+                <$t>::hypot(self, other)
+            }
+        }
+    };
+}
+
+impl_float!(f32);
+impl_float!(f64);
+
+/// The compound-assignment operators, bundled like the real crate.
+pub trait NumAssign:
+    AddAssign<Self> + SubAssign<Self> + MulAssign<Self> + DivAssign<Self> + RemAssign<Self> + Sized
+{
+}
+
+impl<T> NumAssign for T where
+    T: AddAssign<T> + SubAssign<T> + MulAssign<T> + DivAssign<T> + RemAssign<T>
+{
+}
+
+/// Conversion from primitive integers / floats.
+pub trait FromPrimitive: Sized {
+    fn from_i64(n: i64) -> Option<Self>;
+    fn from_u64(n: u64) -> Option<Self>;
+    fn from_f64(n: f64) -> Option<Self>;
+    fn from_usize(n: usize) -> Option<Self> {
+        Self::from_u64(n as u64)
+    }
+    fn from_f32(n: f32) -> Option<Self> {
+        Self::from_f64(n as f64)
+    }
+}
+
+macro_rules! impl_from_primitive {
+    ($t:ty) => {
+        impl FromPrimitive for $t {
+            #[inline]
+            fn from_i64(n: i64) -> Option<Self> {
+                Some(n as $t)
+            }
+            #[inline]
+            fn from_u64(n: u64) -> Option<Self> {
+                Some(n as $t)
+            }
+            #[inline]
+            fn from_f64(n: f64) -> Option<Self> {
+                Some(n as $t)
+            }
+        }
+    };
+}
+
+impl_from_primitive!(f32);
+impl_from_primitive!(f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_norm<T: Float>(xs: &[T]) -> T {
+        let mut s = T::zero();
+        for &x in xs {
+            s = x.mul_add(x, s);
+        }
+        s.sqrt()
+    }
+
+    #[test]
+    fn float_surface_works_generically() {
+        assert_eq!(generic_norm(&[3.0f64, 4.0]), 5.0);
+        assert_eq!(generic_norm(&[3.0f32, 4.0]), 5.0);
+        assert!(f64::nan().is_nan());
+        assert_eq!((-2.5f64).abs(), 2.5);
+        assert_eq!(Float::max(1.0f64, 2.0), 2.0);
+    }
+
+    #[test]
+    fn num_assign_blanket_covers_floats() {
+        fn takes<T: NumAssign + Float>(mut x: T) -> T {
+            x += T::one();
+            x *= x;
+            x
+        }
+        assert_eq!(takes(1.0f64), 4.0);
+    }
+
+    #[test]
+    fn from_primitive_roundtrips() {
+        assert_eq!(f64::from_i64(-3), Some(-3.0));
+        assert_eq!(f32::from_usize(7), Some(7.0));
+        assert_eq!(f64::from_f64(0.5), Some(0.5));
+    }
+}
