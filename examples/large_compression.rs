@@ -61,7 +61,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     };
     let report = run_job(&job)?;
     println!("{}", report.summary());
-    assert!(report.output.tt.is_nonneg());
+    assert!(report.output.is_nonneg());
     assert!(report.compression > 100.0, "expected high compression, got {}", report.compression);
     println!(
         "E2E OK: compression {:.0}x, wall {:.1}s, pjrt hits {}",

@@ -24,7 +24,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     };
     let report = run_job(&job)?;
     println!("{}", report.summary());
-    assert!(report.output.tt.is_nonneg(), "nTT cores must be non-negative");
+    assert!(report.output.is_nonneg(), "nTT cores must be non-negative");
     let err = report.rel_error.unwrap();
     assert!(err < 0.1, "reconstruction error too high: {err}");
     println!("quickstart OK: rel error {err:.4}, compression {:.1}x", report.compression);

@@ -7,12 +7,13 @@
 //! accept the paper's full sizes.
 
 use crate::baselines::{ntucker_eps, tt_svd, tt_svd_fixed, tucker_hooi};
-use crate::coordinator::{run_job, InputSpec, JobConfig};
+use crate::coordinator::{run_job, Decomposition, InputSpec, JobConfig};
 use crate::data::{
     add_gaussian_noise, generate_faces, generate_video, mean_ssim_images, FaceConfig, VideoConfig,
 };
 use crate::dist::{CostModel, ProcGrid};
 use crate::error::Result;
+use crate::ht::{ht_serial, HtConfig};
 use crate::nmf::{NmfAlgo, NmfConfig};
 use crate::tensor::DenseTensor;
 use crate::ttrain::{ntt_serial, SyntheticTt, TtConfig};
@@ -197,6 +198,40 @@ pub fn fig8_sweep(
     Ok(rows)
 }
 
+/// nTT vs nHT compression curves on an `n⁴` synthetic tensor (the HT
+/// workload mirroring Fig 2's sweep): both serial drivers at each ε.
+pub fn ht_vs_tt_sweep(n: usize, eps_list: &[f64], nmf_iters: usize) -> Result<Vec<SweepRow>> {
+    let syn = SyntheticTt::new(vec![n; 4], vec![5, 5, 5], 32323232);
+    let t = syn.dense();
+    let mut rows = Vec::new();
+    for &eps in eps_list {
+        let t0 = Instant::now();
+        let out = ntt_serial(&t, &ntt_cfg(eps, nmf_iters, NmfAlgo::Bcd))?;
+        rows.push(SweepRow {
+            algo: "nTT".into(),
+            eps,
+            compression: out.tt.compression_ratio(),
+            rel_err: out.tt.rel_error(&t),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        let t0 = Instant::now();
+        let cfg = HtConfig {
+            eps,
+            nmf: NmfConfig { max_iters: nmf_iters, tol: 1e-10, ..Default::default() },
+            ..Default::default()
+        };
+        let out = ht_serial(&t, &cfg)?;
+        rows.push(SweepRow {
+            algo: "nHT".into(),
+            eps,
+            compression: out.ht.compression_ratio(),
+            rel_err: out.ht.rel_error(&t),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(rows)
+}
+
 // ===========================================================================
 // Figs 5–7 — scaling
 // ===========================================================================
@@ -262,6 +297,9 @@ pub enum ScalingMode {
 
 /// Parameters for a scaling study.
 pub struct ScalingParams {
+    /// Which decomposition to scale (the HT series mirrors the paper's TT
+    /// studies on the same tensors and grids).
+    pub decomp: Decomposition,
     /// Mode-size divisor vs the paper's 256 (default 4 → 64⁴ base tensor).
     pub shrink: usize,
     /// 2^k first-dim grid exponents to sweep (paper: 1..=5).
@@ -282,6 +320,7 @@ pub struct ScalingParams {
 impl Default for ScalingParams {
     fn default() -> Self {
         ScalingParams {
+            decomp: Decomposition::Tt,
             shrink: 4,
             ks: vec![1, 2, 3, 4, 5],
             iters: 10,
@@ -322,12 +361,19 @@ pub fn scaling_run(mode: ScalingMode, params: &ScalingParams) -> Result<Vec<Scal
     for (k, dims, ranks) in cases {
         let grid = ProcGrid::paper_grid(k, 4)?;
         for &algo in &params.algos {
+            // HT needs two fixed edge ranks per interior node; cycle the
+            // requested TT-rank list over the 2(d−1) tree edges.
+            let ht_ranks: Vec<usize> =
+                ranks.iter().cycle().take(2 * (dims.len() - 1)).cloned().collect();
+            let nmf = NmfConfig { max_iters: params.iters, algo, ..Default::default() };
             let job = JobConfig {
+                decomp: params.decomp,
                 tt: TtConfig {
                     fixed_ranks: Some(ranks.clone()),
-                    nmf: NmfConfig { max_iters: params.iters, algo, ..Default::default() },
+                    nmf: nmf.clone(),
                     ..Default::default()
                 },
+                ht: HtConfig { fixed_ranks: Some(ht_ranks), nmf, ..Default::default() },
                 check_error: false,
                 cost_model: Some(params.cost_model),
                 ..JobConfig::new(
@@ -459,6 +505,32 @@ mod tests {
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].p, 16);
         assert_eq!(pts[1].p, 32);
+    }
+
+    #[test]
+    fn ht_sweep_tiny() {
+        let rows = ht_vs_tt_sweep(6, &[0.5], 20).unwrap();
+        assert_eq!(rows.len(), 2); // nTT + nHT
+        assert_eq!(rows[0].algo, "nTT");
+        assert_eq!(rows[1].algo, "nHT");
+        assert!(rows.iter().all(|r| r.compression > 0.0 && r.rel_err.is_finite()));
+    }
+
+    #[test]
+    fn scaling_ht_tiny() {
+        let params = ScalingParams {
+            decomp: Decomposition::Ht,
+            shrink: 32, // 8^4 tensor
+            ks: vec![1],
+            iters: 3,
+            algos: vec![NmfAlgo::Bcd],
+            ranks: vec![2, 2, 2],
+            ..Default::default()
+        };
+        let pts = scaling_run(ScalingMode::Strong, &params).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].p, 16);
+        assert!(pts[0].modeled.total_secs() > 0.0);
     }
 
     #[test]

@@ -4,10 +4,42 @@
 use crate::data::{FaceConfig, VideoConfig};
 use crate::dist::chunkstore::SpillMode;
 use crate::dist::{CostModel, ProcGrid};
+use crate::ht::HtConfig;
 use crate::tensor::DenseTensor;
 use crate::ttrain::{SyntheticTt, TtConfig};
 use std::path::PathBuf;
 use std::sync::Arc;
+
+/// Which tensor-network decomposition a job runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Decomposition {
+    /// Tensor train (Alg 2 of the paper) — the left-to-right sweep.
+    #[default]
+    Tt,
+    /// Hierarchical Tucker — the level-by-level sweep down the balanced
+    /// dimension tree (`crate::ht`).
+    Ht,
+}
+
+impl Decomposition {
+    pub fn name(self) -> &'static str {
+        match self {
+            Decomposition::Tt => "tt",
+            Decomposition::Ht => "ht",
+        }
+    }
+}
+
+impl std::str::FromStr for Decomposition {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "tt" => Ok(Decomposition::Tt),
+            "ht" => Ok(Decomposition::Ht),
+            _ => Err(format!("unknown decomposition '{s}' (tt|ht)")),
+        }
+    }
+}
 
 /// Where the input tensor comes from.
 #[derive(Clone)]
@@ -68,7 +100,12 @@ pub enum BackendChoice {
 pub struct JobConfig {
     pub input: InputSpec,
     pub grid: ProcGrid,
+    /// Which network to decompose into (TT by default).
+    pub decomp: Decomposition,
+    /// TT parameters (used when `decomp == Decomposition::Tt`).
     pub tt: TtConfig,
+    /// HT parameters (used when `decomp == Decomposition::Ht`).
+    pub ht: HtConfig,
     pub backend: BackendChoice,
     pub spill: SpillMode,
     /// Model cluster timings with this α-β model (None = measured only).
@@ -83,7 +120,9 @@ impl JobConfig {
         JobConfig {
             input,
             grid,
+            decomp: Decomposition::default(),
             tt: TtConfig::default(),
+            ht: HtConfig::default(),
             backend: BackendChoice::Native,
             spill: SpillMode::Memory,
             cost_model: Some(CostModel::default()),

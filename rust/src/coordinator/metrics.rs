@@ -1,15 +1,90 @@
-//! Job reports: human tables + machine-readable JSON.
+//! Job reports: human tables + machine-readable JSON, for both the TT
+//! and the HT decomposition outputs.
 
-use super::job::JobConfig;
+use super::job::{Decomposition, JobConfig};
+use crate::ht::HtOutput;
+use crate::tensor::DenseTensor;
 use crate::ttrain::TtOutput;
 use crate::util::json::Json;
 use crate::util::timer::{Breakdown, ALL_CATS};
 
+/// The decomposition a job produced, tagged by network.
+pub enum DecompOutput {
+    Tt(TtOutput),
+    Ht(HtOutput),
+}
+
+impl DecompOutput {
+    /// The TT output, when the job ran a tensor train.
+    pub fn tt(&self) -> Option<&TtOutput> {
+        match self {
+            DecompOutput::Tt(o) => Some(o),
+            DecompOutput::Ht(_) => None,
+        }
+    }
+
+    /// The HT output, when the job ran a hierarchical Tucker.
+    pub fn ht(&self) -> Option<&HtOutput> {
+        match self {
+            DecompOutput::Tt(_) => None,
+            DecompOutput::Ht(o) => Some(o),
+        }
+    }
+
+    pub fn decomp(&self) -> Decomposition {
+        match self {
+            DecompOutput::Tt(_) => Decomposition::Tt,
+            DecompOutput::Ht(_) => Decomposition::Ht,
+        }
+    }
+
+    /// Rank chain: TT ranks `r_0..r_d` (both ends 1) or HT parent-edge
+    /// ranks in BFS node order (first entry is the root's trivial 1).
+    pub fn ranks(&self) -> Vec<usize> {
+        match self {
+            DecompOutput::Tt(o) => o.tt.ranks().to_vec(),
+            DecompOutput::Ht(o) => o.ht.ranks().to_vec(),
+        }
+    }
+
+    pub fn compression(&self) -> f64 {
+        match self {
+            DecompOutput::Tt(o) => o.tt.compression_ratio(),
+            DecompOutput::Ht(o) => o.ht.compression_ratio(),
+        }
+    }
+
+    pub fn is_nonneg(&self) -> bool {
+        match self {
+            DecompOutput::Tt(o) => o.tt.is_nonneg(),
+            DecompOutput::Ht(o) => o.ht.is_nonneg(),
+        }
+    }
+
+    /// Critical-path measured breakdown.
+    pub fn breakdown(&self) -> &Breakdown {
+        match self {
+            DecompOutput::Tt(o) => &o.breakdown,
+            DecompOutput::Ht(o) => &o.breakdown,
+        }
+    }
+
+    /// Relative reconstruction error against a reference tensor.
+    pub fn rel_error(&self, reference: &DenseTensor<f64>) -> f64 {
+        match self {
+            DecompOutput::Tt(o) => o.tt.rel_error(reference),
+            DecompOutput::Ht(o) => o.ht.rel_error(reference),
+        }
+    }
+}
+
 /// Aggregated result of one decomposition job.
 pub struct JobReport {
     pub label: String,
+    pub decomp: Decomposition,
     pub dims: Vec<usize>,
     pub grid: Vec<usize>,
+    /// See [`DecompOutput::ranks`].
     pub ranks: Vec<usize>,
     pub compression: f64,
     pub rel_error: Option<f64>,
@@ -19,13 +94,13 @@ pub struct JobReport {
     /// α-β-modeled cluster breakdown (if a cost model was configured).
     pub modeled: Option<Breakdown>,
     pub pjrt_hits: u64,
-    pub output: TtOutput,
+    pub output: DecompOutput,
 }
 
 impl JobReport {
     pub fn new(
         job: &JobConfig,
-        output: TtOutput,
+        output: DecompOutput,
         wall_secs: f64,
         rel_error: Option<f64>,
         modeled: Option<Breakdown>,
@@ -33,13 +108,14 @@ impl JobReport {
     ) -> Self {
         JobReport {
             label: job.input.label(),
+            decomp: output.decomp(),
             dims: job.input.dims(),
             grid: job.grid.dims().to_vec(),
-            ranks: output.tt.ranks().to_vec(),
-            compression: output.tt.compression_ratio(),
+            ranks: output.ranks(),
+            compression: output.compression(),
             rel_error,
             wall_secs,
-            measured: output.breakdown.clone(),
+            measured: output.breakdown().clone(),
             modeled,
             pjrt_hits,
             output,
@@ -50,12 +126,18 @@ impl JobReport {
     pub fn summary(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "input {} | grid {:?} ({} ranks)\n",
+            "input {} | decomp {} | grid {:?} ({} ranks)\n",
             self.label,
+            self.decomp.name(),
             self.grid,
             self.grid.iter().product::<usize>()
         ));
-        s.push_str(&format!("TT ranks      : {:?}\n", self.ranks));
+        match self.decomp {
+            Decomposition::Tt => s.push_str(&format!("TT ranks      : {:?}\n", self.ranks)),
+            Decomposition::Ht => {
+                s.push_str(&format!("HT edge ranks : {:?} (BFS node order)\n", self.ranks))
+            }
+        }
         s.push_str(&format!("compression   : {:.4}x\n", self.compression));
         if let Some(e) = self.rel_error {
             s.push_str(&format!("rel error     : {:.6}\n", e));
@@ -70,13 +152,38 @@ impl JobReport {
             s.push_str("\nmodeled cluster breakdown (α-β model):\n");
             s.push_str(&m.table());
         }
-        // Per-stage table.
-        s.push_str("\nstage   m        n          rank  svd_eps    nmf_relerr  restarts\n");
-        for st in &self.output.stages {
-            s.push_str(&format!(
-                "{:<7} {:<8} {:<10} {:<5} {:<10.3e} {:<11.4e} {}\n",
-                st.mode, st.m, st.n, st.rank, st.svd_eps, st.nmf.rel_err, st.nmf.restarts
-            ));
+        match &self.output {
+            DecompOutput::Tt(out) => {
+                s.push_str(
+                    "\nstage   m        n          rank  svd_eps    nmf_relerr  restarts\n",
+                );
+                for st in &out.stages {
+                    s.push_str(&format!(
+                        "{:<7} {:<8} {:<10} {:<5} {:<10.3e} {:<11.4e} {}\n",
+                        st.mode, st.m, st.n, st.rank, st.svd_eps, st.nmf.rel_err, st.nmf.restarts
+                    ));
+                }
+            }
+            DecompOutput::Ht(out) => {
+                s.push_str(
+                    "\nnode  modes   edge  m        n        rank  svd_eps    nmf_relerr  secs\n",
+                );
+                for st in &out.stages {
+                    s.push_str(&format!(
+                        "{:<5} [{},{})   {:<4} {:<8} {:<8} {:<5} {:<10.3e} {:<11.4e} {:.3}\n",
+                        st.node,
+                        st.modes.0,
+                        st.modes.1,
+                        if st.left { "L" } else { "R" },
+                        st.m,
+                        st.n,
+                        st.rank,
+                        st.svd_eps,
+                        st.nmf.rel_err,
+                        st.secs
+                    ));
+                }
+            }
         }
         s
     }
@@ -101,14 +208,58 @@ impl JobReport {
                     .collect(),
             )
         };
+        let stages = match &self.output {
+            DecompOutput::Tt(out) => Json::Arr(
+                out.stages
+                    .iter()
+                    .map(|st| {
+                        let mut f = vec![
+                            ("mode", Json::Num(st.mode as f64)),
+                            ("m", Json::Num(st.m as f64)),
+                            ("n", Json::Num(st.n as f64)),
+                            ("rank", Json::Num(st.rank as f64)),
+                            ("nmf_rel_err", Json::Num(st.nmf.rel_err)),
+                            ("restarts", Json::Num(st.nmf.restarts as f64)),
+                        ];
+                        if st.svd_eps.is_finite() {
+                            f.push(("svd_eps", Json::Num(st.svd_eps)));
+                        }
+                        Json::obj(f)
+                    })
+                    .collect(),
+            ),
+            DecompOutput::Ht(out) => Json::Arr(
+                out.stages
+                    .iter()
+                    .map(|st| {
+                        let mut f = vec![
+                            ("node", Json::Num(st.node as f64)),
+                            ("modes", Json::arr_usize(&[st.modes.0, st.modes.1])),
+                            ("edge", Json::Str(if st.left { "L" } else { "R" }.into())),
+                            ("m", Json::Num(st.m as f64)),
+                            ("n", Json::Num(st.n as f64)),
+                            ("rank", Json::Num(st.rank as f64)),
+                            ("nmf_rel_err", Json::Num(st.nmf.rel_err)),
+                            ("secs", Json::Num(st.secs)),
+                        ];
+                        if st.svd_eps.is_finite() {
+                            f.push(("svd_eps", Json::Num(st.svd_eps)));
+                        }
+                        Json::obj(f)
+                    })
+                    .collect(),
+            ),
+        };
         let mut fields = vec![
             ("label", Json::Str(self.label.clone())),
+            ("decomp", Json::Str(self.decomp.name().into())),
             ("dims", Json::arr_usize(&self.dims)),
             ("grid", Json::arr_usize(&self.grid)),
             ("ranks", Json::arr_usize(&self.ranks)),
             ("compression", Json::Num(self.compression)),
             ("wall_secs", Json::Num(self.wall_secs)),
             ("measured", breakdown_json(&self.measured)),
+            ("stages", stages),
             ("pjrt_hits", Json::Num(self.pjrt_hits as f64)),
         ];
         if let Some(e) = self.rel_error {
@@ -125,8 +276,9 @@ impl JobReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{run_job, InputSpec, JobConfig};
+    use crate::coordinator::{run_job, Decomposition, InputSpec, JobConfig};
     use crate::dist::ProcGrid;
+    use crate::ht::HtConfig;
     use crate::nmf::NmfConfig;
     use crate::ttrain::{SyntheticTt, TtConfig};
 
@@ -147,10 +299,37 @@ mod tests {
         let s = rep.summary();
         assert!(s.contains("TT ranks"));
         assert!(s.contains("compression"));
+        assert!(s.contains("decomp tt"));
         let j = rep.to_json();
         assert!(j.get("compression").as_f64().unwrap() > 0.0);
         assert!(j.get("measured").as_obj().is_some());
         // JSON roundtrips.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn ht_summary_and_json_render() {
+        let job = JobConfig {
+            decomp: Decomposition::Ht,
+            ht: HtConfig {
+                eps: 1e-6,
+                nmf: NmfConfig { max_iters: 20, ..Default::default() },
+                ..Default::default()
+            },
+            ..JobConfig::new(
+                InputSpec::Synthetic(SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 5)),
+                ProcGrid::new(vec![1, 1, 1]).unwrap(),
+            )
+        };
+        let rep = run_job(&job).unwrap();
+        let s = rep.summary();
+        assert!(s.contains("HT edge ranks"));
+        assert!(s.contains("decomp ht"));
+        assert!(s.contains("node  modes"));
+        let j = rep.to_json();
+        assert_eq!(j.get("decomp").as_str().unwrap(), "ht");
+        // Two stages per interior node, all serialized (NaN-free).
+        assert_eq!(j.get("stages").as_arr().unwrap().len(), 4);
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 }

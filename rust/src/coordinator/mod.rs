@@ -1,18 +1,18 @@
 //! The L3 coordinator: turns a [`JobConfig`] into thread ranks, feeds them
-//! their tensor blocks, runs the distributed nTT, and aggregates results,
-//! timings and cluster-model estimates into a [`JobReport`].
+//! their tensor blocks, runs the distributed nTT or nHT (per
+//! [`Decomposition`]), and aggregates results, timings and cluster-model
+//! estimates into a [`JobReport`].
 
 pub mod job;
 pub mod metrics;
 
-pub use job::{BackendChoice, InputSpec, JobConfig};
-pub use metrics::JobReport;
+pub use job::{BackendChoice, Decomposition, InputSpec, JobConfig};
+pub use metrics::{DecompOutput, JobReport};
 
 use crate::dist::{Comm, SharedStore};
 use crate::error::{DnttError, Result};
 use crate::runtime::{NativeBackend, PjrtBackend, PjrtEngine};
 use crate::ttrain::driver::{dist_ntt, extract_block};
-use crate::ttrain::TtOutput;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -38,11 +38,13 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     let t0 = Instant::now();
     let input = job.input.clone();
     let grid = job.grid.clone();
+    let decomp = job.decomp;
     let tt_cfg = job.tt.clone();
+    let ht_cfg = job.ht.clone();
     let dims2 = dims.clone();
     let dense2 = dense.clone();
     let eng2 = engine.clone();
-    let mut outs: Vec<Result<TtOutput>> = Comm::run(p, move |mut world| {
+    let mut outs: Vec<Result<DecompOutput>> = Comm::run(p, move |mut world| {
         let rank = world.rank();
         // Build this rank's block.
         let block = match (&input, &dense2) {
@@ -51,18 +53,29 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
             _ => unreachable!("non-synthetic inputs materialize"),
         };
         let (mut row, mut col) = grid2.make_subcomms(&mut world);
+        // One driver call per (decomposition, backend) choice.
+        let run = |world: &mut Comm,
+                   row: &mut Comm,
+                   col: &mut Comm,
+                   backend: &dyn crate::runtime::ComputeBackend|
+         -> Result<DecompOutput> {
+            match decomp {
+                Decomposition::Tt => dist_ntt(
+                    world, row, col, &store, &grid, grid2, &dims2, block, backend, &tt_cfg,
+                )
+                .map(DecompOutput::Tt),
+                Decomposition::Ht => crate::ht::dist_nht(
+                    world, row, col, &store, &grid, grid2, &dims2, block, backend, &ht_cfg,
+                )
+                .map(DecompOutput::Ht),
+            }
+        };
         match &eng2 {
             Some(e) => {
                 let backend = PjrtBackend::new(Arc::clone(e));
-                dist_ntt(
-                    &mut world, &mut row, &mut col, &store, &grid, grid2, &dims2, block,
-                    &backend, &tt_cfg,
-                )
+                run(&mut world, &mut row, &mut col, &backend)
             }
-            None => dist_ntt(
-                &mut world, &mut row, &mut col, &store, &grid, grid2, &dims2, block,
-                &NativeBackend, &tt_cfg,
-            ),
+            None => run(&mut world, &mut row, &mut col, &NativeBackend),
         }
     });
     let wall_secs = t0.elapsed().as_secs_f64();
@@ -81,16 +94,16 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     let rel_error = if job.check_error {
         match (&job.input, &dense) {
             (InputSpec::Synthetic(s), _) if s.len() <= 20_000_000 => {
-                Some(output.tt.rel_error(&s.dense()))
+                Some(output.rel_error(&s.dense()))
             }
-            (_, Some(t)) => Some(output.tt.rel_error(t)),
+            (_, Some(t)) => Some(output.rel_error(t)),
             _ => None,
         }
     } else {
         None
     };
 
-    let modeled = job.cost_model.map(|m| m.model_breakdown(&output.breakdown, p));
+    let modeled = job.cost_model.map(|m| m.model_breakdown(output.breakdown(), p));
     let pjrt_hits = engine
         .as_ref()
         .map(|e| e.stats.hits.load(std::sync::atomic::Ordering::Relaxed))
@@ -147,7 +160,34 @@ mod tests {
         };
         let rep = run_job(&job).unwrap();
         assert!(rep.rel_error.unwrap() < 0.6);
-        assert!(rep.output.tt.is_nonneg());
+        assert!(rep.output.is_nonneg());
+    }
+
+    #[test]
+    fn ht_job_end_to_end_with_per_node_stages() {
+        let job = JobConfig {
+            decomp: Decomposition::Ht,
+            ht: crate::ht::HtConfig {
+                eps: 1e-6,
+                nmf: crate::nmf::NmfConfig { max_iters: 80, ..Default::default() },
+                ..Default::default()
+            },
+            ..JobConfig::new(
+                InputSpec::Synthetic(SyntheticTt::new(vec![6, 6, 6], vec![2, 2], 3)),
+                ProcGrid::new(vec![2, 1, 2]).unwrap(),
+            )
+        };
+        let rep = run_job(&job).unwrap();
+        let out = rep.output.ht().expect("HT job returns an HT output");
+        // d = 3 → 2 interior nodes → 4 per-tree-node stage records, each
+        // with a wall-time entry.
+        assert_eq!(out.stages.len(), 4);
+        assert!(out.stages.iter().all(|s| s.secs >= 0.0 && s.rank >= 1));
+        assert_eq!(rep.ranks.len(), out.ht.tree().len());
+        assert!(rep.rel_error.unwrap() < 0.2);
+        assert!(rep.compression > 0.0);
+        assert!(rep.output.is_nonneg());
+        assert!(rep.modeled.is_some());
     }
 
     #[test]

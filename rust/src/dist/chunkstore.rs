@@ -25,6 +25,13 @@
 //!   `nmf::dist`. The logical array is `H` itself in row-major order,
 //!   which *is* the next remainder tensor of Alg 2 — so the next stage's
 //!   [`dist_reshape`] can consume `H` without any pre-pass.
+//! * [`Layout::WGrid`] — the NMF output `W: m × r` distributed by rows in
+//!   world-rank order: rank `(i, j)` stores the `mw × r` block `(Wⁱ)ʲ`.
+//!   The logical array is `W` row-major — the left-child hand-off of the
+//!   hierarchical-Tucker sweep (`crate::ht`).
+//! * [`Layout::HtPermuted`] — the same chunks as an [`Layout::HtGrid`],
+//!   but presenting the *permuted* logical order the HT right-child
+//!   matricization needs (left-edge index moved from rows to columns).
 //!
 //! # Collective protocol
 //!
@@ -72,15 +79,43 @@ pub enum Layout {
     /// `cols = BlockDim(n, pc)` and `sub = BlockDim(cols.size_of(j), pr)`
     /// — stored **transposed** as an `nh × r` row-major block.
     HtGrid { r: usize, n: usize, pr: usize, pc: usize },
+    /// The row-distributed-W layout: logical array `W: m × r` (row-major);
+    /// chunk `i·pc + j` holds rows
+    /// `[rows.start_of(i) + sub.start_of(j), …)` of `W` — where
+    /// `rows = BlockDim(m, pr)` and `sub = BlockDim(rows.size_of(i), pc)`
+    /// — as an `mw × r` row-major block (the `(Wⁱ)ʲ` distribution of
+    /// `nmf::dist`).
+    WGrid { m: usize, r: usize, pr: usize, pc: usize },
+    /// A permuted view of an NMF output `H: r × (n2·rt)` that keeps the
+    /// chunks of `HtGrid { r, n: n2·rt, pr, pc }` but reorders the logical
+    /// array from `H`'s row-major `(j1, i2, k)` to `(i2, j1, k)`: element
+    /// `lin = (i2·r + j1)·rt + k` is `H[j1, i2·rt + k]`. This is the
+    /// right-child matricization hand-off of the hierarchical-Tucker
+    /// driver (`crate::ht`): the left-edge index `j1` and the parent-edge
+    /// index `k` move to the columns so the next NMF factors over `i2`.
+    HtPermuted { r: usize, n2: usize, rt: usize, pr: usize, pc: usize },
 }
 
 impl Layout {
+    /// The `HtGrid` layout an [`Layout::HtPermuted`] shares its chunks
+    /// with.
+    fn permuted_inner(&self) -> Layout {
+        match self {
+            Layout::HtPermuted { r, n2, rt, pr, pc } => {
+                Layout::HtGrid { r: *r, n: n2 * rt, pr: *pr, pc: *pc }
+            }
+            _ => unreachable!("permuted_inner is only defined for HtPermuted"),
+        }
+    }
+
     /// Total number of elements in the logical array.
     pub fn total_len(&self) -> usize {
         match self {
             Layout::TensorGrid { dims, .. } => dims.iter().product(),
             Layout::MatGrid { m, n, .. } => m * n,
             Layout::HtGrid { r, n, .. } => r * n,
+            Layout::WGrid { m, r, .. } => m * r,
+            Layout::HtPermuted { r, n2, rt, .. } => r * n2 * rt,
         }
     }
 
@@ -88,7 +123,10 @@ impl Layout {
     pub fn num_chunks(&self) -> usize {
         match self {
             Layout::TensorGrid { grid, .. } => grid.iter().product(),
-            Layout::MatGrid { pr, pc, .. } | Layout::HtGrid { pr, pc, .. } => pr * pc,
+            Layout::MatGrid { pr, pc, .. }
+            | Layout::HtGrid { pr, pc, .. }
+            | Layout::WGrid { pr, pc, .. }
+            | Layout::HtPermuted { pr, pc, .. } => pr * pc,
         }
     }
 
@@ -117,6 +155,12 @@ impl Layout {
                 let cols = BlockDim::new(*n, *pc);
                 BlockDim::new(cols.size_of(j), *pr).size_of(i) * r
             }
+            Layout::WGrid { m, r, pr, pc } => {
+                let (i, j) = (c / pc, c % pc);
+                let rows = BlockDim::new(*m, *pr);
+                BlockDim::new(rows.size_of(i), *pc).size_of(j) * r
+            }
+            Layout::HtPermuted { .. } => self.permuted_inner().chunk_len(c),
         }
     }
 
@@ -178,6 +222,28 @@ impl Layout {
                 // Chunk data is nh × r row-major (H transposed): consecutive
                 // columns of H are r elements apart, so runs are length 1.
                 (i * pc + j, local_col * r + row, 1)
+            }
+            Layout::WGrid { m, r, pr, pc } => {
+                let (grow, gcol) = (lin / r, lin % r);
+                let rows = BlockDim::new(*m, *pr);
+                let i = rows.owner_of(grow);
+                let within = grow - rows.start_of(i);
+                let sub = BlockDim::new(rows.size_of(i), *pc);
+                let j = sub.owner_of(within);
+                let local_row = within - sub.start_of(j);
+                // Chunks are mw × r row-major blocks: contiguous to the end
+                // of the current row.
+                (i * pc + j, local_row * r + gcol, r - gcol)
+            }
+            Layout::HtPermuted { r, n2, rt, .. } => {
+                let (i2, rem) = (lin / (r * rt), lin % (r * rt));
+                let (j1, k) = (rem / rt, rem % rt);
+                // Element (i2, j1, k) of the permuted array is H[j1, i2·rt+k].
+                let h_lin = j1 * (n2 * rt) + i2 * rt + k;
+                let (chunk, offset, _) = self.permuted_inner().locate_run(h_lin);
+                // The permutation breaks contiguity (and HtGrid runs are
+                // single elements anyway).
+                (chunk, offset, 1)
             }
         }
     }
@@ -579,6 +645,74 @@ mod tests {
             store.publish("h", &l, j, chunk).unwrap();
         }
         assert_eq!(store.view("h").unwrap().to_dense(), h);
+    }
+
+    #[test]
+    fn w_grid_roundtrips_through_store() {
+        // W: 5x2 over a 2x2 grid: block-row 0 = rows 0..3 (sub-split 2|1),
+        // block-row 1 = rows 3..5 (sub-split 1|1).
+        let (m, r, pr, pc) = (5usize, 2usize, 2usize, 2usize);
+        let l = Layout::WGrid { m, r, pr, pc };
+        assert_eq!(l.total_len(), 10);
+        assert_eq!(l.num_chunks(), 4);
+        assert_eq!(
+            (0..4).map(|c| l.chunk_len(c)).collect::<Vec<_>>(),
+            vec![4, 2, 2, 2]
+        );
+        let w: Vec<f64> = (0..m * r).map(|x| x as f64).collect();
+        let store = SharedStore::new(SpillMode::Memory);
+        let rows = BlockDim::new(m, pr);
+        for i in 0..pr {
+            let sub = BlockDim::new(rows.size_of(i), pc);
+            for j in 0..pc {
+                let g0 = rows.start_of(i) + sub.start_of(j);
+                let chunk: Vec<f64> =
+                    w[g0 * r..(g0 + sub.size_of(j)) * r].to_vec();
+                store.publish("w", &l, i * pc + j, chunk).unwrap();
+            }
+        }
+        assert_eq!(store.view("w").unwrap().to_dense(), w);
+        // Runs extend to the end of a row.
+        assert_eq!(l.locate_run(0).2, 2);
+        assert_eq!(l.locate_run(1).2, 1);
+    }
+
+    #[test]
+    fn ht_permuted_presents_permuted_order() {
+        // H: r=2 x (n2*rt = 3*2 = 6) over a 1x2 grid, published in the
+        // HtGrid chunking; the permuted view must read (i2, j1, k) order.
+        let (r, n2, rt, pr, pc) = (2usize, 3usize, 2usize, 1usize, 2usize);
+        let n = n2 * rt;
+        let perm = Layout::HtPermuted { r, n2, rt, pr, pc };
+        assert_eq!(perm.total_len(), r * n);
+        let inner = Layout::HtGrid { r, n, pr, pc };
+        let h: Vec<f64> = (0..r * n).map(|x| x as f64).collect(); // row-major H
+        let store = SharedStore::new(SpillMode::Memory);
+        let cols = BlockDim::new(n, pc);
+        for j in 0..pc {
+            let nj = cols.size_of(j);
+            let mut chunk = Vec::with_capacity(nj * r);
+            for lc in 0..nj {
+                for row in 0..r {
+                    chunk.push(h[row * n + cols.start_of(j) + lc]);
+                }
+            }
+            // Chunk shapes agree between the inner and permuted layouts.
+            assert_eq!(inner.chunk_len(j), chunk.len());
+            store.publish("hp", &perm, j, chunk).unwrap();
+        }
+        let mut want = Vec::with_capacity(r * n);
+        for i2 in 0..n2 {
+            for j1 in 0..r {
+                for k in 0..rt {
+                    want.push(h[j1 * n + i2 * rt + k]);
+                }
+            }
+        }
+        assert_eq!(store.view("hp").unwrap().to_dense(), want);
+        for lin in 0..perm.total_len() {
+            assert_eq!(perm.locate_run(lin).2, 1);
+        }
     }
 
     #[test]

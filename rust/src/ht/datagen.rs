@@ -1,0 +1,76 @@
+//! Synthetic hierarchical-Tucker workload generation.
+//!
+//! A ground-truth [`HtTensor`] with prescribed dims and a uniform edge
+//! rank is sampled with uniform [0,1) node matrices and the full tensor
+//! is its contraction — the HT analogue of
+//! [`crate::ttrain::SyntheticTt`]. Every matricization the HT sweep
+//! factorizes then has exact non-negative rank ≤ the generator rank, so
+//! the ε-threshold rank selection and the NMF can recover the network.
+
+use crate::tensor::{DenseTensor, HtTensor};
+use crate::util::rng::Rng;
+
+/// Ground-truth description of a synthetic HT tensor.
+#[derive(Clone, Debug)]
+pub struct SyntheticHt {
+    pub dims: Vec<usize>,
+    /// Uniform non-root edge rank.
+    pub rank: usize,
+    pub seed: u64,
+}
+
+impl SyntheticHt {
+    pub fn new(dims: Vec<usize>, rank: usize, seed: u64) -> Self {
+        assert!(dims.len() >= 2, "SyntheticHt needs at least 2 modes");
+        assert!(rank >= 1, "SyntheticHt rank must be ≥ 1");
+        SyntheticHt { dims, rank, seed }
+    }
+
+    /// Generate the ground-truth HT (node matrices only; cheap).
+    pub fn ground_truth(&self) -> HtTensor<f64> {
+        let mut rng = Rng::new(self.seed);
+        HtTensor::rand_uniform(&self.dims, self.rank, &mut rng).expect("synthetic HT")
+    }
+
+    /// Full dense tensor (small cases / tests).
+    pub fn dense(&self) -> DenseTensor<f64> {
+        self.ground_truth().reconstruct()
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Size in bytes at f64.
+    pub fn nbytes(&self) -> usize {
+        self.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_nonneg() {
+        let syn = SyntheticHt::new(vec![4, 4, 4], 2, 99);
+        assert_eq!(syn.dense().as_slice(), syn.dense().as_slice());
+        assert!(syn.dense().is_nonneg());
+        assert_eq!(syn.len(), 64);
+        assert_eq!(syn.nbytes(), 512);
+    }
+
+    #[test]
+    fn ground_truth_ranks_are_uniform() {
+        let syn = SyntheticHt::new(vec![3, 4, 5, 6], 3, 7);
+        let ht = syn.ground_truth();
+        assert_eq!(ht.ranks()[0], 1);
+        assert!(ht.ranks()[1..].iter().all(|&r| r == 3));
+        assert_eq!(ht.reconstruct().dims(), &[3, 4, 5, 6]);
+    }
+}

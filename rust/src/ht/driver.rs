@@ -1,0 +1,448 @@
+//! The distributed non-negative hierarchical Tucker driver.
+//!
+//! Processes the balanced [`DimTree`] level-by-level (BFS node order —
+//! SPMD-deterministic on every rank). Each tree node `t` owns a
+//! distributed matrix `V_t: n_{S_t} × r_t` (the root owns the input
+//! tensor, `r = 1`); an interior node runs **two** stages:
+//!
+//! 1. **left edge** — [`dist_reshape`] the node array into
+//!    `M1: n_left × (n_right·r_t)` on the 2-D grid, select the edge rank
+//!    with the distributed ε-threshold SVD, factorize `M1 ≈ W1·H1` with
+//!    the distributed NMF; `W1` (kept distributed under
+//!    [`Layout::WGrid`]) becomes the left child's array;
+//! 2. **right edge** — reshape `H1` through [`Layout::HtPermuted`] into
+//!    `M2: n_right × (r1·r_t)`, select, factorize `M2 ≈ W2·H2`; `W2`
+//!    becomes the right child's array and the small `H2` is gathered on
+//!    every rank as the node's transfer tensor.
+//!
+//! Leaves gather their `n_i × r_t` array as the leaf factor. The result
+//! is an [`HtTensor`] identical on every rank, with per-tree-node stage
+//! records and the same critical-path cost breakdown the TT driver
+//! reports.
+
+use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
+use crate::error::{DnttError, Result};
+use crate::linalg::Mat;
+use crate::nmf::{dist_nmf_pruned, NmfConfig, NmfStats};
+use crate::runtime::backend::ComputeBackend;
+use crate::tensor::ht::{DimTree, HtNode, HtTensor};
+use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
+use crate::util::timer::{Breakdown, Cat};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Hierarchical-Tucker decomposition parameters.
+#[derive(Clone, Debug)]
+pub struct HtConfig {
+    /// Per-stage relative-error threshold ε for rank selection.
+    pub eps: f64,
+    /// Fixed edge ranks (skips the SVD): two per interior node in BFS
+    /// node order — left edge then right edge. Length must be `2(d−1)`.
+    pub fixed_ranks: Option<Vec<usize>>,
+    /// NMF settings (`rank` is overridden per stage).
+    pub nmf: NmfConfig,
+    /// Rank-selection settings (`eps` is overridden from `self.eps`).
+    pub rank_select: RankSelectConfig,
+    /// Prune all-zero rows/columns of each stage matrix before the NMF
+    /// (see [`crate::nmf::dist_nmf_pruned`]).
+    pub prune: bool,
+}
+
+impl Default for HtConfig {
+    fn default() -> Self {
+        HtConfig {
+            eps: 0.01,
+            fixed_ranks: None,
+            nmf: NmfConfig::default(),
+            rank_select: RankSelectConfig::default(),
+            prune: false,
+        }
+    }
+}
+
+/// Record of one per-node NMF stage (two per interior tree node).
+#[derive(Clone, Debug)]
+pub struct HtStageStats {
+    /// Interior tree-node id (BFS order of [`DimTree::balanced`]).
+    pub node: usize,
+    /// Mode range `[lo, hi)` the node covers.
+    pub modes: (usize, usize),
+    /// `true` for the left-edge stage (`M1`), `false` for the right
+    /// (`M2`).
+    pub left: bool,
+    /// Stage matricization shape.
+    pub m: usize,
+    pub n: usize,
+    /// Selected (or fixed) edge rank.
+    pub rank: usize,
+    /// `sqrt(tail/total)` the SVD heuristic achieved (NaN when fixed).
+    pub svd_eps: f64,
+    /// NMF convergence record.
+    pub nmf: NmfStats,
+    /// Wall seconds of this stage on this rank (reshape + select + NMF).
+    pub secs: f64,
+}
+
+/// Decomposition result (identical on every rank).
+pub struct HtOutput {
+    pub ht: HtTensor<f64>,
+    /// Per-tree-node stage records, BFS node order (left edge first).
+    pub stages: Vec<HtStageStats>,
+    /// Critical-path (max-over-ranks) cost breakdown.
+    pub breakdown: Breakdown,
+}
+
+/// Publish-gather a distributed array on every rank (the HT analogue of
+/// the TT driver's final core gather).
+fn gather_full(
+    world: &mut Comm,
+    store: &SharedStore,
+    name: &str,
+    layout: &Layout,
+    my_chunk: Vec<f64>,
+) -> Result<Vec<f64>> {
+    let rank = world.rank();
+    let t0 = Instant::now();
+    if let Err(e) = store.publish(name, layout, rank, my_chunk) {
+        world.abort(&format!("{name}: publish failed: {e}"));
+        return Err(e);
+    }
+    world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
+    world.barrier();
+    let view = store.view(name)?;
+    let t1 = Instant::now();
+    let full = view.to_dense();
+    world.breakdown.add_secs(Cat::Reshape, t1.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+    drop(view);
+    world.barrier();
+    if rank == 0 {
+        store.remove(name);
+    }
+    world.barrier();
+    Ok(full)
+}
+
+/// Run the distributed nHT on this rank (collective).
+///
+/// * `my_block` — this rank's chunk of the input tensor under
+///   `Layout::TensorGrid { dims, grid: proc_grid.dims() }`.
+/// * `grid` — the 2-D NMF grid (must satisfy `grid.size() == world.size()`
+///   and be the collapse of `proc_grid`).
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nht(
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    store: &Arc<SharedStore>,
+    proc_grid: &ProcGrid,
+    grid: Grid2d,
+    dims: &[usize],
+    my_block: Vec<f64>,
+    backend: &dyn ComputeBackend,
+    cfg: &HtConfig,
+) -> Result<HtOutput> {
+    let d = dims.len();
+    if d < 2 {
+        return Err(DnttError::shape("hierarchical Tucker needs at least 2 modes"));
+    }
+    if grid.size() != world.size() {
+        return Err(DnttError::Comm("grid size != world size".into()));
+    }
+    let tree = DimTree::balanced(d);
+    let n_edges = 2 * tree.num_interior();
+    if let Some(fr) = &cfg.fixed_ranks {
+        if fr.len() != n_edges {
+            return Err(DnttError::config(format!(
+                "fixed_ranks needs {n_edges} entries (two per interior node), got {}",
+                fr.len()
+            )));
+        }
+    }
+
+    // Per-node pending array: (layout of the distributed V_t, this rank's
+    // chunk, parent edge rank r_t). BFS ids guarantee a parent resolves
+    // before its children are reached.
+    let mut pending: Vec<Option<(Layout, Vec<f64>, usize)>> =
+        (0..tree.len()).map(|_| None).collect();
+    pending[0] = Some((
+        Layout::TensorGrid { dims: dims.to_vec(), grid: proc_grid.dims().to_vec() },
+        my_block,
+        1,
+    ));
+    let mut payload: Vec<Option<HtNode<f64>>> = (0..tree.len()).map(|_| None).collect();
+    let mut stages: Vec<HtStageStats> = Vec::with_capacity(n_edges);
+    let mut edge = 0usize; // cursor into fixed_ranks (2 per interior node)
+
+    for t in 0..tree.len() {
+        let (layout, data, rt) = pending[t].take().expect("BFS processing order");
+        let node = tree.node(t);
+        match node.children {
+            None => {
+                // Leaf: the array *is* the factor U: n_i × r_t.
+                let n_i = dims[node.lo];
+                let full = gather_full(world, store, &format!("ht.leaf{t}"), &layout, data)?;
+                payload[t] = Some(HtNode::Leaf(Mat::from_vec(n_i, rt, full)));
+            }
+            Some((lc, rc)) => {
+                let mid = tree.node(lc).hi;
+                let n1: usize = dims[node.lo..mid].iter().product();
+                let n2: usize = dims[mid..node.hi].iter().product();
+
+                // --- Left edge: M1 = n1 × (n2·rt) ≈ W1·H1. ----------
+                let t0 = Instant::now();
+                let x1 = dist_reshape(
+                    world, store, &format!("ht.n{t}.a"), &layout, data, n1, n2 * rt, grid,
+                )?;
+                let (r1, eps1) = match &cfg.fixed_ranks {
+                    Some(fr) => (fr[edge].max(1), f64::NAN),
+                    None => {
+                        let rs = RankSelectConfig { eps: cfg.eps, ..cfg.rank_select.clone() };
+                        let sel =
+                            dist_rank_select(&x1, n1, n2 * rt, grid, world, row, col, &rs)?;
+                        (sel.rank, sel.achieved_eps)
+                    }
+                };
+                let cfg1 = NmfConfig {
+                    rank: r1,
+                    seed: cfg.nmf.seed.wrapping_add(2 * t as u64),
+                    ..cfg.nmf.clone()
+                };
+                let o1 = dist_nmf_pruned(
+                    &x1, n1, n2 * rt, grid, world, row, col, backend, &cfg1,
+                    store, &format!("ht.n{t}.a"), cfg.prune,
+                )?;
+                stages.push(HtStageStats {
+                    node: t,
+                    modes: (node.lo, node.hi),
+                    left: true,
+                    m: n1,
+                    n: n2 * rt,
+                    rank: r1,
+                    svd_eps: eps1,
+                    nmf: o1.stats.clone(),
+                    secs: t0.elapsed().as_secs_f64(),
+                });
+                pending[lc] = Some((
+                    Layout::WGrid { m: n1, r: r1, pr: grid.pr, pc: grid.pc },
+                    o1.w.into_vec(),
+                    r1,
+                ));
+
+                // --- Right edge: M2 = permuted H1 = n2 × (r1·rt) ≈ W2·H2.
+                let t0 = Instant::now();
+                let perm = Layout::HtPermuted { r: r1, n2, rt, pr: grid.pr, pc: grid.pc };
+                let x2 = dist_reshape(
+                    world, store, &format!("ht.n{t}.b"), &perm, o1.ht.into_vec(), n2,
+                    r1 * rt, grid,
+                )?;
+                let (r2, eps2) = match &cfg.fixed_ranks {
+                    Some(fr) => (fr[edge + 1].max(1), f64::NAN),
+                    None => {
+                        let rs = RankSelectConfig { eps: cfg.eps, ..cfg.rank_select.clone() };
+                        let sel =
+                            dist_rank_select(&x2, n2, r1 * rt, grid, world, row, col, &rs)?;
+                        (sel.rank, sel.achieved_eps)
+                    }
+                };
+                let cfg2 = NmfConfig {
+                    rank: r2,
+                    seed: cfg.nmf.seed.wrapping_add(2 * t as u64 + 1),
+                    ..cfg.nmf.clone()
+                };
+                let o2 = dist_nmf_pruned(
+                    &x2, n2, r1 * rt, grid, world, row, col, backend, &cfg2,
+                    store, &format!("ht.n{t}.b"), cfg.prune,
+                )?;
+                stages.push(HtStageStats {
+                    node: t,
+                    modes: (node.lo, node.hi),
+                    left: false,
+                    m: n2,
+                    n: r1 * rt,
+                    rank: r2,
+                    svd_eps: eps2,
+                    nmf: o2.stats.clone(),
+                    secs: t0.elapsed().as_secs_f64(),
+                });
+                pending[rc] = Some((
+                    Layout::WGrid { m: n2, r: r2, pr: grid.pr, pc: grid.pc },
+                    o2.w.into_vec(),
+                    r2,
+                ));
+
+                // --- Transfer tensor: gather the small H2 everywhere.
+                let blay = Layout::HtGrid { r: r2, n: r1 * rt, pr: grid.pr, pc: grid.pc };
+                let bfull =
+                    gather_full(world, store, &format!("ht.n{t}.t"), &blay, o2.ht.into_vec())?;
+                payload[t] = Some(HtNode::Transfer(Mat::from_vec(r2, r1 * rt, bfull)));
+                edge += 2;
+            }
+        }
+    }
+
+    // Merge sub-communicator costs, then take the critical path over ranks.
+    world.breakdown.merge_sum(&row.breakdown.clone());
+    world.breakdown.merge_sum(&col.breakdown.clone());
+    let all = world.all_gather_any(world.breakdown.clone());
+    let mut merged = Breakdown::new();
+    for b in &all {
+        merged.merge_max(b);
+    }
+
+    let nodes: Vec<HtNode<f64>> =
+        payload.into_iter().map(|p| p.expect("every node resolved")).collect();
+    Ok(HtOutput { ht: HtTensor::new(dims.to_vec(), tree, nodes)?, stages, breakdown: merged })
+}
+
+/// Convenience wrapper: decompose a replicated dense tensor on `p` thread
+/// ranks arranged as `proc_grid` (tests, examples, small data).
+pub fn nht_on_threads(
+    tensor: &crate::tensor::DenseTensor<f64>,
+    proc_grid: &ProcGrid,
+    cfg: &HtConfig,
+) -> Result<HtOutput> {
+    use crate::dist::chunkstore::SpillMode;
+    let dims = tensor.dims().to_vec();
+    let grid = proc_grid.to_2d();
+    let store = SharedStore::new(SpillMode::Memory);
+    let pg = proc_grid.clone();
+    let cfg = cfg.clone();
+    let tensor = tensor.clone();
+    let mut outs = Comm::run(proc_grid.size(), move |mut world| {
+        let my = crate::ttrain::driver::extract_block(&tensor, &pg, world.rank());
+        let (mut row, mut col) = grid.make_subcomms(&mut world);
+        dist_nht(
+            &mut world,
+            &mut row,
+            &mut col,
+            &store,
+            &pg,
+            grid,
+            &dims,
+            my,
+            &crate::runtime::native::NativeBackend,
+            &cfg,
+        )
+    });
+    outs.swap_remove(0)
+}
+
+/// Serial (single-rank) nHT — the reference implementation the
+/// equivalence tests compare the distributed runs against.
+pub fn ht_serial(
+    tensor: &crate::tensor::DenseTensor<f64>,
+    cfg: &HtConfig,
+) -> Result<HtOutput> {
+    let grid = ProcGrid::new(vec![1; tensor.ndim()])?;
+    nht_on_threads(tensor, &grid, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ht::datagen::SyntheticHt;
+
+    fn cfg_iters(iters: usize) -> HtConfig {
+        HtConfig {
+            eps: 1e-6,
+            nmf: NmfConfig { max_iters: iters, tol: 1e-12, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn recovers_ranks_and_reconstructs_serial() {
+        let syn = SyntheticHt::new(vec![4, 5, 6], 2, 11);
+        let t = syn.dense();
+        let out = ht_serial(&t, &cfg_iters(400)).unwrap();
+        assert!(out.ht.is_nonneg());
+        // d = 3: tree is root{0..3} -> ({0..2} -> leaf0, leaf1; leaf2),
+        // two interior nodes, four stages.
+        assert_eq!(out.ht.tree().len(), 5);
+        assert_eq!(out.stages.len(), 4);
+        let err = out.ht.rel_error(&t);
+        assert!(err < 0.05, "rel err {err}");
+    }
+
+    #[test]
+    fn fixed_ranks_skip_svd_and_set_edges() {
+        let syn = SyntheticHt::new(vec![4, 4, 4], 2, 17);
+        let t = syn.dense();
+        let mut cfg = cfg_iters(120);
+        cfg.fixed_ranks = Some(vec![2; 4]);
+        let out = ht_serial(&t, &cfg).unwrap();
+        assert!(out.stages.iter().all(|s| s.svd_eps.is_nan()));
+        assert_eq!(out.ht.ranks()[0], 1);
+        assert!(out.ht.ranks()[1..].iter().all(|&r| r == 2));
+    }
+
+    #[test]
+    fn stage_shapes_follow_the_tree() {
+        // dims [3,4,5,6], fixed edge ranks 2: root M1 = 12×30, M2 = 30×2;
+        // node [0,2) (rt=2): 3×8, 4×4; node [2,4) (rt=2): 5×12, 6×4.
+        let syn = SyntheticHt::new(vec![3, 4, 5, 6], 2, 19);
+        let t = syn.dense();
+        let mut cfg = cfg_iters(60);
+        cfg.fixed_ranks = Some(vec![2; 6]);
+        let out = ht_serial(&t, &cfg).unwrap();
+        let shapes: Vec<(usize, usize, bool)> =
+            out.stages.iter().map(|s| (s.m, s.n, s.left)).collect();
+        assert_eq!(
+            shapes,
+            vec![
+                (12, 30, true),
+                (30, 2, false),
+                (3, 8, true),
+                (4, 4, false),
+                (5, 12, true),
+                (6, 4, false),
+            ]
+        );
+        assert_eq!(out.stages[2].node, 1);
+        assert_eq!(out.stages[4].modes, (2, 4));
+    }
+
+    #[test]
+    fn distributed_matches_serial() {
+        let syn = SyntheticHt::new(vec![4, 4, 6], 2, 13);
+        let t = syn.dense();
+        let serial = ht_serial(&t, &cfg_iters(150)).unwrap();
+        let grid = ProcGrid::new(vec![2, 1, 2]).unwrap();
+        let dist = nht_on_threads(&t, &grid, &cfg_iters(150)).unwrap();
+        assert_eq!(serial.ht.ranks(), dist.ht.ranks());
+        // Same deterministic init ⇒ same node matrices up to reduction
+        // roundoff.
+        for (a, b) in serial.ht.nodes().iter().zip(dist.ht.nodes()) {
+            for (x, y) in a.mat().as_slice().iter().zip(b.mat().as_slice()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn breakdown_populated() {
+        let syn = SyntheticHt::new(vec![4, 4, 4], 2, 23);
+        let t = syn.dense();
+        let grid = ProcGrid::new(vec![2, 2, 1]).unwrap();
+        let out = nht_on_threads(&t, &grid, &cfg_iters(20)).unwrap();
+        let b = &out.breakdown;
+        assert!(b.secs(Cat::MatMul) > 0.0);
+        assert!(b.calls(Cat::AllReduce) > 0);
+        assert!(b.calls(Cat::AllGather) > 0);
+        assert!(b.calls(Cat::ReduceScatter) > 0);
+        assert!(b.secs(Cat::Reshape) > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let syn = SyntheticHt::new(vec![4, 4, 4], 2, 31);
+        let t = syn.dense();
+        let mut cfg = cfg_iters(5);
+        cfg.fixed_ranks = Some(vec![2; 3]); // needs 2·(d−1) = 4
+        assert!(ht_serial(&t, &cfg).is_err());
+        // Single-mode tensors have no tree to split.
+        let one = crate::tensor::DenseTensor::<f64>::zeros(&[5]);
+        assert!(ht_serial(&one, &cfg_iters(5)).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Distributed non-negative **Hierarchical Tucker** decomposition — the
+//! second tensor network of the pyDNTNK family, alongside the tensor
+//! train (`crate::ttrain`).
+//!
+//! HT organizes the modes in a balanced binary dimension tree
+//! ([`crate::tensor::DimTree`]) and factorizes the tensor level-by-level
+//! down the tree, one distributed NMF per tree edge, reusing the whole
+//! SPMD substrate: [`crate::dist::dist_reshape`] (with the
+//! [`crate::dist::Layout::WGrid`] / [`crate::dist::Layout::HtPermuted`]
+//! hand-off layouts) for the per-level matricizations,
+//! [`crate::ttrain::dist_rank_select`] for the ε-threshold edge-rank
+//! estimation, and [`crate::nmf::dist_nmf`] (BCD/MU/HALS, optionally
+//! zero-row/column pruned) for the non-negative factor updates. The
+//! output [`HtTensor`] stores leaf factors and per-node transfer
+//! tensors; see `rust/DESIGN.md` §2.6 for the full contract.
+
+pub mod datagen;
+pub mod driver;
+
+pub use crate::tensor::ht::{DimTree, HtNode, HtTensor};
+pub use datagen::SyntheticHt;
+pub use driver::{dist_nht, ht_serial, nht_on_threads, HtConfig, HtOutput, HtStageStats};

@@ -7,7 +7,10 @@
 //! * **L3 (this crate)** — the distributed coordinator: thread-rank
 //!   communicator with MPI-style collectives, chunked array store with
 //!   global reshape (Alg 1), distributed SVD rank selection, distributed
-//!   BCD/MU NMF (Algs 3–6), and the tensor-train driver (Alg 2).
+//!   BCD/MU NMF (Algs 3–6), and two tensor-network drivers: the tensor
+//!   train (Alg 2, `ttrain`) and the hierarchical Tucker (`ht`) over the
+//!   balanced dimension tree — the same two-network family as LANL's
+//!   pyDNTNK.
 //! * **L2/L1 (`python/compile/`)** — the NMF inner iteration as a JAX
 //!   graph built from Pallas kernels, AOT-lowered to HLO text at build time.
 //! * **Runtime (`runtime`)** — loads the AOT artifacts through the `xla`
@@ -26,6 +29,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dist;
 pub mod error;
+pub mod ht;
 pub mod linalg;
 pub mod nmf;
 pub mod runtime;

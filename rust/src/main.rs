@@ -9,10 +9,11 @@
 //! * `info`      — platform + artifact manifest report.
 
 use dntt::bench::workloads::{self, Fig8Data, ScalingMode, ScalingParams, PAPER_EPS};
-use dntt::coordinator::{run_job, BackendChoice, InputSpec, JobConfig};
+use dntt::coordinator::{run_job, BackendChoice, Decomposition, InputSpec, JobConfig};
 use dntt::data::FaceConfig;
 use dntt::dist::chunkstore::SpillMode;
 use dntt::dist::ProcGrid;
+use dntt::ht::HtConfig;
 use dntt::nmf::{NmfAlgo, NmfConfig};
 use dntt::ttrain::{SyntheticTt, TtConfig};
 use dntt::util::argparse::ArgSpec;
@@ -74,21 +75,23 @@ fn parse_grid(s: &str, d: usize) -> Result<ProcGrid, String> {
 }
 
 fn cmd_decompose(argv: &[String]) -> Result<(), String> {
-    let spec = ArgSpec::new("dntt decompose", "run the distributed nTT on a tensor")
+    let spec = ArgSpec::new("dntt decompose", "run the distributed nTT/nHT on a tensor")
         .opt("input", "synthetic", "input kind: synthetic|faces|video")
+        .opt("decomp", "tt", "decomposition: tt (tensor train) | ht (hierarchical Tucker)")
         .opt("dims", "16,16,16,16", "tensor dims (synthetic)")
         .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
         .opt("grid", "1x1x1x1", "processor grid, e.g. 2x2x2x2")
         .opt("eps", "0.01", "per-stage rank-selection threshold")
-        .opt("ranks", "", "fixed TT ranks (skip SVD), e.g. 10,10,10")
+        .opt("ranks", "", "fixed ranks (skip SVD): d-1 for tt, 2(d-1) for ht")
         .opt("algo", "bcd", "NMF update rule: bcd|mu|hals")
         .opt("iters", "100", "NMF iterations per stage")
         .opt("backend", "native", "compute backend: native|pjrt")
         .opt("artifacts", "artifacts", "artifact dir for --backend pjrt")
         .opt("spill", "", "spill chunks to this directory (out-of-core)")
         .opt("seed", "42", "random seed")
-        .opt("save-tt", "", "write the decomposition to this .dntt file")
+        .opt("save-tt", "", "write the decomposition to this .dntt file (tt only)")
         .opt("round", "", "TT-round the result to this tolerance (SVD; drops non-negativity)")
+        .flag("prune", "prune all-zero rows/cols of each stage matrix before the NMF")
         .flag("json", "emit the report as JSON")
         .flag("no-check", "skip reconstruction-error check");
     let a = spec.parse(argv)?;
@@ -108,19 +111,34 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     };
     let d = input.dims().len();
     let grid = parse_grid(a.get("grid"), d)?;
+    let decomp: Decomposition = a.get("decomp").parse()?;
+    if decomp == Decomposition::Ht && (!a.get("round").is_empty() || !a.get("save-tt").is_empty()) {
+        // Fail before the (possibly long) decomposition, not after.
+        return Err("--round/--save-tt are only supported with --decomp tt".into());
+    }
     let algo: NmfAlgo = a.get("algo").parse()?;
     let fixed_ranks =
         if a.get("ranks").is_empty() { None } else { Some(a.usize_list("ranks")?) };
+    let nmf = NmfConfig {
+        max_iters: a.usize("iters")?,
+        algo,
+        seed: a.usize("seed")? as u64,
+        ..Default::default()
+    };
     let job = JobConfig {
+        decomp,
         tt: TtConfig {
             eps: a.f64("eps")?,
+            fixed_ranks: fixed_ranks.clone(),
+            nmf: nmf.clone(),
+            prune: a.flag("prune"),
+            ..Default::default()
+        },
+        ht: HtConfig {
+            eps: a.f64("eps")?,
             fixed_ranks,
-            nmf: NmfConfig {
-                max_iters: a.usize("iters")?,
-                algo,
-                seed: a.usize("seed")? as u64,
-                ..Default::default()
-            },
+            nmf,
+            prune: a.flag("prune"),
             ..Default::default()
         },
         backend: match a.get("backend") {
@@ -142,20 +160,25 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     } else {
         println!("{}", rep.summary());
     }
-    let mut tt = rep.output.tt.clone();
-    if !a.get("round").is_empty() {
-        let eps: f64 = a.f64("round")?;
-        tt = dntt::ttrain::tt_round(&tt, eps).map_err(|e| e.to_string())?;
-        println!(
-            "rounded to eps {eps}: ranks {:?}, compression {:.4}x (cores now signed)",
-            tt.ranks(),
-            tt.compression_ratio()
-        );
-    }
-    if !a.get("save-tt").is_empty() {
-        let path = std::path::PathBuf::from(a.get("save-tt"));
-        dntt::tensor::io::save_tt(&tt, &path).map_err(|e| e.to_string())?;
-        println!("saved TT to {path:?} ({} params)", tt.num_params());
+    if !a.get("round").is_empty() || !a.get("save-tt").is_empty() {
+        let Some(tt_out) = rep.output.tt() else {
+            return Err("--round/--save-tt are only supported with --decomp tt".into());
+        };
+        let mut tt = tt_out.tt.clone();
+        if !a.get("round").is_empty() {
+            let eps: f64 = a.f64("round")?;
+            tt = dntt::ttrain::tt_round(&tt, eps).map_err(|e| e.to_string())?;
+            println!(
+                "rounded to eps {eps}: ranks {:?}, compression {:.4}x (cores now signed)",
+                tt.ranks(),
+                tt.compression_ratio()
+            );
+        }
+        if !a.get("save-tt").is_empty() {
+            let path = std::path::PathBuf::from(a.get("save-tt"));
+            dntt::tensor::io::save_tt(&tt, &path).map_err(|e| e.to_string())?;
+            println!("saved TT to {path:?} ({} params)", tt.num_params());
+        }
     }
     Ok(())
 }
@@ -199,6 +222,7 @@ fn cmd_inspect(argv: &[String]) -> Result<(), String> {
 fn cmd_scaling(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("dntt scaling", "scaling series (Figs 5-7)")
         .opt("mode", "strong", "strong|weak|ranks")
+        .opt("decomp", "tt", "decomposition under test: tt|ht")
         .opt("shrink", "4", "divide the paper's 256 mode size by this")
         .opt("ks", "1,2,3,4,5", "grid exponents k (grid 2^k x2x2x2)")
         .opt("iters", "10", "NMF iterations (paper: 100)")
@@ -218,6 +242,7 @@ fn cmd_scaling(argv: &[String]) -> Result<(), String> {
     let algos: Vec<NmfAlgo> =
         a.get("algos").split(',').map(|s| s.trim().parse()).collect::<Result<_, _>>()?;
     let params = ScalingParams {
+        decomp: a.get("decomp").parse()?,
         shrink: a.usize("shrink")?,
         ks: a.usize_list("ks")?,
         iters: a.usize("iters")?,
@@ -242,8 +267,8 @@ fn cmd_scaling(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_sweep(argv: &[String]) -> Result<(), String> {
-    let spec = ArgSpec::new("dntt sweep", "compression-vs-error curves (Figs 2, 8a-c)")
-        .opt("figure", "2", "which figure: 2|8a|8b|8c")
+    let spec = ArgSpec::new("dntt sweep", "compression-vs-error curves (Figs 2, 8a-c, ht)")
+        .opt("figure", "2", "which figure: 2|8a|8b|8c|ht (nTT-vs-nHT comparison)")
         .opt("size", "16", "mode size for Fig 2 (paper: 32)")
         .opt("scale", "4", "shrink factor for Fig 8 datasets")
         .opt("iters", "100", "NMF iterations")
@@ -259,6 +284,7 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         "8a" => workloads::fig8_sweep(Fig8Data::Faces, &eps, iters, a.usize("scale")?),
         "8b" => workloads::fig8_sweep(Fig8Data::Video, &eps, iters, a.usize("scale")?),
         "8c" => workloads::fig8_sweep(Fig8Data::LargeSynthetic, &eps, iters, a.usize("scale")?),
+        "ht" => workloads::ht_vs_tt_sweep(a.usize("size")?, &eps, iters),
         other => return Err(format!("unknown figure '{other}'")),
     }
     .map_err(|e| e.to_string())?;

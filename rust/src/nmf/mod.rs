@@ -22,8 +22,10 @@
 //! Disable with `normalize: false` to match the literal pseudocode.
 
 pub mod dist;
+pub mod prune;
 
 pub use dist::{dist_nmf, NmfOutput};
+pub use prune::{detect_zeros, dist_nmf_pruned, PruneMap};
 
 /// Which update rule to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,445 @@
+//! Distributed zero-row / zero-column pruning (a pyDNTNK feature).
+//!
+//! Sparse-ish real data produces stage matrices with entirely zero rows
+//! or columns (empty pixels, silent channels). A zero row of `X` forces
+//! the matching row of `W` to zero in any exact factorization `X ≈ W·H`
+//! (and a zero column forces a zero column of `H`), so those rows/columns
+//! can be removed *before* the NMF — shrinking every Gram/GEMM of the
+//! inner loop — and re-inserted as zeros afterwards.
+//!
+//! [`dist_nmf_pruned`] is the drop-in collective wrapper the TT and HT
+//! drivers call: it detects all-zero global rows/columns with two
+//! world `all_reduce`s, redistributes the surviving sub-matrix through
+//! the [`SharedStore`] (the block partition of the pruned matrix does not
+//! coincide with the pruned blocks of the full one), runs
+//! [`crate::nmf::dist_nmf`], and restores full-size distributed factors
+//! the same way. When nothing can be pruned it degenerates to a plain
+//! `dist_nmf` call (detection cost only). Note the pruned factorization
+//! is *not* bitwise-identical to the unpruned one — factor initialization
+//! is a function of global indices, which shift under pruning.
+
+use crate::dist::{BlockDim, Comm, Grid2d, Layout, SharedStore};
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::nmf::dist::{dist_nmf, NmfOutput};
+use crate::nmf::NmfConfig;
+use crate::runtime::backend::ComputeBackend;
+use crate::util::timer::Cat;
+use std::time::Instant;
+
+/// Which global rows/columns of an `m × n` matrix survive pruning.
+///
+/// Identical on every rank (built from deterministic collectives).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PruneMap {
+    /// Surviving global row indices, ascending.
+    pub kept_rows: Vec<usize>,
+    /// Surviving global column indices, ascending.
+    pub kept_cols: Vec<usize>,
+    pub full_m: usize,
+    pub full_n: usize,
+}
+
+impl PruneMap {
+    /// True when nothing was pruned.
+    pub fn is_identity(&self) -> bool {
+        self.kept_rows.len() == self.full_m && self.kept_cols.len() == self.full_n
+    }
+
+    /// Row count of the pruned matrix.
+    pub fn pruned_m(&self) -> usize {
+        self.kept_rows.len()
+    }
+
+    /// Column count of the pruned matrix.
+    pub fn pruned_n(&self) -> usize {
+        self.kept_cols.len()
+    }
+
+    /// Re-insert zero rows into a `m' × r` factor of the pruned matrix
+    /// (row `k` of `f` is global row `kept_rows[k]`).
+    pub fn restore_rows(&self, f: &Mat<f64>) -> Mat<f64> {
+        assert_eq!(f.rows(), self.kept_rows.len(), "restore_rows: factor mismatch");
+        let mut out = Mat::zeros(self.full_m, f.cols());
+        for (k, &g) in self.kept_rows.iter().enumerate() {
+            out.row_mut(g).copy_from_slice(f.row(k));
+        }
+        out
+    }
+
+    /// Re-insert zero columns into an `r × n'` factor of the pruned
+    /// matrix (column `k` of `f` is global column `kept_cols[k]`).
+    pub fn restore_cols(&self, f: &Mat<f64>) -> Mat<f64> {
+        assert_eq!(f.cols(), self.kept_cols.len(), "restore_cols: factor mismatch");
+        let mut out = Mat::zeros(f.rows(), self.full_n);
+        for i in 0..f.rows() {
+            for (k, &g) in self.kept_cols.iter().enumerate() {
+                out[(i, g)] = f[(i, k)];
+            }
+        }
+        out
+    }
+}
+
+/// Collective detection of all-zero global rows/columns of the
+/// distributed `m × n` matrix whose local `MatGrid` block is `x`.
+///
+/// Every rank contributes its block's absolute row/column sums into one
+/// zero-padded `m + n` vector; a single deterministic `all_reduce` makes
+/// the sums (and therefore the kept sets) rank-identical. Detection is
+/// `O(m + n)` doubles of reduce traffic per call — fine for the stage
+/// matrices the drivers feed it, but worth keeping `prune` off for
+/// extreme aspect ratios where `m + n` rivals the local block size.
+pub fn detect_zeros(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+) -> PruneMap {
+    let (i, j) = grid.coords(world.rank());
+    let rows = BlockDim::new(m, grid.pr);
+    let cols = BlockDim::new(n, grid.pc);
+    debug_assert_eq!((x.rows(), x.cols()), (rows.size_of(i), cols.size_of(j)));
+    let t0 = Instant::now();
+    // sums[0..m] = per-row |·| sums, sums[m..m+n] = per-column.
+    let mut sums = vec![0.0; m + n];
+    for li in 0..x.rows() {
+        let mut s = 0.0;
+        for (lj, &v) in x.row(li).iter().enumerate() {
+            let a = v.abs();
+            s += a;
+            sums[m + cols.start_of(j) + lj] += a;
+        }
+        sums[rows.start_of(i) + li] = s;
+    }
+    world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
+    world.all_reduce_sum(&mut sums);
+    // Keep everything that is not exactly zero — in particular a NaN sum
+    // (corrupt input) keeps its row/column so the NaN propagates visibly
+    // instead of being silently pruned to zeros.
+    PruneMap {
+        kept_rows: (0..m).filter(|&g| sums[g] != 0.0).collect(),
+        kept_cols: (0..n).filter(|&g| sums[m + g] != 0.0).collect(),
+        full_m: m,
+        full_n: n,
+    }
+}
+
+/// Publish this rank's chunk, aborting the world on a divergent failure
+/// (same discipline as `dist_reshape`).
+fn publish_or_abort(
+    world: &mut Comm,
+    store: &SharedStore,
+    name: &str,
+    layout: &Layout,
+    data: Vec<f64>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    if let Err(e) = store.publish(name, layout, world.rank(), data) {
+        world.abort(&format!("{name}: publish failed: {e}"));
+        return Err(e);
+    }
+    world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Run [`dist_nmf`] with zero-row/column pruning applied first and
+/// full-size distributed factors restored afterwards.
+///
+/// Collective over `world`; `x` is this rank's `MatGrid` block of the
+/// `m × n` matrix, and the returned [`NmfOutput`] carries this rank's
+/// blocks of the **full-size** `W`/`H` (pruned rows/columns are zero),
+/// exactly as a plain `dist_nmf` call would. `tag` namespaces the store
+/// round-trips and must be unique per concurrent call.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_pruned(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    store: &SharedStore,
+    tag: &str,
+    enable: bool,
+) -> Result<NmfOutput> {
+    if !enable {
+        return dist_nmf(x, m, n, grid, world, row, col, backend, cfg);
+    }
+    let map = detect_zeros(x, m, n, grid, world);
+    if map.is_identity() || map.pruned_m() == 0 || map.pruned_n() == 0 {
+        // Nothing to prune (or a fully zero matrix, which NMF handles).
+        return dist_nmf(x, m, n, grid, world, row, col, backend, cfg);
+    }
+    let (pm, pn) = (map.pruned_m(), map.pruned_n());
+    let (i, j) = grid.coords(world.rank());
+    log::debug!(
+        "prune {tag}: {m}x{n} -> {pm}x{pn} ({} rows, {} cols dropped)",
+        m - pm,
+        n - pn
+    );
+
+    // --- Compress: full MatGrid blocks -> pruned MatGrid blocks. --------
+    let full = Layout::MatGrid { m, n, pr: grid.pr, pc: grid.pc };
+    let name_x = format!("{tag}.prune.x");
+    publish_or_abort(world, store, &name_x, &full, x.as_slice().to_vec())?;
+    world.barrier();
+    let view = store.view(&name_x)?;
+    let prow = BlockDim::new(pm, grid.pr);
+    let pcol = BlockDim::new(pn, grid.pc);
+    let t0 = Instant::now();
+    let mut xp = Mat::zeros(prow.size_of(i), pcol.size_of(j));
+    for li in 0..xp.rows() {
+        let gr = map.kept_rows[prow.start_of(i) + li];
+        for lj in 0..xp.cols() {
+            let gc = map.kept_cols[pcol.start_of(j) + lj];
+            xp[(li, lj)] = view.get(gr * n + gc);
+        }
+    }
+    world.breakdown.add_secs(Cat::Reshape, t0.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+    drop(view);
+    world.barrier();
+    if world.rank() == 0 {
+        store.remove(&name_x);
+    }
+    world.barrier();
+
+    // --- Factorize the pruned matrix. -----------------------------------
+    let out = dist_nmf(&xp, pm, pn, grid, world, row, col, backend, cfg)?;
+    let r = cfg.rank;
+
+    // --- Restore W: pruned WGrid -> this rank's full-size row block. ----
+    let mut inv_rows = vec![usize::MAX; m];
+    for (k, &g) in map.kept_rows.iter().enumerate() {
+        inv_rows[g] = k;
+    }
+    let name_w = format!("{tag}.prune.w");
+    let wlay = Layout::WGrid { m: pm, r, pr: grid.pr, pc: grid.pc };
+    publish_or_abort(world, store, &name_w, &wlay, out.w.into_vec())?;
+    world.barrier();
+    let view = store.view(&name_w)?;
+    let rows = BlockDim::new(m, grid.pr);
+    let wsub = BlockDim::new(rows.size_of(i), grid.pc);
+    let w_g0 = rows.start_of(i) + wsub.start_of(j);
+    let mw = wsub.size_of(j);
+    let t0 = Instant::now();
+    let mut w = Mat::zeros(mw, r);
+    for lr in 0..mw {
+        let k = inv_rows[w_g0 + lr];
+        if k != usize::MAX {
+            view.read_into(k * r, w.row_mut(lr));
+        }
+    }
+    world.breakdown.add_secs(Cat::Reshape, t0.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+    drop(view);
+    world.barrier();
+    if world.rank() == 0 {
+        store.remove(&name_w);
+    }
+    world.barrier();
+
+    // --- Restore H: pruned HtGrid -> this rank's full-size column block.
+    let mut inv_cols = vec![usize::MAX; n];
+    for (k, &g) in map.kept_cols.iter().enumerate() {
+        inv_cols[g] = k;
+    }
+    let name_h = format!("{tag}.prune.h");
+    let hlay = Layout::HtGrid { r, n: pn, pr: grid.pr, pc: grid.pc };
+    publish_or_abort(world, store, &name_h, &hlay, out.ht.into_vec())?;
+    world.barrier();
+    let view = store.view(&name_h)?;
+    let cols = BlockDim::new(n, grid.pc);
+    let hsub = BlockDim::new(cols.size_of(j), grid.pr);
+    let h_g0 = cols.start_of(j) + hsub.start_of(i);
+    let nh = hsub.size_of(i);
+    let t0 = Instant::now();
+    let mut ht = Mat::zeros(nh, r);
+    for lc in 0..nh {
+        let k = inv_cols[h_g0 + lc];
+        if k != usize::MAX {
+            for rr in 0..r {
+                // Logical array of the pruned HtGrid is H': r × pn.
+                ht[(lc, rr)] = view.get(rr * pn + k);
+            }
+        }
+    }
+    world.breakdown.add_secs(Cat::Reshape, t0.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+    drop(view);
+    world.barrier();
+    if world.rank() == 0 {
+        store.remove(&name_h);
+    }
+    world.barrier();
+
+    Ok(NmfOutput {
+        w,
+        ht,
+        w_rows: (w_g0, w_g0 + mw),
+        h_cols: (h_g0, h_g0 + nh),
+        stats: out.stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::chunkstore::SpillMode;
+    use crate::linalg::gemm::matmul;
+    use crate::runtime::native::NativeBackend;
+    use crate::util::rng::Rng;
+
+    /// Block (i, j) of a full matrix under the MatGrid partition.
+    fn block_of(x: &Mat<f64>, grid: Grid2d, rank: usize) -> Mat<f64> {
+        let (m, n) = x.shape();
+        let (i, j) = grid.coords(rank);
+        let rows = BlockDim::new(m, grid.pr);
+        let cols = BlockDim::new(n, grid.pc);
+        Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
+            x[(rows.start_of(i) + a, cols.start_of(j) + b)]
+        })
+    }
+
+    /// A low-rank non-negative matrix with zero rows/cols at `zr`/`zc`.
+    fn holey_low_rank(m: usize, n: usize, r: usize, zr: &[usize], zc: &[usize], seed: u64) -> Mat<f64> {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::<f64>::rand_uniform(m, r, &mut rng);
+        let mut b = Mat::<f64>::rand_uniform(r, n, &mut rng);
+        for &g in zr {
+            a.row_mut(g).iter_mut().for_each(|v| *v = 0.0);
+        }
+        for &g in zc {
+            for k in 0..r {
+                b[(k, g)] = 0.0;
+            }
+        }
+        matmul(&a, &b)
+    }
+
+    #[test]
+    fn detects_zero_rows_and_cols_on_a_grid() {
+        let x = holey_low_rank(6, 8, 2, &[2, 5], &[0, 4], 1);
+        let grid = Grid2d::new(2, 2);
+        let outs = Comm::run(4, move |mut world| {
+            let xb = block_of(&x, grid, world.rank());
+            detect_zeros(&xb, 6, 8, grid, &mut world)
+        });
+        for map in &outs {
+            assert_eq!(map, &outs[0], "kept sets must be rank-identical");
+            assert_eq!(map.kept_rows, vec![0, 1, 3, 4]);
+            assert_eq!(map.kept_cols, vec![1, 2, 3, 5, 6, 7]);
+            assert!(!map.is_identity());
+            assert_eq!((map.pruned_m(), map.pruned_n()), (4, 6));
+        }
+    }
+
+    #[test]
+    fn nan_rows_and_cols_are_kept_not_pruned() {
+        let mut x = holey_low_rank(4, 4, 2, &[1], &[], 3);
+        x[(2, 2)] = f64::NAN;
+        let grid = Grid2d::new(1, 1);
+        let outs = Comm::run(1, move |mut world| detect_zeros(&x, 4, 4, grid, &mut world));
+        // The zero row is pruned; the NaN row/column stays so the NaN
+        // propagates instead of being silently replaced by zeros.
+        assert_eq!(outs[0].kept_rows, vec![0, 2, 3]);
+        assert_eq!(outs[0].kept_cols, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn restore_helpers_reinsert_zeros() {
+        let map = PruneMap { kept_rows: vec![0, 2], kept_cols: vec![1], full_m: 3, full_n: 2 };
+        let f = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let rf = map.restore_rows(&f);
+        assert_eq!(rf.shape(), (3, 2));
+        assert_eq!(rf.as_slice(), &[1.0, 2.0, 0.0, 0.0, 3.0, 4.0]);
+        let h = Mat::from_vec(2, 1, vec![5.0, 6.0]);
+        let rh = map.restore_cols(&h);
+        assert_eq!(rh.shape(), (2, 2));
+        assert_eq!(rh.as_slice(), &[0.0, 5.0, 0.0, 6.0]);
+    }
+
+    /// Factors from the pruned path reassemble to a good fit with exact
+    /// zeros at the pruned rows/columns.
+    #[test]
+    fn pruned_nmf_fits_and_zero_fills() {
+        let (m, n) = (9, 11);
+        let x = holey_low_rank(m, n, 2, &[4], &[3, 7], 5);
+        let grid = Grid2d::new(2, 2);
+        let cfg = NmfConfig { rank: 2, max_iters: 200, ..Default::default() };
+        let x2 = x.clone();
+        let cfg2 = cfg.clone();
+        let store = SharedStore::new(SpillMode::Memory);
+        let outs = Comm::run(4, move |mut world| {
+            let xb = block_of(&x2, grid, world.rank());
+            let (mut row, mut col) = grid.make_subcomms(&mut world);
+            dist_nmf_pruned(
+                &xb, m, n, grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg2,
+                &store, "t", true,
+            )
+            .unwrap()
+        });
+        let mut w = Mat::zeros(m, 2);
+        let mut h = Mat::zeros(2, n);
+        for o in &outs {
+            assert_eq!(o.w.rows(), o.w_rows.1 - o.w_rows.0);
+            for (li, gi) in (o.w_rows.0..o.w_rows.1).enumerate() {
+                w.row_mut(gi).copy_from_slice(o.w.row(li));
+            }
+            for (lb, gb) in (o.h_cols.0..o.h_cols.1).enumerate() {
+                for c in 0..2 {
+                    h[(c, gb)] = o.ht[(lb, c)];
+                }
+            }
+        }
+        // Pruned rows/cols restored as exact zeros.
+        assert!(w.row(4).iter().all(|&v| v == 0.0));
+        assert!((0..2).all(|k| h[(k, 3)] == 0.0 && h[(k, 7)] == 0.0));
+        let mut d = matmul(&w, &h);
+        d.sub_assign(&x);
+        let rel = d.fro_norm() / x.fro_norm();
+        assert!(rel < 0.05, "pruned fit rel err {rel}");
+    }
+
+    /// With no zero rows/cols, the wrapper is bitwise-identical to the
+    /// plain dist_nmf (the detection reduces do not perturb the math).
+    #[test]
+    fn identity_passthrough_matches_plain_nmf() {
+        let (m, n) = (8, 10);
+        let x = holey_low_rank(m, n, 2, &[], &[], 9);
+        let grid = Grid2d::new(2, 2);
+        let cfg = NmfConfig { rank: 2, max_iters: 40, ..Default::default() };
+        let run = |pruned: bool| {
+            let x = x.clone();
+            let cfg = cfg.clone();
+            let store = SharedStore::new(SpillMode::Memory);
+            Comm::run(4, move |mut world| {
+                let xb = block_of(&x, grid, world.rank());
+                let (mut row, mut col) = grid.make_subcomms(&mut world);
+                if pruned {
+                    dist_nmf_pruned(
+                        &xb, m, n, grid, &mut world, &mut row, &mut col, &NativeBackend,
+                        &cfg, &store, "t", true,
+                    )
+                    .unwrap()
+                } else {
+                    dist_nmf(&xb, m, n, grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg)
+                        .unwrap()
+                }
+            })
+        };
+        let a = run(true);
+        let b = run(false);
+        for (oa, ob) in a.iter().zip(&b) {
+            assert_eq!(oa.w_rows, ob.w_rows);
+            assert_eq!(oa.h_cols, ob.h_cols);
+            assert_eq!(oa.w.as_slice(), ob.w.as_slice());
+            assert_eq!(oa.ht.as_slice(), ob.ht.as_slice());
+        }
+    }
+}

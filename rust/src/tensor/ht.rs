@@ -1,0 +1,453 @@
+//! Hierarchical Tucker (HT) format over a balanced binary dimension tree.
+//!
+//! The other canonical linear-storage tensor network of the pyDNTNK
+//! family (Cichocki, arXiv:1407.3124 §4): modes are organized in a
+//! balanced binary [`DimTree`]; every leaf stores a factor `U: n_i × r`
+//! and every interior node a transfer tensor coupling its two child
+//! edges to its parent edge. Storage is `Σ n_i·r + Σ r³`-shaped — linear
+//! in `d` — versus the exponential `Π n_i` of the dense tensor.
+//!
+//! # Index conventions (shared with the `crate::ht` driver)
+//!
+//! Every tree node `t` has a *parent-edge rank* `r_t` (root: `r = 1`) and
+//! represents a matrix `V_t: n_{S_t} × r_t` whose rows are row-major over
+//! the node's mode range `S_t = [lo, hi)`. An interior node with children
+//! `(left, right)` factorizes in two steps:
+//!
+//! 1. `M1 = reshape(V_t) : n_left × (n_right·r_t) ≈ W1·H1` — `W1` is the
+//!    left child's `V` (edge rank `r1`);
+//! 2. `M2[i2, (j1,k)] = H1[j1, (i2,k)] : n_right × (r1·r_t) ≈ W2·H2` —
+//!    `W2` is the right child's `V` (edge rank `r2`) and
+//!    **`H2: r2 × (r1·r_t)` is the node's transfer tensor** `B_t` with
+//!    `B_t[j2, (j1, k)]` coupling (left edge, right edge, parent edge).
+//!
+//! Reconstruction inverts the two steps bottom-up (see
+//! [`HtTensor::reconstruct`]). Non-negative node matrices compose into a
+//! non-negative tensor, mirroring the nTT invariant.
+
+use crate::error::{DnttError, Result};
+use crate::linalg::gemm::matmul;
+use crate::linalg::{Mat, Scalar};
+use crate::tensor::dense::DenseTensor;
+
+/// One node of a dimension tree: the mode range `[lo, hi)` it covers and
+/// its children (leaves cover a single mode and have none).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeNode {
+    pub lo: usize,
+    pub hi: usize,
+    /// Child node ids in the owning [`DimTree`] (left covers the first
+    /// ⌈q/2⌉ modes of the range).
+    pub children: Option<(usize, usize)>,
+}
+
+/// A balanced binary dimension tree in BFS (level) order.
+///
+/// Node 0 is the root covering all `d` modes; every interior node splits
+/// its range into a first half of `⌈q/2⌉` modes and the remainder; leaves
+/// are single modes. BFS ids mean a parent always precedes its children,
+/// which is the processing order of the level-by-level HT sweep.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DimTree {
+    nodes: Vec<TreeNode>,
+}
+
+impl DimTree {
+    /// The balanced tree over `d ≥ 1` modes (`2d − 1` nodes).
+    pub fn balanced(d: usize) -> DimTree {
+        assert!(d >= 1, "dimension tree needs at least one mode");
+        let mut nodes = vec![TreeNode { lo: 0, hi: d, children: None }];
+        let mut cur = 0;
+        while cur < nodes.len() {
+            let (lo, hi) = (nodes[cur].lo, nodes[cur].hi);
+            if hi - lo >= 2 {
+                let mid = lo + (hi - lo).div_ceil(2);
+                let l = nodes.len();
+                nodes.push(TreeNode { lo, hi: mid, children: None });
+                nodes.push(TreeNode { lo: mid, hi, children: None });
+                nodes[cur].children = Some((l, l + 1));
+            }
+            cur += 1;
+        }
+        DimTree { nodes }
+    }
+
+    /// Number of nodes (`2d − 1` for `d` leaves).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True only for the degenerate zero-node tree (never constructed by
+    /// [`DimTree::balanced`]).
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node `t` (BFS id).
+    pub fn node(&self, t: usize) -> TreeNode {
+        self.nodes[t]
+    }
+
+    /// True when node `t` covers a single mode.
+    pub fn is_leaf(&self, t: usize) -> bool {
+        self.nodes[t].children.is_none()
+    }
+
+    /// Number of leaves (= number of tensor modes).
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.children.is_none()).count()
+    }
+
+    /// Number of interior nodes (`d − 1`).
+    pub fn num_interior(&self) -> usize {
+        self.len() - self.num_leaves()
+    }
+}
+
+/// Payload of one tree node.
+#[derive(Clone, Debug)]
+pub enum HtNode<T: Scalar = f64> {
+    /// Interior node: the transfer tensor `B: r2 × (r1·rt)` (row-major),
+    /// where `r1`/`r2` are the child edge ranks and `rt` the parent edge
+    /// rank (see the module docs for the index convention).
+    Transfer(Mat<T>),
+    /// Leaf: the factor `U: n_i × rt`.
+    Leaf(Mat<T>),
+}
+
+impl<T: Scalar> HtNode<T> {
+    /// The stored matrix (transfer tensor or leaf factor).
+    pub fn mat(&self) -> &Mat<T> {
+        match self {
+            HtNode::Transfer(b) => b,
+            HtNode::Leaf(u) => u,
+        }
+    }
+}
+
+/// A hierarchical Tucker tensor: a [`DimTree`] plus one [`HtNode`] per
+/// tree node.
+#[derive(Clone, Debug)]
+pub struct HtTensor<T: Scalar = f64> {
+    dims: Vec<usize>,
+    tree: DimTree,
+    nodes: Vec<HtNode<T>>,
+    /// Parent-edge rank of every node (BFS order; `ranks[0] == 1`).
+    ranks: Vec<usize>,
+}
+
+impl<T: Scalar> HtTensor<T> {
+    /// Assemble from per-node payloads; validates the shape chain and the
+    /// root edge rank.
+    pub fn new(dims: Vec<usize>, tree: DimTree, nodes: Vec<HtNode<T>>) -> Result<Self> {
+        if dims.is_empty() {
+            return Err(DnttError::shape("HT: need at least one mode"));
+        }
+        if tree.len() != nodes.len() {
+            return Err(DnttError::shape(format!(
+                "HT: {} payloads for a {}-node tree",
+                nodes.len(),
+                tree.len()
+            )));
+        }
+        if tree.num_leaves() != dims.len() {
+            return Err(DnttError::shape(format!(
+                "HT: tree has {} leaves, tensor has {} modes",
+                tree.num_leaves(),
+                dims.len()
+            )));
+        }
+        let mut ranks = vec![0usize; tree.len()];
+        let root_rank = edge_rank_checked(&dims, &tree, &nodes, 0, &mut ranks)?;
+        if root_rank != 1 {
+            return Err(DnttError::shape(format!(
+                "HT: root edge rank must be 1, got {root_rank}"
+            )));
+        }
+        Ok(HtTensor { dims, tree, nodes, ranks })
+    }
+
+    /// A random HT tensor with every non-root edge rank equal to `rank`
+    /// and uniform [0,1) node matrices — the synthetic-workload generator
+    /// (`crate::ht::SyntheticHt`).
+    pub fn rand_uniform(dims: &[usize], rank: usize, rng: &mut crate::util::rng::Rng) -> Result<Self> {
+        if dims.len() < 2 {
+            return Err(DnttError::shape("HT generator needs at least 2 modes"));
+        }
+        if rank == 0 {
+            return Err(DnttError::config("HT generator rank must be ≥ 1"));
+        }
+        let tree = DimTree::balanced(dims.len());
+        let mut nodes = Vec::with_capacity(tree.len());
+        for t in 0..tree.len() {
+            let rt = if t == 0 { 1 } else { rank };
+            let node = tree.node(t);
+            nodes.push(if node.children.is_some() {
+                // B: r2 × (r1·rt) with r1 = r2 = rank.
+                HtNode::Transfer(Mat::rand_uniform(rank, rank * rt, rng))
+            } else {
+                HtNode::Leaf(Mat::rand_uniform(dims[node.lo], rt, rng))
+            });
+        }
+        HtTensor::new(dims.to_vec(), tree, nodes)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn tree(&self) -> &DimTree {
+        &self.tree
+    }
+
+    /// Payload of tree node `t`.
+    pub fn node(&self, t: usize) -> &HtNode<T> {
+        &self.nodes[t]
+    }
+
+    pub fn nodes(&self) -> &[HtNode<T>] {
+        &self.nodes
+    }
+
+    /// Parent-edge rank of every tree node, in BFS node order
+    /// (`ranks()[0]` is the root's trivial rank 1).
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Number of stored parameters (all leaf factors + transfer tensors).
+    pub fn num_params(&self) -> usize {
+        self.nodes.iter().map(|n| n.mat().len()).sum()
+    }
+
+    /// Compression ratio `Π n_i / num_params` (the HT analogue of Eq. 4).
+    pub fn compression_ratio(&self) -> f64 {
+        let full: f64 = self.dims.iter().map(|&n| n as f64).product();
+        full / self.num_params() as f64
+    }
+
+    /// All node matrices elementwise non-negative (the nHT invariant).
+    pub fn is_nonneg(&self) -> bool {
+        self.nodes.iter().all(|n| n.mat().is_nonneg())
+    }
+
+    /// Product of the mode sizes node `t` covers.
+    fn n_modes(&self, t: usize) -> usize {
+        let node = self.tree.node(t);
+        self.dims[node.lo..node.hi].iter().product()
+    }
+
+    /// The matrix `V_t: n_{S_t} × r_t` of node `t`, reconstructed
+    /// bottom-up (flat, row-major).
+    fn array(&self, t: usize) -> Vec<T> {
+        match self.tree.node(t).children {
+            None => self.nodes[t].mat().as_slice().to_vec(),
+            Some((lc, rc)) => {
+                let (r1, r2, rt) = (self.ranks[lc], self.ranks[rc], self.ranks[t]);
+                let (n1, n2) = (self.n_modes(lc), self.n_modes(rc));
+                let u1 = Mat::from_vec(n1, r1, self.array(lc));
+                let u2 = Mat::from_vec(n2, r2, self.array(rc));
+                let b = match &self.nodes[t] {
+                    HtNode::Transfer(b) => b,
+                    HtNode::Leaf(_) => unreachable!("validated in new()"),
+                };
+                // Invert step 2: M2 = U2·B is n2 × (r1·rt), then un-permute
+                // back to H1: r1 × (n2·rt).
+                let m2 = matmul(&u2, b);
+                let mut h1 = Mat::zeros(r1, n2 * rt);
+                for i2 in 0..n2 {
+                    for j1 in 0..r1 {
+                        for k in 0..rt {
+                            h1[(j1, i2 * rt + k)] = m2[(i2, j1 * rt + k)];
+                        }
+                    }
+                }
+                // Invert step 1: V_t = U1·H1, flat in (i1, i2, k) order.
+                matmul(&u1, &h1).into_vec()
+            }
+        }
+    }
+
+    /// Full dense reconstruction by contracting the tree bottom-up.
+    /// Cost `O(Π n · max r²)`, memory one full tensor.
+    pub fn reconstruct(&self) -> DenseTensor<T> {
+        let data = self.array(0);
+        DenseTensor::from_vec(&self.dims, data).expect("HT reconstruct shape")
+    }
+
+    /// Relative reconstruction error vs a reference tensor (Eq. 3).
+    pub fn rel_error(&self, reference: &DenseTensor<T>) -> f64 {
+        reference.rel_error(&self.reconstruct())
+    }
+}
+
+/// Recursive shape validation; fills `ranks` and returns node `t`'s
+/// parent-edge rank.
+fn edge_rank_checked<T: Scalar>(
+    dims: &[usize],
+    tree: &DimTree,
+    nodes: &[HtNode<T>],
+    t: usize,
+    ranks: &mut [usize],
+) -> Result<usize> {
+    let node = tree.node(t);
+    let rank = match (&nodes[t], node.children) {
+        (HtNode::Leaf(u), None) => {
+            if u.rows() != dims[node.lo] {
+                return Err(DnttError::shape(format!(
+                    "HT leaf {t}: factor has {} rows, mode {} has size {}",
+                    u.rows(),
+                    node.lo,
+                    dims[node.lo]
+                )));
+            }
+            if u.cols() == 0 {
+                return Err(DnttError::shape(format!("HT leaf {t}: zero edge rank")));
+            }
+            u.cols()
+        }
+        (HtNode::Transfer(b), Some((lc, rc))) => {
+            let r1 = edge_rank_checked(dims, tree, nodes, lc, ranks)?;
+            let r2 = edge_rank_checked(dims, tree, nodes, rc, ranks)?;
+            if b.rows() != r2 {
+                return Err(DnttError::shape(format!(
+                    "HT node {t}: transfer has {} rows, right edge rank is {r2}",
+                    b.rows()
+                )));
+            }
+            if b.cols() % r1 != 0 || b.cols() == 0 {
+                return Err(DnttError::shape(format!(
+                    "HT node {t}: transfer has {} cols, not a multiple of left edge rank {r1}",
+                    b.cols()
+                )));
+            }
+            b.cols() / r1
+        }
+        _ => {
+            return Err(DnttError::shape(format!(
+                "HT node {t}: payload kind does not match the tree (leaf vs interior)"
+            )))
+        }
+    };
+    ranks[t] = rank;
+    Ok(rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn balanced_tree_shapes() {
+        let t2 = DimTree::balanced(2);
+        assert_eq!(t2.len(), 3);
+        assert_eq!(t2.node(0).children, Some((1, 2)));
+        assert_eq!((t2.node(1).lo, t2.node(1).hi), (0, 1));
+        assert_eq!((t2.node(2).lo, t2.node(2).hi), (1, 2));
+
+        let t4 = DimTree::balanced(4);
+        assert_eq!(t4.len(), 7);
+        assert_eq!((t4.node(1).lo, t4.node(1).hi), (0, 2));
+        assert_eq!((t4.node(2).lo, t4.node(2).hi), (2, 4));
+        assert_eq!(t4.num_leaves(), 4);
+        assert_eq!(t4.num_interior(), 3);
+
+        // Odd splits put the extra mode on the left; BFS ids follow levels.
+        let t5 = DimTree::balanced(5);
+        assert_eq!(t5.len(), 9);
+        assert_eq!((t5.node(1).lo, t5.node(1).hi), (0, 3));
+        assert_eq!((t5.node(2).lo, t5.node(2).hi), (3, 5));
+        for t in 0..t5.len() {
+            if let Some((l, r)) = t5.node(t).children {
+                assert!(l > t && r > t, "children must come after the parent");
+                assert_eq!(t5.node(l).hi, t5.node(r).lo);
+            }
+        }
+    }
+
+    #[test]
+    fn d2_reconstruction_matches_manual_contraction() {
+        // dims [3, 4], all edge ranks 2: A[i,j] = Σ_{j1,j2} U1[i,j1]·U2[j,j2]·B[j2,j1].
+        let mut rng = Rng::new(7);
+        let ht = HtTensor::<f64>::rand_uniform(&[3, 4], 2, &mut rng).unwrap();
+        let u1 = ht.node(1).mat();
+        let u2 = ht.node(2).mat();
+        let b = ht.node(0).mat(); // r2 × (r1·1)
+        let full = ht.reconstruct();
+        for i in 0..3 {
+            for j in 0..4 {
+                let mut want = 0.0;
+                for j1 in 0..2 {
+                    for j2 in 0..2 {
+                        want += u1[(i, j1)] * u2[(j, j2)] * b[(j2, j1)];
+                    }
+                }
+                let got = full.get(&[i, j]);
+                assert!((got - want).abs() < 1e-12, "A[{i},{j}]: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn rand_uniform_reconstructs_nonneg() {
+        let mut rng = Rng::new(3);
+        let ht = HtTensor::<f64>::rand_uniform(&[4, 3, 5, 2], 2, &mut rng).unwrap();
+        assert!(ht.is_nonneg());
+        assert_eq!(ht.ranks()[0], 1);
+        assert!(ht.ranks()[1..].iter().all(|&r| r == 2));
+        let full = ht.reconstruct();
+        assert_eq!(full.dims(), &[4, 3, 5, 2]);
+        assert!(full.is_nonneg());
+        assert!(ht.compression_ratio().is_finite() && ht.compression_ratio() > 0.0);
+    }
+
+    #[test]
+    fn num_params_counts_all_nodes() {
+        let mut rng = Rng::new(4);
+        let ht = HtTensor::<f64>::rand_uniform(&[3, 3, 3], 2, &mut rng).unwrap();
+        // Tree: root [0,3) → ([0,2), leaf 2); [0,2) → leaf 0, leaf 1.
+        // Payloads: root B 2×2, node1 B 2×(2·2), leaf2 3×2, leaf0 3×2, leaf1 3×2.
+        assert_eq!(ht.num_params(), 4 + 8 + 6 + 6 + 6);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let tree = DimTree::balanced(2);
+        let ok = vec![
+            HtNode::Transfer(Mat::<f64>::zeros(2, 2)), // r2=2, r1·rt = 2·1
+            HtNode::Leaf(Mat::<f64>::zeros(3, 2)),
+            HtNode::Leaf(Mat::<f64>::zeros(4, 2)),
+        ];
+        assert!(HtTensor::new(vec![3, 4], tree.clone(), ok.clone()).is_ok());
+        // Root edge rank != 1.
+        let bad_root = vec![
+            HtNode::Transfer(Mat::<f64>::zeros(2, 4)),
+            HtNode::Leaf(Mat::<f64>::zeros(3, 2)),
+            HtNode::Leaf(Mat::<f64>::zeros(4, 2)),
+        ];
+        assert!(HtTensor::new(vec![3, 4], tree.clone(), bad_root).is_err());
+        // Leaf rows mismatch the mode size.
+        let bad_leaf = vec![
+            HtNode::Transfer(Mat::<f64>::zeros(2, 2)),
+            HtNode::Leaf(Mat::<f64>::zeros(5, 2)),
+            HtNode::Leaf(Mat::<f64>::zeros(4, 2)),
+        ];
+        assert!(HtTensor::new(vec![3, 4], tree.clone(), bad_leaf).is_err());
+        // Payload kind mismatch.
+        let bad_kind = vec![
+            HtNode::Leaf(Mat::<f64>::zeros(12, 1)),
+            HtNode::Leaf(Mat::<f64>::zeros(3, 2)),
+            HtNode::Leaf(Mat::<f64>::zeros(4, 2)),
+        ];
+        assert!(HtTensor::new(vec![3, 4], tree, bad_kind).is_err());
+    }
+
+    #[test]
+    fn exact_ht_has_zero_rel_error_vs_itself() {
+        let mut rng = Rng::new(9);
+        let ht = HtTensor::<f64>::rand_uniform(&[4, 5, 3], 3, &mut rng).unwrap();
+        let full = ht.reconstruct();
+        assert!(ht.rel_error(&full) < 1e-12);
+    }
+}

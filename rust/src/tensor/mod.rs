@@ -1,11 +1,15 @@
 //! Tensor containers: dense N-d tensors, the tensor-train format (the
-//! paper's output representation) and the Tucker format (baselines).
+//! paper's output representation), the hierarchical Tucker format (the
+//! second pyDNTNK network, produced by `crate::ht`) and the Tucker
+//! format (baselines).
 
 pub mod dense;
+pub mod ht;
 pub mod tt;
 pub mod io;
 pub mod tucker;
 
 pub use dense::DenseTensor;
+pub use ht::{DimTree, HtNode, HtTensor};
 pub use tt::TTensor;
 pub use tucker::Tucker;

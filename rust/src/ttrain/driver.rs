@@ -11,7 +11,7 @@
 use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::nmf::{dist_nmf, NmfConfig, NmfStats};
+use crate::nmf::{dist_nmf_pruned, NmfConfig, NmfStats};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::TTensor;
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -30,6 +30,11 @@ pub struct TtConfig {
     pub nmf: NmfConfig,
     /// Rank-selection settings (`eps` is overridden from `self.eps`).
     pub rank_select: RankSelectConfig,
+    /// Prune all-zero rows/columns of each stage matrix before the NMF
+    /// (see [`crate::nmf::dist_nmf_pruned`]). Changes the factor
+    /// initialization indices, so results differ numerically (not in
+    /// quality) from an unpruned run when pruning triggers.
+    pub prune: bool,
 }
 
 impl Default for TtConfig {
@@ -39,6 +44,7 @@ impl Default for TtConfig {
             fixed_ranks: None,
             nmf: NmfConfig::default(),
             rank_select: RankSelectConfig::default(),
+            prune: false,
         }
     }
 }
@@ -126,9 +132,12 @@ pub fn dist_ntt(
             }
         };
 
-        // --- Line 7: distributed NMF.
+        // --- Line 7: distributed NMF (optionally zero-row/col pruned).
         let nmf_cfg = NmfConfig { rank, seed: cfg.nmf.seed.wrapping_add(l as u64), ..cfg.nmf.clone() };
-        let out = dist_nmf(&x, m, ncols, grid, world, row, col, backend, &nmf_cfg)?;
+        let out = dist_nmf_pruned(
+            &x, m, ncols, grid, world, row, col, backend, &nmf_cfg,
+            store, &format!("tt.stage{l}"), cfg.prune,
+        )?;
 
         // --- Line 8: gather W into core G(l). World-rank order concatenates
         // W blocks in global row order (see nmf::dist block layout).
@@ -347,6 +356,28 @@ mod tests {
         let out = ntt_serial(&t, &cfg_iters(300)).unwrap();
         assert_eq!(out.tt.ranks(), &[1, 2, 1]);
         assert!(out.tt.rel_error(&t) < 0.05);
+    }
+
+    #[test]
+    fn pruning_zero_slices_preserves_quality() {
+        // Zero out slice i0 = 1 of the first mode: the stage-0 matrix has
+        // an all-zero row that the prune path must drop and restore.
+        let syn = SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 37);
+        let mut t = syn.dense();
+        let dims = t.dims().to_vec();
+        for i1 in 0..dims[1] {
+            for i2 in 0..dims[2] {
+                t.set(&[1, i1, i2], 0.0);
+            }
+        }
+        let mut cfg = cfg_iters(250);
+        cfg.prune = true;
+        let out = ntt_serial(&t, &cfg).unwrap();
+        assert!(out.tt.is_nonneg());
+        // The zero slice comes back as an exactly-zero core row.
+        assert!(out.tt.core(0).row(1).iter().all(|&v| v == 0.0));
+        let err = out.tt.rel_error(&t);
+        assert!(err < 0.05, "pruned rel err {err}");
     }
 
     #[test]

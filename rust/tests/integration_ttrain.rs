@@ -82,7 +82,8 @@ fn spill_mode_equivalence() {
     let a = run_job(&mk(SpillMode::Memory)).unwrap();
     let b = run_job(&mk(SpillMode::Disk(dir.clone()))).unwrap();
     assert_eq!(a.ranks, b.ranks);
-    for (ca, cb) in a.output.tt.cores().iter().zip(b.output.tt.cores()) {
+    let (att, btt) = (a.output.tt().unwrap(), b.output.tt().unwrap());
+    for (ca, cb) in att.tt.cores().iter().zip(btt.tt.cores()) {
         for (x, y) in ca.as_slice().iter().zip(cb.as_slice()) {
             assert!((x - y).abs() < 1e-12);
         }
