@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Warn-only perf gate for the CI perf-smoke job.
+
+Compares one or more `dntt-bench-v1` result files
+(bench_results/BENCH_*.json, written by the harness; their case lists
+are merged) against the committed baseline (rust/bench/baseline.json):
+
+* every case listed under baseline `min_gflops` must reach its floor;
+* every `min_ratio` entry (e.g. packed >= 2x blocked at 512^3) must hold.
+
+Always exits 0 — misses are surfaced as GitHub `::warning::`
+annotations, not failures, until enough CI history exists to make the
+gate strict (see DESIGN.md, "CI perf gate"). Stdlib only.
+
+Usage: check_perf.py RESULTS_JSON [RESULTS_JSON...] BASELINE_JSON
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(f"usage: {sys.argv[0]} RESULTS_JSON [RESULTS_JSON...] BASELINE_JSON", file=sys.stderr)
+        return 0  # warn-only: never break the build on harness drift
+    cases = {}
+    sha = "unknown"
+    try:
+        for path in sys.argv[1:-1]:
+            with open(path) as f:
+                results = json.load(f)
+            for c in results.get("cases", []):
+                cases[c["name"]] = c
+            sha = results.get("git_sha", sha)
+        with open(sys.argv[-1]) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::warning::perf gate skipped: {e}")
+        return 0
+
+    warned = 0
+
+    for name, floor in baseline.get("min_gflops", {}).items():
+        case = cases.get(name)
+        if case is None:
+            print(f"::warning::perf gate: case '{name}' missing from results ({sha})")
+            warned += 1
+            continue
+        got = case.get("gflops", 0.0)
+        verdict = "ok" if got >= floor else "BELOW FLOOR"
+        print(f"  {name}: {got:.2f} GF/s (floor {floor:.2f}) {verdict}")
+        if got < floor:
+            print(
+                f"::warning::perf regression: '{name}' at {got:.2f} GF/s "
+                f"is below the {floor:.2f} GF/s baseline ({sha})"
+            )
+            warned += 1
+
+    for ratio in baseline.get("min_ratio", []):
+        num = cases.get(ratio["numerator"], {}).get("gflops", 0.0)
+        den = cases.get(ratio["denominator"], {}).get("gflops", 0.0)
+        if den <= 0.0:
+            print(f"::warning::perf gate: ratio '{ratio['name']}' denominator missing ({sha})")
+            warned += 1
+            continue
+        got = num / den
+        verdict = "ok" if got >= ratio["min"] else "BELOW FLOOR"
+        print(f"  {ratio['name']}: {got:.2f}x (floor {ratio['min']:.2f}x) {verdict}")
+        if got < ratio["min"]:
+            print(
+                f"::warning::perf regression: '{ratio['name']}' at {got:.2f}x "
+                f"is below the {ratio['min']:.2f}x floor ({sha})"
+            )
+            warned += 1
+
+    print(f"perf gate: {warned} warning(s) (warn-only, exit 0)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 //! Fig 2: compression vs relative error — TT, nTT, Tucker, nTucker on a
 //! synthetic n^4 tensor (paper: 32^4). Prints the four curves and saves
-//! them to bench_results/fig2.json.
+//! them to bench_results/BENCH_fig2.json.
 
 use dntt::bench::workloads::{fig2_sweep, print_sweep, save_rows, PAPER_EPS};
 

@@ -1,33 +1,97 @@
-//! Micro: GEMM kernel suite (the MM/GR hot path). Reports GFLOP/s per
-//! shape so the §Perf roofline discussion in EXPERIMENTS.md is grounded.
+//! Micro: GEMM kernel suite (the MM/GR hot path).
+//!
+//! Measures the packed register-blocked microkernel against the seed
+//! blocked kernel on identical shapes — the headline case is the
+//! 512×512×512 f64 multiply the CI perf gate tracks (acceptance: packed
+//! ≥ 2× blocked GF/s). Emits `bench_results/BENCH_micro_gemm.json`
+//! (`dntt-bench-v1` envelope: shape, flops, ns/iter, GF/s, git sha);
+//! `-- --smoke` trims the timing budget but keeps every shape so the CI
+//! artifact always carries the full comparison.
 
 use dntt::bench::harness::Bench;
-use dntt::linalg::gemm::{gram_mt_m, matmul, matmul_a_bt, matmul_at_b};
+use dntt::linalg::gemm::{
+    gram_mt_m, matmul_a_bt_into_ws, matmul_at_b_into_ws, matmul_blocked_into, matmul_into_ws,
+    matmul_packed_into, GemmWorkspace,
+};
 use dntt::linalg::Mat;
 use dntt::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::from_env();
     let mut rng = Rng::new(1);
-    for &(m, k, n) in &[(256usize, 256usize, 256usize), (1024, 64, 16), (64, 4096, 16)] {
+    let mut ws = GemmWorkspace::<f64>::new();
+
+    // --- Square + NMF-shaped A·B: blocked (seed) vs packed. -------------
+    // 512^3 is the CI perf-gate headline; the rest cover the stage-matrix
+    // aspect ratios (tall·skinny and short·deep) of Algs 5–6.
+    for &(m, k, n) in &[
+        (512usize, 512usize, 512usize),
+        (256, 256, 256),
+        (1024, 64, 16),
+        (64, 4096, 16),
+    ] {
         let a = Mat::<f64>::rand_uniform(m, k, &mut rng);
         let bm = Mat::<f64>::rand_uniform(k, n, &mut rng);
-        let stats = b.run(&format!("matmul {m}x{k}x{n}"), || matmul(&a, &bm)).clone();
-        let gflops = 2.0 * (m * k * n) as f64 / stats.median_s / 1e9;
-        println!("    -> {gflops:.2} GFLOP/s");
+        let mut c = Mat::<f64>::zeros(m, n);
+        let flops = 2.0 * (m * k * n) as f64;
+        b.run_case(&format!("matmul_blocked {m}x{k}x{n} f64"), &[m, k, n], flops, || {
+            matmul_blocked_into(&a, &bm, &mut c)
+        });
+        b.run_case(&format!("matmul_packed {m}x{k}x{n} f64"), &[m, k, n], flops, || {
+            matmul_packed_into(&a, &bm, &mut c, &mut ws)
+        });
     }
+
+    // f32 headline (the PJRT artifact dtype).
+    {
+        let (m, k, n) = (512usize, 512usize, 512usize);
+        let a = Mat::<f32>::rand_uniform(m, k, &mut rng);
+        let bm = Mat::<f32>::rand_uniform(k, n, &mut rng);
+        let mut c = Mat::<f32>::zeros(m, n);
+        let mut ws32 = GemmWorkspace::<f32>::new();
+        let flops = 2.0 * (m * k * n) as f64;
+        b.run_case(&format!("matmul_packed {m}x{k}x{n} f32"), &[m, k, n], flops, || {
+            matmul_packed_into(&a, &bm, &mut c, &mut ws32)
+        });
+    }
+
+    // --- Gram kernels (GR of Alg 4). -------------------------------------
     for &(rows, r) in &[(4096usize, 10usize), (65536, 10), (4096, 40)] {
         let f = Mat::<f64>::rand_uniform(rows, r, &mut rng);
-        let stats = b.run(&format!("gram {rows}x{r}"), || gram_mt_m(&f)).clone();
-        let gflops = (rows * r * r) as f64 / stats.median_s / 1e9;
-        println!("    -> {gflops:.2} GFLOP/s");
+        b.run_case(&format!("gram {rows}x{r}"), &[rows, r], (rows * r * r) as f64, || {
+            gram_mt_m(&f)
+        });
     }
+
+    // --- The NMF product kernels at quickstart scale (workspace path). ---
     let x = Mat::<f64>::rand_uniform(1024, 2048, &mut rng);
     let ht = Mat::<f64>::rand_uniform(2048, 10, &mut rng);
-    b.run("xht 1024x2048x10 (A*B)", || matmul(&x, &ht));
+    let mut out = Mat::<f64>::zeros(1024, 10);
+    b.run_case("xht 1024x2048x10 (A*B)", &[1024, 2048, 10], 2.0 * (1024 * 2048 * 10) as f64, || {
+        matmul_into_ws(&x, &ht, &mut out, &mut ws)
+    });
     let w = Mat::<f64>::rand_uniform(1024, 10, &mut rng);
-    b.run("wtx 1024x2048x10 (At*B)", || matmul_at_b(&x, &w));
+    let mut out2 = Mat::<f64>::zeros(2048, 10);
+    b.run_case("wtx 1024x2048x10 (At*B)", &[2048, 1024, 10], 2.0 * (1024 * 2048 * 10) as f64, || {
+        matmul_at_b_into_ws(&x, &w, &mut out2, &mut ws)
+    });
     let h2 = Mat::<f64>::rand_uniform(10, 2048, &mut rng);
-    b.run("a_bt 1024x2048x10 (A*Bt)", || matmul_a_bt(&x, &h2));
+    let mut out3 = Mat::<f64>::zeros(1024, 10);
+    b.run_case("a_bt 1024x2048x10 (A*Bt)", &[1024, 2048, 10], 2.0 * (1024 * 2048 * 10) as f64, || {
+        matmul_a_bt_into_ws(&x, &h2, &mut out3, &mut ws)
+    });
+
+    // Console summary of the acceptance ratio.
+    let gf = |name: &str| {
+        b.results().iter().find(|s| s.name == name).map(|s| s.gflops()).unwrap_or(0.0)
+    };
+    let blocked = gf("matmul_blocked 512x512x512 f64");
+    let packed = gf("matmul_packed 512x512x512 f64");
+    if blocked > 0.0 {
+        println!(
+            "\n512^3 f64: blocked {blocked:.2} GF/s, packed {packed:.2} GF/s ({:.2}x)",
+            packed / blocked
+        );
+    }
     b.save("micro_gemm").unwrap();
 }

@@ -1,9 +1,12 @@
-//! Micro: one distributed NMF iteration, native vs PJRT backend, plus the
-//! fused serial PJRT iteration — the ablation for the L2 fusion claim.
+//! Micro: one distributed-NMF iteration's local kernels — allocating vs
+//! workspace-reuse native path, plus the PJRT backend and the fused serial
+//! PJRT iteration (the ablation for the L2 fusion claim). Emits
+//! `bench_results/BENCH_micro_nmf.json`; `-- --smoke` trims the budget.
 
 use dntt::bench::harness::Bench;
 use dntt::linalg::gemm::matmul;
 use dntt::linalg::Mat;
+use dntt::nmf::NmfWorkspace;
 use dntt::runtime::backend::ComputeBackend;
 use dntt::runtime::native::NativeBackend;
 use dntt::runtime::pjrt::{pjrt_nmf_iter, PjrtBackend};
@@ -22,12 +25,27 @@ fn main() {
     };
     let w = Mat::<f64>::rand_uniform(m, r, &mut rng);
     let ht = Mat::<f64>::rand_uniform(n, r, &mut rng);
+    // gram(ht) + x·ht + bcd's fm·g and elementwise tail.
+    let step_flops = (n * r * r + 2 * m * n * r + 2 * m * r * r) as f64;
 
     let native = NativeBackend;
-    b.run("native: gram+xht+bcd step", || {
+    b.run_case("native: gram+xht+bcd step (alloc)", &[m, n, r], step_flops, || {
         let hht = native.gram(&ht);
         let xht = native.xht(&x, &ht);
         native.bcd_update(&w, &hht, &xht, hht.fro_norm())
+    });
+
+    // Same step through a warm NmfWorkspace: zero allocation per
+    // iteration (the form dist_nmf_ws runs).
+    let mut ws = NmfWorkspace::new();
+    let mut hht = Mat::<f64>::zeros(r, r);
+    let mut xht = Mat::<f64>::zeros(m, r);
+    let mut wout = Mat::<f64>::zeros(m, r);
+    b.run_case("native: gram+xht+bcd step (workspace)", &[m, n, r], step_flops, || {
+        native.gram_into(&ht, &mut hht, &mut ws.kernel);
+        native.xht_into(&x, &ht, &mut xht, &mut ws.kernel);
+        let lip = hht.fro_norm();
+        native.bcd_update_into(&w, &hht, &xht, lip, &mut wout, &mut ws.kernel);
     });
 
     if Path::new("artifacts/manifest.json").exists() {

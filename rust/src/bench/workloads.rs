@@ -468,11 +468,20 @@ pub fn denoise_run(
     Ok(rows)
 }
 
-/// Save any JSON rows under `bench_results/<label>.json`.
+/// Save any JSON rows under `bench_results/BENCH_<label>.json` (dntt-bench-v1 envelope).
 pub fn save_rows(label: &str, rows: Vec<Json>) -> std::io::Result<()> {
     std::fs::create_dir_all("bench_results")?;
-    let path = format!("bench_results/{label}.json");
-    std::fs::write(&path, Json::Arr(rows).to_pretty())?;
+    let path = format!("bench_results/BENCH_{label}.json");
+    // Same `dntt-bench-v1` envelope as `harness::Bench::save`, with the
+    // figure series under "rows" instead of harness "cases".
+    let envelope = Json::obj(vec![
+        ("schema", Json::Str("dntt-bench-v1".to_string())),
+        ("label", Json::Str(label.to_string())),
+        ("git_sha", Json::Str(crate::bench::harness::git_sha())),
+        ("smoke", Json::Bool(crate::bench::harness::smoke_requested())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(&path, envelope.to_pretty())?;
     println!("(series written to {path})");
     Ok(())
 }

@@ -506,6 +506,7 @@ impl StoreView {
 /// The store entry `name` is removed before returning — rank 0 drops it
 /// between two trailing barriers, so the same name may be safely reused
 /// by the next collective call.
+#[allow(clippy::too_many_arguments)]
 pub fn dist_reshape(
     world: &mut Comm,
     store: &SharedStore,

@@ -23,7 +23,7 @@
 use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::nmf::{dist_nmf_pruned, NmfConfig, NmfStats};
+use crate::nmf::{dist_nmf_pruned_ws, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::ht::{DimTree, HtNode, HtTensor};
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -173,6 +173,9 @@ pub fn dist_nht(
     let mut payload: Vec<Option<HtNode<f64>>> = (0..tree.len()).map(|_| None).collect();
     let mut stages: Vec<HtStageStats> = Vec::with_capacity(n_edges);
     let mut edge = 0usize; // cursor into fixed_ranks (2 per interior node)
+    // One workspace per rank, shared by every per-edge NMF of the tree
+    // walk (left and right stages alike) — zero allocation once warm.
+    let mut ws = NmfWorkspace::new();
 
     for t in 0..tree.len() {
         let (layout, data, rt) = pending[t].take().expect("BFS processing order");
@@ -208,9 +211,9 @@ pub fn dist_nht(
                     seed: cfg.nmf.seed.wrapping_add(2 * t as u64),
                     ..cfg.nmf.clone()
                 };
-                let o1 = dist_nmf_pruned(
+                let o1 = dist_nmf_pruned_ws(
                     &x1, n1, n2 * rt, grid, world, row, col, backend, &cfg1,
-                    store, &format!("ht.n{t}.a"), cfg.prune,
+                    store, &format!("ht.n{t}.a"), cfg.prune, &mut ws,
                 )?;
                 stages.push(HtStageStats {
                     node: t,
@@ -250,9 +253,9 @@ pub fn dist_nht(
                     seed: cfg.nmf.seed.wrapping_add(2 * t as u64 + 1),
                     ..cfg.nmf.clone()
                 };
-                let o2 = dist_nmf_pruned(
+                let o2 = dist_nmf_pruned_ws(
                     &x2, n2, r1 * rt, grid, world, row, col, backend, &cfg2,
-                    store, &format!("ht.n{t}.b"), cfg.prune,
+                    store, &format!("ht.n{t}.b"), cfg.prune, &mut ws,
                 )?;
                 stages.push(HtStageStats {
                     node: t,

@@ -1,19 +1,96 @@
 //! Matrix-multiplication kernels.
 //!
 //! These are the MM/GR hot paths of the distributed NMF (Algs 3–6): local
-//! `X·Hᵀ`, `Wᵀ·X`, and Gram products `M·Mᵀ` / `Mᵀ·M`. The implementation is
-//! a cache-blocked i-k-j loop with the innermost loop written over
-//! contiguous rows so LLVM autovectorizes it; `matmul_at_b` avoids an
-//! explicit transpose by walking A column-wise per block. Tuning history
-//! lives in EXPERIMENTS.md §Perf.
+//! `X·Hᵀ`, `Wᵀ·X`, and Gram products `M·Mᵀ` / `Mᵀ·M`. Two implementations
+//! coexist:
+//!
+//! * **Packed register-blocked microkernel** (`*_packed_into`): the BLIS
+//!   loop nest — A and B are repacked into contiguous [`MR`]×`kc` /
+//!   `kc`×[`NR`] panel slivers held in a reusable [`GemmWorkspace`], and an
+//!   8×4 register tile accumulates the inner product. This is the fast
+//!   path for every shape big enough to amortize the packing copy.
+//! * **Cache-blocked i-k-j loop** (`*_blocked_into`): the original seed
+//!   kernel, kept as the fallback for tiny shapes (packing overhead would
+//!   dominate) and as the baseline the `micro_gemm` bench measures the
+//!   microkernel against.
+//!
+//! The public entry points (`matmul_into`, `matmul_at_b_into`,
+//! `matmul_a_bt_into` and the allocating wrappers) dispatch between the two
+//! by problem volume (`use_packed`). Tuning history lives in
+//! EXPERIMENTS.md §Perf.
+//!
+//! ## Reproducibility contract
+//!
+//! The packed microkernel accumulates each output element strictly in
+//! ascending `k` order with separate multiply and add (no FMA), starting
+//! from the zeroed output and carrying the running value across `kc`
+//! panels. That is exactly the operation sequence of [`matmul_naive`], so
+//! the packed kernels are **bitwise identical** to the naive reference for
+//! both `f32` and `f64` (asserted in `tests/gemm_kernels.rs`). The blocked
+//! fallback uses FMA and a zero-skip, so it agrees only to rounding.
 
 use super::matrix::Mat;
 use super::scalar::Scalar;
 
-/// Cache block size along the k dimension (L1-friendly for f64).
+/// Cache block size along the k dimension (L1-friendly for f64) — blocked
+/// fallback kernel.
 const KB: usize = 64;
-/// Cache block size along the i dimension.
+/// Cache block size along the i dimension — blocked fallback kernel.
 const IB: usize = 64;
+
+/// Microkernel register-tile rows (A sliver height).
+pub const MR: usize = 8;
+/// Microkernel register-tile columns (B sliver width).
+pub const NR: usize = 4;
+/// Rows of A packed per panel (sized so an `MC×KC` f64 A-panel fits L2).
+const MC: usize = 128;
+/// Depth packed per panel.
+const KC: usize = 256;
+/// Columns of B packed per panel.
+const NC: usize = 2048;
+
+/// Below this flop volume (`m·k·n` multiply-adds) the packing copy costs
+/// more than the register tile saves; the blocked loop wins.
+const PACK_MIN_VOLUME: usize = 32 * 32 * 32;
+
+/// Reusable packing buffers for the microkernel path.
+///
+/// Holding one of these across calls makes repeated GEMMs allocation-free
+/// after warm-up: the buffers grow to the high-water panel size and are
+/// then reused. Every packed entry point takes `&mut GemmWorkspace`; the
+/// allocating wrappers create a transient one.
+pub struct GemmWorkspace<T: Scalar> {
+    pack_a: Vec<T>,
+    pack_b: Vec<T>,
+}
+
+impl<T: Scalar> GemmWorkspace<T> {
+    pub fn new() -> Self {
+        GemmWorkspace { pack_a: Vec::new(), pack_b: Vec::new() }
+    }
+
+    /// Bytes currently reserved by the packing buffers.
+    pub fn capacity_bytes(&self) -> usize {
+        (self.pack_a.capacity() + self.pack_b.capacity()) * std::mem::size_of::<T>()
+    }
+}
+
+impl<T: Scalar> Default for GemmWorkspace<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Dispatch rule shared by the public entry points: pack when the volume
+/// amortizes the copy and the tile is not mostly padding.
+#[inline]
+fn use_packed(m: usize, k: usize, n: usize) -> bool {
+    m >= MR && n >= NR && m.saturating_mul(k).saturating_mul(n) >= PACK_MIN_VOLUME
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (shape-dispatched).
+// ---------------------------------------------------------------------------
 
 /// `C = A · B` into a fresh matrix.
 pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
@@ -22,9 +99,251 @@ pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     c
 }
 
-/// `C = A · B` into a caller-provided buffer (zeroed first; no allocation).
+/// `C = A · B` into a caller-provided buffer (zeroed first; allocates only
+/// a transient packing workspace on the packed path).
 pub fn matmul_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
-    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    if use_packed(a.rows(), a.cols(), b.cols()) {
+        matmul_packed_into(a, b, c, &mut GemmWorkspace::new());
+    } else {
+        matmul_blocked_into(a, b, c);
+    }
+}
+
+/// `C = A · B` reusing the caller's packing workspace — zero heap
+/// allocation once `ws` has warmed up to the largest panel seen.
+pub fn matmul_into_ws<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    if use_packed(a.rows(), a.cols(), b.cols()) {
+        matmul_packed_into(a, b, c, ws);
+    } else {
+        matmul_blocked_into(a, b, c);
+    }
+}
+
+/// `C = Aᵀ · B` (A is m×r stored row-major; result r×n). Used for `Wᵀ·X`.
+pub fn matmul_at_b<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` into a caller buffer.
+pub fn matmul_at_b_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    matmul_at_b_into_ws(a, b, c, &mut GemmWorkspace::new());
+}
+
+/// `C = Aᵀ · B` reusing the caller's packing workspace.
+pub fn matmul_at_b_into_ws<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    if use_packed(a.cols(), a.rows(), b.cols()) {
+        matmul_at_b_packed_into(a, b, c, ws);
+    } else {
+        matmul_at_b_blocked_into(a, b, c);
+    }
+}
+
+/// `C = A · Bᵀ` (dot products of rows; result m×q). Used for `X·Hᵀ`.
+pub fn matmul_a_bt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` into a caller buffer.
+pub fn matmul_a_bt_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    matmul_a_bt_into_ws(a, b, c, &mut GemmWorkspace::new());
+}
+
+/// `C = A · Bᵀ` reusing the caller's packing workspace.
+pub fn matmul_a_bt_into_ws<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    if use_packed(a.rows(), a.cols(), b.rows()) {
+        matmul_a_bt_packed_into(a, b, c, ws);
+    } else {
+        matmul_a_bt_blocked_into(a, b, c);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed register-blocked path.
+// ---------------------------------------------------------------------------
+
+/// 8×4 register-tile microkernel over packed slivers.
+///
+/// `pa` holds `kc` groups of [`MR`] A values (one per tile row), `pb`
+/// holds `kc` groups of [`NR`] B values. `acc` carries the running C tile
+/// in registers. Separate multiply/add (no FMA) and ascending-`k`
+/// accumulation keep the result bitwise equal to [`matmul_naive`].
+#[inline(always)]
+fn microkernel<T: Scalar>(kc: usize, pa: &[T], pb: &[T], acc: &mut [[T; NR]; MR]) {
+    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    for k in 0..kc {
+        let a = &pa[k * MR..k * MR + MR];
+        let b = &pb[k * NR..k * NR + NR];
+        for i in 0..MR {
+            let ai = a[i];
+            for j in 0..NR {
+                acc[i][j] = acc[i][j] + ai * b[j];
+            }
+        }
+    }
+}
+
+/// The shared BLIS-style loop nest: `C += op(A)·op(B)` with `op` expressed
+/// through the element loaders `la(i, k)` / `lb(k, j)` on the *logical*
+/// `m×k · k×n` problem. `c` must be pre-zeroed by the caller (the nest
+/// accumulates). Partial edge tiles are zero-padded during packing and
+/// masked on the C store, so any shape is handled.
+fn gemm_packed_nest<T: Scalar>(
+    m: usize,
+    k: usize,
+    n: usize,
+    la: impl Fn(usize, usize) -> T,
+    lb: impl Fn(usize, usize) -> T,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    debug_assert_eq!((c.rows(), c.cols()), (m, n));
+    for jc in (0..n).step_by(NC) {
+        let nc = (n - jc).min(NC);
+        let nr_tiles = nc.div_ceil(NR);
+        for pc in (0..k).step_by(KC) {
+            let kc = (k - pc).min(KC);
+            // Pack B[pc..pc+kc, jc..jc+nc] into NR-column slivers,
+            // zero-padding the ragged last sliver.
+            ws.pack_b.clear();
+            ws.pack_b.resize(nr_tiles * kc * NR, T::zero());
+            for jt in 0..nr_tiles {
+                let base = jt * kc * NR;
+                let j0 = jc + jt * NR;
+                let jlim = (n - j0).min(NR);
+                for kk in 0..kc {
+                    let row = base + kk * NR;
+                    for j in 0..jlim {
+                        ws.pack_b[row + j] = lb(pc + kk, j0 + j);
+                    }
+                }
+            }
+            for ic in (0..m).step_by(MC) {
+                let mc = (m - ic).min(MC);
+                let mr_tiles = mc.div_ceil(MR);
+                // Pack A[ic..ic+mc, pc..pc+kc] into MR-row slivers.
+                ws.pack_a.clear();
+                ws.pack_a.resize(mr_tiles * kc * MR, T::zero());
+                for it in 0..mr_tiles {
+                    let base = it * kc * MR;
+                    let i0 = ic + it * MR;
+                    let ilim = (m - i0).min(MR);
+                    for i in 0..ilim {
+                        for kk in 0..kc {
+                            ws.pack_a[base + kk * MR + i] = la(i0 + i, pc + kk);
+                        }
+                    }
+                }
+                // Macro tile: every (jr, ir) pair runs the microkernel.
+                for jt in 0..nr_tiles {
+                    let pb = &ws.pack_b[jt * kc * NR..(jt + 1) * kc * NR];
+                    let j0 = jc + jt * NR;
+                    let jlim = (n - j0).min(NR);
+                    for it in 0..mr_tiles {
+                        let pa = &ws.pack_a[it * kc * MR..(it + 1) * kc * MR];
+                        let i0 = ic + it * MR;
+                        let ilim = (m - i0).min(MR);
+                        let mut acc = [[T::zero(); NR]; MR];
+                        for i in 0..ilim {
+                            let crow = c.row(i0 + i);
+                            for j in 0..jlim {
+                                acc[i][j] = crow[j0 + j];
+                            }
+                        }
+                        microkernel(kc, pa, pb, &mut acc);
+                        for i in 0..ilim {
+                            let crow = c.row_mut(i0 + i);
+                            for j in 0..jlim {
+                                crow[j0 + j] = acc[i][j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · B` through the packed microkernel (any shape; bitwise equal to
+/// [`matmul_naive`]).
+pub fn matmul_packed_into<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}",
+        a.rows(), a.cols(), b.rows(), b.cols());
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "matmul: bad out shape");
+    for x in c.as_mut_slice() {
+        *x = T::zero();
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    gemm_packed_nest(m, k, n, &|i, kk| a[(i, kk)], &|kk, j| b[(kk, j)], c, ws);
+}
+
+/// `C = Aᵀ · B` through the packed microkernel (bitwise equal to
+/// `matmul_naive(&a.transpose(), b)`).
+pub fn matmul_at_b_packed_into<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()));
+    for x in c.as_mut_slice() {
+        *x = T::zero();
+    }
+    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    gemm_packed_nest(m, k, n, &|i, kk| a[(kk, i)], &|kk, j| b[(kk, j)], c, ws);
+}
+
+/// `C = A · Bᵀ` through the packed microkernel (bitwise equal to
+/// `matmul_naive(a, &b.transpose())`).
+pub fn matmul_a_bt_packed_into<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+) {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()));
+    for x in c.as_mut_slice() {
+        *x = T::zero();
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    gemm_packed_nest(m, k, n, &|i, kk| a[(i, kk)], &|kk, j| b[(j, kk)], c, ws);
+}
+
+// ---------------------------------------------------------------------------
+// Blocked fallback (the seed kernel, unchanged numerics).
+// ---------------------------------------------------------------------------
+
+/// `C = A · B` with the cache-blocked i-k-j loop (the seed kernel):
+/// innermost loop contiguous over rows of C and B so LLVM autovectorizes
+/// the axpy. Fallback for tiny shapes and the `micro_gemm` baseline.
+pub fn matmul_blocked_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}",
+        a.rows(), a.cols(), b.rows(), b.cols());
     assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "matmul: bad out shape");
     for x in c.as_mut_slice() {
         *x = T::zero();
@@ -54,15 +373,8 @@ pub fn matmul_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     }
 }
 
-/// `C = Aᵀ · B` (A is m×r stored row-major; result r×n). Used for `Wᵀ·X`.
-pub fn matmul_at_b<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
-    let mut c = Mat::zeros(a.cols(), b.cols());
-    matmul_at_b_into(a, b, &mut c);
-    c
-}
-
-/// `C = Aᵀ · B` into a caller buffer.
-pub fn matmul_at_b_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+/// `C = Aᵀ · B` with the seed rank-1 loop (fallback / baseline).
+pub fn matmul_at_b_blocked_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
     assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()));
     for x in c.as_mut_slice() {
@@ -86,15 +398,8 @@ pub fn matmul_at_b_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     }
 }
 
-/// `C = A · Bᵀ` (dot products of rows; result m×q). Used for `X·Hᵀ`.
-pub fn matmul_a_bt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
-    let mut c = Mat::zeros(a.rows(), b.rows());
-    matmul_a_bt_into(a, b, &mut c);
-    c
-}
-
-/// `C = A · Bᵀ` into a caller buffer.
-pub fn matmul_a_bt_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+/// `C = A · Bᵀ` with the seed unrolled-dot loop (fallback / baseline).
+pub fn matmul_a_bt_blocked_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
     assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()));
     let (m, k, q) = (a.rows(), a.cols(), b.rows());
@@ -127,6 +432,10 @@ pub fn matmul_a_bt_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Gram kernels.
+// ---------------------------------------------------------------------------
+
 /// Gram `G = M · Mᵀ` (q×q, symmetric — only the upper triangle is computed
 /// then mirrored). The local GR kernel of Alg 4 when M = H-block.
 pub fn gram_m_mt<T: Scalar>(m: &Mat<T>) -> Mat<T> {
@@ -155,8 +464,18 @@ pub fn gram_m_mt<T: Scalar>(m: &Mat<T>) -> Mat<T> {
 /// contiguous full-row inner loop vectorizes, which beats halving the flop
 /// count (§Perf log: 1.5→3.9 GFLOP/s at r=10).
 pub fn gram_mt_m<T: Scalar>(m: &Mat<T>) -> Mat<T> {
+    let mut g = Mat::zeros(m.cols(), m.cols());
+    gram_mt_m_into(m, &mut g);
+    g
+}
+
+/// `G = Mᵀ · M` into a caller buffer (zeroed first; no allocation).
+pub fn gram_mt_m_into<T: Scalar>(m: &Mat<T>, g: &mut Mat<T>) {
     let r = m.cols();
-    let mut g = Mat::zeros(r, r);
+    assert_eq!((g.rows(), g.cols()), (r, r), "gram_mt_m: bad out shape");
+    for x in g.as_mut_slice() {
+        *x = T::zero();
+    }
     for i in 0..m.rows() {
         let row = m.row(i);
         for p in 0..r {
@@ -170,7 +489,6 @@ pub fn gram_mt_m<T: Scalar>(m: &Mat<T>) -> Mat<T> {
             }
         }
     }
-    g
 }
 
 /// Naive reference matmul (for tests only).
@@ -207,6 +525,55 @@ mod tests {
     }
 
     #[test]
+    fn packed_matches_naive_bitwise_random_shapes() {
+        check(107, |rng| {
+            let m = 1 + rng.below(70);
+            let k = 1 + rng.below(70);
+            let n = 1 + rng.below(70);
+            let a = Mat::<f64>::rand_uniform(m, k, rng);
+            let b = Mat::<f64>::rand_uniform(k, n, rng);
+            let mut c = Mat::zeros(m, n);
+            matmul_packed_into(&a, &b, &mut c, &mut GemmWorkspace::new());
+            let naive = matmul_naive(&a, &b);
+            if c.as_slice() != naive.as_slice() {
+                return Err("packed != naive bitwise".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_crosses_panel_boundaries() {
+        // Shapes straddling MC/KC/NC panel edges exercise the carry of the
+        // running C value across kc panels.
+        let mut rng = crate::util::rng::Rng::new(55);
+        for &(m, k, n) in
+            &[(MC + 3, KC + 5, NR + 1), (MR, 2 * KC + 1, NR), (2 * MC + 1, KC, 2 * NR + 3)]
+        {
+            let a = Mat::<f64>::rand_uniform(m, k, &mut rng);
+            let b = Mat::<f64>::rand_uniform(k, n, &mut rng);
+            let mut c = Mat::zeros(m, n);
+            matmul_packed_into(&a, &b, &mut c, &mut GemmWorkspace::new());
+            assert_eq!(c.as_slice(), matmul_naive(&a, &b).as_slice());
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_stable() {
+        // One workspace across many shapes: stale panel contents must never
+        // leak into a later product.
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut ws = GemmWorkspace::new();
+        for &(m, k, n) in &[(40, 50, 20), (9, 300, 5), (65, 65, 65), (8, 4, 4), (33, 17, 29)] {
+            let a = Mat::<f64>::rand_uniform(m, k, &mut rng);
+            let b = Mat::<f64>::rand_uniform(k, n, &mut rng);
+            let mut c = Mat::zeros(m, n);
+            matmul_packed_into(&a, &b, &mut c, &mut ws);
+            assert_eq!(c.as_slice(), matmul_naive(&a, &b).as_slice());
+        }
+    }
+
+    #[test]
     fn at_b_matches_transpose_then_matmul() {
         check(102, |rng| {
             let k = 1 + rng.below(30);
@@ -228,6 +595,24 @@ mod tests {
             let b = Mat::<f64>::rand_uniform(q, k, rng);
             assert_close(&to64(&matmul_a_bt(&a, &b)), &to64(&matmul(&a, &b.transpose())), 1e-10)
         });
+    }
+
+    #[test]
+    fn packed_transpose_variants_match_naive_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(66);
+        let mut ws = GemmWorkspace::new();
+        // At·B: logical 37×90 · 90×21.
+        let a = Mat::<f64>::rand_uniform(90, 37, &mut rng);
+        let b = Mat::<f64>::rand_uniform(90, 21, &mut rng);
+        let mut c = Mat::zeros(37, 21);
+        matmul_at_b_packed_into(&a, &b, &mut c, &mut ws);
+        assert_eq!(c.as_slice(), matmul_naive(&a.transpose(), &b).as_slice());
+        // A·Bt: logical 41×70 · 70×13.
+        let a = Mat::<f64>::rand_uniform(41, 70, &mut rng);
+        let b = Mat::<f64>::rand_uniform(13, 70, &mut rng);
+        let mut c = Mat::zeros(41, 13);
+        matmul_a_bt_packed_into(&a, &b, &mut c, &mut ws);
+        assert_eq!(c.as_slice(), matmul_naive(&a, &b.transpose()).as_slice());
     }
 
     #[test]
@@ -262,6 +647,10 @@ mod tests {
         let c = matmul(&a, &b);
         assert_eq!(c.shape(), (3, 2));
         assert!(c.as_slice().iter().all(|&x| x == 0.0));
+        // The packed entry point handles the degenerate shape directly too.
+        let mut cp = Mat::<f64>::filled(3, 2, 7.0);
+        matmul_packed_into(&a, &b, &mut cp, &mut GemmWorkspace::new());
+        assert!(cp.as_slice().iter().all(|&x| x == 0.0));
     }
 
     #[test]

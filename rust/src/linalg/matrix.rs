@@ -10,8 +10,9 @@ use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
-/// Dense row-major matrix of `Scalar` elements.
-#[derive(Clone, PartialEq)]
+/// Dense row-major matrix of `Scalar` elements. `Default` is the empty
+/// `0×0` matrix — the seed state of reusable workspace buffers.
+#[derive(Clone, Default, PartialEq)]
 pub struct Mat<T: Scalar = f64> {
     rows: usize,
     cols: usize,
@@ -133,6 +134,35 @@ impl<T: Scalar> Mat<T> {
             }
         }
         out
+    }
+
+    /// Re-shape in place to `rows × cols`, zero-filled, reusing the
+    /// backing allocation when it is large enough. The workhorse of the
+    /// NMF workspace: after warm-up to the high-water size, `reset` never
+    /// touches the allocator.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.data.clear();
+        self.data.resize(rows * cols, T::zero());
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Like [`Mat::reset`] but skips the zero-fill for the retained
+    /// prefix: existing element values are **unspecified** (stale data or
+    /// zeros). Only for buffers the caller fully overwrites before any
+    /// read — e.g. a GEMM output whose kernel zeroes C itself — where
+    /// `reset`'s extra memory pass would be pure waste on the hot path.
+    pub fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.data.resize(rows * cols, T::zero());
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Copy `other`'s contents into `self` (shapes must match; no
+    /// allocation). The reuse-friendly replacement for `*self = other.clone()`.
+    pub fn copy_from(&mut self, other: &Mat<T>) {
+        assert_eq!(self.shape(), other.shape(), "copy_from: shape mismatch");
+        self.data.copy_from_slice(&other.data);
     }
 
     /// Reinterpret as a new shape (row-major order preserved, zero-copy).
@@ -369,6 +399,28 @@ mod tests {
         let c = m.cols_slice(1, 3);
         assert_eq!(c.shape(), (4, 2));
         assert_eq!(c[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_zeroes() {
+        let mut m = Mat::<f64>::filled(4, 5, 3.0);
+        m.reset(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+        // Growing within capacity must still zero every element.
+        m.as_mut_slice()[0] = 9.0;
+        m.reset(4, 5);
+        assert_eq!(m.shape(), (4, 5));
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_from_matches_clone() {
+        let mut rng = Rng::new(3);
+        let a = Mat::<f64>::rand_uniform(6, 7, &mut rng);
+        let mut b = Mat::<f64>::zeros(6, 7);
+        b.copy_from(&a);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -12,5 +12,6 @@ pub mod qr;
 pub mod scalar;
 pub mod svd;
 
+pub use gemm::GemmWorkspace;
 pub use matrix::Mat;
 pub use scalar::Scalar;

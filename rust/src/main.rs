@@ -231,7 +231,7 @@ fn cmd_scaling(argv: &[String]) -> Result<(), String> {
         .opt("rank-sweep", "2,4,8,16", "rank values (Fig 7)")
         .opt("rank-p-exp", "5", "grid exponent for Fig 7 (5 = 256 ranks)")
         .flag("json", "emit the series as JSON")
-        .opt("save", "", "save series under bench_results/<label>.json");
+        .opt("save", "", "save series under bench_results/BENCH_<label>.json");
     let a = spec.parse(argv)?;
     let mode = match a.get("mode") {
         "strong" => ScalingMode::Strong,
@@ -274,7 +274,7 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         .opt("iters", "100", "NMF iterations")
         .opt("eps", "", "comma-separated eps list (default: paper schedule)")
         .flag("json", "emit rows as JSON")
-        .opt("save", "", "save series under bench_results/<label>.json");
+        .opt("save", "", "save series under bench_results/BENCH_<label>.json");
     let a = spec.parse(argv)?;
     let eps: Vec<f64> =
         if a.get("eps").is_empty() { PAPER_EPS.to_vec() } else { a.f64_list("eps")? };
@@ -308,7 +308,7 @@ fn cmd_denoise(argv: &[String]) -> Result<(), String> {
         .opt("ranks", "16,12,8,6,4,2", "TT ranks to sweep (uniform)")
         .opt("iters", "150", "NMF iterations")
         .flag("json", "emit rows as JSON")
-        .opt("save", "", "save series under bench_results/<label>.json");
+        .opt("save", "", "save series under bench_results/BENCH_<label>.json");
     let a = spec.parse(argv)?;
     let s = a.usize("scale")?.max(1);
     let faces = FaceConfig {

@@ -15,10 +15,20 @@
 //! Factor initialization is a pure function of `(seed, global row, column)`
 //! so any grid shape produces the *same global factors* — this is what lets
 //! tests assert that `p = 1` and `p = 4` runs converge identically.
+//!
+//! ## Allocation discipline
+//!
+//! All local compute of the iteration loops goes through a reusable
+//! [`NmfWorkspace`] ([`dist_nmf_ws`]): packed-GEMM panels, Gram/product
+//! outputs, update temporaries and the gathered-factor staging buffer are
+//! resized in place, so after the first iteration the compute path
+//! performs no heap allocation. Workspace reuse is bitwise-neutral —
+//! every buffer is fully written before it is read.
 
 use crate::dist::{BlockDim, Comm, Grid2d};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
+use crate::nmf::workspace::NmfWorkspace;
 use crate::nmf::{NmfAlgo, NmfConfig, NmfStats};
 use crate::runtime::backend::ComputeBackend;
 use crate::util::timer::Cat;
@@ -55,68 +65,77 @@ fn init_factor(seed: u64, tag: u64, gstart: usize, rows: usize, r: usize) -> Mat
     Mat::from_fn(rows, r, |i, c| init_value(seed, tag, gstart + i, c))
 }
 
-/// SPMD context: local block + comms + index arithmetic.
+/// SPMD context: local block + comms + workspace + index arithmetic.
 struct Ctx<'a> {
     x: &'a Mat<f64>,
     backend: &'a dyn ComputeBackend,
     world: &'a mut Comm,
     row: &'a mut Comm,
     col: &'a mut Comm,
+    ws: &'a mut NmfWorkspace,
     r: usize,
-    /// W sub-block sizes across my row comm (per j), in elements of rows.
+    /// W sub-block sizes across my row comm (per j), in *elements* (rows·r).
     w_counts: Vec<usize>,
-    /// H sub-block sizes across my col comm (per i).
+    /// H sub-block sizes across my col comm (per i), in *elements*.
     h_counts: Vec<usize>,
 }
 
 impl<'a> Ctx<'a> {
-    /// Global Gram `FᵀF` of a factor distributed by rows over the world.
-    fn gram_global(&mut self, f: &Mat<f64>) -> Mat<f64> {
+    /// Global Gram `FᵀF` of a factor distributed by rows over the world,
+    /// into the caller's reused `r × r` buffer.
+    fn gram_global_into(&mut self, f: &Mat<f64>, g: &mut Mat<f64>) {
         let t0 = std::time::Instant::now();
-        let mut g = self.backend.gram(f);
+        self.backend.gram_into(f, g, &mut self.ws.kernel);
         self.world.breakdown.add_secs(Cat::Gram, t0.elapsed().as_secs_f64());
         self.world.all_reduce_sum(g.as_mut_slice());
-        g
     }
 
-    /// Distributed `X·Hᵀ` (Alg 5): returns this rank's `mw × r` block.
-    fn dist_xht(&mut self, ht: &Mat<f64>) -> Result<Mat<f64>> {
+    /// Distributed `X·Hᵀ` (Alg 5) into the caller's reused `mw × r`
+    /// buffer.
+    fn dist_xht_into(&mut self, ht: &Mat<f64>, out: &mut Mat<f64>) -> Result<()> {
         // Gather H^(j) across the column communicator.
         let parts = self.col.all_gather_varied(ht.as_slice());
         let nj: usize = parts.iter().map(|p| p.len()).sum::<usize>() / self.r;
-        let mut htj = Vec::with_capacity(nj * self.r);
+        let ws = &mut *self.ws;
+        ws.gathered.resize_for_overwrite(nj, self.r);
+        let mut off = 0;
         for p in &parts {
-            htj.extend_from_slice(p);
+            ws.gathered.as_mut_slice()[off..off + p.len()].copy_from_slice(p);
+            off += p.len();
         }
-        let htj = Mat::from_vec(nj, self.r, htj);
         // Local V = X^(i,j) · Ht^(j).
         let t0 = std::time::Instant::now();
-        let v = self.backend.xht(self.x, &htj);
+        self.backend.xht_into(self.x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
         // Reduce-scatter across the row communicator into W's distribution.
-        let counts: Vec<usize> = self.w_counts.iter().map(|&c| c * self.r).collect();
-        let mine = self.row.reduce_scatter_uneven(v.as_slice(), &counts)?;
-        Ok(Mat::from_vec(mine.len() / self.r, self.r, mine))
+        let mine = self.row.reduce_scatter_uneven(ws.prod.as_slice(), &self.w_counts)?;
+        out.resize_for_overwrite(mine.len() / self.r, self.r);
+        out.as_mut_slice().copy_from_slice(&mine);
+        Ok(())
     }
 
-    /// Distributed `Wᵀ·X` (Alg 6): returns this rank's transposed `nh × r` block.
-    fn dist_wtx(&mut self, w: &Mat<f64>) -> Result<Mat<f64>> {
+    /// Distributed `Wᵀ·X` (Alg 6) into the caller's reused `nh × r`
+    /// buffer (the transposed (WᵀX) block).
+    fn dist_wtx_into(&mut self, w: &Mat<f64>, out: &mut Mat<f64>) -> Result<()> {
         // Gather W^(i) across the row communicator.
         let parts = self.row.all_gather_varied(w.as_slice());
         let mi: usize = parts.iter().map(|p| p.len()).sum::<usize>() / self.r;
-        let mut wi = Vec::with_capacity(mi * self.r);
+        let ws = &mut *self.ws;
+        ws.gathered.resize_for_overwrite(mi, self.r);
+        let mut off = 0;
         for p in &parts {
-            wi.extend_from_slice(p);
+            ws.gathered.as_mut_slice()[off..off + p.len()].copy_from_slice(p);
+            off += p.len();
         }
-        let wi = Mat::from_vec(mi, self.r, wi);
         // Local Y = X^(i,j)ᵀ · W^(i)  (the transposed (WᵀX) block).
         let t0 = std::time::Instant::now();
-        let y = self.backend.wtx(self.x, &wi);
+        self.backend.wtx_into(self.x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
         // Reduce-scatter across the column communicator into H's distribution.
-        let counts: Vec<usize> = self.h_counts.iter().map(|&c| c * self.r).collect();
-        let mine = self.col.reduce_scatter_uneven(y.as_slice(), &counts)?;
-        Ok(Mat::from_vec(mine.len() / self.r, self.r, mine))
+        let mine = self.col.reduce_scatter_uneven(ws.prod.as_slice(), &self.h_counts)?;
+        out.resize_for_overwrite(mine.len() / self.r, self.r);
+        out.as_mut_slice().copy_from_slice(&mine);
+        Ok(())
     }
 
     /// Global squared Frobenius norm of a row-distributed factor.
@@ -144,18 +163,23 @@ impl<'a> Ctx<'a> {
         0.5 * (xsq - 2.0 * cross + quad).max(0.0)
     }
 
-    /// Per-column global L1 norms of a row-distributed factor.
-    fn col_l1(&mut self, f: &Mat<f64>) -> Vec<f64> {
+    /// Per-column global inverse L1 norms of a row-distributed factor,
+    /// written into `ws.colsums` (`1/s`, or `1.0` for vanishing columns).
+    fn col_l1_inv(&mut self, f: &Mat<f64>) {
         let t0 = std::time::Instant::now();
-        let mut sums = vec![0.0; self.r];
+        let sums = &mut self.ws.colsums;
+        sums.clear();
+        sums.resize(self.r, 0.0);
         for i in 0..f.rows() {
             for (c, s) in sums.iter_mut().enumerate() {
                 *s += f.row(i)[c].abs();
             }
         }
         self.world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
-        self.world.all_reduce_sum(&mut sums);
-        sums
+        self.world.all_reduce_sum(sums);
+        for s in self.ws.colsums.iter_mut() {
+            *s = if *s > 1e-300 { 1.0 / *s } else { 1.0 };
+        }
     }
 }
 
@@ -167,10 +191,10 @@ fn scale_cols(f: &mut Mat<f64>, scale: &[f64]) {
     }
 }
 
-/// Run the distributed NMF on this rank. Collective over `world`
-/// (`row`/`col` must be the grid sub-communicators of `world`).
-///
-/// `x` is this rank's `m_i × n_j` block of the `m×n` matrix.
+/// Run the distributed NMF on this rank with a transient workspace.
+/// Collective over `world` (`row`/`col` must be the grid sub-communicators
+/// of `world`). `x` is this rank's `m_i × n_j` block of the `m×n` matrix.
+#[allow(clippy::too_many_arguments)]
 pub fn dist_nmf(
     x: &Mat<f64>,
     m: usize,
@@ -181,6 +205,25 @@ pub fn dist_nmf(
     col: &mut Comm,
     backend: &dyn ComputeBackend,
     cfg: &NmfConfig,
+) -> Result<NmfOutput> {
+    dist_nmf_ws(x, m, n, grid, world, row, col, backend, cfg, &mut NmfWorkspace::new())
+}
+
+/// [`dist_nmf`] with a caller-owned [`NmfWorkspace`] — the form the TT/HT
+/// drivers use so all stage NMFs share one set of buffers. Results are
+/// bitwise identical whether the workspace is fresh or warm.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_ws(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    ws: &mut NmfWorkspace,
 ) -> Result<NmfOutput> {
     if cfg.rank == 0 {
         return Err(DnttError::config("NMF rank must be ≥ 1"));
@@ -215,9 +258,10 @@ pub fn dist_nmf(
         world,
         row,
         col,
+        ws,
         r,
-        w_counts: (0..grid.pc).map(|jj| wsub.size_of(jj)).collect(),
-        h_counts: (0..grid.pr).map(|ii| hsub.size_of(ii)).collect(),
+        w_counts: (0..grid.pc).map(|jj| wsub.size_of(jj) * r).collect(),
+        h_counts: (0..grid.pr).map(|ii| hsub.size_of(ii) * r).collect(),
     };
 
     // --- Initialization (Alg 3 lines 1–4) ------------------------------
@@ -266,6 +310,9 @@ pub fn dist_nmf(
 }
 
 /// Alg 3: BCD with extrapolation and correction.
+///
+/// All per-iteration state lives in buffers allocated once up front; the
+/// loop body only resizes them in place.
 fn bcd_loop(
     ctx: &mut Ctx<'_>,
     w: &mut Mat<f64>,
@@ -275,15 +322,21 @@ fn bcd_loop(
     stats: &mut NmfStats,
 ) -> Result<()> {
     let delta = cfg.delta;
-    // Momentum state.
+    let r = ctx.r;
+    // Momentum state (fixed shapes; refreshed in place each iteration).
     let mut wm = w.clone();
     let mut htm = ht.clone();
     let mut w_prev = w.clone();
     let mut ht_prev = ht.clone();
+    // Loop-carried products.
+    let mut hht = Mat::zeros(r, r);
+    let mut wtw = Mat::zeros(r, r);
+    let mut xht = Mat::zeros(w.rows(), r);
+    let mut xtw = Mat::zeros(ht.rows(), r);
 
     // Line 3: HHᵀ and XHᵀ for the first W update.
-    let mut hht = ctx.gram_global(&htm);
-    let mut xht = ctx.dist_xht(&htm)?;
+    ctx.gram_global_into(&htm, &mut hht);
+    ctx.dist_xht_into(&htm, &mut xht)?;
 
     let mut t = 1.0f64;
     let mut obj = 0.5 * xsq; // line 4
@@ -294,43 +347,40 @@ fn bcd_loop(
         // --- W given H (lines 6–10) --------------------------------
         let lip_w = hht.fro_norm().max(1e-300);
         let tu = std::time::Instant::now();
-        let w_new = ctx.backend.bcd_update(&wm, &hht, &xht, lip_w);
+        ctx.backend.bcd_update_into(&wm, &hht, &xht, lip_w, w, &mut ctx.ws.kernel);
         ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
-        *w = w_new;
         if cfg.normalize {
             // Line 9, norm-preserving form: W columns to unit L1, fold the
             // scale into the momentum/previous state so the next H-update
             // (which re-fits H against the normalized W) stays consistent.
-            let l1 = ctx.col_l1(w);
-            let scale: Vec<f64> = l1.iter().map(|&s| if s > 1e-300 { 1.0 / s } else { 1.0 }).collect();
-            scale_cols(w, &scale);
-            scale_cols(&mut w_prev, &scale);
+            ctx.col_l1_inv(w);
+            scale_cols(w, &ctx.ws.colsums);
+            scale_cols(&mut w_prev, &ctx.ws.colsums);
         }
-        let wtw = ctx.gram_global(w); // line 10
-        let xtw = ctx.dist_wtx(w)?; // line 12
+        ctx.gram_global_into(w, &mut wtw); // line 10
+        ctx.dist_wtx_into(w, &mut xtw)?; // line 12
 
         // --- H given W (lines 11–14) --------------------------------
         let lip_h = wtw.fro_norm().max(1e-300);
         let tu = std::time::Instant::now();
-        let ht_new = ctx.backend.bcd_update(&htm, &wtw, &xtw, lip_h);
+        ctx.backend.bcd_update_into(&htm, &wtw, &xtw, lip_h, ht, &mut ctx.ws.kernel);
         ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
-        *ht = ht_new;
 
         // Lines 15–16: refresh HHᵀ, XHᵀ with the new H.
-        hht = ctx.gram_global(ht);
-        xht = ctx.dist_xht(ht)?;
+        ctx.gram_global_into(ht, &mut hht);
+        ctx.dist_xht_into(ht, &mut xht)?;
 
         let obj_new = ctx.objective(&xtw, ht, &wtw, &hht, xsq);
 
         if obj_new >= obj {
             // --- Correction (lines 17–20): revert to the last accepted
             // iterate and restart the momentum sequence.
-            *w = w_prev.clone();
-            *ht = ht_prev.clone();
-            wm = w.clone();
-            htm = ht.clone();
-            hht = ctx.gram_global(ht);
-            xht = ctx.dist_xht(ht)?;
+            w.copy_from(&w_prev);
+            ht.copy_from(&ht_prev);
+            wm.copy_from(w);
+            htm.copy_from(ht);
+            ctx.gram_global_into(ht, &mut hht);
+            ctx.dist_xht_into(ht, &mut xht)?;
             t = 1.0;
             stats.restarts += 1;
         } else {
@@ -340,21 +390,20 @@ fn bcd_loop(
             let w_w = wgt.min(delta * (prev_lip_w / lip_w).sqrt());
             let w_h = wgt.min(delta * (prev_lip_h / lip_h).sqrt());
             let tu = std::time::Instant::now();
-            wm = w.clone();
+            // Every element of wm/htm is overwritten, so no copy first.
             for (m_, (cur, prev)) in
                 wm.as_mut_slice().iter_mut().zip(w.as_slice().iter().zip(w_prev.as_slice()))
             {
                 *m_ = cur + w_w * (cur - prev);
             }
-            htm = ht.clone();
             for (m_, (cur, prev)) in
                 htm.as_mut_slice().iter_mut().zip(ht.as_slice().iter().zip(ht_prev.as_slice()))
             {
                 *m_ = cur + w_h * (cur - prev);
             }
             ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
-            w_prev = w.clone();
-            ht_prev = ht.clone();
+            w_prev.copy_from(w);
+            ht_prev.copy_from(ht);
             t = t_new;
             let rel_change = (obj - obj_new).abs() / (0.5 * xsq).max(1e-300);
             obj = obj_new;
@@ -376,7 +425,8 @@ fn bcd_loop(
     Ok(())
 }
 
-/// Multiplicative updates (the paper's MU comparison).
+/// Multiplicative updates (the paper's MU comparison). In-place updates
+/// through the workspace: the iteration allocates nothing after warm-up.
 fn mu_loop(
     ctx: &mut Ctx<'_>,
     w: &mut Mat<f64>,
@@ -385,22 +435,31 @@ fn mu_loop(
     cfg: &NmfConfig,
     stats: &mut NmfStats,
 ) -> Result<()> {
+    let r = ctx.r;
+    let mut hht = Mat::zeros(r, r);
+    let mut wtw = Mat::zeros(r, r);
+    let mut xht = Mat::zeros(w.rows(), r);
+    let mut xtw = Mat::zeros(ht.rows(), r);
     let mut obj = 0.5 * xsq;
+    // HHᵀ is loop-carried: the end-of-iteration refresh (for the
+    // objective) is exactly the Gram the next W-update needs, so it is
+    // computed once per iteration, not twice.
+    ctx.gram_global_into(ht, &mut hht);
     for _l in 0..cfg.max_iters {
-        let hht = ctx.gram_global(ht);
-        let xht = ctx.dist_xht(ht)?;
+        ctx.dist_xht_into(ht, &mut xht)?;
         let tu = std::time::Instant::now();
-        *w = ctx.backend.mu_update(w, &hht, &xht);
+        ctx.backend.mu_update_inplace(w, &hht, &xht, &mut ctx.ws.kernel);
         ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
 
-        let wtw = ctx.gram_global(w);
-        let xtw = ctx.dist_wtx(w)?;
+        ctx.gram_global_into(w, &mut wtw);
+        ctx.dist_wtx_into(w, &mut xtw)?;
         let tu = std::time::Instant::now();
-        *ht = ctx.backend.mu_update(ht, &wtw, &xtw);
+        ctx.backend.mu_update_inplace(ht, &wtw, &xtw, &mut ctx.ws.kernel);
         ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
 
-        let hht2 = ctx.gram_global(ht);
-        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht2, xsq);
+        // Refresh HHᵀ with the new H for the objective (and next iter).
+        ctx.gram_global_into(ht, &mut hht);
+        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht, xsq);
         let rel = (obj - obj_new).abs() / (0.5 * xsq).max(1e-300);
         obj = obj_new;
         stats.iters += 1;
@@ -424,22 +483,27 @@ fn hals_loop(
     stats: &mut NmfStats,
 ) -> Result<()> {
     let r = ctx.r;
+    let mut hht = Mat::zeros(r, r);
+    let mut wtw = Mat::zeros(r, r);
+    let mut xht = Mat::zeros(w.rows(), r);
+    let mut xtw = Mat::zeros(ht.rows(), r);
     let mut obj = 0.5 * xsq;
+    // HHᵀ is loop-carried (see mu_loop): one global Gram per iteration.
+    ctx.gram_global_into(ht, &mut hht);
     for _l in 0..cfg.max_iters {
-        let hht = ctx.gram_global(ht);
-        let xht = ctx.dist_xht(ht)?;
+        ctx.dist_xht_into(ht, &mut xht)?;
         let tu = std::time::Instant::now();
         hals_update(w, &hht, &xht, r);
         ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
 
-        let wtw = ctx.gram_global(w);
-        let xtw = ctx.dist_wtx(w)?;
+        ctx.gram_global_into(w, &mut wtw);
+        ctx.dist_wtx_into(w, &mut xtw)?;
         let tu = std::time::Instant::now();
         hals_update(ht, &wtw, &xtw, r);
         ctx.world.breakdown.add_secs(Cat::Mad, tu.elapsed().as_secs_f64());
 
-        let hht2 = ctx.gram_global(ht);
-        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht2, xsq);
+        ctx.gram_global_into(ht, &mut hht);
+        let obj_new = ctx.objective(&xtw, ht, &wtw, &hht, xsq);
         let rel = (obj - obj_new).abs() / (0.5 * xsq).max(1e-300);
         obj = obj_new;
         stats.iters += 1;
@@ -623,6 +687,45 @@ mod tests {
         assert_eq!(a.row(3), b.row(1));
         for &v in a.as_slice() {
             assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    /// Every update rule through a shared warm workspace must be bitwise
+    /// identical to the transient-workspace wrapper.
+    #[test]
+    fn warm_workspace_is_bitwise_identical() {
+        for algo in [NmfAlgo::Bcd, NmfAlgo::Mu, NmfAlgo::Hals] {
+            let x = low_rank_x(14, 19, 2, 10);
+            let cfg = NmfConfig { rank: 2, max_iters: 25, algo, ..Default::default() };
+            let grid = Grid2d::new(1, 1);
+            let x2 = x.clone();
+            let cfg2 = cfg.clone();
+            let outs = Comm::run(1, move |mut world| {
+                let (mut row, mut col) = grid.make_subcomms(&mut world);
+                let mut ws = NmfWorkspace::new();
+                let a = dist_nmf_ws(
+                    &x2, 14, 19, grid, &mut world, &mut row, &mut col, &NativeBackend,
+                    &cfg2, &mut ws,
+                )
+                .unwrap();
+                // Second run reuses the warm workspace.
+                let b = dist_nmf_ws(
+                    &x2, 14, 19, grid, &mut world, &mut row, &mut col, &NativeBackend,
+                    &cfg2, &mut ws,
+                )
+                .unwrap();
+                // And the transient-workspace wrapper.
+                let c = dist_nmf(
+                    &x2, 14, 19, grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg2,
+                )
+                .unwrap();
+                (a, b, c)
+            });
+            let (a, b, c) = &outs[0];
+            assert_eq!(a.w.as_slice(), b.w.as_slice(), "{algo:?}: warm vs fresh W");
+            assert_eq!(a.ht.as_slice(), b.ht.as_slice(), "{algo:?}: warm vs fresh H");
+            assert_eq!(a.w.as_slice(), c.w.as_slice(), "{algo:?}: ws vs wrapper W");
+            assert_eq!(a.ht.as_slice(), c.ht.as_slice(), "{algo:?}: ws vs wrapper H");
         }
     }
 }

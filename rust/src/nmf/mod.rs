@@ -23,9 +23,11 @@
 
 pub mod dist;
 pub mod prune;
+pub mod workspace;
 
-pub use dist::{dist_nmf, NmfOutput};
-pub use prune::{detect_zeros, dist_nmf_pruned, PruneMap};
+pub use dist::{dist_nmf, dist_nmf_ws, NmfOutput};
+pub use prune::{detect_zeros, dist_nmf_pruned, dist_nmf_pruned_ws, PruneMap};
+pub use workspace::NmfWorkspace;
 
 /// Which update rule to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

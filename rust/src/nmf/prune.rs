@@ -21,7 +21,8 @@
 use crate::dist::{BlockDim, Comm, Grid2d, Layout, SharedStore};
 use crate::error::Result;
 use crate::linalg::Mat;
-use crate::nmf::dist::{dist_nmf, NmfOutput};
+use crate::nmf::dist::{dist_nmf_ws, NmfOutput};
+use crate::nmf::workspace::NmfWorkspace;
 use crate::nmf::NmfConfig;
 use crate::runtime::backend::ComputeBackend;
 use crate::util::timer::Cat;
@@ -144,7 +145,7 @@ fn publish_or_abort(
     Ok(())
 }
 
-/// Run [`dist_nmf`] with zero-row/column pruning applied first and
+/// Run [`crate::nmf::dist_nmf`] with zero-row/column pruning applied first and
 /// full-size distributed factors restored afterwards.
 ///
 /// Collective over `world`; `x` is this rank's `MatGrid` block of the
@@ -167,13 +168,37 @@ pub fn dist_nmf_pruned(
     tag: &str,
     enable: bool,
 ) -> Result<NmfOutput> {
+    dist_nmf_pruned_ws(
+        x, m, n, grid, world, row, col, backend, cfg, store, tag, enable,
+        &mut NmfWorkspace::new(),
+    )
+}
+
+/// [`dist_nmf_pruned`] with a caller-owned [`NmfWorkspace`] — the form
+/// the TT/HT drivers use so every stage NMF shares one buffer set.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_pruned_ws(
+    x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    store: &SharedStore,
+    tag: &str,
+    enable: bool,
+    ws: &mut NmfWorkspace,
+) -> Result<NmfOutput> {
     if !enable {
-        return dist_nmf(x, m, n, grid, world, row, col, backend, cfg);
+        return dist_nmf_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
     }
     let map = detect_zeros(x, m, n, grid, world);
     if map.is_identity() || map.pruned_m() == 0 || map.pruned_n() == 0 {
         // Nothing to prune (or a fully zero matrix, which NMF handles).
-        return dist_nmf(x, m, n, grid, world, row, col, backend, cfg);
+        return dist_nmf_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
     }
     let (pm, pn) = (map.pruned_m(), map.pruned_n());
     let (i, j) = grid.coords(world.rank());
@@ -210,7 +235,7 @@ pub fn dist_nmf_pruned(
     world.barrier();
 
     // --- Factorize the pruned matrix. -----------------------------------
-    let out = dist_nmf(&xp, pm, pn, grid, world, row, col, backend, cfg)?;
+    let out = dist_nmf_ws(&xp, pm, pn, grid, world, row, col, backend, cfg, ws)?;
     let r = cfg.rank;
 
     // --- Restore W: pruned WGrid -> this rank's full-size row block. ----
@@ -292,6 +317,7 @@ mod tests {
     use super::*;
     use crate::dist::chunkstore::SpillMode;
     use crate::linalg::gemm::matmul;
+    use crate::nmf::dist::dist_nmf;
     use crate::runtime::native::NativeBackend;
     use crate::util::rng::Rng;
 

@@ -1,0 +1,65 @@
+//! Reusable per-rank workspace for the distributed NMF hot loop.
+//!
+//! Every multiplicative-update / BCD / HALS iteration of
+//! [`crate::nmf::dist::dist_nmf_ws`] runs its local compute — the packed
+//! GEMMs, the Gram products, the update rules, and the gathered-factor
+//! staging — entirely inside one [`NmfWorkspace`]. Buffers are resized in
+//! place ([`Mat::reset`]), so after the first iteration warms them up to
+//! their high-water sizes the compute path performs **zero heap
+//! allocation**. The communicator's internal channel buffers are the one
+//! deliberate exception (see DESIGN.md §Workspace contract).
+//!
+//! The TT and HT drivers allocate one workspace per rank and thread it
+//! through every stage NMF, so buffer capacity is shared across stages
+//! (sized by the largest stage matrix seen so far).
+//!
+//! Reuse never changes results: every buffer is fully overwritten before
+//! it is read, so a warm workspace is bitwise identical to a fresh one
+//! (asserted in `tests/gemm_kernels.rs`).
+
+use crate::linalg::Mat;
+use crate::runtime::backend::KernelWorkspace;
+
+/// Scratch buffers threaded through one distributed NMF (and reused
+/// across the stage NMFs of a TT/HT decomposition).
+#[derive(Default)]
+pub struct NmfWorkspace {
+    /// Backend kernel scratch: GEMM packing panels + the `F·G` temporary.
+    pub kernel: KernelWorkspace,
+    /// Gathered factor staging (`Ht^(j)` / `W^(i)` concatenated in rank
+    /// order before the local GEMM).
+    pub gathered: Mat<f64>,
+    /// Local GEMM product (`X·Ht` / `Xᵀ·W`) fed to the reduce-scatter.
+    pub prod: Mat<f64>,
+    /// Per-column L1 sums for the W-normalization step (`r` entries).
+    pub colsums: Vec<f64>,
+}
+
+impl NmfWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes currently reserved across all buffers (diagnostic).
+    pub fn capacity_bytes(&self) -> usize {
+        self.kernel.gemm.capacity_bytes()
+            + 8 * (self.kernel.fg.len()
+                + self.gathered.len()
+                + self.prod.len()
+                + self.colsums.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_grows_with_use() {
+        let mut ws = NmfWorkspace::new();
+        assert_eq!(ws.capacity_bytes(), 0);
+        ws.gathered.reset(10, 4);
+        ws.colsums.resize(4, 0.0);
+        assert!(ws.capacity_bytes() >= 8 * (40 + 4));
+    }
+}

@@ -18,9 +18,33 @@
 //! * `xht(X, Ht) = X·H̃` is `m_i × r` for `X: m_i × n_j`, `Ht: n_j × r`;
 //! * `wtx(X, W) = Xᵀ·W` is `n_j × r`.
 
-use crate::linalg::Mat;
+use crate::linalg::{GemmWorkspace, Mat};
+
+/// Reusable scratch for the per-rank kernels: GEMM packing panels plus the
+/// `F·G` temporary of the BCD/MU updates. One per rank, threaded through
+/// every `_into`/`_inplace` backend call so multiplicative-update
+/// iterations stop allocating once the buffers reach their high-water
+/// sizes (see `nmf::workspace::NmfWorkspace`, which embeds one).
+#[derive(Default)]
+pub struct KernelWorkspace {
+    /// Packing panels for the register-blocked GEMM microkernel.
+    pub gemm: GemmWorkspace<f64>,
+    /// `F·G` product temporary (`rows × r`) of the update rules.
+    pub fg: Mat<f64>,
+}
+
+impl KernelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Per-rank dense kernels used by the NMF inner loop.
+///
+/// The allocating methods (`gram`, `xht`, …) are the required interface;
+/// the `_into`/`_inplace` variants have default implementations that fall
+/// back to them, and backends that can compute without allocating (the
+/// native one) override them. The two forms must agree bitwise.
 pub trait ComputeBackend: Send + Sync {
     /// `Fᵀ·F` for a `rows × r` factor block → `r × r` partial Gram.
     fn gram(&self, f: &Mat<f64>) -> Mat<f64>;
@@ -39,6 +63,52 @@ pub trait ComputeBackend: Send + Sync {
 
     /// Multiplicative (Lee–Seung) step: `F ⊙ P ⊘ (F·G + ε)`.
     fn mu_update(&self, f: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>) -> Mat<f64>;
+
+    /// [`ComputeBackend::gram`] into a caller buffer (resized in place).
+    fn gram_into(&self, f: &Mat<f64>, out: &mut Mat<f64>, ws: &mut KernelWorkspace) {
+        let _ = ws;
+        *out = self.gram(f);
+    }
+
+    /// [`ComputeBackend::xht`] into a caller buffer (resized in place).
+    fn xht_into(&self, x: &Mat<f64>, ht: &Mat<f64>, out: &mut Mat<f64>, ws: &mut KernelWorkspace) {
+        let _ = ws;
+        *out = self.xht(x, ht);
+    }
+
+    /// [`ComputeBackend::wtx`] into a caller buffer (resized in place).
+    fn wtx_into(&self, x: &Mat<f64>, w: &Mat<f64>, out: &mut Mat<f64>, ws: &mut KernelWorkspace) {
+        let _ = ws;
+        *out = self.wtx(x, w);
+    }
+
+    /// [`ComputeBackend::bcd_update`] into a caller buffer. `fm` and `out`
+    /// must be distinct matrices (the SPMD loop updates `F` from the
+    /// momentum iterate `Fm`).
+    fn bcd_update_into(
+        &self,
+        fm: &Mat<f64>,
+        g: &Mat<f64>,
+        p: &Mat<f64>,
+        lip: f64,
+        out: &mut Mat<f64>,
+        ws: &mut KernelWorkspace,
+    ) {
+        let _ = ws;
+        *out = self.bcd_update(fm, g, p, lip);
+    }
+
+    /// [`ComputeBackend::mu_update`] applied in place to `f`.
+    fn mu_update_inplace(
+        &self,
+        f: &mut Mat<f64>,
+        g: &Mat<f64>,
+        p: &Mat<f64>,
+        ws: &mut KernelWorkspace,
+    ) {
+        let _ = ws;
+        *f = self.mu_update(f, g, p);
+    }
 
     /// Backend label for logs/metrics.
     fn name(&self) -> &'static str;

@@ -1,7 +1,10 @@
 //! Pure-Rust compute backend (reference implementation, any shape).
+//!
+//! The allocating trait methods delegate to the `_into` overrides through
+//! fresh buffers, so both forms are bitwise identical by construction.
 
-use super::backend::{ComputeBackend, MU_EPS};
-use crate::linalg::gemm::{gram_mt_m, matmul, matmul_at_b, matmul_into};
+use super::backend::{ComputeBackend, KernelWorkspace, MU_EPS};
+use crate::linalg::gemm::{gram_mt_m_into, matmul_at_b_into_ws, matmul_into_ws};
 use crate::linalg::Mat;
 
 /// Native backend built on `crate::linalg`.
@@ -10,41 +13,88 @@ pub struct NativeBackend;
 
 impl ComputeBackend for NativeBackend {
     fn gram(&self, f: &Mat<f64>) -> Mat<f64> {
-        gram_mt_m(f)
+        let mut out = Mat::zeros(0, 0);
+        self.gram_into(f, &mut out, &mut KernelWorkspace::new());
+        out
     }
 
     fn xht(&self, x: &Mat<f64>, ht: &Mat<f64>) -> Mat<f64> {
-        matmul(x, ht)
+        let mut out = Mat::zeros(0, 0);
+        self.xht_into(x, ht, &mut out, &mut KernelWorkspace::new());
+        out
     }
 
     fn wtx(&self, x: &Mat<f64>, w: &Mat<f64>) -> Mat<f64> {
-        matmul_at_b(x, w)
+        let mut out = Mat::zeros(0, 0);
+        self.wtx_into(x, w, &mut out, &mut KernelWorkspace::new());
+        out
     }
 
     fn bcd_update(&self, fm: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>, lip: f64) -> Mat<f64> {
-        debug_assert!(lip > 0.0);
-        let mut fg = Mat::zeros(fm.rows(), g.cols());
-        matmul_into(fm, g, &mut fg);
-        // max(0, fm - (fm·g - p)/lip), fused elementwise.
-        let inv = 1.0 / lip;
-        let mut out = fm.clone();
-        let (o, fgs, ps) = (out.as_mut_slice(), fg.as_slice(), p.as_slice());
-        for i in 0..o.len() {
-            let v = o[i] - (fgs[i] - ps[i]) * inv;
-            o[i] = if v > 0.0 { v } else { 0.0 };
-        }
+        let mut out = Mat::zeros(0, 0);
+        self.bcd_update_into(fm, g, p, lip, &mut out, &mut KernelWorkspace::new());
         out
     }
 
     fn mu_update(&self, f: &Mat<f64>, g: &Mat<f64>, p: &Mat<f64>) -> Mat<f64> {
-        let mut fg = Mat::zeros(f.rows(), g.cols());
-        matmul_into(f, g, &mut fg);
         let mut out = f.clone();
-        let (o, fgs, ps) = (out.as_mut_slice(), fg.as_slice(), p.as_slice());
+        self.mu_update_inplace(&mut out, g, p, &mut KernelWorkspace::new());
+        out
+    }
+
+    fn gram_into(&self, f: &Mat<f64>, out: &mut Mat<f64>, _ws: &mut KernelWorkspace) {
+        // gram_mt_m_into zeroes the output itself.
+        out.resize_for_overwrite(f.cols(), f.cols());
+        gram_mt_m_into(f, out);
+    }
+
+    fn xht_into(&self, x: &Mat<f64>, ht: &Mat<f64>, out: &mut Mat<f64>, ws: &mut KernelWorkspace) {
+        // Both GEMM branches zero C before accumulating.
+        out.resize_for_overwrite(x.rows(), ht.cols());
+        matmul_into_ws(x, ht, out, &mut ws.gemm);
+    }
+
+    fn wtx_into(&self, x: &Mat<f64>, w: &Mat<f64>, out: &mut Mat<f64>, ws: &mut KernelWorkspace) {
+        out.resize_for_overwrite(x.cols(), w.cols());
+        matmul_at_b_into_ws(x, w, out, &mut ws.gemm);
+    }
+
+    fn bcd_update_into(
+        &self,
+        fm: &Mat<f64>,
+        g: &Mat<f64>,
+        p: &Mat<f64>,
+        lip: f64,
+        out: &mut Mat<f64>,
+        ws: &mut KernelWorkspace,
+    ) {
+        debug_assert!(lip > 0.0);
+        ws.fg.resize_for_overwrite(fm.rows(), g.cols());
+        matmul_into_ws(fm, g, &mut ws.fg, &mut ws.gemm);
+        // max(0, fm - (fm·g - p)/lip), fused elementwise (writes every
+        // element, so the output skips the zero-fill too).
+        let inv = 1.0 / lip;
+        out.resize_for_overwrite(fm.rows(), g.cols());
+        let (o, fms, fgs, ps) = (out.as_mut_slice(), fm.as_slice(), ws.fg.as_slice(), p.as_slice());
+        for i in 0..o.len() {
+            let v = fms[i] - (fgs[i] - ps[i]) * inv;
+            o[i] = if v > 0.0 { v } else { 0.0 };
+        }
+    }
+
+    fn mu_update_inplace(
+        &self,
+        f: &mut Mat<f64>,
+        g: &Mat<f64>,
+        p: &Mat<f64>,
+        ws: &mut KernelWorkspace,
+    ) {
+        ws.fg.resize_for_overwrite(f.rows(), g.cols());
+        matmul_into_ws(f, g, &mut ws.fg, &mut ws.gemm);
+        let (o, fgs, ps) = (f.as_mut_slice(), ws.fg.as_slice(), p.as_slice());
         for i in 0..o.len() {
             o[i] *= ps[i] / (fgs[i] + MU_EPS);
         }
-        out
     }
 
     fn name(&self) -> &'static str {
@@ -55,6 +105,7 @@ impl ComputeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::{gram_mt_m, matmul};
     use crate::util::rng::Rng;
 
     #[test]
@@ -100,5 +151,32 @@ mod tests {
         let out = NativeBackend.mu_update(&f, &g, &p);
         assert_eq!(out.as_slice()[0], 0.0); // zeros stay zero under MU
         assert!(out.as_slice()[1] > 0.0);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bitwise_with_reused_workspace() {
+        let mut rng = Rng::new(4);
+        let b = NativeBackend;
+        let mut ws = KernelWorkspace::new();
+        let mut out = Mat::zeros(0, 0);
+        // Two different shapes through the same workspace.
+        for &(rows, r, cols) in &[(40usize, 6usize, 50usize), (23, 4, 31)] {
+            let x = Mat::<f64>::rand_uniform(rows, cols, &mut rng);
+            let ht = Mat::<f64>::rand_uniform(cols, r, &mut rng);
+            let w = Mat::<f64>::rand_uniform(rows, r, &mut rng);
+            b.xht_into(&x, &ht, &mut out, &mut ws);
+            assert_eq!(out.as_slice(), b.xht(&x, &ht).as_slice());
+            b.wtx_into(&x, &w, &mut out, &mut ws);
+            assert_eq!(out.as_slice(), b.wtx(&x, &w).as_slice());
+            b.gram_into(&w, &mut out, &mut ws);
+            assert_eq!(out.as_slice(), b.gram(&w).as_slice());
+            let g = b.gram(&ht);
+            let p = b.xht(&x, &ht);
+            b.bcd_update_into(&w, &g, &p, g.fro_norm(), &mut out, &mut ws);
+            assert_eq!(out.as_slice(), b.bcd_update(&w, &g, &p, g.fro_norm()).as_slice());
+            let mut f = w.clone();
+            b.mu_update_inplace(&mut f, &g, &p, &mut ws);
+            assert_eq!(f.as_slice(), b.mu_update(&w, &g, &p).as_slice());
+        }
     }
 }

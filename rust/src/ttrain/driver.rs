@@ -11,7 +11,7 @@
 use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::nmf::{dist_nmf_pruned, NmfConfig, NmfStats};
+use crate::nmf::{dist_nmf_pruned_ws, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::TTensor;
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -114,6 +114,10 @@ pub fn dist_ntt(
     let mut cur_data = my_block;
     let mut r_prev = 1usize;
     let mut s_rest: usize = dims.iter().product();
+    // One workspace per rank, shared by every stage NMF: the packed-GEMM
+    // panels and update temporaries warm up once and are reused, so the
+    // sweep's inner iterations allocate nothing.
+    let mut ws = NmfWorkspace::new();
 
     for l in 0..d - 1 {
         let n_l = dims[l];
@@ -134,9 +138,9 @@ pub fn dist_ntt(
 
         // --- Line 7: distributed NMF (optionally zero-row/col pruned).
         let nmf_cfg = NmfConfig { rank, seed: cfg.nmf.seed.wrapping_add(l as u64), ..cfg.nmf.clone() };
-        let out = dist_nmf_pruned(
+        let out = dist_nmf_pruned_ws(
             &x, m, ncols, grid, world, row, col, backend, &nmf_cfg,
-            store, &format!("tt.stage{l}"), cfg.prune,
+            store, &format!("tt.stage{l}"), cfg.prune, &mut ws,
         )?;
 
         // --- Line 8: gather W into core G(l). World-rank order concatenates

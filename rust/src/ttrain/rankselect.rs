@@ -78,6 +78,7 @@ pub struct RankSelection {
 /// Distributed ε-threshold rank selection on the `m×n` matrix whose local
 /// block (on grid position derived from `world.rank()`) is `x`.
 /// Collective over `world`/`row`/`col`.
+#[allow(clippy::too_many_arguments)]
 pub fn dist_rank_select(
     x: &Mat<f64>,
     m: usize,
