@@ -1,0 +1,84 @@
+//! Micro: sparse (CSR SpMM) vs packed dense GEMM on the NMF product
+//! shapes, across a density sweep.
+//!
+//! Both kernels are credited with the *nominal dense* flop count
+//! (`2·m·k·n`), so the reported GF/s are effective rates and the
+//! sparse/dense GF/s ratio is exactly the wall-clock speedup. The CI
+//! perf gate (`rust/bench/baseline.json`) asserts warn-only that the
+//! sparse kernel beats the packed dense kernel at 99% sparsity
+//! (`d=0.01`). Emits `bench_results/BENCH_sparse_vs_dense.json`
+//! (`dntt-bench-v1` envelope); `-- --smoke` trims the timing budget but
+//! keeps every density so the CI artifact always carries the full sweep
+//! for EXPERIMENTS.md §Sparse.
+
+use dntt::bench::harness::Bench;
+use dntt::linalg::gemm::{matmul_at_b_into_ws, matmul_into_ws, GemmWorkspace};
+use dntt::linalg::sparse::{sp_matmul_at_b_into, sp_matmul_into, SparseMat};
+use dntt::linalg::Mat;
+use dntt::util::rng::Rng;
+
+/// Dense non-negative matrix with exact zeros at the given density.
+fn sparse_x(m: usize, n: usize, density: f64, rng: &mut Rng) -> Mat<f64> {
+    Mat::from_fn(m, n, |_, _| {
+        if rng.uniform() < density {
+            0.5 + rng.uniform()
+        } else {
+            0.0
+        }
+    })
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(1);
+    let mut ws = GemmWorkspace::<f64>::new();
+
+    // The quickstart-scale NMF product shapes (X: 1024×2048, r = 10).
+    let (m, k, r) = (1024usize, 2048usize, 10usize);
+    let flops = 2.0 * (m * k * r) as f64;
+    let ht = Mat::<f64>::rand_uniform(k, r, &mut rng);
+    let w = Mat::<f64>::rand_uniform(m, r, &mut rng);
+
+    // Dense packed baselines (density-independent).
+    let xd = sparse_x(m, k, 1.0, &mut rng);
+    let mut out = Mat::<f64>::zeros(m, r);
+    b.run_case(&format!("xht_dense {m}x{k}x{r}"), &[m, k, r], flops, || {
+        matmul_into_ws(&xd, &ht, &mut out, &mut ws)
+    });
+    let mut out_t = Mat::<f64>::zeros(k, r);
+    b.run_case(&format!("wtx_dense {m}x{k}x{r}"), &[k, m, r], flops, || {
+        matmul_at_b_into_ws(&xd, &w, &mut out_t, &mut ws)
+    });
+
+    // Density sweep: the EXPERIMENTS.md §Sparse schedule.
+    for &density in &[0.01f64, 0.1, 0.5, 1.0] {
+        let x = sparse_x(m, k, density, &mut rng);
+        let xs = SparseMat::from_dense(&x);
+        b.run_case(
+            &format!("xht_sparse {m}x{k}x{r} d={density}"),
+            &[m, k, r],
+            flops,
+            || sp_matmul_into(&xs, &ht, &mut out),
+        );
+        b.run_case(
+            &format!("wtx_sparse {m}x{k}x{r} d={density}"),
+            &[k, m, r],
+            flops,
+            || sp_matmul_at_b_into(&xs, &w, &mut out_t),
+        );
+    }
+
+    // Console summary of the acceptance ratio (99% sparsity headline).
+    let gf = |name: &str| {
+        b.results().iter().find(|s| s.name == name).map(|s| s.gflops()).unwrap_or(0.0)
+    };
+    let dense = gf(&format!("xht_dense {m}x{k}x{r}"));
+    let sparse = gf(&format!("xht_sparse {m}x{k}x{r} d=0.01"));
+    if dense > 0.0 {
+        println!(
+            "\nxht at d=0.01: dense {dense:.2} GF/s, sparse {sparse:.2} effective GF/s ({:.2}x)",
+            sparse / dense
+        );
+    }
+    b.save("sparse_vs_dense").unwrap();
+}

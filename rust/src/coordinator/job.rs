@@ -6,7 +6,7 @@ use crate::dist::chunkstore::SpillMode;
 use crate::dist::{CostModel, ProcGrid};
 use crate::ht::HtConfig;
 use crate::tensor::DenseTensor;
-use crate::ttrain::{SyntheticTt, TtConfig};
+use crate::ttrain::{SyntheticSparse, SyntheticTt, TtConfig};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -47,6 +47,10 @@ pub enum InputSpec {
     /// §IV-A synthetic TT tensor — blocks are generated per rank without
     /// ever materializing the full tensor (scales to out-of-core sizes).
     Synthetic(SyntheticTt),
+    /// Synthetic **sparse** tensor with controllable density — blocks are
+    /// generated per rank as sparse chunks; the dense tensor is never
+    /// materialized on the distributed path.
+    SyntheticSparse(SyntheticSparse),
     /// Synthetic Yale-B-like face tensor (materialized once, shared).
     Faces(FaceConfig),
     /// Synthetic high-speed video tensor.
@@ -59,17 +63,18 @@ impl InputSpec {
     pub fn dims(&self) -> Vec<usize> {
         match self {
             InputSpec::Synthetic(s) => s.dims.clone(),
+            InputSpec::SyntheticSparse(s) => s.dims.clone(),
             InputSpec::Faces(c) => vec![c.height, c.width, c.illuminations, c.subjects],
             InputSpec::Video(c) => vec![c.height, c.width, c.channels, c.frames],
             InputSpec::Dense(t) => t.dims().to_vec(),
         }
     }
 
-    /// Materialize the full tensor when feasible (None for Synthetic,
-    /// which is generated blockwise).
+    /// Materialize the full tensor when feasible (None for the synthetic
+    /// inputs, which are generated blockwise).
     pub fn materialize(&self) -> Option<Arc<DenseTensor<f64>>> {
         match self {
-            InputSpec::Synthetic(_) => None,
+            InputSpec::Synthetic(_) | InputSpec::SyntheticSparse(_) => None,
             InputSpec::Faces(c) => Some(Arc::new(crate::data::generate_faces(c))),
             InputSpec::Video(c) => Some(Arc::new(crate::data::generate_video(c))),
             InputSpec::Dense(t) => Some(t.clone()),
@@ -79,6 +84,7 @@ impl InputSpec {
     pub fn label(&self) -> String {
         match self {
             InputSpec::Synthetic(s) => format!("synthetic{:?}r{:?}", s.dims, s.ranks),
+            InputSpec::SyntheticSparse(s) => format!("sparse{:?}d{}", s.dims, s.density),
             InputSpec::Faces(_) => "faces".into(),
             InputSpec::Video(_) => "video".into(),
             InputSpec::Dense(t) => format!("dense{:?}", t.dims()),

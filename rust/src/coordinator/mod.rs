@@ -9,7 +9,7 @@ pub mod metrics;
 pub use job::{BackendChoice, Decomposition, InputSpec, JobConfig};
 pub use metrics::{DecompOutput, JobReport};
 
-use crate::dist::{Comm, SharedStore};
+use crate::dist::{Comm, SharedStore, TensorBlock};
 use crate::error::{DnttError, Result};
 use crate::runtime::{NativeBackend, PjrtBackend, PjrtEngine};
 use crate::ttrain::driver::{dist_ntt, extract_block};
@@ -17,6 +17,21 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Run a decomposition job end-to-end.
+///
+/// ```
+/// use dntt::coordinator::{run_job, InputSpec, JobConfig};
+/// use dntt::dist::ProcGrid;
+/// use dntt::ttrain::SyntheticTt;
+///
+/// let job = JobConfig::new(
+///     InputSpec::Synthetic(SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 7)),
+///     ProcGrid::new(vec![1, 1, 1]).unwrap(),
+/// );
+/// let report = run_job(&job).unwrap();
+/// assert_eq!(report.ranks.len(), 4); // [1, r1, r2, 1] for a 3-mode TT
+/// assert!(report.output.is_nonneg());
+/// assert!(report.rel_error.unwrap() < 1.0);
+/// ```
 pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     let dims = job.input.dims();
     if dims.len() != job.grid.dims().len() {
@@ -46,10 +61,11 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     let eng2 = engine.clone();
     let mut outs: Vec<Result<DecompOutput>> = Comm::run(p, move |mut world| {
         let rank = world.rank();
-        // Build this rank's block.
+        // Build this rank's block (sparse inputs stay sparse end to end).
         let block = match (&input, &dense2) {
-            (InputSpec::Synthetic(s), _) => s.block(&grid, rank)?,
-            (_, Some(t)) => extract_block(t, &grid, rank),
+            (InputSpec::Synthetic(s), _) => TensorBlock::Dense(s.block(&grid, rank)?),
+            (InputSpec::SyntheticSparse(s), _) => TensorBlock::Sparse(s.block(&grid, rank)),
+            (_, Some(t)) => TensorBlock::Dense(extract_block(t, &grid, rank)),
             _ => unreachable!("non-synthetic inputs materialize"),
         };
         let (mut row, mut col) = grid2.make_subcomms(&mut world);
@@ -94,6 +110,9 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     let rel_error = if job.check_error {
         match (&job.input, &dense) {
             (InputSpec::Synthetic(s), _) if s.len() <= 20_000_000 => {
+                Some(output.rel_error(&s.dense()))
+            }
+            (InputSpec::SyntheticSparse(s), _) if s.len() <= 20_000_000 => {
                 Some(output.rel_error(&s.dense()))
             }
             (_, Some(t)) => Some(output.rel_error(t)),

@@ -33,6 +33,20 @@
 //!   but presenting the *permuted* logical order the HT right-child
 //!   matricization needs (left-edge index moved from rows to columns).
 //!
+//! # Sparse chunks
+//!
+//! Every layout's chunks can be published **dense** (`Vec<f64>`, the
+//! chunk's row-major buffer) or **sparse**
+//! ([`crate::tensor::SparseChunk`], a sorted index/value view over the
+//! same order), freely mixed within one array; [`TensorBlock`] is the
+//! either-representation type the drivers hand in. Sparse chunks spill
+//! in an nnz-sized record format and are read back through the same
+//! [`StoreView`] (`read_into` zero-fills and scatters;
+//! [`StoreView::read_nonzeros`] walks nonzeros directly).
+//! [`dist_reshape_x`] assembles its output block as CSR when the global
+//! stored density is at most [`SPARSE_RESHAPE_CUTOFF`]. The full
+//! contract lives in `rust/DESIGN.md` §2.7.
+//!
 //! # Collective protocol
 //!
 //! [`dist_reshape`] is the one-call version of Alg 1: every rank
@@ -44,7 +58,9 @@
 use crate::dist::comm::Comm;
 use crate::dist::topology::{BlockDim, Grid2d};
 use crate::error::{DnttError, Result};
-use crate::linalg::Mat;
+use crate::linalg::sparse::SparseMat;
+use crate::linalg::{DenseOrSparse, Mat};
+use crate::tensor::sparse::SparseChunk;
 use crate::util::timer::Cat;
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -249,10 +265,38 @@ impl Layout {
     }
 }
 
+/// One rank's chunk of a distributed array, dense or sparse — what the
+/// drivers feed into [`SharedStore::publish_block`] / [`dist_reshape_x`].
+/// Dense and sparse chunks may coexist within one stored array (ranks
+/// decide independently how to represent their block).
+pub enum TensorBlock {
+    /// The chunk's dense row-major buffer.
+    Dense(Vec<f64>),
+    /// The chunk as a sorted sparse vector over the same row-major order.
+    Sparse(SparseChunk),
+}
+
+impl TensorBlock {
+    /// Logical (dense) element count of the chunk.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorBlock::Dense(v) => v.len(),
+            TensorBlock::Sparse(s) => s.len(),
+        }
+    }
+
+    /// True when the chunk has no logical elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// One published chunk.
 enum ChunkData {
     Mem(Arc<Vec<f64>>),
     Disk(PathBuf),
+    MemSparse(Arc<SparseChunk>),
+    DiskSparse { path: PathBuf, len: usize, nnz: usize },
 }
 
 struct Entry {
@@ -284,6 +328,74 @@ impl SharedStore {
         &self.spill
     }
 
+    /// Validate chunk index, chunk length and (pre-spill) layout
+    /// agreement for a publish of `data_len` logical elements.
+    fn check_publish(
+        &self,
+        name: &str,
+        layout: &Layout,
+        chunk: usize,
+        data_len: usize,
+    ) -> Result<()> {
+        if chunk >= layout.num_chunks() {
+            return Err(DnttError::shape(format!(
+                "publish {name}: chunk {chunk} out of range for {} chunks",
+                layout.num_chunks()
+            )));
+        }
+        let want = layout.chunk_len(chunk);
+        if data_len != want {
+            return Err(DnttError::shape(format!(
+                "publish {name}: chunk {chunk} has {data_len} elements, layout expects {want}"
+            )));
+        }
+        // Validate layout agreement before touching the filesystem so a
+        // clashing publish cannot leak an orphan spill file.
+        let entries = self.entries.lock().unwrap();
+        if let Some(entry) = entries.get(name) {
+            if entry.layout != *layout {
+                return Err(Self::layout_clash(name));
+            }
+        }
+        Ok(())
+    }
+
+    fn layout_clash(name: &str) -> DnttError {
+        DnttError::shape(format!("publish {name}: layout disagrees with the first publisher"))
+    }
+
+    /// Insert a stored chunk, handling the lost-race-with-conflicting-
+    /// first-publisher case (spill files of the loser are deleted).
+    fn insert_chunk(
+        &self,
+        name: &str,
+        layout: &Layout,
+        chunk: usize,
+        stored: ChunkData,
+    ) -> Result<()> {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            layout: layout.clone(),
+            chunks: (0..layout.num_chunks()).map(|_| None).collect(),
+        });
+        if entry.layout != *layout {
+            match &stored {
+                ChunkData::Disk(path) | ChunkData::DiskSparse { path, .. } => {
+                    let _ = std::fs::remove_file(path);
+                }
+                _ => {}
+            }
+            return Err(Self::layout_clash(name));
+        }
+        entry.chunks[chunk] = Some(stored);
+        Ok(())
+    }
+
+    fn spill_path(&self, dir: &std::path::Path, name: &str, chunk: usize) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        Ok(dir.join(format!("{name}.{chunk}.chunk")))
+    }
+
     /// Publish chunk `chunk` of array `name` under `layout`.
     ///
     /// The first publisher fixes the layout; later publishers must pass an
@@ -292,37 +404,11 @@ impl SharedStore {
     /// `name` must be filesystem-safe (the crate uses names like
     /// `"tt.stage0"`).
     pub fn publish(&self, name: &str, layout: &Layout, chunk: usize, data: Vec<f64>) -> Result<()> {
-        if chunk >= layout.num_chunks() {
-            return Err(DnttError::shape(format!(
-                "publish {name}: chunk {chunk} out of range for {} chunks",
-                layout.num_chunks()
-            )));
-        }
-        let want = layout.chunk_len(chunk);
-        if data.len() != want {
-            return Err(DnttError::shape(format!(
-                "publish {name}: chunk {chunk} has {} elements, layout expects {want}",
-                data.len()
-            )));
-        }
-        let layout_clash = || {
-            DnttError::shape(format!("publish {name}: layout disagrees with the first publisher"))
-        };
-        // Validate layout agreement before touching the filesystem so a
-        // clashing publish cannot leak an orphan spill file.
-        {
-            let entries = self.entries.lock().unwrap();
-            if let Some(entry) = entries.get(name) {
-                if entry.layout != *layout {
-                    return Err(layout_clash());
-                }
-            }
-        }
+        self.check_publish(name, layout, chunk, data.len())?;
         let stored = match &self.spill {
             SpillMode::Memory => ChunkData::Mem(Arc::new(data)),
             SpillMode::Disk(dir) => {
-                std::fs::create_dir_all(dir)?;
-                let path = dir.join(format!("{name}.{chunk}.chunk"));
+                let path = self.spill_path(dir, name, chunk)?;
                 let mut bytes = Vec::with_capacity(data.len() * 8);
                 for x in &data {
                     bytes.extend_from_slice(&x.to_le_bytes());
@@ -331,20 +417,56 @@ impl SharedStore {
                 ChunkData::Disk(path)
             }
         };
-        let mut entries = self.entries.lock().unwrap();
-        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
-            layout: layout.clone(),
-            chunks: (0..layout.num_chunks()).map(|_| None).collect(),
-        });
-        if entry.layout != *layout {
-            // Lost a race with a conflicting first publisher: clean up.
-            if let ChunkData::Disk(path) = &stored {
-                let _ = std::fs::remove_file(path);
+        self.insert_chunk(name, layout, chunk, stored)
+    }
+
+    /// Publish a **sparse** chunk of array `name` under `layout`. The
+    /// chunk's logical length must match `layout.chunk_len(chunk)`; its
+    /// index/value pairs cover the same row-major order a dense publish
+    /// would. Sparse and dense chunks may be mixed freely within one
+    /// array. In disk mode the spill file holds
+    /// `[nnz: u64 | idx: u64 × nnz | vals: f64 × nnz]` little-endian, so
+    /// spill traffic scales with `nnz`, not the dense chunk size.
+    pub fn publish_sparse(
+        &self,
+        name: &str,
+        layout: &Layout,
+        chunk: usize,
+        data: SparseChunk,
+    ) -> Result<()> {
+        self.check_publish(name, layout, chunk, data.len())?;
+        let stored = match &self.spill {
+            SpillMode::Memory => ChunkData::MemSparse(Arc::new(data)),
+            SpillMode::Disk(dir) => {
+                let path = self.spill_path(dir, name, chunk)?;
+                let (len, nnz) = (data.len(), data.nnz());
+                let mut bytes = Vec::with_capacity(8 * (1 + 2 * nnz));
+                bytes.extend_from_slice(&(nnz as u64).to_le_bytes());
+                for &i in data.idx() {
+                    bytes.extend_from_slice(&(i as u64).to_le_bytes());
+                }
+                for &v in data.vals() {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                std::fs::write(&path, &bytes)?;
+                ChunkData::DiskSparse { path, len, nnz }
             }
-            return Err(layout_clash());
+        };
+        self.insert_chunk(name, layout, chunk, stored)
+    }
+
+    /// Publish either representation of a chunk (the driver-facing form).
+    pub fn publish_block(
+        &self,
+        name: &str,
+        layout: &Layout,
+        chunk: usize,
+        data: TensorBlock,
+    ) -> Result<()> {
+        match data {
+            TensorBlock::Dense(v) => self.publish(name, layout, chunk, v),
+            TensorBlock::Sparse(s) => self.publish_sparse(name, layout, chunk, s),
         }
-        entry.chunks[chunk] = Some(stored);
-        Ok(())
     }
 
     /// Open a read view of array `name`. Errors if the array is unknown or
@@ -362,6 +484,15 @@ impl SharedStore {
                 Some(ChunkData::Disk(path)) => {
                     slots.push(ViewSlot::Disk { path: path.clone(), cache: RefCell::new(None) })
                 }
+                Some(ChunkData::MemSparse(data)) => {
+                    slots.push(ViewSlot::MemSparse(Arc::clone(data)))
+                }
+                Some(ChunkData::DiskSparse { path, len, nnz }) => slots.push(ViewSlot::DiskSparse {
+                    path: path.clone(),
+                    len: *len,
+                    nnz: *nnz,
+                    cache: RefCell::new(None),
+                }),
                 None => {
                     return Err(DnttError::Comm(format!(
                         "store view: array '{name}' is missing chunk {c} (publish not complete?)"
@@ -380,8 +511,11 @@ impl SharedStore {
         let entry = self.entries.lock().unwrap().remove(name);
         if let Some(entry) = entry {
             for chunk in entry.chunks.into_iter().flatten() {
-                if let ChunkData::Disk(path) = chunk {
-                    let _ = std::fs::remove_file(path);
+                match chunk {
+                    ChunkData::Disk(path) | ChunkData::DiskSparse { path, .. } => {
+                        let _ = std::fs::remove_file(path);
+                    }
+                    _ => {}
                 }
             }
         }
@@ -391,6 +525,14 @@ impl SharedStore {
 enum ViewSlot {
     Mem(Arc<Vec<f64>>),
     Disk { path: PathBuf, cache: RefCell<Option<Vec<f64>>> },
+    MemSparse(Arc<SparseChunk>),
+    DiskSparse { path: PathBuf, len: usize, nnz: usize, cache: RefCell<Option<SparseChunk>> },
+}
+
+/// A chunk's contents as seen through [`StoreView::with_loaded`].
+enum Loaded<'a> {
+    Dense(&'a [f64]),
+    Sparse(&'a SparseChunk),
 }
 
 /// A read snapshot of one stored array.
@@ -427,6 +569,29 @@ impl StoreView {
         self.bytes_read.get()
     }
 
+    /// True when at least one chunk was published sparse.
+    pub fn has_sparse(&self) -> bool {
+        self.slots.iter().any(|s| {
+            matches!(s, ViewSlot::MemSparse(_) | ViewSlot::DiskSparse { .. })
+        })
+    }
+
+    /// Upper bound on stored nonzeros: sparse chunks contribute their
+    /// `nnz`, dense chunks their full length (their contents are not
+    /// scanned). Identical on every rank viewing the same array, so it is
+    /// safe to branch on collectively (what [`dist_reshape_x`] does).
+    pub fn nnz_estimate(&self) -> usize {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(c, s)| match s {
+                ViewSlot::Mem(_) | ViewSlot::Disk { .. } => self.layout.chunk_len(c),
+                ViewSlot::MemSparse(d) => d.nnz(),
+                ViewSlot::DiskSparse { nnz, .. } => *nnz,
+            })
+            .sum()
+    }
+
     /// Element at global linear index `lin` of the logical row-major
     /// array.
     ///
@@ -435,20 +600,53 @@ impl StoreView {
     /// directory must outlive every view of it).
     pub fn get(&self, lin: usize) -> f64 {
         let (chunk, offset) = self.layout.locate(lin);
-        self.with_chunk(chunk, |data| data[offset])
+        self.with_loaded(chunk, |data| match data {
+            Loaded::Dense(d) => d[offset],
+            Loaded::Sparse(s) => s.get(offset),
+        })
     }
 
     /// Copy `dst.len()` consecutive logical elements starting at `lin`
     /// into `dst`, chunk-contiguous run by run (the hot path of
     /// [`dist_reshape`] — constant index arithmetic per run, not per
-    /// element).
+    /// element). Sparse chunks zero-fill the run and scatter their
+    /// nonzeros.
     pub fn read_into(&self, lin: usize, dst: &mut [f64]) {
         let mut done = 0;
         while done < dst.len() {
             let (chunk, offset, run) = self.layout.locate_run(lin + done);
             let take = run.min(dst.len() - done);
-            self.with_chunk(chunk, |data| {
-                dst[done..done + take].copy_from_slice(&data[offset..offset + take]);
+            self.with_loaded(chunk, |data| match data {
+                Loaded::Dense(d) => {
+                    dst[done..done + take].copy_from_slice(&d[offset..offset + take]);
+                }
+                Loaded::Sparse(s) => s.scatter_range(offset, &mut dst[done..done + take]),
+            });
+            done += take;
+        }
+    }
+
+    /// Visit the nonzeros of the logical range `[lin, lin + n)` in
+    /// ascending order; `f` receives `(offset within the range, value)`.
+    /// Sparse chunks walk their index lists; dense chunks are scanned.
+    /// The sparse assembly path of [`dist_reshape_x`] and the pruned-NMF
+    /// compress step are built on this.
+    pub fn read_nonzeros(&self, lin: usize, n: usize, mut f: impl FnMut(usize, f64)) {
+        let mut done = 0;
+        while done < n {
+            let (chunk, offset, run) = self.layout.locate_run(lin + done);
+            let take = run.min(n - done);
+            self.with_loaded(chunk, |data| match data {
+                Loaded::Dense(d) => {
+                    for (k, &v) in d[offset..offset + take].iter().enumerate() {
+                        if v != 0.0 {
+                            f(done + k, v);
+                        }
+                    }
+                }
+                Loaded::Sparse(s) => {
+                    s.for_range(offset, take, |i, v| f(done + (i - offset), v));
+                }
             });
             done += take;
         }
@@ -463,31 +661,70 @@ impl StoreView {
         out
     }
 
-    fn with_chunk<R>(&self, chunk: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+    fn load_bytes(&self, path: &std::path::Path) -> Vec<u8> {
+        let bytes = std::fs::read(path).unwrap_or_else(|e| {
+            panic!("chunk store: failed to read spill file {path:?}: {e}")
+        });
+        self.bytes_read.set(self.bytes_read.get() + bytes.len() as u64);
+        bytes
+    }
+
+    fn with_loaded<R>(&self, chunk: usize, f: impl FnOnce(Loaded<'_>) -> R) -> R {
         match &self.slots[chunk] {
-            ViewSlot::Mem(data) => f(data),
+            ViewSlot::Mem(data) => f(Loaded::Dense(data.as_slice())),
+            ViewSlot::MemSparse(data) => f(Loaded::Sparse(data.as_ref())),
             ViewSlot::Disk { path, cache } => {
                 let mut cache = cache.borrow_mut();
                 if cache.is_none() {
-                    let bytes = std::fs::read(path).unwrap_or_else(|e| {
-                        panic!("chunk store: failed to read spill file {path:?}: {e}")
-                    });
+                    let bytes = self.load_bytes(path);
                     assert!(
                         bytes.len() % 8 == 0,
                         "chunk store: spill file {path:?} is not a whole number of f64s"
                     );
-                    self.bytes_read.set(self.bytes_read.get() + bytes.len() as u64);
-                    let data = bytes
+                    let data: Vec<f64> = bytes
                         .chunks_exact(8)
                         .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
                         .collect();
                     *cache = Some(data);
                 }
-                f(cache.as_ref().unwrap())
+                f(Loaded::Dense(cache.as_ref().unwrap().as_slice()))
+            }
+            ViewSlot::DiskSparse { path, len, nnz, cache } => {
+                let mut cache = cache.borrow_mut();
+                if cache.is_none() {
+                    let bytes = self.load_bytes(path);
+                    assert!(
+                        bytes.len() == 8 * (1 + 2 * nnz),
+                        "chunk store: sparse spill file {path:?} has the wrong size"
+                    );
+                    let stored_nnz =
+                        u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+                    assert_eq!(stored_nnz, *nnz, "chunk store: sparse spill nnz mismatch");
+                    let mut idx = Vec::with_capacity(*nnz);
+                    for b in bytes[8..8 * (1 + nnz)].chunks_exact(8) {
+                        idx.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+                    }
+                    let mut vals = Vec::with_capacity(*nnz);
+                    for b in bytes[8 * (1 + nnz)..].chunks_exact(8) {
+                        vals.push(f64::from_le_bytes(b.try_into().unwrap()));
+                    }
+                    let data = SparseChunk::new(*len, idx, vals).unwrap_or_else(|e| {
+                        panic!("chunk store: corrupt sparse spill file {path:?}: {e}")
+                    });
+                    *cache = Some(data);
+                }
+                f(Loaded::Sparse(cache.as_ref().unwrap()))
             }
         }
     }
 }
+
+/// Global-density cutoff for [`dist_reshape_x`]'s output representation:
+/// when at least one source chunk is sparse and the stored-nonzero
+/// estimate is at most this fraction of the logical size, the assembled
+/// stage-matrix block is returned sparse (CSR). Above it, scattering
+/// into a dense block is both smaller and faster for the kernels.
+pub const SPARSE_RESHAPE_CUTOFF: f64 = 0.25;
 
 /// Alg 1: globally reshape/redistribute the array held as `my_data` under
 /// `layout` into this rank's block of the `m × n` stage matrix on `grid`.
@@ -506,6 +743,23 @@ impl StoreView {
 /// The store entry `name` is removed before returning — rank 0 drops it
 /// between two trailing barriers, so the same name may be safely reused
 /// by the next collective call.
+///
+/// ```
+/// use dntt::dist::{dist_reshape, Comm, Grid2d, Layout, SharedStore, SpillMode};
+///
+/// // A 4×2 matrix held as two row blocks, redistributed as the 2×4
+/// // reshape's row blocks on a 2×1 grid (same row-major linear order).
+/// let store = SharedStore::new(SpillMode::Memory);
+/// let grid = Grid2d::new(2, 1);
+/// let layout = Layout::MatGrid { m: 4, n: 2, pr: 2, pc: 1 };
+/// let blocks = Comm::run(2, move |mut world| {
+///     let r = world.rank();
+///     let mine: Vec<f64> = (0..4).map(|k| (4 * r + k) as f64).collect();
+///     dist_reshape(&mut world, &store, "a", &layout, mine, 2, 4, grid).unwrap()
+/// });
+/// assert_eq!(blocks[0].as_slice(), &[0.0, 1.0, 2.0, 3.0]);
+/// assert_eq!(blocks[1].as_slice(), &[4.0, 5.0, 6.0, 7.0]);
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn dist_reshape(
     world: &mut Comm,
@@ -517,6 +771,31 @@ pub fn dist_reshape(
     n: usize,
     grid: Grid2d,
 ) -> Result<Mat<f64>> {
+    match dist_reshape_x(world, store, name, layout, TensorBlock::Dense(my_data), m, n, grid)? {
+        DenseOrSparse::Dense(block) => Ok(block),
+        // Unreachable in practice: with no sparse chunk published the
+        // assembly is always dense.
+        DenseOrSparse::Sparse(s) => Ok(s.to_dense()),
+    }
+}
+
+/// [`dist_reshape`] for dense **or sparse** chunks: publishes whichever
+/// representation this rank holds and assembles the target block sparse
+/// (CSR) when the array's global stored density is at most
+/// [`SPARSE_RESHAPE_CUTOFF`], dense otherwise. The decision is a pure
+/// function of the (barrier-synchronized) store state, so every rank in
+/// the world takes the same branch.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_reshape_x(
+    world: &mut Comm,
+    store: &SharedStore,
+    name: &str,
+    layout: &Layout,
+    my_data: TensorBlock,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+) -> Result<DenseOrSparse> {
     if layout.total_len() != m * n {
         return Err(DnttError::shape(format!(
             "dist_reshape {name}: layout has {} elements, target is {m}x{n}",
@@ -541,7 +820,7 @@ pub fn dist_reshape(
     let rank = world.rank();
 
     let t0 = Instant::now();
-    if let Err(e) = store.publish(name, layout, rank, my_data) {
+    if let Err(e) = store.publish_block(name, layout, rank, my_data) {
         // Divergent failure (e.g. this rank's spill write failed): peers
         // are already heading into the barrier — abort so they fail fast
         // instead of deadlocking.
@@ -557,13 +836,40 @@ pub fn dist_reshape(
     let cols = BlockDim::new(n, grid.pc);
     let (r0, c0) = (rows.start_of(i), cols.start_of(j));
     let width = cols.size_of(j);
+    let my_rows = rows.size_of(i);
+    let want_sparse = view.has_sparse()
+        && (view.nnz_estimate() as f64) <= SPARSE_RESHAPE_CUTOFF * (m * n) as f64;
     let t1 = Instant::now();
-    let mut block = Mat::zeros(rows.size_of(i), width);
-    for li in 0..block.rows() {
-        view.read_into((r0 + li) * n + c0, block.row_mut(li));
-    }
+    let block = if want_sparse {
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for li in 0..my_rows {
+            let base = li * width;
+            view.read_nonzeros((r0 + li) * n + c0, width, |off, v| {
+                idx.push(base + off);
+                vals.push(v);
+            });
+        }
+        world.breakdown.add_bytes(Cat::Reshape, (vals.len() * 16) as u64);
+        match SparseMat::from_linear(my_rows, width, &idx, &vals) {
+            Ok(sm) => DenseOrSparse::Sparse(sm),
+            Err(e) => {
+                // Unreachable (indices are sorted by construction), but a
+                // silent early return would strand peers in the trailing
+                // barriers — same discipline as the publish failure above.
+                world.abort(&format!("dist_reshape {name}: sparse assembly failed: {e}"));
+                return Err(e);
+            }
+        }
+    } else {
+        let mut block = Mat::zeros(my_rows, width);
+        for li in 0..my_rows {
+            view.read_into((r0 + li) * n + c0, block.row_mut(li));
+        }
+        world.breakdown.add_bytes(Cat::Reshape, (block.len() * 8) as u64);
+        DenseOrSparse::Dense(block)
+    };
     world.breakdown.add_secs(Cat::Reshape, t1.elapsed().as_secs_f64());
-    world.breakdown.add_bytes(Cat::Reshape, (block.len() * 8) as u64);
     world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
     drop(view);
 
@@ -755,5 +1061,138 @@ mod tests {
         store.remove("x");
         assert!(!dir.join("x.0.chunk").exists());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_dense_and_sparse_chunks_coexist() {
+        // 4x3 over 2x1: chunk 0 dense, chunk 1 sparse — one array.
+        let l = Layout::MatGrid { m: 4, n: 3, pr: 2, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        let top: Vec<f64> = (0..6).map(|x| x as f64).collect();
+        store.publish("x", &l, 0, top.clone()).unwrap();
+        let bottom = SparseChunk::new(6, vec![1, 4], vec![7.0, 8.0]).unwrap();
+        store.publish_sparse("x", &l, 1, bottom).unwrap();
+        let view = store.view("x").unwrap();
+        assert!(view.has_sparse());
+        assert_eq!(view.nnz_estimate(), 6 + 2);
+        let mut want = top;
+        want.extend_from_slice(&[0.0, 7.0, 0.0, 0.0, 8.0, 0.0]);
+        assert_eq!(view.to_dense(), want);
+        assert_eq!(view.get(7), 7.0);
+        assert_eq!(view.get(6), 0.0);
+        // read_nonzeros over a range straddling both chunks.
+        let mut seen = Vec::new();
+        view.read_nonzeros(5, 3, |off, v| seen.push((off, v)));
+        assert_eq!(seen, vec![(0, 5.0), (2, 7.0)]);
+    }
+
+    #[test]
+    fn sparse_publish_validates_shapes() {
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        // Wrong logical length.
+        let short = SparseChunk::new(3, vec![0], vec![1.0]).unwrap();
+        assert!(store.publish_sparse("x", &l, 0, short).is_err());
+        // Empty chunk (zero nonzeros) is legal.
+        store.publish_sparse("x", &l, 0, SparseChunk::empty(4)).unwrap();
+        let view = store.view("x").unwrap();
+        assert_eq!(view.nnz_estimate(), 0);
+        assert_eq!(view.to_dense(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn sparse_disk_spill_roundtrips_and_counts_nnz_bytes() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_sp_unit_{}", std::process::id()));
+        let l = Layout::MatGrid { m: 2, n: 4, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Disk(dir.clone()));
+        let chunk = SparseChunk::new(8, vec![0, 3, 6], vec![1.5, -2.0, 4.0]).unwrap();
+        store.publish_sparse("s", &l, 0, chunk.clone()).unwrap();
+        let view = store.view("s").unwrap();
+        assert_eq!(view.nnz_estimate(), 3);
+        assert_eq!(view.to_dense(), chunk.to_dense());
+        // Spill file is nnz-sized: 8 * (1 + 2*3) bytes, read once.
+        assert_eq!(view.disk_bytes_read(), 8 * 7);
+        let _ = view.get(3);
+        assert_eq!(view.disk_bytes_read(), 8 * 7);
+        drop(view);
+        store.remove("s");
+        assert!(!dir.join("s.0.chunk").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reshape_x_goes_sparse_below_cutoff_only() {
+        use crate::dist::Grid2d;
+        // 2 ranks, 4x4 logical array as two 2x4 MatGrid chunks, reshaped
+        // to 4x4 on a 2x1 grid.
+        let run = |nnz_per_rank: usize| {
+            let layout = Layout::MatGrid { m: 4, n: 4, pr: 2, pc: 1 };
+            let store = SharedStore::new(SpillMode::Memory);
+            let grid = Grid2d::new(2, 1);
+            Comm::run(2, move |mut world| {
+                let idx: Vec<usize> = (0..nnz_per_rank).collect();
+                let vals: Vec<f64> = (0..nnz_per_rank).map(|k| (k + 1) as f64).collect();
+                let chunk = SparseChunk::new(8, idx, vals).unwrap();
+                dist_reshape_x(
+                    &mut world, &store, "r", &layout, TensorBlock::Sparse(chunk), 4, 4, grid,
+                )
+                .unwrap()
+            })
+        };
+        // 2 nnz per rank → density 4/16 = cutoff → sparse.
+        for b in run(2) {
+            assert!(b.is_sparse());
+            assert_eq!(b.shape(), (2, 4));
+        }
+        // 5 nnz per rank → density 10/16 > cutoff → dense, same values.
+        let dense = run(5);
+        assert!(!dense[0].is_sparse());
+        assert_eq!(dense[0].to_dense().as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn reshape_x_sparse_matches_dense_assembly() {
+        use crate::dist::Grid2d;
+        // Same logical array published sparse vs dense must assemble to
+        // identical blocks (the sparse one merely stored as CSR).
+        let layout = Layout::MatGrid { m: 4, n: 6, pr: 2, pc: 2 };
+        let grid = Grid2d::new(2, 2);
+        let full: Vec<f64> = (0..24)
+            .map(|k| if k % 5 == 0 { (k + 1) as f64 } else { 0.0 })
+            .collect();
+        let run = |sparse: bool| {
+            let layout = layout.clone();
+            let full = full.clone();
+            let store = SharedStore::new(SpillMode::Memory);
+            Comm::run(4, move |mut world| {
+                let view_chunk = {
+                    // Build this rank's MatGrid chunk from the full array.
+                    let (i, j) = (world.rank() / 2, world.rank() % 2);
+                    let rows = BlockDim::new(4, 2);
+                    let cols = BlockDim::new(6, 2);
+                    let mut data = Vec::new();
+                    for li in 0..rows.size_of(i) {
+                        for lj in 0..cols.size_of(j) {
+                            data.push(
+                                full[(rows.start_of(i) + li) * 6 + cols.start_of(j) + lj],
+                            );
+                        }
+                    }
+                    data
+                };
+                let block = if sparse {
+                    TensorBlock::Sparse(SparseChunk::from_dense(&view_chunk))
+                } else {
+                    TensorBlock::Dense(view_chunk)
+                };
+                dist_reshape_x(&mut world, &store, "e", &layout, block, 6, 4, grid).unwrap()
+            })
+        };
+        let a = run(true);
+        let b = run(false);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.is_sparse() && !y.is_sparse());
+            assert_eq!(x.to_dense().as_slice(), y.to_dense().as_slice());
+        }
     }
 }

@@ -23,7 +23,9 @@ pub mod comm;
 pub mod costmodel;
 pub mod topology;
 
-pub use chunkstore::{dist_reshape, Layout, SharedStore, SpillMode, StoreView};
+pub use chunkstore::{
+    dist_reshape, dist_reshape_x, Layout, SharedStore, SpillMode, StoreView, TensorBlock,
+};
 pub use comm::Comm;
 pub use costmodel::CostModel;
 pub use topology::{BlockDim, Grid2d, ProcGrid};

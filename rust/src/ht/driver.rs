@@ -20,10 +20,12 @@
 //! records and the same critical-path cost breakdown the TT driver
 //! reports.
 
-use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
+use crate::dist::{
+    dist_reshape, dist_reshape_x, Comm, Grid2d, Layout, ProcGrid, SharedStore, TensorBlock,
+};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::nmf::{dist_nmf_pruned_ws, NmfConfig, NmfStats, NmfWorkspace};
+use crate::nmf::{dist_nmf_pruned_ws, dist_nmf_pruned_x_ws, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::ht::{DimTree, HtNode, HtTensor};
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -99,11 +101,11 @@ fn gather_full(
     store: &SharedStore,
     name: &str,
     layout: &Layout,
-    my_chunk: Vec<f64>,
+    my_chunk: TensorBlock,
 ) -> Result<Vec<f64>> {
     let rank = world.rank();
     let t0 = Instant::now();
-    if let Err(e) = store.publish(name, layout, rank, my_chunk) {
+    if let Err(e) = store.publish_block(name, layout, rank, my_chunk) {
         world.abort(&format!("{name}: publish failed: {e}"));
         return Err(e);
     }
@@ -138,7 +140,7 @@ pub fn dist_nht(
     proc_grid: &ProcGrid,
     grid: Grid2d,
     dims: &[usize],
-    my_block: Vec<f64>,
+    my_block: TensorBlock,
     backend: &dyn ComputeBackend,
     cfg: &HtConfig,
 ) -> Result<HtOutput> {
@@ -162,8 +164,9 @@ pub fn dist_nht(
 
     // Per-node pending array: (layout of the distributed V_t, this rank's
     // chunk, parent edge rank r_t). BFS ids guarantee a parent resolves
-    // before its children are reached.
-    let mut pending: Vec<Option<(Layout, Vec<f64>, usize)>> =
+    // before its children are reached. Only the root chunk can be sparse
+    // (children receive dense NMF factors).
+    let mut pending: Vec<Option<(Layout, TensorBlock, usize)>> =
         (0..tree.len()).map(|_| None).collect();
     pending[0] = Some((
         Layout::TensorGrid { dims: dims.to_vec(), grid: proc_grid.dims().to_vec() },
@@ -192,17 +195,22 @@ pub fn dist_nht(
                 let n1: usize = dims[node.lo..mid].iter().product();
                 let n2: usize = dims[mid..node.hi].iter().product();
 
-                // --- Left edge: M1 = n1 × (n2·rt) ≈ W1·H1. ----------
+                // --- Left edge: M1 = n1 × (n2·rt) ≈ W1·H1. The block may
+                // arrive sparse at the root; the reshape keeps it sparse
+                // when the global density clears the cutoff.
                 let t0 = Instant::now();
-                let x1 = dist_reshape(
+                let x1 = dist_reshape_x(
                     world, store, &format!("ht.n{t}.a"), &layout, data, n1, n2 * rt, grid,
                 )?;
                 let (r1, eps1) = match &cfg.fixed_ranks {
                     Some(fr) => (fr[edge].max(1), f64::NAN),
                     None => {
+                        // The SVD has no sparse path: densify locally for
+                        // rank selection only.
+                        let xd = x1.dense_view();
                         let rs = RankSelectConfig { eps: cfg.eps, ..cfg.rank_select.clone() };
                         let sel =
-                            dist_rank_select(&x1, n1, n2 * rt, grid, world, row, col, &rs)?;
+                            dist_rank_select(&xd, n1, n2 * rt, grid, world, row, col, &rs)?;
                         (sel.rank, sel.achieved_eps)
                     }
                 };
@@ -211,7 +219,7 @@ pub fn dist_nht(
                     seed: cfg.nmf.seed.wrapping_add(2 * t as u64),
                     ..cfg.nmf.clone()
                 };
-                let o1 = dist_nmf_pruned_ws(
+                let o1 = dist_nmf_pruned_x_ws(
                     &x1, n1, n2 * rt, grid, world, row, col, backend, &cfg1,
                     store, &format!("ht.n{t}.a"), cfg.prune, &mut ws,
                 )?;
@@ -228,7 +236,7 @@ pub fn dist_nht(
                 });
                 pending[lc] = Some((
                     Layout::WGrid { m: n1, r: r1, pr: grid.pr, pc: grid.pc },
-                    o1.w.into_vec(),
+                    TensorBlock::Dense(o1.w.into_vec()),
                     r1,
                 ));
 
@@ -270,14 +278,19 @@ pub fn dist_nht(
                 });
                 pending[rc] = Some((
                     Layout::WGrid { m: n2, r: r2, pr: grid.pr, pc: grid.pc },
-                    o2.w.into_vec(),
+                    TensorBlock::Dense(o2.w.into_vec()),
                     r2,
                 ));
 
                 // --- Transfer tensor: gather the small H2 everywhere.
                 let blay = Layout::HtGrid { r: r2, n: r1 * rt, pr: grid.pr, pc: grid.pc };
-                let bfull =
-                    gather_full(world, store, &format!("ht.n{t}.t"), &blay, o2.ht.into_vec())?;
+                let bfull = gather_full(
+                    world,
+                    store,
+                    &format!("ht.n{t}.t"),
+                    &blay,
+                    TensorBlock::Dense(o2.ht.into_vec()),
+                )?;
                 payload[t] = Some(HtNode::Transfer(Mat::from_vec(r2, r1 * rt, bfull)));
                 edge += 2;
             }
@@ -323,7 +336,7 @@ pub fn nht_on_threads(
             &pg,
             grid,
             &dims,
-            my,
+            TensorBlock::Dense(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
         )

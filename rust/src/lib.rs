@@ -6,19 +6,21 @@
 //!
 //! * **L3 (this crate)** — the distributed coordinator: thread-rank
 //!   communicator with MPI-style collectives, chunked array store with
-//!   global reshape (Alg 1), distributed SVD rank selection, distributed
-//!   BCD/MU NMF (Algs 3–6), and two tensor-network drivers: the tensor
-//!   train (Alg 2, `ttrain`) and the hierarchical Tucker (`ht`) over the
-//!   balanced dimension tree — the same two-network family as LANL's
-//!   pyDNTNK.
+//!   global reshape (Alg 1) over dense **and sparse** chunks, distributed
+//!   SVD rank selection, distributed BCD/MU NMF (Algs 3–6) with
+//!   per-chunk dense/sparse kernel dispatch, and two tensor-network
+//!   drivers: the tensor train (Alg 2, `ttrain`) and the hierarchical
+//!   Tucker (`ht`) over the balanced dimension tree — the same
+//!   two-network family as LANL's pyDNTNK.
 //! * **L2/L1 (`python/compile/`)** — the NMF inner iteration as a JAX
 //!   graph built from Pallas kernels, AOT-lowered to HLO text at build time.
 //! * **Runtime (`runtime`)** — loads the AOT artifacts through the `xla`
 //!   crate's PJRT CPU client; Python is never on the execution path.
 //!
-//! See `rust/DESIGN.md` for the full system inventory, the `dist` API
-//! contract, and the experiment index (each figure's bench target and CLI
-//! command).
+//! See `rust/ARCHITECTURE.md` for the module map and data flow, and
+//! `rust/DESIGN.md` for the full system inventory, the `dist` API
+//! contract (sparse chunk storage in §2.7), and the experiment index
+//! (each figure's bench target and CLI command).
 
 // Keep rustdoc references like `crate::dist::Layout::HtGrid` honest.
 #![deny(rustdoc::broken_intra_doc_links)]

@@ -2,7 +2,8 @@
 //!
 //! The paper's implementation leans on NumPy/LAPACK; everything it uses is
 //! re-implemented here: row-major matrices, blocked GEMM variants shaped
-//! like the NMF kernels (`X·Hᵀ`, `Wᵀ·X`, Gram products), Jacobi symmetric
+//! like the NMF kernels (`X·Hᵀ`, `Wᵀ·X`, Gram products), CSR sparse
+//! matrices with the matching SpMM kernels ([`sparse`]), Jacobi symmetric
 //! eigendecomposition, one-sided-Jacobi thin SVD, Householder QR.
 
 pub mod eig;
@@ -10,8 +11,10 @@ pub mod gemm;
 pub mod matrix;
 pub mod qr;
 pub mod scalar;
+pub mod sparse;
 pub mod svd;
 
 pub use gemm::GemmWorkspace;
 pub use matrix::Mat;
 pub use scalar::Scalar;
+pub use sparse::{DenseOrSparse, SparseMat};

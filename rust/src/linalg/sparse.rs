@@ -1,0 +1,520 @@
+//! Sparse (CSR) matrices and the SpMM kernels of the NMF hot path.
+//!
+//! [`SparseMat`] mirrors [`Mat`] for the local stage-matrix block `X`
+//! when the input tensor is sparse: row-major CSR (`row_ptr` /
+//! `col_idx` / `vals`, columns sorted within each row). The three SpMM
+//! kernels mirror the dense GEMM layout suite — `A·B` (X·Hᵀ) and
+//! `Aᵀ·B` (Wᵀ·X, transposed) are what the NMF dispatch routes through
+//! the backend; `A·Bᵀ` completes the layout set for parity with
+//! [`crate::linalg::gemm`] (no NMF consumer yet). Each has an `_into`
+//! form that writes a caller buffer with **zero allocation**, so they
+//! slot into the [`crate::nmf::NmfWorkspace`] discipline unchanged.
+//!
+//! ## Reproducibility contract
+//!
+//! Each kernel accumulates every output element in ascending `k` order
+//! with separate multiply and add (no FMA), exactly like
+//! [`crate::linalg::gemm::matmul_naive`], merely *skipping* terms whose
+//! `A` entry is an exact zero. A skipped term contributes `+0.0` to a
+//! non-negative running sum, which leaves the sum bitwise unchanged — so
+//! on non-negative operands (the NMF case: `X ≥ 0`, factors ≥ 0) the
+//! sparse kernels are **bitwise identical** to the dense naive/packed
+//! kernels (asserted in the unit tests below and relied on by
+//! `tests/sparse_equivalence.rs`). On mixed-sign operands agreement is
+//! exact-to-roundoff but the `-0.0`/`+0.0` distinction may differ.
+//!
+//! [`DenseOrSparse`] is the per-chunk dispatch type: one local block,
+//! stored whichever way the reshape decided (see
+//! [`crate::dist::dist_reshape_x`]), with the NMF choosing the kernel
+//! per call.
+
+use super::matrix::Mat;
+use crate::error::{DnttError, Result};
+
+/// Row-major CSR sparse matrix of `f64` (the local sparse `X` block).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMat {
+    rows: usize,
+    cols: usize,
+    /// `rows + 1` offsets into `col_idx` / `vals`.
+    row_ptr: Vec<usize>,
+    /// Column of each nonzero, sorted within each row.
+    col_idx: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl SparseMat {
+    /// Build from COO triplets (any order). Duplicate coordinates are
+    /// rejected; explicit zeros are dropped after the duplicate check.
+    pub fn from_coo(
+        rows: usize,
+        cols: usize,
+        mut entries: Vec<(usize, usize, f64)>,
+    ) -> Result<SparseMat> {
+        for &(i, j, _) in &entries {
+            if i >= rows || j >= cols {
+                return Err(DnttError::shape(format!(
+                    "sparse mat: coordinate ({i}, {j}) out of range for {rows}x{cols}"
+                )));
+            }
+        }
+        entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        for pair in entries.windows(2) {
+            if (pair[0].0, pair[0].1) == (pair[1].0, pair[1].1) {
+                return Err(DnttError::shape(format!(
+                    "sparse mat: duplicate coordinate ({}, {})",
+                    pair[0].0, pair[0].1
+                )));
+            }
+        }
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx = Vec::with_capacity(entries.len());
+        let mut vals = Vec::with_capacity(entries.len());
+        for (i, j, v) in entries {
+            if v != 0.0 {
+                row_ptr[i + 1] += 1;
+                col_idx.push(j);
+                vals.push(v);
+            }
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Ok(SparseMat { rows, cols, row_ptr, col_idx, vals })
+    }
+
+    /// Build from sorted row-major *linear* indices (`lin = i·cols + j`,
+    /// strictly increasing) — the form sparse chunks arrive in from the
+    /// chunk store. Explicit zeros are dropped.
+    pub fn from_linear(rows: usize, cols: usize, idx: &[usize], vals: &[f64]) -> Result<SparseMat> {
+        if idx.len() != vals.len() {
+            return Err(DnttError::shape(format!(
+                "sparse mat: {} indices vs {} values",
+                idx.len(),
+                vals.len()
+            )));
+        }
+        let total = rows * cols;
+        let mut prev: Option<usize> = None;
+        for &lin in idx {
+            if lin >= total {
+                return Err(DnttError::shape(format!(
+                    "sparse mat: linear index {lin} out of range for {rows}x{cols}"
+                )));
+            }
+            if let Some(p) = prev {
+                if lin <= p {
+                    return Err(DnttError::shape(
+                        "sparse mat: linear indices not strictly increasing",
+                    ));
+                }
+            }
+            prev = Some(lin);
+        }
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx = Vec::with_capacity(idx.len());
+        let mut out_vals = Vec::with_capacity(idx.len());
+        for (&lin, &v) in idx.iter().zip(vals) {
+            if v != 0.0 {
+                row_ptr[lin / cols + 1] += 1;
+                col_idx.push(lin % cols);
+                out_vals.push(v);
+            }
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Ok(SparseMat { rows, cols, row_ptr, col_idx, vals: out_vals })
+    }
+
+    /// Sparsify a dense matrix (exact zeros dropped).
+    pub fn from_dense(m: &Mat<f64>) -> SparseMat {
+        let mut row_ptr = Vec::with_capacity(m.rows() + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        SparseMat { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, vals }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Mat<f64> {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let orow = out.row_mut(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                orow[j] = v;
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// `nnz / (rows·cols)` (1.0 for an empty shape).
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Row `i`'s nonzeros as `(sorted columns, values)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[a..b], &self.vals[a..b])
+    }
+
+    /// Element `(i, j)` (0.0 when not stored).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Visit every nonzero in row-major order.
+    pub fn for_each_nz(&self, mut f: impl FnMut(usize, usize, f64)) {
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                f(i, j, v);
+            }
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.vals.iter().map(|&v| v * v).sum()
+    }
+
+    /// True if all stored entries are ≥ 0 (the nTT invariant).
+    pub fn is_nonneg(&self) -> bool {
+        self.vals.iter().all(|&v| v >= 0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpMM kernels (the three NMF GEMM layouts).
+// ---------------------------------------------------------------------------
+
+/// `C = A · B` (sparse `A: m×k`, dense `B: k×n`) into a caller buffer.
+/// Zeroes `C` first; per output element the accumulation runs in
+/// ascending `k` order with separate multiply/add (see the module-level
+/// reproducibility contract). No allocation.
+pub fn sp_matmul_into(a: &SparseMat, b: &Mat<f64>, c: &mut Mat<f64>) {
+    assert_eq!(a.cols(), b.rows(), "sp_matmul: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "sp_matmul: bad out shape");
+    let n = b.cols();
+    for i in 0..a.rows() {
+        let crow = c.row_mut(i);
+        crow.fill(0.0);
+        let (cols, vals) = a.row(i);
+        for (&k, &v) in cols.iter().zip(vals) {
+            let brow = b.row(k);
+            for j in 0..n {
+                crow[j] += v * brow[j];
+            }
+        }
+    }
+}
+
+/// `C = A · B` into a fresh matrix.
+pub fn sp_matmul(a: &SparseMat, b: &Mat<f64>) -> Mat<f64> {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    sp_matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` (sparse `A: k×m`, dense `B: k×n`) into a caller buffer —
+/// the `Xᵀ·W` layout. Zeroes `C` first; ascending-`k` accumulation; no
+/// allocation.
+pub fn sp_matmul_at_b_into(a: &SparseMat, b: &Mat<f64>, c: &mut Mat<f64>) {
+    assert_eq!(a.rows(), b.rows(), "sp_matmul_at_b: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()), "sp_matmul_at_b: bad out shape");
+    for x in c.as_mut_slice() {
+        *x = 0.0;
+    }
+    let n = b.cols();
+    for k in 0..a.rows() {
+        let (cols, vals) = a.row(k);
+        let brow = b.row(k);
+        for (&p, &v) in cols.iter().zip(vals) {
+            let crow = c.row_mut(p);
+            for j in 0..n {
+                crow[j] += v * brow[j];
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` into a fresh matrix.
+pub fn sp_matmul_at_b(a: &SparseMat, b: &Mat<f64>) -> Mat<f64> {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    sp_matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` (sparse `A: m×k`, dense `B: q×k`) into a caller buffer.
+/// Zeroes `C` first; ascending-`k` accumulation; no allocation.
+pub fn sp_matmul_a_bt_into(a: &SparseMat, b: &Mat<f64>, c: &mut Mat<f64>) {
+    assert_eq!(a.cols(), b.cols(), "sp_matmul_a_bt: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()), "sp_matmul_a_bt: bad out shape");
+    for i in 0..a.rows() {
+        let crow = c.row_mut(i);
+        crow.fill(0.0);
+        let (cols, vals) = a.row(i);
+        for (&k, &v) in cols.iter().zip(vals) {
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj += v * b[(j, k)];
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ` into a fresh matrix.
+pub fn sp_matmul_a_bt(a: &SparseMat, b: &Mat<f64>) -> Mat<f64> {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    sp_matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+// ---------------------------------------------------------------------------
+// Per-chunk dispatch.
+// ---------------------------------------------------------------------------
+
+/// One local matrix block, dense or sparse — the per-chunk dispatch type
+/// the distributed NMF consumes (see [`crate::nmf::dist_nmf_x_ws`]).
+pub enum DenseOrSparse {
+    Dense(Mat<f64>),
+    Sparse(SparseMat),
+}
+
+impl DenseOrSparse {
+    pub fn rows(&self) -> usize {
+        match self {
+            DenseOrSparse::Dense(m) => m.rows(),
+            DenseOrSparse::Sparse(s) => s.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            DenseOrSparse::Dense(m) => m.cols(),
+            DenseOrSparse::Sparse(s) => s.cols(),
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    /// Stored nonzeros (dense blocks count every element).
+    pub fn nnz(&self) -> usize {
+        match self {
+            DenseOrSparse::Dense(m) => m.len(),
+            DenseOrSparse::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// Storage density (1.0 for dense blocks).
+    pub fn density(&self) -> f64 {
+        match self {
+            DenseOrSparse::Dense(_) => 1.0,
+            DenseOrSparse::Sparse(s) => s.density(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DenseOrSparse::Sparse(_))
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        match self {
+            DenseOrSparse::Dense(m) => m.fro_norm_sq(),
+            DenseOrSparse::Sparse(s) => s.fro_norm_sq(),
+        }
+    }
+
+    /// Densified copy (the sparse → dense escape hatch, e.g. for the SVD
+    /// rank selection which has no sparse path).
+    pub fn to_dense(&self) -> Mat<f64> {
+        match self {
+            DenseOrSparse::Dense(m) => m.clone(),
+            DenseOrSparse::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Borrow the dense form, materializing a sparse block only when
+    /// needed — the drivers' rank-selection path (the SVD has no sparse
+    /// implementation). Densifying a sparse block allocates its full
+    /// dense size, so callers on the out-of-core path should prefer
+    /// fixed ranks; a warning is logged when the escape hatch fires.
+    pub fn dense_view(&self) -> std::borrow::Cow<'_, Mat<f64>> {
+        match self {
+            DenseOrSparse::Dense(m) => std::borrow::Cow::Borrowed(m),
+            DenseOrSparse::Sparse(s) => {
+                log::warn!(
+                    "densifying a sparse {}x{} block (no sparse SVD path); \
+                     pass fixed ranks to avoid the dense allocation",
+                    s.rows(),
+                    s.cols()
+                );
+                std::borrow::Cow::Owned(s.to_dense())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_naive;
+    use crate::util::rng::Rng;
+
+    /// Dense non-negative matrix with exact zeros at the given density.
+    fn sparse_rand(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Mat<f64> {
+        Mat::from_fn(rows, cols, |_, _| {
+            if rng.uniform() < density {
+                rng.uniform() + 0.1
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn from_coo_rejects_duplicates_and_ranges() {
+        assert!(SparseMat::from_coo(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0)]).is_err());
+        assert!(SparseMat::from_coo(2, 2, vec![(2, 0, 1.0)]).is_err());
+        assert!(SparseMat::from_coo(2, 2, vec![(0, 2, 1.0)]).is_err());
+        // Duplicate rejected even when one value is an explicit zero.
+        assert!(SparseMat::from_coo(2, 2, vec![(1, 1, 0.0), (1, 1, 3.0)]).is_err());
+        let m = SparseMat::from_coo(2, 3, vec![(1, 2, 3.0), (0, 1, 2.0), (1, 0, 0.0)]).unwrap();
+        assert_eq!(m.nnz(), 2); // explicit zero dropped
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.get(1, 0), 0.0);
+        assert_eq!(m.to_dense().as_slice(), &[0.0, 2.0, 0.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn from_linear_matches_from_dense() {
+        let mut rng = Rng::new(3);
+        let d = sparse_rand(7, 5, 0.4, &mut rng);
+        let s1 = SparseMat::from_dense(&d);
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for (k, &v) in d.as_slice().iter().enumerate() {
+            if v != 0.0 {
+                idx.push(k);
+                vals.push(v);
+            }
+        }
+        let s2 = SparseMat::from_linear(7, 5, &idx, &vals).unwrap();
+        assert_eq!(s1, s2);
+        assert!(SparseMat::from_linear(2, 2, &[1, 1], &[1.0, 2.0]).is_err());
+        assert!(SparseMat::from_linear(2, 2, &[4], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn density_edges() {
+        let empty = SparseMat::from_coo(3, 4, vec![]).unwrap();
+        assert_eq!((empty.nnz(), empty.density()), (0, 0.0));
+        assert!(empty.is_nonneg());
+        let full = SparseMat::from_dense(&Mat::filled(3, 4, 2.0));
+        assert_eq!(full.density(), 1.0);
+        let degenerate = SparseMat::from_coo(0, 5, vec![]).unwrap();
+        assert_eq!(degenerate.density(), 1.0);
+    }
+
+    /// On non-negative operands every kernel is bitwise equal to the dense
+    /// naive reference (same ascending-k mul/add sequence, skipped terms
+    /// contribute +0.0).
+    #[test]
+    fn kernels_match_naive_bitwise_on_nonneg() {
+        let mut rng = Rng::new(11);
+        for &density in &[0.0, 0.05, 0.3, 1.0] {
+            let a = sparse_rand(13, 17, density, &mut rng);
+            let sa = SparseMat::from_dense(&a);
+            let b = Mat::<f64>::rand_uniform(17, 6, &mut rng);
+            assert_eq!(
+                sp_matmul(&sa, &b).as_slice(),
+                matmul_naive(&a, &b).as_slice(),
+                "A*B at density {density}"
+            );
+            let bt = Mat::<f64>::rand_uniform(13, 6, &mut rng);
+            assert_eq!(
+                sp_matmul_at_b(&sa, &bt).as_slice(),
+                matmul_naive(&a.transpose(), &bt).as_slice(),
+                "At*B at density {density}"
+            );
+            let bq = Mat::<f64>::rand_uniform(6, 17, &mut rng);
+            assert_eq!(
+                sp_matmul_a_bt(&sa, &bq).as_slice(),
+                matmul_naive(&a, &bq.transpose()).as_slice(),
+                "A*Bt at density {density}"
+            );
+        }
+    }
+
+    #[test]
+    fn into_kernels_overwrite_stale_buffers() {
+        let mut rng = Rng::new(21);
+        let a = sparse_rand(9, 8, 0.3, &mut rng);
+        let sa = SparseMat::from_dense(&a);
+        let b = Mat::<f64>::rand_uniform(8, 4, &mut rng);
+        let mut c = Mat::filled(9, 4, 7.0); // stale contents must vanish
+        sp_matmul_into(&sa, &b, &mut c);
+        assert_eq!(c.as_slice(), matmul_naive(&a, &b).as_slice());
+        let bt = Mat::<f64>::rand_uniform(9, 4, &mut rng);
+        let mut c2 = Mat::filled(8, 4, -3.0);
+        sp_matmul_at_b_into(&sa, &bt, &mut c2);
+        assert_eq!(c2.as_slice(), matmul_naive(&a.transpose(), &bt).as_slice());
+    }
+
+    #[test]
+    fn dense_or_sparse_dispatch() {
+        let mut rng = Rng::new(31);
+        let d = sparse_rand(5, 6, 0.2, &mut rng);
+        let x = DenseOrSparse::Sparse(SparseMat::from_dense(&d));
+        assert_eq!(x.shape(), (5, 6));
+        assert!(x.is_sparse());
+        assert!(x.density() < 1.0);
+        assert_eq!(x.fro_norm_sq(), d.fro_norm_sq());
+        assert_eq!(x.to_dense().as_slice(), d.as_slice());
+        let y = DenseOrSparse::Dense(d.clone());
+        assert!(!y.is_sparse());
+        assert_eq!(y.density(), 1.0);
+        assert_eq!(y.nnz(), 30);
+    }
+}

@@ -2,7 +2,7 @@
 //!
 //! Subcommands map one-to-one onto the paper's experiments:
 //!
-//! * `decompose` — run the dnTT on a synthetic/faces/video tensor;
+//! * `decompose` — run the dnTT on a synthetic/sparse/faces/video tensor;
 //! * `scaling`   — Figs 5/6/7 series (strong / weak / TT-rank scaling);
 //! * `sweep`     — Figs 2/8a/8b/8c compression-vs-error curves;
 //! * `denoise`   — Fig 9 SSIM comparison (SVD-TT vs NMF-TT);
@@ -15,7 +15,7 @@ use dntt::dist::chunkstore::SpillMode;
 use dntt::dist::ProcGrid;
 use dntt::ht::HtConfig;
 use dntt::nmf::{NmfAlgo, NmfConfig};
-use dntt::ttrain::{SyntheticTt, TtConfig};
+use dntt::ttrain::{SyntheticSparse, SyntheticTt, TtConfig};
 use dntt::util::argparse::ArgSpec;
 use std::path::PathBuf;
 use std::process::exit;
@@ -76,10 +76,11 @@ fn parse_grid(s: &str, d: usize) -> Result<ProcGrid, String> {
 
 fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("dntt decompose", "run the distributed nTT/nHT on a tensor")
-        .opt("input", "synthetic", "input kind: synthetic|faces|video")
+        .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video")
         .opt("decomp", "tt", "decomposition: tt (tensor train) | ht (hierarchical Tucker)")
-        .opt("dims", "16,16,16,16", "tensor dims (synthetic)")
+        .opt("dims", "16,16,16,16", "tensor dims (synthetic|sparse)")
         .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
+        .opt("density", "0.01", "nonzero fraction in (0,1] (sparse input)")
         .opt("grid", "1x1x1x1", "processor grid, e.g. 2x2x2x2")
         .opt("eps", "0.01", "per-stage rank-selection threshold")
         .opt("ranks", "", "fixed ranks (skip SVD): d-1 for tt, 2(d-1) for ht")
@@ -104,6 +105,17 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
                 return Err("--true-ranks must have dims-1 entries".into());
             }
             InputSpec::Synthetic(SyntheticTt::new(dims, ranks, a.usize("seed")? as u64))
+        }
+        "sparse" => {
+            let density = a.f64("density")?;
+            if !(density > 0.0 && density <= 1.0) {
+                return Err(format!("--density must be in (0, 1], got {density}"));
+            }
+            InputSpec::SyntheticSparse(SyntheticSparse::new(
+                a.usize_list("dims")?,
+                density,
+                a.usize("seed")? as u64,
+            ))
         }
         "faces" => InputSpec::Faces(FaceConfig::default()),
         "video" => InputSpec::Video(dntt::data::VideoConfig::default()),

@@ -24,14 +24,65 @@
 //! resized in place, so after the first iteration the compute path
 //! performs no heap allocation. Workspace reuse is bitwise-neutral —
 //! every buffer is fully written before it is read.
+//!
+//! ## Sparse blocks
+//!
+//! The local `X` block may be stored sparse (CSR,
+//! [`crate::linalg::SparseMat`]) — [`dist_nmf_sparse_ws`] /
+//! [`dist_nmf_x_ws`] run the identical SPMD protocol with the `X·Hᵀ` and
+//! `Xᵀ·W` products dispatched to the zero-allocation SpMM kernels. Only
+//! those two products (plus `‖X‖²`) touch `X`, so the factors, comms and
+//! update rules are shared verbatim between the dense and sparse paths.
 
 use crate::dist::{BlockDim, Comm, Grid2d};
 use crate::error::{DnttError, Result};
-use crate::linalg::Mat;
+use crate::linalg::sparse::SparseMat;
+use crate::linalg::{DenseOrSparse, Mat};
 use crate::nmf::workspace::NmfWorkspace;
 use crate::nmf::{NmfAlgo, NmfConfig, NmfStats};
 use crate::runtime::backend::ComputeBackend;
 use crate::util::timer::Cat;
+
+/// Borrowed view of this rank's `X` block, dense or sparse — the private
+/// dispatch handle threaded through the SPMD loops. The block only ever
+/// enters the math through `X·Hᵀ`, `Xᵀ·W` and `‖X‖²`, so these three
+/// dispatch points are the entire sparse/dense fork.
+#[derive(Clone, Copy)]
+pub(crate) enum XRef<'a> {
+    Dense(&'a Mat<f64>),
+    Sparse(&'a SparseMat),
+}
+
+impl XRef<'_> {
+    pub(crate) fn rows(&self) -> usize {
+        match self {
+            XRef::Dense(m) => m.rows(),
+            XRef::Sparse(s) => s.rows(),
+        }
+    }
+
+    pub(crate) fn cols(&self) -> usize {
+        match self {
+            XRef::Dense(m) => m.cols(),
+            XRef::Sparse(s) => s.cols(),
+        }
+    }
+
+    pub(crate) fn fro_norm_sq(&self) -> f64 {
+        match self {
+            XRef::Dense(m) => m.fro_norm_sq(),
+            XRef::Sparse(s) => s.fro_norm_sq(),
+        }
+    }
+}
+
+/// The [`XRef`] of an owned [`DenseOrSparse`] block.
+pub(crate) fn xref_of(x: &DenseOrSparse) -> XRef<'_> {
+    match x {
+        DenseOrSparse::Dense(m) => XRef::Dense(m),
+        DenseOrSparse::Sparse(s) => XRef::Sparse(s),
+    }
+}
 
 /// Result of a distributed NMF on one rank.
 pub struct NmfOutput {
@@ -67,7 +118,7 @@ fn init_factor(seed: u64, tag: u64, gstart: usize, rows: usize, r: usize) -> Mat
 
 /// SPMD context: local block + comms + workspace + index arithmetic.
 struct Ctx<'a> {
-    x: &'a Mat<f64>,
+    x: XRef<'a>,
     backend: &'a dyn ComputeBackend,
     world: &'a mut Comm,
     row: &'a mut Comm,
@@ -103,9 +154,16 @@ impl<'a> Ctx<'a> {
             ws.gathered.as_mut_slice()[off..off + p.len()].copy_from_slice(p);
             off += p.len();
         }
-        // Local V = X^(i,j) · Ht^(j).
+        // Local V = X^(i,j) · Ht^(j) (kernel dispatched per block kind).
         let t0 = std::time::Instant::now();
-        self.backend.xht_into(self.x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
+        match self.x {
+            XRef::Dense(x) => {
+                self.backend.xht_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+            }
+            XRef::Sparse(x) => {
+                self.backend.xht_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+            }
+        }
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
         // Reduce-scatter across the row communicator into W's distribution.
         let mine = self.row.reduce_scatter_uneven(ws.prod.as_slice(), &self.w_counts)?;
@@ -129,7 +187,14 @@ impl<'a> Ctx<'a> {
         }
         // Local Y = X^(i,j)ᵀ · W^(i)  (the transposed (WᵀX) block).
         let t0 = std::time::Instant::now();
-        self.backend.wtx_into(self.x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
+        match self.x {
+            XRef::Dense(x) => {
+                self.backend.wtx_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+            }
+            XRef::Sparse(x) => {
+                self.backend.wtx_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+            }
+        }
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
         // Reduce-scatter across the column communicator into H's distribution.
         let mine = self.col.reduce_scatter_uneven(ws.prod.as_slice(), &self.h_counts)?;
@@ -212,9 +277,87 @@ pub fn dist_nmf(
 /// [`dist_nmf`] with a caller-owned [`NmfWorkspace`] — the form the TT/HT
 /// drivers use so all stage NMFs share one set of buffers. Results are
 /// bitwise identical whether the workspace is fresh or warm.
+///
+/// ```
+/// use dntt::dist::{Comm, Grid2d};
+/// use dntt::linalg::Mat;
+/// use dntt::nmf::{dist_nmf_ws, NmfConfig, NmfWorkspace};
+/// use dntt::runtime::NativeBackend;
+///
+/// let grid = Grid2d::new(1, 1); // single rank: the whole X is the block
+/// let x = Mat::from_fn(6, 5, |i, j| ((i + 2 * j) % 7) as f64);
+/// let outs = Comm::run(1, move |mut world| {
+///     let (mut row, mut col) = grid.make_subcomms(&mut world);
+///     let cfg = NmfConfig { rank: 2, max_iters: 30, ..Default::default() };
+///     dist_nmf_ws(&x, 6, 5, grid, &mut world, &mut row, &mut col,
+///                 &NativeBackend, &cfg, &mut NmfWorkspace::new()).unwrap()
+/// });
+/// assert_eq!(outs[0].w.shape(), (6, 2));
+/// assert_eq!(outs[0].ht.shape(), (5, 2));
+/// assert!(outs[0].w.is_nonneg() && outs[0].ht.is_nonneg());
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn dist_nmf_ws(
     x: &Mat<f64>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    ws: &mut NmfWorkspace,
+) -> Result<NmfOutput> {
+    dist_nmf_xref_ws(XRef::Dense(x), m, n, grid, world, row, col, backend, cfg, ws)
+}
+
+/// [`dist_nmf_ws`] on a **sparse** (CSR) local block: identical SPMD
+/// protocol, with the two `X`-side products routed through the SpMM
+/// kernels ([`crate::runtime::backend::ComputeBackend::xht_sparse_into`]
+/// / `wtx_sparse_into`). On a sparse block whose zeros are exact, the
+/// result agrees with the dense run on the densified block to reduction
+/// roundoff (asserted at 1e-5 in `tests/sparse_equivalence.rs`), and is
+/// bitwise deterministic across ranks and repeated runs at a fixed grid.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_sparse_ws(
+    x: &SparseMat,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    ws: &mut NmfWorkspace,
+) -> Result<NmfOutput> {
+    dist_nmf_xref_ws(XRef::Sparse(x), m, n, grid, world, row, col, backend, cfg, ws)
+}
+
+/// Per-chunk dispatch entry: run on whichever representation the reshape
+/// produced (see [`crate::dist::dist_reshape_x`]). This is what the TT
+/// and HT drivers call, so a sparse stage matrix flows through the same
+/// code path as a dense one.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_x_ws(
+    x: &DenseOrSparse,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    ws: &mut NmfWorkspace,
+) -> Result<NmfOutput> {
+    dist_nmf_xref_ws(xref_of(x), m, n, grid, world, row, col, backend, cfg, ws)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dist_nmf_xref_ws(
+    x: XRef<'_>,
     m: usize,
     n: usize,
     grid: Grid2d,

@@ -17,14 +17,23 @@
 //! `dist_nmf` call (detection cost only). Note the pruned factorization
 //! is *not* bitwise-identical to the unpruned one — factor initialization
 //! is a function of global indices, which shift under pruning.
+//!
+//! Sparse blocks ([`dist_nmf_pruned_x_ws`]) run the same protocol with
+//! the block kept sparse end to end: detection walks the CSR nonzeros,
+//! the compress round-trip publishes sparse chunks and rebuilds the
+//! pruned matrix as CSR, and the restored factors carry **exact zeros**
+//! at pruned rows/columns exactly as in the dense path (asserted in
+//! `tests/sparse_equivalence.rs`).
 
-use crate::dist::{BlockDim, Comm, Grid2d, Layout, SharedStore};
+use crate::dist::{BlockDim, Comm, Grid2d, Layout, SharedStore, TensorBlock};
 use crate::error::Result;
-use crate::linalg::Mat;
-use crate::nmf::dist::{dist_nmf_ws, NmfOutput};
+use crate::linalg::sparse::SparseMat;
+use crate::linalg::{DenseOrSparse, Mat};
+use crate::nmf::dist::{dist_nmf_xref_ws, xref_of, NmfOutput, XRef};
 use crate::nmf::workspace::NmfWorkspace;
 use crate::nmf::NmfConfig;
 use crate::runtime::backend::ComputeBackend;
+use crate::tensor::sparse::SparseChunk;
 use crate::util::timer::Cat;
 use std::time::Instant;
 
@@ -98,6 +107,30 @@ pub fn detect_zeros(
     grid: Grid2d,
     world: &mut Comm,
 ) -> PruneMap {
+    detect_zeros_xref(XRef::Dense(x), m, n, grid, world)
+}
+
+/// [`detect_zeros`] on a dense-or-sparse block. On a sparse block the
+/// sums walk the CSR nonzeros in the same row-major order the dense scan
+/// uses; skipped exact zeros contribute `+0.0` to non-negative sums, so
+/// both paths produce bitwise-identical sums (hence identical kept sets).
+pub fn detect_zeros_x(
+    x: &DenseOrSparse,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+) -> PruneMap {
+    detect_zeros_xref(xref_of(x), m, n, grid, world)
+}
+
+pub(crate) fn detect_zeros_xref(
+    x: XRef<'_>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+) -> PruneMap {
     let (i, j) = grid.coords(world.rank());
     let rows = BlockDim::new(m, grid.pr);
     let cols = BlockDim::new(n, grid.pc);
@@ -105,14 +138,30 @@ pub fn detect_zeros(
     let t0 = Instant::now();
     // sums[0..m] = per-row |·| sums, sums[m..m+n] = per-column.
     let mut sums = vec![0.0; m + n];
-    for li in 0..x.rows() {
-        let mut s = 0.0;
-        for (lj, &v) in x.row(li).iter().enumerate() {
-            let a = v.abs();
-            s += a;
-            sums[m + cols.start_of(j) + lj] += a;
+    match x {
+        XRef::Dense(x) => {
+            for li in 0..x.rows() {
+                let mut s = 0.0;
+                for (lj, &v) in x.row(li).iter().enumerate() {
+                    let a = v.abs();
+                    s += a;
+                    sums[m + cols.start_of(j) + lj] += a;
+                }
+                sums[rows.start_of(i) + li] = s;
+            }
         }
-        sums[rows.start_of(i) + li] = s;
+        XRef::Sparse(x) => {
+            for li in 0..x.rows() {
+                let (jx, vx) = x.row(li);
+                let mut s = 0.0;
+                for (&lj, &v) in jx.iter().zip(vx) {
+                    let a = v.abs();
+                    s += a;
+                    sums[m + cols.start_of(j) + lj] += a;
+                }
+                sums[rows.start_of(i) + li] = s;
+            }
+        }
     }
     world.breakdown.add_secs(Cat::Norm, t0.elapsed().as_secs_f64());
     world.all_reduce_sum(&mut sums);
@@ -127,22 +176,32 @@ pub fn detect_zeros(
     }
 }
 
-/// Publish this rank's chunk, aborting the world on a divergent failure
-/// (same discipline as `dist_reshape`).
+/// Publish this rank's chunk (either representation), aborting the world
+/// on a divergent failure (same discipline as `dist_reshape`).
 fn publish_or_abort(
     world: &mut Comm,
     store: &SharedStore,
     name: &str,
     layout: &Layout,
-    data: Vec<f64>,
+    data: TensorBlock,
 ) -> Result<()> {
     let t0 = Instant::now();
-    if let Err(e) = store.publish(name, layout, world.rank(), data) {
+    if let Err(e) = store.publish_block(name, layout, world.rank(), data) {
         world.abort(&format!("{name}: publish failed: {e}"));
         return Err(e);
     }
     world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
     Ok(())
+}
+
+/// Abort the world before propagating an error raised inside a
+/// barrier-delimited section (a plain early return would strand peers in
+/// the next barrier).
+fn abort_on_err<T>(world: &mut Comm, what: &str, r: Result<T>) -> Result<T> {
+    if let Err(e) = &r {
+        world.abort(&format!("{what}: {e}"));
+    }
+    r
 }
 
 /// Run [`crate::nmf::dist_nmf`] with zero-row/column pruning applied first and
@@ -192,13 +251,55 @@ pub fn dist_nmf_pruned_ws(
     enable: bool,
     ws: &mut NmfWorkspace,
 ) -> Result<NmfOutput> {
+    pruned_impl(XRef::Dense(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws)
+}
+
+/// [`dist_nmf_pruned_ws`] on a dense-or-sparse block (the driver-facing
+/// form). A sparse block stays sparse through the prune round-trip: its
+/// chunks are published sparse, and the compressed matrix is rebuilt as
+/// CSR from the surviving nonzeros.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_pruned_x_ws(
+    x: &DenseOrSparse,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    store: &SharedStore,
+    tag: &str,
+    enable: bool,
+    ws: &mut NmfWorkspace,
+) -> Result<NmfOutput> {
+    pruned_impl(xref_of(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pruned_impl(
+    x: XRef<'_>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    store: &SharedStore,
+    tag: &str,
+    enable: bool,
+    ws: &mut NmfWorkspace,
+) -> Result<NmfOutput> {
     if !enable {
-        return dist_nmf_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
+        return dist_nmf_xref_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
     }
-    let map = detect_zeros(x, m, n, grid, world);
+    let map = detect_zeros_xref(x, m, n, grid, world);
     if map.is_identity() || map.pruned_m() == 0 || map.pruned_n() == 0 {
         // Nothing to prune (or a fully zero matrix, which NMF handles).
-        return dist_nmf_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
+        return dist_nmf_xref_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
     }
     let (pm, pn) = (map.pruned_m(), map.pruned_n());
     let (i, j) = grid.coords(world.rank());
@@ -209,25 +310,86 @@ pub fn dist_nmf_pruned_ws(
     );
 
     // --- Compress: full MatGrid blocks -> pruned MatGrid blocks. --------
+    // A sparse block keeps its representation through the round-trip:
+    // sparse publish, then a CSR rebuild of the surviving nonzeros.
     let full = Layout::MatGrid { m, n, pr: grid.pr, pc: grid.pc };
     let name_x = format!("{tag}.prune.x");
-    publish_or_abort(world, store, &name_x, &full, x.as_slice().to_vec())?;
-    world.barrier();
-    let view = store.view(&name_x)?;
     let prow = BlockDim::new(pm, grid.pr);
     let pcol = BlockDim::new(pn, grid.pc);
-    let t0 = Instant::now();
-    let mut xp = Mat::zeros(prow.size_of(i), pcol.size_of(j));
-    for li in 0..xp.rows() {
-        let gr = map.kept_rows[prow.start_of(i) + li];
-        for lj in 0..xp.cols() {
-            let gc = map.kept_cols[pcol.start_of(j) + lj];
-            xp[(li, lj)] = view.get(gr * n + gc);
+    let xp: DenseOrSparse = match x {
+        XRef::Dense(x) => {
+            let block = TensorBlock::Dense(x.as_slice().to_vec());
+            publish_or_abort(world, store, &name_x, &full, block)?;
+            world.barrier();
+            let view = store.view(&name_x)?;
+            let t0 = Instant::now();
+            let mut xp = Mat::zeros(prow.size_of(i), pcol.size_of(j));
+            for li in 0..xp.rows() {
+                let gr = map.kept_rows[prow.start_of(i) + li];
+                for lj in 0..xp.cols() {
+                    let gc = map.kept_cols[pcol.start_of(j) + lj];
+                    xp[(li, lj)] = view.get(gr * n + gc);
+                }
+            }
+            world.breakdown.add_secs(Cat::Reshape, t0.elapsed().as_secs_f64());
+            world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+            drop(view);
+            DenseOrSparse::Dense(xp)
         }
-    }
-    world.breakdown.add_secs(Cat::Reshape, t0.elapsed().as_secs_f64());
-    world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
-    drop(view);
+        XRef::Sparse(xs) => {
+            // CSR iterates row-major, so the linear indices are sorted.
+            let mut cidx = Vec::with_capacity(xs.nnz());
+            let mut cvals = Vec::with_capacity(xs.nnz());
+            xs.for_each_nz(|li, lj, v| {
+                cidx.push(li * xs.cols() + lj);
+                cvals.push(v);
+            });
+            let chunk = abort_on_err(
+                world,
+                &format!("{name_x}: sparse chunk build failed"),
+                SparseChunk::new(xs.rows() * xs.cols(), cidx, cvals),
+            )?;
+            publish_or_abort(world, store, &name_x, &full, TensorBlock::Sparse(chunk))?;
+            world.barrier();
+            let view = store.view(&name_x)?;
+            let t0 = Instant::now();
+            let mut inv_cols = vec![usize::MAX; n];
+            for (k, &g) in map.kept_cols.iter().enumerate() {
+                inv_cols[g] = k;
+            }
+            let (c0p, widthp) = (pcol.start_of(j), pcol.size_of(j));
+            let rowsp = prow.size_of(i);
+            let mut idx = Vec::new();
+            let mut vals = Vec::new();
+            if widthp > 0 {
+                // Scan only the global column window spanning this rank's
+                // kept columns (kept_cols is sorted, so the window's kept
+                // set is exactly kept_cols[c0p..c0p+widthp]) — the dense
+                // path's locality, in sparse form. `k` ascends with the
+                // column offset, so the indices stay sorted.
+                let lo_g = map.kept_cols[c0p];
+                let hi_g = map.kept_cols[c0p + widthp - 1] + 1;
+                for li in 0..rowsp {
+                    let gr = map.kept_rows[prow.start_of(i) + li];
+                    view.read_nonzeros(gr * n + lo_g, hi_g - lo_g, |off, v| {
+                        let k = inv_cols[lo_g + off];
+                        if k != usize::MAX && k >= c0p && k < c0p + widthp {
+                            idx.push(li * widthp + (k - c0p));
+                            vals.push(v);
+                        }
+                    });
+                }
+            }
+            world.breakdown.add_secs(Cat::Reshape, t0.elapsed().as_secs_f64());
+            world.breakdown.add_bytes(Cat::Io, view.disk_bytes_read());
+            drop(view);
+            DenseOrSparse::Sparse(abort_on_err(
+                world,
+                &format!("{name_x}: pruned CSR build failed"),
+                SparseMat::from_linear(rowsp, widthp, &idx, &vals),
+            )?)
+        }
+    };
     world.barrier();
     if world.rank() == 0 {
         store.remove(&name_x);
@@ -235,7 +397,7 @@ pub fn dist_nmf_pruned_ws(
     world.barrier();
 
     // --- Factorize the pruned matrix. -----------------------------------
-    let out = dist_nmf_ws(&xp, pm, pn, grid, world, row, col, backend, cfg, ws)?;
+    let out = dist_nmf_xref_ws(xref_of(&xp), pm, pn, grid, world, row, col, backend, cfg, ws)?;
     let r = cfg.rank;
 
     // --- Restore W: pruned WGrid -> this rank's full-size row block. ----
@@ -245,7 +407,7 @@ pub fn dist_nmf_pruned_ws(
     }
     let name_w = format!("{tag}.prune.w");
     let wlay = Layout::WGrid { m: pm, r, pr: grid.pr, pc: grid.pc };
-    publish_or_abort(world, store, &name_w, &wlay, out.w.into_vec())?;
+    publish_or_abort(world, store, &name_w, &wlay, TensorBlock::Dense(out.w.into_vec()))?;
     world.barrier();
     let view = store.view(&name_w)?;
     let rows = BlockDim::new(m, grid.pr);
@@ -276,7 +438,7 @@ pub fn dist_nmf_pruned_ws(
     }
     let name_h = format!("{tag}.prune.h");
     let hlay = Layout::HtGrid { r, n: pn, pr: grid.pr, pc: grid.pc };
-    publish_or_abort(world, store, &name_h, &hlay, out.ht.into_vec())?;
+    publish_or_abort(world, store, &name_h, &hlay, TensorBlock::Dense(out.ht.into_vec()))?;
     world.barrier();
     let view = store.view(&name_h)?;
     let cols = BlockDim::new(n, grid.pc);

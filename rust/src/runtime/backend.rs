@@ -18,6 +18,7 @@
 //! * `xht(X, Ht) = X·H̃` is `m_i × r` for `X: m_i × n_j`, `Ht: n_j × r`;
 //! * `wtx(X, W) = Xᵀ·W` is `n_j × r`.
 
+use crate::linalg::sparse::{sp_matmul, sp_matmul_at_b, SparseMat};
 use crate::linalg::{GemmWorkspace, Mat};
 
 /// Reusable scratch for the per-rank kernels: GEMM packing panels plus the
@@ -108,6 +109,46 @@ pub trait ComputeBackend: Send + Sync {
     ) {
         let _ = ws;
         *f = self.mu_update(f, g, p);
+    }
+
+    /// Sparse `X · Ht` (CSR `m_i × n_j` times dense `n_j × r`). The
+    /// default allocates through [`crate::linalg::sparse::sp_matmul`];
+    /// backends without a sparse path (PJRT) inherit it unchanged.
+    fn xht_sparse(&self, x: &SparseMat, ht: &Mat<f64>) -> Mat<f64> {
+        sp_matmul(x, ht)
+    }
+
+    /// Sparse `Xᵀ · W` (CSR `m_i × n_j` transposed times dense
+    /// `m_i × r`). Allocating default, see [`ComputeBackend::xht_sparse`].
+    fn wtx_sparse(&self, x: &SparseMat, w: &Mat<f64>) -> Mat<f64> {
+        sp_matmul_at_b(x, w)
+    }
+
+    /// [`ComputeBackend::xht_sparse`] into a caller buffer (resized in
+    /// place). Allocating default; the native backend overrides it with
+    /// the zero-allocation SpMM.
+    fn xht_sparse_into(
+        &self,
+        x: &SparseMat,
+        ht: &Mat<f64>,
+        out: &mut Mat<f64>,
+        ws: &mut KernelWorkspace,
+    ) {
+        let _ = ws;
+        *out = self.xht_sparse(x, ht);
+    }
+
+    /// [`ComputeBackend::wtx_sparse`] into a caller buffer (resized in
+    /// place). Allocating default; the native backend overrides it.
+    fn wtx_sparse_into(
+        &self,
+        x: &SparseMat,
+        w: &Mat<f64>,
+        out: &mut Mat<f64>,
+        ws: &mut KernelWorkspace,
+    ) {
+        let _ = ws;
+        *out = self.wtx_sparse(x, w);
     }
 
     /// Backend label for logs/metrics.

@@ -5,6 +5,7 @@
 
 use super::backend::{ComputeBackend, KernelWorkspace, MU_EPS};
 use crate::linalg::gemm::{gram_mt_m_into, matmul_at_b_into_ws, matmul_into_ws};
+use crate::linalg::sparse::{sp_matmul_at_b_into, sp_matmul_into, SparseMat};
 use crate::linalg::Mat;
 
 /// Native backend built on `crate::linalg`.
@@ -97,6 +98,29 @@ impl ComputeBackend for NativeBackend {
         }
     }
 
+    fn xht_sparse_into(
+        &self,
+        x: &SparseMat,
+        ht: &Mat<f64>,
+        out: &mut Mat<f64>,
+        _ws: &mut KernelWorkspace,
+    ) {
+        // The SpMM zeroes every output row itself.
+        out.resize_for_overwrite(x.rows(), ht.cols());
+        sp_matmul_into(x, ht, out);
+    }
+
+    fn wtx_sparse_into(
+        &self,
+        x: &SparseMat,
+        w: &Mat<f64>,
+        out: &mut Mat<f64>,
+        _ws: &mut KernelWorkspace,
+    ) {
+        out.resize_for_overwrite(x.cols(), w.cols());
+        sp_matmul_at_b_into(x, w, out);
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -105,7 +129,7 @@ impl ComputeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::gemm::{gram_mt_m, matmul};
+    use crate::linalg::gemm::{gram_mt_m, matmul, matmul_naive};
     use crate::util::rng::Rng;
 
     #[test]
@@ -177,6 +201,41 @@ mod tests {
             let mut f = w.clone();
             b.mu_update_inplace(&mut f, &g, &p, &mut ws);
             assert_eq!(f.as_slice(), b.mu_update(&w, &g, &p).as_slice());
+        }
+    }
+
+    #[test]
+    fn sparse_into_variants_match_allocating_and_dense_bitwise() {
+        let mut rng = Rng::new(5);
+        let b = NativeBackend;
+        let mut ws = KernelWorkspace::new();
+        let mut out = Mat::zeros(0, 0);
+        // A non-negative X with exact zeros: the sparse kernels must match
+        // both their allocating defaults and the dense kernels bitwise.
+        let xd = Mat::<f64>::from_fn(30, 22, |i, j| {
+            if (i * 31 + j * 7) % 5 == 0 {
+                ((i + 1) * (j + 2) % 13) as f64 * 0.25
+            } else {
+                0.0
+            }
+        });
+        let xs = SparseMat::from_dense(&xd);
+        let ht = Mat::<f64>::rand_uniform(22, 4, &mut rng);
+        let w = Mat::<f64>::rand_uniform(30, 4, &mut rng);
+        b.xht_sparse_into(&xs, &ht, &mut out, &mut ws);
+        assert_eq!(out.as_slice(), b.xht_sparse(&xs, &ht).as_slice());
+        assert_eq!(out.as_slice(), matmul_naive(&xd, &ht).as_slice());
+        b.wtx_sparse_into(&xs, &w, &mut out, &mut ws);
+        assert_eq!(out.as_slice(), b.wtx_sparse(&xs, &w).as_slice());
+        assert_eq!(out.as_slice(), matmul_naive(&xd.transpose(), &w).as_slice());
+        // And the dense kernels agree to roundoff (they may take the FMA
+        // fallback at this size).
+        let dense = b.xht(&xd, &ht);
+        for (a, c) in out.as_slice().iter().zip(b.wtx(&xd, &w).as_slice()) {
+            assert!((a - c).abs() <= 1e-12 * (1.0 + a.abs()));
+        }
+        for (a, c) in b.xht_sparse(&xs, &ht).as_slice().iter().zip(dense.as_slice()) {
+            assert!((a - c).abs() <= 1e-12 * (1.0 + a.abs()));
         }
     }
 }

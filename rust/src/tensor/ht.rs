@@ -127,6 +127,19 @@ impl<T: Scalar> HtNode<T> {
 
 /// A hierarchical Tucker tensor: a [`DimTree`] plus one [`HtNode`] per
 /// tree node.
+///
+/// ```
+/// use dntt::tensor::HtTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let ht = HtTensor::<f64>::rand_uniform(&[3, 4, 5, 2], 2, &mut rng).unwrap();
+/// assert_eq!(ht.ranks()[0], 1);            // root edge rank is always 1
+/// let full = ht.reconstruct();             // contract the tree bottom-up
+/// assert_eq!(full.dims(), &[3, 4, 5, 2]);
+/// assert!(ht.rel_error(&full) < 1e-12);
+/// assert!(ht.is_nonneg());                 // uniform [0,1) node matrices
+/// ```
 #[derive(Clone, Debug)]
 pub struct HtTensor<T: Scalar = f64> {
     dims: Vec<usize>,

@@ -1,15 +1,17 @@
-//! Tensor containers: dense N-d tensors, the tensor-train format (the
-//! paper's output representation), the hierarchical Tucker format (the
-//! second pyDNTNK network, produced by `crate::ht`) and the Tucker
-//! format (baselines).
+//! Tensor containers: dense N-d tensors, sparse COO tensors with chunked
+//! views ([`sparse`]), the tensor-train format (the paper's output
+//! representation), the hierarchical Tucker format (the second pyDNTNK
+//! network, produced by `crate::ht`) and the Tucker format (baselines).
 
 pub mod dense;
 pub mod ht;
 pub mod tt;
 pub mod io;
+pub mod sparse;
 pub mod tucker;
 
 pub use dense::DenseTensor;
 pub use ht::{DimTree, HtNode, HtTensor};
+pub use sparse::{SparseChunk, SparseTensor};
 pub use tt::TTensor;
 pub use tucker::Tucker;

@@ -1,0 +1,436 @@
+//! Chunked sparse tensors: COO ingest → sorted per-chunk views.
+//!
+//! The paper motivates TT for "extra-large high-dimensional data"
+//! (density, population, probability tensors) and real instances of those
+//! are overwhelmingly sparse. This module is the ingest side of the
+//! crate's sparse pipeline:
+//!
+//! * [`SparseTensor`] — an N-d COO container (sorted global row-major
+//!   linear indices + values). Ingest **rejects duplicate coordinates**
+//!   and drops explicit zeros, so `nnz` always counts structural
+//!   nonzeros.
+//! * [`SparseChunk`] — one chunk's view: a sorted sparse vector over the
+//!   chunk's dense row-major order. This is the unit the chunk store
+//!   ([`crate::dist::SharedStore`]) publishes and spills, and what
+//!   [`SparseTensor::block_chunk`] extracts per rank under a
+//!   `Layout::TensorGrid` partition.
+//!
+//! The matrix-shaped CSR format the NMF kernels consume lives in
+//! [`crate::linalg::sparse`]; a [`SparseChunk`] of a stage matrix block
+//! converts losslessly into it (both are sorted row-major coordinate
+//! sets). See `rust/DESIGN.md` §2.7 for the full sparse-storage
+//! contract.
+
+use crate::dist::{BlockDim, ProcGrid};
+use crate::error::{DnttError, Result};
+use crate::tensor::DenseTensor;
+
+/// A sparse vector over a dense row-major chunk of `len` elements:
+/// strictly-increasing indices `idx` with matching nonzero `vals`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseChunk {
+    len: usize,
+    idx: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl SparseChunk {
+    /// Build from parallel index/value vectors. Indices must be strictly
+    /// increasing (sorted, duplicate-free) and `< len`; explicit zero
+    /// values are dropped.
+    pub fn new(len: usize, idx: Vec<usize>, vals: Vec<f64>) -> Result<SparseChunk> {
+        if idx.len() != vals.len() {
+            return Err(DnttError::shape(format!(
+                "sparse chunk: {} indices vs {} values",
+                idx.len(),
+                vals.len()
+            )));
+        }
+        let mut prev: Option<usize> = None;
+        for &i in &idx {
+            if i >= len {
+                return Err(DnttError::shape(format!(
+                    "sparse chunk: index {i} out of range for length {len}"
+                )));
+            }
+            if let Some(p) = prev {
+                if i <= p {
+                    return Err(DnttError::shape(format!(
+                        "sparse chunk: indices not strictly increasing at {i} \
+                         (duplicate coordinate?)"
+                    )));
+                }
+            }
+            prev = Some(i);
+        }
+        if vals.iter().any(|&v| v == 0.0) {
+            let (idx, vals) = idx
+                .into_iter()
+                .zip(vals)
+                .filter(|&(_, v)| v != 0.0)
+                .unzip();
+            return Ok(SparseChunk { len, idx, vals });
+        }
+        Ok(SparseChunk { len, idx, vals })
+    }
+
+    /// The all-zero chunk of `len` elements.
+    pub fn empty(len: usize) -> SparseChunk {
+        SparseChunk { len, idx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Sparsify a dense buffer (exact zeros dropped).
+    pub fn from_dense(data: &[f64]) -> SparseChunk {
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for (i, &v) in data.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(i);
+                vals.push(v);
+            }
+        }
+        SparseChunk { len: data.len(), idx, vals }
+    }
+
+    /// Logical (dense) length of the chunk.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the logical chunk has zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// `nnz / len` (1.0 for a zero-length chunk, which stores nothing).
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            1.0
+        } else {
+            self.idx.len() as f64 / self.len as f64
+        }
+    }
+
+    /// Sorted nonzero indices.
+    pub fn idx(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Values matching [`SparseChunk::idx`].
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Element at dense position `i` (0.0 when not stored).
+    pub fn get(&self, i: usize) -> f64 {
+        debug_assert!(i < self.len);
+        match self.idx.binary_search(&i) {
+            Ok(k) => self.vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.len];
+        for (&i, &v) in self.idx.iter().zip(&self.vals) {
+            out[i] = v;
+        }
+        out
+    }
+
+    /// Visit the nonzeros with dense index in `[start, start + n)`, in
+    /// ascending index order. `f` receives the *absolute* dense index.
+    pub fn for_range(&self, start: usize, n: usize, mut f: impl FnMut(usize, f64)) {
+        let lo = self.idx.partition_point(|&i| i < start);
+        for k in lo..self.idx.len() {
+            let i = self.idx[k];
+            if i >= start + n {
+                break;
+            }
+            f(i, self.vals[k]);
+        }
+    }
+
+    /// Write the dense contents of `[start, start + dst.len())` into
+    /// `dst` (zero-filled, then scattered).
+    pub fn scatter_range(&self, start: usize, dst: &mut [f64]) {
+        dst.fill(0.0);
+        self.for_range(start, dst.len(), |i, v| dst[i - start] = v);
+    }
+
+    /// Squared Frobenius norm of the chunk.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.vals.iter().map(|&v| v * v).sum()
+    }
+
+    /// Decompose into `(len, idx, vals)`.
+    pub fn into_parts(self) -> (usize, Vec<usize>, Vec<f64>) {
+        (self.len, self.idx, self.vals)
+    }
+}
+
+/// An N-d sparse tensor in COO form, sorted by global row-major linear
+/// index. The sparse analogue of [`DenseTensor`] for ingest and
+/// blockwise distribution (it is never required to fit densified).
+///
+/// ```
+/// use dntt::tensor::SparseTensor;
+///
+/// let t = SparseTensor::from_entries(
+///     vec![4, 3],
+///     &[(vec![0, 1], 2.0), (vec![3, 2], 5.0)],
+/// ).unwrap();
+/// assert_eq!(t.nnz(), 2);
+/// assert_eq!(t.get(&[3, 2]), 5.0);
+/// assert_eq!(t.get(&[1, 1]), 0.0);
+/// // Duplicate coordinates are rejected, not silently aggregated.
+/// assert!(SparseTensor::from_entries(
+///     vec![4, 3],
+///     &[(vec![0, 0], 1.0), (vec![0, 0], 2.0)],
+/// ).is_err());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor {
+    dims: Vec<usize>,
+    idx: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl SparseTensor {
+    /// Build from `(linear index, value)` pairs (any order). Duplicate
+    /// coordinates are rejected — aggregating duplicates silently would
+    /// hide ingest bugs; callers that want accumulation must pre-combine.
+    /// Explicit zeros are dropped after the duplicate check.
+    pub fn new(dims: Vec<usize>, entries: Vec<(usize, f64)>) -> Result<SparseTensor> {
+        let total: usize = dims.iter().product();
+        let mut entries = entries;
+        entries.sort_unstable_by_key(|&(i, _)| i);
+        for pair in entries.windows(2) {
+            if pair[0].0 == pair[1].0 {
+                return Err(DnttError::shape(format!(
+                    "sparse tensor: duplicate coordinate at linear index {}",
+                    pair[0].0
+                )));
+            }
+        }
+        if let Some(&(last, _)) = entries.last() {
+            if last >= total {
+                return Err(DnttError::shape(format!(
+                    "sparse tensor: linear index {last} out of range for dims {dims:?}"
+                )));
+            }
+        }
+        let (idx, vals) = entries.into_iter().filter(|&(_, v)| v != 0.0).unzip();
+        Ok(SparseTensor { dims, idx, vals })
+    }
+
+    /// Build from multi-index coordinates.
+    pub fn from_entries(dims: Vec<usize>, entries: &[(Vec<usize>, f64)]) -> Result<SparseTensor> {
+        let mut lin = Vec::with_capacity(entries.len());
+        for (gidx, v) in entries {
+            if gidx.len() != dims.len() || gidx.iter().zip(&dims).any(|(&i, &d)| i >= d) {
+                return Err(DnttError::shape(format!(
+                    "sparse tensor: coordinate {gidx:?} invalid for dims {dims:?}"
+                )));
+            }
+            lin.push((crate::tensor::dense::linear_index(&dims, gidx), *v));
+        }
+        SparseTensor::new(dims, lin)
+    }
+
+    /// Tensor dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total (dense) element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// True for a zero-element tensor.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// `nnz / len`.
+    pub fn density(&self) -> f64 {
+        if self.len() == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / self.len() as f64
+        }
+    }
+
+    /// Element at multi-index `gidx` (0.0 when not stored).
+    pub fn get(&self, gidx: &[usize]) -> f64 {
+        let lin = crate::tensor::dense::linear_index(&self.dims, gidx);
+        match self.idx.binary_search(&lin) {
+            Ok(k) => self.vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Densify (small tensors / tests).
+    pub fn to_dense(&self) -> DenseTensor<f64> {
+        let mut data = vec![0.0; self.len()];
+        for (&i, &v) in self.idx.iter().zip(&self.vals) {
+            data[i] = v;
+        }
+        DenseTensor::from_vec(&self.dims, data).expect("consistent dims")
+    }
+
+    /// This rank's `Layout::TensorGrid` block as a sparse chunk: the
+    /// nonzeros falling inside the block, re-indexed to the block's local
+    /// row-major order. Global row-major order restricted to a block is
+    /// still lexicographic in the (offset-shifted) multi-index, so the
+    /// output is sorted by construction.
+    pub fn block_chunk(&self, grid: &ProcGrid, rank: usize) -> SparseChunk {
+        let d = self.dims.len();
+        let coords = grid.coords(rank);
+        let bds: Vec<BlockDim> = self
+            .dims
+            .iter()
+            .zip(grid.dims())
+            .map(|(&n, &p)| BlockDim::new(n, p))
+            .collect();
+        let lo: Vec<usize> = bds.iter().zip(&coords).map(|(b, &c)| b.start_of(c)).collect();
+        let sz: Vec<usize> = bds.iter().zip(&coords).map(|(b, &c)| b.size_of(c)).collect();
+        let total: usize = sz.iter().product();
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        let mut gidx = vec![0usize; d];
+        'next: for (&lin, &v) in self.idx.iter().zip(&self.vals) {
+            let mut rem = lin;
+            for k in (0..d).rev() {
+                gidx[k] = rem % self.dims[k];
+                rem /= self.dims[k];
+            }
+            let mut loc = 0usize;
+            for k in 0..d {
+                let within = gidx[k].wrapping_sub(lo[k]);
+                if within >= sz[k] {
+                    continue 'next;
+                }
+                loc = loc * sz[k] + within;
+            }
+            idx.push(loc);
+            vals.push(v);
+        }
+        SparseChunk { len: total, idx, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ingest_validates_and_drops_zeros() {
+        assert!(SparseChunk::new(4, vec![0, 2], vec![1.0]).is_err()); // len mismatch
+        assert!(SparseChunk::new(4, vec![0, 4], vec![1.0, 2.0]).is_err()); // range
+        assert!(SparseChunk::new(4, vec![2, 2], vec![1.0, 2.0]).is_err()); // duplicate
+        assert!(SparseChunk::new(4, vec![2, 1], vec![1.0, 2.0]).is_err()); // unsorted
+        let c = SparseChunk::new(4, vec![0, 1, 3], vec![1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(c.nnz(), 2); // explicit zero dropped
+        assert_eq!(c.to_dense(), vec![1.0, 0.0, 0.0, 2.0]);
+        assert_eq!(c.get(0), 1.0);
+        assert_eq!(c.get(1), 0.0);
+    }
+
+    #[test]
+    fn chunk_edge_cases() {
+        // Empty chunk: zero nonzeros.
+        let e = SparseChunk::empty(5);
+        assert_eq!((e.len(), e.nnz()), (5, 0));
+        assert_eq!(e.to_dense(), vec![0.0; 5]);
+        assert_eq!(e.density(), 0.0);
+        // Fully dense chunk round-trips.
+        let data = vec![1.0, 2.0, 3.0];
+        let f = SparseChunk::from_dense(&data);
+        assert_eq!(f.density(), 1.0);
+        assert_eq!(f.to_dense(), data);
+        // Zero-length chunk.
+        let z = SparseChunk::empty(0);
+        assert!(z.is_empty());
+        assert_eq!(z.density(), 1.0);
+    }
+
+    #[test]
+    fn chunk_range_helpers() {
+        let c = SparseChunk::from_dense(&[0.0, 1.0, 0.0, 2.0, 3.0, 0.0]);
+        let mut seen = Vec::new();
+        c.for_range(1, 3, |i, v| seen.push((i, v)));
+        assert_eq!(seen, vec![(1, 1.0), (3, 2.0)]);
+        let mut dst = [9.0; 3];
+        c.scatter_range(2, &mut dst);
+        assert_eq!(dst, [0.0, 2.0, 3.0]);
+        assert_eq!(c.fro_norm_sq(), 1.0 + 4.0 + 9.0);
+    }
+
+    #[test]
+    fn tensor_ingest_rejects_duplicates() {
+        let err = SparseTensor::new(vec![2, 3], vec![(1, 1.0), (1, 2.0)]);
+        assert!(err.is_err());
+        // Duplicates are rejected even when one value is zero.
+        let err = SparseTensor::from_entries(
+            vec![2, 3],
+            &[(vec![0, 1], 0.0), (vec![0, 1], 5.0)],
+        );
+        assert!(err.is_err());
+        assert!(SparseTensor::new(vec![2, 3], vec![(6, 1.0)]).is_err()); // range
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_density() {
+        let t = SparseTensor::from_entries(
+            vec![2, 3],
+            &[(vec![0, 1], 2.0), (vec![1, 2], 3.0), (vec![1, 0], 0.0)],
+        )
+        .unwrap();
+        assert_eq!(t.nnz(), 2); // explicit zero dropped after dup check
+        assert_eq!(t.get(&[0, 1]), 2.0);
+        assert_eq!(t.get(&[1, 0]), 0.0);
+        assert!((t.density() - 2.0 / 6.0).abs() < 1e-15);
+        let d = t.to_dense();
+        assert_eq!(d.as_slice(), &[0.0, 2.0, 0.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn block_chunks_tile_the_tensor() {
+        // 4x3 tensor on a 2x1 grid; nonzeros on both blocks.
+        let t = SparseTensor::from_entries(
+            vec![4, 3],
+            &[
+                (vec![0, 2], 1.0),
+                (vec![1, 0], 2.0),
+                (vec![2, 1], 3.0),
+                (vec![3, 2], 4.0),
+            ],
+        )
+        .unwrap();
+        let grid = ProcGrid::new(vec![2, 1]).unwrap();
+        let full = t.to_dense();
+        for r in 0..2 {
+            let chunk = t.block_chunk(&grid, r);
+            assert_eq!(chunk.len(), 6);
+            // Dense block extracted the classic way must agree.
+            let want: Vec<f64> = (0..2)
+                .flat_map(|i| (0..3).map(move |j| (i, j)))
+                .map(|(i, j)| full.get(&[r * 2 + i, j]))
+                .collect();
+            assert_eq!(chunk.to_dense(), want);
+        }
+    }
+}

@@ -13,6 +13,19 @@ use crate::tensor::dense::DenseTensor;
 
 /// A tensor train: `cores[i]` holds core `i` flattened to
 /// `(r_{i-1}·n_i) × r_i` (row-major over `(k_{i-1}, j_i)` pairs).
+///
+/// ```
+/// use dntt::tensor::TTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let tt = TTensor::<f64>::rand_uniform(&[3, 4, 5], &[2, 2], &mut rng).unwrap();
+/// assert_eq!(tt.ranks(), &[1, 2, 2, 1]);
+/// let full = tt.reconstruct();            // contract back to a dense tensor
+/// assert_eq!(full.dims(), &[3, 4, 5]);
+/// assert!(tt.rel_error(&full) < 1e-12);   // exact up to roundoff
+/// assert!(tt.compression_ratio() > 1.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct TTensor<T: Scalar = f64> {
     dims: Vec<usize>,

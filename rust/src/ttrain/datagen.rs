@@ -7,10 +7,16 @@
 //! cores form a valid TT whose reconstruction is exactly the block. This is
 //! communication-free and numerically identical to the paper's distributed
 //! matmul chain.
+//!
+//! [`SyntheticSparse`] is the sparse counterpart: a hash-gated random
+//! tensor with controllable density whose per-rank blocks are generated
+//! directly as [`SparseChunk`]s (grid-invariant, communication-free, and
+//! never materialized densely in the distributed path).
 
 use crate::dist::{BlockDim, ProcGrid};
 use crate::error::Result;
 use crate::linalg::Mat;
+use crate::tensor::sparse::{SparseChunk, SparseTensor};
 use crate::tensor::{DenseTensor, TTensor};
 use crate::util::rng::Rng;
 
@@ -88,6 +94,123 @@ impl SyntheticTt {
     }
 }
 
+/// SplitMix64-style hash → U(0,1), a pure function of `(seed, tag, lin)`
+/// so every rank sees the same global tensor regardless of the grid.
+#[inline]
+fn hash_u01(seed: u64, tag: u64, lin: usize) -> f64 {
+    let mut z = seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z ^= (lin as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut x = z;
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Ground-truth description of a synthetic **sparse** tensor with
+/// controllable density: element `lin` is nonzero iff a seeded hash gate
+/// fires (probability `density`), with a second hash drawing its
+/// U(0.5, 1.5) value — non-negative and bounded away from zero so the
+/// sparsity pattern is exact. Deterministic and grid-invariant like
+/// [`SyntheticTt`]; used by the sparse-path equivalence tests, the
+/// `sparse_vs_dense` bench and the CLI's `--input sparse`.
+#[derive(Clone, Debug)]
+pub struct SyntheticSparse {
+    pub dims: Vec<usize>,
+    /// Expected fraction of nonzero elements, in (0, 1].
+    pub density: f64,
+    pub seed: u64,
+}
+
+impl SyntheticSparse {
+    pub fn new(dims: Vec<usize>, density: f64, seed: u64) -> Self {
+        assert!(!dims.is_empty(), "SyntheticSparse needs at least one mode");
+        assert!(
+            density > 0.0 && density <= 1.0,
+            "SyntheticSparse density must be in (0, 1], got {density}"
+        );
+        SyntheticSparse { dims, density, seed }
+    }
+
+    /// Value at global linear index `lin` (0.0 off the sparsity pattern).
+    #[inline]
+    pub fn value_at(&self, lin: usize) -> f64 {
+        if hash_u01(self.seed, 1, lin) < self.density {
+            0.5 + hash_u01(self.seed, 2, lin)
+        } else {
+            0.0
+        }
+    }
+
+    /// Total (dense) element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The full tensor in COO form (small cases / tests).
+    pub fn sparse(&self) -> SparseTensor {
+        let entries: Vec<(usize, f64)> = (0..self.len())
+            .filter_map(|lin| {
+                let v = self.value_at(lin);
+                (v != 0.0).then_some((lin, v))
+            })
+            .collect();
+        SparseTensor::new(self.dims.clone(), entries).expect("unique by construction")
+    }
+
+    /// Full dense tensor (small cases / tests).
+    pub fn dense(&self) -> DenseTensor<f64> {
+        let data: Vec<f64> = (0..self.len()).map(|lin| self.value_at(lin)).collect();
+        DenseTensor::from_vec(&self.dims, data).expect("consistent dims")
+    }
+
+    /// This rank's `TensorGrid` block as a sparse chunk, generated
+    /// directly from the hash (no global materialization). Identical to
+    /// `self.sparse().block_chunk(grid, rank)` — asserted in the tests.
+    pub fn block(&self, grid: &ProcGrid, rank: usize) -> SparseChunk {
+        let d = self.dims.len();
+        let coords = grid.coords(rank);
+        let bds: Vec<BlockDim> = self
+            .dims
+            .iter()
+            .zip(grid.dims())
+            .map(|(&n, &p)| BlockDim::new(n, p))
+            .collect();
+        let lo: Vec<usize> = bds.iter().zip(&coords).map(|(b, &c)| b.start_of(c)).collect();
+        let sz: Vec<usize> = bds.iter().zip(&coords).map(|(b, &c)| b.size_of(c)).collect();
+        let total: usize = sz.iter().product();
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        let mut lidx = vec![0usize; d];
+        for loc in 0..total {
+            // Global linear index of this local element.
+            let mut glin = 0usize;
+            for k in 0..d {
+                glin = glin * self.dims[k] + lo[k] + lidx[k];
+            }
+            let v = self.value_at(glin);
+            if v != 0.0 {
+                idx.push(loc);
+                vals.push(v);
+            }
+            // Increment the local index row-major.
+            for k in (0..d).rev() {
+                lidx[k] += 1;
+                if lidx[k] < sz[k] {
+                    break;
+                }
+                lidx[k] = 0;
+            }
+        }
+        SparseChunk::new(total, idx, vals).expect("sorted by construction")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +275,62 @@ mod tests {
         assert_eq!(s.dims, vec![64; 4]);
         assert_eq!(s.ranks, vec![10, 10, 10]);
         assert_eq!(s.nbytes(), 64usize.pow(4) * 8);
+    }
+
+    #[test]
+    fn sparse_blocks_match_coo_chunking() {
+        let syn = SyntheticSparse::new(vec![5, 4, 3], 0.3, 41);
+        let coo = syn.sparse();
+        assert_eq!(coo.to_dense().as_slice(), syn.dense().as_slice());
+        let grid = ProcGrid::new(vec![2, 2, 1]).unwrap();
+        for r in 0..grid.size() {
+            assert_eq!(syn.block(&grid, r), coo.block_chunk(&grid, r));
+        }
+    }
+
+    #[test]
+    fn sparse_density_tracks_request() {
+        for &density in &[0.01, 0.1, 0.5] {
+            let syn = SyntheticSparse::new(vec![32, 32, 16], density, 7);
+            let got = syn.sparse().density();
+            assert!(
+                (got - density).abs() < 0.05 * (1.0 + density),
+                "requested {density}, generated {got}"
+            );
+        }
+        // Nonzero values are bounded away from zero (pattern is exact).
+        let syn = SyntheticSparse::new(vec![8, 8], 0.4, 9);
+        for (gi, v) in (0..64).map(|l| (l, syn.value_at(l))) {
+            assert!(v == 0.0 || v >= 0.5, "value {v} at {gi}");
+        }
+    }
+
+    #[test]
+    fn sparse_is_deterministic_and_grid_invariant() {
+        let syn = SyntheticSparse::new(vec![6, 6], 0.2, 3);
+        assert_eq!(syn.dense().as_slice(), syn.dense().as_slice());
+        let g1 = ProcGrid::new(vec![2, 1]).unwrap();
+        let g2 = ProcGrid::new(vec![1, 3]).unwrap();
+        // Reassembling blocks from different grids gives the same tensor.
+        let full = syn.dense();
+        for grid in [g1, g2] {
+            for r in 0..grid.size() {
+                let chunk = syn.block(&grid, r);
+                let coords = grid.coords(r);
+                let bds: Vec<BlockDim> = syn
+                    .dims
+                    .iter()
+                    .zip(grid.dims())
+                    .map(|(&n, &p)| BlockDim::new(n, p))
+                    .collect();
+                let dense = chunk.to_dense();
+                let cols = bds[1].size_of(coords[1]);
+                for (loc, &v) in dense.iter().enumerate() {
+                    let gi = bds[0].start_of(coords[0]) + loc / cols;
+                    let gj = bds[1].start_of(coords[1]) + loc % cols;
+                    assert_eq!(v, full.get(&[gi, gj]));
+                }
+            }
+        }
     }
 }

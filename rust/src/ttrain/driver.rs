@@ -8,10 +8,10 @@
 //! `G(l)`, and the distributed `H` becomes the next remainder. The final
 //! `H` is gathered as core `G(d)`.
 
-use crate::dist::{dist_reshape, Comm, Grid2d, Layout, ProcGrid, SharedStore};
+use crate::dist::{dist_reshape_x, Comm, Grid2d, Layout, ProcGrid, SharedStore, TensorBlock};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::nmf::{dist_nmf_pruned_ws, NmfConfig, NmfStats, NmfWorkspace};
+use crate::nmf::{dist_nmf_pruned_x_ws, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::TTensor;
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -75,7 +75,11 @@ pub struct TtOutput {
 /// Run the distributed nTT on this rank (collective).
 ///
 /// * `my_block` — this rank's chunk of the input tensor under
-///   `Layout::TensorGrid { dims, grid: proc_grid.dims() }`.
+///   `Layout::TensorGrid { dims, grid: proc_grid.dims() }`, dense or
+///   sparse ([`TensorBlock`]). A sparse chunk keeps the first stage
+///   matrix sparse end to end (reshape → rank-select → NMF) whenever the
+///   global density clears the reshape cutoff; every later stage
+///   consumes the dense NMF factors.
 /// * `grid` — the 2-D NMF grid (must satisfy `grid.size() == world.size()`
 ///   and be the collapse of `proc_grid`).
 #[allow(clippy::too_many_arguments)]
@@ -87,7 +91,7 @@ pub fn dist_ntt(
     proc_grid: &ProcGrid,
     grid: Grid2d,
     dims: &[usize],
-    my_block: Vec<f64>,
+    my_block: TensorBlock,
     backend: &dyn ComputeBackend,
     cfg: &TtConfig,
 ) -> Result<TtOutput> {
@@ -111,7 +115,7 @@ pub fn dist_ntt(
     let mut cores: Vec<Mat<f64>> = Vec::with_capacity(d);
     let mut stages: Vec<StageStats> = Vec::with_capacity(d - 1);
     let mut cur_layout = Layout::TensorGrid { dims: dims.to_vec(), grid: proc_grid.dims().to_vec() };
-    let mut cur_data = my_block;
+    let mut cur_data: TensorBlock = my_block;
     let mut r_prev = 1usize;
     let mut s_rest: usize = dims.iter().product();
     // One workspace per rank, shared by every stage NMF: the packed-GEMM
@@ -123,22 +127,29 @@ pub fn dist_ntt(
         let n_l = dims[l];
         let m = r_prev * n_l;
         let ncols = s_rest / n_l;
-        // --- Alg 2 line 4: distributed reshape into the stage matrix.
-        let x = dist_reshape(world, store, &format!("tt.stage{l}"), &cur_layout, cur_data, m, ncols, grid)?;
+        // --- Alg 2 line 4: distributed reshape into the stage matrix
+        // (assembled sparse when the published chunks are sparse enough).
+        let x = dist_reshape_x(
+            world, store, &format!("tt.stage{l}"), &cur_layout, cur_data, m, ncols, grid,
+        )?;
 
-        // --- Lines 5–6: rank selection.
+        // --- Lines 5–6: rank selection. The SVD has no sparse path, so a
+        // sparse stage block is densified locally for this step only
+        // (skipped entirely under `fixed_ranks`, the usual sparse setup).
         let (rank, svd_eps) = match &cfg.fixed_ranks {
             Some(fr) => (fr[l].max(1), f64::NAN),
             None => {
+                let xd = x.dense_view();
                 let rs = RankSelectConfig { eps: cfg.eps, ..cfg.rank_select.clone() };
-                let sel = dist_rank_select(&x, m, ncols, grid, world, row, col, &rs)?;
+                let sel = dist_rank_select(&xd, m, ncols, grid, world, row, col, &rs)?;
                 (sel.rank, sel.achieved_eps)
             }
         };
 
-        // --- Line 7: distributed NMF (optionally zero-row/col pruned).
+        // --- Line 7: distributed NMF (optionally zero-row/col pruned),
+        // dispatched per block representation.
         let nmf_cfg = NmfConfig { rank, seed: cfg.nmf.seed.wrapping_add(l as u64), ..cfg.nmf.clone() };
-        let out = dist_nmf_pruned_ws(
+        let out = dist_nmf_pruned_x_ws(
             &x, m, ncols, grid, world, row, col, backend, &nmf_cfg,
             store, &format!("tt.stage{l}"), cfg.prune, &mut ws,
         )?;
@@ -154,9 +165,10 @@ pub fn dist_ntt(
 
         stages.push(StageStats { mode: l, m, n: ncols, rank, svd_eps, nmf: out.stats });
 
-        // --- Line 10: H becomes the next remainder (kept distributed).
+        // --- Line 10: H becomes the next remainder (kept distributed;
+        // the factors are dense, so later stages run the dense path).
         cur_layout = Layout::HtGrid { r: rank, n: ncols, pr: grid.pr, pc: grid.pc };
-        cur_data = out.ht.into_vec();
+        cur_data = TensorBlock::Dense(out.ht.into_vec());
         r_prev = rank;
         s_rest = ncols;
     }
@@ -164,7 +176,7 @@ pub fn dist_ntt(
     // --- Line 11: gather the final H as core G(d) ((r_{d-1}·n_d) × 1).
     let rank_id = world.rank();
     let t0 = std::time::Instant::now();
-    store.publish("tt.final", &cur_layout, rank_id, cur_data)?;
+    store.publish_block("tt.final", &cur_layout, rank_id, cur_data)?;
     world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
     world.barrier();
     let view = store.view("tt.final")?;
@@ -216,7 +228,42 @@ pub fn ntt_on_threads(
             &pg,
             grid,
             &dims,
-            my,
+            TensorBlock::Dense(my),
+            &crate::runtime::native::NativeBackend,
+            &cfg,
+        )
+    });
+    outs.swap_remove(0)
+}
+
+/// Convenience wrapper for sparse inputs: decompose a
+/// [`crate::ttrain::SyntheticSparse`] tensor on `p` thread ranks, every
+/// rank generating its own sparse chunk (the full tensor is never
+/// materialized).
+pub fn ntt_sparse_on_threads(
+    syn: &crate::ttrain::datagen::SyntheticSparse,
+    proc_grid: &ProcGrid,
+    cfg: &TtConfig,
+) -> Result<TtOutput> {
+    use crate::dist::chunkstore::SpillMode;
+    let dims = syn.dims.clone();
+    let grid = proc_grid.to_2d();
+    let store = SharedStore::new(SpillMode::Memory);
+    let pg = proc_grid.clone();
+    let cfg = cfg.clone();
+    let syn = syn.clone();
+    let mut outs = Comm::run(proc_grid.size(), move |mut world| {
+        let my = syn.block(&pg, world.rank());
+        let (mut row, mut col) = grid.make_subcomms(&mut world);
+        dist_ntt(
+            &mut world,
+            &mut row,
+            &mut col,
+            &store,
+            &pg,
+            grid,
+            &dims,
+            TensorBlock::Sparse(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
         )
@@ -391,5 +438,26 @@ mod tests {
         let mut cfg = cfg_iters(5);
         cfg.fixed_ranks = Some(vec![2]); // wrong length
         assert!(ntt_serial(&t, &cfg).is_err());
+    }
+
+    #[test]
+    fn sparse_input_matches_densified_run() {
+        use crate::ttrain::datagen::SyntheticSparse;
+        let syn = SyntheticSparse::new(vec![6, 5, 4], 0.15, 77);
+        let t = syn.dense();
+        let mut cfg = cfg_iters(80);
+        cfg.fixed_ranks = Some(vec![2, 2]);
+        let grid = ProcGrid::new(vec![2, 1, 1]).unwrap();
+        let sp = ntt_sparse_on_threads(&syn, &grid, &cfg).unwrap();
+        let de = ntt_on_threads(&t, &grid, &cfg).unwrap();
+        assert_eq!(sp.tt.ranks(), de.tt.ranks());
+        // The sparse stage-0 path must agree with the dense run on the
+        // densified tensor to reduction roundoff.
+        for (a, b) in sp.tt.cores().iter().zip(de.tt.cores()) {
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+            }
+        }
+        assert!(sp.tt.is_nonneg());
     }
 }

@@ -7,7 +7,9 @@ pub mod driver;
 pub mod rankselect;
 pub mod round;
 
-pub use datagen::SyntheticTt;
-pub use driver::{dist_ntt, ntt_on_threads, ntt_serial, StageStats, TtConfig, TtOutput};
+pub use datagen::{SyntheticSparse, SyntheticTt};
+pub use driver::{
+    dist_ntt, ntt_on_threads, ntt_serial, ntt_sparse_on_threads, StageStats, TtConfig, TtOutput,
+};
 pub use rankselect::{dist_rank_select, RankSelectConfig, RankSelection};
 pub use round::tt_round;

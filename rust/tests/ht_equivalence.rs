@@ -6,7 +6,7 @@
 
 use dntt::coordinator::{run_job, Decomposition, InputSpec, JobConfig};
 use dntt::dist::chunkstore::SpillMode;
-use dntt::dist::{Comm, ProcGrid, SharedStore};
+use dntt::dist::{Comm, ProcGrid, SharedStore, TensorBlock};
 use dntt::ht::{dist_nht, ht_serial, nht_on_threads, HtConfig, SyntheticHt};
 use dntt::nmf::NmfConfig;
 use dntt::runtime::NativeBackend;
@@ -97,8 +97,8 @@ fn p4_factors_bitwise_identical_across_ranks_and_runs() {
             let my = extract_block(&t, &pg, world.rank());
             let (mut row, mut col) = grid.make_subcomms(&mut world);
             dist_nht(
-                &mut world, &mut row, &mut col, &store, &pg, grid, &dims, my,
-                &NativeBackend, &c,
+                &mut world, &mut row, &mut col, &store, &pg, grid, &dims,
+                TensorBlock::Dense(my), &NativeBackend, &c,
             )
             .unwrap()
         })
