@@ -2,6 +2,7 @@
 //! which backend and algorithm.
 
 use crate::data::{FaceConfig, VideoConfig};
+use crate::dist::checkpoint::CheckpointPolicy;
 use crate::dist::chunkstore::SpillMode;
 use crate::dist::{CostModel, ProcGrid};
 use crate::ht::HtConfig;
@@ -90,6 +91,39 @@ impl InputSpec {
             InputSpec::Dense(t) => format!("dense{:?}", t.dims()),
         }
     }
+
+    /// Full identity of the input *data* (unlike [`InputSpec::label`],
+    /// which is a display string): generator seeds for the synthetic
+    /// inputs, the complete config for faces/video, and a content hash
+    /// for caller-provided tensors. Feeds
+    /// [`JobConfig::fingerprint`] so two jobs over different tensors can
+    /// never share a checkpoint config hash.
+    fn identity(&self) -> String {
+        match self {
+            InputSpec::Synthetic(s) => format!("synthetic|{:?}|{:?}|{}", s.dims, s.ranks, s.seed),
+            InputSpec::SyntheticSparse(s) => {
+                format!("sparse|{:?}|{:016x}|{}", s.dims, s.density.to_bits(), s.seed)
+            }
+            InputSpec::Faces(c) => format!("faces|{c:?}"),
+            InputSpec::Video(c) => format!("video|{c:?}"),
+            InputSpec::Dense(t) => {
+                // The tensor content itself is the identity.
+                let h = fnv1a(t.as_slice().iter().flat_map(|x| x.to_le_bytes()));
+                format!("dense|{:?}|{h:016x}", t.dims())
+            }
+        }
+    }
+}
+
+/// FNV-1a 64-bit fold — shared by the input-identity and configuration
+/// fingerprints so the two can never desynchronize.
+fn fnv1a(bytes: impl Iterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Which compute backend the ranks use.
@@ -99,6 +133,31 @@ pub enum BackendChoice {
     Native,
     /// PJRT over the artifact directory (native fallback per shape).
     Pjrt(PathBuf),
+}
+
+/// Whether [`crate::coordinator::run_job`] consults an existing
+/// checkpoint and relaunches after a lost rank.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ResumeMode {
+    /// Ignore existing checkpoints; a lost rank fails the job with
+    /// [`crate::error::DnttError::RankLost`].
+    #[default]
+    Off,
+    /// Validate + resume from the checkpoint directory's manifest when
+    /// one exists, and relaunch the world from the last durable
+    /// checkpoint when a rank is lost mid-run.
+    Auto,
+}
+
+impl std::str::FromStr for ResumeMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "off" => Ok(ResumeMode::Off),
+            "auto" => Ok(ResumeMode::Auto),
+            _ => Err(format!("unknown resume mode '{s}' (off|auto)")),
+        }
+    }
 }
 
 /// A full decomposition job.
@@ -119,6 +178,14 @@ pub struct JobConfig {
     /// Compute the reconstruction error afterwards (requires materializing
     /// the tensor — skip for very large inputs).
     pub check_error: bool,
+    /// Write `dntt-ckpt-v1` snapshots per this policy (None = no
+    /// checkpointing).
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Resume/relaunch behavior (meaningful with `checkpoint` set).
+    pub resume: ResumeMode,
+    /// Leave spill chunk files on disk when the job's store is dropped
+    /// (see [`crate::dist::SharedStore::set_keep_spill`]).
+    pub keep_spill: bool,
 }
 
 impl JobConfig {
@@ -133,6 +200,33 @@ impl JobConfig {
             spill: SpillMode::Memory,
             cost_model: Some(CostModel::default()),
             check_error: true,
+            checkpoint: None,
+            resume: ResumeMode::Off,
+            keep_spill: false,
         }
+    }
+
+    /// Stable fingerprint of everything that determines the numerical
+    /// trajectory (decomposition, dims, grid, input identity *including
+    /// the data itself*, algorithm configuration, backend) — the
+    /// `config_hash` a `dntt-ckpt-v1` manifest records, so a checkpoint
+    /// is only ever resumed by the job that wrote it. Spill mode, cost
+    /// model, error checking and the checkpoint/resume knobs themselves
+    /// are excluded: they provably do not change the factors.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over a canonical description; Debug formatting of f64
+        // uses the shortest round-trip representation, so the hash is
+        // exact in the configuration's floating-point fields.
+        let canon = format!(
+            "{}|{:?}|{:?}|{}|{:?}|{:?}|{:?}",
+            self.decomp.name(),
+            self.input.dims(),
+            self.grid.dims(),
+            self.input.identity(),
+            self.tt,
+            self.ht,
+            self.backend,
+        );
+        fnv1a(canon.bytes())
     }
 }

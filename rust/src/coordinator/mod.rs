@@ -6,15 +6,23 @@
 pub mod job;
 pub mod metrics;
 
-pub use job::{BackendChoice, Decomposition, InputSpec, JobConfig};
+pub use job::{BackendChoice, Decomposition, InputSpec, JobConfig, ResumeMode};
 pub use metrics::{DecompOutput, JobReport};
 
-use crate::dist::{Comm, SharedStore, TensorBlock};
+use crate::dist::checkpoint::{self, CkptCtx};
+use crate::dist::{faults, Comm, SharedStore, TensorBlock};
 use crate::error::{DnttError, Result};
 use crate::runtime::{NativeBackend, PjrtBackend, PjrtEngine};
 use crate::ttrain::driver::{dist_ntt, extract_block};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Upper bound on world relaunches after lost ranks within one
+/// `run_job` call (each injected kill fires at most once, so real fault
+/// plans converge long before this; the cap only stops a pathological
+/// environment from relaunching forever).
+const MAX_RESTARTS: usize = 32;
 
 /// Run a decomposition job end-to-end.
 ///
@@ -43,57 +51,111 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     }
     let p = job.grid.size();
     let grid2 = job.grid.to_2d();
-    let store = SharedStore::new(job.spill.clone());
     let dense = job.input.materialize();
     let engine: Option<Arc<PjrtEngine>> = match &job.backend {
         BackendChoice::Native => None,
         BackendChoice::Pjrt(dir) => Some(PjrtEngine::start(dir)?),
     };
 
+    // The fingerprint is only consumed through CkptCtx; for Dense inputs
+    // it hashes the whole tensor, so skip it when no checkpointing is
+    // configured (the common path).
+    let config_hash = if job.checkpoint.is_some() { job.fingerprint() } else { 0 };
     let t0 = Instant::now();
-    let input = job.input.clone();
-    let grid = job.grid.clone();
-    let decomp = job.decomp;
-    let tt_cfg = job.tt.clone();
-    let ht_cfg = job.ht.clone();
-    let dims2 = dims.clone();
-    let dense2 = dense.clone();
-    let eng2 = engine.clone();
-    let mut outs: Vec<Result<DecompOutput>> = Comm::run(p, move |mut world| {
-        let rank = world.rank();
-        // Build this rank's block (sparse inputs stay sparse end to end).
-        let block = match (&input, &dense2) {
-            (InputSpec::Synthetic(s), _) => TensorBlock::Dense(s.block(&grid, rank)?),
-            (InputSpec::SyntheticSparse(s), _) => TensorBlock::Sparse(s.block(&grid, rank)),
-            (_, Some(t)) => TensorBlock::Dense(extract_block(t, &grid, rank)),
-            _ => unreachable!("non-synthetic inputs materialize"),
-        };
-        let (mut row, mut col) = grid2.make_subcomms(&mut world);
-        // One driver call per (decomposition, backend) choice.
-        let run = |world: &mut Comm,
-                   row: &mut Comm,
-                   col: &mut Comm,
-                   backend: &dyn crate::runtime::ComputeBackend|
-         -> Result<DecompOutput> {
-            match decomp {
-                Decomposition::Tt => dist_ntt(
-                    world, row, col, &store, &grid, grid2, &dims2, block, backend, &tt_cfg,
-                )
-                .map(DecompOutput::Tt),
-                Decomposition::Ht => crate::ht::dist_nht(
-                    world, row, col, &store, &grid, grid2, &dims2, block, backend, &ht_cfg,
-                )
-                .map(DecompOutput::Ht),
+    // Under `ResumeMode::Auto` the first launch already tries the
+    // checkpoint directory (a missing manifest is a fresh start); after a
+    // lost rank the world is relaunched with `resume` forced on.
+    let mut resume = job.resume == ResumeMode::Auto;
+    let mut attempt = 0usize;
+    let mut outs: Vec<Result<DecompOutput>> = loop {
+        // A fresh store per attempt: a poisoned world may leave
+        // partially-published arrays behind (the store's Drop cleans any
+        // spill files).
+        let store = SharedStore::new(job.spill.clone());
+        store.set_keep_spill(job.keep_spill);
+        let ckpt_ctx = job
+            .checkpoint
+            .clone()
+            .map(|policy| CkptCtx { policy, config_hash, resume });
+        let input = job.input.clone();
+        let grid = job.grid.clone();
+        let decomp = job.decomp;
+        let tt_cfg = job.tt.clone();
+        let ht_cfg = job.ht.clone();
+        let dims2 = dims.clone();
+        let dense2 = dense.clone();
+        let eng2 = engine.clone();
+        let fired_before = faults::armed().map(|pl| pl.fired_count()).unwrap_or(0);
+        let world_run = catch_unwind(AssertUnwindSafe(|| {
+            Comm::run(p, move |mut world| {
+                let rank = world.rank();
+                // Build this rank's block (sparse inputs stay sparse end to end).
+                let block = match (&input, &dense2) {
+                    (InputSpec::Synthetic(s), _) => TensorBlock::Dense(s.block(&grid, rank)?),
+                    (InputSpec::SyntheticSparse(s), _) => TensorBlock::Sparse(s.block(&grid, rank)),
+                    (_, Some(t)) => TensorBlock::Dense(extract_block(t, &grid, rank)),
+                    _ => unreachable!("non-synthetic inputs materialize"),
+                };
+                let (mut row, mut col) = grid2.make_subcomms(&mut world);
+                // One driver call per (decomposition, backend) choice.
+                let run = |world: &mut Comm,
+                           row: &mut Comm,
+                           col: &mut Comm,
+                           backend: &dyn crate::runtime::ComputeBackend|
+                 -> Result<DecompOutput> {
+                    match decomp {
+                        Decomposition::Tt => dist_ntt(
+                            world, row, col, &store, &grid, grid2, &dims2, block, backend,
+                            &tt_cfg, ckpt_ctx.as_ref(),
+                        )
+                        .map(DecompOutput::Tt),
+                        Decomposition::Ht => crate::ht::dist_nht(
+                            world, row, col, &store, &grid, grid2, &dims2, block, backend,
+                            &ht_cfg, ckpt_ctx.as_ref(),
+                        )
+                        .map(DecompOutput::Ht),
+                    }
+                };
+                match &eng2 {
+                    Some(e) => {
+                        let backend = PjrtBackend::new(Arc::clone(e));
+                        run(&mut world, &mut row, &mut col, &backend)
+                    }
+                    None => run(&mut world, &mut row, &mut col, &NativeBackend),
+                }
+            })
+        }));
+        match world_run {
+            Ok(outs) => break outs,
+            Err(payload) => {
+                // Distinguish an injected rank death (the armed fault
+                // plan fired during this attempt) from a genuine bug.
+                let plan = faults::armed();
+                let fired_now = plan.as_ref().map(|pl| pl.fired_count()).unwrap_or(0);
+                if fired_now > fired_before {
+                    let kill = plan.unwrap().last_fired().expect("a kill fired");
+                    let lost = DnttError::RankLost { rank: kill.rank, op: kill.op };
+                    if job.resume == ResumeMode::Auto
+                        && job.checkpoint.is_some()
+                        && attempt < MAX_RESTARTS
+                    {
+                        let dir = &job.checkpoint.as_ref().unwrap().dir;
+                        log::warn!(
+                            "{lost}; last durable checkpoint: {} completed stage(s) in {dir:?}; \
+                             relaunching the world (attempt {})",
+                            checkpoint::stages_done(dir).unwrap_or(0),
+                            attempt + 1
+                        );
+                        attempt += 1;
+                        resume = true;
+                        continue;
+                    }
+                    return Err(lost);
+                }
+                resume_unwind(payload);
             }
-        };
-        match &eng2 {
-            Some(e) => {
-                let backend = PjrtBackend::new(Arc::clone(e));
-                run(&mut world, &mut row, &mut col, &backend)
-            }
-            None => run(&mut world, &mut row, &mut col, &NativeBackend),
         }
-    });
+    };
     let wall_secs = t0.elapsed().as_secs_f64();
     // Propagate the first error, if any.
     let mut output = None;

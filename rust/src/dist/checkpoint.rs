@@ -1,0 +1,1351 @@
+//! `dntt-ckpt-v1`: versioned on-disk snapshots that make every
+//! decomposition resumable.
+//!
+//! The TT sweep and the HT tree walk are stage-structured: after each
+//! completed stage the *entire* job state is (a) the replicated outputs so
+//! far (TT cores / resolved HT tree nodes), (b) the distributed hand-off
+//! arrays (the next remainder `H` for TT; the pending child `W` arrays for
+//! HT), and (c) the per-stage convergence records. A checkpoint persists
+//! exactly that: every rank writes its chunk of each distributed array in
+//! the chunk store's spill byte format (dense: raw little-endian `f64`;
+//! sparse: `[nnz | idx | vals]` — see
+//! [`crate::dist::chunkstore::SpillMode`]), and rank 0 commits a
+//! `manifest.json` (write-to-temp + atomic rename) recording the format
+//! version, a configuration fingerprint, the git sha, the layouts, every
+//! file's byte size, and the bit-exact stage statistics.
+//!
+//! # Resume contract
+//!
+//! A resumed driver validates the manifest (format string, config hash,
+//! decomposition/world/grid/dims agreement, and the byte size of **every**
+//! referenced file — so truncation is rejected symmetrically on all ranks
+//! before any rank commits to the resume path), rehydrates its state, and
+//! re-enters the sweep at the first incomplete stage. Because snapshots
+//! round-trip chunks byte-exactly and every stage's computation is a
+//! deterministic function of its input array and the configuration
+//! (deterministic rank-ordered collectives + index-keyed factor init), a
+//! job killed at an arbitrary collective and resumed from its last
+//! checkpoint produces factors **bitwise identical** to an uninterrupted
+//! run — the guarantee `tests/checkpoint_recovery.rs` asserts against the
+//! fault-injection layer ([`crate::dist::faults`]).
+//!
+//! Iteration-granular snapshots ([`CheckpointPolicy::every_iters`],
+//! wired through [`crate::nmf::dist::IterObserver`]) additionally persist
+//! the in-flight `W`/`H` of the current NMF every N iterations. They
+//! bound the work lost to a crash for external consumers; the resume path
+//! itself restarts the interrupted stage from its beginning — bitwise
+//! equivalence is defined at stage boundaries.
+
+use crate::dist::chunkstore::{Layout, SharedStore, StoreView, TensorBlock};
+use crate::dist::comm::Comm;
+use crate::dist::topology::Grid2d;
+use crate::error::{DnttError, Result};
+use crate::ht::driver::HtStageStats;
+use crate::linalg::Mat;
+use crate::nmf::NmfStats;
+use crate::tensor::ht::HtNode;
+use crate::tensor::sparse::SparseChunk;
+use crate::ttrain::driver::StageStats;
+use crate::util::json::Json;
+use crate::util::timer::Cat;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// The snapshot format identifier every manifest carries.
+pub const CKPT_FORMAT: &str = "dntt-ckpt-v1";
+
+/// When to write snapshots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Snapshot directory (created on first write).
+    pub dir: PathBuf,
+    /// Snapshot after every N completed stages (TT stages / HT tree
+    /// nodes). 0 disables stage snapshots; the default is 1 — every
+    /// stage boundary, which is what makes resumed runs bitwise-exact.
+    pub every_stages: usize,
+    /// Persist the in-flight NMF `W`/`H` every N iterations (0 = off).
+    pub every_iters: usize,
+}
+
+impl CheckpointPolicy {
+    /// Checkpoint into `dir` at every stage boundary.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CheckpointPolicy { dir: dir.into(), every_stages: 1, every_iters: 0 }
+    }
+}
+
+/// Per-rank checkpoint context the coordinator hands the drivers: the
+/// policy, the job's configuration fingerprint
+/// ([`crate::coordinator::JobConfig::fingerprint`]) and whether this
+/// launch should try to resume from an existing manifest.
+#[derive(Clone)]
+pub struct CkptCtx {
+    pub policy: CheckpointPolicy,
+    pub config_hash: u64,
+    pub resume: bool,
+}
+
+impl CkptCtx {
+    /// The iteration-granular observer for one NMF stage (None when
+    /// `every_iters` is 0). `tag` namespaces the in-flight files per
+    /// stage (e.g. `"s0"`, `"n1a"`).
+    pub fn iter_ckpt(&self, rank: usize, tag: &str) -> Option<IterCkpt> {
+        (self.policy.every_iters > 0).then(|| IterCkpt {
+            dir: self.policy.dir.clone(),
+            every: self.policy.every_iters,
+            rank,
+            tag: tag.to_string(),
+        })
+    }
+
+    /// Should a snapshot be written after `done` completed stages?
+    pub fn stage_due(&self, done: usize) -> bool {
+        self.policy.every_stages > 0 && done % self.policy.every_stages == 0
+    }
+}
+
+/// The build's git sha, if the build system provided one.
+pub fn git_sha() -> &'static str {
+    option_env!("DNTT_GIT_SHA").unwrap_or("unknown")
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact scalar codec: factor-adjacent floats are stored as 16-hex-digit
+// bit patterns so NaN `svd_eps` and full-precision objectives survive the
+// JSON round trip unchanged.
+// ---------------------------------------------------------------------------
+
+fn bits_json(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn bits_from(j: &Json, what: &str) -> Result<f64> {
+    let s = j.as_str().ok_or_else(|| {
+        DnttError::config(format!("checkpoint manifest: {what} is not a bit string"))
+    })?;
+    let b = u64::from_str_radix(s, 16)
+        .map_err(|_| DnttError::config(format!("checkpoint manifest: bad bit string for {what}")))?;
+    Ok(f64::from_bits(b))
+}
+
+fn req_usize(j: &Json, what: &str) -> Result<usize> {
+    j.as_usize()
+        .ok_or_else(|| DnttError::config(format!("checkpoint manifest: missing {what}")))
+}
+
+fn req_usize_arr(j: &Json, what: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| DnttError::config(format!("checkpoint manifest: missing {what}")))?
+        .iter()
+        .map(|x| {
+            x.as_usize().ok_or_else(|| {
+                DnttError::config(format!("checkpoint manifest: {what} has a non-integer entry"))
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Layout serialization (all five chunk-store layouts).
+// ---------------------------------------------------------------------------
+
+/// Serialize a [`Layout`] for the manifest.
+pub fn layout_to_json(l: &Layout) -> Json {
+    match l {
+        Layout::TensorGrid { dims, grid } => Json::obj(vec![
+            ("kind", Json::Str("tensor_grid".into())),
+            ("dims", Json::arr_usize(dims)),
+            ("grid", Json::arr_usize(grid)),
+        ]),
+        Layout::MatGrid { m, n, pr, pc } => Json::obj(vec![
+            ("kind", Json::Str("mat_grid".into())),
+            ("shape", Json::arr_usize(&[*m, *n, *pr, *pc])),
+        ]),
+        Layout::HtGrid { r, n, pr, pc } => Json::obj(vec![
+            ("kind", Json::Str("ht_grid".into())),
+            ("shape", Json::arr_usize(&[*r, *n, *pr, *pc])),
+        ]),
+        Layout::WGrid { m, r, pr, pc } => Json::obj(vec![
+            ("kind", Json::Str("w_grid".into())),
+            ("shape", Json::arr_usize(&[*m, *r, *pr, *pc])),
+        ]),
+        Layout::HtPermuted { r, n2, rt, pr, pc } => Json::obj(vec![
+            ("kind", Json::Str("ht_permuted".into())),
+            ("shape", Json::arr_usize(&[*r, *n2, *rt, *pr, *pc])),
+        ]),
+    }
+}
+
+/// Parse a [`Layout`] back from its manifest form.
+pub fn layout_from_json(j: &Json) -> Result<Layout> {
+    let kind = j
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: layout missing kind"))?;
+    let shape = |n: usize| -> Result<Vec<usize>> {
+        let s = req_usize_arr(j.get("shape"), "layout shape")?;
+        if s.len() != n {
+            return Err(DnttError::config(format!(
+                "checkpoint manifest: layout '{kind}' wants {n} extents, got {}",
+                s.len()
+            )));
+        }
+        Ok(s)
+    };
+    match kind {
+        "tensor_grid" => Ok(Layout::TensorGrid {
+            dims: req_usize_arr(j.get("dims"), "layout dims")?,
+            grid: req_usize_arr(j.get("grid"), "layout grid")?,
+        }),
+        "mat_grid" => {
+            let s = shape(4)?;
+            Ok(Layout::MatGrid { m: s[0], n: s[1], pr: s[2], pc: s[3] })
+        }
+        "ht_grid" => {
+            let s = shape(4)?;
+            Ok(Layout::HtGrid { r: s[0], n: s[1], pr: s[2], pc: s[3] })
+        }
+        "w_grid" => {
+            let s = shape(4)?;
+            Ok(Layout::WGrid { m: s[0], r: s[1], pr: s[2], pc: s[3] })
+        }
+        "ht_permuted" => {
+            let s = shape(5)?;
+            Ok(Layout::HtPermuted { r: s[0], n2: s[1], rt: s[2], pr: s[3], pc: s[4] })
+        }
+        other => {
+            Err(DnttError::config(format!("checkpoint manifest: unknown layout kind '{other}'")))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunk files: the chunk store's spill byte formats, verbatim.
+// ---------------------------------------------------------------------------
+
+/// Manifest record of one snapshot chunk file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// File name, relative to the checkpoint directory.
+    pub file: String,
+    /// Exact byte size (what truncation detection validates).
+    pub bytes: u64,
+    /// Logical (dense) element count of the chunk.
+    pub len: usize,
+    /// `Some(nnz)` for a sparse chunk, `None` for dense.
+    pub nnz: Option<usize>,
+}
+
+impl ChunkMeta {
+    /// The byte size the format dictates for this chunk (dense: 8·len,
+    /// sparse: 8·(1 + 2·nnz)).
+    fn expect_bytes(&self) -> u64 {
+        match self.nnz {
+            None => 8 * self.len as u64,
+            Some(nnz) => 8 * (1 + 2 * nnz) as u64,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut f = vec![
+            ("file", Json::Str(self.file.clone())),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("len", Json::Num(self.len as f64)),
+        ];
+        if let Some(nnz) = self.nnz {
+            f.push(("nnz", Json::Num(nnz as f64)));
+        }
+        Json::obj(f)
+    }
+
+    fn from_json(j: &Json) -> Result<ChunkMeta> {
+        Ok(ChunkMeta {
+            file: j
+                .get("file")
+                .as_str()
+                .ok_or_else(|| DnttError::config("checkpoint manifest: chunk missing file"))?
+                .to_string(),
+            bytes: req_usize(j.get("bytes"), "chunk bytes")? as u64,
+            len: req_usize(j.get("len"), "chunk len")?,
+            nnz: j.get("nnz").as_usize(),
+        })
+    }
+}
+
+/// Write + fsync. The commit protocol's durability claim is only as good
+/// as the data actually reaching stable storage before the manifest
+/// rename — the size-only resume validation cannot detect a
+/// post-power-loss zero-filled page, so every snapshot file is synced.
+fn write_bytes_durable(path: &Path, bytes: &[u8]) -> Result<u64> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    Ok(bytes.len() as u64)
+}
+
+/// Best-effort directory fsync: makes the renames inside `dir` (manifest
+/// and replicated-file commits) durable too.
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+fn write_f64_file(path: &Path, data: &[f64]) -> Result<u64> {
+    let mut bytes = Vec::with_capacity(data.len() * 8);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    write_bytes_durable(path, &bytes)
+}
+
+/// Write a replicated-output file (core / HT node matrix) via temp file +
+/// atomic rename: an already-committed manifest may reference this very
+/// path (the content is immutable across snapshots), so a crash mid-write
+/// must never leave it truncated. With `reuse_ok` (the directory's
+/// committed manifest carries our config hash, so an existing file at the
+/// expected size is bitwise what we would write — the content is a
+/// deterministic function of the configuration) the write is skipped
+/// entirely, keeping snapshot IO linear instead of O(stages²).
+fn write_replicated(path: &Path, data: &[f64], reuse_ok: bool) -> Result<u64> {
+    let want = (data.len() * 8) as u64;
+    if reuse_ok && std::fs::metadata(path).map(|m| m.len() == want).unwrap_or(false) {
+        return Ok(want);
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    let bytes = write_f64_file(&tmp, data)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(bytes)
+}
+
+/// Does the directory's committed manifest belong to this job? Decides
+/// whether existing replicated files can be reused by
+/// [`write_replicated`] (a foreign or absent manifest forces rewrites).
+fn dir_is_ours(dir: &Path, config_hash: u64) -> bool {
+    read_manifest(dir)
+        .ok()
+        .and_then(|m| {
+            m.get("config_hash").as_str().and_then(|s| u64::from_str_radix(s, 16).ok())
+        })
+        == Some(config_hash)
+}
+
+/// Best-effort removal of per-stage snapshot chunk files superseded by a
+/// just-committed manifest (files matching `prefix` without the current
+/// stage's `keep_marker`). Runs on rank 0 *after* the manifest rename, so
+/// nothing a committed manifest references is ever removed — without
+/// this, every stage's distributed remainder would accumulate on disk.
+fn prune_stale(dir: &Path, prefix: &str, keep_marker: &str) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with(prefix) && !name.contains(keep_marker) {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+fn read_f64_file(path: &Path, want_len: usize) -> Result<Vec<f64>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() != want_len * 8 {
+        return Err(DnttError::config(format!(
+            "checkpoint: snapshot file {path:?} is truncated or corrupt ({} bytes, expected {})",
+            bytes.len(),
+            want_len * 8
+        )));
+    }
+    Ok(bytes.chunks_exact(8).map(|b| f64::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+/// Write one chunk in the spill byte format; returns the byte size.
+pub fn write_block_file(path: &Path, block: &TensorBlock) -> Result<u64> {
+    match block {
+        TensorBlock::Dense(v) => write_f64_file(path, v),
+        TensorBlock::Sparse(s) => {
+            let nnz = s.nnz();
+            let mut bytes = Vec::with_capacity(8 * (1 + 2 * nnz));
+            bytes.extend_from_slice(&(nnz as u64).to_le_bytes());
+            for &i in s.idx() {
+                bytes.extend_from_slice(&(i as u64).to_le_bytes());
+            }
+            for &v in s.vals() {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            write_bytes_durable(path, &bytes)
+        }
+    }
+}
+
+/// Read a chunk back under the representation its [`ChunkMeta`] records.
+pub fn read_block_file(path: &Path, meta: &ChunkMeta) -> Result<TensorBlock> {
+    match meta.nnz {
+        None => Ok(TensorBlock::Dense(read_f64_file(path, meta.len)?)),
+        Some(nnz) => {
+            let bytes = std::fs::read(path)?;
+            if bytes.len() != 8 * (1 + 2 * nnz) {
+                return Err(DnttError::config(format!(
+                    "checkpoint: sparse snapshot file {path:?} is truncated or corrupt"
+                )));
+            }
+            let stored = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+            if stored != nnz {
+                return Err(DnttError::config(format!(
+                    "checkpoint: sparse snapshot file {path:?} nnz header disagrees with manifest"
+                )));
+            }
+            let idx: Vec<usize> = bytes[8..8 * (1 + nnz)]
+                .chunks_exact(8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap()) as usize)
+                .collect();
+            let vals: Vec<f64> = bytes[8 * (1 + nnz)..]
+                .chunks_exact(8)
+                .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Ok(TensorBlock::Sparse(SparseChunk::new(meta.len, idx, vals)?))
+        }
+    }
+}
+
+fn block_nnz(b: &TensorBlock) -> Option<usize> {
+    match b {
+        TensorBlock::Dense(_) => None,
+        TensorBlock::Sparse(s) => Some(s.nnz()),
+    }
+}
+
+/// Validate a referenced file's existence and exact byte size (also
+/// cross-checked against what the format dictates for its `len`/`nnz`).
+fn check_file(dir: &Path, meta: &ChunkMeta) -> Result<()> {
+    if meta.bytes != meta.expect_bytes() {
+        return Err(DnttError::config(format!(
+            "checkpoint: manifest record for {} is inconsistent ({} bytes for len {} nnz {:?})",
+            meta.file, meta.bytes, meta.len, meta.nnz
+        )));
+    }
+    let path = dir.join(&meta.file);
+    let md = std::fs::metadata(&path).map_err(|e| {
+        DnttError::config(format!("checkpoint: missing snapshot file {path:?}: {e}"))
+    })?;
+    if md.len() != meta.bytes {
+        return Err(DnttError::config(format!(
+            "checkpoint: snapshot file {path:?} is truncated or corrupt \
+             ({} bytes, manifest says {})",
+            md.len(),
+            meta.bytes
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Whole-array snapshots (store-level; also what the property tests drive).
+// ---------------------------------------------------------------------------
+
+/// A stored array's snapshot: its layout and one [`ChunkMeta`] per chunk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArraySnapshot {
+    pub layout: Layout,
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl ArraySnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layout", layout_to_json(&self.layout)),
+            ("chunks", Json::Arr(self.chunks.iter().map(ChunkMeta::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ArraySnapshot> {
+        let layout = layout_from_json(j.get("layout"))?;
+        let chunks = j
+            .get("chunks")
+            .as_arr()
+            .ok_or_else(|| DnttError::config("checkpoint manifest: array missing chunks"))?
+            .iter()
+            .map(ChunkMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArraySnapshot { layout, chunks })
+    }
+}
+
+/// Snapshot every chunk of a stored array to `dir` (files named
+/// `<prefix>.c<chunk>.chunk`), preserving each chunk's dense/sparse
+/// representation byte-exactly.
+pub fn snapshot_array(dir: &Path, prefix: &str, view: &StoreView) -> Result<ArraySnapshot> {
+    std::fs::create_dir_all(dir)?;
+    let layout = view.layout().clone();
+    let mut chunks = Vec::with_capacity(layout.num_chunks());
+    for c in 0..layout.num_chunks() {
+        let block = view.chunk_block(c);
+        let file = format!("{prefix}.c{c}.chunk");
+        let bytes = write_block_file(&dir.join(&file), &block)?;
+        chunks.push(ChunkMeta { file, bytes, len: block.len(), nnz: block_nnz(&block) });
+    }
+    Ok(ArraySnapshot { layout, chunks })
+}
+
+/// Restore a snapshot into `store` under `name`, validating every file's
+/// byte size first. Chunks come back under their original representation.
+pub fn restore_array(
+    dir: &Path,
+    snap: &ArraySnapshot,
+    store: &SharedStore,
+    name: &str,
+) -> Result<()> {
+    if snap.chunks.len() != snap.layout.num_chunks() {
+        return Err(DnttError::config(format!(
+            "checkpoint: array snapshot has {} chunks, layout wants {}",
+            snap.chunks.len(),
+            snap.layout.num_chunks()
+        )));
+    }
+    for meta in &snap.chunks {
+        check_file(dir, meta)?;
+    }
+    for (c, meta) in snap.chunks.iter().enumerate() {
+        let block = read_block_file(&dir.join(&meta.file), meta)?;
+        store.publish_block(name, &snap.layout, c, block)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Manifest plumbing.
+// ---------------------------------------------------------------------------
+
+/// Path of the manifest inside a checkpoint directory.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.json")
+}
+
+/// True when `dir` holds a committed manifest.
+pub fn have_checkpoint(dir: &Path) -> bool {
+    manifest_path(dir).is_file()
+}
+
+/// Read and format-check the manifest.
+pub fn read_manifest(dir: &Path) -> Result<Json> {
+    let path = manifest_path(dir);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| DnttError::config(format!("checkpoint: cannot read {path:?}: {e}")))?;
+    let man = Json::parse(&text)
+        .map_err(|e| DnttError::config(format!("checkpoint: {path:?} is not valid JSON: {e}")))?;
+    match man.get("format").as_str() {
+        Some(CKPT_FORMAT) => Ok(man),
+        Some(other) => Err(DnttError::config(format!(
+            "checkpoint: {path:?} has format '{other}', this build reads '{CKPT_FORMAT}'"
+        ))),
+        None => Err(DnttError::config(format!("checkpoint: {path:?} carries no format field"))),
+    }
+}
+
+/// Commit the manifest atomically (temp file + fsync + rename + directory
+/// fsync), so a crash during a snapshot leaves either the previous
+/// manifest or the new one — never a torn file — and the rename (plus any
+/// earlier replicated-file renames in the same directory) is itself
+/// durable.
+fn write_manifest(dir: &Path, man: &Json) -> Result<()> {
+    let tmp = dir.join("manifest.json.tmp");
+    write_bytes_durable(&tmp, man.to_pretty().as_bytes())?;
+    std::fs::rename(&tmp, manifest_path(dir))?;
+    sync_dir(dir);
+    Ok(())
+}
+
+/// Completed-stage count of the checkpoint in `dir`, if one exists
+/// (TT stages or HT tree nodes — whichever the manifest records).
+pub fn stages_done(dir: &Path) -> Option<usize> {
+    let man = read_manifest(dir).ok()?;
+    man.get("stages_done").as_usize().or_else(|| man.get("nodes_done").as_usize())
+}
+
+/// Remove the manifest and every snapshot file in `dir` (non-recursive;
+/// errors ignored — cleanup is best-effort).
+pub fn clear(dir: &Path) {
+    let _ = std::fs::remove_file(manifest_path(dir));
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".chunk") || name.ends_with(".bin") || name.ends_with(".tmp") {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+/// The header fields every manifest carries, validated on resume. The
+/// config-hash check is first: a mismatch means the checkpoint belongs to
+/// a different job and nothing else in it can be trusted.
+fn validate_header(
+    man: &Json,
+    ctx: &CkptCtx,
+    decomp: &str,
+    world: usize,
+    dims: &[usize],
+    grid: Grid2d,
+) -> Result<()> {
+    let hash = man
+        .get("config_hash")
+        .as_str()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing config_hash"))?;
+    if hash != ctx.config_hash {
+        return Err(DnttError::config(format!(
+            "checkpoint config hash mismatch: manifest {hash:016x}, job {:016x} — \
+             this checkpoint was written by a different job configuration",
+            ctx.config_hash
+        )));
+    }
+    if man.get("decomp").as_str() != Some(decomp) {
+        return Err(DnttError::config("checkpoint manifest: decomposition kind mismatch"));
+    }
+    if req_usize(man.get("world"), "world")? != world {
+        return Err(DnttError::config("checkpoint manifest: world size mismatch"));
+    }
+    if req_usize_arr(man.get("dims"), "dims")? != dims {
+        return Err(DnttError::config("checkpoint manifest: tensor dims mismatch"));
+    }
+    if req_usize_arr(man.get("grid"), "grid")? != [grid.pr, grid.pc] {
+        return Err(DnttError::config("checkpoint manifest: 2-D grid mismatch"));
+    }
+    // A build mismatch is not an error (rebuilding identical sources is
+    // routine), but numerics may have changed between builds — surface
+    // it: the bitwise-resume guarantee is per build.
+    if let Some(sha) = man.get("git_sha").as_str() {
+        if sha != git_sha() {
+            log::warn!(
+                "checkpoint was written by build {sha}, this build is {}; \
+                 the bitwise-resume guarantee holds only within one build",
+                git_sha()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn header_fields(
+    ctx: &CkptCtx,
+    decomp: &str,
+    world: usize,
+    dims: &[usize],
+    grid: Grid2d,
+) -> Vec<(&'static str, Json)> {
+    vec![
+        ("format", Json::Str(CKPT_FORMAT.into())),
+        ("git_sha", Json::Str(git_sha().into())),
+        ("config_hash", Json::Str(format!("{:016x}", ctx.config_hash))),
+        ("decomp", Json::Str(decomp.into())),
+        ("world", Json::Num(world as f64)),
+        ("dims", Json::arr_usize(dims)),
+        ("grid", Json::arr_usize(&[grid.pr, grid.pc])),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact stage statistics.
+// ---------------------------------------------------------------------------
+
+fn nmf_stats_to_json(s: &NmfStats) -> Json {
+    Json::obj(vec![
+        ("iters", Json::Num(s.iters as f64)),
+        ("restarts", Json::Num(s.restarts as f64)),
+        ("objective", bits_json(s.objective)),
+        ("rel_err", bits_json(s.rel_err)),
+        ("history", Json::Arr(s.history.iter().map(|&v| bits_json(v)).collect())),
+    ])
+}
+
+fn nmf_stats_from_json(j: &Json) -> Result<NmfStats> {
+    let history = j
+        .get("history")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: nmf stats missing history"))?
+        .iter()
+        .map(|b| bits_from(b, "history entry"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(NmfStats {
+        iters: req_usize(j.get("iters"), "nmf iters")?,
+        restarts: req_usize(j.get("restarts"), "nmf restarts")?,
+        objective: bits_from(j.get("objective"), "nmf objective")?,
+        rel_err: bits_from(j.get("rel_err"), "nmf rel_err")?,
+        history,
+    })
+}
+
+fn tt_stage_to_json(s: &StageStats) -> Json {
+    Json::obj(vec![
+        ("mode", Json::Num(s.mode as f64)),
+        ("m", Json::Num(s.m as f64)),
+        ("n", Json::Num(s.n as f64)),
+        ("rank", Json::Num(s.rank as f64)),
+        ("svd_eps", bits_json(s.svd_eps)),
+        ("nmf", nmf_stats_to_json(&s.nmf)),
+    ])
+}
+
+fn tt_stage_from_json(j: &Json) -> Result<StageStats> {
+    Ok(StageStats {
+        mode: req_usize(j.get("mode"), "stage mode")?,
+        m: req_usize(j.get("m"), "stage m")?,
+        n: req_usize(j.get("n"), "stage n")?,
+        rank: req_usize(j.get("rank"), "stage rank")?,
+        svd_eps: bits_from(j.get("svd_eps"), "stage svd_eps")?,
+        nmf: nmf_stats_from_json(j.get("nmf"))?,
+    })
+}
+
+fn ht_stage_to_json(s: &HtStageStats) -> Json {
+    Json::obj(vec![
+        ("node", Json::Num(s.node as f64)),
+        ("modes", Json::arr_usize(&[s.modes.0, s.modes.1])),
+        ("left", Json::Bool(s.left)),
+        ("m", Json::Num(s.m as f64)),
+        ("n", Json::Num(s.n as f64)),
+        ("rank", Json::Num(s.rank as f64)),
+        ("svd_eps", bits_json(s.svd_eps)),
+        ("nmf", nmf_stats_to_json(&s.nmf)),
+        ("secs", bits_json(s.secs)),
+    ])
+}
+
+fn ht_stage_from_json(j: &Json) -> Result<HtStageStats> {
+    let modes = req_usize_arr(j.get("modes"), "stage modes")?;
+    if modes.len() != 2 {
+        return Err(DnttError::config("checkpoint manifest: stage modes must be [lo, hi]"));
+    }
+    Ok(HtStageStats {
+        node: req_usize(j.get("node"), "stage node")?,
+        modes: (modes[0], modes[1]),
+        left: j
+            .get("left")
+            .as_bool()
+            .ok_or_else(|| DnttError::config("checkpoint manifest: stage missing left"))?,
+        m: req_usize(j.get("m"), "stage m")?,
+        n: req_usize(j.get("n"), "stage n")?,
+        rank: req_usize(j.get("rank"), "stage rank")?,
+        svd_eps: bits_from(j.get("svd_eps"), "stage svd_eps")?,
+        nmf: nmf_stats_from_json(j.get("nmf"))?,
+        secs: bits_from(j.get("secs"), "stage secs")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// TT driver snapshots.
+// ---------------------------------------------------------------------------
+
+/// State a resumed TT sweep re-enters with.
+pub struct TtResume {
+    pub stages_done: usize,
+    pub cores: Vec<Mat<f64>>,
+    pub stages: Vec<StageStats>,
+    pub layout: Layout,
+    pub my_chunk: TensorBlock,
+    pub r_prev: usize,
+    pub s_rest: usize,
+}
+
+/// Collective TT stage snapshot: every rank writes its remainder chunk,
+/// the chunk records are gathered, and rank 0 writes the cores plus the
+/// manifest commit. The trailing barrier guarantees no rank runs ahead of
+/// a durable manifest.
+#[allow(clippy::too_many_arguments)]
+pub fn save_tt_stage(
+    world: &mut Comm,
+    ctx: &CkptCtx,
+    stages_done: usize,
+    cores: &[Mat<f64>],
+    stages: &[StageStats],
+    layout: &Layout,
+    my_chunk: &TensorBlock,
+    r_prev: usize,
+    s_rest: usize,
+    dims: &[usize],
+    grid: Grid2d,
+) -> Result<()> {
+    let dir = &ctx.policy.dir;
+    let rank = world.rank();
+    let t0 = Instant::now();
+    let meta = (|| -> Result<ChunkMeta> {
+        std::fs::create_dir_all(dir)?;
+        let file = format!("tt.rem.s{stages_done}.r{rank}.chunk");
+        let bytes = write_block_file(&dir.join(&file), my_chunk)?;
+        Ok(ChunkMeta { file, bytes, len: my_chunk.len(), nnz: block_nnz(my_chunk) })
+    })();
+    let meta = match meta {
+        Ok(m) => m,
+        Err(e) => {
+            // Rank-divergent IO failure: peers are heading into the
+            // gather — abort so they fail fast instead of deadlocking
+            // (same discipline as dist_reshape's publish).
+            world.abort(&format!("checkpoint: chunk write failed on rank {rank}: {e}"));
+            return Err(e);
+        }
+    };
+    world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
+    world.breakdown.add_bytes(Cat::Io, meta.bytes);
+    let metas = world.all_gather_any(meta);
+    if rank == 0 {
+        let t1 = Instant::now();
+        let reuse_ok = dir_is_ours(dir, ctx.config_hash);
+        let committed = (|| -> Result<()> {
+            let mut core_entries = Vec::with_capacity(cores.len());
+            for (l, c) in cores.iter().enumerate() {
+                let file = format!("tt.core{l}.bin");
+                let bytes = write_replicated(&dir.join(&file), c.as_slice(), reuse_ok)?;
+                core_entries.push(Json::obj(vec![
+                    ("file", Json::Str(file)),
+                    ("rows", Json::Num(c.rows() as f64)),
+                    ("cols", Json::Num(c.cols() as f64)),
+                    ("bytes", Json::Num(bytes as f64)),
+                ]));
+            }
+            let mut fields = header_fields(ctx, "tt", world.size(), dims, grid);
+            fields.extend(vec![
+                ("stages_done", Json::Num(stages_done as f64)),
+                ("r_prev", Json::Num(r_prev as f64)),
+                ("s_rest", Json::Num(s_rest as f64)),
+                ("remainder_layout", layout_to_json(layout)),
+                (
+                    "remainder_chunks",
+                    Json::Arr(metas.iter().map(ChunkMeta::to_json).collect()),
+                ),
+                ("cores", Json::Arr(core_entries)),
+                ("stages", Json::Arr(stages.iter().map(tt_stage_to_json).collect())),
+            ]);
+            write_manifest(dir, &Json::obj(fields))
+        })();
+        world.breakdown.add_secs(Cat::Io, t1.elapsed().as_secs_f64());
+        if let Err(e) = committed {
+            world.abort(&format!("checkpoint: manifest commit failed: {e}"));
+            return Err(e);
+        }
+        // The new manifest is durable; earlier stages' remainder chunks
+        // are no longer referenced by anything.
+        prune_stale(dir, "tt.rem.s", &format!(".s{stages_done}.r"));
+        log::info!("checkpoint: committed {stages_done} TT stage(s) to {dir:?}");
+    }
+    world.barrier();
+    Ok(())
+}
+
+/// Load the TT resume state from `ctx.policy.dir`, or `Ok(None)` when no
+/// manifest exists. Validation (hash, topology, every file's byte size)
+/// runs identically on every rank before any file content is read, so a
+/// bad checkpoint is rejected symmetrically.
+pub fn load_tt(
+    ctx: &CkptCtx,
+    world_rank: usize,
+    world_size: usize,
+    dims: &[usize],
+    grid: Grid2d,
+) -> Result<Option<TtResume>> {
+    let dir = &ctx.policy.dir;
+    if !have_checkpoint(dir) {
+        return Ok(None);
+    }
+    let man = read_manifest(dir)?;
+    validate_header(&man, ctx, "tt", world_size, dims, grid)?;
+    let stages_done = req_usize(man.get("stages_done"), "stages_done")?;
+    let layout = layout_from_json(man.get("remainder_layout"))?;
+    let chunk_metas = man
+        .get("remainder_chunks")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing remainder_chunks"))?
+        .iter()
+        .map(ChunkMeta::from_json)
+        .collect::<Result<Vec<_>>>()?;
+    if chunk_metas.len() != world_size {
+        return Err(DnttError::config(format!(
+            "checkpoint manifest: {} remainder chunks for {world_size} ranks",
+            chunk_metas.len()
+        )));
+    }
+    for meta in &chunk_metas {
+        check_file(dir, meta)?;
+    }
+    let core_entries = man
+        .get("cores")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing cores"))?;
+    let mut core_shapes = Vec::with_capacity(core_entries.len());
+    for e in core_entries {
+        let rows = req_usize(e.get("rows"), "core rows")?;
+        let cols = req_usize(e.get("cols"), "core cols")?;
+        let file = e
+            .get("file")
+            .as_str()
+            .ok_or_else(|| DnttError::config("checkpoint manifest: core missing file"))?
+            .to_string();
+        check_file(
+            dir,
+            &ChunkMeta {
+                file: file.clone(),
+                bytes: (rows * cols * 8) as u64,
+                len: rows * cols,
+                nnz: None,
+            },
+        )?;
+        core_shapes.push((file, rows, cols));
+    }
+    let stages = man
+        .get("stages")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing stages"))?
+        .iter()
+        .map(tt_stage_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    // Content reads come after the symmetric validation phase; a failure
+    // here can be rank-divergent (one rank's file goes bad underneath
+    // us), so panic — poisoning the world — instead of returning an Err
+    // that would strand peers in their first collective. Same policy as
+    // the chunk store's spill reads.
+    let mut cores = Vec::with_capacity(core_shapes.len());
+    for (file, rows, cols) in core_shapes {
+        let data = read_f64_file(&dir.join(&file), rows * cols)
+            .unwrap_or_else(|e| panic!("checkpoint: core file {file} unreadable: {e}"));
+        cores.push(Mat::from_vec(rows, cols, data));
+    }
+    let meta = &chunk_metas[world_rank];
+    let my_chunk = read_block_file(&dir.join(&meta.file), meta)
+        .unwrap_or_else(|e| panic!("checkpoint: chunk file {} unreadable: {e}", meta.file));
+    Ok(Some(TtResume {
+        stages_done,
+        cores,
+        stages,
+        layout,
+        my_chunk,
+        r_prev: req_usize(man.get("r_prev"), "r_prev")?,
+        s_rest: req_usize(man.get("s_rest"), "s_rest")?,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// HT driver snapshots.
+// ---------------------------------------------------------------------------
+
+/// State a resumed HT tree walk re-enters with.
+pub struct HtResume {
+    pub nodes_done: usize,
+    pub payload: Vec<Option<HtNode<f64>>>,
+    pub pending: Vec<Option<(Layout, TensorBlock, usize)>>,
+    pub stages: Vec<HtStageStats>,
+}
+
+/// Collective HT node snapshot: the per-rank chunks of every pending child
+/// array, the resolved node payloads, and the manifest commit — same
+/// protocol as [`save_tt_stage`].
+#[allow(clippy::too_many_arguments)]
+pub fn save_ht_node(
+    world: &mut Comm,
+    ctx: &CkptCtx,
+    nodes_done: usize,
+    payload: &[Option<HtNode<f64>>],
+    pending: &[Option<(Layout, TensorBlock, usize)>],
+    stages: &[HtStageStats],
+    dims: &[usize],
+    grid: Grid2d,
+) -> Result<()> {
+    let dir = &ctx.policy.dir;
+    let rank = world.rank();
+    let t0 = Instant::now();
+    let my_metas = (|| -> Result<Vec<(usize, ChunkMeta)>> {
+        std::fs::create_dir_all(dir)?;
+        let mut out = Vec::new();
+        for (idx, entry) in pending.iter().enumerate() {
+            if let Some((_, data, _)) = entry {
+                let file = format!("ht.pend.n{idx}.s{nodes_done}.r{rank}.chunk");
+                let bytes = write_block_file(&dir.join(&file), data)?;
+                out.push((idx, ChunkMeta { file, bytes, len: data.len(), nnz: block_nnz(data) }));
+            }
+        }
+        Ok(out)
+    })();
+    let my_metas = match my_metas {
+        Ok(m) => m,
+        Err(e) => {
+            world.abort(&format!("checkpoint: chunk write failed on rank {rank}: {e}"));
+            return Err(e);
+        }
+    };
+    world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
+    world
+        .breakdown
+        .add_bytes(Cat::Io, my_metas.iter().map(|(_, m)| m.bytes).sum::<u64>());
+    let all_metas = world.all_gather_any(my_metas.clone());
+    if rank == 0 {
+        let t1 = Instant::now();
+        let reuse_ok = dir_is_ours(dir, ctx.config_hash);
+        let committed = (|| -> Result<()> {
+            let mut node_entries = Vec::new();
+            for (idx, p) in payload.iter().enumerate() {
+                if let Some(node) = p {
+                    let (kind, m) = match node {
+                        HtNode::Leaf(m) => ("leaf", m),
+                        HtNode::Transfer(m) => ("transfer", m),
+                    };
+                    let file = format!("ht.node{idx}.bin");
+                    let bytes = write_replicated(&dir.join(&file), m.as_slice(), reuse_ok)?;
+                    node_entries.push(Json::obj(vec![
+                        ("node", Json::Num(idx as f64)),
+                        ("kind", Json::Str(kind.into())),
+                        ("rows", Json::Num(m.rows() as f64)),
+                        ("cols", Json::Num(m.cols() as f64)),
+                        ("file", Json::Str(file)),
+                        ("bytes", Json::Num(bytes as f64)),
+                    ]));
+                }
+            }
+            // Every rank carries the same pending indices in the same
+            // order (SPMD), so position k of each rank's gathered vector
+            // is the same array.
+            let mut pending_entries = Vec::new();
+            for (k, (idx, _)) in my_metas.iter().enumerate() {
+                let (layout, _, rt) = pending[*idx].as_ref().expect("pending entry present");
+                let chunks: Vec<Json> =
+                    all_metas.iter().map(|v| v[k].1.to_json()).collect();
+                pending_entries.push(Json::obj(vec![
+                    ("node", Json::Num(*idx as f64)),
+                    ("rt", Json::Num(*rt as f64)),
+                    ("layout", layout_to_json(layout)),
+                    ("chunks", Json::Arr(chunks)),
+                ]));
+            }
+            let mut fields = header_fields(ctx, "ht", world.size(), dims, grid);
+            fields.extend(vec![
+                ("nodes_done", Json::Num(nodes_done as f64)),
+                ("payload", Json::Arr(node_entries)),
+                ("pending", Json::Arr(pending_entries)),
+                ("stages", Json::Arr(stages.iter().map(ht_stage_to_json).collect())),
+            ]);
+            write_manifest(dir, &Json::obj(fields))
+        })();
+        world.breakdown.add_secs(Cat::Io, t1.elapsed().as_secs_f64());
+        if let Err(e) = committed {
+            world.abort(&format!("checkpoint: manifest commit failed: {e}"));
+            return Err(e);
+        }
+        // The new manifest is durable; pending-chunk files from earlier
+        // node boundaries are no longer referenced by anything.
+        prune_stale(dir, "ht.pend.", &format!(".s{nodes_done}.r"));
+        log::info!("checkpoint: committed {nodes_done} HT node(s) to {dir:?}");
+    }
+    world.barrier();
+    Ok(())
+}
+
+/// Load the HT resume state, or `Ok(None)` when no manifest exists.
+/// `tree_len` sizes the payload/pending vectors (the caller's
+/// [`crate::tensor::DimTree`]).
+pub fn load_ht(
+    ctx: &CkptCtx,
+    world_rank: usize,
+    world_size: usize,
+    dims: &[usize],
+    grid: Grid2d,
+    tree_len: usize,
+) -> Result<Option<HtResume>> {
+    let dir = &ctx.policy.dir;
+    if !have_checkpoint(dir) {
+        return Ok(None);
+    }
+    let man = read_manifest(dir)?;
+    validate_header(&man, ctx, "ht", world_size, dims, grid)?;
+    let nodes_done = req_usize(man.get("nodes_done"), "nodes_done")?;
+    if nodes_done > tree_len {
+        return Err(DnttError::config("checkpoint manifest: nodes_done exceeds the tree"));
+    }
+
+    // Symmetric validation of every referenced file first.
+    let node_entries = man
+        .get("payload")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing payload"))?;
+    for e in node_entries {
+        let rows = req_usize(e.get("rows"), "node rows")?;
+        let cols = req_usize(e.get("cols"), "node cols")?;
+        let file = e
+            .get("file")
+            .as_str()
+            .ok_or_else(|| DnttError::config("checkpoint manifest: node missing file"))?;
+        check_file(
+            dir,
+            &ChunkMeta {
+                file: file.to_string(),
+                bytes: (rows * cols * 8) as u64,
+                len: rows * cols,
+                nnz: None,
+            },
+        )?;
+    }
+    let pending_entries = man
+        .get("pending")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing pending"))?;
+    let mut pending_parsed = Vec::new();
+    for e in pending_entries {
+        let idx = req_usize(e.get("node"), "pending node")?;
+        if idx >= tree_len {
+            return Err(DnttError::config("checkpoint manifest: pending node out of range"));
+        }
+        let rt = req_usize(e.get("rt"), "pending rt")?;
+        let layout = layout_from_json(e.get("layout"))?;
+        let chunks = e
+            .get("chunks")
+            .as_arr()
+            .ok_or_else(|| DnttError::config("checkpoint manifest: pending missing chunks"))?
+            .iter()
+            .map(ChunkMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if chunks.len() != world_size {
+            return Err(DnttError::config(format!(
+                "checkpoint manifest: pending node {idx} has {} chunks for {world_size} ranks",
+                chunks.len()
+            )));
+        }
+        for meta in &chunks {
+            check_file(dir, meta)?;
+        }
+        pending_parsed.push((idx, rt, layout, chunks));
+    }
+
+    // Rehydrate. Content reads come after the symmetric validation
+    // phase; a failure here can be rank-divergent, so panic (poisoning
+    // the world) instead of stranding peers — same policy as `load_tt`.
+    let mut payload: Vec<Option<HtNode<f64>>> = (0..tree_len).map(|_| None).collect();
+    for e in node_entries {
+        let idx = req_usize(e.get("node"), "node idx")?;
+        if idx >= tree_len {
+            return Err(DnttError::config("checkpoint manifest: payload node out of range"));
+        }
+        let rows = req_usize(e.get("rows"), "node rows")?;
+        let cols = req_usize(e.get("cols"), "node cols")?;
+        let file = e.get("file").as_str().unwrap();
+        let data = read_f64_file(&dir.join(file), rows * cols)
+            .unwrap_or_else(|e| panic!("checkpoint: node file {file} unreadable: {e}"));
+        let m = Mat::from_vec(rows, cols, data);
+        payload[idx] = Some(match e.get("kind").as_str() {
+            Some("leaf") => HtNode::Leaf(m),
+            Some("transfer") => HtNode::Transfer(m),
+            _ => return Err(DnttError::config("checkpoint manifest: bad node kind")),
+        });
+    }
+    let mut pending: Vec<Option<(Layout, TensorBlock, usize)>> =
+        (0..tree_len).map(|_| None).collect();
+    for (idx, rt, layout, chunks) in pending_parsed {
+        let meta = &chunks[world_rank];
+        let block = read_block_file(&dir.join(&meta.file), meta)
+            .unwrap_or_else(|e| panic!("checkpoint: chunk file {} unreadable: {e}", meta.file));
+        pending[idx] = Some((layout, block, rt));
+    }
+    let stages = man
+        .get("stages")
+        .as_arr()
+        .ok_or_else(|| DnttError::config("checkpoint manifest: missing stages"))?
+        .iter()
+        .map(ht_stage_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Some(HtResume { nodes_done, payload, pending, stages }))
+}
+
+// ---------------------------------------------------------------------------
+// Iteration-granular in-flight snapshots.
+// ---------------------------------------------------------------------------
+
+/// The [`crate::nmf::dist::IterObserver`] the drivers install when
+/// [`CheckpointPolicy::every_iters`] > 0: every N accepted iterations it
+/// overwrites `inflight.<tag>.r<rank>.{w,h}.chunk` with this rank's
+/// current factors (raw `f64` LE). IO failures are swallowed with a
+/// warning — an error from inside the iteration loop would be
+/// rank-divergent and strand peers mid-collective.
+pub struct IterCkpt {
+    dir: PathBuf,
+    every: usize,
+    rank: usize,
+    tag: String,
+}
+
+impl crate::nmf::dist::IterObserver for IterCkpt {
+    fn on_iter(&mut self, iter: usize, w: &Mat<f64>, ht: &Mat<f64>) {
+        if iter == 0 || iter % self.every != 0 {
+            return;
+        }
+        let write = (|| -> Result<()> {
+            std::fs::create_dir_all(&self.dir)?;
+            write_f64_file(
+                &self.dir.join(format!("inflight.{}.r{}.w.chunk", self.tag, self.rank)),
+                w.as_slice(),
+            )?;
+            write_f64_file(
+                &self.dir.join(format!("inflight.{}.r{}.h.chunk", self.tag, self.rank)),
+                ht.as_slice(),
+            )?;
+            Ok(())
+        })();
+        if let Err(e) = write {
+            log::warn!("in-flight NMF checkpoint failed (continuing without it): {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::chunkstore::SpillMode;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dntt_ckpt_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn layout_json_roundtrips_all_variants() {
+        let layouts = vec![
+            Layout::TensorGrid { dims: vec![4, 6, 2], grid: vec![2, 1, 2] },
+            Layout::MatGrid { m: 5, n: 7, pr: 2, pc: 3 },
+            Layout::HtGrid { r: 3, n: 9, pr: 2, pc: 2 },
+            Layout::WGrid { m: 8, r: 2, pr: 2, pc: 2 },
+            Layout::HtPermuted { r: 2, n2: 3, rt: 4, pr: 1, pc: 2 },
+        ];
+        for l in layouts {
+            let j = layout_to_json(&l);
+            // Survive a full text round trip too (what the manifest does).
+            let j2 = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(layout_from_json(&j2).unwrap(), l);
+        }
+        assert!(layout_from_json(&Json::obj(vec![("kind", Json::Str("xx".into()))])).is_err());
+        // Malformed extents are rejected, not silently clamped.
+        let bad = Json::obj(vec![
+            ("kind", Json::Str("tensor_grid".into())),
+            ("dims", Json::Arr(vec![Json::Num(4.0), Json::Str("oops".into())])),
+            ("grid", Json::arr_usize(&[1, 1])),
+        ]);
+        let err = layout_from_json(&bad).unwrap_err();
+        assert!(err.to_string().contains("non-integer"), "{err}");
+    }
+
+    #[test]
+    fn block_files_roundtrip_both_representations() {
+        let dir = tmp("blocks");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dense = TensorBlock::Dense(vec![0.5, -1.25, 0.0, 3.0]);
+        let db = write_block_file(&dir.join("d.chunk"), &dense).unwrap();
+        assert_eq!(db, 32);
+        let dm = ChunkMeta { file: "d.chunk".into(), bytes: db, len: 4, nnz: None };
+        match read_block_file(&dir.join("d.chunk"), &dm).unwrap() {
+            TensorBlock::Dense(v) => assert_eq!(v, vec![0.5, -1.25, 0.0, 3.0]),
+            _ => panic!("dense chunk came back sparse"),
+        }
+        let sp = TensorBlock::Sparse(SparseChunk::new(6, vec![1, 4], vec![7.0, 8.5]).unwrap());
+        let sb = write_block_file(&dir.join("s.chunk"), &sp).unwrap();
+        assert_eq!(sb, 8 * 5);
+        let sm = ChunkMeta { file: "s.chunk".into(), bytes: sb, len: 6, nnz: Some(2) };
+        match read_block_file(&dir.join("s.chunk"), &sm).unwrap() {
+            TensorBlock::Sparse(s) => {
+                assert_eq!((s.len(), s.idx(), s.vals()), (6, &[1usize, 4][..], &[7.0, 8.5][..]))
+            }
+            _ => panic!("sparse chunk came back dense"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_codec_preserves_nan_and_precision() {
+        for v in [f64::NAN, 0.1 + 0.2, -0.0, f64::INFINITY, 1.0 / 3.0] {
+            let back = bits_from(&bits_json(v), "t").unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn array_snapshot_roundtrips_mixed_chunks() {
+        let dir = tmp("array");
+        let l = Layout::MatGrid { m: 4, n: 3, pr: 2, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        store.publish("x", &l, 0, (0..6).map(|k| k as f64).collect()).unwrap();
+        store
+            .publish_sparse("x", &l, 1, SparseChunk::new(6, vec![2, 5], vec![9.0, -3.0]).unwrap())
+            .unwrap();
+        let view = store.view("x").unwrap();
+        let snap = snapshot_array(&dir, "x", &view).unwrap();
+        // Byte accounting matches the spill formats.
+        assert_eq!(snap.chunks[0].bytes, 48);
+        assert_eq!(snap.chunks[1].bytes, 8 * 5);
+        // JSON round trip of the snapshot record.
+        let snap2 = ArraySnapshot::from_json(&Json::parse(&snap.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(snap2, snap);
+        let store2 = SharedStore::new(SpillMode::Memory);
+        restore_array(&dir, &snap2, &store2, "y").unwrap();
+        let view2 = store2.view("y").unwrap();
+        assert_eq!(view2.to_dense(), view.to_dense());
+        assert_eq!(view2.has_sparse(), view.has_sparse());
+        assert_eq!(view2.nnz_estimate(), view.nnz_estimate());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_rejects_truncated_files() {
+        let dir = tmp("trunc");
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        store.publish("x", &l, 0, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let snap = snapshot_array(&dir, "x", &store.view("x").unwrap()).unwrap();
+        // Truncate the file behind the manifest's back.
+        let path = dir.join(&snap.chunks[0].file);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        let store2 = SharedStore::new(SpillMode::Memory);
+        let err = restore_array(&dir, &snap, &store2, "y").unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_requires_format_field() {
+        let dir = tmp("fmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(manifest_path(&dir), "{\"format\": \"dntt-ckpt-v9\"}").unwrap();
+        assert!(read_manifest(&dir).unwrap_err().to_string().contains("dntt-ckpt-v9"));
+        std::fs::write(manifest_path(&dir), "{}").unwrap();
+        assert!(read_manifest(&dir).is_err());
+        std::fs::write(manifest_path(&dir), "not json").unwrap();
+        assert!(read_manifest(&dir).is_err());
+        clear(&dir);
+        assert!(!have_checkpoint(&dir));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_json_roundtrip_is_bit_exact() {
+        let s = StageStats {
+            mode: 1,
+            m: 12,
+            n: 30,
+            rank: 3,
+            svd_eps: f64::NAN,
+            nmf: NmfStats {
+                iters: 7,
+                objective: 0.1 + 0.2,
+                rel_err: 1.0 / 3.0,
+                restarts: 2,
+                history: vec![1.5, 0.25 + 1e-17, 0.125],
+            },
+        };
+        let j = Json::parse(&tt_stage_to_json(&s).to_string()).unwrap();
+        let back = tt_stage_from_json(&j).unwrap();
+        assert_eq!(back.svd_eps.to_bits(), s.svd_eps.to_bits());
+        assert_eq!(back.nmf.objective.to_bits(), s.nmf.objective.to_bits());
+        assert_eq!(back.nmf.history.len(), 3);
+        for (a, b) in back.nmf.history.iter().zip(&s.nmf.history) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

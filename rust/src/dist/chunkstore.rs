@@ -315,17 +315,35 @@ struct Entry {
 pub struct SharedStore {
     spill: SpillMode,
     entries: Mutex<HashMap<String, Entry>>,
+    /// When set, drop-time cleanup leaves spill files on disk.
+    keep_spill: std::sync::atomic::AtomicBool,
 }
 
 impl SharedStore {
     /// Create a store (see [`SpillMode`] for where chunks live).
     pub fn new(spill: SpillMode) -> Arc<SharedStore> {
-        Arc::new(SharedStore { spill, entries: Mutex::new(HashMap::new()) })
+        Arc::new(SharedStore {
+            spill,
+            entries: Mutex::new(HashMap::new()),
+            keep_spill: std::sync::atomic::AtomicBool::new(false),
+        })
     }
 
     /// The store's spill configuration.
     pub fn spill_mode(&self) -> &SpillMode {
         &self.spill
+    }
+
+    /// Escape hatch for drop-time cleanup: when `true`, spill files of
+    /// arrays still stored at drop are left on disk (for post-mortem
+    /// inspection of an out-of-core run).
+    pub fn set_keep_spill(&self, keep: bool) {
+        self.keep_spill.store(keep, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Current [`SharedStore::set_keep_spill`] setting.
+    pub fn keep_spill(&self) -> bool {
+        self.keep_spill.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Validate chunk index, chunk length and (pre-spill) layout
@@ -522,6 +540,29 @@ impl SharedStore {
     }
 }
 
+impl Drop for SharedStore {
+    /// Delete the spill files of every array still stored — a crashed or
+    /// early-erroring job must not leave `.chunk` litter in the spill
+    /// directory (the happy path removes arrays as it consumes them, so
+    /// this is usually a no-op). [`SharedStore::set_keep_spill`] opts out.
+    fn drop(&mut self) {
+        if self.keep_spill() {
+            return;
+        }
+        let entries = self.entries.get_mut().unwrap_or_else(|e| e.into_inner());
+        for entry in entries.values() {
+            for chunk in entry.chunks.iter().flatten() {
+                match chunk {
+                    ChunkData::Disk(path) | ChunkData::DiskSparse { path, .. } => {
+                        let _ = std::fs::remove_file(path);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
 enum ViewSlot {
     Mem(Arc<Vec<f64>>),
     Disk { path: PathBuf, cache: RefCell<Option<Vec<f64>>> },
@@ -650,6 +691,16 @@ impl StoreView {
             });
             done += take;
         }
+    }
+
+    /// Clone one chunk under its stored representation (what the
+    /// checkpoint subsystem snapshots — see
+    /// [`crate::dist::checkpoint::snapshot_array`]).
+    pub fn chunk_block(&self, chunk: usize) -> TensorBlock {
+        self.with_loaded(chunk, |data| match data {
+            Loaded::Dense(d) => TensorBlock::Dense(d.to_vec()),
+            Loaded::Sparse(s) => TensorBlock::Sparse(s.clone()),
+        })
     }
 
     /// Assemble the whole logical array in row-major order. Intended for

@@ -129,6 +129,10 @@ impl Comm {
     {
         assert!(p > 0, "Comm::run needs at least one rank");
         let shared = Arc::new(WorldState::new());
+        // Snapshot the caller thread's fault plan (always `None` without
+        // the `fault-inject` feature) so injected deaths are scoped to
+        // worlds started from the arming thread.
+        let fault_plan = crate::dist::faults::armed();
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..p)
                 .map(|rank| {
@@ -143,8 +147,11 @@ impl Comm {
                         breakdown: Breakdown::new(),
                     };
                     let ws = Arc::clone(&shared);
+                    let plan = fault_plan.clone();
                     scope.spawn(move || {
+                        crate::dist::faults::enter_rank(plan, rank);
                         let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
+                        crate::dist::faults::exit_rank();
                         if out.is_err() {
                             ws.poison();
                         }
@@ -209,6 +216,10 @@ impl Comm {
     /// `value`, wait for all members, return everyone's contribution in
     /// rank order. Identical result vector on every member.
     fn exchange<T: Clone + Send + 'static>(&mut self, value: T) -> Vec<T> {
+        // Deterministic fault injection fires here, before any shared
+        // state is touched — an empty inline no-op in default builds
+        // (see `dist::faults`).
+        crate::dist::faults::on_collective();
         let key: SlotKey = (self.id, self.seq);
         self.seq += 1;
         let mut slots = self.shared.slots.lock().unwrap();

@@ -1,0 +1,385 @@
+//! Deterministic fault injection at collective boundaries.
+//!
+//! Exascale runs lose ranks routinely; testing the recovery path requires
+//! making "rank 3 dies during stage 2's 7th collective" a *deterministic,
+//! replayable* event. A [`FaultPlan`] schedules rank deaths keyed by
+//! `(world rank, per-rank collective count)`: every [`crate::dist::Comm`]
+//! collective on a rank increments that rank's op counter, and when a
+//! scheduled `(rank, op)` pair is reached the rank panics with a
+//! [`RankLostPanic`] payload. The existing poison-on-panic machinery then
+//! unwinds the whole world, and the coordinator surfaces the event as the
+//! typed [`crate::error::DnttError::RankLost`] — resumable under
+//! `--resume auto` from the last durable checkpoint
+//! (see [`crate::dist::checkpoint`]).
+//!
+//! # Zero-cost default
+//!
+//! All injection plumbing is compiled **only** under the `fault-inject`
+//! cargo feature. In a default build the `on_collective` hook is an empty
+//! `#[inline(always)]` function and [`arm`] / [`armed`] are no-ops, so
+//! the `Comm` hot path carries no fault-injection code whatsoever —
+//! asserted by the default-features test in `tests/checkpoint_recovery.rs`
+//! via [`FAULT_INJECT_ENABLED`].
+//!
+//! # Determinism contract
+//!
+//! Collectives execute in SPMD program order, so a rank's op counter is a
+//! pure function of the job configuration: the same plan against the same
+//! job kills the same collective every time. Counters are **per attempt**
+//! (they reset when a new world starts), while each [`Kill`] fires at most
+//! once per plan — so a relaunched world replays past the original death
+//! site instead of dying there forever.
+//!
+//! # Scoping
+//!
+//! [`arm`] installs the plan in a *caller-thread-local* slot; only worlds
+//! started from that thread (i.e. `Comm::run` called on it) observe the
+//! plan. Tests running concurrently on other threads are unaffected.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// `true` when the crate was built with `--features fault-inject`.
+pub const FAULT_INJECT_ENABLED: bool = cfg!(feature = "fault-inject");
+
+/// One scheduled rank death: world rank `rank` panics immediately before
+/// entering its `op`-th collective (1-based, counted per rank across the
+/// world communicator and all sub-communicators alike).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kill {
+    pub rank: usize,
+    pub op: u64,
+}
+
+/// Panic payload of an injected rank death (what distinguishes a
+/// scheduled fault from a genuine bug when the coordinator inspects a
+/// poisoned world).
+#[derive(Clone, Copy, Debug)]
+pub struct RankLostPanic {
+    pub rank: usize,
+    pub op: u64,
+}
+
+/// A deterministic schedule of rank deaths plus per-rank op accounting.
+///
+/// Construct with [`FaultPlan::new`] / [`FaultPlan::kill_at`] /
+/// [`FaultPlan::seeded`], install with [`arm`], and inspect afterwards
+/// with [`FaultPlan::fired_count`] / [`FaultPlan::last_fired`] /
+/// [`FaultPlan::ops_seen`]. An empty plan is a pure op counter — useful
+/// for sizing a kill-at-every-collective sweep.
+pub struct FaultPlan {
+    kills: Vec<Kill>,
+    /// 0 = pending, 1 = fired; parallel to `kills`. Only consulted by
+    /// the feature-gated `try_fire` (dead in default builds by design).
+    #[cfg_attr(not(feature = "fault-inject"), allow(dead_code))]
+    fired: Vec<AtomicU64>,
+    fired_count: AtomicU64,
+    /// Index+1 of the most recently fired kill (0 = none).
+    last_fired: AtomicU64,
+    /// Max collective count observed per rank (merged at rank exit).
+    ops_seen: Mutex<Vec<u64>>,
+}
+
+impl FaultPlan {
+    /// A plan with the given kill schedule.
+    pub fn new(kills: Vec<Kill>) -> Arc<FaultPlan> {
+        let fired = kills.iter().map(|_| AtomicU64::new(0)).collect();
+        Arc::new(FaultPlan {
+            kills,
+            fired,
+            fired_count: AtomicU64::new(0),
+            last_fired: AtomicU64::new(0),
+            ops_seen: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// A single scheduled death.
+    pub fn kill_at(rank: usize, op: u64) -> Arc<FaultPlan> {
+        FaultPlan::new(vec![Kill { rank, op }])
+    }
+
+    /// An empty plan (no deaths): arms pure op counting.
+    pub fn count_only() -> Arc<FaultPlan> {
+        FaultPlan::new(Vec::new())
+    }
+
+    /// One seeded death: the victim rank and op index are a pure function
+    /// of `(seed, world, max_op)`, so a failure report is replayable from
+    /// the seed alone.
+    pub fn seeded(seed: u64, world: usize, max_op: u64) -> Arc<FaultPlan> {
+        assert!(world > 0 && max_op > 0, "seeded fault plan needs a non-empty domain");
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xFAu64.wrapping_shl(56));
+        let rank = rng.below(world);
+        let op = 1 + (rng.next_u64() % max_op);
+        FaultPlan::kill_at(rank, op)
+    }
+
+    /// Parse a CLI plan: `"rank:op[,rank:op…]"` or `"seed:<u64>"` (the
+    /// seeded form needs the world size to pick a victim).
+    pub fn from_cli(s: &str, world: usize) -> Result<Arc<FaultPlan>, String> {
+        if let Some(seed) = s.strip_prefix("seed:") {
+            let seed: u64 = seed.trim().parse().map_err(|_| format!("bad fault seed '{seed}'"))?;
+            return Ok(FaultPlan::seeded(seed, world, 10_000));
+        }
+        let mut kills = Vec::new();
+        for part in s.split(',') {
+            let (r, o) = part
+                .split_once(':')
+                .ok_or_else(|| format!("bad fault spec '{part}' (want rank:op)"))?;
+            let rank: usize =
+                r.trim().parse().map_err(|_| format!("bad fault rank '{r}'"))?;
+            let op: u64 = o.trim().parse().map_err(|_| format!("bad fault op '{o}'"))?;
+            if rank >= world {
+                return Err(format!("fault rank {rank} out of range for {world} ranks"));
+            }
+            if op == 0 {
+                return Err("fault op is 1-based; 0 never fires".into());
+            }
+            kills.push(Kill { rank, op });
+        }
+        Ok(FaultPlan::new(kills))
+    }
+
+    /// The scheduled kills.
+    pub fn kills(&self) -> &[Kill] {
+        &self.kills
+    }
+
+    /// How many scheduled kills have fired so far.
+    pub fn fired_count(&self) -> u64 {
+        self.fired_count.load(Ordering::SeqCst)
+    }
+
+    /// The most recently fired kill, if any.
+    pub fn last_fired(&self) -> Option<Kill> {
+        match self.last_fired.load(Ordering::SeqCst) {
+            0 => None,
+            k => Some(self.kills[(k - 1) as usize]),
+        }
+    }
+
+    /// Max collective count observed on `rank` across all worlds this
+    /// plan was armed for (0 if the rank never ran).
+    pub fn ops_seen(&self, rank: usize) -> u64 {
+        let seen = self.ops_seen.lock().unwrap();
+        seen.get(rank).copied().unwrap_or(0)
+    }
+
+    /// Record a rank's final op count (max-merged; called at rank exit).
+    #[cfg(feature = "fault-inject")]
+    fn record_ops(&self, rank: usize, ops: u64) {
+        let mut seen = self.ops_seen.lock().unwrap();
+        if seen.len() <= rank {
+            seen.resize(rank + 1, 0);
+        }
+        seen[rank] = seen[rank].max(ops);
+    }
+
+    /// Fire the first pending kill matching `(rank, op)`, if any.
+    /// Returns the kill to panic with (the caller does the panicking so
+    /// the unwind starts outside the plan's own locks).
+    #[cfg(feature = "fault-inject")]
+    fn try_fire(&self, rank: usize, op: u64) -> Option<Kill> {
+        for (k, kill) in self.kills.iter().enumerate() {
+            if kill.rank == rank
+                && kill.op == op
+                && self.fired[k]
+                    .compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.fired_count.fetch_add(1, Ordering::SeqCst);
+                self.last_fired.store((k + 1) as u64, Ordering::SeqCst);
+                return Some(*kill);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature-gated plumbing. Under the default build every function below is
+// an inline no-op (and `armed` returns `None`), so the communicator hot
+// path compiles to exactly the seed code.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "fault-inject")]
+mod plumbing {
+    use super::{FaultPlan, RankLostPanic};
+    use std::cell::RefCell;
+    use std::sync::Arc;
+
+    struct RankState {
+        plan: Arc<FaultPlan>,
+        rank: usize,
+        ops: u64,
+    }
+
+    thread_local! {
+        /// Coordinator-thread slot: the plan worlds started from this
+        /// thread will observe.
+        static ARMED: RefCell<Option<Arc<FaultPlan>>> = const { RefCell::new(None) };
+        /// Rank-thread slot: this rank's plan + op counter.
+        static RANK: RefCell<Option<RankState>> = const { RefCell::new(None) };
+    }
+
+    pub fn arm(plan: &Arc<FaultPlan>) {
+        ARMED.with(|a| *a.borrow_mut() = Some(Arc::clone(plan)));
+    }
+
+    pub fn disarm() {
+        ARMED.with(|a| *a.borrow_mut() = None);
+    }
+
+    pub fn armed() -> Option<Arc<FaultPlan>> {
+        ARMED.with(|a| a.borrow().clone())
+    }
+
+    pub fn enter_rank(plan: Option<Arc<FaultPlan>>, rank: usize) {
+        RANK.with(|r| {
+            *r.borrow_mut() = plan.map(|plan| RankState { plan, rank, ops: 0 });
+        });
+    }
+
+    pub fn exit_rank() {
+        RANK.with(|r| {
+            if let Some(st) = r.borrow_mut().take() {
+                st.plan.record_ops(st.rank, st.ops);
+            }
+        });
+    }
+
+    pub fn on_collective() {
+        let fire = RANK.with(|r| {
+            let mut r = r.borrow_mut();
+            let st = r.as_mut()?;
+            st.ops += 1;
+            st.plan.try_fire(st.rank, st.ops)
+        });
+        if let Some(kill) = fire {
+            log::warn!(
+                "fault injection: rank {} dies at collective #{}",
+                kill.rank,
+                kill.op
+            );
+            std::panic::panic_any(RankLostPanic { rank: kill.rank, op: kill.op });
+        }
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+mod plumbing {
+    use super::FaultPlan;
+    use std::sync::Arc;
+
+    /// No-op without the `fault-inject` feature (the plan is never
+    /// consulted, so a would-fire kill cannot fire).
+    pub fn arm(_plan: &Arc<FaultPlan>) {}
+
+    pub fn disarm() {}
+
+    pub fn armed() -> Option<Arc<FaultPlan>> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn enter_rank(_plan: Option<Arc<FaultPlan>>, _rank: usize) {}
+
+    #[inline(always)]
+    pub fn exit_rank() {}
+
+    /// The `Comm` hot-path hook: literally empty in default builds.
+    #[inline(always)]
+    pub fn on_collective() {}
+}
+
+pub use plumbing::{arm, armed, disarm};
+pub(crate) use plumbing::{enter_rank, exit_rank, on_collective};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plan_is_reproducible_and_in_range() {
+        let a = FaultPlan::seeded(9, 4, 50);
+        let b = FaultPlan::seeded(9, 4, 50);
+        assert_eq!(a.kills(), b.kills());
+        let k = a.kills()[0];
+        assert!(k.rank < 4);
+        assert!((1..=50).contains(&k.op));
+        // Seeds spread over the domain: some other seed picks another site.
+        assert!(
+            (10..30).any(|s| FaultPlan::seeded(s, 4, 50).kills() != a.kills()),
+            "seeded plans are not all identical"
+        );
+    }
+
+    #[test]
+    fn cli_parse_accepts_both_forms() {
+        let p = FaultPlan::from_cli("1:7,0:3", 4).unwrap();
+        assert_eq!(
+            p.kills(),
+            &[Kill { rank: 1, op: 7 }, Kill { rank: 0, op: 3 }]
+        );
+        assert!(FaultPlan::from_cli("seed:42", 4).is_ok());
+        assert!(FaultPlan::from_cli("9:1", 4).is_err()); // rank out of range
+        assert!(FaultPlan::from_cli("0:0", 4).is_err()); // op is 1-based
+        assert!(FaultPlan::from_cli("nonsense", 4).is_err());
+    }
+
+    #[test]
+    fn fresh_plan_reports_nothing_fired() {
+        let p = FaultPlan::kill_at(2, 5);
+        assert_eq!(p.fired_count(), 0);
+        assert!(p.last_fired().is_none());
+        assert_eq!(p.ops_seen(2), 0);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn kill_fires_exactly_once_and_counts_ops() {
+        use crate::dist::Comm;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let plan = FaultPlan::kill_at(1, 2);
+        arm(&plan);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            Comm::run(2, |mut c| {
+                c.barrier();
+                c.barrier();
+                c.barrier();
+            })
+        }));
+        disarm();
+        assert!(result.is_err(), "injected death must unwind the world");
+        assert_eq!(plan.fired_count(), 1);
+        assert_eq!(plan.last_fired(), Some(Kill { rank: 1, op: 2 }));
+        // Rank 0 survived to its poison check; its op count was recorded.
+        assert!(plan.ops_seen(0) >= 1);
+        // A second world with the same (consumed) plan runs clean.
+        arm(&plan);
+        let outs = Comm::run(2, |mut c| {
+            c.barrier();
+            c.barrier();
+            c.barrier();
+            c.rank()
+        });
+        disarm();
+        assert_eq!(outs, vec![0, 1]);
+        assert_eq!(plan.fired_count(), 1, "kills fire at most once");
+        assert_eq!(plan.ops_seen(1), 3);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn unarmed_worlds_never_fire() {
+        use crate::dist::Comm;
+        let plan = FaultPlan::kill_at(0, 1);
+        // Not armed: the plan is never consulted.
+        let outs = Comm::run(2, |mut c| {
+            c.barrier();
+            c.rank()
+        });
+        assert_eq!(outs, vec![0, 1]);
+        assert_eq!(plan.fired_count(), 0);
+    }
+}

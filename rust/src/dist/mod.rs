@@ -12,20 +12,28 @@
 //!   partition both are built from;
 //! * [`chunkstore`] — [`SharedStore`] (+ [`SpillMode`] disk spill) and
 //!   [`dist_reshape`], the paper's Algorithm 1;
+//! * [`checkpoint`] — the `dntt-ckpt-v1` snapshot/resume subsystem
+//!   ([`CheckpointPolicy`], stage snapshots, manifest validation);
+//! * [`faults`] — deterministic fault injection at collective boundaries
+//!   (compiled under the `fault-inject` cargo feature; a no-op otherwise);
 //! * [`CostModel`] — projects thread-rank measurements onto a cluster.
 //!
 //! The full contract (collective semantics, determinism guarantees,
-//! layout definitions, spill behavior) is documented in `rust/DESIGN.md`
-//! and in the submodules' rustdoc.
+//! layout definitions, spill behavior, checkpoint format) is documented
+//! in `rust/DESIGN.md` and in the submodules' rustdoc.
 
+pub mod checkpoint;
 pub mod chunkstore;
 pub mod comm;
 pub mod costmodel;
+pub mod faults;
 pub mod topology;
 
+pub use checkpoint::{CheckpointPolicy, CkptCtx};
 pub use chunkstore::{
     dist_reshape, dist_reshape_x, Layout, SharedStore, SpillMode, StoreView, TensorBlock,
 };
 pub use comm::Comm;
 pub use costmodel::CostModel;
+pub use faults::FaultPlan;
 pub use topology::{BlockDim, Grid2d, ProcGrid};

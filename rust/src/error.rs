@@ -15,6 +15,15 @@ pub enum DnttError {
     Config(String),
     /// Communicator / collective misuse.
     Comm(String),
+    /// A rank died mid-collective (detected via the poison machinery;
+    /// deterministic under `dist::faults` injection). The job may be
+    /// resumable from its last durable checkpoint (`--resume auto`).
+    RankLost {
+        /// World rank that died.
+        rank: usize,
+        /// 1-based collective count on that rank at the time of death.
+        op: u64,
+    },
     /// AOT artifact problems (missing manifest entries, bad files).
     Artifact(String),
     /// Underlying I/O failure.
@@ -31,6 +40,9 @@ impl fmt::Display for DnttError {
             DnttError::Shape(m) => write!(f, "shape error: {m}"),
             DnttError::Config(m) => write!(f, "config error: {m}"),
             DnttError::Comm(m) => write!(f, "communicator error: {m}"),
+            DnttError::RankLost { rank, op } => {
+                write!(f, "rank lost: rank {rank} died at collective #{op}")
+            }
             DnttError::Artifact(m) => write!(f, "artifact error: {m}"),
             DnttError::Io(e) => write!(f, "io error: {e}"),
             DnttError::Xla(m) => write!(f, "xla error: {m}"),
@@ -82,6 +94,10 @@ mod tests {
         assert_eq!(DnttError::shape("bad").to_string(), "shape error: bad");
         assert_eq!(DnttError::config("bad").to_string(), "config error: bad");
         assert_eq!(DnttError::Comm("x".into()).to_string(), "communicator error: x");
+        assert_eq!(
+            DnttError::RankLost { rank: 3, op: 7 }.to_string(),
+            "rank lost: rank 3 died at collective #7"
+        );
         assert_eq!(DnttError::Other("plain".into()).to_string(), "plain");
     }
 

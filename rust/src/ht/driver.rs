@@ -20,12 +20,13 @@
 //! records and the same critical-path cost breakdown the TT driver
 //! reports.
 
+use crate::dist::checkpoint::{self, CkptCtx};
 use crate::dist::{
     dist_reshape, dist_reshape_x, Comm, Grid2d, Layout, ProcGrid, SharedStore, TensorBlock,
 };
 use crate::error::{DnttError, Result};
-use crate::linalg::Mat;
-use crate::nmf::{dist_nmf_pruned_ws, dist_nmf_pruned_x_ws, NmfConfig, NmfStats, NmfWorkspace};
+use crate::linalg::{DenseOrSparse, Mat};
+use crate::nmf::{dist_nmf_pruned_x_obs_ws, IterObserver, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::ht::{DimTree, HtNode, HtTensor};
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -131,6 +132,10 @@ fn gather_full(
 ///   `Layout::TensorGrid { dims, grid: proc_grid.dims() }`.
 /// * `grid` — the 2-D NMF grid (must satisfy `grid.size() == world.size()`
 ///   and be the collapse of `proc_grid`).
+/// * `ckpt` — optional checkpoint context
+///   ([`crate::dist::checkpoint::CkptCtx`]): snapshot the tree-walk state
+///   after every N nodes, and resume (skipping resolved nodes) when a
+///   valid `dntt-ckpt-v1` manifest exists.
 #[allow(clippy::too_many_arguments)]
 pub fn dist_nht(
     world: &mut Comm,
@@ -143,6 +148,7 @@ pub fn dist_nht(
     my_block: TensorBlock,
     backend: &dyn ComputeBackend,
     cfg: &HtConfig,
+    ckpt: Option<&CkptCtx>,
 ) -> Result<HtOutput> {
     let d = dims.len();
     if d < 2 {
@@ -175,12 +181,34 @@ pub fn dist_nht(
     ));
     let mut payload: Vec<Option<HtNode<f64>>> = (0..tree.len()).map(|_| None).collect();
     let mut stages: Vec<HtStageStats> = Vec::with_capacity(n_edges);
-    let mut edge = 0usize; // cursor into fixed_ranks (2 per interior node)
+    let mut start_node = 0usize;
+    // Resume: rehydrate the tree-walk state (resolved payloads + pending
+    // child arrays) from the last durable snapshot and skip the completed
+    // nodes. A missing manifest means a fresh start.
+    if let Some(cx) = ckpt {
+        if cx.resume {
+            if let Some(res) =
+                checkpoint::load_ht(cx, world.rank(), world.size(), dims, grid, tree.len())?
+            {
+                payload = res.payload;
+                pending = res.pending;
+                stages = res.stages;
+                start_node = res.nodes_done;
+                log::info!(
+                    "resuming HT tree walk from checkpoint: {start_node}/{} nodes done",
+                    tree.len()
+                );
+            }
+        }
+    }
+    // Cursor into fixed_ranks (2 per interior node); on resume, advance
+    // past the interior nodes already resolved.
+    let mut edge = 2 * (0..start_node).filter(|&t| !tree.is_leaf(t)).count();
     // One workspace per rank, shared by every per-edge NMF of the tree
     // walk (left and right stages alike) — zero allocation once warm.
     let mut ws = NmfWorkspace::new();
 
-    for t in 0..tree.len() {
+    for t in start_node..tree.len() {
         let (layout, data, rt) = pending[t].take().expect("BFS processing order");
         let node = tree.node(t);
         match node.children {
@@ -219,9 +247,11 @@ pub fn dist_nht(
                     seed: cfg.nmf.seed.wrapping_add(2 * t as u64),
                     ..cfg.nmf.clone()
                 };
-                let o1 = dist_nmf_pruned_x_ws(
+                let mut obs1 = ckpt.and_then(|cx| cx.iter_ckpt(world.rank(), &format!("n{t}a")));
+                let o1 = dist_nmf_pruned_x_obs_ws(
                     &x1, n1, n2 * rt, grid, world, row, col, backend, &cfg1,
                     store, &format!("ht.n{t}.a"), cfg.prune, &mut ws,
+                    obs1.as_mut().map(|o| o as &mut dyn IterObserver),
                 )?;
                 stages.push(HtStageStats {
                     node: t,
@@ -261,9 +291,12 @@ pub fn dist_nht(
                     seed: cfg.nmf.seed.wrapping_add(2 * t as u64 + 1),
                     ..cfg.nmf.clone()
                 };
-                let o2 = dist_nmf_pruned_ws(
+                let x2 = DenseOrSparse::Dense(x2);
+                let mut obs2 = ckpt.and_then(|cx| cx.iter_ckpt(world.rank(), &format!("n{t}b")));
+                let o2 = dist_nmf_pruned_x_obs_ws(
                     &x2, n2, r1 * rt, grid, world, row, col, backend, &cfg2,
                     store, &format!("ht.n{t}.b"), cfg.prune, &mut ws,
+                    obs2.as_mut().map(|o| o as &mut dyn IterObserver),
                 )?;
                 stages.push(HtStageStats {
                     node: t,
@@ -293,6 +326,16 @@ pub fn dist_nht(
                 )?;
                 payload[t] = Some(HtNode::Transfer(Mat::from_vec(r2, r1 * rt, bfull)));
                 edge += 2;
+            }
+        }
+
+        // Node-boundary snapshot: resolved payloads + the pending child
+        // arrays are durable before the next node starts.
+        if let Some(cx) = ckpt {
+            if cx.stage_due(t + 1) {
+                checkpoint::save_ht_node(
+                    world, cx, t + 1, &payload, &pending, &stages, dims, grid,
+                )?;
             }
         }
     }
@@ -339,6 +382,7 @@ pub fn nht_on_threads(
             TensorBlock::Dense(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
+            None,
         )
     });
     outs.swap_remove(0)

@@ -9,10 +9,11 @@
 //! * `info`      — platform + artifact manifest report.
 
 use dntt::bench::workloads::{self, Fig8Data, ScalingMode, ScalingParams, PAPER_EPS};
-use dntt::coordinator::{run_job, BackendChoice, Decomposition, InputSpec, JobConfig};
+use dntt::coordinator::{run_job, BackendChoice, Decomposition, InputSpec, JobConfig, ResumeMode};
 use dntt::data::FaceConfig;
+use dntt::dist::checkpoint::CheckpointPolicy;
 use dntt::dist::chunkstore::SpillMode;
-use dntt::dist::ProcGrid;
+use dntt::dist::{faults, FaultPlan, ProcGrid};
 use dntt::ht::HtConfig;
 use dntt::nmf::{NmfAlgo, NmfConfig};
 use dntt::ttrain::{SyntheticSparse, SyntheticTt, TtConfig};
@@ -89,10 +90,16 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         .opt("backend", "native", "compute backend: native|pjrt")
         .opt("artifacts", "artifacts", "artifact dir for --backend pjrt")
         .opt("spill", "", "spill chunks to this directory (out-of-core)")
+        .opt("checkpoint-dir", "", "write dntt-ckpt-v1 snapshots into this directory")
+        .opt("ckpt-stages", "1", "snapshot after every N completed stages (0 = off)")
+        .opt("ckpt-iters", "0", "in-flight W/H snapshot every N NMF iterations (0 = off)")
+        .opt("resume", "off", "off|auto: resume from the checkpoint dir and relaunch on rank loss")
+        .opt("fault-plan", "", "kills 'rank:op[,rank:op…]' or 'seed:<u64>' (fault-inject builds)")
         .opt("seed", "42", "random seed")
         .opt("save-tt", "", "write the decomposition to this .dntt file (tt only)")
         .opt("round", "", "TT-round the result to this tolerance (SVD; drops non-negativity)")
         .flag("prune", "prune all-zero rows/cols of each stage matrix before the NMF")
+        .flag("keep-spill", "leave spill chunk files on disk after the job")
         .flag("json", "emit the report as JSON")
         .flag("no-check", "skip reconstruction-error check");
     let a = spec.parse(argv)?;
@@ -164,9 +171,45 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
             SpillMode::Disk(PathBuf::from(a.get("spill")))
         },
         check_error: !a.flag("no-check"),
+        checkpoint: if a.get("checkpoint-dir").is_empty() {
+            None
+        } else {
+            Some(CheckpointPolicy {
+                dir: PathBuf::from(a.get("checkpoint-dir")),
+                every_stages: a.usize("ckpt-stages")?,
+                every_iters: a.usize("ckpt-iters")?,
+            })
+        },
+        resume: a.get("resume").parse()?,
+        keep_spill: a.flag("keep-spill"),
         ..JobConfig::new(input, grid)
     };
-    let rep = run_job(&job).map_err(|e| e.to_string())?;
+    if job.checkpoint.is_none() && job.resume == ResumeMode::Auto {
+        return Err("--resume auto needs --checkpoint-dir".into());
+    }
+    // Deterministic fault injection (replayable rank deaths): only a
+    // fault-inject build actually fires the plan.
+    let plan = if a.get("fault-plan").is_empty() {
+        None
+    } else {
+        if !faults::FAULT_INJECT_ENABLED {
+            eprintln!(
+                "warning: --fault-plan given but this binary was built without \
+                 `--features fault-inject`; the plan will not fire"
+            );
+        }
+        let plan = FaultPlan::from_cli(a.get("fault-plan"), job.grid.size())?;
+        faults::arm(&plan);
+        Some(plan)
+    };
+    let rep = run_job(&job);
+    if let Some(plan) = &plan {
+        faults::disarm();
+        if let Some(kill) = plan.last_fired() {
+            eprintln!("fault plan fired: rank {} died at collective #{}", kill.rank, kill.op);
+        }
+    }
+    let rep = rep.map_err(|e| e.to_string())?;
     if a.flag("json") {
         println!("{}", rep.to_json().to_pretty());
     } else {

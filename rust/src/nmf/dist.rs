@@ -84,6 +84,20 @@ pub(crate) fn xref_of(x: &DenseOrSparse) -> XRef<'_> {
     }
 }
 
+/// Observer invoked at the end of every NMF iteration, on every rank, in
+/// SPMD order — the checkpoint subsystem's iteration-granular hook
+/// ([`crate::dist::checkpoint::IterCkpt`] persists the in-flight `W`/`H`
+/// every N iterations through it).
+///
+/// Implementations must not communicate (they run inside the iteration
+/// loop between collectives) and must swallow their own failures (a
+/// rank-divergent error raised here would strand peers mid-collective).
+pub trait IterObserver {
+    /// `iter` is the 1-based count of completed iterations; `w`/`ht` are
+    /// this rank's current factor blocks.
+    fn on_iter(&mut self, iter: usize, w: &Mat<f64>, ht: &Mat<f64>);
+}
+
 /// Result of a distributed NMF on one rank.
 pub struct NmfOutput {
     /// This rank's rows of `W` (`mw × r`).
@@ -368,6 +382,27 @@ pub(crate) fn dist_nmf_xref_ws(
     cfg: &NmfConfig,
     ws: &mut NmfWorkspace,
 ) -> Result<NmfOutput> {
+    dist_nmf_xref_obs_ws(x, m, n, grid, world, row, col, backend, cfg, ws, None)
+}
+
+/// [`dist_nmf_xref_ws`] with an optional per-iteration [`IterObserver`]
+/// (the checkpoint hook). The observer is called after every completed
+/// iteration and never changes the math — runs with and without one are
+/// bitwise identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dist_nmf_xref_obs_ws(
+    x: XRef<'_>,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    ws: &mut NmfWorkspace,
+    obs: Option<&mut dyn IterObserver>,
+) -> Result<NmfOutput> {
     if cfg.rank == 0 {
         return Err(DnttError::config("NMF rank must be ≥ 1"));
     }
@@ -437,9 +472,9 @@ pub(crate) fn dist_nmf_xref_ws(
     };
 
     match cfg.algo {
-        NmfAlgo::Bcd => bcd_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats)?,
-        NmfAlgo::Mu => mu_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats)?,
-        NmfAlgo::Hals => hals_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats)?,
+        NmfAlgo::Bcd => bcd_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats, obs)?,
+        NmfAlgo::Mu => mu_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats, obs)?,
+        NmfAlgo::Hals => hals_loop(&mut ctx, &mut w, &mut ht, xsq, cfg, &mut stats, obs)?,
     }
 
     stats.rel_err = (2.0 * stats.objective).max(0.0).sqrt() / xnorm.max(1e-300);
@@ -463,6 +498,7 @@ fn bcd_loop(
     xsq: f64,
     cfg: &NmfConfig,
     stats: &mut NmfStats,
+    mut obs: Option<&mut dyn IterObserver>,
 ) -> Result<()> {
     let delta = cfg.delta;
     let r = ctx.r;
@@ -555,11 +591,19 @@ fn bcd_loop(
             if cfg.tol > 0.0 && rel_change < cfg.tol {
                 stats.iters += 1;
                 stats.history.push(obj);
+                if let Some(o) = obs.as_mut() {
+                    // The converging iteration is observed too (MU/HALS
+                    // observe before their break; keep BCD consistent).
+                    o.on_iter(stats.iters, w, ht);
+                }
                 break;
             }
         }
         stats.iters += 1;
         stats.history.push(obj);
+        if let Some(o) = obs.as_mut() {
+            o.on_iter(stats.iters, w, ht);
+        }
     }
     // Return the last *accepted* iterate.
     *w = w_prev;
@@ -577,6 +621,7 @@ fn mu_loop(
     xsq: f64,
     cfg: &NmfConfig,
     stats: &mut NmfStats,
+    mut obs: Option<&mut dyn IterObserver>,
 ) -> Result<()> {
     let r = ctx.r;
     let mut hht = Mat::zeros(r, r);
@@ -607,6 +652,9 @@ fn mu_loop(
         obj = obj_new;
         stats.iters += 1;
         stats.history.push(obj);
+        if let Some(o) = obs.as_mut() {
+            o.on_iter(stats.iters, w, ht);
+        }
         if cfg.tol > 0.0 && rel < cfg.tol {
             break;
         }
@@ -624,6 +672,7 @@ fn hals_loop(
     xsq: f64,
     cfg: &NmfConfig,
     stats: &mut NmfStats,
+    mut obs: Option<&mut dyn IterObserver>,
 ) -> Result<()> {
     let r = ctx.r;
     let mut hht = Mat::zeros(r, r);
@@ -651,6 +700,9 @@ fn hals_loop(
         obj = obj_new;
         stats.iters += 1;
         stats.history.push(obj);
+        if let Some(o) = obs.as_mut() {
+            o.on_iter(stats.iters, w, ht);
+        }
         if cfg.tol > 0.0 && rel < cfg.tol {
             break;
         }

@@ -25,10 +25,10 @@ pub mod dist;
 pub mod prune;
 pub mod workspace;
 
-pub use dist::{dist_nmf, dist_nmf_sparse_ws, dist_nmf_ws, dist_nmf_x_ws, NmfOutput};
+pub use dist::{dist_nmf, dist_nmf_sparse_ws, dist_nmf_ws, dist_nmf_x_ws, IterObserver, NmfOutput};
 pub use prune::{
-    detect_zeros, detect_zeros_x, dist_nmf_pruned, dist_nmf_pruned_ws, dist_nmf_pruned_x_ws,
-    PruneMap,
+    detect_zeros, detect_zeros_x, dist_nmf_pruned, dist_nmf_pruned_ws, dist_nmf_pruned_x_obs_ws,
+    dist_nmf_pruned_x_ws, PruneMap,
 };
 pub use workspace::NmfWorkspace;
 

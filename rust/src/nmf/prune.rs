@@ -29,7 +29,7 @@ use crate::dist::{BlockDim, Comm, Grid2d, Layout, SharedStore, TensorBlock};
 use crate::error::Result;
 use crate::linalg::sparse::SparseMat;
 use crate::linalg::{DenseOrSparse, Mat};
-use crate::nmf::dist::{dist_nmf_xref_ws, xref_of, NmfOutput, XRef};
+use crate::nmf::dist::{dist_nmf_xref_obs_ws, xref_of, IterObserver, NmfOutput, XRef};
 use crate::nmf::workspace::NmfWorkspace;
 use crate::nmf::NmfConfig;
 use crate::runtime::backend::ComputeBackend;
@@ -251,7 +251,9 @@ pub fn dist_nmf_pruned_ws(
     enable: bool,
     ws: &mut NmfWorkspace,
 ) -> Result<NmfOutput> {
-    pruned_impl(XRef::Dense(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws)
+    pruned_impl(
+        XRef::Dense(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws, None,
+    )
 }
 
 /// [`dist_nmf_pruned_ws`] on a dense-or-sparse block (the driver-facing
@@ -274,7 +276,35 @@ pub fn dist_nmf_pruned_x_ws(
     enable: bool,
     ws: &mut NmfWorkspace,
 ) -> Result<NmfOutput> {
-    pruned_impl(xref_of(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws)
+    pruned_impl(
+        xref_of(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws, None,
+    )
+}
+
+/// [`dist_nmf_pruned_x_ws`] with the checkpoint subsystem's per-iteration
+/// observer ([`crate::nmf::dist::IterObserver`]) threaded into whichever
+/// inner NMF runs (pruned or pass-through). The observer never changes
+/// the math; on the pruned path it sees the *pruned* factor blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_nmf_pruned_x_obs_ws(
+    x: &DenseOrSparse,
+    m: usize,
+    n: usize,
+    grid: Grid2d,
+    world: &mut Comm,
+    row: &mut Comm,
+    col: &mut Comm,
+    backend: &dyn ComputeBackend,
+    cfg: &NmfConfig,
+    store: &SharedStore,
+    tag: &str,
+    enable: bool,
+    ws: &mut NmfWorkspace,
+    obs: Option<&mut dyn IterObserver>,
+) -> Result<NmfOutput> {
+    pruned_impl(
+        xref_of(x), m, n, grid, world, row, col, backend, cfg, store, tag, enable, ws, obs,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -292,14 +322,15 @@ fn pruned_impl(
     tag: &str,
     enable: bool,
     ws: &mut NmfWorkspace,
+    obs: Option<&mut dyn IterObserver>,
 ) -> Result<NmfOutput> {
     if !enable {
-        return dist_nmf_xref_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
+        return dist_nmf_xref_obs_ws(x, m, n, grid, world, row, col, backend, cfg, ws, obs);
     }
     let map = detect_zeros_xref(x, m, n, grid, world);
     if map.is_identity() || map.pruned_m() == 0 || map.pruned_n() == 0 {
         // Nothing to prune (or a fully zero matrix, which NMF handles).
-        return dist_nmf_xref_ws(x, m, n, grid, world, row, col, backend, cfg, ws);
+        return dist_nmf_xref_obs_ws(x, m, n, grid, world, row, col, backend, cfg, ws, obs);
     }
     let (pm, pn) = (map.pruned_m(), map.pruned_n());
     let (i, j) = grid.coords(world.rank());
@@ -397,7 +428,8 @@ fn pruned_impl(
     world.barrier();
 
     // --- Factorize the pruned matrix. -----------------------------------
-    let out = dist_nmf_xref_ws(xref_of(&xp), pm, pn, grid, world, row, col, backend, cfg, ws)?;
+    let out =
+        dist_nmf_xref_obs_ws(xref_of(&xp), pm, pn, grid, world, row, col, backend, cfg, ws, obs)?;
     let r = cfg.rank;
 
     // --- Restore W: pruned WGrid -> this rank's full-size row block. ----

@@ -8,10 +8,11 @@
 //! `G(l)`, and the distributed `H` becomes the next remainder. The final
 //! `H` is gathered as core `G(d)`.
 
+use crate::dist::checkpoint::{self, CkptCtx};
 use crate::dist::{dist_reshape_x, Comm, Grid2d, Layout, ProcGrid, SharedStore, TensorBlock};
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::nmf::{dist_nmf_pruned_x_ws, NmfConfig, NmfStats, NmfWorkspace};
+use crate::nmf::{dist_nmf_pruned_x_obs_ws, IterObserver, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::TTensor;
 use crate::ttrain::rankselect::{dist_rank_select, RankSelectConfig};
@@ -82,6 +83,12 @@ pub struct TtOutput {
 ///   consumes the dense NMF factors.
 /// * `grid` — the 2-D NMF grid (must satisfy `grid.size() == world.size()`
 ///   and be the collapse of `proc_grid`).
+/// * `ckpt` — optional checkpoint context
+///   ([`crate::dist::checkpoint::CkptCtx`]): snapshot the sweep state per
+///   the policy, and — when its `resume` flag is set and a valid
+///   `dntt-ckpt-v1` manifest exists — skip completed stages, rehydrating
+///   the cores and this rank's remainder chunk byte-exactly so the
+///   resumed run's factors are bitwise identical to an uninterrupted one.
 #[allow(clippy::too_many_arguments)]
 pub fn dist_ntt(
     world: &mut Comm,
@@ -94,6 +101,7 @@ pub fn dist_ntt(
     my_block: TensorBlock,
     backend: &dyn ComputeBackend,
     cfg: &TtConfig,
+    ckpt: Option<&CkptCtx>,
 ) -> Result<TtOutput> {
     let d = dims.len();
     if d < 2 {
@@ -118,12 +126,34 @@ pub fn dist_ntt(
     let mut cur_data: TensorBlock = my_block;
     let mut r_prev = 1usize;
     let mut s_rest: usize = dims.iter().product();
+    let mut start_stage = 0usize;
+    // Resume: rehydrate the sweep state from the last durable snapshot
+    // and skip the completed stages (validation is symmetric across
+    // ranks — see `checkpoint::load_tt`). A missing manifest means a
+    // fresh start, not an error.
+    if let Some(cx) = ckpt {
+        if cx.resume {
+            if let Some(res) = checkpoint::load_tt(cx, world.rank(), world.size(), dims, grid)? {
+                cores = res.cores;
+                stages = res.stages;
+                cur_layout = res.layout;
+                cur_data = res.my_chunk;
+                r_prev = res.r_prev;
+                s_rest = res.s_rest;
+                start_stage = res.stages_done;
+                log::info!(
+                    "resuming TT sweep from checkpoint: {start_stage}/{} stages done",
+                    d - 1
+                );
+            }
+        }
+    }
     // One workspace per rank, shared by every stage NMF: the packed-GEMM
     // panels and update temporaries warm up once and are reused, so the
     // sweep's inner iterations allocate nothing.
     let mut ws = NmfWorkspace::new();
 
-    for l in 0..d - 1 {
+    for l in start_stage..d - 1 {
         let n_l = dims[l];
         let m = r_prev * n_l;
         let ncols = s_rest / n_l;
@@ -149,9 +179,11 @@ pub fn dist_ntt(
         // --- Line 7: distributed NMF (optionally zero-row/col pruned),
         // dispatched per block representation.
         let nmf_cfg = NmfConfig { rank, seed: cfg.nmf.seed.wrapping_add(l as u64), ..cfg.nmf.clone() };
-        let out = dist_nmf_pruned_x_ws(
+        let mut iter_obs = ckpt.and_then(|cx| cx.iter_ckpt(world.rank(), &format!("s{l}")));
+        let out = dist_nmf_pruned_x_obs_ws(
             &x, m, ncols, grid, world, row, col, backend, &nmf_cfg,
             store, &format!("tt.stage{l}"), cfg.prune, &mut ws,
+            iter_obs.as_mut().map(|o| o as &mut dyn IterObserver),
         )?;
 
         // --- Line 8: gather W into core G(l). World-rank order concatenates
@@ -171,6 +203,17 @@ pub fn dist_ntt(
         cur_data = TensorBlock::Dense(out.ht.into_vec());
         r_prev = rank;
         s_rest = ncols;
+
+        // Stage-boundary snapshot: the full sweep state is durable before
+        // the next stage starts, so a crash anywhere later resumes here.
+        if let Some(cx) = ckpt {
+            if cx.stage_due(l + 1) {
+                checkpoint::save_tt_stage(
+                    world, cx, l + 1, &cores, &stages, &cur_layout, &cur_data, r_prev, s_rest,
+                    dims, grid,
+                )?;
+            }
+        }
     }
 
     // --- Line 11: gather the final H as core G(d) ((r_{d-1}·n_d) × 1).
@@ -231,6 +274,7 @@ pub fn ntt_on_threads(
             TensorBlock::Dense(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
+            None,
         )
     });
     outs.swap_remove(0)
@@ -266,6 +310,7 @@ pub fn ntt_sparse_on_threads(
             TensorBlock::Sparse(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
+            None,
         )
     });
     outs.swap_remove(0)

@@ -1,0 +1,428 @@
+//! The crash-recovery battery: checkpointed runs are bitwise-neutral,
+//! resumed runs are bitwise-identical to uninterrupted ones (TT and HT,
+//! dense and sparse inputs), bad checkpoints (wrong config hash,
+//! truncated snapshot files) are rejected, and — under the
+//! `fault-inject` feature — a kill-at-every-collective sweep proves the
+//! whole pipeline recovers from a rank death at *any* collective.
+//!
+//! The default build runs the checkpoint/resume tests plus the proof
+//! that the fault hook is compiled out ([`dntt::dist::faults`]).
+
+mod common;
+
+use common::{
+    assert_cores_bitwise, assert_ht_nodes_bitwise, ht_cfg_fixed, tt_cfg_fixed, unique_temp_dir,
+};
+use dntt::coordinator::{run_job, Decomposition, InputSpec, JobConfig, ResumeMode};
+use dntt::dist::checkpoint::{self, CheckpointPolicy};
+use dntt::dist::ProcGrid;
+use dntt::ht::SyntheticHt;
+use dntt::ttrain::{SyntheticSparse, SyntheticTt};
+use std::path::{Path, PathBuf};
+
+/// The small 2×2-grid TT job every recovery test runs (fixed ranks pin
+/// the stage shapes; 4 iterations keep the sweep fast).
+fn tt_job(ckpt: Option<PathBuf>, resume: ResumeMode) -> JobConfig {
+    JobConfig {
+        tt: tt_cfg_fixed(4, vec![2, 2]),
+        checkpoint: ckpt.map(CheckpointPolicy::new),
+        resume,
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 7)),
+            ProcGrid::new(vec![2, 2, 1]).unwrap(),
+        )
+    }
+}
+
+fn ht_job(ckpt: Option<PathBuf>, resume: ResumeMode) -> JobConfig {
+    JobConfig {
+        decomp: Decomposition::Ht,
+        ht: ht_cfg_fixed(4, vec![2; 4]),
+        checkpoint: ckpt.map(CheckpointPolicy::new),
+        resume,
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticHt::new(vec![4, 4, 4], 2, 13).dense_spec()),
+            ProcGrid::new(vec![2, 1, 2]).unwrap(),
+        )
+    }
+}
+
+/// Synthetic-HT tensors have no `InputSpec` constructor of their own;
+/// wrap the dense tensor.
+trait DenseSpec {
+    fn dense_spec(&self) -> InputSpec;
+}
+impl DenseSpec for SyntheticHt {
+    fn dense_spec(&self) -> InputSpec {
+        InputSpec::Dense(std::sync::Arc::new(self.dense()))
+    }
+}
+
+// Only the fault-injection half of the battery exercises the sparse job.
+#[cfg_attr(not(feature = "fault-inject"), allow(dead_code))]
+fn sparse_job(ckpt: Option<PathBuf>, resume: ResumeMode) -> JobConfig {
+    JobConfig {
+        tt: tt_cfg_fixed(4, vec![2, 2]),
+        checkpoint: ckpt.map(CheckpointPolicy::new),
+        resume,
+        ..JobConfig::new(
+            InputSpec::SyntheticSparse(SyntheticSparse::new(vec![6, 5, 4], 0.15, 77)),
+            ProcGrid::new(vec![2, 1, 1]).unwrap(),
+        )
+    }
+}
+
+/// A snapshot file the current manifest actually references (earlier
+/// stages' files also linger in the directory; truncating those would
+/// not — and must not — trip validation).
+fn referenced_chunk_file(dir: &Path) -> PathBuf {
+    let man = checkpoint::read_manifest(dir).unwrap();
+    let file = man.get("remainder_chunks").as_arr().unwrap()[0]
+        .get("file")
+        .as_str()
+        .unwrap()
+        .to_string();
+    dir.join(file)
+}
+
+/// Checkpointing is bitwise-neutral: a TT job with stage snapshots on
+/// produces the same cores as one without, and leaves a committed
+/// manifest recording every loop stage.
+#[test]
+fn checkpointed_tt_run_is_bitwise_neutral() {
+    let dir = unique_temp_dir("ckpt_neutral");
+    let plain = run_job(&tt_job(None, ResumeMode::Off)).unwrap();
+    let ckpt = run_job(&tt_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    assert_cores_bitwise(
+        ckpt.output.tt().unwrap(),
+        plain.output.tt().unwrap(),
+        "checkpointed vs plain",
+    );
+    assert!(checkpoint::have_checkpoint(&dir));
+    assert_eq!(checkpoint::stages_done(&dir), Some(2)); // d−1 loop stages
+    let man = checkpoint::read_manifest(&dir).unwrap();
+    assert_eq!(man.get("format").as_str(), Some("dntt-ckpt-v1"));
+    assert_eq!(man.get("decomp").as_str(), Some("tt"));
+    assert!(man.get("git_sha").as_str().is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--resume auto` against a completed checkpoint fast-replays the job:
+/// every stage is skipped and the output is still bitwise identical.
+#[test]
+fn resume_replays_completed_tt_job_bitwise() {
+    let dir = unique_temp_dir("ckpt_replay");
+    let first = run_job(&tt_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    let replay = run_job(&tt_job(Some(dir.clone()), ResumeMode::Auto)).unwrap();
+    assert_cores_bitwise(
+        replay.output.tt().unwrap(),
+        first.output.tt().unwrap(),
+        "resumed replay vs first run",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// HT: checkpoint neutrality and resume-replay, node matrices bitwise.
+#[test]
+fn ht_checkpoint_and_replay_are_bitwise_neutral() {
+    let dir = unique_temp_dir("ckpt_ht");
+    let plain = run_job(&ht_job(None, ResumeMode::Off)).unwrap();
+    let ckpt = run_job(&ht_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    assert_ht_nodes_bitwise(
+        ckpt.output.ht().unwrap(),
+        plain.output.ht().unwrap(),
+        "checkpointed vs plain HT",
+    );
+    assert_eq!(checkpoint::stages_done(&dir), Some(5)); // all tree nodes
+    let replay = run_job(&ht_job(Some(dir.clone()), ResumeMode::Auto)).unwrap();
+    assert_ht_nodes_bitwise(
+        replay.output.ht().unwrap(),
+        plain.output.ht().unwrap(),
+        "HT resumed replay",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A manifest written by a different configuration (different NMF seed)
+/// or a different input *tensor* (different generator seed — same dims,
+/// same label) is rejected by the config-hash check before anything is
+/// rehydrated.
+#[test]
+fn resume_rejects_config_hash_mismatch() {
+    let dir = unique_temp_dir("ckpt_hash");
+    run_job(&tt_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    let mut other = tt_job(Some(dir.clone()), ResumeMode::Auto);
+    other.tt.nmf.seed = 43; // a different trajectory — the checkpoint is not ours
+    let err = run_job(&other).unwrap_err();
+    assert!(err.to_string().contains("config hash mismatch"), "{err}");
+    // Same configuration, different data: the input identity (generator
+    // seed) is part of the fingerprint too.
+    let mut other_data = tt_job(Some(dir.clone()), ResumeMode::Auto);
+    other_data.input =
+        InputSpec::Synthetic(SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 8));
+    let err = run_job(&other_data).unwrap_err();
+    assert!(err.to_string().contains("config hash mismatch"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Superseded per-stage remainder chunks are pruned once a newer manifest
+/// commits: only the latest stage's files survive in the directory.
+#[test]
+fn stale_stage_chunks_are_pruned_after_commit() {
+    let dir = unique_temp_dir("ckpt_prune");
+    run_job(&tt_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(
+        names.iter().any(|n| n.starts_with("tt.rem.s2.r")),
+        "latest stage's chunks must remain: {names:?}"
+    );
+    assert!(
+        !names.iter().any(|n| n.starts_with("tt.rem.s1.r")),
+        "superseded stage chunks must be pruned: {names:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A truncated snapshot file is rejected by the byte-size validation.
+#[test]
+fn resume_rejects_truncated_snapshot_file() {
+    let dir = unique_temp_dir("ckpt_trunc");
+    run_job(&tt_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    let victim = referenced_chunk_file(&dir);
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len().saturating_sub(8)]).unwrap();
+    let err = run_job(&tt_job(Some(dir.clone()), ResumeMode::Auto)).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `ResumeMode::Off` ignores whatever sits in the checkpoint directory —
+/// even a manifest from a different job — and runs fresh.
+#[test]
+fn resume_off_ignores_existing_checkpoint() {
+    let dir = unique_temp_dir("ckpt_off");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(checkpoint::manifest_path(&dir), "{\"format\": \"dntt-ckpt-v1\"}").unwrap();
+    let plain = run_job(&tt_job(None, ResumeMode::Off)).unwrap();
+    let fresh = run_job(&tt_job(Some(dir.clone()), ResumeMode::Off)).unwrap();
+    assert_cores_bitwise(
+        fresh.output.tt().unwrap(),
+        plain.output.tt().unwrap(),
+        "fresh run over stale checkpoint",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `every_iters` persists in-flight `W`/`H` snapshots per rank per stage.
+#[test]
+fn iteration_granular_snapshots_appear() {
+    let dir = unique_temp_dir("ckpt_iters");
+    let mut job = tt_job(Some(dir.clone()), ResumeMode::Off);
+    job.checkpoint.as_mut().unwrap().every_iters = 2;
+    run_job(&job).unwrap();
+    for rank in 0..4 {
+        for side in ["w", "h"] {
+            let f = dir.join(format!("inflight.s0.r{rank}.{side}.chunk"));
+            assert!(f.is_file(), "missing in-flight snapshot {f:?}");
+            assert!(std::fs::metadata(&f).unwrap().len() > 0);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Default build: the fault hook is compiled out — `FAULT_INJECT_ENABLED`
+/// is false and an armed would-fire plan never fires (the `Comm` hot path
+/// carries no injection code).
+#[cfg(not(feature = "fault-inject"))]
+#[test]
+fn default_build_compiles_fault_hook_out() {
+    use dntt::dist::{faults, FaultPlan};
+    assert!(!faults::FAULT_INJECT_ENABLED);
+    let plan = FaultPlan::kill_at(0, 1); // would fire on the very first collective
+    faults::arm(&plan);
+    let rep = run_job(&tt_job(None, ResumeMode::Off));
+    faults::disarm();
+    assert!(rep.is_ok(), "default build must never fire injected faults");
+    assert_eq!(plan.fired_count(), 0);
+    assert!(plan.last_fired().is_none());
+}
+
+#[cfg(feature = "fault-inject")]
+mod fault {
+    use super::*;
+    use crate::common::assert_close_slices;
+    use dntt::dist::{faults, FaultPlan};
+    use dntt::error::DnttError;
+
+    /// Run `job` with `plan` armed (scoped to this thread's worlds).
+    fn run_with_plan(
+        job: &JobConfig,
+        plan: &std::sync::Arc<FaultPlan>,
+    ) -> dntt::error::Result<dntt::coordinator::JobReport> {
+        faults::arm(plan);
+        let out = run_job(job);
+        faults::disarm();
+        out
+    }
+
+    /// Victim dies, no checkpoint/resume configured: the coordinator
+    /// surfaces the typed `RankLost` error with the exact death site.
+    #[test]
+    fn fault_without_resume_is_a_typed_rank_lost_error() {
+        let plan = FaultPlan::kill_at(2, 9);
+        let err = run_with_plan(&tt_job(None, ResumeMode::Off), &plan).unwrap_err();
+        match err {
+            DnttError::RankLost { rank, op } => {
+                assert_eq!((rank, op), (2, 9));
+            }
+            other => panic!("expected RankLost, got: {other}"),
+        }
+        assert_eq!(plan.fired_count(), 1);
+    }
+
+    /// ISSUE acceptance (TT, dense): a job killed by the fault plan at an
+    /// arbitrary mid-run collective resumes from its last checkpoint and
+    /// yields factors bitwise-identical to the uninterrupted run.
+    #[test]
+    fn tt_killed_mid_run_resumes_bitwise_identical() {
+        let reference = run_job(&tt_job(None, ResumeMode::Off)).unwrap();
+        // Find the op range, then kill somewhere in the middle of it.
+        let counter = FaultPlan::count_only();
+        let dir0 = unique_temp_dir("ckpt_mid_count");
+        run_with_plan(&tt_job(Some(dir0.clone()), ResumeMode::Off), &counter).unwrap();
+        let total = counter.ops_seen(1);
+        assert!(total > 10, "tiny job still runs {total} collectives");
+        let dir = unique_temp_dir("ckpt_mid");
+        let plan = FaultPlan::kill_at(1, total / 2);
+        let rep = run_with_plan(&tt_job(Some(dir.clone()), ResumeMode::Auto), &plan).unwrap();
+        assert_eq!(plan.fired_count(), 1, "the scheduled death must have fired");
+        assert_cores_bitwise(
+            rep.output.tt().unwrap(),
+            reference.output.tt().unwrap(),
+            "killed+resumed vs uninterrupted",
+        );
+        let _ = std::fs::remove_dir_all(&dir0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE acceptance: the kill-at-every-collective sweep on the 2×2
+    /// grid. For *every* collective of the victim rank, a job killed
+    /// there and auto-resumed is bitwise-identical to the uninterrupted
+    /// run. (Each kill fires once, so each swept run is: die at op k,
+    /// relaunch from the last durable checkpoint, finish clean.)
+    #[test]
+    fn tt_kill_at_every_collective_sweep() {
+        let reference = run_job(&tt_job(None, ResumeMode::Off)).unwrap();
+        let ref_tt = reference.output.tt().unwrap();
+        let counter = FaultPlan::count_only();
+        let dir0 = unique_temp_dir("ckpt_sweep_count");
+        run_with_plan(&tt_job(Some(dir0.clone()), ResumeMode::Off), &counter).unwrap();
+        let _ = std::fs::remove_dir_all(&dir0);
+        let victim = 1usize;
+        let total = counter.ops_seen(victim);
+        assert!(total > 0);
+        for op in 1..=total {
+            let dir = unique_temp_dir("ckpt_sweep");
+            let plan = FaultPlan::kill_at(victim, op);
+            let rep = run_with_plan(&tt_job(Some(dir.clone()), ResumeMode::Auto), &plan)
+                .unwrap_or_else(|e| panic!("kill at op {op} did not recover: {e}"));
+            assert_eq!(plan.fired_count(), 1, "kill at op {op} never fired");
+            assert_cores_bitwise(rep.output.tt().unwrap(), ref_tt, &format!("kill at op {op}"));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        // And every rank recovers, probed at one early collective each.
+        for victim in 0..4 {
+            let dir = unique_temp_dir("ckpt_sweep_rank");
+            let plan = FaultPlan::kill_at(victim, 5);
+            let rep = run_with_plan(&tt_job(Some(dir.clone()), ResumeMode::Auto), &plan).unwrap();
+            assert_cores_bitwise(rep.output.tt().unwrap(), ref_tt, &format!("victim {victim}"));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// ISSUE acceptance (HT, dense): kills early, mid and late in the
+    /// tree walk all resume to bitwise-identical node matrices.
+    #[test]
+    fn ht_killed_and_resumed_matches_uninterrupted() {
+        let reference = run_job(&ht_job(None, ResumeMode::Off)).unwrap();
+        let ref_ht = reference.output.ht().unwrap();
+        let counter = FaultPlan::count_only();
+        let dir0 = unique_temp_dir("ckpt_ht_count");
+        run_with_plan(&ht_job(Some(dir0.clone()), ResumeMode::Off), &counter).unwrap();
+        let _ = std::fs::remove_dir_all(&dir0);
+        let victim = 2usize;
+        let total = counter.ops_seen(victim);
+        assert!(total > 3);
+        for op in [1, total / 3, 2 * total / 3, total] {
+            let dir = unique_temp_dir("ckpt_ht_kill");
+            let plan = FaultPlan::kill_at(victim, op);
+            let rep = run_with_plan(&ht_job(Some(dir.clone()), ResumeMode::Auto), &plan)
+                .unwrap_or_else(|e| panic!("HT kill at op {op} did not recover: {e}"));
+            assert_eq!(plan.fired_count(), 1, "HT kill at op {op} never fired");
+            assert_ht_nodes_bitwise(
+                rep.output.ht().unwrap(),
+                ref_ht,
+                &format!("HT kill at op {op}"),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// ISSUE acceptance (TT, sparse input): the sparse stage-0 pipeline
+    /// (sparse chunks, sparse reshape, SpMM kernels) recovers bitwise
+    /// too, and the recovered job reports the same reconstruction error.
+    #[test]
+    fn sparse_tt_killed_and_resumed_matches_uninterrupted() {
+        let reference = run_job(&sparse_job(None, ResumeMode::Off)).unwrap();
+        let ref_tt = reference.output.tt().unwrap();
+        let counter = FaultPlan::count_only();
+        let dir0 = unique_temp_dir("ckpt_sp_count");
+        run_with_plan(&sparse_job(Some(dir0.clone()), ResumeMode::Off), &counter).unwrap();
+        let _ = std::fs::remove_dir_all(&dir0);
+        let victim = 1usize;
+        let total = counter.ops_seen(victim);
+        for op in [1, total / 2, total] {
+            let dir = unique_temp_dir("ckpt_sp_kill");
+            let plan = FaultPlan::kill_at(victim, op);
+            let rep = run_with_plan(&sparse_job(Some(dir.clone()), ResumeMode::Auto), &plan)
+                .unwrap_or_else(|e| panic!("sparse kill at op {op} did not recover: {e}"));
+            assert_cores_bitwise(
+                rep.output.tt().unwrap(),
+                ref_tt,
+                &format!("sparse kill at op {op}"),
+            );
+            assert_close_slices(
+                &[rep.rel_error.unwrap()],
+                &[reference.rel_error.unwrap()],
+                1e-15,
+                "sparse recovered rel_error",
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// Multiple scheduled deaths within one job: each fires once, the
+    /// coordinator relaunches after each, and the result is still exact.
+    #[test]
+    fn multiple_kills_in_one_job_all_recover() {
+        let reference = run_job(&tt_job(None, ResumeMode::Off)).unwrap();
+        let dir = unique_temp_dir("ckpt_multi");
+        let plan = FaultPlan::new(vec![
+            dntt::dist::faults::Kill { rank: 0, op: 20 },
+            dntt::dist::faults::Kill { rank: 3, op: 40 },
+            dntt::dist::faults::Kill { rank: 1, op: 60 },
+        ]);
+        let rep = run_with_plan(&tt_job(Some(dir.clone()), ResumeMode::Auto), &plan).unwrap();
+        assert!(plan.fired_count() >= 1, "at least the first kill fires");
+        assert_cores_bitwise(
+            rep.output.tt().unwrap(),
+            reference.output.tt().unwrap(),
+            "multi-kill recovery",
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,129 @@
+//! Shared fixtures for the integration suites: the small-grid job/config
+//! builders, synthetic block extraction, factor-comparison helpers and
+//! unique temp-dir allocation that were previously copy-pasted across
+//! `ht_equivalence.rs`, `sparse_equivalence.rs`, `integration_ttrain.rs`
+//! and `integration_dist.rs`.
+//!
+//! Each integration binary compiles its own copy (`mod common;`), so not
+//! every binary uses every helper — hence the file-wide `dead_code` allow.
+#![allow(dead_code)]
+
+use dntt::dist::{BlockDim, Grid2d};
+use dntt::ht::HtConfig;
+use dntt::linalg::Mat;
+use dntt::nmf::{NmfAlgo, NmfConfig};
+use dntt::ttrain::TtConfig;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The tight-eps TT config the equivalence suites run (BCD, default tol).
+pub fn tt_cfg(iters: usize) -> TtConfig {
+    tt_cfg_algo(iters, NmfAlgo::Bcd)
+}
+
+/// [`tt_cfg`] with an explicit update rule.
+pub fn tt_cfg_algo(iters: usize, algo: NmfAlgo) -> TtConfig {
+    TtConfig {
+        eps: 1e-6,
+        nmf: NmfConfig { max_iters: iters, algo, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// TT config with fixed ranks (skips the SVD — what the recovery and
+/// sparse suites use to pin the stage shapes).
+pub fn tt_cfg_fixed(iters: usize, ranks: Vec<usize>) -> TtConfig {
+    TtConfig {
+        fixed_ranks: Some(ranks),
+        nmf: NmfConfig { max_iters: iters, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The tight-eps, tight-tol HT config of the HT equivalence suite.
+pub fn ht_cfg(iters: usize) -> HtConfig {
+    HtConfig {
+        eps: 1e-6,
+        nmf: NmfConfig { max_iters: iters, tol: 1e-12, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// HT config with fixed edge ranks (two per interior node).
+pub fn ht_cfg_fixed(iters: usize, ranks: Vec<usize>) -> HtConfig {
+    HtConfig {
+        fixed_ranks: Some(ranks),
+        nmf: NmfConfig { max_iters: iters, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Block `(i, j)` of a full matrix under the `MatGrid` partition — the
+/// per-rank input the distributed-NMF tests feed each rank.
+pub fn block_of(x: &Mat<f64>, grid: Grid2d, rank: usize) -> Mat<f64> {
+    let (m, n) = x.shape();
+    let (i, j) = grid.coords(rank);
+    let rows = BlockDim::new(m, grid.pr);
+    let cols = BlockDim::new(n, grid.pc);
+    Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
+        x[(rows.start_of(i) + a, cols.start_of(j) + b)]
+    })
+}
+
+/// Dense non-negative matrix with exact zeros at the given density.
+pub fn sparse_rand(m: usize, n: usize, density: f64, seed: u64) -> Mat<f64> {
+    let mut rng = dntt::util::rng::Rng::new(seed);
+    Mat::from_fn(m, n, |_, _| if rng.uniform() < density { 0.5 + rng.uniform() } else { 0.0 })
+}
+
+/// Element-wise closeness assertion with a labelled failure.
+pub fn assert_close_slices(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < tol, "{what}[{k}]: {x} vs {y} (tol {tol})");
+    }
+}
+
+/// Bitwise identity assertion over TT cores.
+pub fn assert_cores_bitwise(a: &dntt::ttrain::TtOutput, b: &dntt::ttrain::TtOutput, what: &str) {
+    assert_eq!(a.tt.ranks(), b.tt.ranks(), "{what}: rank chains differ");
+    for (l, (ca, cb)) in a.tt.cores().iter().zip(b.tt.cores()).enumerate() {
+        assert_eq!(ca.as_slice(), cb.as_slice(), "{what}: core {l} must be bitwise identical");
+    }
+}
+
+/// Bitwise identity assertion over HT node matrices.
+pub fn assert_ht_nodes_bitwise(a: &dntt::ht::HtOutput, b: &dntt::ht::HtOutput, what: &str) {
+    assert_eq!(a.ht.ranks(), b.ht.ranks(), "{what}: edge-rank chains differ");
+    for (t, (na, nb)) in a.ht.nodes().iter().zip(b.ht.nodes()).enumerate() {
+        assert_eq!(
+            na.mat().as_slice(),
+            nb.mat().as_slice(),
+            "{what}: node {t} must be bitwise identical"
+        );
+    }
+}
+
+static TMP_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// A fresh (removed-if-existing) temp directory unique to this process
+/// *and* call site — safe for tests running in parallel within one
+/// binary.
+pub fn unique_temp_dir(tag: &str) -> PathBuf {
+    let n = TMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("dntt_{tag}_{}_{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `.chunk` files remaining under `dir` (what the spill-cleanup test
+/// counts; 0 for a cleanly dropped store).
+pub fn chunk_files_in(dir: &std::path::Path) -> usize {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .filter(|e| e.file_name().to_string_lossy().ends_with(".chunk"))
+                .count()
+        })
+        .unwrap_or(0)
+}

@@ -4,23 +4,17 @@
 //! dispatch with per-tree-node stage reports, and the zero-row/column
 //! prune path.
 
+mod common;
+
+use common::ht_cfg as cfg;
 use dntt::coordinator::{run_job, Decomposition, InputSpec, JobConfig};
 use dntt::dist::chunkstore::SpillMode;
 use dntt::dist::{Comm, ProcGrid, SharedStore, TensorBlock};
-use dntt::ht::{dist_nht, ht_serial, nht_on_threads, HtConfig, SyntheticHt};
-use dntt::nmf::NmfConfig;
+use dntt::ht::{dist_nht, ht_serial, nht_on_threads, SyntheticHt};
 use dntt::runtime::NativeBackend;
 use dntt::tensor::DenseTensor;
 use dntt::ttrain::driver::extract_block;
 use std::sync::Arc;
-
-fn cfg(iters: usize) -> HtConfig {
-    HtConfig {
-        eps: 1e-6,
-        nmf: NmfConfig { max_iters: iters, tol: 1e-12, ..Default::default() },
-        ..Default::default()
-    }
-}
 
 /// (a) Serial HT hits the ε reconstruction target on a synthetic
 /// rank-(2,…,2) tensor.
@@ -98,7 +92,7 @@ fn p4_factors_bitwise_identical_across_ranks_and_runs() {
             let (mut row, mut col) = grid.make_subcomms(&mut world);
             dist_nht(
                 &mut world, &mut row, &mut col, &store, &pg, grid, &dims,
-                TensorBlock::Dense(my), &NativeBackend, &c,
+                TensorBlock::Dense(my), &NativeBackend, &c, None,
             )
             .unwrap()
         })

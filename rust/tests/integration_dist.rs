@@ -1,7 +1,11 @@
 //! Integration: the distributed substrate as a whole — collectives against
 //! serial references, distReshape against the dense reshape semantics,
-//! disk-spilled stores, and the cost model's qualitative behaviour.
+//! disk-spilled stores (including drop-time spill cleanup and its
+//! `keep_spill` escape hatch), and the cost model's qualitative behaviour.
 
+mod common;
+
+use common::{chunk_files_in, unique_temp_dir};
 use dntt::dist::chunkstore::{dist_reshape, Layout, SharedStore, SpillMode};
 use dntt::dist::{BlockDim, Comm, CostModel, Grid2d, ProcGrid};
 use dntt::tensor::DenseTensor;
@@ -53,7 +57,7 @@ fn dist_reshape_disk_spill_identical() {
     let t = DenseTensor::<f64>::rand_uniform(&dims, &mut rng);
     let grid = ProcGrid::new(vec![2, 1, 2]).unwrap();
     let g2 = grid.to_2d();
-    let dir = std::env::temp_dir().join(format!("dntt_it_spill_{}", std::process::id()));
+    let dir = unique_temp_dir("it_spill");
 
     let run = |spill: SpillMode, t: DenseTensor<f64>, grid: ProcGrid| {
         let store = SharedStore::new(spill);
@@ -107,6 +111,63 @@ fn cost_model_qualitative() {
     let t256 = m.model_breakdown(&b, 256);
     assert_eq!(t16.secs(Cat::MatMul), 1.0);
     assert!(t256.comm_secs() > t16.comm_secs());
+}
+
+/// Dropping a store deletes the spill files of every array still stored
+/// (an erroring job must not litter the spill directory); the
+/// `keep_spill` escape hatch preserves them for post-mortems.
+#[test]
+fn store_drop_cleans_spill_files_unless_kept() {
+    let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+    // Default: cleanup on drop.
+    let dir = unique_temp_dir("drop_clean");
+    {
+        let store = SharedStore::new(SpillMode::Disk(dir.clone()));
+        store.publish("a", &l, 0, vec![1.0; 4]).unwrap();
+        store.publish("b", &l, 0, vec![2.0; 4]).unwrap();
+        assert_eq!(chunk_files_in(&dir), 2);
+        // `a` is never removed by the "job" — drop must clean it up.
+        store.remove("b");
+        assert_eq!(chunk_files_in(&dir), 1);
+    }
+    assert_eq!(chunk_files_in(&dir), 0, "drop must delete remaining spill files");
+    // Escape hatch: keep_spill leaves the files for inspection.
+    let dir2 = unique_temp_dir("drop_keep");
+    {
+        let store = SharedStore::new(SpillMode::Disk(dir2.clone()));
+        store.set_keep_spill(true);
+        assert!(store.keep_spill());
+        store.publish("a", &l, 0, vec![1.0; 4]).unwrap();
+    }
+    assert_eq!(chunk_files_in(&dir2), 1, "keep_spill must preserve spill files");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+/// End to end: after a disk-spilled `run_job` the spill directory holds
+/// no chunk files (the drivers remove arrays as they consume them, and
+/// the store's drop sweeps anything left).
+#[test]
+fn disk_spill_job_leaves_spill_dir_empty() {
+    use dntt::coordinator::{run_job, InputSpec, JobConfig};
+    use dntt::nmf::NmfConfig;
+    use dntt::ttrain::{SyntheticTt, TtConfig};
+    let dir = unique_temp_dir("job_spill_empty");
+    let job = JobConfig {
+        tt: TtConfig {
+            fixed_ranks: Some(vec![2, 2]),
+            nmf: NmfConfig { max_iters: 10, ..Default::default() },
+            ..Default::default()
+        },
+        spill: SpillMode::Disk(dir.clone()),
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(vec![4, 4, 4], vec![2, 2], 3)),
+            ProcGrid::new(vec![2, 1, 2]).unwrap(),
+        )
+    };
+    run_job(&job).unwrap();
+    assert_eq!(chunk_files_in(&dir), 0, "spill dir must be empty after the job");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Thread-rank worlds are reusable and deterministic across runs.

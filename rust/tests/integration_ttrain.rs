@@ -1,19 +1,14 @@
 //! Integration: the full distributed nTT against ground truth, across
 //! grids, backends, algorithms and spill modes.
 
+mod common;
+
+use common::{tt_cfg_algo as cfg, unique_temp_dir};
 use dntt::coordinator::{run_job, BackendChoice, InputSpec, JobConfig};
 use dntt::dist::chunkstore::SpillMode;
 use dntt::dist::ProcGrid;
 use dntt::nmf::{NmfAlgo, NmfConfig};
 use dntt::ttrain::{ntt_serial, SyntheticTt, TtConfig};
-
-fn cfg(iters: usize, algo: NmfAlgo) -> TtConfig {
-    TtConfig {
-        eps: 1e-6,
-        nmf: NmfConfig { max_iters: iters, algo, ..Default::default() },
-        ..Default::default()
-    }
-}
 
 /// Rank recovery + reconstruction across three different grids.
 #[test]
@@ -73,7 +68,7 @@ fn alternative_update_rules() {
 fn spill_mode_equivalence() {
     let syn = SyntheticTt::new(vec![4, 6, 4], vec![2, 2], 13);
     let grid = ProcGrid::new(vec![2, 1, 2]).unwrap();
-    let dir = std::env::temp_dir().join(format!("dntt_tt_spill_{}", std::process::id()));
+    let dir = unique_temp_dir("tt_spill");
     let mk = |spill| JobConfig {
         tt: cfg(40, NmfAlgo::Bcd),
         spill,

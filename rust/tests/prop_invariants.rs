@@ -1,8 +1,14 @@
 //! Property tests over the system's cross-module invariants (the library's
 //! substitute for proptest — see `dntt::util::prop`).
 
-use dntt::dist::chunkstore::{Layout, SharedStore, SpillMode};
+mod common;
+
+use common::unique_temp_dir;
+use dntt::dist::checkpoint::{restore_array, snapshot_array, ArraySnapshot};
+use dntt::dist::chunkstore::{Layout, SharedStore, SpillMode, TensorBlock};
 use dntt::dist::{BlockDim, Comm, Grid2d};
+use dntt::tensor::sparse::SparseChunk;
+use dntt::util::json::Json;
 use dntt::linalg::gemm::{gram_mt_m, matmul, matmul_at_b};
 use dntt::linalg::Mat;
 use dntt::nmf::{dist_nmf, NmfAlgo, NmfConfig};
@@ -39,6 +45,107 @@ fn prop_store_roundtrip_all_layouts() {
         if store.view("x").unwrap().to_dense() != x.as_slice() {
             return Err(format!("matgrid roundtrip {m}x{n} {pr}x{pc}"));
         }
+        Ok(())
+    });
+}
+
+/// Checkpoint snapshot → restore is the identity on the chunk store, for
+/// random layout geometries (TensorGrid / MatGrid / HtGrid), randomly
+/// mixed dense and sparse chunks, memory- and disk-backed stores:
+/// bitwise-identical logical contents, preserved representation
+/// (`has_sparse`, `nnz_estimate`) and exact byte accounting against the
+/// spill formats.
+#[test]
+fn prop_snapshot_roundtrip_all_layouts() {
+    check_cases(9008, 40, |rng| {
+        // Random layout among the three publishable-geometry kinds.
+        let layout = match rng.below(3) {
+            0 => {
+                let d = 2 + rng.below(2);
+                let dims: Vec<usize> = (0..d).map(|_| 1 + rng.below(5)).collect();
+                let grid: Vec<usize> =
+                    dims.iter().map(|&n| 1 + rng.below(n.min(3))).collect();
+                Layout::TensorGrid { dims, grid }
+            }
+            1 => Layout::MatGrid {
+                m: 1 + rng.below(10),
+                n: 1 + rng.below(10),
+                pr: 1 + rng.below(3),
+                pc: 1 + rng.below(3),
+            },
+            _ => Layout::HtGrid {
+                r: 1 + rng.below(5),
+                n: 1 + rng.below(10),
+                pr: 1 + rng.below(2),
+                pc: 1 + rng.below(3),
+            },
+        };
+        let disk_store = rng.below(2) == 1;
+        let dir = unique_temp_dir("prop_snap");
+        let spill_dir = unique_temp_dir("prop_snap_spill");
+        let store = SharedStore::new(if disk_store {
+            SpillMode::Disk(spill_dir.clone())
+        } else {
+            SpillMode::Memory
+        });
+        // Publish every chunk, randomly dense or sparse.
+        for c in 0..layout.num_chunks() {
+            let len = layout.chunk_len(c);
+            let block = if rng.below(2) == 0 {
+                TensorBlock::Dense((0..len).map(|_| rng.uniform()).collect())
+            } else {
+                let idx: Vec<usize> = (0..len).filter(|_| rng.below(3) == 0).collect();
+                let vals: Vec<f64> = idx.iter().map(|_| 1.0 + rng.uniform()).collect();
+                TensorBlock::Sparse(SparseChunk::new(len, idx, vals).unwrap())
+            };
+            store.publish_block("a", &layout, c, block).map_err(|e| e.to_string())?;
+        }
+        let view = store.view("a").map_err(|e| e.to_string())?;
+        let snap = snapshot_array(&dir, "a", &view).map_err(|e| e.to_string())?;
+        // Byte accounting: every file's size equals both the manifest
+        // record and what the spill format dictates.
+        for meta in &snap.chunks {
+            let want = match meta.nnz {
+                None => 8 * meta.len as u64,
+                Some(nnz) => 8 * (1 + 2 * nnz) as u64,
+            };
+            if meta.bytes != want {
+                return Err(format!(
+                    "{}: recorded {} bytes, format says {want}",
+                    meta.file, meta.bytes
+                ));
+            }
+            let on_disk = std::fs::metadata(dir.join(&meta.file)).map_err(|e| e.to_string())?.len();
+            if on_disk != want {
+                return Err(format!("{}: {on_disk} bytes on disk, expected {want}", meta.file));
+            }
+        }
+        // The snapshot record survives a JSON text round trip.
+        let snap2 = ArraySnapshot::from_json(
+            &Json::parse(&snap.to_json().to_string()).map_err(|e| e.to_string())?,
+        )
+        .map_err(|e| e.to_string())?;
+        if snap2 != snap {
+            return Err("snapshot JSON roundtrip changed the record".into());
+        }
+        // Restore into a fresh store: bitwise-identical contents and
+        // preserved representation.
+        let store2 = SharedStore::new(SpillMode::Memory);
+        restore_array(&dir, &snap2, &store2, "b").map_err(|e| e.to_string())?;
+        let view2 = store2.view("b").map_err(|e| e.to_string())?;
+        if view2.to_dense() != view.to_dense() {
+            return Err(format!("restored contents differ for {layout:?}"));
+        }
+        if view2.has_sparse() != view.has_sparse()
+            || view2.nnz_estimate() != view.nnz_estimate()
+        {
+            return Err("restored representation differs".into());
+        }
+        drop(view);
+        drop(view2);
+        let _ = std::fs::remove_dir_all(&dir);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&spill_dir);
         Ok(())
     });
 }

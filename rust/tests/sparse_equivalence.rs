@@ -5,9 +5,12 @@
 //! sparse round-trip (exact zeros restored), sparse chunk spill, and the
 //! COO ingest edge cases.
 
+mod common;
+
+use common::{block_of, sparse_rand, unique_temp_dir};
 use dntt::coordinator::{run_job, Decomposition, InputSpec, JobConfig};
 use dntt::dist::chunkstore::SpillMode;
-use dntt::dist::{BlockDim, Comm, Grid2d, ProcGrid, SharedStore};
+use dntt::dist::{Comm, Grid2d, ProcGrid, SharedStore};
 use dntt::linalg::gemm::matmul;
 use dntt::linalg::sparse::SparseMat;
 use dntt::linalg::{DenseOrSparse, Mat};
@@ -17,29 +20,6 @@ use dntt::nmf::{
 use dntt::runtime::NativeBackend;
 use dntt::tensor::SparseTensor;
 use dntt::ttrain::{ntt_sparse_on_threads, SyntheticSparse, TtConfig};
-
-/// Dense non-negative matrix with exact zeros at the given density.
-fn sparse_rand(m: usize, n: usize, density: f64, seed: u64) -> Mat<f64> {
-    let mut rng = dntt::util::rng::Rng::new(seed);
-    Mat::from_fn(m, n, |_, _| {
-        if rng.uniform() < density {
-            0.5 + rng.uniform()
-        } else {
-            0.0
-        }
-    })
-}
-
-/// Block (i, j) of a full matrix under the MatGrid partition.
-fn block_of(x: &Mat<f64>, grid: Grid2d, rank: usize) -> Mat<f64> {
-    let (m, n) = x.shape();
-    let (i, j) = grid.coords(rank);
-    let rows = BlockDim::new(m, grid.pr);
-    let cols = BlockDim::new(n, grid.pc);
-    Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
-        x[(rows.start_of(i) + a, cols.start_of(j) + b)]
-    })
-}
 
 /// Run the distributed NMF on every rank of `grid`, dense or sparse
 /// blocks, and return the per-rank outputs.
@@ -273,7 +253,7 @@ fn pruned_sparse_roundtrip_restores_exact_zeros() {
 fn sparse_job_disk_spill_matches_memory() {
     let syn = SyntheticSparse::new(vec![6, 4, 4], 0.12, 55);
     let grid = ProcGrid::new(vec![2, 1, 1]).unwrap();
-    let dir = std::env::temp_dir().join(format!("dntt_sparse_spill_{}", std::process::id()));
+    let dir = unique_temp_dir("sparse_spill");
     let mk = |spill: SpillMode| JobConfig {
         tt: TtConfig {
             fixed_ranks: Some(vec![2, 2]),
