@@ -1,0 +1,64 @@
+//! Micro: serve-layer query throughput (the read side of the system).
+//!
+//! Measures [`dntt::serve::TtHandle`] batched point queries against the
+//! naive per-element chain on the same random query stream over a 16^4
+//! TT with internal ranks [8, 8, 8] — the acceptance case is batch size
+//! 4096, where prefix caching over the sorted batch must buy ≥ 2× over
+//! `TTensor::element` per query (warn-only CI gate in
+//! `bench/baseline.json`). Both sides of each pair are credited with the
+//! same nominal flops (2·Σ r·r′ per point), so the GF/s ratio in the
+//! `dntt-bench-v1` envelope *is* the throughput ratio. Emits
+//! `bench_results/BENCH_query_throughput.json`; `-- --smoke` trims the
+//! timing budget but keeps every batch size.
+
+use dntt::bench::harness::Bench;
+use dntt::serve::{QueryWorkspace, TtHandle};
+use dntt::tensor::TTensor;
+use dntt::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(42);
+
+    let dims = [16usize, 16, 16, 16];
+    let inner = [8usize, 8, 8];
+    let tt = TTensor::<f64>::rand_uniform(&dims, &inner, &mut rng).expect("tt fixture");
+    // Nominal per-point cost of the uncached chain: one fma per
+    // (left-rank, right-rank) pair of every core row.
+    let ranks = tt.ranks().to_vec();
+    let point_flops: f64 = ranks.windows(2).map(|w| 2.0 * (w[0] * w[1]) as f64).sum();
+    let handle = TtHandle::new(tt);
+    let mut ws = QueryWorkspace::new();
+
+    let d = dims.len();
+    for &q in &[1usize, 64, 4096] {
+        let queries: Vec<usize> = (0..q * d).map(|i| rng.below(dims[i % d])).collect();
+        let flops = q as f64 * point_flops;
+        let mut out = Vec::with_capacity(q);
+        b.run_case(&format!("tt_batched q={q}"), &[q, d], flops, || {
+            handle.batch_into(&queries, &mut ws, &mut out).expect("batched query")
+        });
+        let tt = handle.tt();
+        b.run_case(&format!("tt_naive q={q}"), &[q, d], flops, || {
+            let mut acc = 0.0f64;
+            for idx in queries.chunks(d) {
+                acc += tt.element(idx);
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    // Console summary of the acceptance ratio (batched ≥ 2× at q=4096).
+    let gf = |name: &str| {
+        b.results().iter().find(|s| s.name == name).map(|s| s.gflops()).unwrap_or(0.0)
+    };
+    let naive = gf("tt_naive q=4096");
+    let batched = gf("tt_batched q=4096");
+    if naive > 0.0 {
+        println!(
+            "\n16^4 r8 q=4096: naive {naive:.3} GF/s, batched {batched:.3} GF/s ({:.2}x)",
+            batched / naive
+        );
+    }
+    b.save("query_throughput").unwrap();
+}

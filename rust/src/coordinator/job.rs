@@ -71,6 +71,17 @@ impl InputSpec {
         }
     }
 
+    /// Input *storage* size in elements: the dense element count, except
+    /// for sparse inputs, which are credited with their nnz (exact when
+    /// countable, expected otherwise) — the honest denominator-free basis
+    /// for [`crate::coordinator::JobReport`]'s compression ratio.
+    pub fn storage_elems(&self) -> f64 {
+        match self {
+            InputSpec::SyntheticSparse(s) => s.storage_nnz(),
+            other => other.dims().iter().map(|&n| n as f64).product(),
+        }
+    }
+
     /// Materialize the full tensor when feasible (None for the synthetic
     /// inputs, which are generated blockwise).
     pub fn materialize(&self) -> Option<Arc<DenseTensor<f64>>> {

@@ -54,6 +54,24 @@ impl DecompOutput {
         }
     }
 
+    /// Compression ratio against an explicit input storage size in
+    /// elements (sparse inputs: the nnz, not the dense bounding box).
+    pub fn compression_vs(&self, input_elems: f64) -> f64 {
+        match self {
+            DecompOutput::Tt(o) => o.tt.compression_ratio_vs(input_elems),
+            DecompOutput::Ht(o) => o.ht.compression_ratio_vs(input_elems),
+        }
+    }
+
+    /// Clone the assembled network into a servable
+    /// [`Artifact`](crate::tensor::io::Artifact) (the `--out` payload).
+    pub fn artifact(&self) -> crate::tensor::io::Artifact {
+        match self {
+            DecompOutput::Tt(o) => crate::tensor::io::Artifact::Tt(o.tt.clone()),
+            DecompOutput::Ht(o) => crate::tensor::io::Artifact::Ht(o.ht.clone()),
+        }
+    }
+
     pub fn is_nonneg(&self) -> bool {
         match self {
             DecompOutput::Tt(o) => o.tt.is_nonneg(),
@@ -112,7 +130,9 @@ impl JobReport {
             dims: job.input.dims(),
             grid: job.grid.dims().to_vec(),
             ranks: output.ranks(),
-            compression: output.compression(),
+            // Honest ratio: sparse inputs are credited with their stored
+            // nnz, dense inputs with the full element count.
+            compression: output.compression_vs(job.input.storage_elems()),
             rel_error,
             wall_secs,
             measured: output.breakdown().clone(),

@@ -11,7 +11,10 @@
 //!   per-chunk dense/sparse kernel dispatch, and two tensor-network
 //!   drivers: the tensor train (Alg 2, `ttrain`) and the hierarchical
 //!   Tucker (`ht`) over the balanced dimension tree — the same
-//!   two-network family as LANL's pyDNTNK.
+//!   two-network family as LANL's pyDNTNK. The `serve` layer turns a
+//!   finished decomposition into a batch-queryable artifact
+//!   (point/fiber/slice queries, TT contraction, rounding to an ε or
+//!   rank budget) persisted through `tensor::io`.
 //! * **L2/L1 (`python/compile/`)** — the NMF inner iteration as a JAX
 //!   graph built from Pallas kernels, AOT-lowered to HLO text at build time.
 //! * **Runtime (`runtime`)** — loads the AOT artifacts through the `xla`
@@ -35,6 +38,7 @@ pub mod ht;
 pub mod linalg;
 pub mod nmf;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod ttrain;
 pub mod util;

@@ -3,6 +3,8 @@
 //! Subcommands map one-to-one onto the paper's experiments:
 //!
 //! * `decompose` — run the dnTT on a synthetic/sparse/faces/video tensor;
+//! * `query`     — serve batched point/fiber/slice queries from a saved
+//!   `.dntt` artifact (the read side — see `dntt::serve`);
 //! * `scaling`   — Figs 5/6/7 series (strong / weak / TT-rank scaling);
 //! * `sweep`     — Figs 2/8a/8b/8c compression-vs-error curves;
 //! * `denoise`   — Fig 9 SSIM comparison (SVD-TT vs NMF-TT);
@@ -34,6 +36,7 @@ fn main() {
     let result = match cmd {
         "decompose" => cmd_decompose(&rest),
         "inspect" => cmd_inspect(&rest),
+        "query" => cmd_query(&rest),
         "scaling" => cmd_scaling(&rest),
         "sweep" => cmd_sweep(&rest),
         "denoise" => cmd_denoise(&rest),
@@ -56,6 +59,7 @@ fn top_usage() -> String {
      COMMANDS:\n\
      \x20 decompose   decompose a tensor (synthetic | faces | video)\n\
      \x20 inspect     inspect / evaluate a saved .dntt tensor train\n\
+     \x20 query       serve point/fiber/slice queries from a .dntt artifact\n\
      \x20 scaling     strong/weak/TT-rank scaling series (Figs 5-7)\n\
      \x20 sweep       compression-vs-error curves (Figs 2, 8a-c)\n\
      \x20 denoise     SSIM denoising comparison (Fig 9)\n\
@@ -97,6 +101,7 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         .opt("fault-plan", "", "kills 'rank:op[,rank:op…]' or 'seed:<u64>' (fault-inject builds)")
         .opt("seed", "42", "random seed")
         .opt("save-tt", "", "write the decomposition to this .dntt file (tt only)")
+        .opt("out", "", "persist the decomposition (tt or ht) as a servable .dntt artifact")
         .opt("round", "", "TT-round the result to this tolerance (SVD; drops non-negativity)")
         .flag("prune", "prune all-zero rows/cols of each stage matrix before the NMF")
         .flag("keep-spill", "leave spill chunk files on disk after the job")
@@ -233,6 +238,190 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
             let path = std::path::PathBuf::from(a.get("save-tt"));
             dntt::tensor::io::save_tt(&tt, &path).map_err(|e| e.to_string())?;
             println!("saved TT to {path:?} ({} params)", tt.num_params());
+        }
+    }
+    if !a.get("out").is_empty() {
+        // Servable artifact for `dntt query` — works for both networks
+        // (unlike --save-tt, kept for backwards compatibility).
+        let path = std::path::PathBuf::from(a.get("out"));
+        let artifact = rep.output.artifact();
+        dntt::tensor::io::save_artifact(&artifact, &path).map_err(|e| e.to_string())?;
+        println!(
+            "saved {} artifact to {path:?} ({} params)",
+            artifact.kind_name(),
+            artifact.num_params()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_query(argv: &[String]) -> Result<(), String> {
+    use dntt::serve::{HtHandle, HtQueryWorkspace, QueryWorkspace, TtHandle};
+    use dntt::tensor::io::{load_artifact, Artifact};
+    use dntt::util::json::Json;
+
+    let spec = ArgSpec::new("dntt query", "serve batched queries from a saved .dntt artifact")
+        .pos("file", "path to a .dntt artifact (tt or ht)")
+        .opt("at", "", "one point query, e.g. --at 3,1,4,1")
+        .opt("fiber", "", "fiber along this mode through the --at anchor")
+        .opt("slice", "", "slice 'mode:index', e.g. --slice 2:5")
+        .opt("points", "0", "time N random point queries (batched; seeded)")
+        .opt("batch", "4096", "batch size for --points")
+        .opt("seed", "7", "random-query seed")
+        .opt("round", "", "TT-round to this tolerance before serving (tt only)")
+        .opt("max-rank", "", "cap every TT rank before serving (tt only)")
+        .flag("compare", "with --points: also time naive per-element evaluation")
+        .flag("json", "emit results as JSON");
+    let a = spec.parse(argv)?;
+    let path = a
+        .positionals()
+        .first()
+        .ok_or_else(|| format!("missing <file>\n\n{}", spec.usage()))?;
+    let mut artifact = load_artifact(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+
+    // Optional recompression before serving (TT only).
+    if !a.get("round").is_empty() || !a.get("max-rank").is_empty() {
+        let Artifact::Tt(tt) = &artifact else {
+            return Err("--round/--max-rank are only supported for tt artifacts".into());
+        };
+        let eps = if a.get("round").is_empty() { 0.0 } else { a.f64("round")? };
+        let cap =
+            if a.get("max-rank").is_empty() { None } else { Some(a.usize("max-rank")?) };
+        let rounded = dntt::serve::truncate(tt, eps, cap).map_err(|e| e.to_string())?;
+        println!(
+            "truncated (eps {eps}, max-rank {cap:?}): ranks {:?}, {} params",
+            rounded.ranks(),
+            rounded.num_params()
+        );
+        artifact = Artifact::Tt(rounded);
+    }
+
+    let dims = artifact.dims().to_vec();
+    let d = dims.len();
+    println!(
+        "artifact      : {path} ({}, dims {:?}, {} params)",
+        artifact.kind_name(),
+        dims,
+        artifact.num_params()
+    );
+
+    // Dispatch one batch through whichever handle the artifact needs.
+    enum Served {
+        Tt(TtHandle, QueryWorkspace),
+        Ht(HtHandle, HtQueryWorkspace),
+    }
+    let mut served = match artifact {
+        Artifact::Tt(tt) => Served::Tt(TtHandle::new(tt), QueryWorkspace::new()),
+        Artifact::Ht(ht) => Served::Ht(HtHandle::new(ht), HtQueryWorkspace::new()),
+    };
+
+    let at: Option<Vec<usize>> = if a.get("at").is_empty() {
+        None
+    } else {
+        let idx = a.usize_list("at")?;
+        if idx.len() != d {
+            return Err(format!("--at needs {d} indices"));
+        }
+        Some(idx)
+    };
+
+    if let Some(idx) = &at {
+        if a.get("fiber").is_empty() {
+            let v = match &mut served {
+                Served::Tt(h, ws) => {
+                    let mut out = Vec::new();
+                    h.batch_into(idx, ws, &mut out).map_err(|e| e.to_string())?;
+                    out[0]
+                }
+                Served::Ht(h, ws) => {
+                    let mut out = Vec::new();
+                    h.batch_into(idx, ws, &mut out).map_err(|e| e.to_string())?;
+                    out[0]
+                }
+            };
+            println!("A{idx:?} = {v}");
+        }
+    }
+    if !a.get("fiber").is_empty() {
+        let mode = a.usize("fiber")?;
+        let anchor = at.clone().ok_or("--fiber needs an --at anchor")?;
+        let fib = match &mut served {
+            Served::Tt(h, ws) => h.fiber(mode, &anchor, ws).map_err(|e| e.to_string())?,
+            Served::Ht(h, ws) => h.fiber(mode, &anchor, ws).map_err(|e| e.to_string())?,
+        };
+        println!("fiber(mode {mode} through {anchor:?}) = {fib:?}");
+    }
+    if !a.get("slice").is_empty() {
+        let (ms, is) = a
+            .get("slice")
+            .split_once(':')
+            .ok_or("--slice wants 'mode:index'")?;
+        let mode: usize = ms.trim().parse().map_err(|_| format!("bad slice mode '{ms}'"))?;
+        let index: usize = is.trim().parse().map_err(|_| format!("bad slice index '{is}'"))?;
+        let sl = match &mut served {
+            Served::Tt(h, ws) => h.slice(mode, index, ws).map_err(|e| e.to_string())?,
+            Served::Ht(h, ws) => h.slice(mode, index, ws).map_err(|e| e.to_string())?,
+        };
+        println!(
+            "slice(mode {mode} = {index}): dims {:?}, fro norm {:.6e}",
+            sl.dims(),
+            sl.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt()
+        );
+    }
+
+    let points = a.usize("points")?;
+    if points > 0 {
+        let batch = a.usize("batch")?.max(1);
+        let mut rng = dntt::util::rng::Rng::new(a.usize("seed")? as u64);
+        let queries: Vec<usize> =
+            (0..points * d).map(|i| rng.below(dims[i % d])).collect();
+        let mut out = Vec::new();
+        let t0 = std::time::Instant::now();
+        for chunk in queries.chunks(batch * d) {
+            match &mut served {
+                Served::Tt(h, ws) => h.batch_into(chunk, ws, &mut out),
+                Served::Ht(h, ws) => h.batch_into(chunk, ws, &mut out),
+            }
+            .map_err(|e| e.to_string())?;
+        }
+        let batched_s = t0.elapsed().as_secs_f64();
+        let qps = points as f64 / batched_s;
+        let naive_s = if a.flag("compare") {
+            let t1 = std::time::Instant::now();
+            let mut acc = 0.0f64;
+            for q in queries.chunks(d) {
+                acc += match &served {
+                    Served::Tt(h, _) => h.tt().element(q),
+                    Served::Ht(h, _) => h.element(q).map_err(|e| e.to_string())?,
+                };
+            }
+            std::hint::black_box(acc);
+            Some(t1.elapsed().as_secs_f64())
+        } else {
+            None
+        };
+        if a.flag("json") {
+            let mut pairs = vec![
+                ("points", Json::Num(points as f64)),
+                ("batch", Json::Num(batch as f64)),
+                ("batched_secs", Json::Num(batched_s)),
+                ("queries_per_sec", Json::Num(qps)),
+            ];
+            if let Some(ns) = naive_s {
+                pairs.push(("naive_secs", Json::Num(ns)));
+                pairs.push(("speedup", Json::Num(ns / batched_s)));
+            }
+            println!("{}", Json::obj(pairs).to_pretty());
+        } else {
+            println!(
+                "{points} point queries in batches of {batch}: {batched_s:.4}s ({qps:.0} q/s)"
+            );
+            if let Some(ns) = naive_s {
+                println!(
+                    "naive per-element: {ns:.4}s — batched speedup {:.2}x",
+                    ns / batched_s
+                );
+            }
         }
     }
     Ok(())

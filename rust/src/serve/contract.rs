@@ -1,0 +1,175 @@
+//! TT×vector / TT×matrix contraction — transform or reduce modes while
+//! staying in TT form (never densifying).
+//!
+//! * [`tt_contract_matrix`] — the mode product `A ×_m U`: replace mode
+//!   `m` (size `n_m`) by `U`'s row space (size `p`), e.g. projecting a
+//!   mode onto a basis. Ranks are unchanged; only core `m` is rebuilt.
+//! * [`tt_contract_vec`] — contract mode `m` against a vector: the
+//!   `r_m × r_{m+1}` matrix `Σ_j v_j·G_m[·, j, ·]` is absorbed into a
+//!   neighboring core, yielding a `(d−1)`-mode train.
+//! * [`tt_contract_all`] — contract *every* mode against a vector:
+//!   `⟨A, v_1 ⊗ … ⊗ v_d⟩`, cost `O(Σ n_m·r_m·r_{m+1})` — the TT inner
+//!   product against a rank-1 tensor, without materializing anything.
+//!
+//! These are the Cichocki tensor-network primitives (arXiv:1609.00893
+//! §4); results carry normal floating-point tolerance (they reassociate
+//! sums), unlike the bitwise-exact query paths in
+//! [`handle`](crate::serve::handle).
+
+use crate::error::{DnttError, Result};
+use crate::linalg::gemm::matmul;
+use crate::linalg::{Mat, Scalar};
+use crate::tensor::TTensor;
+
+/// The `r_m × r_{m+1}` contraction matrix `Σ_j v[j]·G_m[·, j, ·]`.
+fn mode_matrix(tt: &TTensor<f64>, mode: usize, v: &[f64]) -> Mat<f64> {
+    let (r_prev, n, r_next) = (tt.ranks()[mode], tt.dims()[mode], tt.ranks()[mode + 1]);
+    let core = tt.core(mode);
+    let mut m = Mat::zeros(r_prev, r_next);
+    for k in 0..r_prev {
+        let mrow = m.row_mut(k);
+        for (j, &vj) in v.iter().enumerate().take(n) {
+            if vj == 0.0 {
+                continue;
+            }
+            let row = core.row(k * n + j);
+            for (c, o) in mrow.iter_mut().enumerate() {
+                *o = row[c].fma(vj, *o);
+            }
+        }
+    }
+    m
+}
+
+fn check_mode(tt: &TTensor<f64>, mode: usize) -> Result<()> {
+    if mode >= tt.dims().len() {
+        return Err(DnttError::shape(format!(
+            "mode {mode} out of range for order {}",
+            tt.dims().len()
+        )));
+    }
+    Ok(())
+}
+
+/// Mode product `A ×_mode U` with `U: p × n_mode`: mode `mode`'s size
+/// becomes `p`, all ranks unchanged.
+///
+/// ```
+/// use dntt::linalg::Mat;
+/// use dntt::serve::tt_contract_matrix;
+/// use dntt::tensor::TTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(5);
+/// let tt = TTensor::<f64>::rand_uniform(&[3, 4, 2], &[2, 2], &mut rng).unwrap();
+/// let u = Mat::<f64>::rand_uniform(6, 4, &mut rng);
+/// let prod = tt_contract_matrix(&tt, 1, &u).unwrap();
+/// assert_eq!(prod.dims(), &[3, 6, 2]);
+/// assert_eq!(prod.ranks(), tt.ranks());
+/// ```
+pub fn tt_contract_matrix(tt: &TTensor<f64>, mode: usize, u: &Mat<f64>) -> Result<TTensor<f64>> {
+    check_mode(tt, mode)?;
+    let (r_prev, n, r_next) = (tt.ranks()[mode], tt.dims()[mode], tt.ranks()[mode + 1]);
+    if u.cols() != n {
+        return Err(DnttError::shape(format!(
+            "mode product: U has {} cols, mode {mode} has size {n}",
+            u.cols()
+        )));
+    }
+    if u.rows() == 0 {
+        return Err(DnttError::shape("mode product: U must have at least one row"));
+    }
+    let core = tt.core(mode);
+    // Per left-rank block: (n × r_next) slab → (p × r_next).
+    let mut new_core = Mat::zeros(r_prev * u.rows(), r_next);
+    for a in 0..r_prev {
+        let block = core.rows_slice(a * n, (a + 1) * n);
+        let prod = matmul(u, &block);
+        for i in 0..u.rows() {
+            new_core.row_mut(a * u.rows() + i).copy_from_slice(prod.row(i));
+        }
+    }
+    let mut dims = tt.dims().to_vec();
+    dims[mode] = u.rows();
+    let mut cores = tt.cores().to_vec();
+    cores[mode] = new_core;
+    TTensor::new(dims, cores)
+}
+
+/// Contract mode `mode` against `v` (length `n_mode`), absorbing the
+/// resulting `r_mode × r_{mode+1}` matrix into the next core (previous
+/// core for the last mode). Returns the `(d−1)`-mode train.
+pub fn tt_contract_vec(tt: &TTensor<f64>, mode: usize, v: &[f64]) -> Result<TTensor<f64>> {
+    check_mode(tt, mode)?;
+    let d = tt.dims().len();
+    if d == 1 {
+        return Err(DnttError::config(
+            "cannot contract the only mode of a 1-mode train (use tt_contract_all)",
+        ));
+    }
+    if v.len() != tt.dims()[mode] {
+        return Err(DnttError::shape(format!(
+            "contract: vector has {} entries, mode {mode} has size {}",
+            v.len(),
+            tt.dims()[mode]
+        )));
+    }
+    let m = mode_matrix(tt, mode, v);
+    let mut dims = tt.dims().to_vec();
+    let mut cores = tt.cores().to_vec();
+    dims.remove(mode);
+    if mode + 1 < d {
+        // Fold left into the next core: M·(core viewed r × (n·r')).
+        let (r_old, n_next, r_after) =
+            (tt.ranks()[mode + 1], tt.dims()[mode + 1], tt.ranks()[mode + 2]);
+        let view = cores[mode + 1].clone().reshaped(r_old, n_next * r_after);
+        cores[mode + 1] = matmul(&m, &view).reshaped(tt.ranks()[mode] * n_next, r_after);
+        cores.remove(mode);
+    } else {
+        // Last mode: fold right into the previous core.
+        cores[mode - 1] = matmul(&cores[mode - 1], &m);
+        cores.remove(mode);
+    }
+    TTensor::new(dims, cores)
+}
+
+/// Full contraction `⟨A, v_1 ⊗ … ⊗ v_d⟩` — one vector per mode.
+///
+/// ```
+/// use dntt::serve::tt_contract_all;
+/// use dntt::tensor::TTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(5);
+/// let tt = TTensor::<f64>::rand_uniform(&[3, 4], &[2], &mut rng).unwrap();
+/// // Indicator vectors pick out a single element.
+/// let mut e1 = vec![0.0; 3];
+/// let mut e2 = vec![0.0; 4];
+/// e1[2] = 1.0;
+/// e2[1] = 1.0;
+/// let got = tt_contract_all(&tt, &[e1, e2]).unwrap();
+/// assert!((got - tt.element(&[2, 1])).abs() < 1e-12);
+/// ```
+pub fn tt_contract_all(tt: &TTensor<f64>, vecs: &[Vec<f64>]) -> Result<f64> {
+    let d = tt.dims().len();
+    if vecs.len() != d {
+        return Err(DnttError::shape(format!("need {d} vectors, got {}", vecs.len())));
+    }
+    for (m, v) in vecs.iter().enumerate() {
+        if v.len() != tt.dims()[m] {
+            return Err(DnttError::shape(format!(
+                "vector {m} has {} entries, mode has size {}",
+                v.len(),
+                tt.dims()[m]
+            )));
+        }
+    }
+    // t: 1 × r_m carried left to right through the contraction matrices.
+    let mut t = Mat::filled(1, 1, 1.0f64);
+    for mode in 0..d {
+        let a = mode_matrix(tt, mode, &vecs[mode]);
+        t = matmul(&t, &a);
+    }
+    debug_assert_eq!((t.rows(), t.cols()), (1, 1));
+    Ok(t[(0, 0)])
+}

@@ -1,0 +1,259 @@
+//! Read-optimized TT handle: batched point/fiber/slice queries with
+//! prefix-cached chained core contractions.
+//!
+//! A point query against a TT is the chain `v ← v·G_m[·, i_m, ·]`
+//! (cost `O(d·r²)`, [`TTensor::element`]). For a *batch*, sorting the
+//! queries lexicographically makes consecutive queries share index
+//! prefixes, and a prefix `(i_0..i_m)` fully determines the partial
+//! product `v_m : 1 × r_{m+1}` — so the handle keeps one cached row
+//! vector per mode and recomputes only from the first mode where the
+//! sorted query differs from its predecessor. A batch that enumerates a
+//! fiber or slice touches each prefix exactly once, dropping the cost
+//! from `O(q·d·r²)` to `O(Σ_m (#distinct prefixes of length m)·r²)`.
+//!
+//! The scalar op sequence per recomputed mode is *identical* to
+//! [`TTensor::element`] (ascending-`k` `fma` with zero-skip on the
+//! carried scalar), which is itself identical to the blocked-GEMM
+//! reconstruction path — so batched results are **bitwise equal** to both
+//! single-element evaluation and (on blocked-path shapes) dense
+//! reconstruction; `tests/serve_equivalence.rs` holds this to `to_bits`
+//! equality.
+//!
+//! With a warm [`QueryWorkspace`] and a reused output buffer,
+//! [`TtHandle::batch_into`] performs **zero heap allocations** (the sort
+//! is in-place `sort_unstable_by`; all scratch is capacity-reused),
+//! mirroring the `NmfWorkspace` discipline of the write side.
+
+use crate::error::{DnttError, Result};
+use crate::linalg::Scalar;
+use crate::tensor::{DenseTensor, TTensor};
+
+/// Reusable scratch for [`TtHandle`] batch queries: the sort permutation,
+/// the per-mode prefix row vectors, and the previous sorted query.
+/// Create once, pass to every [`TtHandle::batch_into`] call; after the
+/// first call on a given handle the hot loop allocates nothing.
+#[derive(Debug, Default)]
+pub struct QueryWorkspace {
+    perm: Vec<usize>,
+    prefix: Vec<f64>,
+    prev: Vec<usize>,
+    qbuf: Vec<usize>,
+}
+
+impl QueryWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Currently reserved heap, for capacity-stability assertions.
+    pub fn capacity_bytes(&self) -> usize {
+        self.perm.capacity() * std::mem::size_of::<usize>()
+            + self.prefix.capacity() * std::mem::size_of::<f64>()
+            + self.prev.capacity() * std::mem::size_of::<usize>()
+            + self.qbuf.capacity() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Immutable, read-optimized view of a finished [`TTensor`].
+///
+/// ```
+/// use dntt::serve::{QueryWorkspace, TtHandle};
+/// use dntt::tensor::TTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let tt = TTensor::<f64>::rand_uniform(&[3, 4, 5], &[2, 2], &mut rng).unwrap();
+/// let handle = TtHandle::new(tt);
+/// let mut ws = QueryWorkspace::new();
+/// let mut out = Vec::new();
+/// // Two point queries in one batch (flattened index tuples).
+/// handle.batch_into(&[2, 3, 4, 0, 0, 0], &mut ws, &mut out).unwrap();
+/// assert_eq!(out[0], handle.tt().element(&[2, 3, 4]));
+/// assert_eq!(out[1], handle.tt().element(&[0, 0, 0]));
+/// ```
+#[derive(Clone, Debug)]
+pub struct TtHandle {
+    tt: TTensor<f64>,
+    /// `off[m]` = start of mode `m`'s prefix vector (length `r_{m+1}`)
+    /// in the packed prefix buffer.
+    off: Vec<usize>,
+    prefix_len: usize,
+}
+
+impl TtHandle {
+    /// Wrap a finished train (shape chain already validated by
+    /// [`TTensor::new`]).
+    pub fn new(tt: TTensor<f64>) -> Self {
+        let d = tt.dims().len();
+        let mut off = Vec::with_capacity(d);
+        let mut acc = 0usize;
+        for m in 0..d {
+            off.push(acc);
+            acc += tt.ranks()[m + 1];
+        }
+        TtHandle { tt, off, prefix_len: acc }
+    }
+
+    /// The wrapped train.
+    pub fn tt(&self) -> &TTensor<f64> {
+        &self.tt
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> TTensor<f64> {
+        self.tt
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.tt.dims()
+    }
+
+    pub fn ranks(&self) -> &[usize] {
+        self.tt.ranks()
+    }
+
+    fn check_point(&self, idx: &[usize]) -> Result<()> {
+        let dims = self.tt.dims();
+        if idx.len() != dims.len() {
+            return Err(DnttError::shape(format!(
+                "query has {} modes, tensor {}",
+                idx.len(),
+                dims.len()
+            )));
+        }
+        for (m, (&i, &n)) in idx.iter().zip(dims).enumerate() {
+            if i >= n {
+                return Err(DnttError::shape(format!("query index {i} out of range {n} (mode {m})")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Single point query (bounds-checked [`TTensor::element`]).
+    pub fn element(&self, idx: &[usize]) -> Result<f64> {
+        self.check_point(idx)?;
+        Ok(self.tt.element(idx))
+    }
+
+    /// Batched point queries: `queries` holds `q` index tuples flattened
+    /// back-to-back (`len == q·d`); `out` receives the `q` values in the
+    /// *caller's* order (duplicates allowed, input order preserved).
+    ///
+    /// Zero-allocation once `ws` and `out` are warm.
+    pub fn batch_into(
+        &self,
+        queries: &[usize],
+        ws: &mut QueryWorkspace,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let dims = self.tt.dims();
+        let ranks = self.tt.ranks();
+        let d = dims.len();
+        if queries.len() % d != 0 {
+            return Err(DnttError::shape(format!(
+                "batch of {} indices is not a multiple of order {d}",
+                queries.len()
+            )));
+        }
+        let q = queries.len() / d;
+        for (m, &i) in queries.iter().enumerate() {
+            let n = dims[m % d];
+            if i >= n {
+                return Err(DnttError::shape(format!(
+                    "query {}: index {i} out of range {n} (mode {})",
+                    m / d,
+                    m % d
+                )));
+            }
+        }
+        out.clear();
+        out.resize(q, 0.0);
+        if q == 0 {
+            return Ok(());
+        }
+        ws.perm.clear();
+        ws.perm.extend(0..q);
+        ws.perm
+            .sort_unstable_by(|&a, &b| queries[a * d..(a + 1) * d].cmp(&queries[b * d..(b + 1) * d]));
+        ws.prefix.clear();
+        ws.prefix.resize(self.prefix_len, 0.0);
+        // usize::MAX never equals a valid index, so the first sorted query
+        // recomputes every mode.
+        ws.prev.clear();
+        ws.prev.resize(d, usize::MAX);
+
+        for &qi in &ws.perm {
+            let idx = &queries[qi * d..(qi + 1) * d];
+            // First mode whose index differs from the previous sorted query:
+            // prefixes 0..s are still cached.
+            let mut s = 0;
+            while s < d && idx[s] == ws.prev[s] {
+                s += 1;
+            }
+            for m in s..d {
+                let r_next = ranks[m + 1];
+                if m == 0 {
+                    ws.prefix[..r_next].copy_from_slice(self.tt.core(0).row(idx[0]));
+                } else {
+                    let core = self.tt.core(m);
+                    let (lo, hi) = ws.prefix.split_at_mut(self.off[m]);
+                    let src = &lo[self.off[m - 1]..self.off[m - 1] + ranks[m]];
+                    let dst = &mut hi[..r_next];
+                    dst.fill(0.0);
+                    // Same op sequence as `TTensor::element`: ascending k,
+                    // zero-skip on the carried scalar, fused multiply-add.
+                    for (k, &vk) in src.iter().enumerate() {
+                        if vk == 0.0 {
+                            continue;
+                        }
+                        let row = core.row(k * dims[m] + idx[m]);
+                        for (j, o) in dst.iter_mut().enumerate() {
+                            *o = row[j].fma(vk, *o);
+                        }
+                    }
+                }
+            }
+            ws.prev[s..].copy_from_slice(&idx[s..]);
+            out[qi] = ws.prefix[self.off[d - 1]];
+        }
+        Ok(())
+    }
+
+    /// Convenience [`TtHandle::batch_into`] with fresh scratch.
+    pub fn batch(&self, queries: &[usize]) -> Result<Vec<f64>> {
+        let mut ws = QueryWorkspace::new();
+        let mut out = Vec::new();
+        self.batch_into(queries, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// The mode-`mode` fiber through anchor `at` (the anchor's own
+    /// `mode` coordinate is ignored): `n_mode` values, evaluated as one
+    /// sorted batch so the shared prefix is contracted once.
+    pub fn fiber(&self, mode: usize, at: &[usize], ws: &mut QueryWorkspace) -> Result<Vec<f64>> {
+        let mut qbuf = std::mem::take(&mut ws.qbuf);
+        super::fiber_queries(self.tt.dims(), mode, at, &mut qbuf)?;
+        let mut out = Vec::with_capacity(self.tt.dims()[mode]);
+        let res = self.batch_into(&qbuf, ws, &mut out);
+        ws.qbuf = qbuf;
+        res?;
+        Ok(out)
+    }
+
+    /// The `(d−1)`-mode slice `mode = index`, row-major over the
+    /// remaining modes, evaluated as one sorted batch.
+    pub fn slice(
+        &self,
+        mode: usize,
+        index: usize,
+        ws: &mut QueryWorkspace,
+    ) -> Result<DenseTensor<f64>> {
+        let mut qbuf = std::mem::take(&mut ws.qbuf);
+        let rest = super::slice_queries(self.tt.dims(), mode, index, &mut qbuf)?;
+        let mut out = Vec::new();
+        let res = self.batch_into(&qbuf, ws, &mut out);
+        ws.qbuf = qbuf;
+        res?;
+        DenseTensor::from_vec(&rest, out)
+    }
+}

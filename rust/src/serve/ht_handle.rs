@@ -1,0 +1,284 @@
+//! Read-optimized HT handle: batched point/fiber/slice queries over the
+//! dimension tree with per-node caching.
+//!
+//! An HT point query contracts the tree bottom-up: every node `t`
+//! contributes the single row of its matrix `V_t : n_{S_t} × r_t`
+//! selected by the query's coordinates on the node's mode range
+//! `S_t = [lo, hi)` — a leaf row is read straight from the factor `U`,
+//! and an interior row is the two-step transfer contraction
+//! `m2 = b_2·B_t` (row of `M2 = U2·B_t`), then
+//! `out[k] = Σ_{j1} m2[j1·r_t + k]·b_1[j1]` (the `H1` un-permutation
+//! fused into the row product). Cost `O(tree·r²)` per query.
+//!
+//! For a *batch*, queries are sorted lexicographically and each node
+//! caches its last row: node `t`'s row depends only on coordinates in
+//! `[lo, hi)`, so it is recomputed only when the sorted query differs
+//! from its predecessor at some mode `< hi`. Nodes are walked in
+//! reverse-BFS id order (children before parents — BFS ids grow down the
+//! tree), so recomputed parents always see fresh child rows.
+//!
+//! The per-row op sequence is identical to the blocked-GEMM path of
+//! `HtTensor::reconstruct` (ascending-`k` `fma`, zero-skip on the carried
+//! scalar), so batched results are **bitwise equal** to dense
+//! reconstruction on blocked-path shapes — held to `to_bits` equality by
+//! `tests/serve_equivalence.rs`.
+
+use crate::error::{DnttError, Result};
+use crate::linalg::Scalar;
+use crate::tensor::ht::HtNode;
+use crate::tensor::{DenseTensor, HtTensor};
+
+/// Reusable scratch for [`HtHandle`] batch queries: sort permutation,
+/// packed per-node row cache, one transfer-row scratch, previous query.
+/// Zero-allocation hot loop once warm.
+#[derive(Debug, Default)]
+pub struct HtQueryWorkspace {
+    perm: Vec<usize>,
+    rows: Vec<f64>,
+    m2: Vec<f64>,
+    prev: Vec<usize>,
+    qbuf: Vec<usize>,
+}
+
+impl HtQueryWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Currently reserved heap, for capacity-stability assertions.
+    pub fn capacity_bytes(&self) -> usize {
+        self.perm.capacity() * std::mem::size_of::<usize>()
+            + self.rows.capacity() * std::mem::size_of::<f64>()
+            + self.m2.capacity() * std::mem::size_of::<f64>()
+            + self.prev.capacity() * std::mem::size_of::<usize>()
+            + self.qbuf.capacity() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Immutable, read-optimized view of a finished [`HtTensor`].
+///
+/// ```
+/// use dntt::serve::{HtHandle, HtQueryWorkspace};
+/// use dntt::tensor::HtTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let ht = HtTensor::<f64>::rand_uniform(&[3, 4, 2], 2, &mut rng).unwrap();
+/// let full = ht.reconstruct();
+/// let handle = HtHandle::new(ht);
+/// let mut ws = HtQueryWorkspace::new();
+/// let mut out = Vec::new();
+/// handle.batch_into(&[1, 2, 0], &mut ws, &mut out).unwrap();
+/// assert_eq!(out[0], full.get(&[1, 2, 0]));
+/// ```
+#[derive(Clone, Debug)]
+pub struct HtHandle {
+    ht: HtTensor<f64>,
+    /// `row_off[t]` = start of node `t`'s cached row (length `ranks[t]`)
+    /// in the packed row buffer.
+    row_off: Vec<usize>,
+    rows_len: usize,
+    /// Largest interior `r1·rt` — the transfer-row scratch size.
+    m2_max: usize,
+}
+
+impl HtHandle {
+    /// Wrap a finished HT tensor (tree already validated by
+    /// [`HtTensor::new`]).
+    pub fn new(ht: HtTensor<f64>) -> Self {
+        let nn = ht.tree().len();
+        let mut row_off = Vec::with_capacity(nn);
+        let mut acc = 0usize;
+        for t in 0..nn {
+            row_off.push(acc);
+            acc += ht.ranks()[t];
+        }
+        let mut m2_max = 0usize;
+        for t in 0..nn {
+            if let Some((lc, _)) = ht.tree().node(t).children {
+                m2_max = m2_max.max(ht.ranks()[lc] * ht.ranks()[t]);
+            }
+        }
+        HtHandle { ht, row_off, rows_len: acc, m2_max }
+    }
+
+    /// The wrapped HT tensor.
+    pub fn ht(&self) -> &HtTensor<f64> {
+        &self.ht
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> HtTensor<f64> {
+        self.ht
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.ht.dims()
+    }
+
+    /// Single point query (contract the tree once for this index).
+    pub fn element(&self, idx: &[usize]) -> Result<f64> {
+        let mut ws = HtQueryWorkspace::new();
+        let mut out = Vec::with_capacity(1);
+        self.batch_into(idx, &mut ws, &mut out)?;
+        Ok(out[0])
+    }
+
+    /// Batched point queries: `queries` holds `q` index tuples flattened
+    /// back-to-back; `out` receives the values in the caller's order.
+    /// Zero-allocation once `ws` and `out` are warm.
+    pub fn batch_into(
+        &self,
+        queries: &[usize],
+        ws: &mut HtQueryWorkspace,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let dims = self.ht.dims();
+        let ranks = self.ht.ranks();
+        let tree = self.ht.tree();
+        let d = dims.len();
+        if queries.len() % d != 0 {
+            return Err(DnttError::shape(format!(
+                "batch of {} indices is not a multiple of order {d}",
+                queries.len()
+            )));
+        }
+        let q = queries.len() / d;
+        for (m, &i) in queries.iter().enumerate() {
+            let n = dims[m % d];
+            if i >= n {
+                return Err(DnttError::shape(format!(
+                    "query {}: index {i} out of range {n} (mode {})",
+                    m / d,
+                    m % d
+                )));
+            }
+        }
+        out.clear();
+        out.resize(q, 0.0);
+        if q == 0 {
+            return Ok(());
+        }
+        ws.perm.clear();
+        ws.perm.extend(0..q);
+        ws.perm
+            .sort_unstable_by(|&a, &b| queries[a * d..(a + 1) * d].cmp(&queries[b * d..(b + 1) * d]));
+        ws.rows.clear();
+        ws.rows.resize(self.rows_len, 0.0);
+        ws.m2.clear();
+        ws.m2.resize(self.m2_max, 0.0);
+        ws.prev.clear();
+        ws.prev.resize(d, usize::MAX);
+        let mut last = 0.0f64;
+
+        for &qi in &ws.perm {
+            let idx = &queries[qi * d..(qi + 1) * d];
+            let mut s = 0;
+            while s < d && idx[s] == ws.prev[s] {
+                s += 1;
+            }
+            if s == d {
+                // Exact duplicate of the previous sorted query.
+                out[qi] = last;
+                continue;
+            }
+            // Children before parents; nodes whose mode range lies left of
+            // the changed suffix [s, d) keep their cached rows.
+            for t in (0..tree.len()).rev() {
+                let node = tree.node(t);
+                if node.hi <= s {
+                    continue;
+                }
+                match node.children {
+                    None => {
+                        let u = self.ht.node(t).mat();
+                        let dst =
+                            &mut ws.rows[self.row_off[t]..self.row_off[t] + ranks[t]];
+                        dst.copy_from_slice(u.row(idx[node.lo]));
+                    }
+                    Some((lc, rc)) => {
+                        let (r1, r2, rt) = (ranks[lc], ranks[rc], ranks[t]);
+                        let b = match self.ht.node(t) {
+                            HtNode::Transfer(b) => b,
+                            HtNode::Leaf(_) => unreachable!("validated in HtTensor::new"),
+                        };
+                        // Row of M2 = U2·B for this query: ascending j2,
+                        // zero-skip, fma — the blocked-GEMM op sequence.
+                        let m2 = &mut ws.m2[..r1 * rt];
+                        m2.fill(0.0);
+                        let b2 = &ws.rows[self.row_off[rc]..self.row_off[rc] + r2];
+                        for (j2, &a) in b2.iter().enumerate() {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let brow = b.row(j2);
+                            for (c, o) in m2.iter_mut().enumerate() {
+                                *o = brow[c].fma(a, *o);
+                            }
+                        }
+                        // Row of V_t = U1·H1 with the H1 un-permutation
+                        // fused: H1[j1, (i2, k)] = M2[i2, (j1, k)]. The
+                        // left child's cached row lives at a higher offset
+                        // (BFS: child ids > parent id), so split after the
+                        // parent's block.
+                        let (dst_part, b1_part) = ws.rows.split_at_mut(self.row_off[t] + rt);
+                        let dst = &mut dst_part[self.row_off[t]..];
+                        let b1 =
+                            &b1_part[self.row_off[lc] - self.row_off[t] - rt..][..r1];
+                        dst.fill(0.0);
+                        for (j1, &a) in b1.iter().enumerate() {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let mrow = &m2[j1 * rt..(j1 + 1) * rt];
+                            for (k, o) in dst.iter_mut().enumerate() {
+                                *o = mrow[k].fma(a, *o);
+                            }
+                        }
+                    }
+                }
+            }
+            ws.prev[s..].copy_from_slice(&idx[s..]);
+            last = ws.rows[self.row_off[0]];
+            out[qi] = last;
+        }
+        Ok(())
+    }
+
+    /// Convenience [`HtHandle::batch_into`] with fresh scratch.
+    pub fn batch(&self, queries: &[usize]) -> Result<Vec<f64>> {
+        let mut ws = HtQueryWorkspace::new();
+        let mut out = Vec::new();
+        self.batch_into(queries, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// The mode-`mode` fiber through anchor `at` (anchor's own `mode`
+    /// coordinate ignored), evaluated as one sorted batch.
+    pub fn fiber(&self, mode: usize, at: &[usize], ws: &mut HtQueryWorkspace) -> Result<Vec<f64>> {
+        let mut qbuf = std::mem::take(&mut ws.qbuf);
+        super::fiber_queries(self.ht.dims(), mode, at, &mut qbuf)?;
+        let mut out = Vec::with_capacity(self.ht.dims()[mode]);
+        let res = self.batch_into(&qbuf, ws, &mut out);
+        ws.qbuf = qbuf;
+        res?;
+        Ok(out)
+    }
+
+    /// The `(d−1)`-mode slice `mode = index`, row-major over the
+    /// remaining modes, evaluated as one sorted batch.
+    pub fn slice(
+        &self,
+        mode: usize,
+        index: usize,
+        ws: &mut HtQueryWorkspace,
+    ) -> Result<DenseTensor<f64>> {
+        let mut qbuf = std::mem::take(&mut ws.qbuf);
+        let rest = super::slice_queries(self.ht.dims(), mode, index, &mut qbuf)?;
+        let mut out = Vec::new();
+        let res = self.batch_into(&qbuf, ws, &mut out);
+        ws.qbuf = qbuf;
+        res?;
+        DenseTensor::from_vec(&rest, out)
+    }
+}

@@ -1,0 +1,120 @@
+//! `serve` — the read side of the system: turn a *finished* decomposition
+//! into a servable, batch-queryable artifact.
+//!
+//! The decomposition pipeline (`crate::ttrain`, `crate::ht`) ends with a
+//! compressed tensor network; this layer is what makes that network
+//! *useful* without ever densifying it (Cichocki's tensor-network program,
+//! arXiv:1403.2048 / 1609.00893): the ROADMAP's "heavy read traffic"
+//! scenario — decompose once, answer millions of point/fiber/slice
+//! queries against the cores.
+//!
+//! * [`TtHandle`] / [`HtHandle`] — immutable, read-optimized wrappers
+//!   around [`TTensor`](crate::tensor::TTensor) /
+//!   [`HtTensor`](crate::tensor::HtTensor) with batched element lookup,
+//!   fiber and slice extraction. Batched queries are sorted
+//!   lexicographically and evaluated with per-prefix caching of partial
+//!   contraction products, so a batch over a coherent index region costs
+//!   far fewer core-row contractions than `q` independent evaluations
+//!   (see `DESIGN.md` §2.9 for the complexity contract). The hot loop is
+//!   zero-allocation given a warm [`QueryWorkspace`] /
+//!   [`HtQueryWorkspace`].
+//! * [`contract`] — TT×vector and TT×matrix contraction
+//!   ([`tt_contract_vec`], [`tt_contract_matrix`], [`tt_contract_all`]):
+//!   reduce or transform individual modes while staying in TT form.
+//! * [`ortho`] — left/right orthogonalization sweeps (QR/RQ) and
+//!   ε-or-rank-budget truncation ([`truncate`]) so an artifact can be
+//!   recompressed before serving; `crate::ttrain::tt_round` is the
+//!   `eps`-only special case and delegates here.
+//!
+//! Every query path reproduces `TTensor::element` / `HtTensor::reconstruct`
+//! **bitwise** (same scalar op sequence: ascending-`k` fused
+//! multiply-adds with the same zero-skips) — proven by
+//! `tests/serve_equivalence.rs` against dense reconstruction.
+//!
+//! Artifacts are persisted through the versioned `dntt-tt-v1` container in
+//! [`crate::tensor::io`] (`save_artifact`/`load_artifact`); the CLI's
+//! `query` subcommand is the end-to-end consumer.
+
+pub mod contract;
+pub mod handle;
+pub mod ht_handle;
+pub mod ortho;
+
+pub use contract::{tt_contract_all, tt_contract_matrix, tt_contract_vec};
+pub use handle::{QueryWorkspace, TtHandle};
+pub use ht_handle::{HtHandle, HtQueryWorkspace};
+pub use ortho::{left_orthogonalize, right_orthogonalize, truncate};
+
+use crate::error::{DnttError, Result};
+
+/// Append the point list of the mode-`mode` fiber through `at` to `buf`
+/// (flattened `n_mode × d`, lexicographically sorted by construction).
+pub(crate) fn fiber_queries(
+    dims: &[usize],
+    mode: usize,
+    at: &[usize],
+    buf: &mut Vec<usize>,
+) -> Result<()> {
+    let d = dims.len();
+    if mode >= d {
+        return Err(DnttError::shape(format!("fiber: mode {mode} out of range for order {d}")));
+    }
+    if at.len() != d {
+        return Err(DnttError::shape(format!("fiber: anchor has {} modes, tensor {d}", at.len())));
+    }
+    for (m, (&i, &n)) in at.iter().zip(dims).enumerate() {
+        if m != mode && i >= n {
+            return Err(DnttError::shape(format!("fiber: anchor index {i} out of range {n}")));
+        }
+    }
+    buf.clear();
+    buf.reserve(dims[mode] * d);
+    for i in 0..dims[mode] {
+        for (m, &a) in at.iter().enumerate() {
+            buf.push(if m == mode { i } else { a });
+        }
+    }
+    Ok(())
+}
+
+/// Append the point list of the slice `mode = index` to `buf` (flattened,
+/// row-major over the remaining modes — lexicographically sorted by
+/// construction). Returns the slice's dims (`d − 1` modes).
+pub(crate) fn slice_queries(
+    dims: &[usize],
+    mode: usize,
+    index: usize,
+    buf: &mut Vec<usize>,
+) -> Result<Vec<usize>> {
+    let d = dims.len();
+    if mode >= d {
+        return Err(DnttError::shape(format!("slice: mode {mode} out of range for order {d}")));
+    }
+    if index >= dims[mode] {
+        return Err(DnttError::shape(format!("slice: index {index} out of range {}", dims[mode])));
+    }
+    if d < 2 {
+        return Err(DnttError::config("slice: need at least 2 modes (use element/fiber)"));
+    }
+    let rest: Vec<usize> =
+        dims.iter().enumerate().filter(|&(m, _)| m != mode).map(|(_, &n)| n).collect();
+    let total: usize = rest.iter().product();
+    buf.clear();
+    buf.reserve(total * d);
+    let mut idx = vec![0usize; d - 1];
+    for _ in 0..total {
+        let mut it = idx.iter();
+        for m in 0..d {
+            buf.push(if m == mode { index } else { *it.next().expect("d-1 free modes") });
+        }
+        // Row-major increment over the free modes.
+        for m in (0..d - 1).rev() {
+            idx[m] += 1;
+            if idx[m] < rest[m] {
+                break;
+            }
+            idx[m] = 0;
+        }
+    }
+    Ok(rest)
+}

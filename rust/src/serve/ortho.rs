@@ -1,0 +1,196 @@
+//! TT orthogonalization and truncation — prepare a train for serving.
+//!
+//! A TT is *left-orthogonal* when every core but the last, viewed as the
+//! tall `(r_m·n_m) × r_{m+1}` matrix, has orthonormal columns; it is
+//! *right-orthogonal* when every core but the first, viewed as the wide
+//! `r_m × (n_m·r_{m+1})` matrix, has orthonormal rows. Either form makes
+//! the represented tensor's norm equal the norm of the single
+//! non-orthogonal core, which is what makes local SVD truncation
+//! globally near-optimal (Oseledets 2011, Alg. 2):
+//!
+//! * [`left_orthogonalize`] — left-to-right QR sweep, remainder folded
+//!   forward into the next core.
+//! * [`right_orthogonalize`] — right-to-left RQ sweep (QR of the
+//!   transposed wide view), remainder folded backward.
+//! * [`truncate`] — right-orthogonalize, then a left-to-right SVD sweep
+//!   keeping the smallest rank meeting the per-stage tolerance `eps`
+//!   *and* an optional hard `max_rank` budget. Per-stage `eps` bounds the
+//!   total relative error by `eps·√(d−1)`; a pure rank-budget truncation
+//!   is `truncate(tt, 0.0, Some(r))`.
+//!
+//! All three return a new train representing the same tensor (truncation:
+//! up to the requested tolerance); ranks never grow. SVD/QR do not
+//! preserve the non-negativity of nTT cores — serve artifacts trade the
+//! invariant for storage, as documented on `crate::ttrain::tt_round`
+//! (which delegates to [`truncate`] with no rank budget).
+
+use crate::error::Result;
+use crate::linalg::gemm::matmul;
+use crate::linalg::qr::thin_qr;
+use crate::linalg::svd::{rank_for_eps, thin_svd};
+use crate::linalg::Mat;
+use crate::tensor::TTensor;
+
+/// Left-to-right QR sweep: cores `0..d−1` become left-orthogonal, the
+/// last core absorbs every remainder.
+pub fn left_orthogonalize(tt: &TTensor<f64>) -> Result<TTensor<f64>> {
+    let d = tt.dims().len();
+    let dims = tt.dims().to_vec();
+    let mut cores: Vec<Mat<f64>> = tt.cores().to_vec();
+    let mut ranks = tt.ranks().to_vec();
+    for i in 0..d.saturating_sub(1) {
+        // Core i is already the tall (r_i·n_i) × r_{i+1} matrix.
+        let qr = thin_qr(&cores[i]);
+        let k = qr.q.cols(); // = min(r_i·n_i, r_{i+1})
+        cores[i] = qr.q;
+        // Fold R (k × r_{i+1}) forward: core i+1 viewed r_{i+1} × (n·r).
+        let view = cores[i + 1].clone().reshaped(ranks[i + 1], dims[i + 1] * ranks[i + 2]);
+        cores[i + 1] = matmul(&qr.r, &view).reshaped(k * dims[i + 1], ranks[i + 2]);
+        ranks[i + 1] = k;
+    }
+    TTensor::new(dims, cores)
+}
+
+/// Right-to-left RQ sweep: cores `1..d` become right-orthogonal, core 0
+/// absorbs every remainder. (RQ is computed as QR of the transposed
+/// `r_i × (n_i·r_{i+1})` view.)
+pub fn right_orthogonalize(tt: &TTensor<f64>) -> Result<TTensor<f64>> {
+    let dims = tt.dims().to_vec();
+    let (cores, _) = right_ortho_cores(tt);
+    TTensor::new(dims, cores)
+}
+
+/// Shared right-orthogonalization sweep; returns the new cores and rank
+/// chain.
+fn right_ortho_cores(tt: &TTensor<f64>) -> (Vec<Mat<f64>>, Vec<usize>) {
+    let d = tt.dims().len();
+    let dims = tt.dims();
+    let mut cores: Vec<Mat<f64>> = tt.cores().to_vec();
+    let mut ranks = tt.ranks().to_vec();
+    for i in (1..d).rev() {
+        let r_prev = ranks[i];
+        let r_next = ranks[i + 1];
+        // View core i as r_prev × (n_i·r_next); QR of the transpose gives
+        // ci = Rᵀ·Qᵀ with Qᵀ row-orthonormal.
+        let ci = cores[i].clone().reshaped(r_prev, dims[i] * r_next);
+        let qr = thin_qr(&ci.transpose());
+        let k = qr.q.cols(); // = min(r_prev, n_i·r_next)
+        cores[i] = qr.q.transpose().reshaped(k * dims[i], r_next);
+        cores[i - 1] = matmul(&cores[i - 1], &qr.r.transpose());
+        ranks[i] = k;
+    }
+    (cores, ranks)
+}
+
+/// Recompress to per-stage tolerance `eps`, with an optional hard cap on
+/// every internal rank (Oseledets Alg. 2 + budget). `eps = 0` with a
+/// `max_rank` gives a pure rank-budget truncation.
+///
+/// ```
+/// use dntt::serve::truncate;
+/// use dntt::tensor::TTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(11);
+/// let tt = TTensor::<f64>::rand_uniform(&[6, 6, 6], &[4, 4], &mut rng).unwrap();
+/// let capped = truncate(&tt, 0.0, Some(2)).unwrap();
+/// assert!(capped.ranks().iter().all(|&r| r <= 2));
+/// ```
+pub fn truncate(tt: &TTensor<f64>, eps: f64, max_rank: Option<usize>) -> Result<TTensor<f64>> {
+    let d = tt.dims().len();
+    if d == 1 {
+        return TTensor::new(tt.dims().to_vec(), tt.cores().to_vec());
+    }
+    let dims = tt.dims().to_vec();
+    let cap = max_rank.map(|r| r.max(1));
+    let (mut cores, mut ranks) = right_ortho_cores(tt);
+
+    // Left-to-right truncation sweep.
+    for i in 0..d - 1 {
+        let rows = ranks[i] * dims[i];
+        let ci = cores[i].clone().reshaped(rows, ranks[i + 1]);
+        let svd = thin_svd(&ci);
+        let mut r_new = rank_for_eps(&svd.s, eps).min(svd.s.len()).max(1);
+        if let Some(cap) = cap {
+            r_new = r_new.min(cap);
+        }
+        let tr = svd.truncate(r_new);
+        cores[i] = tr.u.clone();
+        // Carry Σ·Vᵀ into the next core: (r_new × r_old) · core-view.
+        let mut sv = tr.vt.clone();
+        for c in 0..r_new {
+            let s = tr.s[c];
+            for v in sv.row_mut(c) {
+                *v *= s;
+            }
+        }
+        let next = cores[i + 1].clone().reshaped(ranks[i + 1], dims[i + 1] * ranks[i + 2]);
+        cores[i + 1] = matmul(&sv, &next).reshaped(r_new * dims[i + 1], ranks[i + 2]);
+        ranks[i + 1] = r_new;
+    }
+    TTensor::new(dims, cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram_m_mt, gram_mt_m};
+    use crate::util::rng::Rng;
+
+    fn assert_eye(g: &Mat<f64>, tol: f64) {
+        for i in 0..g.rows() {
+            for j in 0..g.cols() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[(i, j)] - want).abs() < tol, "G[{i},{j}] = {}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn left_sweep_leaves_tensor_and_orthogonalizes() {
+        let mut rng = Rng::new(21);
+        let tt = TTensor::<f64>::rand_uniform(&[4, 5, 3], &[3, 2], &mut rng).unwrap();
+        let full = tt.reconstruct();
+        let lo = left_orthogonalize(&tt).unwrap();
+        assert!(lo.rel_error(&full) < 1e-12);
+        for i in 0..2 {
+            // Tall view has orthonormal columns: GᵀG = I.
+            assert_eye(&gram_mt_m(lo.core(i)), 1e-10);
+        }
+    }
+
+    #[test]
+    fn right_sweep_leaves_tensor_and_orthogonalizes() {
+        let mut rng = Rng::new(22);
+        let tt = TTensor::<f64>::rand_uniform(&[4, 5, 3], &[3, 2], &mut rng).unwrap();
+        let full = tt.reconstruct();
+        let ro = right_orthogonalize(&tt).unwrap();
+        assert!(ro.rel_error(&full) < 1e-12);
+        for i in 1..3 {
+            // Wide view has orthonormal rows: GGᵀ = I.
+            let wide = ro.core(i).clone().reshaped(ro.ranks()[i], ro.dims()[i] * ro.ranks()[i + 1]);
+            assert_eye(&gram_m_mt(&wide), 1e-10);
+        }
+    }
+
+    #[test]
+    fn rank_budget_caps_every_internal_rank() {
+        let mut rng = Rng::new(23);
+        let tt = TTensor::<f64>::rand_uniform(&[5, 6, 4, 3], &[4, 5, 3], &mut rng).unwrap();
+        let capped = truncate(&tt, 0.0, Some(2)).unwrap();
+        assert!(capped.ranks()[1..4].iter().all(|&r| r <= 2), "ranks {:?}", capped.ranks());
+        // eps-only path unchanged vs the cap=∞ path.
+        let a = truncate(&tt, 1e-10, None).unwrap();
+        let b = truncate(&tt, 1e-10, Some(usize::MAX)).unwrap();
+        assert_eq!(a.ranks(), b.ranks());
+    }
+
+    #[test]
+    fn budget_of_true_rank_is_lossless() {
+        let mut rng = Rng::new(24);
+        let tt = TTensor::<f64>::rand_uniform(&[4, 4, 4], &[2, 2], &mut rng).unwrap();
+        let full = tt.reconstruct();
+        let capped = truncate(&tt, 0.0, Some(2)).unwrap();
+        assert!(capped.rel_error(&full) < 1e-10);
+    }
+}

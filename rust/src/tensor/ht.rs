@@ -72,6 +72,60 @@ impl DimTree {
         DimTree { nodes }
     }
 
+    /// Rebuild a tree from explicit nodes (BFS-style ids: children after
+    /// their parent) — the deserialization path of
+    /// [`crate::tensor::io::load_artifact`]. Validates the invariants
+    /// [`DimTree::balanced`] guarantees: node 0 is a root starting at
+    /// mode 0, interior nodes split their range contiguously between two
+    /// later nodes, leaves cover exactly one mode, and every non-root
+    /// node is referenced exactly once.
+    pub fn from_nodes(nodes: Vec<TreeNode>) -> Result<DimTree> {
+        if nodes.is_empty() {
+            return Err(DnttError::shape("dimension tree needs at least one node"));
+        }
+        if nodes[0].lo != 0 {
+            return Err(DnttError::shape("dimension tree root must start at mode 0"));
+        }
+        let mut referenced = vec![0usize; nodes.len()];
+        for (t, node) in nodes.iter().enumerate() {
+            if node.lo >= node.hi {
+                return Err(DnttError::shape(format!("tree node {t}: empty mode range")));
+            }
+            match node.children {
+                None => {
+                    if node.hi - node.lo != 1 {
+                        return Err(DnttError::shape(format!(
+                            "tree leaf {t} covers {} modes",
+                            node.hi - node.lo
+                        )));
+                    }
+                }
+                Some((l, r)) => {
+                    if l <= t || r <= t || l >= nodes.len() || r >= nodes.len() || l == r {
+                        return Err(DnttError::shape(format!(
+                            "tree node {t}: invalid child ids ({l}, {r})"
+                        )));
+                    }
+                    if nodes[l].lo != node.lo
+                        || nodes[l].hi != nodes[r].lo
+                        || nodes[r].hi != node.hi
+                    {
+                        return Err(DnttError::shape(format!(
+                            "tree node {t}: children do not partition [{}, {})",
+                            node.lo, node.hi
+                        )));
+                    }
+                    referenced[l] += 1;
+                    referenced[r] += 1;
+                }
+            }
+        }
+        if referenced[0] != 0 || referenced[1..].iter().any(|&c| c != 1) {
+            return Err(DnttError::shape("dimension tree is not a single-rooted tree"));
+        }
+        Ok(DimTree { nodes })
+    }
+
     /// Number of nodes (`2d − 1` for `d` leaves).
     pub fn len(&self) -> usize {
         self.nodes.len()
@@ -233,10 +287,18 @@ impl<T: Scalar> HtTensor<T> {
         self.nodes.iter().map(|n| n.mat().len()).sum()
     }
 
-    /// Compression ratio `Π n_i / num_params` (the HT analogue of Eq. 4).
+    /// Compression ratio `Π n_i / num_params` (the HT analogue of Eq. 4)
+    /// — against the *dense* element count.
     pub fn compression_ratio(&self) -> f64 {
         let full: f64 = self.dims.iter().map(|&n| n as f64).product();
-        full / self.num_params() as f64
+        self.compression_ratio_vs(full)
+    }
+
+    /// Compression ratio against an explicit input storage size (in
+    /// elements) — for sparse inputs pass the nnz, so the reported ratio
+    /// reflects what was actually stored, not the dense bounding box.
+    pub fn compression_ratio_vs(&self, input_elems: f64) -> f64 {
+        input_elems / self.num_params() as f64
     }
 
     /// All node matrices elementwise non-negative (the nHT invariant).
@@ -422,6 +484,41 @@ mod tests {
         // Tree: root [0,3) → ([0,2), leaf 2); [0,2) → leaf 0, leaf 1.
         // Payloads: root B 2×2, node1 B 2×(2·2), leaf2 3×2, leaf0 3×2, leaf1 3×2.
         assert_eq!(ht.num_params(), 4 + 8 + 6 + 6 + 6);
+    }
+
+    #[test]
+    fn from_nodes_roundtrips_and_validates() {
+        for d in 1..=9 {
+            let tree = DimTree::balanced(d);
+            let rebuilt = DimTree::from_nodes((0..tree.len()).map(|t| tree.node(t)).collect());
+            assert_eq!(rebuilt.unwrap(), tree, "d = {d}");
+        }
+        // Children must come after the parent and partition its range.
+        let cyclic = vec![TreeNode { lo: 0, hi: 2, children: Some((0, 1)) }, TreeNode {
+            lo: 0,
+            hi: 2,
+            children: None,
+        }];
+        assert!(DimTree::from_nodes(cyclic).is_err());
+        let gap = vec![
+            TreeNode { lo: 0, hi: 3, children: Some((1, 2)) },
+            TreeNode { lo: 0, hi: 1, children: None },
+            TreeNode { lo: 2, hi: 3, children: None },
+        ];
+        assert!(DimTree::from_nodes(gap).is_err());
+        let fat_leaf = vec![TreeNode { lo: 0, hi: 2, children: None }];
+        assert!(DimTree::from_nodes(fat_leaf).is_err());
+        assert!(DimTree::from_nodes(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn compression_ratio_vs_counts_sparse_storage() {
+        let mut rng = Rng::new(11);
+        let ht = HtTensor::<f64>::rand_uniform(&[8, 8, 8, 8], 3, &mut rng).unwrap();
+        let dense = 8f64.powi(4);
+        assert!((ht.compression_ratio_vs(dense) - ht.compression_ratio()).abs() < 1e-12);
+        let honest = ht.compression_ratio_vs(dense * 0.1);
+        assert!((honest - ht.compression_ratio() * 0.1).abs() < 1e-9);
     }
 
     #[test]

@@ -1,21 +1,32 @@
-//! Binary persistence for tensors and tensor trains.
+//! Binary persistence for tensors and tensor networks — the
+//! **`dntt-tt-v1`** artifact codec.
 //!
 //! A decomposition is only useful if the compressed representation can be
-//! stored and reloaded — this module gives the TT format a simple,
+//! stored and reloaded — this module gives the tensor formats a simple,
 //! versioned, endian-stable container (`.dntt`):
 //!
 //! ```text
-//! magic "DNTT" | u32 version | u32 kind | u64 d
-//! dims: d × u64 | ranks: (d+1) × u64
-//! cores: concatenated f64 LE, core i = (r_{i-1}·n_i·r_i) values
+//! magic "DNTT" | u32 version (= 1) | u32 kind | payload | u32 CRC-32
+//! kind 1 (TT):    u64 d | dims d×u64 | ranks (d+1)×u64 | cores f64 LE
+//! kind 2 (dense): u64 d | dims d×u64 | elements f64 LE (row-major)
+//! kind 3 (HT):    u64 d | dims d×u64 | u64 nodes | per node
+//!                 (lo, hi, has_children, lc, rc) ×u64 | per node
+//!                 (tag leaf=0/transfer=1, rows, cols) ×u64 + data f64 LE
 //! ```
 //!
-//! Dense tensors use kind=2 with the same header minus ranks. Everything is
-//! written through a CRC-checked footer so truncated files are detected.
+//! Everything is written through a CRC-checked footer, so truncation and
+//! bit corruption are detected; any structural defect (bad magic/version/
+//! kind/CRC, short payload) is reported as the typed
+//! [`DnttError::Artifact`] so callers can distinguish a damaged artifact
+//! from an ordinary I/O failure. [`Artifact`] + [`save_artifact`] /
+//! [`load_artifact`] wrap the two servable kinds (TT and HT) behind one
+//! entry point — the persistence layer under `dntt decompose --out` and
+//! `dntt query`.
 
 use crate::error::{DnttError, Result};
 use crate::linalg::Mat;
-use crate::tensor::{DenseTensor, TTensor};
+use crate::tensor::ht::{DimTree, HtNode, TreeNode};
+use crate::tensor::{DenseTensor, HtTensor, TTensor};
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -23,6 +34,11 @@ const MAGIC: &[u8; 4] = b"DNTT";
 const VERSION: u32 = 1;
 const KIND_TT: u32 = 1;
 const KIND_DENSE: u32 = 2;
+const KIND_HT: u32 = 3;
+
+fn artifact_err(msg: impl Into<String>) -> DnttError {
+    DnttError::Artifact(msg.into())
+}
 
 /// Simple CRC-32 (IEEE, bitwise) — enough to catch truncation/corruption.
 fn crc32(data: &[u8]) -> u32 {
@@ -73,63 +89,54 @@ struct Reader {
 }
 
 impl Reader {
-    fn open(path: &Path, kind: u32) -> Result<Self> {
+    /// Open and integrity-check the container; the payload kind must be
+    /// one of `kinds`. Returns the reader positioned at the payload and
+    /// the actual kind. All structural defects surface as
+    /// [`DnttError::Artifact`]; only failing to read the file at all is
+    /// an I/O error.
+    fn open_any(path: &Path, kinds: &[u32]) -> Result<(Self, u32)> {
         let mut buf = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut buf)?;
         if buf.len() < 16 {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "file too short",
-            )));
+            return Err(artifact_err("file too short for a .dntt container"));
         }
         let body = &buf[..buf.len() - 4];
         let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
         if crc32(body) != stored {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "CRC mismatch (truncated or corrupted file)",
-            )));
+            return Err(artifact_err("CRC mismatch (truncated or corrupted file)"));
         }
         if &buf[..4] != MAGIC {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "not a .dntt file",
-            )));
+            return Err(artifact_err("not a .dntt file (bad magic)"));
         }
         let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
         if version != VERSION {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("unsupported version {version}"),
-            )));
+            return Err(artifact_err(format!("unsupported version {version}")));
         }
         let k = u32::from_le_bytes(buf[8..12].try_into().unwrap());
-        if k != kind {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("wrong payload kind {k} (expected {kind})"),
-            )));
+        if !kinds.contains(&k) {
+            return Err(artifact_err(format!("wrong payload kind {k} (expected one of {kinds:?})")));
         }
         buf.truncate(buf.len() - 4);
-        Ok(Reader { buf, pos: 12 })
+        Ok((Reader { buf, pos: 12 }, k))
+    }
+    fn open(path: &Path, kind: u32) -> Result<Self> {
+        Ok(Self::open_any(path, &[kind])?.0)
     }
     fn u64(&mut self) -> Result<u64> {
         if self.pos + 8 > self.buf.len() {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
-                "short read",
-            )));
+            return Err(artifact_err("short read (payload ends early)"));
         }
         let x = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
         self.pos += 8;
         Ok(x)
     }
     fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
-        if self.pos + 8 * n > self.buf.len() {
-            return Err(DnttError::Io(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
-                "short read",
-            )));
+        let end = n
+            .checked_mul(8)
+            .and_then(|b| self.pos.checked_add(b))
+            .ok_or_else(|| artifact_err("implausible payload length"))?;
+        if end > self.buf.len() {
+            return Err(artifact_err("short read (payload ends early)"));
         }
         let out = self.buf[self.pos..self.pos + 8 * n]
             .chunks_exact(8)
@@ -168,8 +175,13 @@ pub fn load_tt(path: &Path) -> Result<TTensor<f64>> {
         (0..=d).map(|_| r.u64().map(|x| x as usize)).collect::<Result<_>>()?;
     let mut cores = Vec::with_capacity(d);
     for i in 0..d {
-        let rows = ranks[i] * dims[i];
-        let data = r.f64s(rows * ranks[i + 1])?;
+        let rows = ranks[i]
+            .checked_mul(dims[i])
+            .ok_or_else(|| artifact_err("TT payload: implausible core shape"))?;
+        let n = rows
+            .checked_mul(ranks[i + 1])
+            .ok_or_else(|| artifact_err("TT payload: implausible core shape"))?;
+        let data = r.f64s(n)?;
         cores.push(Mat::from_vec(rows, ranks[i + 1], data));
     }
     TTensor::new(dims, cores)
@@ -194,9 +206,169 @@ pub fn load_dense(path: &Path) -> Result<DenseTensor<f64>> {
         return Err(DnttError::shape(format!("implausible order {d}")));
     }
     let dims: Vec<usize> = (0..d).map(|_| r.u64().map(|x| x as usize)).collect::<Result<_>>()?;
-    let n: usize = dims.iter().product();
+    let n: usize = dims
+        .iter()
+        .try_fold(1usize, |acc, &x| acc.checked_mul(x))
+        .ok_or_else(|| artifact_err("dense payload: implausible dims"))?;
     let data = r.f64s(n)?;
     DenseTensor::from_vec(&dims, data)
+}
+
+/// Save a hierarchical Tucker tensor (kind 3): the explicit dimension
+/// tree followed by every node payload.
+pub fn save_ht(ht: &HtTensor<f64>, path: &Path) -> Result<()> {
+    let mut w = Writer::new(KIND_HT);
+    w.u64(ht.dims().len() as u64);
+    for &n in ht.dims() {
+        w.u64(n as u64);
+    }
+    let tree = ht.tree();
+    w.u64(tree.len() as u64);
+    for t in 0..tree.len() {
+        let node = tree.node(t);
+        w.u64(node.lo as u64);
+        w.u64(node.hi as u64);
+        match node.children {
+            None => {
+                w.u64(0);
+                w.u64(0);
+                w.u64(0);
+            }
+            Some((l, r)) => {
+                w.u64(1);
+                w.u64(l as u64);
+                w.u64(r as u64);
+            }
+        }
+    }
+    for payload in ht.nodes() {
+        let (tag, mat) = match payload {
+            HtNode::Leaf(u) => (0u64, u),
+            HtNode::Transfer(b) => (1u64, b),
+        };
+        w.u64(tag);
+        w.u64(mat.rows() as u64);
+        w.u64(mat.cols() as u64);
+        w.f64s(mat.as_slice());
+    }
+    w.finish(path)
+}
+
+/// Load a hierarchical Tucker tensor. The tree and shape chain are
+/// re-validated by [`DimTree::from_nodes`] and `HtTensor::new`.
+pub fn load_ht(path: &Path) -> Result<HtTensor<f64>> {
+    let mut r = Reader::open(path, KIND_HT)?;
+    let d = r.u64()? as usize;
+    if d == 0 || d > 64 {
+        return Err(DnttError::shape(format!("implausible order {d}")));
+    }
+    let dims: Vec<usize> = (0..d).map(|_| r.u64().map(|x| x as usize)).collect::<Result<_>>()?;
+    let nn = r.u64()? as usize;
+    if nn != 2 * d - 1 {
+        return Err(artifact_err(format!("HT payload: {nn} tree nodes for {d} modes")));
+    }
+    let mut tree_nodes = Vec::with_capacity(nn);
+    for _ in 0..nn {
+        let lo = r.u64()? as usize;
+        let hi = r.u64()? as usize;
+        let has_children = r.u64()?;
+        let (l, rc) = (r.u64()? as usize, r.u64()? as usize);
+        let children = match has_children {
+            0 => None,
+            1 => Some((l, rc)),
+            other => return Err(artifact_err(format!("HT payload: bad children flag {other}"))),
+        };
+        tree_nodes.push(TreeNode { lo, hi, children });
+    }
+    let tree = DimTree::from_nodes(tree_nodes)?;
+    let mut payloads = Vec::with_capacity(nn);
+    for t in 0..nn {
+        let tag = r.u64()?;
+        let rows = r.u64()? as usize;
+        let cols = r.u64()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| artifact_err("HT payload: implausible node shape"))?;
+        let data = r.f64s(n)?;
+        let mat = Mat::from_vec(rows, cols, data);
+        payloads.push(match (tag, tree.is_leaf(t)) {
+            (0, true) => HtNode::Leaf(mat),
+            (1, false) => HtNode::Transfer(mat),
+            _ => {
+                return Err(artifact_err(format!(
+                    "HT payload: node {t} tag {tag} does not match the tree"
+                )))
+            }
+        });
+    }
+    HtTensor::new(dims, tree, payloads)
+}
+
+/// A servable decomposition artifact — either tensor network, behind one
+/// save/load entry point (the payload of `dntt decompose --out` and the
+/// input of `dntt query`).
+#[derive(Clone, Debug)]
+pub enum Artifact {
+    Tt(TTensor<f64>),
+    Ht(HtTensor<f64>),
+}
+
+impl Artifact {
+    /// `"tt"` or `"ht"`.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Artifact::Tt(_) => "tt",
+            Artifact::Ht(_) => "ht",
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Artifact::Tt(t) => t.dims(),
+            Artifact::Ht(h) => h.dims(),
+        }
+    }
+
+    /// Stored parameters across all cores / node payloads.
+    pub fn num_params(&self) -> usize {
+        match self {
+            Artifact::Tt(t) => t.num_params(),
+            Artifact::Ht(h) => h.num_params(),
+        }
+    }
+}
+
+/// Save either tensor-network artifact.
+pub fn save_artifact(a: &Artifact, path: &Path) -> Result<()> {
+    match a {
+        Artifact::Tt(t) => save_tt(t, path),
+        Artifact::Ht(h) => save_ht(h, path),
+    }
+}
+
+/// Load a servable artifact (TT or HT; a dense payload is rejected with
+/// the typed [`DnttError::Artifact`]).
+///
+/// ```
+/// use dntt::tensor::io::{load_artifact, save_artifact, Artifact};
+/// use dntt::tensor::TTensor;
+/// use dntt::util::rng::Rng;
+///
+/// let mut rng = Rng::new(3);
+/// let tt = TTensor::<f64>::rand_uniform(&[3, 4], &[2], &mut rng).unwrap();
+/// let path = std::env::temp_dir().join(format!("doc_artifact_{}.dntt", std::process::id()));
+/// save_artifact(&Artifact::Tt(tt), &path).unwrap();
+/// let back = load_artifact(&path).unwrap();
+/// assert_eq!(back.kind_name(), "tt");
+/// assert_eq!(back.dims(), &[3, 4]);
+/// let _ = std::fs::remove_file(&path);
+/// ```
+pub fn load_artifact(path: &Path) -> Result<Artifact> {
+    let (_, kind) = Reader::open_any(path, &[KIND_TT, KIND_HT])?;
+    match kind {
+        KIND_TT => Ok(Artifact::Tt(load_tt(path)?)),
+        _ => Ok(Artifact::Ht(load_ht(path)?)),
+    }
 }
 
 #[cfg(test)]
@@ -268,5 +440,60 @@ mod tests {
         save_dense(&t, &p).unwrap();
         assert!(load_tt(&p).is_err());
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn ht_roundtrip_bitwise() {
+        let mut rng = Rng::new(6);
+        let ht = HtTensor::<f64>::rand_uniform(&[4, 3, 5, 2, 3], 3, &mut rng).unwrap();
+        let p = tmp("ht.dntt");
+        save_ht(&ht, &p).unwrap();
+        let back = load_ht(&p).unwrap();
+        assert_eq!(back.dims(), ht.dims());
+        assert_eq!(back.tree(), ht.tree());
+        assert_eq!(back.ranks(), ht.ranks());
+        for (a, b) in ht.nodes().iter().zip(back.nodes()) {
+            assert_eq!(a.mat().shape(), b.mat().shape());
+            for (x, y) in a.mat().as_slice().iter().zip(b.mat().as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn artifact_dispatches_on_kind() {
+        let mut rng = Rng::new(7);
+        let tt = TTensor::<f64>::rand_uniform(&[3, 4], &[2], &mut rng).unwrap();
+        let ht = HtTensor::<f64>::rand_uniform(&[3, 4], 2, &mut rng).unwrap();
+        let pt = tmp("art_tt.dntt");
+        let ph = tmp("art_ht.dntt");
+        save_artifact(&Artifact::Tt(tt), &pt).unwrap();
+        save_artifact(&Artifact::Ht(ht), &ph).unwrap();
+        assert_eq!(load_artifact(&pt).unwrap().kind_name(), "tt");
+        assert_eq!(load_artifact(&ph).unwrap().kind_name(), "ht");
+        let _ = std::fs::remove_file(&pt);
+        let _ = std::fs::remove_file(&ph);
+    }
+
+    #[test]
+    fn structural_defects_are_typed_artifact_errors() {
+        use crate::error::DnttError;
+        let mut rng = Rng::new(8);
+        let tt = TTensor::<f64>::rand_uniform(&[3, 3], &[2], &mut rng).unwrap();
+        let p = tmp("typed.dntt");
+        save_tt(&tt, &p).unwrap();
+        // Corruption.
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[bytes.len() / 2] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(load_artifact(&p), Err(DnttError::Artifact(_))));
+        // A dense payload is not servable.
+        let t = DenseTensor::<f64>::rand_uniform(&[2, 2], &mut rng);
+        save_dense(&t, &p).unwrap();
+        assert!(matches!(load_artifact(&p), Err(DnttError::Artifact(_))));
+        // Missing file stays an I/O error.
+        let _ = std::fs::remove_file(&p);
+        assert!(matches!(load_artifact(&p), Err(DnttError::Io(_))));
     }
 }

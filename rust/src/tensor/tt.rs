@@ -91,10 +91,18 @@ impl<T: Scalar> TTensor<T> {
         self.cores.iter().map(|c| c.len()).sum()
     }
 
-    /// Compression ratio `Π n_i / Σ n_i·r_{i-1}·r_i` (Eq. 4).
+    /// Compression ratio `Π n_i / Σ n_i·r_{i-1}·r_i` (Eq. 4) — against
+    /// the *dense* element count.
     pub fn compression_ratio(&self) -> f64 {
         let full: f64 = self.dims.iter().map(|&n| n as f64).product();
-        full / self.num_params() as f64
+        self.compression_ratio_vs(full)
+    }
+
+    /// Compression ratio against an explicit input storage size (in
+    /// elements) — for sparse inputs pass the nnz, so the reported ratio
+    /// reflects what was actually stored, not the dense bounding box.
+    pub fn compression_ratio_vs(&self, input_elems: f64) -> f64 {
+        input_elems / self.num_params() as f64
     }
 
     /// All cores elementwise non-negative (the nTT invariant).
@@ -251,6 +259,21 @@ mod tests {
         let tt = TTensor::<f64>::rand_uniform(&dims, &ranks[1..4], &mut rng).unwrap();
         assert_eq!(tt.num_params(), params);
         assert!((tt.compression_ratio() - c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_ratio_vs_counts_sparse_storage() {
+        // 32^4, ranks (1,10,10,10,1): dense basis = 32^4, a 1%-dense input
+        // stores only ~nnz elements — the honest ratio shrinks 100×.
+        let dims = [32usize; 4];
+        let mut rng = Rng::new(6);
+        let tt = TTensor::<f64>::rand_uniform(&dims, &[10, 10, 10], &mut rng).unwrap();
+        let dense_elems = 32f64.powi(4);
+        assert!((tt.compression_ratio_vs(dense_elems) - tt.compression_ratio()).abs() < 1e-12);
+        let nnz = dense_elems * 0.01;
+        let honest = tt.compression_ratio_vs(nnz);
+        assert!((honest - tt.compression_ratio() * 0.01).abs() < 1e-9);
+        assert!(honest < tt.compression_ratio());
     }
 
     #[test]

@@ -152,6 +152,25 @@ impl SyntheticSparse {
         self.len() == 0
     }
 
+    /// Exact nonzero count, by walking the hash gate (`O(len)` — small
+    /// tensors only). Nonzero draws are in `[0.5, 1.5)`, so the gate
+    /// fully determines the pattern.
+    pub fn nnz_exact(&self) -> usize {
+        (0..self.len()).filter(|&lin| self.value_at(lin) != 0.0).count()
+    }
+
+    /// Stored element count for compression accounting: the exact nnz up
+    /// to 20M elements (the same cutoff `run_job` uses for error
+    /// checking), the expectation `density·len` beyond it.
+    pub fn storage_nnz(&self) -> f64 {
+        const EXACT_COUNT_LIMIT: usize = 20_000_000;
+        if self.len() <= EXACT_COUNT_LIMIT {
+            self.nnz_exact() as f64
+        } else {
+            self.density * self.len() as f64
+        }
+    }
+
     /// The full tensor in COO form (small cases / tests).
     pub fn sparse(&self) -> SparseTensor {
         let entries: Vec<(usize, f64)> = (0..self.len())
@@ -303,6 +322,18 @@ mod tests {
         for (gi, v) in (0..64).map(|l| (l, syn.value_at(l))) {
             assert!(v == 0.0 || v >= 0.5, "value {v} at {gi}");
         }
+    }
+
+    #[test]
+    fn nnz_exact_matches_coo_and_feeds_storage() {
+        let syn = SyntheticSparse::new(vec![12, 9, 7], 0.15, 42);
+        let nnz = syn.nnz_exact();
+        assert_eq!(nnz, syn.sparse().nnz());
+        // Below the exactness cutoff, storage is the exact count.
+        assert_eq!(syn.storage_nnz(), nnz as f64);
+        // The hash gate tracks the requested density (loose check).
+        let frac = nnz as f64 / syn.len() as f64;
+        assert!((frac - 0.15).abs() < 0.05, "observed density {frac}");
     }
 
     #[test]

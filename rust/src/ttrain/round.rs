@@ -13,68 +13,17 @@
 //! where signs are acceptable (documented at the call site).
 
 use crate::error::Result;
-use crate::linalg::gemm::matmul;
-use crate::linalg::qr::thin_qr;
-use crate::linalg::svd::{rank_for_eps, thin_svd};
-use crate::linalg::Mat;
 use crate::tensor::TTensor;
 
 /// Recompress `tt` to relative tolerance `eps` (per-stage threshold, as in
 /// the decomposition sweep). Returns a new train with ranks ≤ the input's.
+///
+/// This is the `eps`-only special case of [`crate::serve::truncate`],
+/// which also accepts a hard rank budget; the sweep implementation lives
+/// there (right-to-left RQ orthogonalization, then a left-to-right SVD
+/// truncation sweep).
 pub fn tt_round(tt: &TTensor<f64>, eps: f64) -> Result<TTensor<f64>> {
-    let d = tt.dims().len();
-    if d == 1 {
-        return TTensor::new(tt.dims().to_vec(), tt.cores().to_vec());
-    }
-    let dims = tt.dims().to_vec();
-    let in_ranks = tt.ranks().to_vec();
-
-    // --- Right-to-left orthogonalization: make cores 2..d right-orthogonal,
-    // accumulating the non-orthogonal part into the previous core.
-    // Core i is stored (r_{i-1}·n_i) × r_i; for right-orthogonalization we
-    // work with its r_{i-1} × (n_i·r_i) view and QR its transpose.
-    let mut cores: Vec<Mat<f64>> = tt.cores().to_vec();
-    let mut ranks = in_ranks.clone();
-    for i in (1..d).rev() {
-        let r_prev = ranks[i];
-        let r_next = ranks[i + 1];
-        // View core i as r_prev × (n_i · r_next).
-        let ci = cores[i].clone().reshaped(r_prev, dims[i] * r_next);
-        // QR of the transpose: ciᵀ = Q R  ⇒  ci = Rᵀ Qᵀ with Qᵀ row-orthogonal.
-        let qr = thin_qr(&ci.transpose());
-        let k = qr.q.cols(); // = min(r_prev, n_i·r_next)
-        // New core i = Qᵀ reshaped to (k·n_i) × r_next.
-        cores[i] = qr.q.transpose().reshaped(k * dims[i], r_next);
-        // Fold Rᵀ (r_prev × k) into core i-1: (r_{i-2}·n_{i-1}) × r_prev · Rᵀ.
-        let rt = qr.r.transpose();
-        cores[i - 1] = matmul(&cores[i - 1], &rt);
-        ranks[i] = k;
-    }
-
-    // --- Left-to-right truncation sweep.
-    for i in 0..d - 1 {
-        let rows = ranks[i] * dims[i];
-        let ci = cores[i].clone().reshaped(rows, ranks[i + 1]);
-        let svd = thin_svd(&ci);
-        let r_new = rank_for_eps(&svd.s, eps).min(svd.s.len()).max(1);
-        let tr = svd.truncate(r_new);
-        cores[i] = tr.u.clone();
-        // Carry Σ Vᵀ into the next core: (r_new × r_old) · core_{i+1}-view.
-        let mut sv = tr.vt.clone();
-        for c in 0..r_new {
-            let s = tr.s[c];
-            for v in sv.row_mut(c) {
-                *v *= s;
-            }
-        }
-        // core_{i+1} viewed r_old × (n_{i+1}·r_{i+2}).
-        let next = cores[i + 1].clone().reshaped(ranks[i + 1], dims[i + 1] * ranks[i + 2]);
-        let folded = matmul(&sv, &next); // r_new × (n·r)
-        cores[i + 1] = folded.reshaped(r_new * dims[i + 1], ranks[i + 2]);
-        ranks[i + 1] = r_new;
-    }
-
-    TTensor::new(dims, cores)
+    crate::serve::truncate(tt, eps, None)
 }
 
 #[cfg(test)]

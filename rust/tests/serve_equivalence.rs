@@ -1,0 +1,429 @@
+//! Tier-1: serve-layer equivalence — the batched query engine must be
+//! *bitwise* indistinguishable from dense reconstruction.
+//!
+//! The contract under test (DESIGN.md §2.9): for every point, fiber and
+//! slice query, [`dntt::serve::TtHandle`] / [`dntt::serve::HtHandle`]
+//! produce the exact f64 bits of `reconstruct().get(idx)`, for sorted,
+//! unsorted and duplicated batches, on fresh and warm workspaces, and
+//! across a `dntt-tt-v1` save→load round trip. Rounding respects its ε
+//! and rank budgets; structurally damaged artifacts surface as
+//! [`DnttError::Artifact`], never as panics or silent zeros.
+
+mod common;
+
+use common::{assert_close_slices, unique_temp_dir};
+use dntt::error::DnttError;
+use dntt::linalg::Mat;
+use dntt::serve::{
+    truncate, tt_contract_all, tt_contract_matrix, tt_contract_vec, HtHandle, HtQueryWorkspace,
+    QueryWorkspace, TtHandle,
+};
+use dntt::tensor::io::{load_artifact, save_artifact, Artifact};
+use dntt::tensor::{DenseTensor, HtNode, HtTensor, TTensor};
+use dntt::tensor::ht::DimTree;
+use dntt::util::rng::Rng;
+
+// --- Fixtures -------------------------------------------------------------
+//
+// Small enough that every matmul in `reconstruct()` stays on the blocked
+// (non-packed) GEMM path, which is the op sequence the serve hot loops
+// replay fma-for-fma; zero injection exercises the zero-skip branches on
+// both sides.
+
+/// Non-negative value with exact zeros at ~30% density.
+fn sparse_val(rng: &mut Rng) -> f64 {
+    if rng.uniform() < 0.3 {
+        0.0
+    } else {
+        0.25 + rng.uniform()
+    }
+}
+
+/// Hand-built TT over `[4, 5, 3]` with internal ranks `[2, 3]` and
+/// injected exact zeros.
+fn tt_fixture() -> TTensor<f64> {
+    let mut rng = Rng::new(11);
+    let cores = vec![
+        Mat::from_fn(4, 2, |_, _| sparse_val(&mut rng)),
+        Mat::from_fn(2 * 5, 3, |_, _| sparse_val(&mut rng)),
+        Mat::from_fn(3 * 3, 1, |_, _| sparse_val(&mut rng)),
+    ];
+    TTensor::new(vec![4, 5, 3], cores).unwrap()
+}
+
+/// Hand-built HT over `[3, 4, 2, 5]` with every non-root edge rank 2 and
+/// injected exact zeros.
+fn ht_fixture() -> HtTensor<f64> {
+    let mut rng = Rng::new(13);
+    let dims = vec![3usize, 4, 2, 5];
+    let tree = DimTree::balanced(dims.len());
+    let mut nodes = Vec::with_capacity(tree.len());
+    for t in 0..tree.len() {
+        let rt = if t == 0 { 1 } else { 2 };
+        let node = tree.node(t);
+        nodes.push(if node.children.is_some() {
+            HtNode::Transfer(Mat::from_fn(2, 2 * rt, |_, _| sparse_val(&mut rng)))
+        } else {
+            HtNode::Leaf(Mat::from_fn(dims[node.lo], rt, |_, _| sparse_val(&mut rng)))
+        });
+    }
+    HtTensor::new(dims, tree, nodes).unwrap()
+}
+
+/// Every multi-index of `dims`, shuffled deterministically and salted
+/// with duplicates — the worst case for the sorted-prefix cache.
+fn shuffled_queries(dims: &[usize], rng: &mut Rng) -> Vec<Vec<usize>> {
+    let total: usize = dims.iter().product();
+    let mut qs: Vec<Vec<usize>> =
+        (0..total).map(|lin| dntt::tensor::dense::multi_index(dims, lin)).collect();
+    for i in (1..qs.len()).rev() {
+        qs.swap(i, rng.below(i + 1));
+    }
+    // Duplicate a handful of entries (appended, so they arrive unsorted).
+    for _ in 0..5 {
+        let pick = qs[rng.below(qs.len())].clone();
+        qs.push(pick);
+    }
+    qs
+}
+
+fn flatten(qs: &[Vec<usize>]) -> Vec<usize> {
+    qs.iter().flatten().copied().collect()
+}
+
+fn assert_bits(got: f64, want: f64, what: &str) {
+    assert_eq!(got.to_bits(), want.to_bits(), "{what}: {got} vs {want}");
+}
+
+// --- TT: point / fiber / slice vs dense ----------------------------------
+
+#[test]
+fn tt_batch_matches_dense_bitwise() {
+    for (tag, tt) in [
+        ("zeros", tt_fixture()),
+        ("dense", TTensor::rand_uniform(&[4, 5, 3], &[2, 3], &mut Rng::new(21)).unwrap()),
+    ] {
+        let full = tt.reconstruct();
+        let handle = TtHandle::new(tt);
+        let mut rng = Rng::new(31);
+        let qs = shuffled_queries(handle.dims(), &mut rng);
+        let mut ws = QueryWorkspace::new();
+        let mut out = Vec::new();
+        handle.batch_into(&flatten(&qs), &mut ws, &mut out).unwrap();
+        assert_eq!(out.len(), qs.len());
+        for (q, v) in qs.iter().zip(&out) {
+            assert_bits(*v, full.get(q), &format!("tt/{tag} batch at {q:?}"));
+        }
+    }
+}
+
+#[test]
+fn tt_fiber_and_slice_match_dense_bitwise() {
+    let tt = tt_fixture();
+    let full = tt.reconstruct();
+    let dims = tt.dims().to_vec();
+    let handle = TtHandle::new(tt);
+    let mut ws = QueryWorkspace::new();
+    let anchor = vec![2usize, 3, 1];
+    for mode in 0..dims.len() {
+        let fib = handle.fiber(mode, &anchor, &mut ws).unwrap();
+        assert_eq!(fib.len(), dims[mode]);
+        for (k, v) in fib.iter().enumerate() {
+            let mut idx = anchor.clone();
+            idx[mode] = k;
+            assert_bits(*v, full.get(&idx), &format!("tt fiber mode {mode} at {idx:?}"));
+        }
+        for index in 0..dims[mode] {
+            let sl = handle.slice(mode, index, &mut ws).unwrap();
+            let rest: Vec<usize> =
+                (0..dims.len()).filter(|&m| m != mode).map(|m| dims[m]).collect();
+            assert_eq!(sl.dims(), &rest[..]);
+            for (lin, v) in sl.as_slice().iter().enumerate() {
+                let mut idx = dntt::tensor::dense::multi_index(&rest, lin);
+                idx.insert(mode, index);
+                assert_bits(*v, full.get(&idx), &format!("tt slice {mode}={index} at {idx:?}"));
+            }
+        }
+    }
+}
+
+// --- HT: point / fiber / slice vs dense ----------------------------------
+
+#[test]
+fn ht_batch_matches_dense_bitwise() {
+    for (tag, ht) in [
+        ("zeros", ht_fixture()),
+        ("dense", HtTensor::rand_uniform(&[3, 4, 2, 5], 2, &mut Rng::new(23)).unwrap()),
+    ] {
+        let full = ht.reconstruct();
+        let handle = HtHandle::new(ht);
+        let mut rng = Rng::new(37);
+        let qs = shuffled_queries(handle.dims(), &mut rng);
+        let mut ws = HtQueryWorkspace::new();
+        let mut out = Vec::new();
+        handle.batch_into(&flatten(&qs), &mut ws, &mut out).unwrap();
+        for (q, v) in qs.iter().zip(&out) {
+            assert_bits(*v, full.get(q), &format!("ht/{tag} batch at {q:?}"));
+        }
+    }
+}
+
+#[test]
+fn ht_fiber_and_slice_match_dense_bitwise() {
+    let ht = ht_fixture();
+    let full = ht.reconstruct();
+    let dims = ht.dims().to_vec();
+    let handle = HtHandle::new(ht);
+    let mut ws = HtQueryWorkspace::new();
+    let anchor = vec![1usize, 2, 0, 4];
+    for mode in 0..dims.len() {
+        let fib = handle.fiber(mode, &anchor, &mut ws).unwrap();
+        for (k, v) in fib.iter().enumerate() {
+            let mut idx = anchor.clone();
+            idx[mode] = k;
+            assert_bits(*v, full.get(&idx), &format!("ht fiber mode {mode} at {idx:?}"));
+        }
+        let sl = handle.slice(mode, anchor[mode], &mut ws).unwrap();
+        let rest: Vec<usize> = (0..dims.len()).filter(|&m| m != mode).map(|m| dims[m]).collect();
+        assert_eq!(sl.dims(), &rest[..]);
+        for (lin, v) in sl.as_slice().iter().enumerate() {
+            let ridx = dntt::tensor::dense::multi_index(&rest, lin);
+            let mut idx = ridx.clone();
+            idx.insert(mode, anchor[mode]);
+            assert_bits(*v, full.get(&idx), &format!("ht slice mode {mode} at {idx:?}"));
+        }
+    }
+}
+
+// --- Workspace reuse ------------------------------------------------------
+
+#[test]
+fn warm_workspace_is_stable_and_bitwise_neutral() {
+    let tt = tt_fixture();
+    let handle = TtHandle::new(tt);
+    let mut rng = Rng::new(41);
+    let queries = flatten(&shuffled_queries(handle.dims(), &mut rng));
+    let mut ws = QueryWorkspace::new();
+    let (mut cold, mut warm) = (Vec::new(), Vec::new());
+    handle.batch_into(&queries, &mut ws, &mut cold).unwrap();
+    let cap = ws.capacity_bytes();
+    for _ in 0..3 {
+        handle.batch_into(&queries, &mut ws, &mut warm).unwrap();
+        assert_eq!(ws.capacity_bytes(), cap, "warm TT batches must not reallocate");
+        assert_eq!(
+            cold.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            warm.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "warm TT batch must be bitwise identical to cold"
+        );
+    }
+
+    let ht = ht_fixture();
+    let hh = HtHandle::new(ht);
+    let hqueries = flatten(&shuffled_queries(hh.dims(), &mut rng));
+    let mut hws = HtQueryWorkspace::new();
+    let (mut hcold, mut hwarm) = (Vec::new(), Vec::new());
+    hh.batch_into(&hqueries, &mut hws, &mut hcold).unwrap();
+    let hcap = hws.capacity_bytes();
+    for _ in 0..3 {
+        hh.batch_into(&hqueries, &mut hws, &mut hwarm).unwrap();
+        assert_eq!(hws.capacity_bytes(), hcap, "warm HT batches must not reallocate");
+        assert_eq!(
+            hcold.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            hwarm.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "warm HT batch must be bitwise identical to cold"
+        );
+    }
+}
+
+// --- Rounding -------------------------------------------------------------
+
+#[test]
+fn truncate_respects_eps_and_rank_budget() {
+    let mut rng = Rng::new(43);
+    let tt = TTensor::<f64>::rand_uniform(&[6, 6, 6], &[4, 4], &mut rng).unwrap();
+    let full = tt.reconstruct();
+    let d = tt.dims().len();
+
+    // Oseledets: per-stage eps ⇒ total relative error ≤ sqrt(d-1)·eps.
+    for eps in [0.3, 0.05, 1e-10] {
+        let r = truncate(&tt, eps, None).unwrap();
+        assert!(
+            r.rel_error(&full) <= eps * ((d - 1) as f64).sqrt() + 1e-9,
+            "eps {eps}: rel error {} over budget",
+            r.rel_error(&full)
+        );
+    }
+
+    // A hard rank budget caps every internal rank, eps or no eps.
+    for cap in [1usize, 2, 3] {
+        let r = truncate(&tt, 0.0, Some(cap)).unwrap();
+        assert!(r.ranks()[1..d].iter().all(|&rk| rk <= cap), "cap {cap}: ranks {:?}", r.ranks());
+    }
+}
+
+// --- Artifact round trip + damage ----------------------------------------
+
+#[test]
+fn artifact_roundtrip_serves_bitwise_identically() {
+    let dir = unique_temp_dir("serve_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // TT: cores survive bitwise, so every query does too.
+    let tt = tt_fixture();
+    let path = dir.join("tt.dntt");
+    save_artifact(&Artifact::Tt(tt.clone()), &path).unwrap();
+    let Artifact::Tt(tt2) = load_artifact(&path).unwrap() else {
+        panic!("kind sniffing returned the wrong artifact");
+    };
+    for (a, b) in tt.cores().iter().zip(tt2.cores()) {
+        assert_eq!(a.as_slice(), b.as_slice(), "TT cores must round-trip bitwise");
+    }
+    let (ha, hb) = (TtHandle::new(tt), TtHandle::new(tt2));
+    let mut rng = Rng::new(47);
+    let queries = flatten(&shuffled_queries(ha.dims(), &mut rng));
+    let (va, vb) = (ha.batch(&queries).unwrap(), hb.batch(&queries).unwrap());
+    assert_eq!(
+        va.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        vb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "loaded TT must answer bitwise identically"
+    );
+
+    // HT: same contract through the kind-sniffing loader.
+    let ht = ht_fixture();
+    let hpath = dir.join("ht.dntt");
+    save_artifact(&Artifact::Ht(ht.clone()), &hpath).unwrap();
+    let Artifact::Ht(ht2) = load_artifact(&hpath).unwrap() else {
+        panic!("kind sniffing returned the wrong artifact");
+    };
+    let (ga, gb) = (HtHandle::new(ht), HtHandle::new(ht2));
+    let hqueries = flatten(&shuffled_queries(ga.dims(), &mut rng));
+    let (wa, wb) = (ga.batch(&hqueries).unwrap(), gb.batch(&hqueries).unwrap());
+    assert_eq!(
+        wa.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        wb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "loaded HT must answer bitwise identically"
+    );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn damaged_artifacts_are_typed_errors() {
+    let dir = unique_temp_dir("serve_damage");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tt.dntt");
+    save_artifact(&Artifact::Tt(tt_fixture()), &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Flipped payload byte → CRC mismatch.
+    let mut bad = good.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x5a;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(
+        matches!(load_artifact(&path), Err(DnttError::Artifact(_))),
+        "corruption must be a typed artifact error"
+    );
+
+    // Truncation at several depths (header, payload, checksum).
+    for keep in [3usize, 10, good.len() - 2] {
+        std::fs::write(&path, &good[..keep]).unwrap();
+        assert!(
+            matches!(load_artifact(&path), Err(DnttError::Artifact(_))),
+            "truncation to {keep} bytes must be a typed artifact error"
+        );
+    }
+
+    // Wrong magic.
+    let mut wrong = good.clone();
+    wrong[0] = b'X';
+    std::fs::write(&path, &wrong).unwrap();
+    assert!(matches!(load_artifact(&path), Err(DnttError::Artifact(_))));
+
+    // Missing file stays an I/O error — it is not a malformed artifact.
+    assert!(matches!(load_artifact(&dir.join("absent.dntt")), Err(DnttError::Io(_))));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// --- Contractions vs dense references -------------------------------------
+
+#[test]
+fn contractions_match_dense_references() {
+    let tt = tt_fixture();
+    let full = tt.reconstruct();
+    let dims = tt.dims().to_vec();
+    let d = dims.len();
+    let mut rng = Rng::new(53);
+
+    // Full contraction with indicator vectors IS element lookup.
+    let idx = [3usize, 1, 2];
+    let indicators: Vec<Vec<f64>> = (0..d)
+        .map(|m| (0..dims[m]).map(|i| if i == idx[m] { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let picked = tt_contract_all(&tt, &indicators).unwrap();
+    assert!((picked - full.get(&idx)).abs() < 1e-12);
+
+    // General weights: compare against the explicit weighted sum.
+    let vecs: Vec<Vec<f64>> =
+        dims.iter().map(|&n| (0..n).map(|_| rng.uniform() - 0.5).collect()).collect();
+    let got = tt_contract_all(&tt, &vecs).unwrap();
+    let mut want = 0.0;
+    for (lin, x) in full.as_slice().iter().enumerate() {
+        let mi = dntt::tensor::dense::multi_index(&dims, lin);
+        want += x * mi.iter().enumerate().map(|(m, &i)| vecs[m][i]).product::<f64>();
+    }
+    assert!((got - want).abs() < 1e-10 * (1.0 + want.abs()), "{got} vs {want}");
+
+    // Single-mode vector contraction: the mode disappears; the data
+    // matches a dense mode product with the 1×n row matrix (a size-1
+    // mode changes dims, not the row-major layout).
+    for mode in 0..d {
+        let row = Mat::from_fn(1, dims[mode], |_, j| vecs[mode][j]);
+        let want_t = full.mode_product(mode, &row);
+        let got_t = tt_contract_vec(&tt, mode, &vecs[mode]).unwrap();
+        let rest: Vec<usize> = (0..d).filter(|&m| m != mode).map(|m| dims[m]).collect();
+        assert_eq!(got_t.dims(), &rest[..]);
+        assert_close_slices(
+            got_t.reconstruct().as_slice(),
+            want_t.as_slice(),
+            1e-10,
+            &format!("tt_contract_vec mode {mode}"),
+        );
+    }
+
+    // Mode-matrix contraction == dense mode product.
+    for mode in 0..d {
+        let u = Mat::<f64>::rand_uniform(2, dims[mode], &mut rng);
+        let got_t = tt_contract_matrix(&tt, mode, &u).unwrap();
+        assert_eq!(got_t.dims()[mode], 2);
+        assert_close_slices(
+            got_t.reconstruct().as_slice(),
+            full.mode_product(mode, &u).as_slice(),
+            1e-10,
+            &format!("tt_contract_matrix mode {mode}"),
+        );
+    }
+
+    // A 1-mode train cannot lose its only mode to a vector contraction.
+    let one = TTensor::<f64>::new(vec![4], vec![Mat::from_fn(4, 1, |i, _| i as f64)]).unwrap();
+    assert!(tt_contract_vec(&one, 0, &[1.0; 4]).is_err());
+}
+
+// --- DenseTensor round trip used above is itself exercised by slices ------
+
+#[test]
+fn slice_of_two_mode_train_is_a_vector() {
+    // d = 2 boundary: a slice drops to a 1-D tensor.
+    let mut rng = Rng::new(59);
+    let tt = TTensor::<f64>::rand_uniform(&[4, 6], &[3], &mut rng).unwrap();
+    let full = tt.reconstruct();
+    let handle = TtHandle::new(tt);
+    let mut ws = QueryWorkspace::new();
+    let sl = handle.slice(0, 2, &mut ws).unwrap();
+    assert_eq!(sl.dims(), &[6]);
+    for (j, v) in sl.as_slice().iter().enumerate() {
+        assert_bits(*v, full.get(&[2, j]), &format!("2-mode slice at j={j}"));
+    }
+    let _: DenseTensor<f64> = sl;
+}
