@@ -8,18 +8,81 @@ are merged) against the committed baseline (rust/bench/baseline.json):
 * every case listed under baseline `min_gflops` must reach its floor;
 * every `min_ratio` entry (e.g. packed >= 2x blocked at 512^3) must hold.
 
+With `--metrics`, instead sanity-checks a `dntt-metrics-v1` envelope
+(written by `dntt decompose --metrics-out`): schema version, balanced
+trace spans, per-collective byte residuals (zero by construction),
+nonzero communication volume, and agreement between the counter totals
+and the per-collective breakdown (both sides count the same call
+sites, so AG+AR+RSC bytes must match exactly).
+
 Always exits 0 — misses are surfaced as GitHub `::warning::`
 annotations, not failures, until enough CI history exists to make the
 gate strict (see DESIGN.md, "CI perf gate"). Stdlib only.
 
 Usage: check_perf.py RESULTS_JSON [RESULTS_JSON...] BASELINE_JSON
+       check_perf.py --metrics METRICS_JSON
 """
 
 import json
 import sys
 
 
+def check_metrics(path: str) -> int:
+    """Warn-only structural gate over one dntt-metrics-v1 envelope."""
+    try:
+        with open(path) as f:
+            env = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::warning::metrics gate skipped: {e}")
+        return 0
+
+    warned = 0
+
+    def warn(msg: str) -> None:
+        nonlocal warned
+        print(f"::warning::metrics gate: {msg}")
+        warned += 1
+
+    fmt = env.get("format")
+    if fmt != "dntt-metrics-v1":
+        warn(f"unexpected envelope format {fmt!r}")
+    trace = env.get("trace", {})
+    if trace.get("open_spans", 0) != 0:
+        warn(f"{trace['open_spans']} span(s) left open — unbalanced instrumentation")
+    if trace.get("events", 0) <= 0:
+        warn("trace recorded no events")
+    if trace.get("rank_timelines", 0) < 1:
+        warn("no rank timelines in the trace")
+
+    rows = env.get("collectives", [])
+    comm_bytes = 0
+    for row in rows:
+        if row.get("byte_residual", 0) != 0:
+            warn(
+                f"collective {row.get('cat')}: byte residual "
+                f"{row['byte_residual']} (must be 0 by construction)"
+            )
+        comm_bytes += int(row.get("measured_bytes", 0))
+    if comm_bytes <= 0:
+        warn("zero communication bytes across all collectives")
+
+    totals = env.get("counters", {}).get("totals", {})
+    ctr_bytes = sum(int(totals.get(k, 0)) for k in ("ag_bytes", "ar_bytes", "rsc_bytes"))
+    if ctr_bytes != comm_bytes:
+        warn(
+            f"counter totals (AG+AR+RSC = {ctr_bytes} B) disagree with the "
+            f"per-collective breakdown ({comm_bytes} B)"
+        )
+    else:
+        print(f"  counters vs breakdown: {comm_bytes} comm bytes, consistent")
+
+    print(f"metrics gate: {warned} warning(s) (warn-only, exit 0)")
+    return 0
+
+
 def main() -> int:
+    if len(sys.argv) == 3 and sys.argv[1] == "--metrics":
+        return check_metrics(sys.argv[2])
     if len(sys.argv) < 3:
         print(f"usage: {sys.argv[0]} RESULTS_JSON [RESULTS_JSON...] BASELINE_JSON", file=sys.stderr)
         return 0  # warn-only: never break the build on harness drift

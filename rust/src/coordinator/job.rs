@@ -197,6 +197,12 @@ pub struct JobConfig {
     /// Leave spill chunk files on disk when the job's store is dropped
     /// (see [`crate::dist::SharedStore::set_keep_spill`]).
     pub keep_spill: bool,
+    /// Record per-rank event traces and metric counters
+    /// ([`crate::obs`]) into the report's `obs` field (None = no
+    /// tracing). Excluded from [`JobConfig::fingerprint`]: tracing is
+    /// bitwise-neutral (asserted by `tests/obs_neutrality.rs`), so a
+    /// traced job may resume an untraced checkpoint and vice versa.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl JobConfig {
@@ -214,6 +220,7 @@ impl JobConfig {
             checkpoint: None,
             resume: ResumeMode::Off,
             keep_spill: false,
+            trace: None,
         }
     }
 

@@ -3,10 +3,11 @@
 
 use super::job::{Decomposition, JobConfig};
 use crate::ht::HtOutput;
+use crate::obs::ObsReport;
 use crate::tensor::DenseTensor;
 use crate::ttrain::TtOutput;
 use crate::util::json::Json;
-use crate::util::timer::{Breakdown, ALL_CATS};
+use crate::util::timer::{Breakdown, Cat, ALL_CATS};
 
 /// The decomposition a job produced, tagged by network.
 pub enum DecompOutput {
@@ -96,6 +97,35 @@ impl DecompOutput {
     }
 }
 
+/// One per-collective row of the α-β model validation (Fig-5-style):
+/// what the ranks measured next to what [`crate::dist::CostModel`]
+/// predicts for the same call/byte counts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelResidual {
+    pub cat: Cat,
+    pub calls: u64,
+    pub measured_bytes: u64,
+    pub modeled_bytes: u64,
+    pub measured_secs: f64,
+    pub modeled_secs: f64,
+}
+
+impl ModelResidual {
+    /// Modeled minus measured payload bytes. Zero by construction: the
+    /// model re-prices *time* but carries the measured byte counters
+    /// over verbatim, so any non-zero value flags an accounting bug.
+    pub fn byte_residual(&self) -> i64 {
+        self.modeled_bytes as i64 - self.measured_bytes as i64
+    }
+
+    /// Modeled minus measured seconds — the model drift (positive when
+    /// the cluster model prices the collective above the shared-memory
+    /// measurement, the expected direction).
+    pub fn time_residual(&self) -> f64 {
+        self.modeled_secs - self.measured_secs
+    }
+}
+
 /// Aggregated result of one decomposition job.
 pub struct JobReport {
     pub label: String,
@@ -112,10 +142,14 @@ pub struct JobReport {
     /// α-β-modeled cluster breakdown (if a cost model was configured).
     pub modeled: Option<Breakdown>,
     pub pjrt_hits: u64,
+    /// Merged per-rank traces and counters ([`crate::obs`]), when the
+    /// job was configured with [`JobConfig::trace`].
+    pub obs: Option<ObsReport>,
     pub output: DecompOutput,
 }
 
 impl JobReport {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         job: &JobConfig,
         output: DecompOutput,
@@ -123,6 +157,7 @@ impl JobReport {
         rel_error: Option<f64>,
         modeled: Option<Breakdown>,
         pjrt_hits: u64,
+        obs: Option<ObsReport>,
     ) -> Self {
         JobReport {
             label: job.input.label(),
@@ -138,8 +173,31 @@ impl JobReport {
             measured: output.breakdown().clone(),
             modeled,
             pjrt_hits,
+            obs,
             output,
         }
+    }
+
+    /// Per-collective measured-vs-modeled rows. Empty without a cost
+    /// model. Byte residuals are zero by construction (see
+    /// [`ModelResidual::byte_residual`]); the time residuals are the
+    /// Fig-5-style model-validation signal.
+    pub fn model_residuals(&self) -> Vec<ModelResidual> {
+        let Some(m) = &self.modeled else { return Vec::new() };
+        ALL_CATS
+            .iter()
+            .filter(|&&c| {
+                c.is_comm() && (self.measured.calls(c) > 0 || self.measured.bytes(c) > 0)
+            })
+            .map(|&c| ModelResidual {
+                cat: c,
+                calls: self.measured.calls(c),
+                measured_bytes: self.measured.bytes(c),
+                modeled_bytes: m.bytes(c),
+                measured_secs: self.measured.secs(c),
+                modeled_secs: m.secs(c),
+            })
+            .collect()
     }
 
     /// Multi-line human summary (the tables printed by the CLI).
@@ -171,6 +229,32 @@ impl JobReport {
         if let Some(m) = &self.modeled {
             s.push_str("\nmodeled cluster breakdown (α-β model):\n");
             s.push_str(&m.table());
+        }
+        let residuals = self.model_residuals();
+        if !residuals.is_empty() {
+            s.push_str("\nα-β model validation (per collective; Δbytes is 0 by construction):\n");
+            s.push_str("cat   calls    bytes         Δbytes  measured_s  modeled_s   drift_s\n");
+            for r in &residuals {
+                s.push_str(&format!(
+                    "{:<5} {:<8} {:<13} {:<7} {:<11.4e} {:<11.4e} {:+.4e}\n",
+                    r.cat.name(),
+                    r.calls,
+                    r.measured_bytes,
+                    r.byte_residual(),
+                    r.measured_secs,
+                    r.modeled_secs,
+                    r.time_residual(),
+                ));
+            }
+        }
+        if let Some(o) = &self.obs {
+            s.push_str(&format!(
+                "\ntrace: {} events on {} rank timeline(s), {} dropped, {} open\n",
+                o.events_total(),
+                o.rank_ids().len(),
+                o.dropped_total(),
+                o.open_spans_total(),
+            ));
         }
         match &self.output {
             DecompOutput::Tt(out) => {
@@ -288,6 +372,86 @@ impl JobReport {
         if let Some(m) = &self.modeled {
             fields.push(("modeled", breakdown_json(m)));
             fields.push(("modeled_total", Json::Num(m.total_secs())));
+        }
+        Json::obj(fields)
+    }
+
+    /// The versioned `dntt-metrics-v1` envelope (the `--metrics-out`
+    /// payload): job identity, wall time, per-stage convergence series,
+    /// the per-collective α-β validation rows (byte residuals zero by
+    /// construction, time residuals report the drift), and — when the
+    /// job traced — the obs counter totals, per-rank counters, and ring
+    /// statistics.
+    pub fn metrics_json(&self) -> Json {
+        let mut fields = vec![
+            ("format", Json::Str("dntt-metrics-v1".into())),
+            ("label", Json::Str(self.label.clone())),
+            ("decomp", Json::Str(self.decomp.name().into())),
+            ("dims", Json::arr_usize(&self.dims)),
+            ("grid", Json::arr_usize(&self.grid)),
+            ("ranks", Json::arr_usize(&self.ranks)),
+            ("compression", Json::Num(self.compression)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ];
+        if let Some(e) = self.rel_error {
+            fields.push(("rel_error", Json::Num(e)));
+        }
+        let convergence = match &self.output {
+            DecompOutput::Tt(out) => Json::Arr(
+                out.stages
+                    .iter()
+                    .map(|st| {
+                        Json::obj(vec![
+                            ("stage", Json::Str(format!("tt.stage{}", st.mode))),
+                            ("objectives", Json::arr_f64(&st.nmf.history)),
+                        ])
+                    })
+                    .collect(),
+            ),
+            DecompOutput::Ht(out) => Json::Arr(
+                out.stages
+                    .iter()
+                    .map(|st| {
+                        let edge = if st.left { "a" } else { "b" };
+                        Json::obj(vec![
+                            ("stage", Json::Str(format!("ht.n{}.{edge}", st.node))),
+                            ("objectives", Json::arr_f64(&st.nmf.history)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        };
+        fields.push(("convergence", convergence));
+        let collectives = Json::Arr(
+            self.model_residuals()
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("cat", Json::Str(r.cat.name().into())),
+                        ("calls", Json::Num(r.calls as f64)),
+                        ("measured_bytes", Json::Num(r.measured_bytes as f64)),
+                        ("modeled_bytes", Json::Num(r.modeled_bytes as f64)),
+                        ("byte_residual", Json::Num(r.byte_residual() as f64)),
+                        ("measured_secs", Json::Num(r.measured_secs)),
+                        ("modeled_secs", Json::Num(r.modeled_secs)),
+                        ("time_residual_secs", Json::Num(r.time_residual())),
+                    ])
+                })
+                .collect(),
+        );
+        fields.push(("collectives", collectives));
+        if let Some(o) = &self.obs {
+            fields.push(("counters", o.counters_section_json()));
+            fields.push((
+                "trace",
+                Json::obj(vec![
+                    ("ring_capacity", Json::Num(o.ring_capacity as f64)),
+                    ("events", Json::Num(o.events_total() as f64)),
+                    ("dropped", Json::Num(o.dropped_total() as f64)),
+                    ("open_spans", Json::Num(o.open_spans_total() as f64)),
+                    ("rank_timelines", Json::Num(o.rank_ids().len() as f64)),
+                ]),
+            ));
         }
         Json::obj(fields)
     }

@@ -7,7 +7,7 @@ pub mod job;
 pub mod metrics;
 
 pub use job::{BackendChoice, Decomposition, InputSpec, JobConfig, ResumeMode};
-pub use metrics::{DecompOutput, JobReport};
+pub use metrics::{DecompOutput, JobReport, ModelResidual};
 
 use crate::dist::checkpoint::{self, CkptCtx};
 use crate::dist::{faults, Comm, SharedStore, TensorBlock};
@@ -61,6 +61,10 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
     // it hashes the whole tensor, so skip it when no checkpointing is
     // configured (the common path).
     let config_hash = if job.checkpoint.is_some() { job.fingerprint() } else { 0 };
+    // One trace collector for the whole job: relaunch attempts append
+    // further per-rank rings for the same rank ids, which the report
+    // aggregates (the events of a lost attempt are kept, not discarded).
+    let collector = job.trace.map(crate::obs::TraceCollector::new);
     let t0 = Instant::now();
     // Under `ResumeMode::Auto` the first launch already tries the
     // checkpoint directory (a missing manifest is a fresh start); after a
@@ -86,6 +90,12 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
         let dense2 = dense.clone();
         let eng2 = engine.clone();
         let fired_before = faults::armed().map(|pl| pl.fired_count()).unwrap_or(0);
+        // Arm only across the world launch — `Comm::run` snapshots the
+        // collector when it spawns ranks, and disarming immediately after
+        // keeps the coordinator slot clean on every exit path.
+        if let Some(c) = &collector {
+            crate::obs::arm(c);
+        }
         let world_run = catch_unwind(AssertUnwindSafe(|| {
             Comm::run(p, move |mut world| {
                 let rank = world.rank();
@@ -125,6 +135,7 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
                 }
             })
         }));
+        crate::obs::disarm();
         match world_run {
             Ok(outs) => break outs,
             Err(payload) => {
@@ -189,7 +200,8 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
         .as_ref()
         .map(|e| e.stats.hits.load(std::sync::atomic::Ordering::Relaxed))
         .unwrap_or(0);
-    Ok(JobReport::new(job, output, wall_secs, rel_error, modeled, pjrt_hits))
+    let obs = collector.map(|c| c.take_report());
+    Ok(JobReport::new(job, output, wall_secs, rel_error, modeled, pjrt_hits, obs))
 }
 
 #[cfg(test)]

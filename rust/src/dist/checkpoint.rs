@@ -771,6 +771,7 @@ pub fn save_tt_stage(
 ) -> Result<()> {
     let dir = &ctx.policy.dir;
     let rank = world.rank();
+    let span = crate::obs::span_begin();
     let t0 = Instant::now();
     let meta = (|| -> Result<ChunkMeta> {
         std::fs::create_dir_all(dir)?;
@@ -790,6 +791,7 @@ pub fn save_tt_stage(
     };
     world.breakdown.add_secs(Cat::Io, t0.elapsed().as_secs_f64());
     world.breakdown.add_bytes(Cat::Io, meta.bytes);
+    let my_bytes = meta.bytes;
     let metas = world.all_gather_any(meta);
     if rank == 0 {
         let t1 = Instant::now();
@@ -832,6 +834,9 @@ pub fn save_tt_stage(
         log::info!("checkpoint: committed {stages_done} TT stage(s) to {dir:?}");
     }
     world.barrier();
+    // Commit latency spans close after the barrier: a commit is only
+    // durable once every rank has seen it.
+    crate::obs::end_ckpt(span, my_bytes);
     Ok(())
 }
 
@@ -954,6 +959,7 @@ pub fn save_ht_node(
 ) -> Result<()> {
     let dir = &ctx.policy.dir;
     let rank = world.rank();
+    let span = crate::obs::span_begin();
     let t0 = Instant::now();
     let my_metas = (|| -> Result<Vec<(usize, ChunkMeta)>> {
         std::fs::create_dir_all(dir)?;
@@ -1037,6 +1043,9 @@ pub fn save_ht_node(
         log::info!("checkpoint: committed {nodes_done} HT node(s) to {dir:?}");
     }
     world.barrier();
+    // Same post-barrier close as save_tt_stage: latency includes the
+    // durability fence.
+    crate::obs::end_ckpt(span, my_metas.iter().map(|(_, m)| m.bytes).sum());
     Ok(())
 }
 

@@ -423,6 +423,9 @@ impl SharedStore {
     /// `"tt.stage0"`).
     pub fn publish(&self, name: &str, layout: &Layout, chunk: usize, data: Vec<f64>) -> Result<()> {
         self.check_publish(name, layout, chunk, data.len())?;
+        let span = crate::obs::span_begin();
+        let logical_bytes = (data.len() * 8) as u64;
+        let mut spill_bytes = 0u64;
         let stored = match &self.spill {
             SpillMode::Memory => ChunkData::Mem(Arc::new(data)),
             SpillMode::Disk(dir) => {
@@ -432,9 +435,11 @@ impl SharedStore {
                     bytes.extend_from_slice(&x.to_le_bytes());
                 }
                 std::fs::write(&path, &bytes)?;
+                spill_bytes = bytes.len() as u64;
                 ChunkData::Disk(path)
             }
         };
+        crate::obs::end_store_write(span, logical_bytes, spill_bytes);
         self.insert_chunk(name, layout, chunk, stored)
     }
 
@@ -453,6 +458,11 @@ impl SharedStore {
         data: SparseChunk,
     ) -> Result<()> {
         self.check_publish(name, layout, chunk, data.len())?;
+        let span = crate::obs::span_begin();
+        // Sparse payloads are accounted at their stored size (nnz-scaled),
+        // not the dense-equivalent chunk size.
+        let logical_bytes = (8 * (1 + 2 * data.nnz())) as u64;
+        let mut spill_bytes = 0u64;
         let stored = match &self.spill {
             SpillMode::Memory => ChunkData::MemSparse(Arc::new(data)),
             SpillMode::Disk(dir) => {
@@ -467,9 +477,11 @@ impl SharedStore {
                     bytes.extend_from_slice(&v.to_le_bytes());
                 }
                 std::fs::write(&path, &bytes)?;
+                spill_bytes = bytes.len() as u64;
                 ChunkData::DiskSparse { path, len, nnz }
             }
         };
+        crate::obs::end_store_write(span, logical_bytes, spill_bytes);
         self.insert_chunk(name, layout, chunk, stored)
     }
 
@@ -653,6 +665,7 @@ impl StoreView {
     /// element). Sparse chunks zero-fill the run and scatter their
     /// nonzeros.
     pub fn read_into(&self, lin: usize, dst: &mut [f64]) {
+        crate::obs::count(crate::obs::Ctr::StoreReadBytes, (dst.len() * 8) as u64);
         let mut done = 0;
         while done < dst.len() {
             let (chunk, offset, run) = self.layout.locate_run(lin + done);
@@ -713,10 +726,12 @@ impl StoreView {
     }
 
     fn load_bytes(&self, path: &std::path::Path) -> Vec<u8> {
+        let span = crate::obs::span_begin();
         let bytes = std::fs::read(path).unwrap_or_else(|e| {
             panic!("chunk store: failed to read spill file {path:?}: {e}")
         });
         self.bytes_read.set(self.bytes_read.get() + bytes.len() as u64);
+        crate::obs::end_store_read(span, bytes.len() as u64);
         bytes
     }
 

@@ -129,10 +129,12 @@ impl Comm {
     {
         assert!(p > 0, "Comm::run needs at least one rank");
         let shared = Arc::new(WorldState::new());
-        // Snapshot the caller thread's fault plan (always `None` without
-        // the `fault-inject` feature) so injected deaths are scoped to
-        // worlds started from the arming thread.
+        // Snapshot the caller thread's fault plan and trace collector
+        // (always `None` without their features) so injected deaths and
+        // recorded traces are scoped to worlds started from the arming
+        // thread.
         let fault_plan = crate::dist::faults::armed();
+        let obs_collector = crate::obs::armed();
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..p)
                 .map(|rank| {
@@ -148,9 +150,14 @@ impl Comm {
                     };
                     let ws = Arc::clone(&shared);
                     let plan = fault_plan.clone();
+                    let obs = obs_collector.clone();
                     scope.spawn(move || {
                         crate::dist::faults::enter_rank(plan, rank);
+                        crate::obs::enter_rank(obs, rank);
+                        crate::util::logging::set_thread_rank(rank);
                         let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
+                        crate::util::logging::clear_thread_rank();
+                        crate::obs::exit_rank();
                         crate::dist::faults::exit_rank();
                         if out.is_err() {
                             ws.poison();
@@ -285,15 +292,18 @@ impl Comm {
     /// the `Other` category (barriers separate phases, they are not one of
     /// the paper's plotted costs).
     pub fn barrier(&mut self) {
+        let span = crate::obs::span_begin();
         let t0 = Instant::now();
         let _ = self.exchange(());
         self.breakdown.add_secs(Cat::Other, t0.elapsed().as_secs_f64());
+        crate::obs::end_collective(span, Cat::Other, 0);
     }
 
     /// Element-wise sum of `data` over all members, written back into
     /// `data` (MPI `MPI_Allreduce(+)`). Every rank sums contributions in
     /// rank order, so results are bitwise identical across ranks.
     pub fn all_reduce_sum(&mut self, data: &mut [f64]) {
+        let span = crate::obs::span_begin();
         let t0 = Instant::now();
         let parts = self.exchange(data.to_vec());
         data.iter_mut().for_each(|x| *x = 0.0);
@@ -305,14 +315,17 @@ impl Comm {
         }
         self.breakdown.add_secs(Cat::AllReduce, t0.elapsed().as_secs_f64());
         self.breakdown.add_bytes(Cat::AllReduce, (data.len() * 8) as u64);
+        crate::obs::end_collective(span, Cat::AllReduce, (data.len() * 8) as u64);
     }
 
     /// Sum one scalar over all members (in rank order on every rank).
     pub fn all_reduce_scalar(&mut self, x: f64) -> f64 {
+        let span = crate::obs::span_begin();
         let t0 = Instant::now();
         let sum: f64 = self.exchange(x).iter().sum();
         self.breakdown.add_secs(Cat::AllReduce, t0.elapsed().as_secs_f64());
         self.breakdown.add_bytes(Cat::AllReduce, 8);
+        crate::obs::end_collective(span, Cat::AllReduce, 8);
         sum
     }
 
@@ -331,11 +344,13 @@ impl Comm {
     /// rank, in rank order (MPI `MPI_Allgatherv`). Empty contributions are
     /// allowed.
     pub fn all_gather_varied(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+        let span = crate::obs::span_begin();
         let t0 = Instant::now();
         let parts = self.exchange(data.to_vec());
         let total: usize = parts.iter().map(Vec::len).sum();
         self.breakdown.add_secs(Cat::AllGather, t0.elapsed().as_secs_f64());
         self.breakdown.add_bytes(Cat::AllGather, (total * 8) as u64);
+        crate::obs::end_collective(span, Cat::AllGather, (total * 8) as u64);
         parts
     }
 
@@ -343,9 +358,11 @@ impl Comm {
     /// Used for metadata (e.g. merging per-rank [`Breakdown`]s); payload
     /// bytes are not tracked because the size is unknown.
     pub fn all_gather_any<T: Clone + Send + 'static>(&mut self, value: T) -> Vec<T> {
+        let span = crate::obs::span_begin();
         let t0 = Instant::now();
         let parts = self.exchange(value);
         self.breakdown.add_secs(Cat::AllGather, t0.elapsed().as_secs_f64());
+        crate::obs::end_collective(span, Cat::AllGather, 0);
         parts
     }
 
@@ -368,6 +385,7 @@ impl Comm {
                 data.len()
             )));
         }
+        let span = crate::obs::span_begin();
         let t0 = Instant::now();
         let parts = self.exchange(data.to_vec());
         let offset: usize = counts[..self.rank].iter().sum();
@@ -381,6 +399,7 @@ impl Comm {
         }
         self.breakdown.add_secs(Cat::ReduceScatter, t0.elapsed().as_secs_f64());
         self.breakdown.add_bytes(Cat::ReduceScatter, (data.len() * 8) as u64);
+        crate::obs::end_collective(span, Cat::ReduceScatter, (data.len() * 8) as u64);
         Ok(out)
     }
 

@@ -214,9 +214,11 @@ pub fn dist_nht(
         match node.children {
             None => {
                 // Leaf: the array *is* the factor U: n_i × r_t.
+                let span = crate::obs::span_begin();
                 let n_i = dims[node.lo];
                 let full = gather_full(world, store, &format!("ht.leaf{t}"), &layout, data)?;
                 payload[t] = Some(HtNode::Leaf(Mat::from_vec(n_i, rt, full)));
+                crate::obs::end_stage(span, &format!("ht.leaf{t}"));
             }
             Some((lc, rc)) => {
                 let mid = tree.node(lc).hi;
@@ -226,6 +228,7 @@ pub fn dist_nht(
                 // --- Left edge: M1 = n1 × (n2·rt) ≈ W1·H1. The block may
                 // arrive sparse at the root; the reshape keeps it sparse
                 // when the global density clears the cutoff.
+                let span = crate::obs::span_begin();
                 let t0 = Instant::now();
                 let x1 = dist_reshape_x(
                     world, store, &format!("ht.n{t}.a"), &layout, data, n1, n2 * rt, grid,
@@ -269,8 +272,10 @@ pub fn dist_nht(
                     TensorBlock::Dense(o1.w.into_vec()),
                     r1,
                 ));
+                crate::obs::end_stage(span, &format!("ht.n{t}.a"));
 
                 // --- Right edge: M2 = permuted H1 = n2 × (r1·rt) ≈ W2·H2.
+                let span = crate::obs::span_begin();
                 let t0 = Instant::now();
                 let perm = Layout::HtPermuted { r: r1, n2, rt, pr: grid.pr, pc: grid.pc };
                 let x2 = dist_reshape(
@@ -325,6 +330,7 @@ pub fn dist_nht(
                     TensorBlock::Dense(o2.ht.into_vec()),
                 )?;
                 payload[t] = Some(HtNode::Transfer(Mat::from_vec(r2, r1 * rt, bfull)));
+                crate::obs::end_stage(span, &format!("ht.n{t}.b"));
                 edge += 2;
             }
         }

@@ -37,6 +37,7 @@ pub mod error;
 pub mod ht;
 pub mod linalg;
 pub mod nmf;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -79,6 +79,15 @@ fn parse_grid(s: &str, d: usize) -> Result<ProcGrid, String> {
     ProcGrid::new(dims).map_err(|e| e.to_string())
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample (0.0 if empty).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
 fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("dntt decompose", "run the distributed nTT/nHT on a tensor")
         .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video")
@@ -103,13 +112,16 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         .opt("save-tt", "", "write the decomposition to this .dntt file (tt only)")
         .opt("out", "", "persist the decomposition (tt or ht) as a servable .dntt artifact")
         .opt("round", "", "TT-round the result to this tolerance (SVD; drops non-negativity)")
+        .opt("trace-out", "", "export a Chrome/Perfetto trace of the run to this JSON file")
+        .opt("metrics-out", "", "write the dntt-metrics-v1 envelope to this JSON file")
+        .flag("smoke", "CI preset: tiny synthetic 4-mode tensor on a 2x2x1x1 grid")
         .flag("prune", "prune all-zero rows/cols of each stage matrix before the NMF")
         .flag("keep-spill", "leave spill chunk files on disk after the job")
         .flag("json", "emit the report as JSON")
         .flag("no-check", "skip reconstruction-error check");
     let a = spec.parse(argv)?;
 
-    let input = match a.get("input") {
+    let mut input = match a.get("input") {
         "synthetic" => {
             let dims = a.usize_list("dims")?;
             let ranks = a.usize_list("true-ranks")?;
@@ -133,8 +145,22 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         "video" => InputSpec::Video(dntt::data::VideoConfig::default()),
         other => return Err(format!("unknown input '{other}'")),
     };
+    // --smoke: the fixed CI perf-smoke workload — small enough to finish
+    // in seconds, yet a genuine 4-rank distributed run (2x2x1x1 grid) so
+    // an exported trace carries one timeline per rank.
+    if a.flag("smoke") {
+        input = InputSpec::Synthetic(SyntheticTt::new(
+            vec![8, 8, 8, 8],
+            vec![3, 3, 3],
+            a.usize("seed")? as u64,
+        ));
+    }
     let d = input.dims().len();
-    let grid = parse_grid(a.get("grid"), d)?;
+    let grid = if a.flag("smoke") {
+        ProcGrid::new(vec![2, 2, 1, 1]).map_err(|e| e.to_string())?
+    } else {
+        parse_grid(a.get("grid"), d)?
+    };
     let decomp: Decomposition = a.get("decomp").parse()?;
     if decomp == Decomposition::Ht && (!a.get("round").is_empty() || !a.get("save-tt").is_empty()) {
         // Fail before the (possibly long) decomposition, not after.
@@ -187,10 +213,23 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         },
         resume: a.get("resume").parse()?,
         keep_spill: a.flag("keep-spill"),
+        // Either export flag turns the event ring on; the trace is also
+        // what fills the `counters`/`trace` sections of the envelope.
+        trace: if a.get("trace-out").is_empty() && a.get("metrics-out").is_empty() {
+            None
+        } else {
+            Some(dntt::obs::TraceConfig::default())
+        },
         ..JobConfig::new(input, grid)
     };
     if job.checkpoint.is_none() && job.resume == ResumeMode::Auto {
         return Err("--resume auto needs --checkpoint-dir".into());
+    }
+    if job.trace.is_some() && !dntt::obs::TRACE_ENABLED {
+        eprintln!(
+            "warning: --trace-out/--metrics-out given but this binary was built with \
+             `--no-default-features`; the trace and counter sections will be empty"
+        );
     }
     // Deterministic fault injection (replayable rank deaths): only a
     // fault-inject build actually fires the plan.
@@ -219,6 +258,24 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         println!("{}", rep.to_json().to_pretty());
     } else {
         println!("{}", rep.summary());
+    }
+    if !a.get("trace-out").is_empty() {
+        let obs = rep.obs.as_ref().expect("trace config was set");
+        let path = std::path::PathBuf::from(a.get("trace-out"));
+        std::fs::write(&path, obs.chrome_trace_json().to_pretty())
+            .map_err(|e| format!("writing {path:?}: {e}"))?;
+        println!(
+            "wrote trace to {path:?} ({} events, {} rank timeline(s), {} dropped)",
+            obs.events_total(),
+            obs.rank_ids().len(),
+            obs.dropped_total()
+        );
+    }
+    if !a.get("metrics-out").is_empty() {
+        let path = std::path::PathBuf::from(a.get("metrics-out"));
+        std::fs::write(&path, rep.metrics_json().to_pretty())
+            .map_err(|e| format!("writing {path:?}: {e}"))?;
+        println!("wrote dntt-metrics-v1 envelope to {path:?}");
     }
     if !a.get("round").is_empty() || !a.get("save-tt").is_empty() {
         let Some(tt_out) = rep.output.tt() else {
@@ -376,15 +433,36 @@ fn cmd_query(argv: &[String]) -> Result<(), String> {
         let queries: Vec<usize> =
             (0..points * d).map(|i| rng.below(dims[i % d])).collect();
         let mut out = Vec::new();
+        let mut batch_secs = Vec::with_capacity(queries.len() / (batch * d) + 1);
         let t0 = std::time::Instant::now();
         for chunk in queries.chunks(batch * d) {
+            let tb = std::time::Instant::now();
             match &mut served {
                 Served::Tt(h, ws) => h.batch_into(chunk, ws, &mut out),
                 Served::Ht(h, ws) => h.batch_into(chunk, ws, &mut out),
             }
             .map_err(|e| e.to_string())?;
+            batch_secs.push(tb.elapsed().as_secs_f64());
         }
         let batched_s = t0.elapsed().as_secs_f64();
+        batch_secs.sort_unstable_by(|x, y| x.total_cmp(y));
+        let p50 = percentile(&batch_secs, 0.50);
+        let p99 = percentile(&batch_secs, 0.99);
+        // Serve-side cache/workspace counters, identical across handles.
+        let (hits, misses, hit_rate, cap_bytes) = match &served {
+            Served::Tt(_, ws) => (
+                ws.prefix_modes_reused(),
+                ws.prefix_modes_computed(),
+                ws.prefix_hit_rate(),
+                ws.capacity_bytes(),
+            ),
+            Served::Ht(_, ws) => (
+                ws.prefix_modes_reused(),
+                ws.prefix_modes_computed(),
+                ws.prefix_hit_rate(),
+                ws.capacity_bytes(),
+            ),
+        };
         let qps = points as f64 / batched_s;
         let naive_s = if a.flag("compare") {
             let t1 = std::time::Instant::now();
@@ -411,10 +489,26 @@ fn cmd_query(argv: &[String]) -> Result<(), String> {
                 pairs.push(("naive_secs", Json::Num(ns)));
                 pairs.push(("speedup", Json::Num(ns / batched_s)));
             }
+            pairs.push((
+                "serve",
+                Json::obj(vec![
+                    ("prefix_modes_reused", Json::Num(hits as f64)),
+                    ("prefix_modes_computed", Json::Num(misses as f64)),
+                    ("prefix_hit_rate", Json::Num(hit_rate)),
+                    ("workspace_capacity_bytes", Json::Num(cap_bytes as f64)),
+                    ("batch_p50_secs", Json::Num(p50)),
+                    ("batch_p99_secs", Json::Num(p99)),
+                ]),
+            ));
             println!("{}", Json::obj(pairs).to_pretty());
         } else {
             println!(
                 "{points} point queries in batches of {batch}: {batched_s:.4}s ({qps:.0} q/s)"
+            );
+            println!(
+                "serve: prefix-cache hit rate {:.1}% ({hits} reused / {misses} computed), \
+                 workspace {cap_bytes} B, batch p50 {p50:.4e}s p99 {p99:.4e}s",
+                100.0 * hit_rate
             );
             if let Some(ns) = naive_s {
                 println!(

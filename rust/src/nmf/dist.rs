@@ -152,6 +152,7 @@ impl<'a> Ctx<'a> {
         let t0 = std::time::Instant::now();
         self.backend.gram_into(f, g, &mut self.ws.kernel);
         self.world.breakdown.add_secs(Cat::Gram, t0.elapsed().as_secs_f64());
+        crate::obs::count(crate::obs::Ctr::GemmFlops, (2 * f.rows() * self.r * self.r) as u64);
         self.world.all_reduce_sum(g.as_mut_slice());
     }
 
@@ -172,10 +173,13 @@ impl<'a> Ctx<'a> {
         let t0 = std::time::Instant::now();
         match self.x {
             XRef::Dense(x) => {
-                self.backend.xht_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+                self.backend.xht_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
+                let flops = (2 * x.rows() * x.cols() * self.r) as u64;
+                crate::obs::count(crate::obs::Ctr::GemmFlops, flops);
             }
             XRef::Sparse(x) => {
-                self.backend.xht_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+                self.backend.xht_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
+                crate::obs::count(crate::obs::Ctr::SpmmFlops, (2 * x.nnz() * self.r) as u64);
             }
         }
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
@@ -203,10 +207,13 @@ impl<'a> Ctx<'a> {
         let t0 = std::time::Instant::now();
         match self.x {
             XRef::Dense(x) => {
-                self.backend.wtx_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+                self.backend.wtx_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
+                let flops = (2 * x.rows() * x.cols() * self.r) as u64;
+                crate::obs::count(crate::obs::Ctr::GemmFlops, flops);
             }
             XRef::Sparse(x) => {
-                self.backend.wtx_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel)
+                self.backend.wtx_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
+                crate::obs::count(crate::obs::Ctr::SpmmFlops, (2 * x.nnz() * self.r) as u64);
             }
         }
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
@@ -523,6 +530,7 @@ fn bcd_loop(
     let mut prev_lip_h = 1.0f64;
 
     for _l in 0..cfg.max_iters {
+        let span = crate::obs::span_begin();
         // --- W given H (lines 6–10) --------------------------------
         let lip_w = hht.fro_norm().max(1e-300);
         let tu = std::time::Instant::now();
@@ -596,6 +604,7 @@ fn bcd_loop(
                     // observe before their break; keep BCD consistent).
                     o.on_iter(stats.iters, w, ht);
                 }
+                crate::obs::end_iter(span, stats.iters as u64);
                 break;
             }
         }
@@ -604,6 +613,7 @@ fn bcd_loop(
         if let Some(o) = obs.as_mut() {
             o.on_iter(stats.iters, w, ht);
         }
+        crate::obs::end_iter(span, stats.iters as u64);
     }
     // Return the last *accepted* iterate.
     *w = w_prev;
@@ -634,6 +644,7 @@ fn mu_loop(
     // computed once per iteration, not twice.
     ctx.gram_global_into(ht, &mut hht);
     for _l in 0..cfg.max_iters {
+        let span = crate::obs::span_begin();
         ctx.dist_xht_into(ht, &mut xht)?;
         let tu = std::time::Instant::now();
         ctx.backend.mu_update_inplace(w, &hht, &xht, &mut ctx.ws.kernel);
@@ -655,6 +666,7 @@ fn mu_loop(
         if let Some(o) = obs.as_mut() {
             o.on_iter(stats.iters, w, ht);
         }
+        crate::obs::end_iter(span, stats.iters as u64);
         if cfg.tol > 0.0 && rel < cfg.tol {
             break;
         }
@@ -683,6 +695,7 @@ fn hals_loop(
     // HHᵀ is loop-carried (see mu_loop): one global Gram per iteration.
     ctx.gram_global_into(ht, &mut hht);
     for _l in 0..cfg.max_iters {
+        let span = crate::obs::span_begin();
         ctx.dist_xht_into(ht, &mut xht)?;
         let tu = std::time::Instant::now();
         hals_update(w, &hht, &xht, r);
@@ -703,6 +716,7 @@ fn hals_loop(
         if let Some(o) = obs.as_mut() {
             o.on_iter(stats.iters, w, ht);
         }
+        crate::obs::end_iter(span, stats.iters as u64);
         if cfg.tol > 0.0 && rel < cfg.tol {
             break;
         }

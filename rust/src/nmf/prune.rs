@@ -339,6 +339,8 @@ fn pruned_impl(
         m - pm,
         n - pn
     );
+    crate::obs::count(crate::obs::Ctr::PruneRowsDropped, (m - pm) as u64);
+    crate::obs::count(crate::obs::Ctr::PruneColsDropped, (n - pn) as u64);
 
     // --- Compress: full MatGrid blocks -> pruned MatGrid blocks. --------
     // A sparse block keeps its representation through the round-trip:

@@ -1,0 +1,204 @@
+//! Typed metric counters: the fixed vocabulary of the `dntt-metrics-v1`
+//! envelope.
+//!
+//! Every rank accumulates one flat `[u64; NUM_CTRS]` array (see
+//! [`crate::obs::RankTrace::counters`]); the coordinator sums them into
+//! job totals after [`crate::coordinator::run_job`]. Counters come in two
+//! flavours:
+//!
+//! * **Deterministic** ([`Ctr::is_deterministic`] is `true`): bytes,
+//!   calls, flops, hits. These are pure functions of the job
+//!   configuration — the same seed yields bitwise-identical tallies on
+//!   every rerun, which `tests/obs_neutrality.rs` asserts.
+//! * **Timing** (`*_ns` counters): wall-clock nanoseconds, reproducible
+//!   only statistically. Excluded from determinism checks.
+//!
+//! The numeric discriminants are an internal array layout, not a wire
+//! format; the JSON envelope keys counters by [`Ctr::name`].
+
+use crate::util::json::Json;
+
+/// One typed counter slot.
+///
+/// Byte counters measure logical payload (`f64`s moved × 8) unless noted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Ctr {
+    /// Bytes gathered by `all_gather_varied` (sum over calls of the full
+    /// gathered output).
+    AgBytes = 0,
+    /// All-gather collective invocations (including object gathers,
+    /// which move no accountable bytes).
+    AgCalls,
+    /// Nanoseconds inside all-gather collectives.
+    AgNs,
+    /// Bytes reduced by `all_reduce_sum` / `all_reduce_scalar`.
+    ArBytes,
+    /// All-reduce collective invocations.
+    ArCalls,
+    /// Nanoseconds inside all-reduce collectives.
+    ArNs,
+    /// Bytes scattered by `reduce_scatter_uneven` (per-rank input size).
+    RscBytes,
+    /// Reduce-scatter collective invocations.
+    RscCalls,
+    /// Nanoseconds inside reduce-scatter collectives.
+    RscNs,
+    /// Barrier invocations (no payload).
+    BarrierCalls,
+    /// Logical bytes published into the chunk store.
+    StoreWriteBytes,
+    /// Bytes physically written to spill files (0 in memory mode).
+    StoreSpillBytes,
+    /// Logical bytes copied out of store views (`read_into`).
+    StoreReadBytes,
+    /// Bytes physically read back from spill files.
+    SpillReadBytes,
+    /// Dense floating-point operations (Gram + GEMM paths; one
+    /// multiply-add counts as two flops).
+    GemmFlops,
+    /// Sparse floating-point operations (SpMM paths; 2 × nnz × r per
+    /// product).
+    SpmmFlops,
+    /// Rows dropped by zero-row pruning before NMF.
+    PruneRowsDropped,
+    /// Columns dropped by zero-column pruning before NMF.
+    PruneColsDropped,
+    /// Durable checkpoint commits (stage or node granularity).
+    CkptCommits,
+    /// Nanoseconds inside checkpoint commits (write + manifest + fsync).
+    CkptNs,
+    /// NMF inner iterations executed (all stages, all loops).
+    NmfIters,
+    /// Serve-side batched query calls.
+    QueryBatches,
+    /// Individual point queries answered by batched serve calls.
+    Queries,
+    /// TT/HT modes whose partial contractions were reused from the
+    /// prefix cache across consecutive sorted queries.
+    PrefixModesReused,
+    /// TT/HT modes recomputed because the query prefix diverged.
+    PrefixModesComputed,
+}
+
+/// Number of counter slots (length of the per-rank array).
+pub const NUM_CTRS: usize = Ctr::PrefixModesComputed as usize + 1;
+
+/// Every counter, in array-layout order.
+pub const ALL_CTRS: [Ctr; NUM_CTRS] = [
+    Ctr::AgBytes,
+    Ctr::AgCalls,
+    Ctr::AgNs,
+    Ctr::ArBytes,
+    Ctr::ArCalls,
+    Ctr::ArNs,
+    Ctr::RscBytes,
+    Ctr::RscCalls,
+    Ctr::RscNs,
+    Ctr::BarrierCalls,
+    Ctr::StoreWriteBytes,
+    Ctr::StoreSpillBytes,
+    Ctr::StoreReadBytes,
+    Ctr::SpillReadBytes,
+    Ctr::GemmFlops,
+    Ctr::SpmmFlops,
+    Ctr::PruneRowsDropped,
+    Ctr::PruneColsDropped,
+    Ctr::CkptCommits,
+    Ctr::CkptNs,
+    Ctr::NmfIters,
+    Ctr::QueryBatches,
+    Ctr::Queries,
+    Ctr::PrefixModesReused,
+    Ctr::PrefixModesComputed,
+];
+
+impl Ctr {
+    /// Stable snake_case key used in the `dntt-metrics-v1` envelope.
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::AgBytes => "ag_bytes",
+            Ctr::AgCalls => "ag_calls",
+            Ctr::AgNs => "ag_ns",
+            Ctr::ArBytes => "ar_bytes",
+            Ctr::ArCalls => "ar_calls",
+            Ctr::ArNs => "ar_ns",
+            Ctr::RscBytes => "rsc_bytes",
+            Ctr::RscCalls => "rsc_calls",
+            Ctr::RscNs => "rsc_ns",
+            Ctr::BarrierCalls => "barrier_calls",
+            Ctr::StoreWriteBytes => "store_write_bytes",
+            Ctr::StoreSpillBytes => "store_spill_bytes",
+            Ctr::StoreReadBytes => "store_read_bytes",
+            Ctr::SpillReadBytes => "spill_read_bytes",
+            Ctr::GemmFlops => "gemm_flops",
+            Ctr::SpmmFlops => "spmm_flops",
+            Ctr::PruneRowsDropped => "prune_rows_dropped",
+            Ctr::PruneColsDropped => "prune_cols_dropped",
+            Ctr::CkptCommits => "ckpt_commits",
+            Ctr::CkptNs => "ckpt_ns",
+            Ctr::NmfIters => "nmf_iters",
+            Ctr::QueryBatches => "query_batches",
+            Ctr::Queries => "queries",
+            Ctr::PrefixModesReused => "prefix_modes_reused",
+            Ctr::PrefixModesComputed => "prefix_modes_computed",
+        }
+    }
+
+    /// `true` for counters that are a pure function of the job config
+    /// (bytes/calls/flops/hits); `false` for wall-clock `*_ns` counters.
+    pub fn is_deterministic(self) -> bool {
+        !matches!(self, Ctr::AgNs | Ctr::ArNs | Ctr::RscNs | Ctr::CkptNs)
+    }
+}
+
+/// Serialize one counter array as a JSON object keyed by [`Ctr::name`].
+/// Zero counters are kept so envelope consumers see a fixed schema.
+pub fn counters_json(counters: &[u64; NUM_CTRS]) -> Json {
+    Json::obj(
+        ALL_CTRS
+            .iter()
+            .map(|&c| (c.name(), Json::Num(counters[c as usize] as f64)))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discriminants_are_dense_and_ordered() {
+        for (i, c) in ALL_CTRS.iter().enumerate() {
+            assert_eq!(*c as usize, i, "ALL_CTRS out of order at {i}");
+        }
+        assert_eq!(ALL_CTRS.len(), NUM_CTRS);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> = ALL_CTRS.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), NUM_CTRS);
+    }
+
+    #[test]
+    fn ns_counters_are_nondeterministic_only() {
+        for c in ALL_CTRS {
+            assert_eq!(
+                c.is_deterministic(),
+                !c.name().ends_with("_ns"),
+                "{} determinism flag disagrees with its name",
+                c.name()
+            );
+        }
+    }
+
+    #[test]
+    fn counters_json_has_full_schema() {
+        let v = counters_json(&[0; NUM_CTRS]);
+        assert_eq!(v.as_obj().unwrap().len(), NUM_CTRS);
+        assert_eq!(v.get("ag_bytes").as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,50 @@
+//! Crate-wide observability: per-rank tracing, typed metric counters,
+//! and cost-model validation data.
+//!
+//! The paper's scalability story (§IV-B, Figs 5–7) is a per-category
+//! cost breakdown; this module makes that breakdown *inspectable* at
+//! per-rank, per-stage, per-collective granularity without perturbing
+//! the computation it measures. Three layers:
+//!
+//! 1. **Tracing** ([`TraceCollector`], [`RankTrace`], [`Event`]): every
+//!    rank thread owns a fixed-capacity event ring recording closed
+//!    spans for stages, NMF iterations, collectives, chunk-store
+//!    traffic, checkpoint commits, and serve-side query batches. Rings
+//!    merge into an [`ObsReport`] after the job; `--trace-out` exports
+//!    Chrome trace-event JSON loadable in Perfetto, one timeline per
+//!    rank.
+//! 2. **Metrics** ([`Ctr`]): typed counters — bytes per collective,
+//!    store read/write/spill bytes, GEMM/SpMM flop tallies, prune hits,
+//!    checkpoint commit latencies, prefix-cache hit rates — aggregated
+//!    into the versioned `dntt-metrics-v1` envelope (`--metrics-out`,
+//!    built by [`crate::coordinator::JobReport::metrics_json`]).
+//! 3. **Model validation**: the envelope and report tables compare
+//!    measured collective time/bytes against the α-β
+//!    [`crate::dist::CostModel`]; byte residuals are zero by
+//!    construction (the model prices measured message sizes), so drift
+//!    shows up purely in time.
+//!
+//! # Arming and neutrality
+//!
+//! Like [`crate::dist::faults`], the plumbing is scoped through
+//! thread-locals: [`arm`] installs a collector on the coordinator
+//! thread, [`crate::dist::Comm::run`] hands it to every rank thread it
+//! spawns, and unarmed runs skip all recording behind one branch per
+//! hook. Instrumentation never touches factor data — armed and unarmed
+//! runs produce bitwise-identical factors (`tests/obs_neutrality.rs`).
+//! Building with `--no-default-features` removes the `trace` feature
+//! and with it every hook body; [`TRACE_ENABLED`] reports which build
+//! this is.
+
+mod metrics;
+mod trace;
+
+pub use metrics::{counters_json, Ctr, ALL_CTRS, NUM_CTRS};
+pub use trace::{
+    arm, armed, disarm, Event, ObsReport, RankTrace, SpanKind, SpanToken,
+    TraceCollector, TraceConfig, NO_LABEL, TRACE_ENABLED,
+};
+pub(crate) use trace::{
+    count, end_ckpt, end_collective, end_iter, end_query_batch, end_stage,
+    end_store_read, end_store_write, enter_rank, exit_rank, span_begin,
+};

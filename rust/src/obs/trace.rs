@@ -1,0 +1,805 @@
+//! Per-rank event rings, the trace collector, and Chrome trace export.
+//!
+//! # Event model
+//!
+//! Every instrumented site records one **closed span** — an [`Event`]
+//! with begin/end timestamps taken from a single job-wide epoch — into
+//! the ring of the rank thread it ran on. Rings are fixed-capacity
+//! `Vec`s preallocated at rank entry: the hot path is a bounds check and
+//! a `Copy` write, never an allocation; events past capacity bump
+//! [`RankTrace::dropped`] instead. Counters ([`crate::obs::Ctr`]) live in
+//! the same thread-local state, so neither layer takes a lock while the
+//! job runs.
+//!
+//! # Ring/merge protocol
+//!
+//! The coordinator [`arm`]s a [`TraceCollector`] in a thread-local slot;
+//! [`crate::dist::Comm::run`] reads that slot on the spawning thread and
+//! hands each rank thread a clone (the same scoping the fault injector
+//! uses, so concurrent tests never observe each other's collectors). At
+//! rank exit the ring is moved — not copied — into the collector under a
+//! single mutex acquisition; [`TraceCollector::take_report`] then drains
+//! everything into an [`ObsReport`]. Relaunched attempts append further
+//! `RankTrace`s for the same rank id; the report aggregates them.
+//!
+//! # Neutrality guarantee
+//!
+//! Instrumentation only *reads* the computation: no hook touches factor
+//! data, and arming a collector changes no arithmetic, no iteration
+//! order, and no collective schedule. `tests/obs_neutrality.rs` asserts
+//! the resulting factors are bitwise-identical to an uninstrumented run.
+//! Building with `--no-default-features` removes the plumbing entirely:
+//! every hook below compiles to an empty `#[inline(always)]` function,
+//! the same zero-cost pattern as [`crate::dist::faults`].
+
+use crate::obs::metrics::{counters_json, Ctr, NUM_CTRS};
+use crate::util::json::Json;
+use crate::util::timer::Cat;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// `true` when the crate was built with the (default) `trace` feature.
+pub const TRACE_ENABLED: bool = cfg!(feature = "trace");
+
+/// Label value meaning "the [`SpanKind`] alone names this event".
+pub const NO_LABEL: u32 = u32::MAX;
+
+/// Sizing knobs for the per-rank trace rings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Fixed per-rank event capacity. Each slot is one [`Event`]
+    /// (40 bytes); overflow is counted, never allocated.
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { ring_capacity: 1 << 16 }
+    }
+}
+
+/// What a span measured. Determines the Chrome-trace category and which
+/// counters the closing hook bumps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One driver stage (TT stage / HT node half); labelled with the
+    /// stage name (`tt.stage0`, `ht.n3.a`, …).
+    Stage,
+    /// One NMF inner iteration; `arg` is the 1-based iteration index.
+    NmfIter,
+    /// All-gather collective; `arg` is bytes gathered.
+    AllGather,
+    /// All-reduce collective; `arg` is bytes reduced.
+    AllReduce,
+    /// Reduce-scatter collective; `arg` is bytes scattered.
+    ReduceScatter,
+    /// Barrier (no payload).
+    Barrier,
+    /// Chunk-store publish; `arg` is logical bytes stored.
+    StoreWrite,
+    /// Spill-file load into a store view; `arg` is bytes read.
+    StoreRead,
+    /// Durable checkpoint commit; `arg` is chunk bytes written.
+    Checkpoint,
+    /// Serve-side batched query; `arg` is the query count.
+    QueryBatch,
+}
+
+impl SpanKind {
+    /// Stable name used for Chrome-trace `name`/`cat` fields.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Stage => "stage",
+            SpanKind::NmfIter => "nmf_iter",
+            SpanKind::AllGather => "all_gather",
+            SpanKind::AllReduce => "all_reduce",
+            SpanKind::ReduceScatter => "reduce_scatter",
+            SpanKind::Barrier => "barrier",
+            SpanKind::StoreWrite => "store_write",
+            SpanKind::StoreRead => "store_read",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::QueryBatch => "query_batch",
+        }
+    }
+
+    /// The span kind recording a collective of breakdown category `cat`
+    /// (barrier and object gathers fold into their nearest kind).
+    pub fn of_cat(cat: Cat) -> SpanKind {
+        match cat {
+            Cat::AllGather => SpanKind::AllGather,
+            Cat::AllReduce => SpanKind::AllReduce,
+            Cat::ReduceScatter => SpanKind::ReduceScatter,
+            _ => SpanKind::Barrier,
+        }
+    }
+}
+
+/// One closed span in a rank's ring. `Copy`, fixed-size: pushing one is
+/// the entirety of the hot-path cost.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub kind: SpanKind,
+    /// Index into [`RankTrace::names`], or [`NO_LABEL`].
+    pub label: u32,
+    /// Kind-specific payload (bytes, iteration index, query count).
+    pub arg: u64,
+    /// Span begin, nanoseconds since the collector epoch.
+    pub t0_ns: u64,
+    /// Span end, nanoseconds since the collector epoch.
+    pub t1_ns: u64,
+}
+
+/// Everything one rank thread recorded during one world attempt.
+pub struct RankTrace {
+    /// World rank (Chrome-trace `tid`).
+    pub rank: usize,
+    /// Closed spans, in completion order.
+    pub events: Vec<Event>,
+    /// Interned span labels ([`Event::label`] indexes this).
+    pub names: Vec<String>,
+    /// Events discarded because the ring was full.
+    pub dropped: u64,
+    /// Spans begun but never closed (non-zero only if the rank
+    /// unwound mid-span; exported so tests can assert balance).
+    pub open_spans: u64,
+    /// Metric counters, indexed by [`Ctr`].
+    pub counters: [u64; NUM_CTRS],
+}
+
+/// Shared sink the coordinator arms for one job: a common epoch plus the
+/// merged rings of every rank thread that ran under it.
+pub struct TraceCollector {
+    config: TraceConfig,
+    #[cfg_attr(not(feature = "trace"), allow(dead_code))]
+    epoch: Instant,
+    ranks: Mutex<Vec<RankTrace>>,
+}
+
+impl TraceCollector {
+    /// A fresh collector; its creation instant is the trace epoch.
+    pub fn new(config: TraceConfig) -> Arc<TraceCollector> {
+        Arc::new(TraceCollector {
+            config,
+            epoch: Instant::now(),
+            ranks: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Ring sizing this collector hands to entering ranks.
+    pub fn config(&self) -> TraceConfig {
+        self.config
+    }
+
+    /// Move one rank's finished ring in (called from `exit_rank`).
+    #[cfg_attr(not(feature = "trace"), allow(dead_code))]
+    fn merge(&self, trace: RankTrace) {
+        self.ranks.lock().unwrap().push(trace);
+    }
+
+    /// Drain everything merged so far, ordered by rank id (relaunch
+    /// attempts of the same rank stay in arrival order after it).
+    pub fn take_report(&self) -> ObsReport {
+        let mut ranks = std::mem::take(&mut *self.ranks.lock().unwrap());
+        ranks.sort_by_key(|r| r.rank);
+        ObsReport { ring_capacity: self.config.ring_capacity, ranks }
+    }
+}
+
+/// The merged observability record of one job: every rank's events and
+/// counters, ready for export.
+pub struct ObsReport {
+    /// Ring capacity the traces were recorded under.
+    pub ring_capacity: usize,
+    /// Per-rank traces, ordered by rank id.
+    pub ranks: Vec<RankTrace>,
+}
+
+impl ObsReport {
+    /// Distinct rank ids present, ascending.
+    pub fn rank_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.ranks.iter().map(|r| r.rank).collect();
+        ids.dedup();
+        ids
+    }
+
+    /// Job-total value of one counter.
+    pub fn total(&self, c: Ctr) -> u64 {
+        self.ranks.iter().map(|r| r.counters[c as usize]).sum()
+    }
+
+    /// Counter totals aggregated per rank id (relaunch attempts summed).
+    pub fn per_rank_counters(&self) -> Vec<(usize, [u64; NUM_CTRS])> {
+        let mut out: Vec<(usize, [u64; NUM_CTRS])> = Vec::new();
+        for tr in &self.ranks {
+            match out.last_mut() {
+                Some((rank, acc)) if *rank == tr.rank => {
+                    for (a, c) in acc.iter_mut().zip(tr.counters.iter()) {
+                        *a += c;
+                    }
+                }
+                _ => out.push((tr.rank, tr.counters)),
+            }
+        }
+        out
+    }
+
+    /// Total events recorded across all ranks.
+    pub fn events_total(&self) -> u64 {
+        self.ranks.iter().map(|r| r.events.len() as u64).sum()
+    }
+
+    /// Total events lost to full rings.
+    pub fn dropped_total(&self) -> u64 {
+        self.ranks.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Total spans left open at rank exit (0 on a clean run).
+    pub fn open_spans_total(&self) -> u64 {
+        self.ranks.iter().map(|r| r.open_spans).sum()
+    }
+
+    /// Export as Chrome trace-event JSON (the `traceEvents` object
+    /// form), loadable in Perfetto / `chrome://tracing`. One process,
+    /// one thread lane per rank; spans become complete (`"X"`) events
+    /// with microsecond timestamps.
+    pub fn chrome_trace_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for rank in self.rank_ids() {
+            events.push(Json::obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(rank as f64)),
+                (
+                    "args",
+                    Json::obj(vec![(
+                        "name",
+                        Json::Str(format!("rank {rank}")),
+                    )]),
+                ),
+            ]));
+        }
+        for tr in &self.ranks {
+            for ev in &tr.events {
+                let name = if ev.label == NO_LABEL {
+                    ev.kind.name().to_string()
+                } else {
+                    tr.names[ev.label as usize].clone()
+                };
+                events.push(Json::obj(vec![
+                    ("name", Json::Str(name)),
+                    ("cat", Json::Str(ev.kind.name().into())),
+                    ("ph", Json::Str("X".into())),
+                    ("ts", Json::Num(ev.t0_ns as f64 / 1000.0)),
+                    (
+                        "dur",
+                        Json::Num((ev.t1_ns - ev.t0_ns) as f64 / 1000.0),
+                    ),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(tr.rank as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![("arg", Json::Num(ev.arg as f64))]),
+                    ),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("format", Json::Str("dntt-trace-v1".into())),
+                    (
+                        "ring_capacity",
+                        Json::Num(self.ring_capacity as f64),
+                    ),
+                    ("dropped", Json::Num(self.dropped_total() as f64)),
+                    (
+                        "open_spans",
+                        Json::Num(self.open_spans_total() as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Counter totals + per-rank arrays as JSON (the `counters` section
+    /// of the `dntt-metrics-v1` envelope).
+    pub fn counters_section_json(&self) -> Json {
+        let mut totals = [0u64; NUM_CTRS];
+        for (_, ctrs) in self.per_rank_counters() {
+            for (t, c) in totals.iter_mut().zip(ctrs.iter()) {
+                *t += c;
+            }
+        }
+        let per_rank: Vec<Json> = self
+            .per_rank_counters()
+            .into_iter()
+            .map(|(rank, ctrs)| {
+                Json::obj(vec![
+                    ("rank", Json::Num(rank as f64)),
+                    ("counters", counters_json(&ctrs)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("totals", counters_json(&totals)),
+            ("per_rank", Json::Arr(per_rank)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature-gated plumbing. Without the `trace` feature every hook below is
+// an inline no-op and `armed` returns `None`, so instrumented call sites
+// compile to nothing — the same shape as `dist::faults`.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "trace")]
+mod plumbing {
+    use super::{Event, RankTrace, SpanKind, TraceCollector, NO_LABEL};
+    use crate::obs::metrics::{Ctr, NUM_CTRS};
+    use crate::util::timer::Cat;
+    use std::cell::RefCell;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    struct RankObs {
+        collector: Arc<TraceCollector>,
+        rank: usize,
+        epoch: Instant,
+        capacity: usize,
+        events: Vec<Event>,
+        names: Vec<String>,
+        dropped: u64,
+        open_spans: u64,
+        counters: [u64; NUM_CTRS],
+    }
+
+    impl RankObs {
+        fn push(&mut self, ev: Event) {
+            if self.events.len() < self.capacity {
+                self.events.push(ev);
+            } else {
+                self.dropped += 1;
+            }
+        }
+
+        fn intern(&mut self, name: &str) -> u32 {
+            match self.names.iter().position(|n| n == name) {
+                Some(i) => i as u32,
+                None => {
+                    self.names.push(name.to_string());
+                    (self.names.len() - 1) as u32
+                }
+            }
+        }
+
+        fn bump(&mut self, c: Ctr, delta: u64) {
+            self.counters[c as usize] += delta;
+        }
+    }
+
+    thread_local! {
+        /// Coordinator-thread slot: the collector worlds started from
+        /// this thread will observe.
+        static ARMED: RefCell<Option<Arc<TraceCollector>>> =
+            const { RefCell::new(None) };
+        /// Rank-thread slot: this rank's ring + counters.
+        static RANK: RefCell<Option<RankObs>> = const { RefCell::new(None) };
+    }
+
+    pub fn arm(collector: &Arc<TraceCollector>) {
+        ARMED.with(|a| *a.borrow_mut() = Some(Arc::clone(collector)));
+    }
+
+    pub fn disarm() {
+        ARMED.with(|a| *a.borrow_mut() = None);
+    }
+
+    pub fn armed() -> Option<Arc<TraceCollector>> {
+        ARMED.with(|a| a.borrow().clone())
+    }
+
+    pub fn enter_rank(collector: Option<Arc<TraceCollector>>, rank: usize) {
+        RANK.with(|r| {
+            *r.borrow_mut() = collector.map(|collector| {
+                let capacity = collector.config.ring_capacity;
+                RankObs {
+                    epoch: collector.epoch,
+                    rank,
+                    capacity,
+                    events: Vec::with_capacity(capacity),
+                    names: Vec::new(),
+                    dropped: 0,
+                    open_spans: 0,
+                    counters: [0; NUM_CTRS],
+                    collector,
+                }
+            });
+        });
+    }
+
+    pub fn exit_rank() {
+        RANK.with(|r| {
+            if let Some(st) = r.borrow_mut().take() {
+                st.collector.merge(RankTrace {
+                    rank: st.rank,
+                    events: st.events,
+                    names: st.names,
+                    dropped: st.dropped,
+                    open_spans: st.open_spans,
+                    counters: st.counters,
+                });
+            }
+        });
+    }
+
+    /// Begin-of-span marker. Inactive (and free) when the thread is not
+    /// an observed rank.
+    #[derive(Debug)]
+    pub struct SpanToken {
+        t0_ns: u64,
+        active: bool,
+    }
+
+    pub fn span_begin() -> SpanToken {
+        RANK.with(|r| match r.borrow_mut().as_mut() {
+            Some(st) => {
+                st.open_spans += 1;
+                SpanToken {
+                    t0_ns: st.epoch.elapsed().as_nanos() as u64,
+                    active: true,
+                }
+            }
+            None => SpanToken { t0_ns: 0, active: false },
+        })
+    }
+
+    /// Close `tok` as one event; returns the span duration so callers
+    /// can bump their own `*_ns` counters. No-op on inactive tokens.
+    fn close(tok: SpanToken, kind: SpanKind, label: u32, arg: u64) -> u64 {
+        if !tok.active {
+            return 0;
+        }
+        RANK.with(|r| {
+            let mut r = r.borrow_mut();
+            let Some(st) = r.as_mut() else { return 0 };
+            let t1_ns = st.epoch.elapsed().as_nanos() as u64;
+            st.open_spans -= 1;
+            st.push(Event { kind, label, arg, t0_ns: tok.t0_ns, t1_ns });
+            t1_ns - tok.t0_ns
+        })
+    }
+
+    pub fn end_collective(tok: SpanToken, cat: Cat, bytes: u64) {
+        if !tok.active {
+            return;
+        }
+        let ns = close(tok, SpanKind::of_cat(cat), NO_LABEL, bytes);
+        RANK.with(|r| {
+            let mut r = r.borrow_mut();
+            let Some(st) = r.as_mut() else { return };
+            match cat {
+                Cat::AllGather => {
+                    st.bump(Ctr::AgBytes, bytes);
+                    st.bump(Ctr::AgCalls, 1);
+                    st.bump(Ctr::AgNs, ns);
+                }
+                Cat::AllReduce => {
+                    st.bump(Ctr::ArBytes, bytes);
+                    st.bump(Ctr::ArCalls, 1);
+                    st.bump(Ctr::ArNs, ns);
+                }
+                Cat::ReduceScatter => {
+                    st.bump(Ctr::RscBytes, bytes);
+                    st.bump(Ctr::RscCalls, 1);
+                    st.bump(Ctr::RscNs, ns);
+                }
+                _ => st.bump(Ctr::BarrierCalls, 1),
+            }
+        });
+    }
+
+    pub fn end_stage(tok: SpanToken, name: &str) {
+        if !tok.active {
+            return;
+        }
+        let label = RANK.with(|r| {
+            r.borrow_mut().as_mut().map_or(NO_LABEL, |st| st.intern(name))
+        });
+        close(tok, SpanKind::Stage, label, 0);
+    }
+
+    pub fn end_iter(tok: SpanToken, iter: u64) {
+        if !tok.active {
+            return;
+        }
+        close(tok, SpanKind::NmfIter, NO_LABEL, iter);
+        count(Ctr::NmfIters, 1);
+    }
+
+    pub fn end_ckpt(tok: SpanToken, bytes: u64) {
+        if !tok.active {
+            return;
+        }
+        let ns = close(tok, SpanKind::Checkpoint, NO_LABEL, bytes);
+        count(Ctr::CkptCommits, 1);
+        count(Ctr::CkptNs, ns);
+    }
+
+    pub fn end_store_write(tok: SpanToken, bytes: u64, spill_bytes: u64) {
+        if !tok.active {
+            return;
+        }
+        close(tok, SpanKind::StoreWrite, NO_LABEL, bytes);
+        count(Ctr::StoreWriteBytes, bytes);
+        count(Ctr::StoreSpillBytes, spill_bytes);
+    }
+
+    pub fn end_store_read(tok: SpanToken, bytes: u64) {
+        if !tok.active {
+            return;
+        }
+        close(tok, SpanKind::StoreRead, NO_LABEL, bytes);
+        count(Ctr::SpillReadBytes, bytes);
+    }
+
+    pub fn end_query_batch(
+        tok: SpanToken,
+        queries: u64,
+        modes_reused: u64,
+        modes_computed: u64,
+    ) {
+        if !tok.active {
+            return;
+        }
+        close(tok, SpanKind::QueryBatch, NO_LABEL, queries);
+        count(Ctr::QueryBatches, 1);
+        count(Ctr::Queries, queries);
+        count(Ctr::PrefixModesReused, modes_reused);
+        count(Ctr::PrefixModesComputed, modes_computed);
+    }
+
+    pub fn count(c: Ctr, delta: u64) {
+        RANK.with(|r| {
+            if let Some(st) = r.borrow_mut().as_mut() {
+                st.bump(c, delta);
+            }
+        });
+    }
+}
+
+#[cfg(not(feature = "trace"))]
+mod plumbing {
+    use super::TraceCollector;
+    use crate::obs::metrics::Ctr;
+    use crate::util::timer::Cat;
+    use std::sync::Arc;
+
+    /// No-op without the `trace` feature (nothing is ever recorded).
+    pub fn arm(_collector: &Arc<TraceCollector>) {}
+
+    pub fn disarm() {}
+
+    pub fn armed() -> Option<Arc<TraceCollector>> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn enter_rank(_collector: Option<Arc<TraceCollector>>, _rank: usize) {}
+
+    #[inline(always)]
+    pub fn exit_rank() {}
+
+    /// Zero-sized in default-off builds.
+    #[derive(Debug)]
+    pub struct SpanToken;
+
+    #[inline(always)]
+    pub fn span_begin() -> SpanToken {
+        SpanToken
+    }
+
+    #[inline(always)]
+    pub fn end_collective(_tok: SpanToken, _cat: Cat, _bytes: u64) {}
+
+    #[inline(always)]
+    pub fn end_stage(_tok: SpanToken, _name: &str) {}
+
+    #[inline(always)]
+    pub fn end_iter(_tok: SpanToken, _iter: u64) {}
+
+    #[inline(always)]
+    pub fn end_ckpt(_tok: SpanToken, _bytes: u64) {}
+
+    #[inline(always)]
+    pub fn end_store_write(_tok: SpanToken, _bytes: u64, _spill_bytes: u64) {}
+
+    #[inline(always)]
+    pub fn end_store_read(_tok: SpanToken, _bytes: u64) {}
+
+    #[inline(always)]
+    pub fn end_query_batch(
+        _tok: SpanToken,
+        _queries: u64,
+        _modes_reused: u64,
+        _modes_computed: u64,
+    ) {
+    }
+
+    /// The counter hook: literally empty in trace-off builds.
+    #[inline(always)]
+    pub fn count(_c: Ctr, _delta: u64) {}
+}
+
+pub use plumbing::{arm, armed, disarm, SpanToken};
+pub(crate) use plumbing::{
+    count, end_ckpt, end_collective, end_iter, end_query_batch, end_stage,
+    end_store_read, end_store_write, enter_rank, exit_rank, span_begin,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_exports_clean_trace() {
+        let collector = TraceCollector::new(TraceConfig::default());
+        let report = collector.take_report();
+        assert!(report.ranks.is_empty());
+        let v = report.chrome_trace_json();
+        assert_eq!(v.get("traceEvents").as_arr().unwrap().len(), 0);
+        assert_eq!(
+            v.get("otherData").get("format").as_str(),
+            Some("dntt-trace-v1")
+        );
+    }
+
+    #[test]
+    fn report_orders_and_aggregates_ranks() {
+        let collector = TraceCollector::new(TraceConfig { ring_capacity: 4 });
+        let mut ctrs_a = [0u64; NUM_CTRS];
+        ctrs_a[Ctr::AgBytes as usize] = 100;
+        let mut ctrs_b = [0u64; NUM_CTRS];
+        ctrs_b[Ctr::AgBytes as usize] = 30;
+        // Two attempts of rank 1 around one of rank 0, merged unsorted.
+        collector.merge(RankTrace {
+            rank: 1,
+            events: vec![Event {
+                kind: SpanKind::AllGather,
+                label: NO_LABEL,
+                arg: 100,
+                t0_ns: 10,
+                t1_ns: 20,
+            }],
+            names: Vec::new(),
+            dropped: 2,
+            open_spans: 0,
+            counters: ctrs_a,
+        });
+        collector.merge(RankTrace {
+            rank: 0,
+            events: Vec::new(),
+            names: vec!["tt.stage0".into()],
+            dropped: 0,
+            open_spans: 1,
+            counters: [0; NUM_CTRS],
+        });
+        collector.merge(RankTrace {
+            rank: 1,
+            events: Vec::new(),
+            names: Vec::new(),
+            dropped: 0,
+            open_spans: 0,
+            counters: ctrs_b,
+        });
+        let report = collector.take_report();
+        assert_eq!(report.rank_ids(), vec![0, 1]);
+        assert_eq!(report.total(Ctr::AgBytes), 130);
+        assert_eq!(report.events_total(), 1);
+        assert_eq!(report.dropped_total(), 2);
+        assert_eq!(report.open_spans_total(), 1);
+        let per_rank = report.per_rank_counters();
+        assert_eq!(per_rank.len(), 2);
+        assert_eq!(per_rank[1].0, 1);
+        assert_eq!(per_rank[1].1[Ctr::AgBytes as usize], 130);
+        // Draining is destructive: a second take sees nothing.
+        assert!(collector.take_report().ranks.is_empty());
+    }
+
+    #[test]
+    fn chrome_export_is_parseable_and_complete() {
+        let collector = TraceCollector::new(TraceConfig::default());
+        collector.merge(RankTrace {
+            rank: 3,
+            events: vec![
+                Event {
+                    kind: SpanKind::Stage,
+                    label: 0,
+                    arg: 0,
+                    t0_ns: 1_000,
+                    t1_ns: 9_000,
+                },
+                Event {
+                    kind: SpanKind::AllReduce,
+                    label: NO_LABEL,
+                    arg: 64,
+                    t0_ns: 2_000,
+                    t1_ns: 3_000,
+                },
+            ],
+            names: vec!["tt.stage0".into()],
+            dropped: 0,
+            open_spans: 0,
+            counters: [0; NUM_CTRS],
+        });
+        let text = collector.take_report().chrome_trace_json().to_pretty();
+        let v = Json::parse(&text).expect("trace JSON parses");
+        let events = v.get("traceEvents").as_arr().unwrap();
+        // 1 thread_name metadata + 2 spans.
+        assert_eq!(events.len(), 3);
+        let stage = &events[1];
+        assert_eq!(stage.get("ph").as_str(), Some("X"));
+        assert_eq!(stage.get("name").as_str(), Some("tt.stage0"));
+        assert_eq!(stage.get("tid").as_usize(), Some(3));
+        assert_eq!(stage.get("ts").as_f64(), Some(1.0));
+        assert_eq!(stage.get("dur").as_f64(), Some(8.0));
+        assert_eq!(events[2].get("cat").as_str(), Some("all_reduce"));
+        assert_eq!(v.get("otherData").get("open_spans").as_usize(), Some(0));
+    }
+
+    #[cfg(feature = "trace")]
+    #[test]
+    fn rank_hooks_record_spans_counters_and_overflow() {
+        let collector = TraceCollector::new(TraceConfig { ring_capacity: 2 });
+        enter_rank(Some(Arc::clone(&collector)), 5);
+        let t = span_begin();
+        end_collective(t, Cat::AllGather, 80);
+        let t = span_begin();
+        end_stage(t, "tt.stage0");
+        // Ring is full: the third span is dropped but still counted.
+        let t = span_begin();
+        end_collective(t, Cat::AllReduce, 8);
+        count(Ctr::GemmFlops, 1_000);
+        exit_rank();
+        let report = collector.take_report();
+        assert_eq!(report.ranks.len(), 1);
+        let tr = &report.ranks[0];
+        assert_eq!(tr.rank, 5);
+        assert_eq!(tr.events.len(), 2);
+        assert_eq!(tr.dropped, 1);
+        assert_eq!(tr.open_spans, 0);
+        assert_eq!(tr.names, vec!["tt.stage0".to_string()]);
+        assert_eq!(tr.counters[Ctr::AgBytes as usize], 80);
+        assert_eq!(tr.counters[Ctr::AgCalls as usize], 1);
+        assert_eq!(tr.counters[Ctr::ArBytes as usize], 8);
+        assert_eq!(tr.counters[Ctr::GemmFlops as usize], 1_000);
+        assert!(tr.counters[Ctr::AgNs as usize] > 0);
+        // Not entered: hooks are inert.
+        let t = span_begin();
+        end_collective(t, Cat::AllGather, 999);
+        assert!(collector.take_report().ranks.is_empty());
+    }
+
+    #[test]
+    fn unentered_hooks_are_inert_and_armed_scopes_to_thread() {
+        let collector = TraceCollector::new(TraceConfig::default());
+        assert!(armed().is_none());
+        arm(&collector);
+        if TRACE_ENABLED {
+            assert!(armed().is_some());
+        } else {
+            assert!(armed().is_none());
+        }
+        disarm();
+        assert!(armed().is_none());
+        // Hook calls on a non-rank thread never panic or record.
+        let t = span_begin();
+        end_iter(t, 1);
+        count(Ctr::NmfIters, 1);
+        assert!(collector.take_report().ranks.is_empty());
+    }
+}

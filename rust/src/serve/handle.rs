@@ -38,6 +38,12 @@ pub struct QueryWorkspace {
     prefix: Vec<f64>,
     prev: Vec<usize>,
     qbuf: Vec<usize>,
+    /// Prefix vectors reused from the cache across all batches through
+    /// this workspace (a sorted query sharing its first `s` modes with
+    /// its predecessor reuses `s` cached prefixes).
+    modes_reused: u64,
+    /// Prefix vectors recomputed across all batches.
+    modes_computed: u64,
 }
 
 impl QueryWorkspace {
@@ -51,6 +57,28 @@ impl QueryWorkspace {
             + self.prefix.capacity() * std::mem::size_of::<f64>()
             + self.prev.capacity() * std::mem::size_of::<usize>()
             + self.qbuf.capacity() * std::mem::size_of::<usize>()
+    }
+
+    /// Prefix-cache hits: per-mode partial products reused instead of
+    /// recomputed, accumulated over every batch served by this workspace.
+    pub fn prefix_modes_reused(&self) -> u64 {
+        self.modes_reused
+    }
+
+    /// Prefix-cache misses: per-mode partial products recomputed.
+    pub fn prefix_modes_computed(&self) -> u64 {
+        self.modes_computed
+    }
+
+    /// Fraction of per-mode contractions served from the prefix cache
+    /// (0.0 when nothing has been queried yet).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.modes_reused + self.modes_computed;
+        if total == 0 {
+            0.0
+        } else {
+            self.modes_reused as f64 / total as f64
+        }
     }
 }
 
@@ -171,6 +199,8 @@ impl TtHandle {
         if q == 0 {
             return Ok(());
         }
+        let span = crate::obs::span_begin();
+        let (mut reused, mut computed) = (0u64, 0u64);
         ws.perm.clear();
         ws.perm.extend(0..q);
         ws.perm
@@ -190,6 +220,8 @@ impl TtHandle {
             while s < d && idx[s] == ws.prev[s] {
                 s += 1;
             }
+            reused += s as u64;
+            computed += (d - s) as u64;
             for m in s..d {
                 let r_next = ranks[m + 1];
                 if m == 0 {
@@ -216,6 +248,9 @@ impl TtHandle {
             ws.prev[s..].copy_from_slice(&idx[s..]);
             out[qi] = ws.prefix[self.off[d - 1]];
         }
+        ws.modes_reused += reused;
+        ws.modes_computed += computed;
+        crate::obs::end_query_batch(span, q as u64, reused, computed);
         Ok(())
     }
 

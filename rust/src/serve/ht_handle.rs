@@ -38,6 +38,12 @@ pub struct HtQueryWorkspace {
     m2: Vec<f64>,
     prev: Vec<usize>,
     qbuf: Vec<usize>,
+    /// Node rows reused from the cache across all batches through this
+    /// workspace (a node whose mode range lies left of the changed
+    /// suffix keeps its cached row).
+    modes_reused: u64,
+    /// Node rows recomputed across all batches.
+    modes_computed: u64,
 }
 
 impl HtQueryWorkspace {
@@ -52,6 +58,28 @@ impl HtQueryWorkspace {
             + self.m2.capacity() * std::mem::size_of::<f64>()
             + self.prev.capacity() * std::mem::size_of::<usize>()
             + self.qbuf.capacity() * std::mem::size_of::<usize>()
+    }
+
+    /// Row-cache hits: per-node rows reused instead of recomputed,
+    /// accumulated over every batch served by this workspace.
+    pub fn prefix_modes_reused(&self) -> u64 {
+        self.modes_reused
+    }
+
+    /// Row-cache misses: per-node rows recomputed.
+    pub fn prefix_modes_computed(&self) -> u64 {
+        self.modes_computed
+    }
+
+    /// Fraction of per-node row contractions served from the cache
+    /// (0.0 when nothing has been queried yet).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.modes_reused + self.modes_computed;
+        if total == 0 {
+            0.0
+        } else {
+            self.modes_reused as f64 / total as f64
+        }
     }
 }
 
@@ -159,6 +187,8 @@ impl HtHandle {
         if q == 0 {
             return Ok(());
         }
+        let span = crate::obs::span_begin();
+        let (mut reused, mut computed) = (0u64, 0u64);
         ws.perm.clear();
         ws.perm.extend(0..q);
         ws.perm
@@ -179,6 +209,7 @@ impl HtHandle {
             }
             if s == d {
                 // Exact duplicate of the previous sorted query.
+                reused += tree.len() as u64;
                 out[qi] = last;
                 continue;
             }
@@ -187,8 +218,10 @@ impl HtHandle {
             for t in (0..tree.len()).rev() {
                 let node = tree.node(t);
                 if node.hi <= s {
+                    reused += 1;
                     continue;
                 }
+                computed += 1;
                 match node.children {
                     None => {
                         let u = self.ht.node(t).mat();
@@ -242,6 +275,9 @@ impl HtHandle {
             last = ws.rows[self.row_off[0]];
             out[qi] = last;
         }
+        ws.modes_reused += reused;
+        ws.modes_computed += computed;
+        crate::obs::end_query_batch(span, q as u64, reused, computed);
         Ok(())
     }
 

@@ -154,6 +154,7 @@ pub fn dist_ntt(
     let mut ws = NmfWorkspace::new();
 
     for l in start_stage..d - 1 {
+        let stage_span = crate::obs::span_begin();
         let n_l = dims[l];
         let m = r_prev * n_l;
         let ncols = s_rest / n_l;
@@ -214,9 +215,11 @@ pub fn dist_ntt(
                 )?;
             }
         }
+        crate::obs::end_stage(stage_span, &format!("tt.stage{l}"));
     }
 
     // --- Line 11: gather the final H as core G(d) ((r_{d-1}·n_d) × 1).
+    let final_span = crate::obs::span_begin();
     let rank_id = world.rank();
     let t0 = std::time::Instant::now();
     store.publish_block("tt.final", &cur_layout, rank_id, cur_data)?;
@@ -233,6 +236,7 @@ pub fn dist_ntt(
         store.remove("tt.final");
     }
     cores.push(Mat::from_vec(r_prev * dims[d - 1], 1, hfull));
+    crate::obs::end_stage(final_span, "tt.final");
 
     // Merge sub-communicator costs, then take the critical path over ranks.
     world.breakdown.merge_sum(&row.breakdown.clone());

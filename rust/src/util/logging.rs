@@ -2,11 +2,51 @@
 //!
 //! The offline environment has the `log` facade but no `env_logger`, so the
 //! library ships a small implementation. Level is read once from the
-//! `DNTT_LOG` environment variable (`error|warn|info|debug|trace`,
-//! default `info`).
+//! `DNTT_LOG` environment variable (`off|error|warn|info|debug|trace`,
+//! default `info`; anything else warns once and falls back to `info`).
+//!
+//! Records are prefixed with the milliseconds elapsed since [`init`] and
+//! the emitting world rank, so interleaved multi-rank stderr is
+//! attributable:
+//!
+//! ```text
+//! [   12.3ms r3 WARN  dntt::dist::checkpoint] manifest commit retried
+//! [   12.4ms -- INFO  dntt::coordinator] job finished
+//! ```
+//!
+//! The rank slot is a thread-local installed by [`crate::dist::Comm::run`]
+//! on every rank thread (via [`set_thread_rank`]) and cleared when the
+//! rank exits; threads outside a world — the coordinator itself, tests,
+//! the CLI — print `--`.
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
-use std::sync::Once;
+use std::cell::Cell;
+use std::sync::{Once, OnceLock};
+use std::time::Instant;
+
+/// Epoch for the elapsed-ms prefix (set once, at first [`init`]).
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// World rank of the current thread, if it is a rank thread.
+    static THREAD_RANK: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Install `rank` as this thread's log attribution (called by
+/// [`crate::dist::Comm::run`] when a rank thread starts).
+pub fn set_thread_rank(rank: usize) {
+    THREAD_RANK.with(|r| r.set(Some(rank)));
+}
+
+/// Clear the rank attribution (called when a rank thread exits).
+pub fn clear_thread_rank() {
+    THREAD_RANK.with(|r| r.set(None));
+}
+
+/// The rank installed on this thread, if any.
+pub fn thread_rank() -> Option<usize> {
+    THREAD_RANK.with(|r| r.get())
+}
 
 struct StderrLogger {
     level: Level,
@@ -19,7 +59,20 @@ impl Log for StderrLogger {
 
     fn log(&self, record: &Record<'_>) {
         if self.enabled(record.metadata()) {
-            eprintln!("[{:<5} {}] {}", record.level(), record.target(), record.args());
+            let ms = EPOCH
+                .get()
+                .map(|e| e.elapsed().as_secs_f64() * 1e3)
+                .unwrap_or(0.0);
+            let rank = match thread_rank() {
+                Some(r) => format!("r{r}"),
+                None => "--".to_string(),
+            };
+            eprintln!(
+                "[{ms:>8.1}ms {rank} {:<5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
         }
     }
 
@@ -31,26 +84,63 @@ static INIT: Once = Once::new();
 /// Install the logger (idempotent). Call at the top of binaries.
 pub fn init() {
     INIT.call_once(|| {
-        let level = match std::env::var("DNTT_LOG").as_deref() {
-            Ok("error") => Level::Error,
-            Ok("warn") => Level::Warn,
-            Ok("debug") => Level::Debug,
-            Ok("trace") => Level::Trace,
-            _ => Level::Info,
+        let _ = EPOCH.set(Instant::now());
+        let var = std::env::var("DNTT_LOG");
+        let (filter, level, bad) = match var.as_deref() {
+            Ok("off") => (LevelFilter::Off, Level::Error, None),
+            Ok("error") => (LevelFilter::Error, Level::Error, None),
+            Ok("warn") => (LevelFilter::Warn, Level::Warn, None),
+            Ok("info") | Err(_) => (LevelFilter::Info, Level::Info, None),
+            Ok("debug") => (LevelFilter::Debug, Level::Debug, None),
+            Ok("trace") => (LevelFilter::Trace, Level::Trace, None),
+            Ok(other) => (LevelFilter::Info, Level::Info, Some(other.to_string())),
         };
         let logger = Box::leak(Box::new(StderrLogger { level }));
         if log::set_logger(logger).is_ok() {
-            log::set_max_level(LevelFilter::from(level.to_level_filter()));
+            log::set_max_level(filter);
+        }
+        if let Some(bad) = bad {
+            log::warn!(
+                "DNTT_LOG={bad:?} is not a level \
+                 (off|error|warn|info|debug|trace); using info"
+            );
         }
     });
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging works");
+    }
+
+    #[test]
+    fn thread_rank_slot_is_thread_local() {
+        assert_eq!(thread_rank(), None);
+        set_thread_rank(7);
+        assert_eq!(thread_rank(), Some(7));
+        let other = std::thread::spawn(thread_rank).join().unwrap();
+        assert_eq!(other, None, "rank attribution must not leak across threads");
+        clear_thread_rank();
+        assert_eq!(thread_rank(), None);
+    }
+
+    #[test]
+    fn rank_threads_are_attributed_inside_a_world() {
+        let ranks = crate::dist::Comm::run(3, |c| {
+            log::info!("hello from a rank");
+            thread_rank().map(|r| (r, c.rank()))
+        });
+        assert_eq!(
+            ranks,
+            vec![Some((0, 0)), Some((1, 1)), Some((2, 2))],
+            "each rank thread sees its own rank id"
+        );
+        assert_eq!(thread_rank(), None, "coordinator thread stays unattributed");
     }
 }

@@ -1,0 +1,179 @@
+//! Integration: the observability layer (`dntt::obs`) is *bitwise
+//! neutral* — arming the per-rank event rings and counters must not
+//! perturb a single bit of the factors — and its outputs are themselves
+//! deterministic and well-formed: deterministic counters replay exactly
+//! across reruns, ring overflow degrades to counted drops (never a wrong
+//! answer), and the exported Chrome trace parses with balanced spans and
+//! one timeline per rank.
+
+mod common;
+
+use common::{ht_cfg, tt_cfg};
+use dntt::coordinator::{run_job, Decomposition, InputSpec, JobConfig, JobReport};
+use dntt::dist::ProcGrid;
+use dntt::obs::{Ctr, TraceConfig, ALL_CTRS, TRACE_ENABLED};
+use dntt::ttrain::SyntheticTt;
+use dntt::util::json::Json;
+
+/// The p = 4 TT job every test here runs, with tracing on or off.
+fn tt_job(trace: Option<TraceConfig>) -> JobConfig {
+    JobConfig {
+        tt: tt_cfg(60),
+        trace,
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(vec![6, 6, 6], vec![2, 2], 3)),
+            ProcGrid::new(vec![2, 1, 2]).unwrap(),
+        )
+    }
+}
+
+/// The matching p = 4 HT job.
+fn ht_job(trace: Option<TraceConfig>) -> JobConfig {
+    JobConfig {
+        decomp: Decomposition::Ht,
+        ht: ht_cfg(80),
+        trace,
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(vec![6, 6, 6], vec![2, 2], 3)),
+            ProcGrid::new(vec![2, 1, 2]).unwrap(),
+        )
+    }
+}
+
+/// Every factor entry of `a` and `b`, bit for bit.
+fn assert_bitwise_equal(a: &JobReport, b: &JobReport) {
+    assert_eq!(a.ranks, b.ranks, "selected ranks diverged");
+    match (a.output.tt(), b.output.tt()) {
+        (Some(x), Some(y)) => {
+            for (ca, cb) in x.tt.cores().iter().zip(y.tt.cores()) {
+                for (u, v) in ca.as_slice().iter().zip(cb.as_slice()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "TT core entry diverged: {u} vs {v}");
+                }
+            }
+        }
+        _ => {
+            let x = a.output.ht().expect("both reports are HT");
+            let y = b.output.ht().expect("both reports are HT");
+            for (na, nb) in x.ht.nodes().iter().zip(y.ht.nodes()) {
+                for (u, v) in na.mat().as_slice().iter().zip(nb.mat().as_slice()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "HT node entry diverged: {u} vs {v}");
+                }
+            }
+        }
+    }
+}
+
+/// (a) TT: a traced run and an untraced run of the same job produce
+/// bitwise-identical cores — instrumentation never touches factor data.
+#[test]
+fn tt_traced_run_is_bitwise_identical_to_untraced() {
+    let plain = run_job(&tt_job(None)).unwrap();
+    let traced = run_job(&tt_job(Some(TraceConfig::default()))).unwrap();
+    assert!(plain.obs.is_none());
+    assert!(traced.obs.is_some());
+    assert_bitwise_equal(&plain, &traced);
+}
+
+/// (b) Same guarantee down the HT driver's per-node path.
+#[test]
+fn ht_traced_run_is_bitwise_identical_to_untraced() {
+    let plain = run_job(&ht_job(None)).unwrap();
+    let traced = run_job(&ht_job(Some(TraceConfig::default()))).unwrap();
+    assert_bitwise_equal(&plain, &traced);
+}
+
+/// (c) Deterministic counters (everything except the wall-clock `*Ns`
+/// tallies) replay exactly across independent reruns, per rank.
+#[test]
+fn deterministic_counters_replay_across_reruns() {
+    if !TRACE_ENABLED {
+        return; // --no-default-features build: nothing is recorded.
+    }
+    let a = run_job(&tt_job(Some(TraceConfig::default()))).unwrap();
+    let b = run_job(&tt_job(Some(TraceConfig::default()))).unwrap();
+    let (oa, ob) = (a.obs.unwrap(), b.obs.unwrap());
+    assert_eq!(oa.rank_ids(), vec![0, 1, 2, 3]);
+    assert_eq!(oa.rank_ids(), ob.rank_ids());
+    let (pa, pb) = (oa.per_rank_counters(), ob.per_rank_counters());
+    assert_eq!(pa.len(), pb.len());
+    for ((ra, ca), (rb, cb)) in pa.iter().zip(&pb) {
+        assert_eq!(ra, rb);
+        for c in ALL_CTRS {
+            if c.is_deterministic() {
+                assert_eq!(
+                    ca[c as usize], cb[c as usize],
+                    "counter {c:?} diverged on rank {ra}"
+                );
+            }
+        }
+    }
+    // The job actually exercised the layer: collectives, NMF iterations
+    // and flops all registered.
+    assert!(oa.total(Ctr::ArCalls) > 0);
+    assert!(oa.total(Ctr::AgCalls) > 0);
+    assert!(oa.total(Ctr::NmfIters) > 0);
+    assert!(oa.total(Ctr::GemmFlops) > 0);
+    assert!(oa.events_total() > 0);
+}
+
+/// (d) A deliberately tiny ring overflows by *counting* drops — the run
+/// still completes, factors are still bitwise right, no span leaks.
+#[test]
+fn ring_overflow_counts_drops_and_stays_correct() {
+    if !TRACE_ENABLED {
+        return;
+    }
+    let plain = run_job(&tt_job(None)).unwrap();
+    let tiny = run_job(&tt_job(Some(TraceConfig { ring_capacity: 8 }))).unwrap();
+    assert_bitwise_equal(&plain, &tiny);
+    let obs = tiny.obs.unwrap();
+    assert!(obs.dropped_total() > 0, "an 8-slot ring must overflow on this job");
+    assert!(obs.events_total() <= 8 * obs.ranks.len() as u64);
+    assert_eq!(obs.open_spans_total(), 0);
+    // Counters are ring-independent: drops lose events, never tallies.
+    let full = run_job(&tt_job(Some(TraceConfig::default()))).unwrap().obs.unwrap();
+    for c in ALL_CTRS {
+        if c.is_deterministic() {
+            assert_eq!(obs.total(c), full.total(c), "counter {c:?} depends on ring size");
+        }
+    }
+}
+
+/// (e) The exported Chrome trace round-trips through the JSON parser and
+/// is structurally sound: one metadata lane per rank, only "M"/"X"
+/// phases, X events with nonnegative durations, balanced spans.
+#[test]
+fn chrome_trace_export_is_well_formed() {
+    if !TRACE_ENABLED {
+        return;
+    }
+    let rep = run_job(&tt_job(Some(TraceConfig::default()))).unwrap();
+    let obs = rep.obs.as_ref().unwrap();
+    assert_eq!(obs.open_spans_total(), 0, "clean run must close every span");
+    let text = obs.chrome_trace_json().to_pretty();
+    let parsed = Json::parse(&text).expect("exported trace must parse");
+    assert_eq!(parsed.get("otherData").get("format").as_str(), Some("dntt-trace-v1"));
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    let mut lanes = std::collections::BTreeSet::new();
+    let mut x_events = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").as_str().expect("every event has a phase");
+        assert!(ph == "M" || ph == "X", "unexpected phase {ph}");
+        let tid = ev.get("tid").as_usize().expect("every event has a tid");
+        if ph == "M" {
+            lanes.insert(tid);
+        } else {
+            x_events += 1;
+            assert!(ev.get("ts").as_f64().expect("ts") >= 0.0);
+            assert!(ev.get("dur").as_f64().expect("dur") >= 0.0);
+            assert!(lanes.contains(&tid), "X event on rank {tid} without a timeline lane");
+        }
+    }
+    // One timeline per rank of the 2x1x2 grid, all of them populated.
+    assert_eq!(lanes.len(), 4);
+    assert_eq!(x_events as u64, obs.events_total());
+    // The metrics envelope rides the same report and stays versioned.
+    let env = Json::parse(&rep.metrics_json().to_string()).unwrap();
+    assert_eq!(env.get("format").as_str(), Some("dntt-metrics-v1"));
+    assert!(env.get("counters").get("totals").as_obj().is_some());
+}
