@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""CLI-reference coverage gate for the CI docs job.
+
+Runs `dntt help`, parses the COMMANDS block, and **hard-fails** (exit 1)
+if any subcommand has no section in `rust/docs/CLI.md` — a new
+subcommand cannot land undocumented. Then runs `dntt <sub> --help` for
+every subcommand (ArgSpec prints the usage to stderr and exits
+nonzero — that is its help path, not an error here), extracts each
+`--flag`, and surfaces flags missing from that subcommand's CLI.md
+section as **warn-only** GitHub `::warning::` annotations.
+
+Usage: check_cli_docs.py DNTT_BINARY CLI_MD
+
+Stdlib only.
+"""
+
+import re
+import subprocess
+import sys
+
+
+def subcommands(binary: str) -> list[str]:
+    """Parse the COMMANDS block of `dntt help` (stdout, exit 0)."""
+    out = subprocess.run(
+        [binary, "help"], capture_output=True, text=True, check=True
+    ).stdout
+    names = []
+    in_block = False
+    for line in out.splitlines():
+        if line.strip() == "COMMANDS:":
+            in_block = True
+            continue
+        if in_block:
+            if not line.strip():
+                break
+            names.append(line.split()[0])
+    if not names:
+        sys.exit(f"could not parse a COMMANDS block out of `{binary} help`")
+    return names
+
+
+def flags_of(binary: str, sub: str) -> list[str]:
+    """Flags advertised by `dntt <sub> --help` (stderr, nonzero exit)."""
+    r = subprocess.run([binary, sub, "--help"], capture_output=True, text=True)
+    text = r.stderr + r.stdout
+    flags = re.findall(r"^\s+--([a-z][a-z0-9-]*)", text, flags=re.MULTILINE)
+    return [f for f in dict.fromkeys(flags) if f != "help"]
+
+
+def section_of(doc: str, sub: str) -> str | None:
+    """The CLI.md slice for one subcommand: from its `dntt <sub>` heading
+    to the next subcommand heading (or EOF)."""
+    heads = [
+        (m.start(), m.group(1))
+        for m in re.finditer(r"^#+ .*`?dntt ([a-z-]+)`?", doc, flags=re.MULTILINE)
+    ]
+    for i, (start, name) in enumerate(heads):
+        if name == sub:
+            end = heads[i + 1][0] if i + 1 < len(heads) else len(doc)
+            return doc[start:end]
+    return None
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    binary, doc_path = sys.argv[1], sys.argv[2]
+    with open(doc_path) as f:
+        doc = f.read()
+
+    missing_cmds = []
+    missing_flags = 0
+    for sub in subcommands(binary):
+        section = section_of(doc, sub)
+        if section is None:
+            missing_cmds.append(sub)
+            continue
+        for flag in flags_of(binary, sub):
+            if f"--{flag}" not in section:
+                print(
+                    f"::warning::{doc_path}: `dntt {sub}` flag --{flag} "
+                    "is not documented in its section"
+                )
+                missing_flags += 1
+
+    if missing_cmds:
+        for sub in missing_cmds:
+            print(f"::error::{doc_path}: no section documents `dntt {sub}`")
+        return 1
+    print(
+        f"cli docs gate: all subcommands documented, "
+        f"{missing_flags} undocumented flag(s) (warn-only)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

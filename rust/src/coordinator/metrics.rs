@@ -145,6 +145,11 @@ pub struct JobReport {
     /// Merged per-rank traces and counters ([`crate::obs`]), when the
     /// job was configured with [`JobConfig::trace`].
     pub obs: Option<ObsReport>,
+    /// The job's [`JobConfig::fingerprint`], when the coordinator
+    /// computed it (checkpointed or server-submitted jobs) — the result
+    /// cache key, surfaced so operators can correlate reports, cache
+    /// entries, and metrics envelopes.
+    pub fingerprint: Option<u64>,
     pub output: DecompOutput,
 }
 
@@ -174,6 +179,7 @@ impl JobReport {
             modeled,
             pjrt_hits,
             obs,
+            fingerprint: None,
             output,
         }
     }
@@ -366,6 +372,9 @@ impl JobReport {
             ("stages", stages),
             ("pjrt_hits", Json::Num(self.pjrt_hits as f64)),
         ];
+        if let Some(fp) = self.fingerprint {
+            fields.push(("fingerprint", Json::Str(format!("{fp:016x}"))));
+        }
         if let Some(e) = self.rel_error {
             fields.push(("rel_error", Json::Num(e)));
         }
@@ -393,6 +402,9 @@ impl JobReport {
             ("compression", Json::Num(self.compression)),
             ("wall_secs", Json::Num(self.wall_secs)),
         ];
+        if let Some(fp) = self.fingerprint {
+            fields.push(("fingerprint", Json::Str(format!("{fp:016x}"))));
+        }
         if let Some(e) = self.rel_error {
             fields.push(("rel_error", Json::Num(e)));
         }

@@ -2,15 +2,29 @@
 //! their tensor blocks, runs the distributed nTT or nHT (per
 //! [`Decomposition`]), and aggregates results, timings and cluster-model
 //! estimates into a [`JobReport`].
+//!
+//! Above the single-job entry points sits the service layer:
+//!
+//! * [`server`] — the [`JobServer`]: many queued jobs scheduled onto one
+//!   shared rank pool with priority/fair-share admission, per-job
+//!   isolation, and a fingerprint result cache (DESIGN.md §2.11);
+//! * [`spool`] — the on-disk `dntt-job-v1` queue connecting
+//!   `dntt submit` to `dntt serve`.
 
 pub mod job;
 pub mod metrics;
+pub mod server;
+pub mod spool;
 
 pub use job::{BackendChoice, Decomposition, InputSpec, JobConfig, ResumeMode};
 pub use metrics::{DecompOutput, JobReport, ModelResidual};
+pub use server::{
+    JobId, JobOutcome, JobRequest, JobServer, Priority, ServerConfig, ServerStats,
+};
+pub use spool::{JobSpec, PendingJob, Spool};
 
 use crate::dist::checkpoint::{self, CkptCtx};
-use crate::dist::{faults, Comm, SharedStore, TensorBlock};
+use crate::dist::{faults, Comm, Lease, SharedStore, TensorBlock};
 use crate::error::{DnttError, Result};
 use crate::runtime::{NativeBackend, PjrtBackend, PjrtEngine};
 use crate::ttrain::driver::{dist_ntt, extract_block};
@@ -41,6 +55,38 @@ const MAX_RESTARTS: usize = 32;
 /// assert!(report.rel_error.unwrap() < 1.0);
 /// ```
 pub fn run_job(job: &JobConfig) -> Result<JobReport> {
+    run_job_impl(job, Exec::Spawn)
+}
+
+/// Run a decomposition job on ranks leased from a
+/// [`RankPool`](crate::dist::RankPool) instead of freshly spawned
+/// threads — the [`JobServer`] execution path. The lease must hold
+/// exactly the job's grid size. The output is bitwise-identical to
+/// [`run_job`] on the same config: both paths launch the same rank body,
+/// and world ranks are lease positions, independent of which pool
+/// workers host them.
+pub fn run_job_leased(lease: &Lease, job: &JobConfig) -> Result<JobReport> {
+    if lease.size() != job.grid.size() {
+        return Err(DnttError::config(format!(
+            "lease holds {} ranks, job grid needs {}",
+            lease.size(),
+            job.grid.size()
+        )));
+    }
+    run_job_impl(job, Exec::Lease(lease))
+}
+
+/// How [`run_job_impl`] launches the SPMD world for each attempt.
+#[derive(Clone, Copy)]
+enum Exec<'a> {
+    /// `p` fresh scoped threads per attempt ([`Comm::run`]).
+    Spawn,
+    /// Ranks leased from a shared pool ([`Lease::run_world`]); relaunch
+    /// attempts after a lost rank reuse the same lease.
+    Lease(&'a Lease),
+}
+
+fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
     let dims = job.input.dims();
     if dims.len() != job.grid.dims().len() {
         return Err(DnttError::config(format!(
@@ -96,44 +142,48 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
         if let Some(c) = &collector {
             crate::obs::arm(c);
         }
-        let world_run = catch_unwind(AssertUnwindSafe(|| {
-            Comm::run(p, move |mut world| {
-                let rank = world.rank();
-                // Build this rank's block (sparse inputs stay sparse end to end).
-                let block = match (&input, &dense2) {
-                    (InputSpec::Synthetic(s), _) => TensorBlock::Dense(s.block(&grid, rank)?),
-                    (InputSpec::SyntheticSparse(s), _) => TensorBlock::Sparse(s.block(&grid, rank)),
-                    (_, Some(t)) => TensorBlock::Dense(extract_block(t, &grid, rank)),
-                    _ => unreachable!("non-synthetic inputs materialize"),
-                };
-                let (mut row, mut col) = grid2.make_subcomms(&mut world);
-                // One driver call per (decomposition, backend) choice.
-                let run = |world: &mut Comm,
-                           row: &mut Comm,
-                           col: &mut Comm,
-                           backend: &dyn crate::runtime::ComputeBackend|
-                 -> Result<DecompOutput> {
-                    match decomp {
-                        Decomposition::Tt => dist_ntt(
-                            world, row, col, &store, &grid, grid2, &dims2, block, backend,
-                            &tt_cfg, ckpt_ctx.as_ref(),
-                        )
-                        .map(DecompOutput::Tt),
-                        Decomposition::Ht => crate::ht::dist_nht(
-                            world, row, col, &store, &grid, grid2, &dims2, block, backend,
-                            &ht_cfg, ckpt_ctx.as_ref(),
-                        )
-                        .map(DecompOutput::Ht),
-                    }
-                };
-                match &eng2 {
-                    Some(e) => {
-                        let backend = PjrtBackend::new(Arc::clone(e));
-                        run(&mut world, &mut row, &mut col, &backend)
-                    }
-                    None => run(&mut world, &mut row, &mut col, &NativeBackend),
+        // The rank body: all captures are owned (`'static`) and `Clone`,
+        // so the same closure serves both launchers.
+        let body = move |mut world: Comm| {
+            let rank = world.rank();
+            // Build this rank's block (sparse inputs stay sparse end to end).
+            let block = match (&input, &dense2) {
+                (InputSpec::Synthetic(s), _) => TensorBlock::Dense(s.block(&grid, rank)?),
+                (InputSpec::SyntheticSparse(s), _) => TensorBlock::Sparse(s.block(&grid, rank)),
+                (_, Some(t)) => TensorBlock::Dense(extract_block(t, &grid, rank)),
+                _ => unreachable!("non-synthetic inputs materialize"),
+            };
+            let (mut row, mut col) = grid2.make_subcomms(&mut world);
+            // One driver call per (decomposition, backend) choice.
+            let run = |world: &mut Comm,
+                       row: &mut Comm,
+                       col: &mut Comm,
+                       backend: &dyn crate::runtime::ComputeBackend|
+             -> Result<DecompOutput> {
+                match decomp {
+                    Decomposition::Tt => dist_ntt(
+                        world, row, col, &store, &grid, grid2, &dims2, block, backend, &tt_cfg,
+                        ckpt_ctx.as_ref(),
+                    )
+                    .map(DecompOutput::Tt),
+                    Decomposition::Ht => crate::ht::dist_nht(
+                        world, row, col, &store, &grid, grid2, &dims2, block, backend, &ht_cfg,
+                        ckpt_ctx.as_ref(),
+                    )
+                    .map(DecompOutput::Ht),
                 }
-            })
+            };
+            match &eng2 {
+                Some(e) => {
+                    let backend = PjrtBackend::new(Arc::clone(e));
+                    run(&mut world, &mut row, &mut col, &backend)
+                }
+                None => run(&mut world, &mut row, &mut col, &NativeBackend),
+            }
+        };
+        let world_run = catch_unwind(AssertUnwindSafe(|| match exec {
+            Exec::Spawn => Comm::run(p, body),
+            Exec::Lease(lease) => lease.run_world(body),
         }));
         crate::obs::disarm();
         match world_run {
@@ -201,7 +251,13 @@ pub fn run_job(job: &JobConfig) -> Result<JobReport> {
         .map(|e| e.stats.hits.load(std::sync::atomic::Ordering::Relaxed))
         .unwrap_or(0);
     let obs = collector.map(|c| c.take_report());
-    Ok(JobReport::new(job, output, wall_secs, rel_error, modeled, pjrt_hits, obs))
+    let mut report = JobReport::new(job, output, wall_secs, rel_error, modeled, pjrt_hits, obs);
+    if job.checkpoint.is_some() {
+        // Already computed above for the checkpoint manifests; surface it
+        // so server-run reports carry their cache key.
+        report.fingerprint = Some(config_hash);
+    }
+    Ok(report)
 }
 
 #[cfg(test)]

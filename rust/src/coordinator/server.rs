@@ -1,0 +1,663 @@
+//! Decomposition-as-a-service: the [`JobServer`].
+//!
+//! A queue of [`JobConfig`]s scheduled onto one shared
+//! [`RankPool`](crate::dist::RankPool), with
+//!
+//! * **priority / fair-share admission** — strict head-of-line: the next
+//!   job admitted is always the best pending entry by (priority desc,
+//!   tenant fair-share deficit asc, submission order asc), where a
+//!   tenant's deficit is the α-β-modeled cost ([`CostModel`]) of work
+//!   already admitted on its behalf. The head is never overtaken: if it
+//!   needs more ranks than are free, the server waits rather than
+//!   backfilling a smaller job, which makes the admission *order* a pure
+//!   function of the submitted set — independent of job durations and
+//!   pool capacity (the determinism the `admission_log` tests pin down);
+//! * **a fingerprint result cache** — finished jobs commit their `.dntt`
+//!   artifact to a [`ResultCache`] keyed by [`JobConfig::fingerprint`].
+//!   Resubmitting an identical config is a *cache hit*: the persisted
+//!   artifact is returned and **no ranks are launched**. A fingerprint
+//!   currently in flight is *coalesced*: the duplicate waits for the
+//!   running job and shares its result. An *interrupted* job (crashed
+//!   server, evicted artifact) left its `dntt-ckpt-v1` state in the
+//!   entry's `ckpt/` directory, so the resubmitted config resumes from
+//!   the last durable stage instead of starting over;
+//! * **per-job isolation** — each admitted job runs on its own runner
+//!   thread with its own [`SharedStore`](crate::dist::SharedStore),
+//!   its own trace collector, and (optionally) its own fault plan, all
+//!   armed thread-locally on the runner, so concurrent jobs cannot
+//!   observe each other. Each job's output is **bitwise-identical** to
+//!   running it alone through [`run_job`](crate::coordinator::run_job)
+//!   (`tests/job_server.rs` proves this end to end).
+//!
+//! The full contract lives in `DESIGN.md` §2.11; operator workflows (the
+//! `submit`/`serve`/`jobs` CLI, the spool, runbooks) in `OPERATIONS.md`.
+
+use super::job::{JobConfig, ResumeMode};
+use super::metrics::JobReport;
+use super::run_job_leased;
+use crate::dist::checkpoint::CheckpointPolicy;
+use crate::dist::{faults, CostModel, FaultPlan, RankPool};
+use crate::error::{DnttError, Result};
+use crate::serve::ResultCache;
+use crate::util::json::Json;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Job priority classes, highest admitted first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            _ => Err(format!("unknown priority '{s}' (low|normal|high)")),
+        }
+    }
+}
+
+/// One submission: the job plus its scheduling envelope.
+pub struct JobRequest {
+    pub job: JobConfig,
+    pub priority: Priority,
+    /// Fair-share accounting bucket (e.g. a user or team name).
+    pub tenant: String,
+    /// Display label for listings and the admission log (defaults to the
+    /// input's label).
+    pub label: String,
+    /// Deterministic fault plan armed on this job's runner thread only
+    /// (testing/chaos drills; a no-op without the `fault-inject`
+    /// feature).
+    pub fault_plan: Option<Arc<FaultPlan>>,
+}
+
+impl JobRequest {
+    pub fn new(job: JobConfig) -> Self {
+        let label = job.input.label();
+        JobRequest { job, priority: Priority::default(), tenant: "default".into(), label, fault_plan: None }
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn tenant(mut self, t: impl Into<String>) -> Self {
+        self.tenant = t.into();
+        self
+    }
+
+    pub fn label(mut self, l: impl Into<String>) -> Self {
+        self.label = l.into();
+        self
+    }
+
+    pub fn fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+}
+
+/// Server-assigned handle for one submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+/// How a submission finished.
+pub struct JobOutcome {
+    pub id: JobId,
+    pub label: String,
+    pub fingerprint: u64,
+    /// Served from the committed cache without launching ranks.
+    pub cache_hit: bool,
+    /// Shared the result of an identical in-flight job (no ranks
+    /// launched for *this* submission either).
+    pub coalesced: bool,
+    /// The committed `.dntt` artifact (None when the job errored).
+    pub artifact: Option<PathBuf>,
+    pub error: Option<String>,
+    /// The full report, for submissions that actually executed.
+    pub report: Option<Arc<JobReport>>,
+}
+
+impl JobOutcome {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// One row of `dntt jobs` / the server's `--json` output.
+    pub fn to_json(&self) -> Json {
+        let mut f = vec![
+            ("id", Json::Num(self.id.0 as f64)),
+            ("label", Json::Str(self.label.clone())),
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint))),
+            ("cache_hit", Json::Bool(self.cache_hit)),
+            ("coalesced", Json::Bool(self.coalesced)),
+        ];
+        if let Some(a) = &self.artifact {
+            f.push(("artifact", Json::Str(a.display().to_string())));
+        }
+        if let Some(e) = &self.error {
+            f.push(("error", Json::Str(e.clone())));
+        }
+        if let Some(r) = &self.report {
+            f.push(("wall_secs", Json::Num(r.wall_secs)));
+            if let Some(e) = r.rel_error {
+                f.push(("rel_error", Json::Num(e)));
+            }
+        }
+        Json::obj(f)
+    }
+}
+
+/// Counter snapshot ([`JobServer::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    pub submitted: u64,
+    /// Jobs that actually ran on leased ranks.
+    pub executed: u64,
+    pub cache_hits: u64,
+    pub coalesced: u64,
+    /// Leases granted == worlds admitted onto the pool (a cache hit or
+    /// coalesced duplicate grants none — the "no ranks launched" proof
+    /// hook used by `tests/job_server.rs`).
+    pub leases_granted: u64,
+}
+
+/// Server construction parameters.
+pub struct ServerConfig {
+    /// Worker ranks in the shared pool (an upper bound on any single
+    /// job's grid size).
+    pub pool_ranks: usize,
+    /// Result-cache root ([`ResultCache`] layout).
+    pub cache_dir: PathBuf,
+    /// Force checkpointing into the cache's `ckpt/` directory for jobs
+    /// that don't configure their own (default true). This is what makes
+    /// interrupted jobs resumable on resubmit; it is fingerprint-neutral
+    /// and bitwise-neutral by the `dntt-ckpt-v1` contract (DESIGN.md
+    /// §2.7), so it cannot perturb results.
+    pub checkpoint: bool,
+    /// α-β model used to estimate job cost for fair-share accounting.
+    pub cost_model: CostModel,
+}
+
+impl ServerConfig {
+    pub fn new(pool_ranks: usize, cache_dir: impl Into<PathBuf>) -> Self {
+        ServerConfig {
+            pool_ranks,
+            cache_dir: cache_dir.into(),
+            checkpoint: true,
+            cost_model: CostModel::default(),
+        }
+    }
+}
+
+/// Coarse a-priori cost of a job under the α-β model, in modeled seconds:
+/// `d` global-reshape passes over the input plus a linear compute term.
+/// Only *relative* magnitudes matter (fair-share deficits), so this
+/// deliberately stays simple and deterministic.
+pub fn estimate_cost(job: &JobConfig, m: &CostModel) -> f64 {
+    let elems = job.input.storage_elems();
+    let bytes = elems * 8.0;
+    let d = job.input.dims().len() as f64;
+    let p = job.grid.size().max(1) as f64;
+    let hops = (p.max(2.0)).log2().ceil();
+    let comm = d * (m.alpha * hops + bytes / (m.bandwidth * p));
+    let compute = d * elems * 1e-9 * m.compute_scale / p;
+    comm + compute
+}
+
+struct QueueEntry {
+    id: JobId,
+    seq: u64,
+    fp: u64,
+    est_cost: f64,
+    req: JobRequest,
+}
+
+#[derive(Default)]
+struct SrvState {
+    queue: Vec<QueueEntry>,
+    /// Fingerprints currently executing on leased ranks.
+    running: HashSet<u64>,
+    /// Duplicates parked on an in-flight fingerprint.
+    waiters: HashMap<u64, Vec<QueueEntry>>,
+    done: HashMap<JobId, Arc<JobOutcome>>,
+    /// Admitted α-β cost per tenant (the fair-share deficit counter).
+    tenant_cost: HashMap<String, f64>,
+    log: Vec<String>,
+    stats: ServerStats,
+    next_seq: u64,
+}
+
+struct Inner {
+    pool: RankPool,
+    cache: ResultCache,
+    checkpoint: bool,
+    cost_model: CostModel,
+    state: Mutex<SrvState>,
+    cv: Condvar,
+}
+
+/// The multi-job coordinator. See the module docs for semantics.
+///
+/// Lifecycle: [`submit`](JobServer::submit) any number of jobs, then
+/// [`drain`](JobServer::drain) to run them all to completion; outcomes
+/// are then available via [`outcome`](JobServer::outcome). `submit` may
+/// also be called from other threads while a `drain` is in progress.
+pub struct JobServer {
+    inner: Arc<Inner>,
+}
+
+impl JobServer {
+    pub fn new(cfg: ServerConfig) -> Result<JobServer> {
+        if cfg.pool_ranks == 0 {
+            return Err(DnttError::config("job server needs at least one pool rank"));
+        }
+        let cache = ResultCache::open(&cfg.cache_dir)?;
+        Ok(JobServer {
+            inner: Arc::new(Inner {
+                pool: RankPool::new(cfg.pool_ranks),
+                cache,
+                checkpoint: cfg.checkpoint,
+                cost_model: cfg.cost_model,
+                state: Mutex::new(SrvState::default()),
+                cv: Condvar::new(),
+            }),
+        })
+    }
+
+    /// Ranks in the shared pool.
+    pub fn pool_ranks(&self) -> usize {
+        self.inner.pool.size()
+    }
+
+    /// The server's result cache (read access for serving/listing).
+    pub fn cache(&self) -> &ResultCache {
+        &self.inner.cache
+    }
+
+    /// Enqueue a job. Fails fast if the job's grid needs more ranks than
+    /// the pool holds (it could never be admitted). The fingerprint is
+    /// computed here, once, and reused for every cache decision.
+    pub fn submit(&self, req: JobRequest) -> Result<JobId> {
+        let p = req.job.grid.size();
+        if p > self.inner.pool.size() {
+            return Err(DnttError::config(format!(
+                "job '{}' needs {p} ranks but the pool has {}",
+                req.label,
+                self.inner.pool.size()
+            )));
+        }
+        if req.job.input.dims().len() != req.job.grid.dims().len() {
+            return Err(DnttError::config(format!(
+                "job '{}': grid has {} modes, tensor has {}",
+                req.label,
+                req.job.grid.dims().len(),
+                req.job.input.dims().len()
+            )));
+        }
+        let fp = req.job.fingerprint();
+        let est_cost = estimate_cost(&req.job, &self.inner.cost_model);
+        let mut st = self.inner.state.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        let id = JobId(seq);
+        st.stats.submitted += 1;
+        st.queue.push(QueueEntry { id, seq, fp, est_cost, req });
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Run every queued job to completion and return when the server is
+    /// idle (queue empty, no world in flight). Call from one thread; the
+    /// admitted jobs themselves run on per-job runner threads.
+    pub fn drain(&self) {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        loop {
+            // Admit from the head as long as the head can be resolved.
+            loop {
+                let Some(idx) = best_index(&st) else { break };
+                let fp = st.queue[idx].fp;
+                if st.running.contains(&fp) {
+                    // Identical config in flight: park this duplicate on it.
+                    let e = st.queue.remove(idx);
+                    st.log.push(format!("dedup {} fp={fp:016x}", e.id));
+                    st.stats.coalesced += 1;
+                    st.waiters.entry(fp).or_default().push(e);
+                    continue;
+                }
+                if let Some(hit) = inner.cache.lookup(fp) {
+                    // Committed result on disk: serve it, launch nothing.
+                    let e = st.queue.remove(idx);
+                    st.log.push(format!("dedup {} fp={fp:016x}", e.id));
+                    st.stats.cache_hits += 1;
+                    let outcome = Arc::new(JobOutcome {
+                        id: e.id,
+                        label: e.req.label,
+                        fingerprint: fp,
+                        cache_hit: true,
+                        coalesced: false,
+                        artifact: Some(hit.artifact),
+                        error: None,
+                        report: None,
+                    });
+                    st.done.insert(e.id, outcome);
+                    continue;
+                }
+                let p = st.queue[idx].req.job.grid.size();
+                let Some(lease) = inner.pool.try_lease(p) else {
+                    // Head-of-line blocking: wait for ranks to free up
+                    // rather than admitting a smaller job out of order.
+                    break;
+                };
+                let e = st.queue.remove(idx);
+                st.stats.leases_granted += 1;
+                *st.tenant_cost.entry(e.req.tenant.clone()).or_insert(0.0) += e.est_cost;
+                st.log.push(format!(
+                    "admit {} fp={fp:016x} tenant={} prio={} ranks={p} label={}",
+                    e.id,
+                    e.req.tenant,
+                    e.req.priority.name(),
+                    e.req.label
+                ));
+                st.running.insert(fp);
+                let inner2 = Arc::clone(inner);
+                std::thread::Builder::new()
+                    .name(format!("dntt-runner-{}", e.id))
+                    .spawn(move || run_one(inner2, e, lease))
+                    .expect("spawning job runner");
+            }
+            if st.queue.is_empty() && st.running.is_empty() {
+                break;
+            }
+            st = inner.cv.wait(st).unwrap();
+        }
+    }
+
+    /// The outcome of a submission, once [`drain`](JobServer::drain) has
+    /// processed it.
+    pub fn outcome(&self, id: JobId) -> Option<Arc<JobOutcome>> {
+        self.inner.state.lock().unwrap().done.get(&id).cloned()
+    }
+
+    /// All outcomes, sorted by job id.
+    pub fn outcomes(&self) -> Vec<Arc<JobOutcome>> {
+        let st = self.inner.state.lock().unwrap();
+        let mut v: Vec<_> = st.done.values().cloned().collect();
+        v.sort_by_key(|o| o.id);
+        v
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.inner.state.lock().unwrap().stats
+    }
+
+    /// The deterministic admission log: one `admit`/`dedup` line per
+    /// resolved submission, in resolution order. For a fixed submitted
+    /// set this sequence does not depend on pool capacity or job timing
+    /// (see the module docs); `dedup` covers both cache hits and
+    /// coalesced duplicates, whose distinction *is* timing-dependent.
+    pub fn admission_log(&self) -> Vec<String> {
+        self.inner.state.lock().unwrap().log.clone()
+    }
+}
+
+/// Index of the entry to resolve next: highest priority, then lowest
+/// accumulated tenant cost, then lowest submission seq.
+fn best_index(st: &SrvState) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, e) in st.queue.iter().enumerate() {
+        let Some(b) = best else {
+            best = Some(i);
+            continue;
+        };
+        if admits_before(e, &st.queue[b], &st.tenant_cost) {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+fn admits_before(a: &QueueEntry, b: &QueueEntry, tenant_cost: &HashMap<String, f64>) -> bool {
+    if a.req.priority != b.req.priority {
+        return a.req.priority > b.req.priority;
+    }
+    let ca = tenant_cost.get(&a.req.tenant).copied().unwrap_or(0.0);
+    let cb = tenant_cost.get(&b.req.tenant).copied().unwrap_or(0.0);
+    match ca.total_cmp(&cb) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.seq < b.seq,
+    }
+}
+
+/// Execute one admitted job on its runner thread: arm per-job state,
+/// run the world on the lease, commit the artifact, resolve waiters.
+fn run_one(inner: Arc<Inner>, e: QueueEntry, lease: crate::dist::Lease) {
+    let fp = e.fp;
+    // Server-managed checkpointing: point the job at the cache entry's
+    // ckpt/ directory so an interrupted run resumes on resubmit. The
+    // fingerprint ignores these knobs, and checkpointing is
+    // bitwise-neutral, so the effective job equals the submitted one.
+    let mut job = e.req.job;
+    if inner.checkpoint && job.checkpoint.is_none() {
+        job.checkpoint = Some(CheckpointPolicy::new(inner.cache.ckpt_dir(fp)));
+        job.resume = ResumeMode::Auto;
+    }
+    // Per-job fault plan, thread-local to this runner (the job's world
+    // snapshots it at launch; concurrent jobs are unaffected).
+    if let Some(plan) = &e.req.fault_plan {
+        faults::arm(plan);
+    }
+    let result = run_job_leased(&lease, &job);
+    faults::disarm();
+    // Return the ranks before taking the state lock: admission sees the
+    // freed capacity no later than the completion notification.
+    drop(lease);
+
+    let outcome = match result {
+        Ok(mut report) => {
+            report.fingerprint.get_or_insert(fp);
+            let artifact = report.output.artifact();
+            let meta = Json::obj(vec![
+                ("label", Json::Str(e.req.label.clone())),
+                ("tenant", Json::Str(e.req.tenant.clone())),
+                ("decomp", Json::Str(report.decomp.name().into())),
+                ("dims", Json::arr_usize(&report.dims)),
+                ("grid", Json::arr_usize(&report.grid)),
+                ("ranks", Json::arr_usize(&report.ranks)),
+                ("wall_secs", Json::Num(report.wall_secs)),
+            ]);
+            match inner.cache.put(fp, &artifact, meta) {
+                Ok(entry) => JobOutcome {
+                    id: e.id,
+                    label: e.req.label,
+                    fingerprint: fp,
+                    cache_hit: false,
+                    coalesced: false,
+                    artifact: Some(entry.artifact),
+                    error: None,
+                    report: Some(Arc::new(report)),
+                },
+                Err(err) => JobOutcome {
+                    id: e.id,
+                    label: e.req.label,
+                    fingerprint: fp,
+                    cache_hit: false,
+                    coalesced: false,
+                    artifact: None,
+                    error: Some(format!("cache commit failed: {err}")),
+                    report: Some(Arc::new(report)),
+                },
+            }
+        }
+        Err(err) => JobOutcome {
+            id: e.id,
+            label: e.req.label,
+            fingerprint: fp,
+            cache_hit: false,
+            coalesced: false,
+            artifact: None,
+            error: Some(err.to_string()),
+            report: None,
+        },
+    };
+
+    let mut st = inner.state.lock().unwrap();
+    st.running.remove(&fp);
+    st.stats.executed += 1;
+    // Coalesced duplicates share this job's result (including errors:
+    // an identical config would fail identically, so re-running it for
+    // the waiter would only repeat the failure).
+    for w in st.waiters.remove(&fp).unwrap_or_default() {
+        let shared = Arc::new(JobOutcome {
+            id: w.id,
+            label: w.req.label,
+            fingerprint: fp,
+            cache_hit: false,
+            coalesced: true,
+            artifact: outcome.artifact.clone(),
+            error: outcome.error.clone(),
+            report: None,
+        });
+        st.done.insert(w.id, shared);
+    }
+    st.done.insert(e.id, Arc::new(outcome));
+    drop(st);
+    inner.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InputSpec;
+    use crate::dist::ProcGrid;
+    use crate::nmf::NmfConfig;
+    use crate::ttrain::{SyntheticTt, TtConfig};
+
+    fn quick_job(seed: u64, grid: Vec<usize>) -> JobConfig {
+        JobConfig {
+            tt: TtConfig {
+                eps: 1e-6,
+                nmf: NmfConfig { max_iters: 40, ..Default::default() },
+                ..Default::default()
+            },
+            check_error: false,
+            ..JobConfig::new(
+                InputSpec::Synthetic(SyntheticTt::new(vec![6, 6, 6], vec![2, 2], seed)),
+                ProcGrid::new(grid).unwrap(),
+            )
+        }
+    }
+
+    fn temp_server(tag: &str, pool: usize) -> JobServer {
+        let dir = std::env::temp_dir()
+            .join(format!("dntt-srv-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        JobServer::new(ServerConfig::new(pool, dir)).unwrap()
+    }
+
+    #[test]
+    fn submit_drain_outcome_and_cache_hit() {
+        let srv = temp_server("basic", 4);
+        let id1 = srv.submit(JobRequest::new(quick_job(3, vec![2, 1, 2]))).unwrap();
+        srv.drain();
+        let o1 = srv.outcome(id1).expect("resolved");
+        assert!(o1.is_ok(), "job failed: {:?}", o1.error);
+        assert!(!o1.cache_hit);
+        assert!(o1.artifact.as_ref().unwrap().is_file());
+        let leases_before = srv.stats().leases_granted;
+        // Identical config again: a hit, no new lease.
+        let id2 = srv.submit(JobRequest::new(quick_job(3, vec![2, 1, 2]))).unwrap();
+        srv.drain();
+        let o2 = srv.outcome(id2).unwrap();
+        assert!(o2.cache_hit);
+        assert_eq!(o2.artifact, o1.artifact);
+        assert_eq!(srv.stats().leases_granted, leases_before);
+        let _ = std::fs::remove_dir_all(srv.cache().dir());
+    }
+
+    #[test]
+    fn oversized_job_rejected_at_submit() {
+        let srv = temp_server("oversize", 2);
+        let err = srv.submit(JobRequest::new(quick_job(1, vec![2, 1, 2]))).unwrap_err();
+        assert!(err.to_string().contains("pool"), "{err}");
+        let _ = std::fs::remove_dir_all(srv.cache().dir());
+    }
+
+    #[test]
+    fn admission_order_is_priority_then_fair_share_then_seq() {
+        // Pool sized so jobs serialize; order still must come purely from
+        // the scheduling key.
+        let srv = temp_server("order", 4);
+        let mk = |seed: u64| quick_job(seed, vec![2, 1, 2]);
+        let a0 = srv
+            .submit(JobRequest::new(mk(10)).tenant("a").priority(Priority::Normal))
+            .unwrap();
+        let a1 = srv
+            .submit(JobRequest::new(mk(11)).tenant("a").priority(Priority::Normal))
+            .unwrap();
+        let b0 = srv
+            .submit(JobRequest::new(mk(12)).tenant("b").priority(Priority::Normal))
+            .unwrap();
+        let hi = srv
+            .submit(JobRequest::new(mk(13)).tenant("c").priority(Priority::High))
+            .unwrap();
+        srv.drain();
+        let log = srv.admission_log();
+        let order: Vec<String> =
+            log.iter().map(|l| l.split_whitespace().nth(1).unwrap().to_string()).collect();
+        // High first (despite last submission); then within Normal the
+        // tenants alternate — after a0, tenant a has accumulated cost,
+        // so b0 overtakes the earlier-submitted a1 (fair share).
+        assert_eq!(
+            order,
+            vec![hi.to_string(), a0.to_string(), b0.to_string(), a1.to_string()],
+            "log: {log:?}"
+        );
+        let _ = std::fs::remove_dir_all(srv.cache().dir());
+    }
+
+    #[test]
+    fn duplicate_in_one_batch_executes_once() {
+        let srv = temp_server("dedup", 4);
+        let id1 = srv.submit(JobRequest::new(quick_job(7, vec![2, 1, 2]))).unwrap();
+        let id2 = srv.submit(JobRequest::new(quick_job(7, vec![2, 1, 2]))).unwrap();
+        srv.drain();
+        let s = srv.stats();
+        assert_eq!(s.executed, 1, "identical configs must not both run");
+        assert_eq!(s.cache_hits + s.coalesced, 1);
+        let o1 = srv.outcome(id1).unwrap();
+        let o2 = srv.outcome(id2).unwrap();
+        assert!(o1.is_ok() && o2.is_ok());
+        assert_eq!(o1.artifact, o2.artifact);
+        let _ = std::fs::remove_dir_all(srv.cache().dir());
+    }
+}

@@ -1,0 +1,487 @@
+//! The on-disk job spool: how `dntt submit` hands work to `dntt serve`.
+//!
+//! A spool is a directory of `dntt-job-v1` JSON job specs:
+//!
+//! ```text
+//! <spool>/
+//!   pending/job000000.json     # submitted, not yet processed
+//!   done/job000000.json        # the spec, moved here once resolved
+//!   done/job000000.outcome.json# the server's JobOutcome row
+//! ```
+//!
+//! [`JobSpec`] is the serializable subset of [`JobConfig`] the CLI can
+//! express (the `decompose` flags plus the scheduling envelope:
+//! priority, tenant, label, trace). `dntt submit` appends a spec to
+//! `pending/`; `dntt serve` turns each into a
+//! [`JobRequest`](super::server::JobRequest), drains the
+//! [`JobServer`](super::server::JobServer), and moves specs to `done/`
+//! with their outcome rows. Files are claimed with `create_new`, so
+//! concurrent submitters never collide; specs sort and execute by their
+//! sequence number (submission order).
+
+use super::job::{Decomposition, InputSpec, JobConfig};
+use super::server::{JobRequest, Priority};
+use crate::data::{FaceConfig, VideoConfig};
+use crate::dist::ProcGrid;
+use crate::error::{DnttError, Result};
+use crate::ht::HtConfig;
+use crate::nmf::{NmfAlgo, NmfConfig};
+use crate::ttrain::{SyntheticSparse, SyntheticTt, TtConfig};
+use crate::util::json::Json;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// `JobSpec` serialization format tag.
+pub const JOB_FORMAT: &str = "dntt-job-v1";
+
+/// A serializable decomposition job: what `dntt submit` writes and
+/// `dntt serve` runs. Mirrors the `dntt decompose` flag surface.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Input kind: `synthetic|sparse|faces|video`.
+    pub input: String,
+    /// Tensor dims (synthetic|sparse inputs).
+    pub dims: Vec<usize>,
+    /// Generator TT ranks (synthetic input; `dims.len() - 1` entries).
+    pub true_ranks: Vec<usize>,
+    /// Nonzero fraction in `(0, 1]` (sparse input).
+    pub density: f64,
+    pub seed: u64,
+    pub decomp: Decomposition,
+    /// Processor grid, one entry per tensor mode.
+    pub grid: Vec<usize>,
+    /// Per-stage rank-selection threshold.
+    pub eps: f64,
+    /// Fixed stage ranks (skip the SVD rank selection).
+    pub fixed_ranks: Option<Vec<usize>>,
+    /// NMF update rule: `bcd|mu|hals`.
+    pub algo: String,
+    /// NMF iterations per stage.
+    pub iters: usize,
+    pub prune: bool,
+    pub check_error: bool,
+    /// Record per-rank traces; fills the job's metrics envelope.
+    pub trace: bool,
+    pub priority: Priority,
+    pub tenant: String,
+    /// Display label (defaults to the input's label).
+    pub label: Option<String>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        // Matches the `dntt decompose` defaults.
+        JobSpec {
+            input: "synthetic".into(),
+            dims: vec![16, 16, 16, 16],
+            true_ranks: vec![4, 4, 4],
+            density: 0.01,
+            seed: 42,
+            decomp: Decomposition::Tt,
+            grid: vec![1, 1, 1, 1],
+            eps: 0.01,
+            fixed_ranks: None,
+            algo: "bcd".into(),
+            iters: 100,
+            prune: false,
+            check_error: true,
+            trace: false,
+            priority: Priority::Normal,
+            tenant: "default".into(),
+            label: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// The CI/perf-smoke preset — identical tensor and grid to
+    /// `dntt decompose --smoke` so solo and served smoke runs share
+    /// fingerprints.
+    pub fn smoke(seed: u64) -> JobSpec {
+        JobSpec {
+            dims: vec![8, 8, 8, 8],
+            true_ranks: vec![3, 3, 3],
+            grid: vec![2, 2, 1, 1],
+            seed,
+            ..JobSpec::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut f = vec![
+            ("format", Json::Str(JOB_FORMAT.into())),
+            ("input", Json::Str(self.input.clone())),
+            ("dims", Json::arr_usize(&self.dims)),
+            ("true_ranks", Json::arr_usize(&self.true_ranks)),
+            ("density", Json::Num(self.density)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("decomp", Json::Str(self.decomp.name().into())),
+            ("grid", Json::arr_usize(&self.grid)),
+            ("eps", Json::Num(self.eps)),
+            ("algo", Json::Str(self.algo.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("prune", Json::Bool(self.prune)),
+            ("check_error", Json::Bool(self.check_error)),
+            ("trace", Json::Bool(self.trace)),
+            ("priority", Json::Str(self.priority.name().into())),
+            ("tenant", Json::Str(self.tenant.clone())),
+        ];
+        if let Some(r) = &self.fixed_ranks {
+            f.push(("fixed_ranks", Json::arr_usize(r)));
+        }
+        if let Some(l) = &self.label {
+            f.push(("label", Json::Str(l.clone())));
+        }
+        Json::obj(f)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let bad = |what: &str| DnttError::config(format!("job spec: bad or missing '{what}'"));
+        match j.get("format").as_str() {
+            Some(JOB_FORMAT) => {}
+            Some(other) => {
+                return Err(DnttError::config(format!(
+                    "job spec: format '{other}', expected '{JOB_FORMAT}'"
+                )))
+            }
+            None => return Err(bad("format")),
+        }
+        let d = JobSpec::default();
+        let usize_arr = |key: &str, dflt: &[usize]| -> Result<Vec<usize>> {
+            match j.get(key) {
+                Json::Null => Ok(dflt.to_vec()),
+                v => v
+                    .as_arr()
+                    .ok_or_else(|| bad(key))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| bad(key)))
+                    .collect(),
+            }
+        };
+        let str_or = |key: &str, dflt: &str| -> Result<String> {
+            match j.get(key) {
+                Json::Null => Ok(dflt.to_string()),
+                v => v.as_str().map(str::to_string).ok_or_else(|| bad(key)),
+            }
+        };
+        let num_or = |key: &str, dflt: f64| -> Result<f64> {
+            match j.get(key) {
+                Json::Null => Ok(dflt),
+                v => v.as_f64().ok_or_else(|| bad(key)),
+            }
+        };
+        let bool_or = |key: &str, dflt: bool| -> Result<bool> {
+            match j.get(key) {
+                Json::Null => Ok(dflt),
+                v => v.as_bool().ok_or_else(|| bad(key)),
+            }
+        };
+        let fixed_ranks = match j.get("fixed_ranks") {
+            Json::Null => None,
+            v => Some(
+                v.as_arr()
+                    .ok_or_else(|| bad("fixed_ranks"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| bad("fixed_ranks")))
+                    .collect::<Result<Vec<usize>>>()?,
+            ),
+        };
+        let label = match j.get("label") {
+            Json::Null => None,
+            v => Some(v.as_str().ok_or_else(|| bad("label"))?.to_string()),
+        };
+        Ok(JobSpec {
+            input: str_or("input", &d.input)?,
+            dims: usize_arr("dims", &d.dims)?,
+            true_ranks: usize_arr("true_ranks", &d.true_ranks)?,
+            density: num_or("density", d.density)?,
+            seed: num_or("seed", d.seed as f64)? as u64,
+            decomp: str_or("decomp", "tt")?.parse().map_err(DnttError::config)?,
+            grid: usize_arr("grid", &d.grid)?,
+            eps: num_or("eps", d.eps)?,
+            fixed_ranks,
+            algo: str_or("algo", &d.algo)?,
+            iters: num_or("iters", d.iters as f64)? as usize,
+            prune: bool_or("prune", d.prune)?,
+            check_error: bool_or("check_error", d.check_error)?,
+            trace: bool_or("trace", d.trace)?,
+            priority: str_or("priority", "normal")?.parse().map_err(DnttError::config)?,
+            tenant: str_or("tenant", &d.tenant)?,
+            label,
+        })
+    }
+
+    /// Build the runnable [`JobConfig`] (validates the spec).
+    pub fn to_config(&self) -> Result<JobConfig> {
+        let input = match self.input.as_str() {
+            "synthetic" => {
+                if self.true_ranks.len() + 1 != self.dims.len() {
+                    return Err(DnttError::config(format!(
+                        "job spec: true_ranks needs {} entries for {} dims",
+                        self.dims.len().saturating_sub(1),
+                        self.dims.len()
+                    )));
+                }
+                InputSpec::Synthetic(SyntheticTt::new(
+                    self.dims.clone(),
+                    self.true_ranks.clone(),
+                    self.seed,
+                ))
+            }
+            "sparse" => {
+                if !(self.density > 0.0 && self.density <= 1.0) {
+                    return Err(DnttError::config(format!(
+                        "job spec: density must be in (0, 1], got {}",
+                        self.density
+                    )));
+                }
+                InputSpec::SyntheticSparse(SyntheticSparse::new(
+                    self.dims.clone(),
+                    self.density,
+                    self.seed,
+                ))
+            }
+            "faces" => InputSpec::Faces(FaceConfig::default()),
+            "video" => InputSpec::Video(VideoConfig::default()),
+            other => {
+                return Err(DnttError::config(format!(
+                    "job spec: unknown input '{other}' (synthetic|sparse|faces|video)"
+                )))
+            }
+        };
+        let grid = ProcGrid::new(self.grid.clone())?;
+        let algo: NmfAlgo = self.algo.parse().map_err(DnttError::config)?;
+        let nmf = NmfConfig { max_iters: self.iters, algo, seed: self.seed, ..Default::default() };
+        Ok(JobConfig {
+            decomp: self.decomp,
+            tt: TtConfig {
+                eps: self.eps,
+                fixed_ranks: self.fixed_ranks.clone(),
+                nmf: nmf.clone(),
+                prune: self.prune,
+                ..Default::default()
+            },
+            ht: HtConfig {
+                eps: self.eps,
+                fixed_ranks: self.fixed_ranks.clone(),
+                nmf,
+                prune: self.prune,
+                ..Default::default()
+            },
+            check_error: self.check_error,
+            trace: self.trace.then(crate::obs::TraceConfig::default),
+            ..JobConfig::new(input, grid)
+        })
+    }
+
+    /// Build the full server submission (config + scheduling envelope).
+    pub fn to_request(&self) -> Result<JobRequest> {
+        let job = self.to_config()?;
+        let mut req = JobRequest::new(job).priority(self.priority).tenant(self.tenant.clone());
+        if let Some(l) = &self.label {
+            req = req.label(l.clone());
+        }
+        Ok(req)
+    }
+}
+
+/// One entry of [`Spool::pending`].
+pub struct PendingJob {
+    pub seq: u64,
+    pub spec: JobSpec,
+    pub path: PathBuf,
+}
+
+/// The on-disk queue directory (see the module docs for layout).
+pub struct Spool {
+    dir: PathBuf,
+}
+
+impl Spool {
+    /// Open (creating if needed) a spool rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Spool> {
+        let dir = dir.into();
+        fs::create_dir_all(dir.join("pending"))?;
+        fs::create_dir_all(dir.join("done"))?;
+        Ok(Spool { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn pending_dir(&self) -> PathBuf {
+        self.dir.join("pending")
+    }
+
+    pub fn done_dir(&self) -> PathBuf {
+        self.dir.join("done")
+    }
+
+    fn seq_of(name: &str) -> Option<u64> {
+        let rest = name.strip_prefix("job")?;
+        let digits = rest.strip_suffix(".json")?;
+        if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        digits.parse().ok()
+    }
+
+    fn seqs_in(dir: &Path) -> Vec<u64> {
+        match fs::read_dir(dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter_map(|n| Self::seq_of(&n))
+                .collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Append a spec; returns its sequence number. Sequence numbers are
+    /// reserved with `create_new`, so concurrent submitters get distinct
+    /// files.
+    pub fn submit(&self, spec: &JobSpec) -> Result<u64> {
+        let body = spec.to_json().to_pretty();
+        let mut seq = [Self::seqs_in(&self.pending_dir()), Self::seqs_in(&self.done_dir())]
+            .concat()
+            .into_iter()
+            .max()
+            .map_or(0, |m| m + 1);
+        loop {
+            let path = self.pending_dir().join(format!("job{seq:06}.json"));
+            match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    f.write_all(body.as_bytes())?;
+                    return Ok(seq);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => seq += 1,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// All pending specs, sorted by sequence number (submission order).
+    /// A torn/unparseable file is an error naming its path (runbook:
+    /// inspect and delete it).
+    pub fn pending(&self) -> Result<Vec<PendingJob>> {
+        let dir = self.pending_dir();
+        let mut seqs = Self::seqs_in(&dir);
+        seqs.sort_unstable();
+        let mut out = Vec::with_capacity(seqs.len());
+        for seq in seqs {
+            let path = dir.join(format!("job{seq:06}.json"));
+            let body = fs::read_to_string(&path)?;
+            let j = Json::parse(&body)
+                .map_err(|e| DnttError::config(format!("{path:?}: {e}")))?;
+            let spec = JobSpec::from_json(&j)
+                .map_err(|e| DnttError::config(format!("{path:?}: {e}")))?;
+            out.push(PendingJob { seq, spec, path });
+        }
+        Ok(out)
+    }
+
+    /// Resolve a pending entry: record its outcome row and move the spec
+    /// to `done/`.
+    pub fn mark_done(&self, seq: u64, outcome: &Json) -> Result<()> {
+        let name = format!("job{seq:06}.json");
+        let out_path = self.done_dir().join(format!("job{seq:06}.outcome.json"));
+        let tmp = self.done_dir().join(format!("job{seq:06}.outcome.json.tmp"));
+        fs::write(&tmp, outcome.to_pretty())?;
+        fs::rename(&tmp, &out_path)?;
+        let pending = self.pending_dir().join(&name);
+        if pending.exists() {
+            fs::rename(&pending, self.done_dir().join(&name))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_spool(tag: &str) -> Spool {
+        let dir = std::env::temp_dir()
+            .join(format!("dntt-spool-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        Spool::open(dir).unwrap()
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = JobSpec {
+            input: "sparse".into(),
+            density: 0.05,
+            fixed_ranks: Some(vec![3, 3, 3]),
+            priority: Priority::High,
+            tenant: "teamA".into(),
+            label: Some("nightly".into()),
+            trace: true,
+            ..JobSpec::default()
+        };
+        let j = spec.to_json();
+        let back = JobSpec::from_json(&j).unwrap();
+        assert_eq!(spec, back);
+        // And the JSON itself roundtrips through the parser.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn spec_defaults_fill_missing_fields() {
+        let j = Json::parse(&format!(r#"{{"format":"{JOB_FORMAT}","seed":7}}"#)).unwrap();
+        let spec = JobSpec::from_json(&j).unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.dims, vec![16, 16, 16, 16]);
+        assert_eq!(spec.priority, Priority::Normal);
+        let cfg = spec.to_config().unwrap();
+        assert_eq!(cfg.grid.size(), 1);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(JobSpec::from_json(&Json::parse(r#"{"input":"synthetic"}"#).unwrap()).is_err());
+        let spec = JobSpec { true_ranks: vec![4], ..JobSpec::default() };
+        assert!(spec.to_config().is_err(), "wrong true_ranks arity");
+        let spec = JobSpec { input: "sparse".into(), density: 0.0, ..JobSpec::default() };
+        assert!(spec.to_config().is_err(), "density out of range");
+        let spec = JobSpec { input: "nope".into(), ..JobSpec::default() };
+        assert!(spec.to_config().is_err(), "unknown input kind");
+    }
+
+    #[test]
+    fn smoke_spec_matches_decompose_smoke_fingerprint() {
+        // The served smoke job must hit the same cache entry as a solo
+        // `decompose --smoke` with identical knobs.
+        let spec = JobSpec::smoke(42);
+        let cfg = spec.to_config().unwrap();
+        assert_eq!(cfg.input.dims(), vec![8, 8, 8, 8]);
+        assert_eq!(cfg.grid.dims(), &[2, 2, 1, 1]);
+        let again = JobSpec::smoke(42).to_config().unwrap();
+        assert_eq!(cfg.fingerprint(), again.fingerprint());
+        assert_ne!(cfg.fingerprint(), JobSpec::smoke(43).to_config().unwrap().fingerprint());
+    }
+
+    #[test]
+    fn spool_submit_pending_done_cycle() {
+        let spool = temp_spool("cycle");
+        let s0 = spool.submit(&JobSpec::smoke(1)).unwrap();
+        let s1 = spool.submit(&JobSpec::smoke(2)).unwrap();
+        assert!(s1 > s0);
+        let pending = spool.pending().unwrap();
+        assert_eq!(pending.len(), 2);
+        assert_eq!(pending[0].seq, s0);
+        assert_eq!(pending[1].spec.seed, 2);
+        spool
+            .mark_done(s0, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .unwrap();
+        let pending = spool.pending().unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].seq, s1);
+        // Sequence numbers never reuse a done slot.
+        let s2 = spool.submit(&JobSpec::smoke(3)).unwrap();
+        assert!(s2 > s1);
+        let _ = fs::remove_dir_all(spool.dir());
+    }
+}

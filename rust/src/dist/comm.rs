@@ -60,16 +60,18 @@ impl Slot {
     }
 }
 
-/// State shared by every rank of one [`Comm::run`] world (and all of its
-/// sub-communicators).
-struct WorldState {
+/// State shared by every rank of one SPMD world (and all of its
+/// sub-communicators) — whether the world's ranks are freshly spawned
+/// threads ([`Comm::run`]) or leased pool workers
+/// ([`crate::dist::RankPool`]).
+pub(crate) struct WorldState {
     slots: Mutex<HashMap<SlotKey, Slot>>,
     cv: Condvar,
     poisoned: AtomicBool,
 }
 
 impl WorldState {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         WorldState {
             slots: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
@@ -77,7 +79,7 @@ impl WorldState {
         }
     }
 
-    fn poison(&self) {
+    pub(crate) fn poison(&self) {
         self.poisoned.store(true, Ordering::SeqCst);
         let _guard = self.slots.lock().unwrap_or_else(|e| e.into_inner());
         self.cv.notify_all();
@@ -139,31 +141,10 @@ impl Comm {
             let handles: Vec<_> = (0..p)
                 .map(|rank| {
                     let f = f.clone();
-                    let comm = Comm {
-                        shared: Arc::clone(&shared),
-                        id: 0,
-                        rank,
-                        size: p,
-                        seq: 0,
-                        next_child: 1,
-                        breakdown: Breakdown::new(),
-                    };
                     let ws = Arc::clone(&shared);
                     let plan = fault_plan.clone();
                     let obs = obs_collector.clone();
-                    scope.spawn(move || {
-                        crate::dist::faults::enter_rank(plan, rank);
-                        crate::obs::enter_rank(obs, rank);
-                        crate::util::logging::set_thread_rank(rank);
-                        let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
-                        crate::util::logging::clear_thread_rank();
-                        crate::obs::exit_rank();
-                        crate::dist::faults::exit_rank();
-                        if out.is_err() {
-                            ws.poison();
-                        }
-                        out
-                    })
+                    scope.spawn(move || run_rank_body(ws, plan, obs, rank, p, f))
                 })
                 .collect();
             handles
@@ -418,6 +399,49 @@ impl Comm {
         let counts = vec![each; self.size];
         self.reduce_scatter_uneven(data, &counts)
     }
+}
+
+/// The shared per-rank body of every SPMD world launch: construct this
+/// rank's world [`Comm`] handle, install the rank-scoped fault/trace/log
+/// state, run `f` under `catch_unwind`, tear the state back down, and
+/// poison the world on panic so peers blocked in collectives unwind too.
+///
+/// Both world launchers route through here — [`Comm::run`] (fresh scoped
+/// threads) and [`crate::dist::Lease::run_world`] (leased pool workers) —
+/// so a rank behaves identically regardless of which thread hosts it, and
+/// a reused pool worker carries no rank state between jobs (the
+/// enter/exit pairs are strictly scoped to this call).
+pub(crate) fn run_rank_body<T, F>(
+    shared: Arc<WorldState>,
+    plan: Option<Arc<crate::dist::faults::FaultPlan>>,
+    obs: Option<Arc<crate::obs::TraceCollector>>,
+    rank: usize,
+    size: usize,
+    f: F,
+) -> std::thread::Result<T>
+where
+    F: FnOnce(Comm) -> T,
+{
+    let comm = Comm {
+        shared: Arc::clone(&shared),
+        id: 0,
+        rank,
+        size,
+        seq: 0,
+        next_child: 1,
+        breakdown: Breakdown::new(),
+    };
+    crate::dist::faults::enter_rank(plan, rank);
+    crate::obs::enter_rank(obs, rank);
+    crate::util::logging::set_thread_rank(rank);
+    let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
+    crate::util::logging::clear_thread_rank();
+    crate::obs::exit_rank();
+    crate::dist::faults::exit_rank();
+    if out.is_err() {
+        shared.poison();
+    }
+    out
 }
 
 #[cfg(test)]

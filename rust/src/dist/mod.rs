@@ -16,6 +16,9 @@
 //!   ([`CheckpointPolicy`], stage snapshots, manifest validation);
 //! * [`faults`] — deterministic fault injection at collective boundaries
 //!   (compiled under the `fault-inject` cargo feature; a no-op otherwise);
+//! * [`pool`] — [`RankPool`]/[`Lease`], long-lived worker ranks leased to
+//!   successive jobs by the job server (bitwise-equivalent to
+//!   [`Comm::run`] per world);
 //! * [`CostModel`] — projects thread-rank measurements onto a cluster.
 //!
 //! The full contract (collective semantics, determinism guarantees,
@@ -27,6 +30,7 @@ pub mod chunkstore;
 pub mod comm;
 pub mod costmodel;
 pub mod faults;
+pub mod pool;
 pub mod topology;
 
 pub use checkpoint::{CheckpointPolicy, CkptCtx};
@@ -36,4 +40,5 @@ pub use chunkstore::{
 pub use comm::Comm;
 pub use costmodel::CostModel;
 pub use faults::FaultPlan;
+pub use pool::{Lease, RankPool};
 pub use topology::{BlockDim, Grid2d, ProcGrid};

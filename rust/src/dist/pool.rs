@@ -1,0 +1,328 @@
+//! A pool of reusable worker ranks for running many SPMD worlds.
+//!
+//! [`Comm::run`] owns the classic spawn-and-join shape: `p` threads are
+//! born for one job and die with it. A decomposition *service* (the
+//! [`crate::coordinator::JobServer`]) instead keeps a fixed pool of
+//! long-lived worker threads and **leases** subsets of them to successive
+//! jobs: a job needing `p` ranks takes a [`Lease`] of `p` workers, runs
+//! any number of worlds on it (relaunch attempts after a lost rank reuse
+//! the same lease), and returns the workers to the pool when dropped —
+//! so several jobs of mixed size execute concurrently on one bounded set
+//! of OS threads.
+//!
+//! # Determinism and isolation
+//!
+//! A leased world is **bitwise-identical** to a spawned one: both
+//! launchers route every rank through the same
+//! `comm::run_rank_body`, world ranks `0..p` are assigned by lease
+//! position (never by physical worker id), each world gets a fresh
+//! rendezvous table, and the numerics depend only on the rank-ordered
+//! collective semantics of [`Comm`] — not on which OS thread hosts a
+//! rank (asserted by `pooled_world_matches_spawned_bitwise` below and by
+//! `tests/job_server.rs` end to end). Rank-scoped state (fault plans,
+//! trace rings, log prefixes) is installed and torn down per world, so a
+//! reused worker leaks nothing between jobs. Concurrent leases share
+//! nothing but the free-list mutex: each world has its own
+//! `WorldState`, and a panic (or injected rank death) poisons only its
+//! own world — the workers survive and return to the pool.
+//!
+//! Like [`Comm::run`], [`Lease::run_world`] snapshots the fault plan and
+//! trace collector armed on the *calling* thread, which is how the job
+//! server scopes per-job tracing: each job's runner thread arms its own
+//! collector before launching the world (see [`crate::obs`]).
+
+use crate::dist::comm::{run_rank_body, Comm, WorldState};
+use std::panic::resume_unwind;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One unit of work shipped to a pool worker (a fully-bound rank body).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Free-list shared between the pool and its outstanding leases.
+struct PoolShared {
+    free: Mutex<Vec<usize>>,
+    cv: Condvar,
+}
+
+/// A fixed set of long-lived worker threads that host SPMD ranks.
+///
+/// Dropping the pool shuts the workers down and joins them; any
+/// outstanding [`Lease`] keeps its workers' channels alive, so the drop
+/// blocks until every lease has been released.
+pub struct RankPool {
+    shared: Arc<PoolShared>,
+    senders: Vec<Sender<Task>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl RankPool {
+    /// Spawn a pool of `workers` rank threads.
+    pub fn new(workers: usize) -> RankPool {
+        assert!(workers > 0, "RankPool needs at least one worker");
+        let shared = Arc::new(PoolShared {
+            free: Mutex::new((0..workers).rev().collect()),
+            cv: Condvar::new(),
+        });
+        let mut senders = Vec::with_capacity(workers);
+        let mut threads = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Task>();
+            senders.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("dntt-pool-{i}"))
+                .spawn(move || {
+                    // Run tasks until the pool drops our sender (and every
+                    // lease holding a clone of it has been released).
+                    while let Ok(task) = rx.recv() {
+                        task();
+                    }
+                })
+                .expect("spawning pool worker");
+            threads.push(handle);
+        }
+        RankPool { shared, senders, threads }
+    }
+
+    /// Total number of workers in the pool.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Workers not currently leased.
+    pub fn available(&self) -> usize {
+        self.shared.free.lock().unwrap().len()
+    }
+
+    /// Lease `p` workers if that many are free right now (the job
+    /// server's admission primitive — it decides *which* job gets
+    /// capacity, so this never blocks).
+    pub fn try_lease(&self, p: usize) -> Option<Lease> {
+        assert!(p > 0, "a lease needs at least one rank");
+        if p > self.size() {
+            return None;
+        }
+        let mut free = self.shared.free.lock().unwrap();
+        if free.len() < p {
+            return None;
+        }
+        let ids: Vec<usize> = free.split_off(free.len() - p);
+        drop(free);
+        Some(self.make_lease(ids))
+    }
+
+    /// Lease `p` workers, blocking until enough are free. Panics if the
+    /// pool is smaller than `p` (that can never succeed).
+    pub fn lease(&self, p: usize) -> Lease {
+        assert!(p > 0, "a lease needs at least one rank");
+        assert!(
+            p <= self.size(),
+            "lease of {p} ranks exceeds pool of {} workers",
+            self.size()
+        );
+        let mut free = self.shared.free.lock().unwrap();
+        while free.len() < p {
+            free = self.shared.cv.wait(free).unwrap();
+        }
+        let ids: Vec<usize> = free.split_off(free.len() - p);
+        drop(free);
+        self.make_lease(ids)
+    }
+
+    fn make_lease(&self, ids: Vec<usize>) -> Lease {
+        let senders = ids.iter().map(|&i| self.senders[i].clone()).collect();
+        Lease { shared: Arc::clone(&self.shared), senders, ids }
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        // Closing our senders ends each worker's recv loop once every
+        // lease clone is gone too.
+        self.senders.clear();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// An exclusive claim on `p` pool workers, valid for any number of world
+/// launches. Returned to the pool on drop.
+pub struct Lease {
+    shared: Arc<PoolShared>,
+    senders: Vec<Sender<Task>>,
+    ids: Vec<usize>,
+}
+
+impl Lease {
+    /// Number of ranks this lease can host.
+    pub fn size(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Run one SPMD world of `self.size()` ranks on the leased workers
+    /// and return the per-rank results in rank order — the pooled
+    /// equivalent of [`Comm::run`], including its panic semantics: if
+    /// any rank panics the world is poisoned, every rank unwinds, and
+    /// the first panic payload (in rank order) is re-raised here after
+    /// **all** ranks have finished, so the workers are guaranteed idle
+    /// again before the caller observes the failure.
+    ///
+    /// `'static` bounds (unlike [`Comm::run`]) because the closure
+    /// crosses into long-lived worker threads; share state via `Arc`.
+    pub fn run_world<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(Comm) -> T + Clone + Send + 'static,
+    {
+        let p = self.size();
+        let world = Arc::new(WorldState::new());
+        // Same caller-thread snapshot as Comm::run: the fault plan and
+        // trace collector armed on the launching thread scope this world.
+        let plan = crate::dist::faults::armed();
+        let obs = crate::obs::armed();
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for (rank, sender) in self.senders.iter().enumerate() {
+            let f = f.clone();
+            let ws = Arc::clone(&world);
+            let plan = plan.clone();
+            let obs = obs.clone();
+            let tx = tx.clone();
+            let task: Task = Box::new(move || {
+                let out = run_rank_body(ws, plan, obs, rank, p, f);
+                let _ = tx.send((rank, out));
+            });
+            sender.send(task).expect("pool worker died");
+        }
+        drop(tx);
+        // The receive loop ends when every task (each holding a sender
+        // clone) has completed — a barrier guaranteeing worker idleness.
+        let mut slots: Vec<Option<std::thread::Result<T>>> = (0..p).map(|_| None).collect();
+        for (rank, out) in rx {
+            slots[rank] = Some(out);
+        }
+        let mut outs = Vec::with_capacity(p);
+        for slot in slots {
+            match slot.expect("every rank reports exactly once") {
+                Ok(v) => outs.push(v),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        outs
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        let mut free = self.shared.free.lock().unwrap();
+        free.extend(self.ids.drain(..));
+        drop(free);
+        self.shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// A rank body with non-trivial float reductions whose result is
+    /// sensitive to any change in collective order or membership.
+    fn world_body(mut c: Comm) -> Vec<f64> {
+        let mut v = vec![0.1 * (c.rank() as f64 + 1.0); 4];
+        c.all_reduce_sum(&mut v);
+        let g = c.all_gather(&v[..2]);
+        let s = c.all_reduce_scalar(g.iter().sum());
+        v.push(s);
+        v
+    }
+
+    #[test]
+    fn pooled_world_matches_spawned_bitwise() {
+        let spawned = Comm::run(4, world_body);
+        let pool = RankPool::new(6);
+        let lease = pool.lease(4);
+        let pooled = lease.run_world(world_body);
+        assert_eq!(pooled.len(), 4);
+        for (a, b) in spawned.iter().zip(&pooled) {
+            assert_eq!(a.as_slice(), b.as_slice(), "pooled ranks must match spawned bitwise");
+        }
+    }
+
+    #[test]
+    fn lease_accounting_and_reuse() {
+        let pool = RankPool::new(5);
+        assert_eq!(pool.size(), 5);
+        assert_eq!(pool.available(), 5);
+        let a = pool.lease(2);
+        let b = pool.try_lease(2).expect("capacity for a second lease");
+        assert_eq!(pool.available(), 1);
+        assert!(pool.try_lease(2).is_none(), "only one worker left");
+        // Successive worlds on one lease reuse the same workers.
+        let first = a.run_world(|c| c.rank());
+        let second = a.run_world(|c| c.rank() * 10);
+        assert_eq!(first, vec![0, 1]);
+        assert_eq!(second, vec![0, 10]);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.available(), 5);
+    }
+
+    #[test]
+    fn concurrent_leases_run_isolated_worlds() {
+        let pool = Arc::new(RankPool::new(4));
+        let p2 = Arc::clone(&pool);
+        let a = pool.lease(2);
+        let t = std::thread::spawn(move || {
+            let b = p2.lease(2);
+            b.run_world(|mut c| {
+                let mut v = vec![2.0];
+                c.all_reduce_sum(&mut v);
+                v[0]
+            })
+        });
+        let ra = a.run_world(|mut c| {
+            let mut v = vec![1.0];
+            c.all_reduce_sum(&mut v);
+            v[0]
+        });
+        let rb = t.join().unwrap();
+        assert_eq!(ra, vec![2.0, 2.0]);
+        assert_eq!(rb, vec![4.0, 4.0]);
+    }
+
+    #[test]
+    fn panicking_world_poisons_but_pool_survives() {
+        let pool = RankPool::new(3);
+        let lease = pool.lease(3);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            lease.run_world(|mut c| {
+                if c.rank() == 2 {
+                    panic!("boom");
+                }
+                c.barrier(); // would deadlock without poisoning
+            })
+        }));
+        assert!(result.is_err(), "the panic must propagate to the launcher");
+        // The same lease (and therefore the same workers) still hosts a
+        // healthy follow-up world.
+        let again = lease.run_world(|c| c.rank() + 100);
+        assert_eq!(again, vec![100, 101, 102]);
+    }
+
+    #[test]
+    fn blocking_lease_waits_for_release() {
+        let pool = Arc::new(RankPool::new(2));
+        let held = pool.lease(2);
+        let p2 = Arc::clone(&pool);
+        let t = std::thread::spawn(move || {
+            let l = p2.lease(1); // blocks until `held` drops
+            l.run_world(|c| c.size())
+        });
+        // Give the waiter a moment to block, then release.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(held);
+        assert_eq!(t.join().unwrap(), vec![1]);
+    }
+}

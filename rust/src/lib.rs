@@ -14,7 +14,12 @@
 //!   two-network family as LANL's pyDNTNK. The `serve` layer turns a
 //!   finished decomposition into a batch-queryable artifact
 //!   (point/fiber/slice queries, TT contraction, rounding to an ε or
-//!   rank budget) persisted through `tensor::io`.
+//!   rank budget) persisted through `tensor::io`. Above the single-job
+//!   path, `coordinator::server` runs decomposition as a *service*: a
+//!   `JobServer` schedules queued jobs onto a shared `dist::RankPool`
+//!   with priority/fair-share admission and a fingerprint-keyed result
+//!   cache (`serve::cache`), fed by the on-disk `dntt-job-v1` spool and
+//!   the `dntt submit`/`serve` CLI (see `rust/OPERATIONS.md`).
 //! * **L2/L1 (`python/compile/`)** — the NMF inner iteration as a JAX
 //!   graph built from Pallas kernels, AOT-lowered to HLO text at build time.
 //! * **Runtime (`runtime`)** — loads the AOT artifacts through the `xla`

@@ -3,12 +3,19 @@
 //! Subcommands map one-to-one onto the paper's experiments:
 //!
 //! * `decompose` — run the dnTT on a synthetic/sparse/faces/video tensor;
+//! * `submit`    — append a job to the on-disk spool (service front door);
+//! * `serve`     — run queued jobs on a shared rank pool with the
+//!   fingerprint result cache (`dntt::coordinator::server`);
+//! * `jobs`      — list the spool and the result cache;
 //! * `query`     — serve batched point/fiber/slice queries from a saved
-//!   `.dntt` artifact (the read side — see `dntt::serve`);
+//!   `.dntt` artifact or a cache entry (the read side — see `dntt::serve`);
 //! * `scaling`   — Figs 5/6/7 series (strong / weak / TT-rank scaling);
 //! * `sweep`     — Figs 2/8a/8b/8c compression-vs-error curves;
 //! * `denoise`   — Fig 9 SSIM comparison (SVD-TT vs NMF-TT);
 //! * `info`      — platform + artifact manifest report.
+//!
+//! The operator walkthrough (submit → serve → query, runbooks) lives in
+//! `rust/OPERATIONS.md`; the full flag reference in `rust/docs/CLI.md`.
 
 use dntt::bench::workloads::{self, Fig8Data, ScalingMode, ScalingParams, PAPER_EPS};
 use dntt::coordinator::{run_job, BackendChoice, Decomposition, InputSpec, JobConfig, ResumeMode};
@@ -35,6 +42,9 @@ fn main() {
     };
     let result = match cmd {
         "decompose" => cmd_decompose(&rest),
+        "submit" => cmd_submit(&rest),
+        "serve" => cmd_serve(&rest),
+        "jobs" => cmd_jobs(&rest),
         "inspect" => cmd_inspect(&rest),
         "query" => cmd_query(&rest),
         "scaling" => cmd_scaling(&rest),
@@ -58,6 +68,9 @@ fn top_usage() -> String {
      USAGE: dntt <COMMAND> [OPTIONS]\n\n\
      COMMANDS:\n\
      \x20 decompose   decompose a tensor (synthetic | faces | video)\n\
+     \x20 submit      queue a decomposition job in the on-disk spool\n\
+     \x20 serve       run queued jobs on a shared rank pool (result cache)\n\
+     \x20 jobs        list spooled jobs and cached results\n\
      \x20 inspect     inspect / evaluate a saved .dntt tensor train\n\
      \x20 query       serve point/fiber/slice queries from a .dntt artifact\n\
      \x20 scaling     strong/weak/TT-rank scaling series (Figs 5-7)\n\
@@ -312,13 +325,286 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_submit(argv: &[String]) -> Result<(), String> {
+    use dntt::coordinator::{JobSpec, Spool};
+    let spec_args = ArgSpec::new("dntt submit", "queue a decomposition job in the on-disk spool")
+        .opt("spool", "spool", "spool directory (shared with `dntt serve`)")
+        .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video")
+        .opt("decomp", "tt", "decomposition: tt (tensor train) | ht (hierarchical Tucker)")
+        .opt("dims", "16,16,16,16", "tensor dims (synthetic|sparse)")
+        .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
+        .opt("density", "0.01", "nonzero fraction in (0,1] (sparse input)")
+        .opt("grid", "1x1x1x1", "processor grid, e.g. 2x2x1x1")
+        .opt("eps", "0.01", "per-stage rank-selection threshold")
+        .opt("ranks", "", "fixed ranks (skip SVD): d-1 for tt, 2(d-1) for ht")
+        .opt("algo", "bcd", "NMF update rule: bcd|mu|hals")
+        .opt("iters", "100", "NMF iterations per stage")
+        .opt("seed", "42", "random seed")
+        .opt("priority", "normal", "admission priority: low|normal|high")
+        .opt("tenant", "default", "fair-share accounting bucket (user/team name)")
+        .opt("label", "", "display label for listings (default: the input's label)")
+        .flag("smoke", "CI preset: same tensor/grid as `decompose --smoke`")
+        .flag("prune", "prune all-zero rows/cols of each stage matrix before the NMF")
+        .flag("trace", "record per-rank traces (fills the job's metrics envelope)")
+        .flag("no-check", "skip reconstruction-error check")
+        .flag("json", "emit the queued spec as JSON");
+    let a = spec_args.parse(argv)?;
+    let mut spec = if a.flag("smoke") {
+        JobSpec::smoke(a.usize("seed")? as u64)
+    } else {
+        let dims = a.usize_list("dims")?;
+        let d = dims.len();
+        JobSpec {
+            input: a.get("input").into(),
+            dims,
+            true_ranks: a.usize_list("true-ranks")?,
+            density: a.f64("density")?,
+            seed: a.usize("seed")? as u64,
+            decomp: a.get("decomp").parse()?,
+            grid: parse_grid(a.get("grid"), d)?.dims().to_vec(),
+            eps: a.f64("eps")?,
+            fixed_ranks: if a.get("ranks").is_empty() { None } else { Some(a.usize_list("ranks")?) },
+            algo: a.get("algo").into(),
+            iters: a.usize("iters")?,
+            prune: a.flag("prune"),
+            ..JobSpec::default()
+        }
+    };
+    // The scheduling envelope applies to presets and explicit specs alike.
+    spec.priority = a.get("priority").parse()?;
+    spec.tenant = a.get("tenant").into();
+    spec.label = if a.get("label").is_empty() { None } else { Some(a.get("label").into()) };
+    spec.trace = a.flag("trace");
+    spec.check_error = !a.flag("no-check");
+    // Validate now (bad specs should fail at the submitter's terminal,
+    // not inside the server) and surface the cache key.
+    let job = spec.to_config().map_err(|e| e.to_string())?;
+    let fp = job.fingerprint();
+    let spool = Spool::open(a.get("spool")).map_err(|e| e.to_string())?;
+    let seq = spool.submit(&spec).map_err(|e| e.to_string())?;
+    if a.flag("json") {
+        let mut j = spec.to_json();
+        if let dntt::util::json::Json::Obj(m) = &mut j {
+            m.insert("seq".into(), dntt::util::json::Json::Num(seq as f64));
+            m.insert("fingerprint".into(), dntt::util::json::Json::Str(format!("{fp:016x}")));
+        }
+        println!("{}", j.to_pretty());
+    } else {
+        println!(
+            "queued job{seq:06} in {:?} (fingerprint {fp:016x}, priority {}, tenant {})",
+            spool.pending_dir(),
+            spec.priority.name(),
+            spec.tenant
+        );
+        println!("run `dntt serve --spool {}` to execute it", a.get("spool"));
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    use dntt::coordinator::{JobServer, ServerConfig, Spool};
+    use dntt::util::json::Json;
+    let spec = ArgSpec::new(
+        "dntt serve",
+        "run all queued jobs on a shared rank pool, then exit",
+    )
+    .opt("spool", "spool", "spool directory (shared with `dntt submit`)")
+    .opt("cache-dir", "cache", "fingerprint result-cache directory")
+    .opt("pool-ranks", "8", "worker ranks in the shared pool (max single-job grid size)")
+    .opt(
+        "metrics-dir",
+        "",
+        "write METRICS_job<seq>.json (dntt-metrics-v1) here for traced executed jobs",
+    )
+    .flag("no-checkpoint", "do not checkpoint server jobs into the cache (disables resume)")
+    .flag("json", "emit outcomes, stats and the admission log as JSON");
+    let a = spec.parse(argv)?;
+    let spool = Spool::open(a.get("spool")).map_err(|e| e.to_string())?;
+    let pending = spool.pending().map_err(|e| e.to_string())?;
+    if pending.is_empty() {
+        println!("spool {:?}: no pending jobs", spool.pending_dir());
+        return Ok(());
+    }
+    let mut cfg = ServerConfig::new(a.usize("pool-ranks")?, a.get("cache-dir"));
+    cfg.checkpoint = !a.flag("no-checkpoint");
+    let srv = JobServer::new(cfg).map_err(|e| e.to_string())?;
+    // Submit everything up front (spool order = submission order), then
+    // drain the pool. A spec the server rejects (e.g. oversized grid) is
+    // resolved straight to a failed outcome row.
+    let mut accepted = Vec::new();
+    for p in &pending {
+        let req = match p.spec.to_request() {
+            Ok(r) => r,
+            Err(e) => {
+                spool
+                    .mark_done(p.seq, &Json::obj(vec![("error", Json::Str(e.to_string()))]))
+                    .map_err(|e| e.to_string())?;
+                eprintln!("job{:06}: rejected: {e}", p.seq);
+                continue;
+            }
+        };
+        let traced = p.spec.trace;
+        match srv.submit(req) {
+            Ok(id) => accepted.push((p.seq, id, traced)),
+            Err(e) => {
+                spool
+                    .mark_done(p.seq, &Json::obj(vec![("error", Json::Str(e.to_string()))]))
+                    .map_err(|e| e.to_string())?;
+                eprintln!("job{:06}: rejected: {e}", p.seq);
+            }
+        }
+    }
+    srv.drain();
+    let mut rows = Vec::new();
+    for (seq, id, traced) in &accepted {
+        let o = srv.outcome(*id).expect("drained job has an outcome");
+        spool.mark_done(*seq, &o.to_json()).map_err(|e| e.to_string())?;
+        if *traced && !a.get("metrics-dir").is_empty() {
+            if let Some(rep) = &o.report {
+                let dir = PathBuf::from(a.get("metrics-dir"));
+                std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+                let path = dir.join(format!("METRICS_job{seq:06}.json"));
+                std::fs::write(&path, rep.metrics_json().to_pretty())
+                    .map_err(|e| format!("writing {path:?}: {e}"))?;
+            }
+        }
+        rows.push((*seq, o));
+    }
+    let stats = srv.stats();
+    if a.flag("json") {
+        let jobs: Vec<Json> = rows
+            .iter()
+            .map(|(seq, o)| {
+                let mut j = o.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("seq".into(), Json::Num(*seq as f64));
+                }
+                j
+            })
+            .collect();
+        let out = Json::obj(vec![
+            ("jobs", Json::Arr(jobs)),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("submitted", Json::Num(stats.submitted as f64)),
+                    ("executed", Json::Num(stats.executed as f64)),
+                    ("cache_hits", Json::Num(stats.cache_hits as f64)),
+                    ("coalesced", Json::Num(stats.coalesced as f64)),
+                    ("leases_granted", Json::Num(stats.leases_granted as f64)),
+                ]),
+            ),
+            (
+                "admission_log",
+                Json::Arr(srv.admission_log().into_iter().map(Json::Str).collect()),
+            ),
+        ]);
+        println!("{}", out.to_pretty());
+    } else {
+        for (seq, o) in &rows {
+            let how = if o.cache_hit {
+                "cache hit"
+            } else if o.coalesced {
+                "coalesced"
+            } else {
+                "executed"
+            };
+            match (&o.error, &o.artifact) {
+                (Some(e), _) => println!("job{seq:06} [{how}] {} FAILED: {e}", o.label),
+                (None, Some(art)) => println!(
+                    "job{seq:06} [{how}] {} fp={:016x} -> {}",
+                    o.label,
+                    o.fingerprint,
+                    art.display()
+                ),
+                (None, None) => println!("job{seq:06} [{how}] {}", o.label),
+            }
+        }
+        println!(
+            "served {} job(s): {} executed, {} cache hit(s), {} coalesced, {} lease(s) granted",
+            stats.submitted, stats.executed, stats.cache_hits, stats.coalesced,
+            stats.leases_granted
+        );
+    }
+    Ok(())
+}
+
+fn cmd_jobs(argv: &[String]) -> Result<(), String> {
+    use dntt::coordinator::Spool;
+    use dntt::serve::ResultCache;
+    use dntt::util::json::Json;
+    let spec = ArgSpec::new("dntt jobs", "list spooled jobs and cached results")
+        .opt("spool", "spool", "spool directory")
+        .opt("cache-dir", "cache", "fingerprint result-cache directory")
+        .flag("json", "emit the listing as JSON");
+    let a = spec.parse(argv)?;
+    let spool = Spool::open(a.get("spool")).map_err(|e| e.to_string())?;
+    let pending = spool.pending().map_err(|e| e.to_string())?;
+    let cache = ResultCache::open(a.get("cache-dir")).map_err(|e| e.to_string())?;
+    let entries = cache.entries();
+    if a.flag("json") {
+        let pend: Vec<Json> = pending
+            .iter()
+            .map(|p| {
+                let mut j = p.spec.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("seq".into(), Json::Num(p.seq as f64));
+                }
+                j
+            })
+            .collect();
+        let cached: Vec<Json> = entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("fingerprint", Json::Str(format!("{:016x}", e.fingerprint))),
+                    ("artifact", Json::Str(e.artifact.display().to_string())),
+                    ("meta", e.meta.clone()),
+                ])
+            })
+            .collect();
+        println!(
+            "{}",
+            Json::obj(vec![("pending", Json::Arr(pend)), ("cached", Json::Arr(cached))])
+                .to_pretty()
+        );
+        return Ok(());
+    }
+    println!("pending ({} in {:?}):", pending.len(), spool.pending_dir());
+    for p in &pending {
+        println!(
+            "  job{:06}  {:<8} {:<6} dims {:?} grid {:?} prio {} tenant {}",
+            p.seq,
+            p.spec.label.clone().unwrap_or_else(|| p.spec.input.clone()),
+            p.spec.decomp.name(),
+            p.spec.dims,
+            p.spec.grid,
+            p.spec.priority.name(),
+            p.spec.tenant
+        );
+    }
+    println!("cached ({} in {:?}):", entries.len(), cache.dir());
+    for e in &entries {
+        let label = e.meta.get("label").as_str().unwrap_or("?");
+        let wall = e.meta.get("wall_secs").as_f64().unwrap_or(0.0);
+        println!(
+            "  {:016x}  {:<12} {:.3}s  {}",
+            e.fingerprint,
+            label,
+            wall,
+            e.artifact.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_query(argv: &[String]) -> Result<(), String> {
     use dntt::serve::{HtHandle, HtQueryWorkspace, QueryWorkspace, TtHandle};
     use dntt::tensor::io::{load_artifact, Artifact};
     use dntt::util::json::Json;
 
     let spec = ArgSpec::new("dntt query", "serve batched queries from a saved .dntt artifact")
-        .pos("file", "path to a .dntt artifact (tt or ht)")
+        .pos("file", "path to a .dntt artifact (tt or ht); omit with --cache/--fp")
         .opt("at", "", "one point query, e.g. --at 3,1,4,1")
         .opt("fiber", "", "fiber along this mode through the --at anchor")
         .opt("slice", "", "slice 'mode:index', e.g. --slice 2:5")
@@ -327,14 +613,31 @@ fn cmd_query(argv: &[String]) -> Result<(), String> {
         .opt("seed", "7", "random-query seed")
         .opt("round", "", "TT-round to this tolerance before serving (tt only)")
         .opt("max-rank", "", "cap every TT rank before serving (tt only)")
+        .opt("cache", "", "serve from this result cache instead of a file (with --fp)")
+        .opt("fp", "", "fingerprint (hex) of the cache entry to serve")
         .flag("compare", "with --points: also time naive per-element evaluation")
         .flag("json", "emit results as JSON");
     let a = spec.parse(argv)?;
-    let path = a
-        .positionals()
-        .first()
-        .ok_or_else(|| format!("missing <file>\n\n{}", spec.usage()))?;
-    let mut artifact = load_artifact(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+    let (path, mut artifact) = if !a.get("cache").is_empty() || !a.get("fp").is_empty() {
+        // Cache addressing: the artifact is looked up by job fingerprint,
+        // exactly as `dntt serve` committed it.
+        if a.get("cache").is_empty() || a.get("fp").is_empty() {
+            return Err("--cache and --fp must be given together".into());
+        }
+        let fp = u64::from_str_radix(a.get("fp"), 16)
+            .map_err(|_| format!("bad --fp '{}': want 16 hex digits", a.get("fp")))?;
+        let cache =
+            dntt::serve::ResultCache::open(a.get("cache")).map_err(|e| e.to_string())?;
+        let art = cache.load(fp).map_err(|e| e.to_string())?;
+        (format!("{}:{fp:016x}", a.get("cache")), art)
+    } else {
+        let path = a
+            .positionals()
+            .first()
+            .ok_or_else(|| format!("missing <file> (or --cache/--fp)\n\n{}", spec.usage()))?;
+        let art = load_artifact(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+        (path.clone(), art)
+    };
 
     // Optional recompression before serving (TT only).
     if !a.get("round").is_empty() || !a.get("max-rank").is_empty() {

@@ -1,0 +1,250 @@
+//! The fingerprint-keyed result cache backing the job server.
+//!
+//! Layout (one directory per [`JobConfig::fingerprint`](crate::coordinator::JobConfig::fingerprint),
+//! rendered as 16 lower-hex digits):
+//!
+//! ```text
+//! <cache_dir>/
+//!   a59d1f0c33e0b771/
+//!     artifact.dntt   # the finished network (versioned .dntt container)
+//!     meta.json       # dntt-cache-v1 descriptor — written LAST (commit marker)
+//!     ckpt/           # dntt-ckpt-v1 snapshots while the job is in flight
+//! ```
+//!
+//! Both files are written atomically (tmp + rename), and `meta.json` is
+//! written only after the artifact rename succeeds, so the presence of a
+//! parseable `meta.json` *is* the commit point: [`ResultCache::lookup`]
+//! treats an entry without it (a crashed or in-flight job) as a miss.
+//! An interrupted job leaves its `ckpt/` directory behind, which is how a
+//! resubmitted identical config resumes instead of starting over (the
+//! server points the job's [`CheckpointPolicy`](crate::dist::CheckpointPolicy)
+//! at [`ResultCache::ckpt_dir`]).
+//!
+//! Fingerprint semantics — what "identical config" means, including the
+//! knobs deliberately *excluded* because they are output-neutral — are
+//! documented on `JobConfig::fingerprint` and in `DESIGN.md` §2.11.
+
+use crate::error::{DnttError, Result};
+use crate::tensor::io::{load_artifact, save_artifact, Artifact};
+use crate::util::json::Json;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One committed cache entry (artifact + parsed `meta.json`).
+pub struct CacheEntry {
+    pub fingerprint: u64,
+    /// The entry's directory under the cache root.
+    pub dir: PathBuf,
+    /// Path of the servable `.dntt` artifact.
+    pub artifact: PathBuf,
+    /// The `dntt-cache-v1` descriptor.
+    pub meta: Json,
+}
+
+impl CacheEntry {
+    /// Load and validate the cached artifact.
+    pub fn load(&self) -> Result<Artifact> {
+        load_artifact(&self.artifact)
+    }
+}
+
+/// An on-disk map `fingerprint → finished decomposition`.
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+/// `meta.json` format tag.
+pub const CACHE_META_FORMAT: &str = "dntt-cache-v1";
+
+impl ResultCache {
+    /// Open (creating if needed) a cache rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ResultCache> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(ResultCache { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The entry directory for a fingerprint (16 lower-hex digits).
+    pub fn entry_dir(&self, fp: u64) -> PathBuf {
+        self.dir.join(format!("{fp:016x}"))
+    }
+
+    pub fn artifact_path(&self, fp: u64) -> PathBuf {
+        self.entry_dir(fp).join("artifact.dntt")
+    }
+
+    pub fn meta_path(&self, fp: u64) -> PathBuf {
+        self.entry_dir(fp).join("meta.json")
+    }
+
+    /// Where an in-flight job for this fingerprint keeps its
+    /// `dntt-ckpt-v1` snapshots (survives the job for resume-on-resubmit).
+    pub fn ckpt_dir(&self, fp: u64) -> PathBuf {
+        self.entry_dir(fp).join("ckpt")
+    }
+
+    /// A committed entry for `fp`, if one exists. Entries whose
+    /// `meta.json` is missing or unparseable (in-flight or torn) are
+    /// misses, never errors.
+    pub fn lookup(&self, fp: u64) -> Option<CacheEntry> {
+        let artifact = self.artifact_path(fp);
+        let meta_path = self.meta_path(fp);
+        if !artifact.is_file() {
+            return None;
+        }
+        let meta = fs::read_to_string(&meta_path).ok()?;
+        let meta = Json::parse(&meta).ok()?;
+        if meta.get("format").as_str() != Some(CACHE_META_FORMAT) {
+            return None;
+        }
+        Some(CacheEntry { fingerprint: fp, dir: self.entry_dir(fp), artifact, meta })
+    }
+
+    /// Commit a finished decomposition under `fp`.
+    ///
+    /// `meta` is the caller's descriptor object; the `format` and
+    /// `fingerprint` fields are stamped here. The artifact is renamed
+    /// into place first, `meta.json` second — a crash in between leaves a
+    /// harmless uncommitted entry that the next run overwrites.
+    pub fn put(&self, fp: u64, artifact: &Artifact, meta: Json) -> Result<CacheEntry> {
+        let dir = self.entry_dir(fp);
+        fs::create_dir_all(&dir)?;
+        let art_path = self.artifact_path(fp);
+        let art_tmp = dir.join("artifact.dntt.tmp");
+        save_artifact(artifact, &art_tmp)?;
+        fs::rename(&art_tmp, &art_path)?;
+        let mut fields = match meta {
+            Json::Obj(m) => m,
+            other => {
+                let mut m = std::collections::BTreeMap::new();
+                if other != Json::Null {
+                    m.insert("note".to_string(), other);
+                }
+                m
+            }
+        };
+        fields.insert("format".to_string(), Json::Str(CACHE_META_FORMAT.into()));
+        fields.insert("fingerprint".to_string(), Json::Str(format!("{fp:016x}")));
+        let meta = Json::Obj(fields);
+        let meta_path = self.meta_path(fp);
+        let meta_tmp = dir.join("meta.json.tmp");
+        fs::write(&meta_tmp, meta.to_pretty())?;
+        fs::rename(&meta_tmp, &meta_path)?;
+        Ok(CacheEntry { fingerprint: fp, dir, artifact: art_path, meta })
+    }
+
+    /// Load the committed artifact for `fp`, erroring on a miss (the
+    /// `query --cache --fp` path).
+    pub fn load(&self, fp: u64) -> Result<Artifact> {
+        match self.lookup(fp) {
+            Some(e) => e.load(),
+            None => Err(DnttError::Artifact(format!(
+                "no committed cache entry {fp:016x} under {:?}",
+                self.dir
+            ))),
+        }
+    }
+
+    /// Every committed entry, sorted by fingerprint (deterministic for
+    /// listings and tests). Unparseable directory names are skipped.
+    pub fn entries(&self) -> Vec<CacheEntry> {
+        let mut fps: Vec<u64> = match fs::read_dir(&self.dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|n| n.len() == 16)
+                .filter_map(|n| u64::from_str_radix(&n, 16).ok())
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        fps.sort_unstable();
+        fps.dedup();
+        fps.into_iter().filter_map(|fp| self.lookup(fp)).collect()
+    }
+
+    /// Drop an entry (artifact, meta, and any checkpoints). Returns
+    /// whether anything existed. The operator-facing `evict` runbook
+    /// step; in-flight jobs are not protected — evict only idle entries.
+    pub fn evict(&self, fp: u64) -> Result<bool> {
+        let dir = self.entry_dir(fp);
+        if !dir.exists() {
+            return Ok(false);
+        }
+        fs::remove_dir_all(&dir)?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TTensor;
+
+    fn tiny_artifact(seed: u64) -> Artifact {
+        // A deterministic rank-1 TT over dims [2, 3].
+        let s = seed as f64 + 1.0;
+        let cores = vec![
+            crate::linalg::Mat::from_vec(2, 1, vec![s, 2.0 * s]),
+            crate::linalg::Mat::from_vec(3, 1, vec![1.0, 0.5, 0.25]),
+        ];
+        Artifact::Tt(TTensor::new(vec![2, 3], cores).unwrap())
+    }
+
+    fn temp_cache(tag: &str) -> ResultCache {
+        let dir = std::env::temp_dir().join(format!(
+            "dntt-cache-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        ResultCache::open(dir).unwrap()
+    }
+
+    #[test]
+    fn put_lookup_roundtrip() {
+        let cache = temp_cache("roundtrip");
+        assert!(cache.lookup(7).is_none());
+        let meta = Json::obj(vec![("label", Json::Str("t".into()))]);
+        let entry = cache.put(7, &tiny_artifact(0), meta).unwrap();
+        assert_eq!(entry.fingerprint, 7);
+        let hit = cache.lookup(7).expect("committed entry");
+        assert_eq!(hit.meta.get("format").as_str(), Some(CACHE_META_FORMAT));
+        assert_eq!(hit.meta.get("fingerprint").as_str(), Some("0000000000000007"));
+        assert_eq!(hit.meta.get("label").as_str(), Some("t"));
+        let art = hit.load().unwrap();
+        assert_eq!(art.dims(), &[2, 3]);
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn artifact_without_meta_is_a_miss() {
+        let cache = temp_cache("uncommitted");
+        let fp = 0xabcdu64;
+        fs::create_dir_all(cache.entry_dir(fp)).unwrap();
+        save_artifact(&tiny_artifact(1), &cache.artifact_path(fp)).unwrap();
+        assert!(cache.lookup(fp).is_none(), "no meta.json means not committed");
+        assert!(cache.load(fp).is_err());
+        // Committing over the torn entry repairs it.
+        cache.put(fp, &tiny_artifact(1), Json::obj(vec![])).unwrap();
+        assert!(cache.lookup(fp).is_some());
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn entries_sorted_and_evict() {
+        let cache = temp_cache("entries");
+        for fp in [9u64, 3, 12] {
+            cache.put(fp, &tiny_artifact(fp), Json::obj(vec![])).unwrap();
+        }
+        let fps: Vec<u64> = cache.entries().iter().map(|e| e.fingerprint).collect();
+        assert_eq!(fps, vec![3, 9, 12]);
+        assert!(cache.evict(9).unwrap());
+        assert!(!cache.evict(9).unwrap());
+        let fps: Vec<u64> = cache.entries().iter().map(|e| e.fingerprint).collect();
+        assert_eq!(fps, vec![3, 12]);
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+}

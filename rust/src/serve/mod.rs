@@ -25,6 +25,11 @@
 //!   ε-or-rank-budget truncation ([`truncate`]) so an artifact can be
 //!   recompressed before serving; `crate::ttrain::tt_round` is the
 //!   `eps`-only special case and delegates here.
+//! * [`cache`] — [`ResultCache`], the fingerprint-keyed on-disk map from
+//!   a [`JobConfig::fingerprint`](crate::coordinator::JobConfig::fingerprint)
+//!   to the committed `.dntt` artifact plus its `dntt-ckpt-v1` resume
+//!   state — how the job server serves finished work without recompute
+//!   (`DESIGN.md` §2.11).
 //!
 //! Every query path reproduces `TTensor::element` / `HtTensor::reconstruct`
 //! **bitwise** (same scalar op sequence: ascending-`k` fused
@@ -35,11 +40,13 @@
 //! [`crate::tensor::io`] (`save_artifact`/`load_artifact`); the CLI's
 //! `query` subcommand is the end-to-end consumer.
 
+pub mod cache;
 pub mod contract;
 pub mod handle;
 pub mod ht_handle;
 pub mod ortho;
 
+pub use cache::{CacheEntry, ResultCache};
 pub use contract::{tt_contract_all, tt_contract_matrix, tt_contract_vec};
 pub use handle::{QueryWorkspace, TtHandle};
 pub use ht_handle::{HtHandle, HtQueryWorkspace};

@@ -1,0 +1,294 @@
+//! The decomposition-service battery (ISSUE 8 acceptance): jobs run
+//! through the [`JobServer`]'s shared rank pool are bitwise-identical to
+//! solo [`run_job`] runs, resubmitting an identical config is a cache
+//! hit that launches no ranks, an interrupted job resumes through the
+//! server, and the priority/fair-share admission order is a
+//! deterministic function of the submitted set.
+//!
+//! Under the `fault-inject` feature the battery also kills a served job
+//! mid-run and proves the server-forced checkpoint brings it back
+//! bitwise-identical.
+
+mod common;
+
+use common::{assert_cores_bitwise, assert_ht_nodes_bitwise, ht_cfg_fixed, unique_temp_dir};
+use dntt::coordinator::{
+    run_job, Decomposition, InputSpec, JobConfig, JobRequest, JobServer, Priority, ServerConfig,
+};
+use dntt::dist::ProcGrid;
+use dntt::ht::SyntheticHt;
+use dntt::nmf::NmfConfig;
+use dntt::tensor::io::{load_artifact, Artifact};
+use dntt::ttrain::{SyntheticTt, TtConfig};
+use std::path::{Path, PathBuf};
+
+/// A small TT job; `seed` varies the tensor, `grid` its parallelism.
+fn tt_job(seed: u64, grid: Vec<usize>) -> JobConfig {
+    JobConfig {
+        tt: TtConfig {
+            eps: 1e-6,
+            nmf: NmfConfig { max_iters: 20, ..Default::default() },
+            ..Default::default()
+        },
+        check_error: false,
+        ..JobConfig::new(
+            InputSpec::Synthetic(SyntheticTt::new(vec![6, 6, 6], vec![2, 2], seed)),
+            ProcGrid::new(grid).unwrap(),
+        )
+    }
+}
+
+/// A small HT job on a 2×1×2 grid (4 ranks), dense synthetic-HT input.
+fn ht_job(seed: u64) -> JobConfig {
+    JobConfig {
+        decomp: Decomposition::Ht,
+        ht: ht_cfg_fixed(4, vec![2; 4]),
+        check_error: false,
+        ..JobConfig::new(
+            InputSpec::Dense(std::sync::Arc::new(
+                SyntheticHt::new(vec![4, 4, 4], 2, seed).dense(),
+            )),
+            ProcGrid::new(vec![2, 1, 2]).unwrap(),
+        )
+    }
+}
+
+fn server_over(cache_dir: &Path, pool: usize) -> JobServer {
+    JobServer::new(ServerConfig::new(pool, cache_dir)).unwrap()
+}
+
+/// ISSUE acceptance: mixed-size jobs submitted concurrently through the
+/// server — overcommitting the pool so they queue and share leases —
+/// each produce output bitwise-identical to a solo `run_job`, and the
+/// committed `.dntt` artifact matches the in-memory factors bitwise.
+#[test]
+fn concurrent_mixed_size_jobs_match_solo_bitwise() {
+    let cache = unique_temp_dir("jobsrv_mixed");
+    let srv = server_over(&cache, 8);
+    // 4 + 2 + 4 = 10 ranks wanted > 8 pooled: the third job waits.
+    let id_a = srv.submit(JobRequest::new(tt_job(1, vec![2, 2, 1]))).unwrap();
+    let id_b = srv.submit(JobRequest::new(tt_job(2, vec![2, 1, 1]))).unwrap();
+    let id_c = srv.submit(JobRequest::new(ht_job(3))).unwrap();
+    srv.drain();
+
+    let solo_a = run_job(&tt_job(1, vec![2, 2, 1])).unwrap();
+    let solo_b = run_job(&tt_job(2, vec![2, 1, 1])).unwrap();
+    let solo_c = run_job(&ht_job(3)).unwrap();
+
+    for (id, solo, what) in
+        [(id_a, &solo_a, "job a"), (id_b, &solo_b, "job b"), (id_c, &solo_c, "job c")]
+    {
+        let o = srv.outcome(id).expect("drained");
+        assert!(o.is_ok(), "{what} failed: {:?}", o.error);
+        assert!(!o.cache_hit && !o.coalesced, "{what} must actually execute");
+        let rep = o.report.as_ref().expect("executed jobs carry a report");
+        // In-memory factors: served == solo, bitwise.
+        match solo.output.tt() {
+            Some(tt) => assert_cores_bitwise(rep.output.tt().unwrap(), tt, what),
+            None => assert_ht_nodes_bitwise(
+                rep.output.ht().unwrap(),
+                solo.output.ht().unwrap(),
+                what,
+            ),
+        }
+        // And the committed artifact stores exactly those factors.
+        let art = load_artifact(o.artifact.as_ref().unwrap()).unwrap();
+        match art {
+            Artifact::Tt(tt) => {
+                for (l, (ca, cb)) in
+                    tt.cores().iter().zip(solo.output.tt().unwrap().tt.cores()).enumerate()
+                {
+                    assert_eq!(ca.as_slice(), cb.as_slice(), "{what}: artifact core {l}");
+                }
+            }
+            Artifact::Ht(ht) => {
+                for (t, (na, nb)) in
+                    ht.nodes().iter().zip(solo.output.ht().unwrap().ht.nodes()).enumerate()
+                {
+                    assert_eq!(
+                        na.mat().as_slice(),
+                        nb.mat().as_slice(),
+                        "{what}: artifact node {t}"
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(srv.stats().executed, 3);
+    let _ = std::fs::remove_dir_all(&cache);
+}
+
+/// ISSUE acceptance: resubmitting an identical config — here through a
+/// *fresh* server over the same cache directory — is a cache hit: no
+/// lease is ever granted, and the artifact bytes are the ones the first
+/// run committed.
+#[test]
+fn cache_hit_launches_no_ranks_and_returns_identical_artifact() {
+    let cache = unique_temp_dir("jobsrv_hit");
+    let job = || tt_job(5, vec![2, 1, 2]);
+
+    let first = server_over(&cache, 4);
+    let id1 = first.submit(JobRequest::new(job())).unwrap();
+    first.drain();
+    let o1 = first.outcome(id1).unwrap();
+    assert!(o1.is_ok(), "seed run failed: {:?}", o1.error);
+    let bytes1 = std::fs::read(o1.artifact.as_ref().unwrap()).unwrap();
+
+    // A fresh server (new pool, empty stats) over the same cache.
+    let second = server_over(&cache, 4);
+    let id2 = second.submit(JobRequest::new(job())).unwrap();
+    second.drain();
+    let o2 = second.outcome(id2).unwrap();
+    assert!(o2.cache_hit, "identical config must be served from the cache");
+    assert_eq!(second.stats().leases_granted, 0, "a cache hit must launch no ranks");
+    assert_eq!(second.stats().executed, 0);
+    let bytes2 = std::fs::read(o2.artifact.as_ref().unwrap()).unwrap();
+    assert_eq!(bytes1, bytes2, "cache hit must return the identical artifact");
+    let _ = std::fs::remove_dir_all(&cache);
+}
+
+/// ISSUE acceptance: an interrupted job resumes through the server. The
+/// server forces checkpointing into the cache's `ckpt/` directory, so
+/// when the committed artifact is lost (here: deleted, modelling a crash
+/// between checkpoint and commit), a resubmit re-executes *with resume*
+/// and still lands bitwise on the solo result.
+#[test]
+fn interrupted_job_resumes_through_server() {
+    let cache = unique_temp_dir("jobsrv_resume");
+    let job = || tt_job(9, vec![2, 2, 1]);
+    let fp = job().fingerprint();
+
+    let first = server_over(&cache, 4);
+    let id1 = first.submit(JobRequest::new(job())).unwrap();
+    first.drain();
+    assert!(first.outcome(id1).unwrap().is_ok());
+    let ckpt_dir = first.cache().ckpt_dir(fp);
+    assert!(
+        std::fs::read_dir(&ckpt_dir).map(|rd| rd.count() > 0).unwrap_or(false),
+        "server-forced checkpoint must exist at {ckpt_dir:?}"
+    );
+    // "Interrupt": the artifact never committed, the checkpoint survived.
+    std::fs::remove_file(first.cache().artifact_path(fp)).unwrap();
+    std::fs::remove_file(first.cache().meta_path(fp)).unwrap();
+    drop(first);
+
+    let second = server_over(&cache, 4);
+    let id2 = second.submit(JobRequest::new(job())).unwrap();
+    second.drain();
+    let o2 = second.outcome(id2).unwrap();
+    assert!(o2.is_ok(), "resumed run failed: {:?}", o2.error);
+    assert!(!o2.cache_hit, "artifact was deleted — this must re-execute");
+    assert_eq!(second.stats().executed, 1);
+
+    let solo = run_job(&job()).unwrap();
+    assert_cores_bitwise(
+        o2.report.as_ref().unwrap().output.tt().unwrap(),
+        solo.output.tt().unwrap(),
+        "resumed-through-server vs solo",
+    );
+    let _ = std::fs::remove_dir_all(&cache);
+}
+
+/// ISSUE acceptance: the admission order is deterministic — a pure
+/// function of the submitted set. Two independent servers (separate
+/// caches, so both actually admit) given the same submissions in the
+/// same order produce identical admission logs.
+#[test]
+fn priority_admission_order_is_deterministic() {
+    let submit_all = |srv: &JobServer| {
+        // Mixed priorities and tenants; seeds make each job distinct.
+        for (seed, tenant, prio) in [
+            (20, "a", Priority::Normal),
+            (21, "a", Priority::Low),
+            (22, "b", Priority::Normal),
+            (23, "b", Priority::High),
+            (24, "c", Priority::Normal),
+        ] {
+            srv.submit(
+                JobRequest::new(tt_job(seed, vec![2, 1, 1])).tenant(tenant).priority(prio),
+            )
+            .unwrap();
+        }
+    };
+    let run = |tag: &str| -> (Vec<String>, PathBuf) {
+        let cache = unique_temp_dir(tag);
+        let srv = server_over(&cache, 2); // fully serialized: order is visible
+        submit_all(&srv);
+        srv.drain();
+        (srv.admission_log(), cache)
+    };
+    let (log1, c1) = run("jobsrv_order1");
+    let (log2, c2) = run("jobsrv_order2");
+    assert_eq!(log1, log2, "admission log must be deterministic");
+    assert_eq!(log1.len(), 5);
+    // High priority admits first, Low last, regardless of submit order.
+    assert!(log1.first().unwrap().contains("prio=high"), "log: {log1:?}");
+    assert!(log1.last().unwrap().contains("prio=low"), "log: {log1:?}");
+    let _ = std::fs::remove_dir_all(&c1);
+    let _ = std::fs::remove_dir_all(&c2);
+}
+
+/// Duplicate submissions inside one batch coalesce onto a single
+/// execution whose outcome (and artifact) both submitters share.
+#[test]
+fn duplicates_in_flight_share_one_execution() {
+    let cache = unique_temp_dir("jobsrv_dup");
+    let srv = server_over(&cache, 4);
+    let ids: Vec<_> = (0..3)
+        .map(|_| srv.submit(JobRequest::new(tt_job(30, vec![2, 1, 2]))).unwrap())
+        .collect();
+    srv.drain();
+    let s = srv.stats();
+    assert_eq!(s.executed, 1, "identical configs must execute once");
+    assert_eq!(s.cache_hits + s.coalesced, 2);
+    let arts: Vec<_> = ids
+        .iter()
+        .map(|id| {
+            let o = srv.outcome(*id).unwrap();
+            assert!(o.is_ok(), "{:?}", o.error);
+            o.artifact.clone().unwrap()
+        })
+        .collect();
+    assert!(arts.windows(2).all(|w| w[0] == w[1]), "all submitters share the artifact");
+    let _ = std::fs::remove_dir_all(&cache);
+}
+
+/// `fault-inject` half: a served job killed at a mid-run collective
+/// recovers *through the server* — the forced checkpoint plus the
+/// coordinator's relaunch loop reuse the same lease, and the final
+/// factors are bitwise-identical to an uninterrupted solo run.
+#[cfg(feature = "fault-inject")]
+mod fault {
+    use super::*;
+    use dntt::dist::{faults, FaultPlan};
+
+    #[test]
+    fn served_job_killed_mid_run_recovers_bitwise() {
+        let reference = run_job(&tt_job(40, vec![2, 2, 1])).unwrap();
+
+        // Find the victim rank's collective count with a counting plan.
+        let counter = FaultPlan::count_only();
+        faults::arm(&counter);
+        run_job(&tt_job(40, vec![2, 2, 1])).unwrap();
+        faults::disarm();
+        let total = counter.ops_seen(1);
+        assert!(total > 10, "tiny job still runs {total} collectives");
+
+        let cache = unique_temp_dir("jobsrv_kill");
+        let srv = server_over(&cache, 4);
+        let plan = FaultPlan::kill_at(1, total / 2);
+        let id = srv
+            .submit(JobRequest::new(tt_job(40, vec![2, 2, 1])).fault_plan(plan.clone()))
+            .unwrap();
+        srv.drain();
+        assert_eq!(plan.fired_count(), 1, "the scheduled death must have fired");
+        let o = srv.outcome(id).unwrap();
+        assert!(o.is_ok(), "killed job did not recover: {:?}", o.error);
+        assert_cores_bitwise(
+            o.report.as_ref().unwrap().output.tt().unwrap(),
+            reference.output.tt().unwrap(),
+            "killed-through-server vs solo",
+        );
+        let _ = std::fs::remove_dir_all(&cache);
+    }
+}
