@@ -126,6 +126,18 @@ def main() -> int:
             print(f"::warning::perf gate: ratio '{ratio['name']}' denominator missing ({sha})")
             warned += 1
             continue
+        # Optional kernel-path tags: the ratio only means what it claims
+        # if the cases ran on the paths the baseline expects (the bench
+        # envelope records the path each case dispatched through).
+        for side in ("numerator", "denominator"):
+            want = ratio.get(f"{side}_kernel")
+            got_k = cases.get(ratio[side], {}).get("kernel", "")
+            if want is not None and got_k != want:
+                print(
+                    f"::warning::perf gate: ratio '{ratio['name']}' {side} "
+                    f"ran on kernel '{got_k}', baseline expects '{want}' ({sha})"
+                )
+                warned += 1
         got = num / den
         verdict = "ok" if got >= ratio["min"] else "BELOW FLOOR"
         print(f"  {ratio['name']}: {got:.2f}x (floor {ratio['min']:.2f}x) {verdict}")

@@ -11,15 +11,20 @@
 use dntt::bench::harness::Bench;
 use dntt::linalg::gemm::{
     gram_mt_m, matmul_a_bt_into_ws, matmul_at_b_into_ws, matmul_blocked_into, matmul_into_ws,
-    matmul_packed_into, GemmWorkspace,
+    matmul_packed_into, matmul_packed_with, GemmWorkspace,
 };
-use dntt::linalg::Mat;
+use dntt::linalg::simd::default_path;
+use dntt::linalg::{KernelCfg, Mat};
 use dntt::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::from_env();
     let mut rng = Rng::new(1);
     let mut ws = GemmWorkspace::<f64>::new();
+    // The packed cases dispatch through the env-aware default selection;
+    // tag them with the resolved path so the auto-vs-scalar ratio gate in
+    // bench/baseline.json can verify it compares the paths it claims to.
+    let auto = default_path().name();
 
     // --- Square + NMF-shaped A·B: blocked (seed) vs packed. -------------
     // 512^3 is the CI perf-gate headline; the rest cover the stage-matrix
@@ -34,12 +39,32 @@ fn main() {
         let bm = Mat::<f64>::rand_uniform(k, n, &mut rng);
         let mut c = Mat::<f64>::zeros(m, n);
         let flops = 2.0 * (m * k * n) as f64;
-        b.run_case(&format!("matmul_blocked {m}x{k}x{n} f64"), &[m, k, n], flops, || {
+        b.run_kernel_case(&format!("matmul_blocked {m}x{k}x{n} f64"), &[m, k, n], flops, "scalar", || {
             matmul_blocked_into(&a, &bm, &mut c)
         });
-        b.run_case(&format!("matmul_packed {m}x{k}x{n} f64"), &[m, k, n], flops, || {
+        b.run_kernel_case(&format!("matmul_packed {m}x{k}x{n} f64"), &[m, k, n], flops, auto, || {
             matmul_packed_into(&a, &bm, &mut c, &mut ws)
         });
+        if (m, k, n) == (512, 512, 512) {
+            // Headline comparisons for the SIMD speedup gate: the same
+            // packed loop forced to the scalar microkernel, and the auto
+            // path with 4 intra-rank threads (all bitwise identical).
+            b.run_kernel_case(
+                &format!("matmul_packed_scalar {m}x{k}x{n} f64"),
+                &[m, k, n],
+                flops,
+                "scalar",
+                || matmul_packed_with(&a, &bm, &mut c, &mut ws, KernelCfg::scalar()),
+            );
+            let t4 = KernelCfg::new(default_path(), 4);
+            b.run_kernel_case(
+                &format!("matmul_packed_t4 {m}x{k}x{n} f64"),
+                &[m, k, n],
+                flops,
+                auto,
+                || matmul_packed_with(&a, &bm, &mut c, &mut ws, t4),
+            );
+        }
     }
 
     // f32 headline (the PJRT artifact dtype).
@@ -50,7 +75,7 @@ fn main() {
         let mut c = Mat::<f32>::zeros(m, n);
         let mut ws32 = GemmWorkspace::<f32>::new();
         let flops = 2.0 * (m * k * n) as f64;
-        b.run_case(&format!("matmul_packed {m}x{k}x{n} f32"), &[m, k, n], flops, || {
+        b.run_kernel_case(&format!("matmul_packed {m}x{k}x{n} f32"), &[m, k, n], flops, auto, || {
             matmul_packed_into(&a, &bm, &mut c, &mut ws32)
         });
     }
@@ -67,30 +92,37 @@ fn main() {
     let x = Mat::<f64>::rand_uniform(1024, 2048, &mut rng);
     let ht = Mat::<f64>::rand_uniform(2048, 10, &mut rng);
     let mut out = Mat::<f64>::zeros(1024, 10);
-    b.run_case("xht 1024x2048x10 (A*B)", &[1024, 2048, 10], 2.0 * (1024 * 2048 * 10) as f64, || {
+    b.run_kernel_case("xht 1024x2048x10 (A*B)", &[1024, 2048, 10], 2.0 * (1024 * 2048 * 10) as f64, auto, || {
         matmul_into_ws(&x, &ht, &mut out, &mut ws)
     });
     let w = Mat::<f64>::rand_uniform(1024, 10, &mut rng);
     let mut out2 = Mat::<f64>::zeros(2048, 10);
-    b.run_case("wtx 1024x2048x10 (At*B)", &[2048, 1024, 10], 2.0 * (1024 * 2048 * 10) as f64, || {
+    b.run_kernel_case("wtx 1024x2048x10 (At*B)", &[2048, 1024, 10], 2.0 * (1024 * 2048 * 10) as f64, auto, || {
         matmul_at_b_into_ws(&x, &w, &mut out2, &mut ws)
     });
     let h2 = Mat::<f64>::rand_uniform(10, 2048, &mut rng);
     let mut out3 = Mat::<f64>::zeros(1024, 10);
-    b.run_case("a_bt 1024x2048x10 (A*Bt)", &[1024, 2048, 10], 2.0 * (1024 * 2048 * 10) as f64, || {
+    b.run_kernel_case("a_bt 1024x2048x10 (A*Bt)", &[1024, 2048, 10], 2.0 * (1024 * 2048 * 10) as f64, auto, || {
         matmul_a_bt_into_ws(&x, &h2, &mut out3, &mut ws)
     });
 
-    // Console summary of the acceptance ratio.
+    // Console summary of the acceptance ratios.
     let gf = |name: &str| {
         b.results().iter().find(|s| s.name == name).map(|s| s.gflops()).unwrap_or(0.0)
     };
     let blocked = gf("matmul_blocked 512x512x512 f64");
     let packed = gf("matmul_packed 512x512x512 f64");
+    let scalar = gf("matmul_packed_scalar 512x512x512 f64");
     if blocked > 0.0 {
         println!(
             "\n512^3 f64: blocked {blocked:.2} GF/s, packed {packed:.2} GF/s ({:.2}x)",
             packed / blocked
+        );
+    }
+    if scalar > 0.0 {
+        println!(
+            "512^3 f64: scalar {scalar:.2} GF/s, {auto} {packed:.2} GF/s ({:.2}x SIMD speedup)",
+            packed / scalar
         );
     }
     b.save("micro_gemm").unwrap();

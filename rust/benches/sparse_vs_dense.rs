@@ -13,8 +13,11 @@
 
 use dntt::bench::harness::Bench;
 use dntt::linalg::gemm::{matmul_at_b_into_ws, matmul_into_ws, GemmWorkspace};
-use dntt::linalg::sparse::{sp_matmul_at_b_into, sp_matmul_into, SparseMat};
-use dntt::linalg::Mat;
+use dntt::linalg::simd::default_path;
+use dntt::linalg::sparse::{
+    sp_matmul_at_b_into, sp_matmul_at_b_with, sp_matmul_into, sp_matmul_with, SparseMat,
+};
+use dntt::linalg::{KernelCfg, Mat};
 use dntt::util::rng::Rng;
 
 /// Dense non-negative matrix with exact zeros at the given density.
@@ -32,6 +35,9 @@ fn main() {
     let mut b = Bench::from_env();
     let mut rng = Rng::new(1);
     let mut ws = GemmWorkspace::<f64>::new();
+    // Kernel-path tag for the dispatched cases (env-aware default).
+    let auto = default_path().name();
+    let sel = KernelCfg::default();
 
     // The quickstart-scale NMF product shapes (X: 1024×2048, r = 10).
     let (m, k, r) = (1024usize, 2048usize, 10usize);
@@ -42,29 +48,47 @@ fn main() {
     // Dense packed baselines (density-independent).
     let xd = sparse_x(m, k, 1.0, &mut rng);
     let mut out = Mat::<f64>::zeros(m, r);
-    b.run_case(&format!("xht_dense {m}x{k}x{r}"), &[m, k, r], flops, || {
+    b.run_kernel_case(&format!("xht_dense {m}x{k}x{r}"), &[m, k, r], flops, auto, || {
         matmul_into_ws(&xd, &ht, &mut out, &mut ws)
     });
     let mut out_t = Mat::<f64>::zeros(k, r);
-    b.run_case(&format!("wtx_dense {m}x{k}x{r}"), &[k, m, r], flops, || {
+    b.run_kernel_case(&format!("wtx_dense {m}x{k}x{r}"), &[k, m, r], flops, auto, || {
         matmul_at_b_into_ws(&xd, &w, &mut out_t, &mut ws)
     });
 
-    // Density sweep: the EXPERIMENTS.md §Sparse schedule.
+    // Density sweep: the EXPERIMENTS.md §Sparse schedule. The `_into`
+    // forms are the scalar reference kernels; the `_simd` cases run the
+    // dispatched `_with` forms (bitwise identical, different speed).
     for &density in &[0.01f64, 0.1, 0.5, 1.0] {
         let x = sparse_x(m, k, density, &mut rng);
         let xs = SparseMat::from_dense(&x);
-        b.run_case(
+        b.run_kernel_case(
             &format!("xht_sparse {m}x{k}x{r} d={density}"),
             &[m, k, r],
             flops,
+            "scalar",
             || sp_matmul_into(&xs, &ht, &mut out),
         );
-        b.run_case(
+        b.run_kernel_case(
+            &format!("xht_sparse_simd {m}x{k}x{r} d={density}"),
+            &[m, k, r],
+            flops,
+            auto,
+            || sp_matmul_with(&xs, &ht, &mut out, sel),
+        );
+        b.run_kernel_case(
             &format!("wtx_sparse {m}x{k}x{r} d={density}"),
             &[k, m, r],
             flops,
+            "scalar",
             || sp_matmul_at_b_into(&xs, &w, &mut out_t),
+        );
+        b.run_kernel_case(
+            &format!("wtx_sparse_simd {m}x{k}x{r} d={density}"),
+            &[k, m, r],
+            flops,
+            auto,
+            || sp_matmul_at_b_with(&xs, &w, &mut out_t, sel),
         );
     }
 

@@ -203,6 +203,18 @@ pub struct JobConfig {
     /// bitwise-neutral (asserted by `tests/obs_neutrality.rs`), so a
     /// traced job may resume an untraced checkpoint and vice versa.
     pub trace: Option<crate::obs::TraceConfig>,
+    /// GEMM/SpMM kernel policy (SIMD path selection, CLI `--kernel`;
+    /// the `DNTT_KERNEL` env var overrides it at [`Self::kernel_cfg`]
+    /// time). Excluded from [`JobConfig::fingerprint`]: every path is
+    /// bitwise identical to scalar (`tests/kernel_conformance.rs`), so
+    /// a job may resume a checkpoint written under any kernel policy,
+    /// and JobServer cache entries are shared across policies.
+    pub kernel: crate::linalg::KernelPolicy,
+    /// Intra-rank worker threads for the packed GEMM / SpMM macro-panel
+    /// loop (CLI `--threads-per-rank`, min 1). Excluded from the
+    /// fingerprint for the same reason: threading partitions output
+    /// panels without changing any per-element operation order.
+    pub threads_per_rank: usize,
 }
 
 impl JobConfig {
@@ -221,7 +233,18 @@ impl JobConfig {
             resume: ResumeMode::Off,
             keep_spill: false,
             trace: None,
+            kernel: crate::linalg::KernelPolicy::default(),
+            threads_per_rank: 1,
         }
+    }
+
+    /// The kernel selection handed to every rank: `DNTT_KERNEL` env
+    /// override first, then the configured policy, resolved to a
+    /// concrete available path (unavailable forced paths downgrade to
+    /// scalar with a warning).
+    pub fn kernel_cfg(&self) -> crate::linalg::KernelCfg {
+        let policy = crate::linalg::KernelPolicy::from_env().unwrap_or(self.kernel);
+        crate::linalg::KernelCfg::new(policy.resolve(), self.threads_per_rank)
     }
 
     /// Stable fingerprint of everything that determines the numerical

@@ -132,6 +132,7 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
         let decomp = job.decomp;
         let tt_cfg = job.tt.clone();
         let ht_cfg = job.ht.clone();
+        let kcfg = job.kernel_cfg();
         let dims2 = dims.clone();
         let dense2 = dense.clone();
         let eng2 = engine.clone();
@@ -163,12 +164,12 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
                 match decomp {
                     Decomposition::Tt => dist_ntt(
                         world, row, col, &store, &grid, grid2, &dims2, block, backend, &tt_cfg,
-                        ckpt_ctx.as_ref(),
+                        kcfg, ckpt_ctx.as_ref(),
                     )
                     .map(DecompOutput::Tt),
                     Decomposition::Ht => crate::ht::dist_nht(
                         world, row, col, &store, &grid, grid2, &dims2, block, backend, &ht_cfg,
-                        ckpt_ctx.as_ref(),
+                        kcfg, ckpt_ctx.as_ref(),
                     )
                     .map(DecompOutput::Ht),
                 }

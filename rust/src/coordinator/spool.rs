@@ -63,6 +63,11 @@ pub struct JobSpec {
     pub check_error: bool,
     /// Record per-rank traces; fills the job's metrics envelope.
     pub trace: bool,
+    /// GEMM/SpMM kernel policy: `auto|scalar|avx2|avx512|neon`
+    /// (bitwise-neutral; `DNTT_KERNEL` on the serving host overrides).
+    pub kernel: String,
+    /// Intra-rank worker threads for the packed GEMM/SpMM panel loop.
+    pub threads_per_rank: usize,
     pub priority: Priority,
     pub tenant: String,
     /// Display label (defaults to the input's label).
@@ -87,6 +92,8 @@ impl Default for JobSpec {
             prune: false,
             check_error: true,
             trace: false,
+            kernel: "auto".into(),
+            threads_per_rank: 1,
             priority: Priority::Normal,
             tenant: "default".into(),
             label: None,
@@ -124,6 +131,8 @@ impl JobSpec {
             ("prune", Json::Bool(self.prune)),
             ("check_error", Json::Bool(self.check_error)),
             ("trace", Json::Bool(self.trace)),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("threads_per_rank", Json::Num(self.threads_per_rank as f64)),
             ("priority", Json::Str(self.priority.name().into())),
             ("tenant", Json::Str(self.tenant.clone())),
         ];
@@ -206,6 +215,8 @@ impl JobSpec {
             prune: bool_or("prune", d.prune)?,
             check_error: bool_or("check_error", d.check_error)?,
             trace: bool_or("trace", d.trace)?,
+            kernel: str_or("kernel", &d.kernel)?,
+            threads_per_rank: num_or("threads_per_rank", d.threads_per_rank as f64)? as usize,
             priority: str_or("priority", "normal")?.parse().map_err(DnttError::config)?,
             tenant: str_or("tenant", &d.tenant)?,
             label,
@@ -271,6 +282,8 @@ impl JobSpec {
             },
             check_error: self.check_error,
             trace: self.trace.then(crate::obs::TraceConfig::default),
+            kernel: self.kernel.parse().map_err(DnttError::config)?,
+            threads_per_rank: self.threads_per_rank.max(1),
             ..JobConfig::new(input, grid)
         })
     }

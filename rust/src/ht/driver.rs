@@ -25,7 +25,7 @@ use crate::dist::{
     dist_reshape, dist_reshape_x, Comm, Grid2d, Layout, ProcGrid, SharedStore, TensorBlock,
 };
 use crate::error::{DnttError, Result};
-use crate::linalg::{DenseOrSparse, Mat};
+use crate::linalg::{DenseOrSparse, KernelCfg, Mat};
 use crate::nmf::{dist_nmf_pruned_x_obs_ws, IterObserver, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::ht::{DimTree, HtNode, HtTensor};
@@ -136,6 +136,9 @@ fn gather_full(
 ///   ([`crate::dist::checkpoint::CkptCtx`]): snapshot the tree-walk state
 ///   after every N nodes, and resume (skipping resolved nodes) when a
 ///   valid `dntt-ckpt-v1` manifest exists.
+/// * `kernel` — GEMM/SpMM kernel selection (SIMD path + intra-rank
+///   threads) pinned to this rank's workspace; bitwise-neutral. Pass
+///   [`KernelCfg::default`] for the env-aware auto choice.
 #[allow(clippy::too_many_arguments)]
 pub fn dist_nht(
     world: &mut Comm,
@@ -148,6 +151,7 @@ pub fn dist_nht(
     my_block: TensorBlock,
     backend: &dyn ComputeBackend,
     cfg: &HtConfig,
+    kernel: KernelCfg,
     ckpt: Option<&CkptCtx>,
 ) -> Result<HtOutput> {
     let d = dims.len();
@@ -206,7 +210,8 @@ pub fn dist_nht(
     let mut edge = 2 * (0..start_node).filter(|&t| !tree.is_leaf(t)).count();
     // One workspace per rank, shared by every per-edge NMF of the tree
     // walk (left and right stages alike) — zero allocation once warm.
-    let mut ws = NmfWorkspace::new();
+    // The kernel selection is pinned here and rides the workspace.
+    let mut ws = NmfWorkspace::with_kernel(kernel);
 
     for t in start_node..tree.len() {
         let (layout, data, rt) = pending[t].take().expect("BFS processing order");
@@ -388,6 +393,7 @@ pub fn nht_on_threads(
             TensorBlock::Dense(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
+            KernelCfg::default(),
             None,
         )
     });

@@ -19,6 +19,17 @@
 //! by problem volume (`use_packed`). Tuning history lives in
 //! EXPERIMENTS.md §Perf.
 //!
+//! ## Kernel dispatch and intra-rank threading
+//!
+//! The packed path runs its inner register tile through a runtime-selected
+//! [`KernelPath`](super::simd::KernelPath) (scalar / AVX2 / AVX-512 / NEON
+//! — see [`super::simd`]) and can partition the output row panels over a
+//! scoped thread pool. Both knobs live in the workspace's [`KernelCfg`]
+//! (default: env-aware auto path, 1 thread); the `_with` entry points take
+//! an explicit selection. SIMD lanes map across output *columns* (the NR
+//! tile direction) and threads own disjoint MC-aligned output *row*
+//! chunks, so neither changes any element's accumulation sequence.
+//!
 //! ## Reproducibility contract
 //!
 //! The packed microkernel accumulates each output element strictly in
@@ -26,11 +37,16 @@
 //! from the zeroed output and carrying the running value across `kc`
 //! panels. That is exactly the operation sequence of [`matmul_naive`], so
 //! the packed kernels are **bitwise identical** to the naive reference for
-//! both `f32` and `f64` (asserted in `tests/gemm_kernels.rs`). The blocked
-//! fallback uses FMA and a zero-skip, so it agrees only to rounding.
+//! both `f32` and `f64` — for every kernel path and thread count
+//! (asserted in `tests/gemm_kernels.rs` and `tests/kernel_conformance.rs`).
+//! The blocked fallback uses FMA and a zero-skip, so it agrees only to
+//! rounding.
 
 use super::matrix::Mat;
 use super::scalar::Scalar;
+use super::simd::{microkernel, KernelCfg, KernelPath};
+
+pub use super::simd::{MR, NR};
 
 /// Cache block size along the k dimension (L1-friendly for f64) — blocked
 /// fallback kernel.
@@ -38,10 +54,6 @@ const KB: usize = 64;
 /// Cache block size along the i dimension — blocked fallback kernel.
 const IB: usize = 64;
 
-/// Microkernel register-tile rows (A sliver height).
-pub const MR: usize = 8;
-/// Microkernel register-tile columns (B sliver width).
-pub const NR: usize = 4;
 /// Rows of A packed per panel (sized so an `MC×KC` f64 A-panel fits L2).
 const MC: usize = 128;
 /// Depth packed per panel.
@@ -53,25 +65,50 @@ const NC: usize = 2048;
 /// more than the register tile saves; the blocked loop wins.
 const PACK_MIN_VOLUME: usize = 32 * 32 * 32;
 
-/// Reusable packing buffers for the microkernel path.
+/// Reusable packing buffers for the microkernel path, plus the kernel
+/// selection its packed entry points dispatch through.
 ///
 /// Holding one of these across calls makes repeated GEMMs allocation-free
 /// after warm-up: the buffers grow to the high-water panel size and are
 /// then reused. Every packed entry point takes `&mut GemmWorkspace`; the
-/// allocating wrappers create a transient one.
+/// allocating wrappers create a transient one. Under intra-rank threading
+/// each worker thread owns its own pack-buffer pair (`peers`), also reused
+/// across calls.
 pub struct GemmWorkspace<T: Scalar> {
     pack_a: Vec<T>,
     pack_b: Vec<T>,
+    /// Pack-buffer pairs for worker threads `1..` (the calling thread uses
+    /// the primary buffers above); grown on demand by the threaded driver.
+    peers: Vec<(Vec<T>, Vec<T>)>,
+    /// Kernel path + intra-rank thread count used by the packed entries.
+    sel: KernelCfg,
 }
 
 impl<T: Scalar> GemmWorkspace<T> {
+    /// Default selection: env-aware auto path (`DNTT_KERNEL` wins),
+    /// single-threaded.
     pub fn new() -> Self {
-        GemmWorkspace { pack_a: Vec::new(), pack_b: Vec::new() }
+        Self::with_kernel(KernelCfg::default())
+    }
+
+    /// Workspace pinned to an explicit kernel selection.
+    pub fn with_kernel(sel: KernelCfg) -> Self {
+        GemmWorkspace { pack_a: Vec::new(), pack_b: Vec::new(), peers: Vec::new(), sel }
+    }
+
+    /// Kernel selection the packed entry points dispatch through.
+    pub fn kernel(&self) -> KernelCfg {
+        self.sel
+    }
+
+    pub fn set_kernel(&mut self, sel: KernelCfg) {
+        self.sel = sel;
     }
 
     /// Bytes currently reserved by the packing buffers.
     pub fn capacity_bytes(&self) -> usize {
-        (self.pack_a.capacity() + self.pack_b.capacity()) * std::mem::size_of::<T>()
+        let peer: usize = self.peers.iter().map(|(a, b)| a.capacity() + b.capacity()).sum();
+        (self.pack_a.capacity() + self.pack_b.capacity() + peer) * std::mem::size_of::<T>()
     }
 }
 
@@ -180,42 +217,25 @@ pub fn matmul_a_bt_into_ws<T: Scalar>(
 // Packed register-blocked path.
 // ---------------------------------------------------------------------------
 
-/// 8×4 register-tile microkernel over packed slivers.
-///
-/// `pa` holds `kc` groups of [`MR`] A values (one per tile row), `pb`
-/// holds `kc` groups of [`NR`] B values. `acc` carries the running C tile
-/// in registers. Separate multiply/add (no FMA) and ascending-`k`
-/// accumulation keep the result bitwise equal to [`matmul_naive`].
-#[inline(always)]
-fn microkernel<T: Scalar>(kc: usize, pa: &[T], pb: &[T], acc: &mut [[T; NR]; MR]) {
-    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
-    for k in 0..kc {
-        let a = &pa[k * MR..k * MR + MR];
-        let b = &pb[k * NR..k * NR + NR];
-        for i in 0..MR {
-            let ai = a[i];
-            for j in 0..NR {
-                acc[i][j] = acc[i][j] + ai * b[j];
-            }
-        }
-    }
-}
-
 /// The shared BLIS-style loop nest: `C += op(A)·op(B)` with `op` expressed
 /// through the element loaders `la(i, k)` / `lb(k, j)` on the *logical*
-/// `m×k · k×n` problem. `c` must be pre-zeroed by the caller (the nest
-/// accumulates). Partial edge tiles are zero-padded during packing and
-/// masked on the C store, so any shape is handled.
+/// `m×k · k×n` problem. `c` is a row-major `m×n` slice pre-zeroed by the
+/// caller (the nest accumulates). Partial edge tiles are zero-padded
+/// during packing and masked on the C store, so any shape is handled. The
+/// register tile dispatches through `path` (validated by the driver).
+#[allow(clippy::too_many_arguments)]
 fn gemm_packed_nest<T: Scalar>(
     m: usize,
     k: usize,
     n: usize,
-    la: impl Fn(usize, usize) -> T,
-    lb: impl Fn(usize, usize) -> T,
-    c: &mut Mat<T>,
-    ws: &mut GemmWorkspace<T>,
+    la: impl Fn(usize, usize) -> T + Copy,
+    lb: impl Fn(usize, usize) -> T + Copy,
+    c: &mut [T],
+    path: KernelPath,
+    pack_a: &mut Vec<T>,
+    pack_b: &mut Vec<T>,
 ) {
-    debug_assert_eq!((c.rows(), c.cols()), (m, n));
+    debug_assert_eq!(c.len(), m * n);
     for jc in (0..n).step_by(NC) {
         let nc = (n - jc).min(NC);
         let nr_tiles = nc.div_ceil(NR);
@@ -223,8 +243,8 @@ fn gemm_packed_nest<T: Scalar>(
             let kc = (k - pc).min(KC);
             // Pack B[pc..pc+kc, jc..jc+nc] into NR-column slivers,
             // zero-padding the ragged last sliver.
-            ws.pack_b.clear();
-            ws.pack_b.resize(nr_tiles * kc * NR, T::zero());
+            pack_b.clear();
+            pack_b.resize(nr_tiles * kc * NR, T::zero());
             for jt in 0..nr_tiles {
                 let base = jt * kc * NR;
                 let j0 = jc + jt * NR;
@@ -232,7 +252,7 @@ fn gemm_packed_nest<T: Scalar>(
                 for kk in 0..kc {
                     let row = base + kk * NR;
                     for j in 0..jlim {
-                        ws.pack_b[row + j] = lb(pc + kk, j0 + j);
+                        pack_b[row + j] = lb(pc + kk, j0 + j);
                     }
                 }
             }
@@ -240,37 +260,37 @@ fn gemm_packed_nest<T: Scalar>(
                 let mc = (m - ic).min(MC);
                 let mr_tiles = mc.div_ceil(MR);
                 // Pack A[ic..ic+mc, pc..pc+kc] into MR-row slivers.
-                ws.pack_a.clear();
-                ws.pack_a.resize(mr_tiles * kc * MR, T::zero());
+                pack_a.clear();
+                pack_a.resize(mr_tiles * kc * MR, T::zero());
                 for it in 0..mr_tiles {
                     let base = it * kc * MR;
                     let i0 = ic + it * MR;
                     let ilim = (m - i0).min(MR);
                     for i in 0..ilim {
                         for kk in 0..kc {
-                            ws.pack_a[base + kk * MR + i] = la(i0 + i, pc + kk);
+                            pack_a[base + kk * MR + i] = la(i0 + i, pc + kk);
                         }
                     }
                 }
                 // Macro tile: every (jr, ir) pair runs the microkernel.
                 for jt in 0..nr_tiles {
-                    let pb = &ws.pack_b[jt * kc * NR..(jt + 1) * kc * NR];
+                    let pb = &pack_b[jt * kc * NR..(jt + 1) * kc * NR];
                     let j0 = jc + jt * NR;
                     let jlim = (n - j0).min(NR);
                     for it in 0..mr_tiles {
-                        let pa = &ws.pack_a[it * kc * MR..(it + 1) * kc * MR];
+                        let pa = &pack_a[it * kc * MR..(it + 1) * kc * MR];
                         let i0 = ic + it * MR;
                         let ilim = (m - i0).min(MR);
                         let mut acc = [[T::zero(); NR]; MR];
                         for i in 0..ilim {
-                            let crow = c.row(i0 + i);
+                            let crow = &c[(i0 + i) * n..(i0 + i) * n + n];
                             for j in 0..jlim {
                                 acc[i][j] = crow[j0 + j];
                             }
                         }
-                        microkernel(kc, pa, pb, &mut acc);
+                        microkernel(path, kc, pa, pb, &mut acc);
                         for i in 0..ilim {
-                            let crow = c.row_mut(i0 + i);
+                            let crow = &mut c[(i0 + i) * n..(i0 + i) * n + n];
                             for j in 0..jlim {
                                 crow[j0 + j] = acc[i][j];
                             }
@@ -282,56 +302,147 @@ fn gemm_packed_nest<T: Scalar>(
     }
 }
 
-/// `C = A · B` through the packed microkernel (any shape; bitwise equal to
+/// Shared packed-path driver: zeroes `C`, validates the kernel path, and
+/// either runs the loop nest serially or partitions the output row panels
+/// over a scoped thread pool (`sel.threads` workers, capped at one per MC
+/// panel). Threads own disjoint MC-aligned row chunks of `C` plus their
+/// own pack buffers, so every output element is produced by exactly one
+/// thread running the identical serial operation sequence — the threaded
+/// result is bitwise equal to the serial (and naive) one, and the
+/// partition depends only on `(m, sel.threads)`, never on scheduling.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_driver<T: Scalar>(
+    m: usize,
+    k: usize,
+    n: usize,
+    la: impl Fn(usize, usize) -> T + Copy + Send + Sync,
+    lb: impl Fn(usize, usize) -> T + Copy + Send + Sync,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+    sel: KernelCfg,
+) {
+    debug_assert_eq!((c.rows(), c.cols()), (m, n));
+    for x in c.as_mut_slice() {
+        *x = T::zero();
+    }
+    let path = sel.path.validated();
+    let panels = m.div_ceil(MC);
+    let nt = sel.threads.clamp(1, panels.max(1));
+    let GemmWorkspace { pack_a, pack_b, peers, .. } = ws;
+    if nt <= 1 {
+        gemm_packed_nest(m, k, n, la, lb, c.as_mut_slice(), path, pack_a, pack_b);
+        return;
+    }
+    // MC-aligned row chunks, one per thread; the calling thread takes
+    // chunk 0 with the primary pack buffers, spawned threads use peers.
+    let chunk = panels.div_ceil(nt) * MC;
+    if peers.len() < nt - 1 {
+        peers.resize_with(nt - 1, Default::default);
+    }
+    let (c0, mut rest) = c.as_mut_slice().split_at_mut(chunk.min(m) * n);
+    let mut jobs = Vec::new();
+    let mut base = chunk.min(m);
+    for (pa, pb) in peers.iter_mut() {
+        if base >= m {
+            break;
+        }
+        let rows = chunk.min(m - base);
+        let (mine, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+        rest = tail;
+        jobs.push((base, rows, mine, pa, pb));
+        base += rows;
+    }
+    std::thread::scope(|s| {
+        for (b0, rows, mine, pa, pb) in jobs {
+            s.spawn(move || {
+                gemm_packed_nest(rows, k, n, move |i, kk| la(b0 + i, kk), lb, mine, path, pa, pb);
+            });
+        }
+        gemm_packed_nest(chunk.min(m), k, n, la, lb, c0, path, pack_a, pack_b);
+    });
+}
+
+/// `C = A · B` through the packed microkernel with an explicit kernel
+/// selection (any shape; every path and thread count bitwise equal to
 /// [`matmul_naive`]).
+pub fn matmul_packed_with<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+    sel: KernelCfg,
+) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}",
+        a.rows(), a.cols(), b.rows(), b.cols());
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "matmul: bad out shape");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    gemm_packed_driver(m, k, n, |i, kk| a[(i, kk)], |kk, j| b[(kk, j)], c, ws, sel);
+}
+
+/// `C = A · B` through the packed microkernel (any shape; bitwise equal to
+/// [`matmul_naive`]). Dispatches through the workspace's kernel selection.
 pub fn matmul_packed_into<T: Scalar>(
     a: &Mat<T>,
     b: &Mat<T>,
     c: &mut Mat<T>,
     ws: &mut GemmWorkspace<T>,
 ) {
-    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}",
-        a.rows(), a.cols(), b.rows(), b.cols());
-    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "matmul: bad out shape");
-    for x in c.as_mut_slice() {
-        *x = T::zero();
-    }
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    gemm_packed_nest(m, k, n, &|i, kk| a[(i, kk)], &|kk, j| b[(kk, j)], c, ws);
+    let sel = ws.kernel();
+    matmul_packed_with(a, b, c, ws, sel);
+}
+
+/// `C = Aᵀ · B` through the packed microkernel with an explicit kernel
+/// selection (bitwise equal to `matmul_naive(&a.transpose(), b)`).
+pub fn matmul_at_b_packed_with<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+    sel: KernelCfg,
+) {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()));
+    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    gemm_packed_driver(m, k, n, |i, kk| a[(kk, i)], |kk, j| b[(kk, j)], c, ws, sel);
 }
 
 /// `C = Aᵀ · B` through the packed microkernel (bitwise equal to
-/// `matmul_naive(&a.transpose(), b)`).
+/// `matmul_naive(&a.transpose(), b)`). Uses the workspace's selection.
 pub fn matmul_at_b_packed_into<T: Scalar>(
     a: &Mat<T>,
     b: &Mat<T>,
     c: &mut Mat<T>,
     ws: &mut GemmWorkspace<T>,
 ) {
-    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
-    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()));
-    for x in c.as_mut_slice() {
-        *x = T::zero();
-    }
-    let (m, k, n) = (a.cols(), a.rows(), b.cols());
-    gemm_packed_nest(m, k, n, &|i, kk| a[(kk, i)], &|kk, j| b[(kk, j)], c, ws);
+    let sel = ws.kernel();
+    matmul_at_b_packed_with(a, b, c, ws, sel);
+}
+
+/// `C = A · Bᵀ` through the packed microkernel with an explicit kernel
+/// selection (bitwise equal to `matmul_naive(a, &b.transpose())`).
+pub fn matmul_a_bt_packed_with<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    ws: &mut GemmWorkspace<T>,
+    sel: KernelCfg,
+) {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()));
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    gemm_packed_driver(m, k, n, |i, kk| a[(i, kk)], |kk, j| b[(j, kk)], c, ws, sel);
 }
 
 /// `C = A · Bᵀ` through the packed microkernel (bitwise equal to
-/// `matmul_naive(a, &b.transpose())`).
+/// `matmul_naive(a, &b.transpose())`). Uses the workspace's selection.
 pub fn matmul_a_bt_packed_into<T: Scalar>(
     a: &Mat<T>,
     b: &Mat<T>,
     c: &mut Mat<T>,
     ws: &mut GemmWorkspace<T>,
 ) {
-    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
-    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()));
-    for x in c.as_mut_slice() {
-        *x = T::zero();
-    }
-    let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    gemm_packed_nest(m, k, n, &|i, kk| a[(i, kk)], &|kk, j| b[(j, kk)], c, ws);
+    let sel = ws.kernel();
+    matmul_a_bt_packed_with(a, b, c, ws, sel);
 }
 
 // ---------------------------------------------------------------------------
@@ -660,6 +771,48 @@ mod tests {
         let i = Mat::<f64>::eye(8);
         assert_close(&to64(&matmul(&a, &i)), &to64(&a), 1e-12).unwrap();
         assert_close(&to64(&matmul(&i, &a)), &to64(&a), 1e-12).unwrap();
+    }
+
+    #[test]
+    fn threaded_and_forced_paths_are_bitwise_identical() {
+        use crate::linalg::simd::{KernelCfg, KernelPath};
+        let mut rng = crate::util::rng::Rng::new(88);
+        let mut ws = GemmWorkspace::new();
+        // Shapes straddling the MC panel boundary so 2/4/8 threads all get
+        // real work (and some get none).
+        for &(m, k, n) in &[(2 * MC + 3, 65, 9), (MC, 40, NR), (17, 300, 33)] {
+            let a = Mat::<f64>::rand_uniform(m, k, &mut rng);
+            let b = Mat::<f64>::rand_uniform(k, n, &mut rng);
+            let naive = matmul_naive(&a, &b);
+            for path in KernelPath::available() {
+                for threads in [1usize, 2, 4, 8] {
+                    let mut c = Mat::zeros(m, n);
+                    matmul_packed_with(&a, &b, &mut c, &mut ws, KernelCfg::new(path, threads));
+                    assert_eq!(
+                        c.as_slice(),
+                        naive.as_slice(),
+                        "path {} threads {threads} shape {m}x{k}x{n}",
+                        path.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_path_downgrades_to_scalar() {
+        use crate::linalg::simd::{KernelCfg, KernelPath};
+        let mut rng = crate::util::rng::Rng::new(89);
+        let a = Mat::<f64>::rand_uniform(20, 30, &mut rng);
+        let b = Mat::<f64>::rand_uniform(30, 10, &mut rng);
+        let naive = matmul_naive(&a, &b);
+        // Every path, available on this host or not, must execute safely
+        // and produce the bitwise-identical result.
+        for path in KernelPath::ALL {
+            let mut c = Mat::zeros(20, 10);
+            matmul_packed_with(&a, &b, &mut c, &mut GemmWorkspace::new(), KernelCfg::new(path, 2));
+            assert_eq!(c.as_slice(), naive.as_slice(), "path {}", path.name());
+        }
     }
 
     #[test]

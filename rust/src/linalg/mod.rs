@@ -4,17 +4,22 @@
 //! re-implemented here: row-major matrices, blocked GEMM variants shaped
 //! like the NMF kernels (`X·Hᵀ`, `Wᵀ·X`, Gram products), CSR sparse
 //! matrices with the matching SpMM kernels ([`sparse`]), Jacobi symmetric
-//! eigendecomposition, one-sided-Jacobi thin SVD, Householder QR.
+//! eigendecomposition, one-sided-Jacobi thin SVD, Householder QR. The
+//! GEMM/SpMM inner kernels dispatch through runtime-selected SIMD paths
+//! with optional intra-rank threading ([`simd`]) — every path is bitwise
+//! identical to the scalar reference.
 
 pub mod eig;
 pub mod gemm;
 pub mod matrix;
 pub mod qr;
 pub mod scalar;
+pub mod simd;
 pub mod sparse;
 pub mod svd;
 
 pub use gemm::GemmWorkspace;
 pub use matrix::Mat;
 pub use scalar::Scalar;
+pub use simd::{KernelCfg, KernelPath, KernelPolicy};
 pub use sparse::{DenseOrSparse, SparseMat};

@@ -1,0 +1,715 @@
+//! Runtime-dispatched SIMD microkernels and the kernel-policy surface.
+//!
+//! This module owns everything about *which* inner kernel runs: the
+//! [`KernelPath`] enum (scalar / AVX2 / AVX-512 / NEON), the user-facing
+//! [`KernelPolicy`] (`auto` plus forced paths, overridable through the
+//! `DNTT_KERNEL` environment variable), the resolved per-call
+//! [`KernelCfg`] (path + intra-rank thread count), and the raw-intrinsic
+//! tile kernels themselves. `gemm.rs` and `sparse.rs` call back into the
+//! dispatchers here; `runtime::kernel` re-exports the policy types for
+//! the coordinator/CLI layer.
+//!
+//! ## Bitwise contract
+//!
+//! Every path performs the **identical IEEE-754 operation sequence per
+//! output element**: load the running value, then for ascending `k` a
+//! separate multiply and a separate add (no FMA), then store. SIMD lanes
+//! map across *output columns* (the NR direction of the register tile,
+//! the `j` direction of the SpMM axpy), which are element-wise
+//! independent, so vectorizing changes nothing about any single element's
+//! accumulation chain. `_mm256_mul_pd`/`_mm256_add_pd` (and the NEON
+//! equivalents) are correctly-rounded per lane exactly like the scalar
+//! ops, and zero-padded tile lanes are never stored. Hence every path is
+//! **bitwise identical** to the scalar reference — asserted exhaustively
+//! in `tests/kernel_conformance.rs`.
+//!
+//! The pinned toolchain predates AVX-512 intrinsic stabilization, so the
+//! `avx512` policy dispatches to the AVX2 tile (`avx512f` implies `avx2`);
+//! the policy name is kept so configs stay forward-compatible (see
+//! DESIGN.md §3.3).
+
+use super::scalar::Scalar;
+use std::any::TypeId;
+use std::sync::OnceLock;
+
+/// Microkernel register-tile rows (A sliver height).
+pub const MR: usize = 8;
+/// Microkernel register-tile columns (B sliver width) — also the f64 SIMD
+/// lane count: vector lanes map across output columns.
+pub const NR: usize = 4;
+
+/// Environment variable forcing the kernel policy process-wide. Takes
+/// precedence over `JobConfig.kernel` / CLI `--kernel` so a CI matrix can
+/// force every test through one path. Values: `auto`, `scalar`, `avx2`,
+/// `avx512`, `neon`; unknown values warn and are ignored.
+pub const DNTT_KERNEL_ENV: &str = "DNTT_KERNEL";
+
+/// An executable microkernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable scalar tile — always available, the bitwise reference.
+    Scalar,
+    /// AVX2 256-bit tile (x86_64).
+    Avx2,
+    /// AVX-512 policy name; executes the AVX2 tile on this toolchain
+    /// (`avx512f` implies `avx2`, see the module docs).
+    Avx512,
+    /// NEON 128-bit tile (aarch64).
+    Neon,
+}
+
+impl KernelPath {
+    /// Every path name, in preference order (best last).
+    pub const ALL: [KernelPath; 4] =
+        [KernelPath::Scalar, KernelPath::Avx2, KernelPath::Avx512, KernelPath::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Avx512 => "avx512",
+            KernelPath::Neon => "neon",
+        }
+    }
+
+    /// True when this host can execute the path (runtime feature
+    /// detection; cached internally by std).
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelPath::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => std::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx512 => std::is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            KernelPath::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            _ => false,
+        }
+    }
+
+    /// Paths this host can execute (always includes `Scalar`).
+    pub fn available() -> Vec<KernelPath> {
+        Self::ALL.into_iter().filter(|p| p.is_available()).collect()
+    }
+
+    /// The best path the host supports — what the `auto` policy picks.
+    pub fn best_available() -> KernelPath {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if KernelPath::Avx512.is_available() {
+                return KernelPath::Avx512;
+            }
+            if KernelPath::Avx2.is_available() {
+                return KernelPath::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if KernelPath::Neon.is_available() {
+                return KernelPath::Neon;
+            }
+        }
+        KernelPath::Scalar
+    }
+
+    /// Downgrade to `Scalar` when the host lacks the feature. The kernel
+    /// entry points call this once per GEMM/SpMM, which makes any
+    /// hand-constructed [`KernelCfg`] safe to execute.
+    pub fn validated(self) -> KernelPath {
+        if self.is_available() {
+            self
+        } else {
+            KernelPath::Scalar
+        }
+    }
+}
+
+/// User-facing kernel selection: `auto` or a forced path. Set per job
+/// (`JobConfig.kernel`, CLI `--kernel`) or process-wide through
+/// [`DNTT_KERNEL_ENV`] (which wins). Bitwise-neutral by the module
+/// contract, so it is excluded from job fingerprints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelPolicy {
+    /// Pick the best available path at runtime.
+    #[default]
+    Auto,
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl KernelPolicy {
+    pub const ALL: [KernelPolicy; 5] = [
+        KernelPolicy::Auto,
+        KernelPolicy::Scalar,
+        KernelPolicy::Avx2,
+        KernelPolicy::Avx512,
+        KernelPolicy::Neon,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPolicy::Auto => "auto",
+            KernelPolicy::Scalar => "scalar",
+            KernelPolicy::Avx2 => "avx2",
+            KernelPolicy::Avx512 => "avx512",
+            KernelPolicy::Neon => "neon",
+        }
+    }
+
+    /// Parse a policy name (case-insensitive, trimmed).
+    pub fn parse(s: &str) -> Option<KernelPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelPolicy::Auto),
+            "scalar" => Some(KernelPolicy::Scalar),
+            "avx2" => Some(KernelPolicy::Avx2),
+            "avx512" => Some(KernelPolicy::Avx512),
+            "neon" => Some(KernelPolicy::Neon),
+            _ => None,
+        }
+    }
+
+    /// The policy forced by [`DNTT_KERNEL_ENV`], if set. Unset or empty
+    /// means "no override"; an unknown value warns and is ignored.
+    pub fn from_env() -> Option<KernelPolicy> {
+        let v = std::env::var(DNTT_KERNEL_ENV).ok()?;
+        if v.trim().is_empty() {
+            return None;
+        }
+        let parsed = Self::parse(&v);
+        if parsed.is_none() {
+            log::warn!(
+                "ignoring unknown {DNTT_KERNEL_ENV}={v:?} \
+                 (expected auto|scalar|avx2|avx512|neon)"
+            );
+        }
+        parsed
+    }
+
+    /// Resolve to an executable path on this host. `Auto` picks the best
+    /// available; a forced path the host lacks warns and falls back to
+    /// scalar (results are bitwise identical either way).
+    pub fn resolve(self) -> KernelPath {
+        let forced = |p: KernelPath| {
+            if p.is_available() {
+                p
+            } else {
+                log::warn!(
+                    "kernel path {} unavailable on this host; falling back to scalar",
+                    p.name()
+                );
+                KernelPath::Scalar
+            }
+        };
+        match self {
+            KernelPolicy::Auto => KernelPath::best_available(),
+            KernelPolicy::Scalar => KernelPath::Scalar,
+            KernelPolicy::Avx2 => forced(KernelPath::Avx2),
+            KernelPolicy::Avx512 => forced(KernelPath::Avx512),
+            KernelPolicy::Neon => forced(KernelPath::Neon),
+        }
+    }
+}
+
+impl std::str::FromStr for KernelPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s).ok_or_else(|| {
+            format!("unknown kernel policy {s:?} (expected auto|scalar|avx2|avx512|neon)")
+        })
+    }
+}
+
+/// Process-wide default kernel path: the [`DNTT_KERNEL_ENV`] override
+/// when set, otherwise `auto`. Cached after first use, so it is what a
+/// default-constructed workspace dispatches through.
+pub fn default_path() -> KernelPath {
+    static DEFAULT: OnceLock<KernelPath> = OnceLock::new();
+    *DEFAULT.get_or_init(|| KernelPolicy::from_env().unwrap_or(KernelPolicy::Auto).resolve())
+}
+
+/// Resolved per-call kernel selection: which microkernel path runs and how
+/// many intra-rank threads partition the output row panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelCfg {
+    pub path: KernelPath,
+    /// Intra-rank worker threads over output row panels (1 = serial —
+    /// the default and the seed behavior).
+    pub threads: usize,
+}
+
+impl KernelCfg {
+    pub fn new(path: KernelPath, threads: usize) -> Self {
+        KernelCfg { path, threads: threads.max(1) }
+    }
+
+    /// The always-available reference selection.
+    pub fn scalar() -> Self {
+        KernelCfg { path: KernelPath::Scalar, threads: 1 }
+    }
+}
+
+impl Default for KernelCfg {
+    /// Env-aware auto path, single-threaded.
+    fn default() -> Self {
+        KernelCfg { path: default_path(), threads: 1 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Type-dispatch plumbing.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn is_t<T: 'static, U: 'static>() -> bool {
+    TypeId::of::<T>() == TypeId::of::<U>()
+}
+
+/// Reinterpret a slice of `T` as `U`. Callers must have proven `T == U`
+/// via [`is_t`], which makes the layouts identical.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn cast<T: 'static, U: 'static>(s: &[T]) -> &[U] {
+    debug_assert!(is_t::<T, U>());
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const U, s.len()) }
+}
+
+/// Reinterpret the accumulator tile. Same `T == U` requirement as [`cast`].
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn cast_acc<T: 'static, U: 'static>(acc: &mut [[T; NR]; MR]) -> &mut [[U; NR]; MR] {
+    debug_assert!(is_t::<T, U>());
+    unsafe { &mut *(acc as *mut [[T; NR]; MR] as *mut [[U; NR]; MR]) }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM register-tile microkernels.
+// ---------------------------------------------------------------------------
+
+/// Scalar reference tile — the exact operation sequence every SIMD path
+/// must reproduce bitwise. `pa` holds `kc` groups of [`MR`] A values,
+/// `pb` holds `kc` groups of [`NR`] B values; `acc` carries the running C
+/// tile. Separate multiply/add (no FMA), ascending `k`.
+#[inline(always)]
+pub(crate) fn microkernel_scalar<T: Scalar>(
+    kc: usize,
+    pa: &[T],
+    pb: &[T],
+    acc: &mut [[T; NR]; MR],
+) {
+    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    for k in 0..kc {
+        let a = &pa[k * MR..k * MR + MR];
+        let b = &pb[k * NR..k * NR + NR];
+        for i in 0..MR {
+            let ai = a[i];
+            for j in 0..NR {
+                acc[i][j] = acc[i][j] + ai * b[j];
+            }
+        }
+    }
+}
+
+/// AVX2 8×4 f64 tile: one 256-bit register (4 lanes = [`NR`] output
+/// columns) per tile row. `_mm256_mul_pd`/`_mm256_add_pd` round each lane
+/// exactly like the scalar ops, so the tile is bitwise equal to
+/// [`microkernel_scalar`].
+///
+/// # Safety
+/// Requires AVX2 (the dispatcher validates the path first).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_avx2_f64(kc: usize, pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let mut c = [_mm256_setzero_pd(); MR];
+    for (ci, row) in c.iter_mut().zip(acc.iter()) {
+        *ci = _mm256_loadu_pd(row.as_ptr());
+    }
+    for k in 0..kc {
+        let b = _mm256_loadu_pd(pb.as_ptr().add(k * NR));
+        let a = pa.as_ptr().add(k * MR);
+        for (i, ci) in c.iter_mut().enumerate() {
+            let ai = _mm256_set1_pd(*a.add(i));
+            *ci = _mm256_add_pd(*ci, _mm256_mul_pd(ai, b));
+        }
+    }
+    for (ci, row) in c.iter().zip(acc.iter_mut()) {
+        _mm256_storeu_pd(row.as_mut_ptr(), *ci);
+    }
+}
+
+/// x86 8×4 f32 tile: [`NR`] = 4 f32 lanes fit one 128-bit register, so
+/// the f32 tile uses SSE ops (baseline on x86_64) under the AVX2 path.
+///
+/// # Safety
+/// Requires AVX2 (implies SSE; the dispatcher validates the path first).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_x86_f32(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let mut c = [_mm_setzero_ps(); MR];
+    for (ci, row) in c.iter_mut().zip(acc.iter()) {
+        *ci = _mm_loadu_ps(row.as_ptr());
+    }
+    for k in 0..kc {
+        let b = _mm_loadu_ps(pb.as_ptr().add(k * NR));
+        let a = pa.as_ptr().add(k * MR);
+        for (i, ci) in c.iter_mut().enumerate() {
+            let ai = _mm_set1_ps(*a.add(i));
+            *ci = _mm_add_ps(*ci, _mm_mul_ps(ai, b));
+        }
+    }
+    for (ci, row) in c.iter().zip(acc.iter_mut()) {
+        _mm_storeu_ps(row.as_mut_ptr(), *ci);
+    }
+}
+
+/// NEON 8×4 f64 tile: two 128-bit registers (2 lanes each) per tile row.
+///
+/// # Safety
+/// Requires NEON (the dispatcher validates the path first).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mk_neon_f64(kc: usize, pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f64(0.0); MR];
+    let mut hi = [vdupq_n_f64(0.0); MR];
+    for i in 0..MR {
+        lo[i] = vld1q_f64(acc[i].as_ptr());
+        hi[i] = vld1q_f64(acc[i].as_ptr().add(2));
+    }
+    for k in 0..kc {
+        let b0 = vld1q_f64(pb.as_ptr().add(k * NR));
+        let b1 = vld1q_f64(pb.as_ptr().add(k * NR + 2));
+        let a = pa.as_ptr().add(k * MR);
+        for i in 0..MR {
+            let ai = vdupq_n_f64(*a.add(i));
+            lo[i] = vaddq_f64(lo[i], vmulq_f64(ai, b0));
+            hi[i] = vaddq_f64(hi[i], vmulq_f64(ai, b1));
+        }
+    }
+    for i in 0..MR {
+        vst1q_f64(acc[i].as_mut_ptr(), lo[i]);
+        vst1q_f64(acc[i].as_mut_ptr().add(2), hi[i]);
+    }
+}
+
+/// NEON 8×4 f32 tile: one 128-bit register (4 lanes = [`NR`]) per row.
+///
+/// # Safety
+/// Requires NEON (the dispatcher validates the path first).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mk_neon_f32(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::aarch64::*;
+    let mut c = [vdupq_n_f32(0.0); MR];
+    for (ci, row) in c.iter_mut().zip(acc.iter()) {
+        *ci = vld1q_f32(row.as_ptr());
+    }
+    for k in 0..kc {
+        let b = vld1q_f32(pb.as_ptr().add(k * NR));
+        let a = pa.as_ptr().add(k * MR);
+        for (i, ci) in c.iter_mut().enumerate() {
+            let ai = vdupq_n_f32(*a.add(i));
+            *ci = vaddq_f32(*ci, vmulq_f32(ai, b));
+        }
+    }
+    for (ci, row) in c.iter().zip(acc.iter_mut()) {
+        vst1q_f32(row.as_mut_ptr(), *ci);
+    }
+}
+
+/// Dispatch the 8×4 register-tile microkernel for `path`. `T` other than
+/// f32/f64 always runs the scalar tile. Callers must pass a path the host
+/// supports (use [`KernelPath::validated`] once per GEMM call).
+#[inline]
+pub(crate) fn microkernel<T: Scalar>(
+    path: KernelPath,
+    kc: usize,
+    pa: &[T],
+    pb: &[T],
+    acc: &mut [[T; NR]; MR],
+) {
+    debug_assert!(path.is_available());
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 | KernelPath::Avx512 => {
+            if is_t::<T, f64>() {
+                unsafe { mk_avx2_f64(kc, cast(pa), cast(pb), cast_acc(acc)) }
+            } else if is_t::<T, f32>() {
+                unsafe { mk_x86_f32(kc, cast(pa), cast(pb), cast_acc(acc)) }
+            } else {
+                microkernel_scalar(kc, pa, pb, acc)
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => {
+            if is_t::<T, f64>() {
+                unsafe { mk_neon_f64(kc, cast(pa), cast(pb), cast_acc(acc)) }
+            } else if is_t::<T, f32>() {
+                unsafe { mk_neon_f32(kc, cast(pa), cast(pb), cast_acc(acc)) }
+            } else {
+                microkernel_scalar(kc, pa, pb, acc)
+            }
+        }
+        _ => microkernel_scalar(kc, pa, pb, acc),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpMM axpy kernels (lanes across output columns).
+// ---------------------------------------------------------------------------
+
+fn axpy_scalar_f64(v: f64, x: &[f64], y: &mut [f64]) {
+    for (yj, &xj) in y.iter_mut().zip(x) {
+        *yj += v * xj;
+    }
+}
+
+/// # Safety
+/// Requires AVX2; `x.len() >= y.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2_f64(v: f64, x: &[f64], y: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    let vv = _mm256_set1_pd(v);
+    let mut j = 0;
+    while j + 4 <= n {
+        let xj = _mm256_loadu_pd(x.as_ptr().add(j));
+        let yj = _mm256_loadu_pd(y.as_ptr().add(j));
+        _mm256_storeu_pd(y.as_mut_ptr().add(j), _mm256_add_pd(yj, _mm256_mul_pd(vv, xj)));
+        j += 4;
+    }
+    while j < n {
+        *y.get_unchecked_mut(j) += v * *x.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// # Safety
+/// Requires NEON; `x.len() >= y.len()`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon_f64(v: f64, x: &[f64], y: &mut [f64]) {
+    use std::arch::aarch64::*;
+    let n = y.len();
+    let vv = vdupq_n_f64(v);
+    let mut j = 0;
+    while j + 2 <= n {
+        let xj = vld1q_f64(x.as_ptr().add(j));
+        let yj = vld1q_f64(y.as_ptr().add(j));
+        vst1q_f64(y.as_mut_ptr().add(j), vaddq_f64(yj, vmulq_f64(vv, xj)));
+        j += 2;
+    }
+    while j < n {
+        *y.get_unchecked_mut(j) += v * *x.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// `y[j] += v·x[j]` over contiguous slices — the SpMM inner loop. Lanes
+/// map across output columns with an ascending-`j` scalar tail; every
+/// element sees the same single multiply/add as the scalar loop, so all
+/// paths are bitwise identical.
+#[inline]
+pub(crate) fn axpy_f64(path: KernelPath, v: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert!(x.len() >= y.len());
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 | KernelPath::Avx512 => unsafe { axpy_avx2_f64(v, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => unsafe { axpy_neon_f64(v, x, y) },
+        _ => axpy_scalar_f64(v, x, y),
+    }
+}
+
+fn axpy_strided_scalar_f64(v: f64, x: &[f64], stride: usize, y: &mut [f64]) {
+    for (j, yj) in y.iter_mut().enumerate() {
+        *yj += v * x[j * stride];
+    }
+}
+
+/// # Safety
+/// Requires AVX2; `x` must cover index `(y.len()-1)·stride`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_strided_avx2_f64(v: f64, x: &[f64], stride: usize, y: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    let vv = _mm256_set1_pd(v);
+    let xp = x.as_ptr();
+    let mut j = 0;
+    while j + 4 <= n {
+        let xj = _mm256_set_pd(
+            *xp.add((j + 3) * stride),
+            *xp.add((j + 2) * stride),
+            *xp.add((j + 1) * stride),
+            *xp.add(j * stride),
+        );
+        let yj = _mm256_loadu_pd(y.as_ptr().add(j));
+        _mm256_storeu_pd(y.as_mut_ptr().add(j), _mm256_add_pd(yj, _mm256_mul_pd(vv, xj)));
+        j += 4;
+    }
+    while j < n {
+        *y.get_unchecked_mut(j) += v * *xp.add(j * stride);
+        j += 1;
+    }
+}
+
+/// # Safety
+/// Requires NEON; `x` must cover index `(y.len()-1)·stride`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_strided_neon_f64(v: f64, x: &[f64], stride: usize, y: &mut [f64]) {
+    use std::arch::aarch64::*;
+    let n = y.len();
+    let vv = vdupq_n_f64(v);
+    let xp = x.as_ptr();
+    let mut j = 0;
+    while j + 2 <= n {
+        let pair = [*xp.add(j * stride), *xp.add((j + 1) * stride)];
+        let xj = vld1q_f64(pair.as_ptr());
+        let yj = vld1q_f64(y.as_ptr().add(j));
+        vst1q_f64(y.as_mut_ptr().add(j), vaddq_f64(yj, vmulq_f64(vv, xj)));
+        j += 2;
+    }
+    while j < n {
+        *y.get_unchecked_mut(j) += v * *xp.add(j * stride);
+        j += 1;
+    }
+}
+
+/// `y[j] += v·x[j·stride]` — the A·Bᵀ column gather. The strided loads
+/// stay scalar (gathered into a vector high-to-low so lane `j` holds
+/// `x[j·stride]`); only the multiply/add vectorizes, so the per-element
+/// sequence still matches the scalar loop bitwise.
+#[inline]
+pub(crate) fn axpy_strided_f64(path: KernelPath, v: f64, x: &[f64], stride: usize, y: &mut [f64]) {
+    debug_assert!(y.is_empty() || (y.len() - 1) * stride < x.len());
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 | KernelPath::Avx512 => unsafe { axpy_strided_avx2_f64(v, x, stride, y) },
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => unsafe { axpy_strided_neon_f64(v, x, stride, y) },
+        _ => axpy_strided_scalar_f64(v, x, stride, y),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn policy_parse_roundtrip_and_rejects_unknown() {
+        for p in KernelPolicy::ALL {
+            assert_eq!(KernelPolicy::parse(p.name()), Some(p));
+            assert_eq!(p.name().parse::<KernelPolicy>().unwrap(), p);
+        }
+        assert_eq!(KernelPolicy::parse(" AVX2 "), Some(KernelPolicy::Avx2));
+        assert!(KernelPolicy::parse("sse9").is_none());
+        assert!("sse9".parse::<KernelPolicy>().is_err());
+        assert_eq!(KernelPolicy::default(), KernelPolicy::Auto);
+    }
+
+    #[test]
+    fn availability_is_coherent() {
+        assert!(KernelPath::Scalar.is_available());
+        let avail = KernelPath::available();
+        assert!(avail.contains(&KernelPath::Scalar));
+        let best = KernelPath::best_available();
+        assert!(best.is_available());
+        assert!(avail.contains(&best));
+        // Auto resolves to the best path; forced-unavailable downgrades.
+        assert_eq!(KernelPolicy::Auto.resolve(), best);
+        for p in KernelPath::ALL {
+            assert!(p.validated().is_available());
+        }
+    }
+
+    #[test]
+    fn cfg_defaults_and_clamping() {
+        let d = KernelCfg::default();
+        assert!(d.path.is_available());
+        assert_eq!(d.threads, 1);
+        assert_eq!(KernelCfg::new(KernelPath::Scalar, 0).threads, 1);
+        assert_eq!(KernelCfg::scalar().path, KernelPath::Scalar);
+    }
+
+    /// Every available path's tile must be bitwise equal to the scalar
+    /// tile on identical packed slivers (mixed-sign data, partial kc).
+    #[test]
+    fn microkernel_paths_match_scalar_bitwise() {
+        let mut rng = Rng::new(42);
+        for &kc in &[0usize, 1, 3, 17, 64, 257] {
+            let pa: Vec<f64> = (0..kc * MR).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let pb: Vec<f64> = (0..kc * NR).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let init: Vec<f64> = (0..MR * NR).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let load = |acc: &mut [[f64; NR]; MR]| {
+                for i in 0..MR {
+                    for j in 0..NR {
+                        acc[i][j] = init[i * NR + j];
+                    }
+                }
+            };
+            let mut reference = [[0.0; NR]; MR];
+            load(&mut reference);
+            microkernel_scalar(kc, &pa, &pb, &mut reference);
+            for path in KernelPath::available() {
+                let mut acc = [[0.0; NR]; MR];
+                load(&mut acc);
+                microkernel(path, kc, &pa, &pb, &mut acc);
+                assert_eq!(acc, reference, "path {} kc {}", path.name(), kc);
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_paths_match_scalar_bitwise_f32() {
+        let mut rng = Rng::new(43);
+        for &kc in &[1usize, 5, 33] {
+            let pa: Vec<f32> = (0..kc * MR).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+            let pb: Vec<f32> = (0..kc * NR).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+            let mut reference = [[0.0f32; NR]; MR];
+            microkernel_scalar(kc, &pa, &pb, &mut reference);
+            for path in KernelPath::available() {
+                let mut acc = [[0.0f32; NR]; MR];
+                microkernel(path, kc, &pa, &pb, &mut acc);
+                assert_eq!(acc, reference, "path {} kc {}", path.name(), kc);
+            }
+        }
+    }
+
+    /// Contiguous and strided axpy: every path bitwise equal to scalar,
+    /// including the non-multiple-of-lane tails.
+    #[test]
+    fn axpy_paths_match_scalar_bitwise() {
+        let mut rng = Rng::new(44);
+        for &n in &[0usize, 1, 2, 3, 4, 5, 7, 8, 31, 100] {
+            let v = rng.uniform() * 2.0 - 1.0;
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let y0: Vec<f64> = (0..n).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let mut reference = y0.clone();
+            axpy_scalar_f64(v, &x, &mut reference);
+            for path in KernelPath::available() {
+                let mut y = y0.clone();
+                axpy_f64(path, v, &x, &mut y);
+                assert_eq!(y, reference, "axpy path {} n {}", path.name(), n);
+            }
+            // Strided: x laid out with stride 3.
+            let stride = 3;
+            let xs: Vec<f64> =
+                (0..n.saturating_mul(stride)).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let mut sref = y0.clone();
+            axpy_strided_scalar_f64(v, &xs, stride, &mut sref);
+            for path in KernelPath::available() {
+                let mut y = y0.clone();
+                axpy_strided_f64(path, v, &xs, stride, &mut y);
+                assert_eq!(y, sref, "strided axpy path {} n {}", path.name(), n);
+            }
+        }
+    }
+}

@@ -23,12 +23,21 @@
 //! `tests/sparse_equivalence.rs`). On mixed-sign operands agreement is
 //! exact-to-roundoff but the `-0.0`/`+0.0` distinction may differ.
 //!
+//! Each kernel also has a `_with` form taking a
+//! [`KernelCfg`]: the inner axpy dispatches through the runtime-selected
+//! SIMD path (lanes across output columns) and the output rows are
+//! optionally partitioned over a scoped thread pool. Both knobs preserve
+//! the per-element accumulation sequence, so every path/thread
+//! combination stays bitwise identical to the serial scalar `_into` form
+//! (asserted in `tests/kernel_conformance.rs`).
+//!
 //! [`DenseOrSparse`] is the per-chunk dispatch type: one local block,
 //! stored whichever way the reshape decided (see
 //! [`crate::dist::dist_reshape_x`]), with the NMF choosing the kernel
 //! per call.
 
 use super::matrix::Mat;
+use super::simd::{axpy_f64, axpy_strided_f64, KernelCfg, KernelPath};
 use crate::error::{DnttError, Result};
 
 /// Row-major CSR sparse matrix of `f64` (the local sparse `X` block).
@@ -310,6 +319,177 @@ pub fn sp_matmul_a_bt(a: &SparseMat, b: &Mat<f64>) -> Mat<f64> {
 }
 
 // ---------------------------------------------------------------------------
+// Kernel-dispatched SpMM (`_with` forms): SIMD axpy + intra-rank threads.
+// ---------------------------------------------------------------------------
+
+/// Worker-thread count for a row partition: at least 1, at most one
+/// thread per output row (deterministic in `(threads, rows)` only).
+fn thread_count(threads: usize, rows: usize) -> usize {
+    threads.clamp(1, rows.max(1))
+}
+
+/// Rows `[r0, r1)` of `C = A·B` into `out` (row-major `(r1-r0)×n`).
+fn sp_matmul_rows(
+    a: &SparseMat,
+    b: &Mat<f64>,
+    out: &mut [f64],
+    r0: usize,
+    r1: usize,
+    path: KernelPath,
+) {
+    let n = b.cols();
+    for i in r0..r1 {
+        let crow = &mut out[(i - r0) * n..(i - r0) * n + n];
+        crow.fill(0.0);
+        let (cols, vals) = a.row(i);
+        for (&k, &v) in cols.iter().zip(vals) {
+            axpy_f64(path, v, b.row(k), crow);
+        }
+    }
+}
+
+/// [`sp_matmul_into`] with an explicit kernel selection: the inner axpy
+/// runs on the selected SIMD path (lanes across output columns) and the
+/// output rows split over `sel.threads` scoped threads. Bitwise identical
+/// to the serial scalar form for every selection.
+pub fn sp_matmul_with(a: &SparseMat, b: &Mat<f64>, c: &mut Mat<f64>, sel: KernelCfg) {
+    assert_eq!(a.cols(), b.rows(), "sp_matmul: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "sp_matmul: bad out shape");
+    let path = sel.path.validated();
+    let nt = thread_count(sel.threads, a.rows());
+    if nt <= 1 {
+        sp_matmul_rows(a, b, c.as_mut_slice(), 0, a.rows(), path);
+        return;
+    }
+    let n = b.cols();
+    let chunk = a.rows().div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = c.as_mut_slice();
+        let mut base = 0;
+        while base < a.rows() {
+            let rows = chunk.min(a.rows() - base);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            rest = tail;
+            let r0 = base;
+            s.spawn(move || sp_matmul_rows(a, b, mine, r0, r0 + rows, path));
+            base += rows;
+        }
+    });
+}
+
+/// Output rows `[p0, p1)` of `C = Aᵀ·B` into `out` (row-major
+/// `(p1-p0)×n`): scan every CSR row `k` in ascending order and apply only
+/// the nonzeros whose column lands in this chunk (binary search on the
+/// sorted per-row columns). Per output element the contribution order is
+/// ascending `k` — identical to the serial kernel.
+fn sp_at_b_cols(
+    a: &SparseMat,
+    b: &Mat<f64>,
+    out: &mut [f64],
+    p0: usize,
+    p1: usize,
+    path: KernelPath,
+) {
+    out.fill(0.0);
+    let n = b.cols();
+    for k in 0..a.rows() {
+        let (cols, vals) = a.row(k);
+        let lo = cols.partition_point(|&p| p < p0);
+        let hi = cols.partition_point(|&p| p < p1);
+        if lo == hi {
+            continue;
+        }
+        let brow = b.row(k);
+        for (&p, &v) in cols[lo..hi].iter().zip(&vals[lo..hi]) {
+            let crow = &mut out[(p - p0) * n..(p - p0) * n + n];
+            axpy_f64(path, v, brow, crow);
+        }
+    }
+}
+
+/// [`sp_matmul_at_b_into`] with an explicit kernel selection. Threads own
+/// disjoint *output*-row ranges (columns of the CSR matrix), each
+/// scanning all CSR rows in ascending `k`, so the per-element order — and
+/// hence the result — is bitwise identical to the serial scalar form.
+pub fn sp_matmul_at_b_with(a: &SparseMat, b: &Mat<f64>, c: &mut Mat<f64>, sel: KernelCfg) {
+    assert_eq!(a.rows(), b.rows(), "sp_matmul_at_b: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.cols(), b.cols()), "sp_matmul_at_b: bad out shape");
+    let path = sel.path.validated();
+    let nt = thread_count(sel.threads, a.cols());
+    if nt <= 1 {
+        sp_at_b_cols(a, b, c.as_mut_slice(), 0, a.cols(), path);
+        return;
+    }
+    let n = b.cols();
+    let chunk = a.cols().div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = c.as_mut_slice();
+        let mut base = 0;
+        while base < a.cols() {
+            let rows = chunk.min(a.cols() - base);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            rest = tail;
+            let p0 = base;
+            s.spawn(move || sp_at_b_cols(a, b, mine, p0, p0 + rows, path));
+            base += rows;
+        }
+    });
+}
+
+/// Rows `[r0, r1)` of `C = A·Bᵀ` into `out` (row-major `(r1-r0)×q`): the
+/// column gather runs through the strided axpy.
+fn sp_a_bt_rows(
+    a: &SparseMat,
+    b: &Mat<f64>,
+    out: &mut [f64],
+    r0: usize,
+    r1: usize,
+    path: KernelPath,
+) {
+    let q = b.rows();
+    let stride = b.cols();
+    out.fill(0.0);
+    if q == 0 {
+        return;
+    }
+    for i in r0..r1 {
+        let crow = &mut out[(i - r0) * q..(i - r0) * q + q];
+        let (cols, vals) = a.row(i);
+        for (&k, &v) in cols.iter().zip(vals) {
+            axpy_strided_f64(path, v, &b.as_slice()[k..], stride, crow);
+        }
+    }
+}
+
+/// [`sp_matmul_a_bt_into`] with an explicit kernel selection (row
+/// partition like [`sp_matmul_with`]; strided-gather axpy). Bitwise
+/// identical to the serial scalar form for every selection.
+pub fn sp_matmul_a_bt_with(a: &SparseMat, b: &Mat<f64>, c: &mut Mat<f64>, sel: KernelCfg) {
+    assert_eq!(a.cols(), b.cols(), "sp_matmul_a_bt: inner dims");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.rows()), "sp_matmul_a_bt: bad out shape");
+    let path = sel.path.validated();
+    let nt = thread_count(sel.threads, a.rows());
+    if nt <= 1 {
+        sp_a_bt_rows(a, b, c.as_mut_slice(), 0, a.rows(), path);
+        return;
+    }
+    let q = b.rows();
+    let chunk = a.rows().div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = c.as_mut_slice();
+        let mut base = 0;
+        while base < a.rows() {
+            let rows = chunk.min(a.rows() - base);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(rows * q);
+            rest = tail;
+            let r0 = base;
+            s.spawn(move || sp_a_bt_rows(a, b, mine, r0, r0 + rows, path));
+            base += rows;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Per-chunk dispatch.
 // ---------------------------------------------------------------------------
 
@@ -484,6 +664,35 @@ mod tests {
                 matmul_naive(&a, &bq.transpose()).as_slice(),
                 "A*Bt at density {density}"
             );
+        }
+    }
+
+    /// Every kernel path × thread count must reproduce the serial scalar
+    /// `_into` kernels bitwise (same ascending-k per-element order).
+    #[test]
+    fn with_kernels_match_into_bitwise_all_paths() {
+        let mut rng = Rng::new(17);
+        for &density in &[0.0, 0.1, 0.6] {
+            let a = sparse_rand(29, 23, density, &mut rng);
+            let sa = SparseMat::from_dense(&a);
+            let b = Mat::<f64>::rand_uniform(23, 9, &mut rng);
+            let bt = Mat::<f64>::rand_uniform(29, 9, &mut rng);
+            let bq = Mat::<f64>::rand_uniform(9, 23, &mut rng);
+            let (r1, r2, r3) = (sp_matmul(&sa, &b), sp_matmul_at_b(&sa, &bt), sp_matmul_a_bt(&sa, &bq));
+            for path in KernelPath::available() {
+                for threads in [1usize, 2, 4, 8] {
+                    let sel = KernelCfg::new(path, threads);
+                    let mut c = Mat::filled(29, 9, 5.0);
+                    sp_matmul_with(&sa, &b, &mut c, sel);
+                    assert_eq!(c.as_slice(), r1.as_slice(), "A*B {} t{threads}", path.name());
+                    let mut c = Mat::filled(23, 9, 5.0);
+                    sp_matmul_at_b_with(&sa, &bt, &mut c, sel);
+                    assert_eq!(c.as_slice(), r2.as_slice(), "At*B {} t{threads}", path.name());
+                    let mut c = Mat::filled(29, 9, 5.0);
+                    sp_matmul_a_bt_with(&sa, &bq, &mut c, sel);
+                    assert_eq!(c.as_slice(), r3.as_slice(), "A*Bt {} t{threads}", path.name());
+                }
+            }
         }
     }
 

@@ -127,6 +127,8 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         .opt("round", "", "TT-round the result to this tolerance (SVD; drops non-negativity)")
         .opt("trace-out", "", "export a Chrome/Perfetto trace of the run to this JSON file")
         .opt("metrics-out", "", "write the dntt-metrics-v1 envelope to this JSON file")
+        .opt("kernel", "auto", "GEMM/SpMM kernel: auto|scalar|avx2|avx512|neon (DNTT_KERNEL wins)")
+        .opt("threads-per-rank", "1", "intra-rank worker threads for the packed GEMM/SpMM loop")
         .flag("smoke", "CI preset: tiny synthetic 4-mode tensor on a 2x2x1x1 grid")
         .flag("prune", "prune all-zero rows/cols of each stage matrix before the NMF")
         .flag("keep-spill", "leave spill chunk files on disk after the job")
@@ -233,6 +235,8 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         } else {
             Some(dntt::obs::TraceConfig::default())
         },
+        kernel: a.get("kernel").parse()?,
+        threads_per_rank: a.usize("threads-per-rank")?.max(1),
         ..JobConfig::new(input, grid)
     };
     if job.checkpoint.is_none() && job.resume == ResumeMode::Auto {
@@ -340,6 +344,8 @@ fn cmd_submit(argv: &[String]) -> Result<(), String> {
         .opt("algo", "bcd", "NMF update rule: bcd|mu|hals")
         .opt("iters", "100", "NMF iterations per stage")
         .opt("seed", "42", "random seed")
+        .opt("kernel", "auto", "GEMM/SpMM kernel: auto|scalar|avx2|avx512|neon (serving host's DNTT_KERNEL wins)")
+        .opt("threads-per-rank", "1", "intra-rank worker threads for the packed GEMM/SpMM loop")
         .opt("priority", "normal", "admission priority: low|normal|high")
         .opt("tenant", "default", "fair-share accounting bucket (user/team name)")
         .opt("label", "", "display label for listings (default: the input's label)")
@@ -376,6 +382,8 @@ fn cmd_submit(argv: &[String]) -> Result<(), String> {
     spec.label = if a.get("label").is_empty() { None } else { Some(a.get("label").into()) };
     spec.trace = a.flag("trace");
     spec.check_error = !a.flag("no-check");
+    spec.kernel = a.get("kernel").into();
+    spec.threads_per_rank = a.usize("threads-per-rank")?.max(1);
     // Validate now (bad specs should fail at the submitter's terminal,
     // not inside the server) and surface the cache key.
     let job = spec.to_config().map_err(|e| e.to_string())?;

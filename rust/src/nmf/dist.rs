@@ -146,13 +146,22 @@ struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
+    /// Per-path flop counter for the kernel selection this workspace
+    /// dispatches through (tiny shapes may still take the scalar blocked
+    /// fallback; attribution follows the selected path).
+    fn path_ctr(&self) -> crate::obs::Ctr {
+        crate::obs::path_ctr(self.ws.kernel.gemm.kernel().path.validated())
+    }
+
     /// Global Gram `FᵀF` of a factor distributed by rows over the world,
     /// into the caller's reused `r × r` buffer.
     fn gram_global_into(&mut self, f: &Mat<f64>, g: &mut Mat<f64>) {
         let t0 = std::time::Instant::now();
         self.backend.gram_into(f, g, &mut self.ws.kernel);
         self.world.breakdown.add_secs(Cat::Gram, t0.elapsed().as_secs_f64());
-        crate::obs::count(crate::obs::Ctr::GemmFlops, (2 * f.rows() * self.r * self.r) as u64);
+        let flops = (2 * f.rows() * self.r * self.r) as u64;
+        crate::obs::count(crate::obs::Ctr::GemmFlops, flops);
+        crate::obs::count(self.path_ctr(), flops);
         self.world.all_reduce_sum(g.as_mut_slice());
     }
 
@@ -162,6 +171,7 @@ impl<'a> Ctx<'a> {
         // Gather H^(j) across the column communicator.
         let parts = self.col.all_gather_varied(ht.as_slice());
         let nj: usize = parts.iter().map(|p| p.len()).sum::<usize>() / self.r;
+        let pctr = self.path_ctr();
         let ws = &mut *self.ws;
         ws.gathered.resize_for_overwrite(nj, self.r);
         let mut off = 0;
@@ -176,10 +186,13 @@ impl<'a> Ctx<'a> {
                 self.backend.xht_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
                 let flops = (2 * x.rows() * x.cols() * self.r) as u64;
                 crate::obs::count(crate::obs::Ctr::GemmFlops, flops);
+                crate::obs::count(pctr, flops);
             }
             XRef::Sparse(x) => {
                 self.backend.xht_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
-                crate::obs::count(crate::obs::Ctr::SpmmFlops, (2 * x.nnz() * self.r) as u64);
+                let flops = (2 * x.nnz() * self.r) as u64;
+                crate::obs::count(crate::obs::Ctr::SpmmFlops, flops);
+                crate::obs::count(pctr, flops);
             }
         }
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());
@@ -196,6 +209,7 @@ impl<'a> Ctx<'a> {
         // Gather W^(i) across the row communicator.
         let parts = self.row.all_gather_varied(w.as_slice());
         let mi: usize = parts.iter().map(|p| p.len()).sum::<usize>() / self.r;
+        let pctr = self.path_ctr();
         let ws = &mut *self.ws;
         ws.gathered.resize_for_overwrite(mi, self.r);
         let mut off = 0;
@@ -210,10 +224,13 @@ impl<'a> Ctx<'a> {
                 self.backend.wtx_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
                 let flops = (2 * x.rows() * x.cols() * self.r) as u64;
                 crate::obs::count(crate::obs::Ctr::GemmFlops, flops);
+                crate::obs::count(pctr, flops);
             }
             XRef::Sparse(x) => {
                 self.backend.wtx_sparse_into(x, &ws.gathered, &mut ws.prod, &mut ws.kernel);
-                crate::obs::count(crate::obs::Ctr::SpmmFlops, (2 * x.nnz() * self.r) as u64);
+                let flops = (2 * x.nnz() * self.r) as u64;
+                crate::obs::count(crate::obs::Ctr::SpmmFlops, flops);
+                crate::obs::count(pctr, flops);
             }
         }
         self.world.breakdown.add_secs(Cat::MatMul, t0.elapsed().as_secs_f64());

@@ -17,6 +17,7 @@
 //! it is read, so a warm workspace is bitwise identical to a fresh one
 //! (asserted in `tests/gemm_kernels.rs`).
 
+use crate::linalg::simd::KernelCfg;
 use crate::linalg::Mat;
 use crate::runtime::backend::KernelWorkspace;
 
@@ -38,6 +39,21 @@ pub struct NmfWorkspace {
 impl NmfWorkspace {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Workspace whose GEMM/SpMM calls run an explicit kernel selection
+    /// (SIMD path + intra-rank threads). `new()` keeps the env-aware
+    /// default (auto path, 1 thread). Selection is bitwise-neutral, so a
+    /// warm workspace re-pinned to another path stays bitwise identical.
+    pub fn with_kernel(sel: KernelCfg) -> Self {
+        let mut ws = Self::default();
+        ws.kernel.gemm.set_kernel(sel);
+        ws
+    }
+
+    /// Kernel selection threaded through the backend calls.
+    pub fn kernel_sel(&self) -> KernelCfg {
+        self.kernel.gemm.kernel()
     }
 
     /// Bytes currently reserved across all buffers (diagnostic).

@@ -79,10 +79,21 @@ pub enum Ctr {
     PrefixModesReused,
     /// TT/HT modes recomputed because the query prefix diverged.
     PrefixModesComputed,
+    /// Flops executed on the scalar kernel path (subset of
+    /// `GemmFlops + SpmmFlops`, split by the path that actually ran so
+    /// the trace shows which microkernel served the job).
+    FlopsScalar,
+    /// Flops executed on the AVX2 kernel path.
+    FlopsAvx2,
+    /// Flops executed on the AVX-512 kernel path (AVX2 tile on this
+    /// toolchain — see `runtime::kernel`).
+    FlopsAvx512,
+    /// Flops executed on the NEON kernel path.
+    FlopsNeon,
 }
 
 /// Number of counter slots (length of the per-rank array).
-pub const NUM_CTRS: usize = Ctr::PrefixModesComputed as usize + 1;
+pub const NUM_CTRS: usize = Ctr::FlopsNeon as usize + 1;
 
 /// Every counter, in array-layout order.
 pub const ALL_CTRS: [Ctr; NUM_CTRS] = [
@@ -111,6 +122,10 @@ pub const ALL_CTRS: [Ctr; NUM_CTRS] = [
     Ctr::Queries,
     Ctr::PrefixModesReused,
     Ctr::PrefixModesComputed,
+    Ctr::FlopsScalar,
+    Ctr::FlopsAvx2,
+    Ctr::FlopsAvx512,
+    Ctr::FlopsNeon,
 ];
 
 impl Ctr {
@@ -142,13 +157,31 @@ impl Ctr {
             Ctr::Queries => "queries",
             Ctr::PrefixModesReused => "prefix_modes_reused",
             Ctr::PrefixModesComputed => "prefix_modes_computed",
+            Ctr::FlopsScalar => "flops_scalar",
+            Ctr::FlopsAvx2 => "flops_avx2",
+            Ctr::FlopsAvx512 => "flops_avx512",
+            Ctr::FlopsNeon => "flops_neon",
         }
     }
 
     /// `true` for counters that are a pure function of the job config
     /// (bytes/calls/flops/hits); `false` for wall-clock `*_ns` counters.
+    /// The per-path flop counters are deterministic for a fixed host and
+    /// `DNTT_KERNEL` setting (the path is resolved once per process).
     pub fn is_deterministic(self) -> bool {
         !matches!(self, Ctr::AgNs | Ctr::ArNs | Ctr::RscNs | Ctr::CkptNs)
+    }
+}
+
+/// The per-path flop counter for a kernel path (see
+/// [`crate::linalg::simd::KernelPath`]).
+pub fn path_ctr(path: crate::linalg::simd::KernelPath) -> Ctr {
+    use crate::linalg::simd::KernelPath;
+    match path {
+        KernelPath::Scalar => Ctr::FlopsScalar,
+        KernelPath::Avx2 => Ctr::FlopsAvx2,
+        KernelPath::Avx512 => Ctr::FlopsAvx512,
+        KernelPath::Neon => Ctr::FlopsNeon,
     }
 }
 
@@ -193,6 +226,17 @@ mod tests {
                 c.name()
             );
         }
+    }
+
+    #[test]
+    fn path_ctr_maps_every_path_to_a_distinct_counter() {
+        use crate::linalg::simd::KernelPath;
+        let mut ctrs: Vec<usize> =
+            KernelPath::ALL.into_iter().map(|p| path_ctr(p) as usize).collect();
+        ctrs.sort_unstable();
+        ctrs.dedup();
+        assert_eq!(ctrs.len(), KernelPath::ALL.len());
+        assert_eq!(path_ctr(KernelPath::Scalar), Ctr::FlopsScalar);
     }
 
     #[test]

@@ -39,7 +39,7 @@
 mod metrics;
 mod trace;
 
-pub use metrics::{counters_json, Ctr, ALL_CTRS, NUM_CTRS};
+pub use metrics::{counters_json, path_ctr, Ctr, ALL_CTRS, NUM_CTRS};
 pub use trace::{
     arm, armed, disarm, Event, ObsReport, RankTrace, SpanKind, SpanToken,
     TraceCollector, TraceConfig, NO_LABEL, TRACE_ENABLED,

@@ -1,0 +1,54 @@
+//! Kernel-policy surface for the coordinator/CLI layer.
+//!
+//! The types live in [`crate::linalg::simd`] (the dispatchers need them
+//! below the runtime layer); this module re-exports them and documents
+//! the selection contract the job layer plumbs through.
+//!
+//! ## Selection precedence
+//!
+//! 1. **`DNTT_KERNEL` env var** ([`DNTT_KERNEL_ENV`]) — process-wide
+//!    force, wins over everything. This is how the CI kernel matrix runs
+//!    the whole test suite under each path.
+//! 2. **`JobConfig.kernel`** / CLI `--kernel` — per-job policy.
+//! 3. **`auto`** — the default: best available path at runtime.
+//!
+//! | policy   | executes                                   |
+//! |----------|--------------------------------------------|
+//! | `auto`   | best available (avx512 → avx2 → neon → scalar) |
+//! | `scalar` | portable reference tile                    |
+//! | `avx2`   | AVX2 tile (x86_64)                         |
+//! | `avx512` | AVX2 tile (`avx512f` implies `avx2`; named for forward compat) |
+//! | `neon`   | NEON tile (aarch64)                        |
+//!
+//! A forced path the host lacks warns and falls back to scalar. The
+//! companion knob `JobConfig.threads_per_rank` sizes the intra-rank
+//! thread pool that partitions output row panels (default 1).
+//!
+//! ## Why this is safe to flip freely
+//!
+//! Every path and thread count produces **bitwise identical** results
+//! (the lane/thread mapping preserves each output element's accumulation
+//! sequence — see `crate::linalg::simd` and DESIGN.md §3.3), so kernel
+//! selection is excluded from job fingerprints: a job forced to `scalar`
+//! may resume a checkpoint written under `avx2` and vice versa, and the
+//! JobServer result cache is shared across policies.
+
+pub use crate::linalg::simd::{
+    default_path, KernelCfg, KernelPath, KernelPolicy, DNTT_KERNEL_ENV,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reexports_resolve() {
+        // The re-exported surface is the linalg one (same types). The
+        // default cfg follows the env-aware process default (which may be
+        // forced by DNTT_KERNEL in the CI kernel matrix).
+        assert_eq!(KernelCfg::default().path, default_path());
+        assert!(KernelPolicy::Auto.resolve().is_available());
+        assert!(KernelPath::Scalar.is_available());
+        assert_eq!(DNTT_KERNEL_ENV, "DNTT_KERNEL");
+    }
+}

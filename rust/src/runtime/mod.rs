@@ -3,11 +3,13 @@
 //! AOT-compiled JAX/Pallas artifacts through the `xla` crate.
 
 pub mod backend;
+pub mod kernel;
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
 
 pub use backend::ComputeBackend;
+pub use kernel::{KernelCfg, KernelPath, KernelPolicy};
 pub use manifest::Manifest;
 pub use native::NativeBackend;
 pub use pjrt::{PjrtBackend, PjrtEngine};

@@ -5,7 +5,7 @@
 
 use super::backend::{ComputeBackend, KernelWorkspace, MU_EPS};
 use crate::linalg::gemm::{gram_mt_m_into, matmul_at_b_into_ws, matmul_into_ws};
-use crate::linalg::sparse::{sp_matmul_at_b_into, sp_matmul_into, SparseMat};
+use crate::linalg::sparse::{sp_matmul_at_b_with, sp_matmul_with, SparseMat};
 use crate::linalg::Mat;
 
 /// Native backend built on `crate::linalg`.
@@ -103,11 +103,12 @@ impl ComputeBackend for NativeBackend {
         x: &SparseMat,
         ht: &Mat<f64>,
         out: &mut Mat<f64>,
-        _ws: &mut KernelWorkspace,
+        ws: &mut KernelWorkspace,
     ) {
-        // The SpMM zeroes every output row itself.
+        // The SpMM zeroes every output row itself; the kernel selection
+        // (SIMD path + intra-rank threads) rides on the GEMM workspace.
         out.resize_for_overwrite(x.rows(), ht.cols());
-        sp_matmul_into(x, ht, out);
+        sp_matmul_with(x, ht, out, ws.gemm.kernel());
     }
 
     fn wtx_sparse_into(
@@ -115,10 +116,10 @@ impl ComputeBackend for NativeBackend {
         x: &SparseMat,
         w: &Mat<f64>,
         out: &mut Mat<f64>,
-        _ws: &mut KernelWorkspace,
+        ws: &mut KernelWorkspace,
     ) {
         out.resize_for_overwrite(x.cols(), w.cols());
-        sp_matmul_at_b_into(x, w, out);
+        sp_matmul_at_b_with(x, w, out, ws.gemm.kernel());
     }
 
     fn name(&self) -> &'static str {

@@ -11,7 +11,7 @@
 use crate::dist::checkpoint::{self, CkptCtx};
 use crate::dist::{dist_reshape_x, Comm, Grid2d, Layout, ProcGrid, SharedStore, TensorBlock};
 use crate::error::{DnttError, Result};
-use crate::linalg::Mat;
+use crate::linalg::{KernelCfg, Mat};
 use crate::nmf::{dist_nmf_pruned_x_obs_ws, IterObserver, NmfConfig, NmfStats, NmfWorkspace};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::TTensor;
@@ -89,6 +89,11 @@ pub struct TtOutput {
 ///   `dntt-ckpt-v1` manifest exists — skip completed stages, rehydrating
 ///   the cores and this rank's remainder chunk byte-exactly so the
 ///   resumed run's factors are bitwise identical to an uninterrupted one.
+/// * `kernel` — GEMM/SpMM kernel selection (SIMD path + intra-rank
+///   threads) pinned to this rank's workspace. Bitwise-neutral:
+///   every selection yields factors identical to
+///   [`KernelCfg::scalar`]. Pass [`KernelCfg::default`] for the
+///   env-aware auto choice (`DNTT_KERNEL` honored).
 #[allow(clippy::too_many_arguments)]
 pub fn dist_ntt(
     world: &mut Comm,
@@ -101,6 +106,7 @@ pub fn dist_ntt(
     my_block: TensorBlock,
     backend: &dyn ComputeBackend,
     cfg: &TtConfig,
+    kernel: KernelCfg,
     ckpt: Option<&CkptCtx>,
 ) -> Result<TtOutput> {
     let d = dims.len();
@@ -150,8 +156,9 @@ pub fn dist_ntt(
     }
     // One workspace per rank, shared by every stage NMF: the packed-GEMM
     // panels and update temporaries warm up once and are reused, so the
-    // sweep's inner iterations allocate nothing.
-    let mut ws = NmfWorkspace::new();
+    // sweep's inner iterations allocate nothing. The kernel selection is
+    // pinned here and rides the workspace through every stage.
+    let mut ws = NmfWorkspace::with_kernel(kernel);
 
     for l in start_stage..d - 1 {
         let stage_span = crate::obs::span_begin();
@@ -278,6 +285,7 @@ pub fn ntt_on_threads(
             TensorBlock::Dense(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
+            KernelCfg::default(),
             None,
         )
     });
@@ -314,6 +322,7 @@ pub fn ntt_sparse_on_threads(
             TensorBlock::Sparse(my),
             &crate::runtime::native::NativeBackend,
             &cfg,
+            KernelCfg::default(),
             None,
         )
     });

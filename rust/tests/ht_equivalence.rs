@@ -92,7 +92,8 @@ fn p4_factors_bitwise_identical_across_ranks_and_runs() {
             let (mut row, mut col) = grid.make_subcomms(&mut world);
             dist_nht(
                 &mut world, &mut row, &mut col, &store, &pg, grid, &dims,
-                TensorBlock::Dense(my), &NativeBackend, &c, None,
+                TensorBlock::Dense(my), &NativeBackend, &c,
+                dntt::linalg::KernelCfg::default(), None,
             )
             .unwrap()
         })

@@ -1,0 +1,287 @@
+//! Kernel-conformance battery (ISSUE 9): every compiled-in SIMD path and
+//! every thread count must be **bitwise identical** to the scalar
+//! reference on every GEMM layout, every SpMM layout, and end to end
+//! through the distributed NMF.
+//!
+//! The contract under test (see `linalg/simd.rs`): vector lanes map
+//! across output columns (the NR direction) and threads partition output
+//! row panels, so every output element sees the exact ascending-k
+//! separate-multiply/add sequence of `matmul_naive` — SIMD width and
+//! thread count change *which hardware* produces an element, never the
+//! operation order behind it. Every comparison here is `assert_eq!` on
+//! the raw slices, not tolerance-based.
+//!
+//! These tests force paths explicitly via `KernelCfg`, so they prove the
+//! same thing no matter what `DNTT_KERNEL` says; the CI kernel-matrix
+//! job additionally reruns the whole suite under `DNTT_KERNEL=scalar`
+//! and `=auto` to force every *implicit* dispatch site too.
+
+use dntt::dist::{Comm, Grid2d};
+use dntt::linalg::gemm::{
+    matmul, matmul_a_bt_packed_with, matmul_at_b_packed_with, matmul_naive, matmul_packed_with,
+    GemmWorkspace,
+};
+use dntt::linalg::sparse::{
+    sp_matmul, sp_matmul_a_bt, sp_matmul_a_bt_with, sp_matmul_at_b, sp_matmul_at_b_with,
+    sp_matmul_with, SparseMat,
+};
+use dntt::linalg::{KernelCfg, KernelPath, Mat, Scalar};
+use dntt::nmf::{dist_nmf_ws, NmfAlgo, NmfConfig, NmfWorkspace};
+use dntt::runtime::native::NativeBackend;
+use dntt::util::rng::Rng;
+
+/// The satellite's edge-shape grid: zero, sub-tile, exact-tile (MR = 8,
+/// NR = 4), one-past-tile, and the packing-block edges.
+const DIMS: [usize; 12] = [0, 1, 3, 5, 7, 8, 15, 16, 17, 63, 64, 65];
+
+/// Thread counts swept by the threaded conformance tests.
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn rand_mat<T: Scalar>(rows: usize, cols: usize, rng: &mut Rng) -> Mat<T> {
+    // Mixed signs: exercises cancellation, where operation *order* shows.
+    Mat::from_fn(rows, cols, |_, _| T::fromf(rng.uniform() * 2.0 - 1.0))
+}
+
+/// Dense non-negative matrix with exact zeros at the given density.
+fn sparse_x(m: usize, n: usize, density: f64, rng: &mut Rng) -> Mat<f64> {
+    Mat::from_fn(m, n, |_, _| {
+        if rng.uniform() < density {
+            0.5 + rng.uniform()
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Every available path × every (m, k, n) in DIMS³ × all three layouts:
+/// bitwise equal to `matmul_naive` on the same logical product.
+fn all_paths_match_naive_all_layouts<T: Scalar>() {
+    let mut rng = Rng::new(0x91);
+    let mut ws = GemmWorkspace::<T>::new();
+    let paths = KernelPath::available();
+    assert!(paths.contains(&KernelPath::Scalar));
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let a = rand_mat::<T>(m, k, &mut rng);
+                let b = rand_mat::<T>(k, n, &mut rng);
+                let naive = matmul_naive(&a, &b);
+                let at = a.transpose(); // k×m storage for the Aᵀ·B layout
+                let bt = b.transpose(); // n×k storage for the A·Bᵀ layout
+                for &path in &paths {
+                    let sel = KernelCfg::new(path, 1);
+                    let mut c = rand_mat::<T>(m, n, &mut rng); // stale contents
+                    matmul_packed_with(&a, &b, &mut c, &mut ws, sel);
+                    assert_eq!(
+                        c.as_slice(),
+                        naive.as_slice(),
+                        "{} {path:?} A*B != naive at {m}x{k}x{n}",
+                        T::NAME
+                    );
+                    matmul_at_b_packed_with(&at, &b, &mut c, &mut ws, sel);
+                    assert_eq!(
+                        c.as_slice(),
+                        naive.as_slice(),
+                        "{} {path:?} At*B != naive at {m}x{k}x{n}",
+                        T::NAME
+                    );
+                    matmul_a_bt_packed_with(&a, &bt, &mut c, &mut ws, sel);
+                    assert_eq!(
+                        c.as_slice(),
+                        naive.as_slice(),
+                        "{} {path:?} A*Bt != naive at {m}x{k}x{n}",
+                        T::NAME
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_paths_match_naive_all_layouts_f64() {
+    all_paths_match_naive_all_layouts::<f64>();
+}
+
+#[test]
+fn all_paths_match_naive_all_layouts_f32() {
+    all_paths_match_naive_all_layouts::<f32>();
+}
+
+/// Unavailable paths are downgraded to scalar at the entry point, never
+/// executed: forcing every enum variant is safe on every host and still
+/// bitwise exact.
+#[test]
+fn forcing_unavailable_paths_is_safe_and_exact() {
+    let mut rng = Rng::new(0x92);
+    let mut ws = GemmWorkspace::<f64>::new();
+    let a = rand_mat::<f64>(33, 65, &mut rng);
+    let b = rand_mat::<f64>(65, 9, &mut rng);
+    let naive = matmul_naive(&a, &b);
+    for path in KernelPath::ALL {
+        let mut c = Mat::zeros(33, 9);
+        matmul_packed_with(&a, &b, &mut c, &mut ws, KernelCfg::new(path, 2));
+        assert_eq!(c.as_slice(), naive.as_slice(), "{path:?} (possibly downgraded)");
+    }
+}
+
+/// Threads partition MC-aligned output row panels: every (path × thread
+/// count) is bitwise equal to the serial scalar run, including shapes
+/// with more threads than panels and zero-sized edges.
+#[test]
+fn threaded_gemm_is_bitwise_identical_to_serial() {
+    let mut rng = Rng::new(0x93);
+    let mut ws = GemmWorkspace::<f64>::new();
+    // m spans: below one MC panel (128), exactly MC, several panels +
+    // remainder; plus degenerate k/n edges.
+    for &(m, k, n) in &[
+        (300usize, 65usize, 9usize),
+        (128, 40, 4),
+        (17, 300, 33),
+        (513, 16, 7),
+        (256, 0, 5),
+        (0, 8, 8),
+    ] {
+        let a = rand_mat::<f64>(m, k, &mut rng);
+        let b = rand_mat::<f64>(k, n, &mut rng);
+        let naive = matmul_naive(&a, &b);
+        for &path in &KernelPath::available() {
+            for &t in &THREADS {
+                let mut c = rand_mat::<f64>(m, n, &mut rng);
+                matmul_packed_with(&a, &b, &mut c, &mut ws, KernelCfg::new(path, t));
+                assert_eq!(
+                    c.as_slice(),
+                    naive.as_slice(),
+                    "{path:?} t={t} != naive at {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+}
+
+/// Every SpMM layout × path × thread count × density (empty, 1%, half,
+/// full) is bitwise equal to the scalar `_into` reference — which the
+/// seed test suite already proves equal to the dense naive product.
+#[test]
+fn spmm_all_paths_match_scalar_reference_across_densities() {
+    let mut rng = Rng::new(0x94);
+    let (m, k, r) = (67, 45, 5);
+    for &density in &[0.0f64, 0.01, 0.5, 1.0] {
+        let xd = sparse_x(m, k, density, &mut rng);
+        let xs = SparseMat::from_dense(&xd);
+        let bh = Mat::<f64>::rand_uniform(k, r, &mut rng); // X·B
+        let bw = Mat::<f64>::rand_uniform(m, r, &mut rng); // Xᵀ·B
+        let bt = Mat::<f64>::rand_uniform(r, k, &mut rng); // X·Bᵀ
+        let want_ab = sp_matmul(&xs, &bh);
+        let want_atb = sp_matmul_at_b(&xs, &bw);
+        let want_abt = sp_matmul_a_bt(&xs, &bt);
+        // The scalar path also matches the dense naive product bitwise
+        // (zero-skip only ever drops exact +0.0·x terms).
+        assert_eq!(want_ab.as_slice(), matmul_naive(&xd, &bh).as_slice(), "d={density}");
+        for &path in &KernelPath::available() {
+            for &t in &THREADS {
+                let sel = KernelCfg::new(path, t);
+                let mut out = rand_mat::<f64>(m, r, &mut rng);
+                sp_matmul_with(&xs, &bh, &mut out, sel);
+                assert_eq!(out.as_slice(), want_ab.as_slice(), "{path:?} t={t} d={density} A*B");
+                let mut out = rand_mat::<f64>(k, r, &mut rng);
+                sp_matmul_at_b_with(&xs, &bw, &mut out, sel);
+                assert_eq!(out.as_slice(), want_atb.as_slice(), "{path:?} t={t} d={density} At*B");
+                let mut out = rand_mat::<f64>(m, r, &mut rng);
+                sp_matmul_a_bt_with(&xs, &bt, &mut out, sel);
+                assert_eq!(out.as_slice(), want_abt.as_slice(), "{path:?} t={t} d={density} A*Bt");
+            }
+        }
+    }
+}
+
+/// A workspace warmed by a *threaded* run must stay bitwise neutral for
+/// whatever runs through it next (peer pack buffers and panel sizing
+/// leave no residue), including after switching back to serial scalar.
+#[test]
+fn warm_threaded_workspace_is_bitwise_neutral() {
+    let mut rng = Rng::new(0x95);
+    let mut warm = GemmWorkspace::<f64>::new();
+    let a = rand_mat::<f64>(300, 200, &mut rng);
+    let b = rand_mat::<f64>(200, 24, &mut rng);
+    let mut c = Mat::zeros(300, 24);
+    let best = KernelPath::best_available();
+    matmul_packed_with(&a, &b, &mut c, &mut warm, KernelCfg::new(best, 4));
+    for &m in &[1usize, 8, 65, 130] {
+        for &n in &[1usize, 4, 9] {
+            let k = 65;
+            let a = rand_mat::<f64>(m, k, &mut rng);
+            let b = rand_mat::<f64>(k, n, &mut rng);
+            for sel in [KernelCfg::scalar(), KernelCfg::new(best, 2)] {
+                let mut from_warm = Mat::zeros(m, n);
+                matmul_packed_with(&a, &b, &mut from_warm, &mut warm, sel);
+                let mut from_fresh = Mat::zeros(m, n);
+                matmul_packed_with(&a, &b, &mut from_fresh, &mut GemmWorkspace::new(), sel);
+                assert_eq!(
+                    from_warm.as_slice(),
+                    from_fresh.as_slice(),
+                    "warm != fresh at {m}x{k}x{n} ({:?} t={})",
+                    sel.path,
+                    sel.threads
+                );
+            }
+        }
+    }
+}
+
+/// End to end: a distributed NMF on a 2×2 grid pinned to forced-scalar
+/// serial is bitwise identical to the same job on every available SIMD
+/// path with 4 intra-rank threads, for every update rule.
+#[test]
+fn dist_nmf_is_bitwise_invariant_across_kernel_selections() {
+    let (m, n) = (26, 33);
+    let mut rng = Rng::new(0x96);
+    let x = {
+        let a = Mat::<f64>::rand_uniform(m, 3, &mut rng);
+        let b = Mat::<f64>::rand_uniform(3, n, &mut rng);
+        matmul(&a, &b)
+    };
+    let mut sels = vec![KernelCfg::scalar()];
+    for path in KernelPath::available() {
+        sels.push(KernelCfg::new(path, 4));
+    }
+    for algo in [NmfAlgo::Bcd, NmfAlgo::Mu, NmfAlgo::Hals] {
+        let grid = Grid2d::new(2, 2);
+        let cfg = NmfConfig { rank: 3, max_iters: 25, algo, ..Default::default() };
+        let mut reference: Option<(Vec<f64>, Vec<f64>)> = None;
+        for &sel in &sels {
+            let (x2, cfg2) = (x.clone(), cfg.clone());
+            let outs = Comm::run(grid.size(), move |mut world| {
+                let (i, j) = grid.coords(world.rank());
+                let rows = dntt::dist::BlockDim::new(m, grid.pr);
+                let cols = dntt::dist::BlockDim::new(n, grid.pc);
+                let xb = Mat::from_fn(rows.size_of(i), cols.size_of(j), |a, b| {
+                    x2[(rows.start_of(i) + a, cols.start_of(j) + b)]
+                });
+                let (mut row, mut col) = grid.make_subcomms(&mut world);
+                let mut ws = NmfWorkspace::with_kernel(sel);
+                dist_nmf_ws(
+                    &xb, m, n, grid, &mut world, &mut row, &mut col, &NativeBackend, &cfg2,
+                    &mut ws,
+                )
+                .unwrap()
+            });
+            let got = (outs[0].w.as_slice().to_vec(), outs[0].ht.as_slice().to_vec());
+            match &reference {
+                None => reference = Some(got),
+                Some((w, ht)) => {
+                    assert_eq!(
+                        &got.0, w,
+                        "{algo:?}: W differs under {:?} t={}",
+                        sel.path, sel.threads
+                    );
+                    assert_eq!(
+                        &got.1, ht,
+                        "{algo:?}: H differs under {:?} t={}",
+                        sel.path, sel.threads
+                    );
+                }
+            }
+        }
+    }
+}

@@ -319,6 +319,97 @@ fn prop_nmf_monotone_objective() {
     });
 }
 
+/// Kernel-dispatch contract (DESIGN.md §3.3): every kernel selection —
+/// any [`KernelPath`] (available or not: unavailable paths downgrade to
+/// scalar), any thread count — is *bitwise* identical to
+/// [`matmul_naive`] on random shapes across all three packed layouts,
+/// and the SpMM dispatchers are bitwise identical to their scalar
+/// reference kernels at random densities. Shapes are biased toward the
+/// MR/NR register-tile remainders (multiples of 8/4 and their ±1
+/// neighbours) and the empty edges (0-sized dims), so the property
+/// doubles as an out-of-bounds probe on the remainder tiles.
+#[test]
+fn prop_kernel_selections_bitwise_match_naive() {
+    use dntt::linalg::gemm::{
+        matmul_a_bt_packed_with, matmul_at_b_packed_with, matmul_naive, matmul_packed_with,
+        GemmWorkspace,
+    };
+    use dntt::linalg::sparse::{
+        sp_matmul, sp_matmul_a_bt, sp_matmul_a_bt_with, sp_matmul_at_b, sp_matmul_at_b_with,
+        sp_matmul_with, SparseMat,
+    };
+    use dntt::linalg::{KernelCfg, KernelPath};
+    use dntt::util::rng::Rng;
+
+    /// Register-tile-hostile dimension: 0, tiny, or 8k / 8k±1.
+    fn dim(rng: &mut Rng) -> usize {
+        match rng.below(5) {
+            0 => rng.below(2),                    // 0 or 1: empty / degenerate
+            1 => 1 + rng.below(8),                // inside one register tile
+            2 => 8 * (1 + rng.below(8)),          // exact MR multiples
+            3 => 8 * (1 + rng.below(8)) + 1,      // one past a full tile
+            _ => 8 * (1 + rng.below(8)) - 1,      // one short of a full tile
+        }
+    }
+
+    check_cases(9009, 30, |rng| {
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        // Mixed-sign entries: bitwise identity must not depend on the
+        // non-negativity the NMF callers happen to provide.
+        let a = Mat::<f64>::from_fn(m, k, |_, _| rng.uniform() - 0.5);
+        let b = Mat::<f64>::from_fn(k, n, |_, _| rng.uniform() - 0.5);
+        let want = matmul_naive(&a, &b);
+        // Random selection, including paths this host cannot run.
+        let path = KernelPath::ALL[rng.below(KernelPath::ALL.len())];
+        let threads = 1 + rng.below(8);
+        let sel = KernelCfg::new(path, threads);
+        let mut ws = GemmWorkspace::<f64>::new();
+        // Stale-filled output: the drivers must overwrite every element.
+        let mut c = Mat::<f64>::from_fn(m, n, |_, _| f64::NAN);
+        matmul_packed_with(&a, &b, &mut c, &mut ws, sel);
+        if c.as_slice() != want.as_slice() {
+            return Err(format!("A·B {m}x{k}x{n} {} t={threads} != naive", path.name()));
+        }
+        let at = a.transpose();
+        c.as_mut_slice().fill(f64::NAN);
+        matmul_at_b_packed_with(&at, &b, &mut c, &mut ws, sel);
+        if c.as_slice() != want.as_slice() {
+            return Err(format!("Aᵀ·B {m}x{k}x{n} {} t={threads} != naive", path.name()));
+        }
+        let bt = b.transpose();
+        c.as_mut_slice().fill(f64::NAN);
+        matmul_a_bt_packed_with(&a, &bt, &mut c, &mut ws, sel);
+        if c.as_slice() != want.as_slice() {
+            return Err(format!("A·Bᵀ {m}x{k}x{n} {} t={threads} != naive", path.name()));
+        }
+        // SpMM at a random density (incl. the all-zero and dense edges)
+        // against the scalar reference kernels, same selection.
+        let density = [0.0, 0.01, 0.3, 1.0][rng.below(4)];
+        let x = Mat::<f64>::from_fn(m, k, |_, _| {
+            if rng.uniform() < density { rng.uniform() - 0.5 } else { 0.0 }
+        });
+        let xs = SparseMat::from_dense(&x);
+        let mut got = Mat::<f64>::from_fn(m, n, |_, _| f64::NAN);
+        sp_matmul_with(&xs, &b, &mut got, sel);
+        if got.as_slice() != sp_matmul(&xs, &b).as_slice() {
+            return Err(format!("SpMM A·B d={density} {} t={threads}", path.name()));
+        }
+        let wmat = Mat::<f64>::from_fn(m, n, |_, _| rng.uniform() - 0.5);
+        let mut got_t = Mat::<f64>::from_fn(k, n, |_, _| f64::NAN);
+        sp_matmul_at_b_with(&xs, &wmat, &mut got_t, sel);
+        if got_t.as_slice() != sp_matmul_at_b(&xs, &wmat).as_slice() {
+            return Err(format!("SpMM Aᵀ·B d={density} {} t={threads}", path.name()));
+        }
+        let h = Mat::<f64>::from_fn(n, k, |_, _| rng.uniform() - 0.5);
+        let mut got_bt = Mat::<f64>::from_fn(m, n, |_, _| f64::NAN);
+        sp_matmul_a_bt_with(&xs, &h, &mut got_bt, sel);
+        if got_bt.as_slice() != sp_matmul_a_bt(&xs, &h).as_slice() {
+            return Err(format!("SpMM A·Bᵀ d={density} {} t={threads}", path.name()));
+        }
+        Ok(())
+    });
+}
+
 /// Tensor reshape linearity: unfold-left then reshape back is the identity,
 /// for arbitrary shapes.
 #[test]
