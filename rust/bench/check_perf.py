@@ -66,6 +66,26 @@ def check_metrics(path: str) -> int:
     if comm_bytes <= 0:
         warn("zero communication bytes across all collectives")
 
+    # Out-of-core accounting (DESIGN.md §2.12): a budgeted run must
+    # report its peak-resident gauge, and the peak must respect the
+    # budget — that ceiling is the acceptance criterion of the
+    # out-of-core milestone, so a breach is worth a loud warning even
+    # though this gate never fails the build.
+    mem = env.get("memory")
+    if mem is not None:
+        peak = int(mem.get("peak_resident_bytes", 0))
+        budget = mem.get("budget_bytes")
+        if peak <= 0:
+            warn("memory section present but the peak-resident gauge never moved")
+        if budget is not None:
+            if peak > int(budget):
+                warn(
+                    f"peak resident {peak} B exceeds the configured "
+                    f"budget {budget} B — out-of-core streaming regressed"
+                )
+            else:
+                print(f"  memory: peak resident {peak} B within budget {budget} B")
+
     totals = env.get("counters", {}).get("totals", {})
     ctr_bytes = sum(int(totals.get(k, 0)) for k in ("ag_bytes", "ar_bytes", "rsc_bytes"))
     if ctr_bytes != comm_bytes:

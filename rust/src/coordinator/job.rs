@@ -58,9 +58,31 @@ pub enum InputSpec {
     Video(VideoConfig),
     /// A caller-provided dense tensor.
     Dense(Arc<DenseTensor<f64>>),
+    /// An on-disk `dntt-chunks-v1` chunk set ([`crate::tensor::ChunkSet`])
+    /// — the out-of-core path. Blocks are adopted file-in-place by the
+    /// chunk store; the full tensor is never materialized. Dims and
+    /// content identity are captured at [`InputSpec::from_chunks`] time
+    /// so fingerprinting needs no re-read.
+    File {
+        dir: PathBuf,
+        dims: Vec<usize>,
+        /// [`crate::tensor::ChunkSet::identity`] (FNV over manifest CRCs).
+        identity: u64,
+    },
 }
 
 impl InputSpec {
+    /// Open a `dntt-chunks-v1` directory as a job input, validating the
+    /// manifest and capturing its dims and content identity.
+    pub fn from_chunks(dir: &std::path::Path) -> crate::error::Result<InputSpec> {
+        let cs = crate::tensor::ChunkSet::open(dir)?;
+        Ok(InputSpec::File {
+            dir: dir.to_path_buf(),
+            dims: cs.dims().to_vec(),
+            identity: cs.identity(),
+        })
+    }
+
     pub fn dims(&self) -> Vec<usize> {
         match self {
             InputSpec::Synthetic(s) => s.dims.clone(),
@@ -68,6 +90,7 @@ impl InputSpec {
             InputSpec::Faces(c) => vec![c.height, c.width, c.illuminations, c.subjects],
             InputSpec::Video(c) => vec![c.height, c.width, c.channels, c.frames],
             InputSpec::Dense(t) => t.dims().to_vec(),
+            InputSpec::File { dims, .. } => dims.clone(),
         }
     }
 
@@ -90,6 +113,9 @@ impl InputSpec {
             InputSpec::Faces(c) => Some(Arc::new(crate::data::generate_faces(c))),
             InputSpec::Video(c) => Some(Arc::new(crate::data::generate_video(c))),
             InputSpec::Dense(t) => Some(t.clone()),
+            // Out-of-core by definition; error checking reads chunks back
+            // lazily instead.
+            InputSpec::File { .. } => None,
         }
     }
 
@@ -100,6 +126,7 @@ impl InputSpec {
             InputSpec::Faces(_) => "faces".into(),
             InputSpec::Video(_) => "video".into(),
             InputSpec::Dense(t) => format!("dense{:?}", t.dims()),
+            InputSpec::File { dims, .. } => format!("file{dims:?}"),
         }
     }
 
@@ -121,6 +148,11 @@ impl InputSpec {
                 // The tensor content itself is the identity.
                 let h = fnv1a(t.as_slice().iter().flat_map(|x| x.to_le_bytes()));
                 format!("dense|{:?}|{h:016x}", t.dims())
+            }
+            // Content-addressed via the manifest CRCs: the same chunk set
+            // copied to another directory fingerprints identically.
+            InputSpec::File { dims, identity, .. } => {
+                format!("file|{dims:?}|{identity:016x}")
             }
         }
     }
@@ -215,6 +247,15 @@ pub struct JobConfig {
     /// fingerprint for the same reason: threading partitions output
     /// panels without changing any per-element operation order.
     pub threads_per_rank: usize,
+    /// Peak-resident memory budget in bytes for the chunk store (CLI
+    /// `--budget-mb`, None = unbounded). Enables budgeted batch assembly
+    /// in `dist_reshape_x` and — when `spill` is `SpillMode::Memory` —
+    /// upgrades the store to mmap-backed spill so chunk bytes stay on
+    /// disk. Excluded from [`JobConfig::fingerprint`]: the streamed path
+    /// is bitwise-identical to the resident path
+    /// (`tests/oo_core.rs`), so budgeted and unbudgeted runs share
+    /// checkpoints and cache entries.
+    pub budget: Option<u64>,
 }
 
 impl JobConfig {
@@ -235,6 +276,7 @@ impl JobConfig {
             trace: None,
             kernel: crate::linalg::KernelPolicy::default(),
             threads_per_rank: 1,
+            budget: None,
         }
     }
 

@@ -150,6 +150,13 @@ pub struct JobReport {
     /// cache key, surfaced so operators can correlate reports, cache
     /// entries, and metrics envelopes.
     pub fingerprint: Option<u64>,
+    /// High-water mark of chunk-store resident bytes across all attempts
+    /// ([`crate::dist::SharedStore`] `MemStats`) — the out-of-core
+    /// acceptance signal. Set by the coordinator after construction.
+    pub peak_resident_bytes: Option<u64>,
+    /// The configured memory budget ([`JobConfig::budget`]), echoed so
+    /// envelope consumers can check peak ≤ budget without the config.
+    pub budget_bytes: Option<u64>,
     pub output: DecompOutput,
 }
 
@@ -180,6 +187,8 @@ impl JobReport {
             pjrt_hits,
             obs,
             fingerprint: None,
+            peak_resident_bytes: None,
+            budget_bytes: None,
             output,
         }
     }
@@ -227,6 +236,20 @@ impl JobReport {
             s.push_str(&format!("rel error     : {:.6}\n", e));
         }
         s.push_str(&format!("wall time     : {:.3}s\n", self.wall_secs));
+        if let Some(peak) = self.peak_resident_bytes {
+            match self.budget_bytes {
+                Some(b) => s.push_str(&format!(
+                    "peak resident : {:.2} MiB (budget {:.2} MiB)\n",
+                    peak as f64 / (1 << 20) as f64,
+                    b as f64 / (1 << 20) as f64,
+                )),
+                None if peak > 0 => s.push_str(&format!(
+                    "peak resident : {:.2} MiB\n",
+                    peak as f64 / (1 << 20) as f64
+                )),
+                None => {}
+            }
+        }
         if self.pjrt_hits > 0 {
             s.push_str(&format!("pjrt op hits  : {}\n", self.pjrt_hits));
         }
@@ -382,7 +405,23 @@ impl JobReport {
             fields.push(("modeled", breakdown_json(m)));
             fields.push(("modeled_total", Json::Num(m.total_secs())));
         }
+        if let Some(mem) = self.memory_json() {
+            fields.push(("memory", mem));
+        }
         Json::obj(fields)
+    }
+
+    /// The `memory` section shared by [`JobReport::to_json`] and
+    /// [`JobReport::metrics_json`]: present whenever the coordinator
+    /// recorded a peak (always for jobs run through `run_job`), with the
+    /// budget echoed when one was configured.
+    fn memory_json(&self) -> Option<Json> {
+        let peak = self.peak_resident_bytes?;
+        let mut f = vec![("peak_resident_bytes", Json::Num(peak as f64))];
+        if let Some(b) = self.budget_bytes {
+            f.push(("budget_bytes", Json::Num(b as f64)));
+        }
+        Some(Json::obj(f))
     }
 
     /// The versioned `dntt-metrics-v1` envelope (the `--metrics-out`
@@ -452,6 +491,9 @@ impl JobReport {
                 .collect(),
         );
         fields.push(("collectives", collectives));
+        if let Some(mem) = self.memory_json() {
+            fields.push(("memory", mem));
+        }
         if let Some(o) = &self.obs {
             fields.push(("counters", o.counters_section_json()));
             fields.push((

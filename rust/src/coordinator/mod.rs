@@ -24,7 +24,7 @@ pub use server::{
 pub use spool::{JobSpec, PendingJob, Spool};
 
 use crate::dist::checkpoint::{self, CkptCtx};
-use crate::dist::{faults, Comm, Lease, SharedStore, TensorBlock};
+use crate::dist::{faults, Comm, Lease, SharedStore, SpillMode, TensorBlock};
 use crate::error::{DnttError, Result};
 use crate::runtime::{NativeBackend, PjrtBackend, PjrtEngine};
 use crate::ttrain::driver::{dist_ntt, extract_block};
@@ -97,6 +97,41 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
     }
     let p = job.grid.size();
     let grid2 = job.grid.to_2d();
+    // File inputs: open + validate the chunk set once; ranks adopt their
+    // chunk files through the shared handle.
+    let chunkset = match &job.input {
+        InputSpec::File { dir, .. } => {
+            let cs = crate::tensor::ChunkSet::open(dir)?;
+            if cs.grid() != job.grid.dims() {
+                return Err(DnttError::config(format!(
+                    "chunk set grid {:?} must equal the processor grid {:?} \
+                     (dntt-chunks-v1 maps chunk c to rank c)",
+                    cs.grid(),
+                    job.grid.dims()
+                )));
+            }
+            Some(Arc::new(cs))
+        }
+        _ => None,
+    };
+    // Resolve the effective spill mode: a memory budget over a pure
+    // in-memory store upgrades to mmap-backed spill in a temp directory,
+    // since only mapped chunks can stay off the heap (DESIGN.md §2.12).
+    let spill = match (&job.spill, job.budget) {
+        (SpillMode::Memory, Some(b)) => {
+            static OO_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            let dir = std::env::temp_dir().join(format!(
+                "dntt_oo_{}_{}",
+                std::process::id(),
+                OO_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            ));
+            log::info!(
+                "memory budget {b} B with in-memory store: upgrading to mmap-backed spill at {dir:?}"
+            );
+            SpillMode::Mmap(dir)
+        }
+        _ => job.spill.clone(),
+    };
     let dense = job.input.materialize();
     let engine: Option<Arc<PjrtEngine>> = match &job.backend {
         BackendChoice::Native => None,
@@ -117,17 +152,23 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
     // lost rank the world is relaunched with `resume` forced on.
     let mut resume = job.resume == ResumeMode::Auto;
     let mut attempt = 0usize;
+    // Peak resident bytes across attempts (max, not last: a lost attempt
+    // still occupied memory).
+    let mut peak_resident = 0u64;
     let mut outs: Vec<Result<DecompOutput>> = loop {
         // A fresh store per attempt: a poisoned world may leave
         // partially-published arrays behind (the store's Drop cleans any
         // spill files).
-        let store = SharedStore::new(job.spill.clone());
+        let store = SharedStore::new(spill.clone());
         store.set_keep_spill(job.keep_spill);
+        store.set_budget(job.budget);
+        let mem = Arc::clone(store.stats());
         let ckpt_ctx = job
             .checkpoint
             .clone()
             .map(|policy| CkptCtx { policy, config_hash, resume });
         let input = job.input.clone();
+        let chunkset2 = chunkset.clone();
         let grid = job.grid.clone();
         let decomp = job.decomp;
         let tt_cfg = job.tt.clone();
@@ -151,8 +192,13 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
             let block = match (&input, &dense2) {
                 (InputSpec::Synthetic(s), _) => TensorBlock::Dense(s.block(&grid, rank)?),
                 (InputSpec::SyntheticSparse(s), _) => TensorBlock::Sparse(s.block(&grid, rank)),
+                // Chunk c feeds rank c: the file is adopted in place, so
+                // the block never touches this rank's heap.
+                (InputSpec::File { .. }, _) => {
+                    chunkset2.as_ref().expect("chunk set opened for File inputs").block(rank)?
+                }
                 (_, Some(t)) => TensorBlock::Dense(extract_block(t, &grid, rank)),
-                _ => unreachable!("non-synthetic inputs materialize"),
+                _ => unreachable!("non-synthetic, non-file inputs materialize"),
             };
             let (mut row, mut col) = grid2.make_subcomms(&mut world);
             // One driver call per (decomposition, backend) choice.
@@ -187,6 +233,7 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
             Exec::Lease(lease) => lease.run_world(body),
         }));
         crate::obs::disarm();
+        peak_resident = peak_resident.max(mem.peak_resident_bytes());
         match world_run {
             Ok(outs) => break outs,
             Err(payload) => {
@@ -219,6 +266,12 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
         }
     };
     let wall_secs = t0.elapsed().as_secs_f64();
+    // An auto-upgraded spill dir is ours to tidy: the store's Drop already
+    // removed the chunk files, so this only deletes the empty directory
+    // (and silently leaves it when keep_spill retained the files).
+    if let (SpillMode::Memory, SpillMode::Mmap(d)) = (&job.spill, &spill) {
+        let _ = std::fs::remove_dir(d);
+    }
     // Propagate the first error, if any.
     let mut output = None;
     for o in outs.drain(..) {
@@ -253,6 +306,8 @@ fn run_job_impl(job: &JobConfig, exec: Exec<'_>) -> Result<JobReport> {
         .unwrap_or(0);
     let obs = collector.map(|c| c.take_report());
     let mut report = JobReport::new(job, output, wall_secs, rel_error, modeled, pjrt_hits, obs);
+    report.peak_resident_bytes = Some(peak_resident);
+    report.budget_bytes = job.budget;
     if job.checkpoint.is_some() {
         // Already computed above for the checkpoint manifests; surface it
         // so server-run reports carry their cache key.

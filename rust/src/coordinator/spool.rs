@@ -39,8 +39,12 @@ pub const JOB_FORMAT: &str = "dntt-job-v1";
 /// `dntt serve` runs. Mirrors the `dntt decompose` flag surface.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobSpec {
-    /// Input kind: `synthetic|sparse|faces|video`.
+    /// Input kind: `synthetic|sparse|faces|video|file`.
     pub input: String,
+    /// `dntt-chunks-v1` directory (`file` input).
+    pub file: Option<PathBuf>,
+    /// Chunk-store memory budget in MiB (0 = unbounded).
+    pub budget_mb: u64,
     /// Tensor dims (synthetic|sparse inputs).
     pub dims: Vec<usize>,
     /// Generator TT ranks (synthetic input; `dims.len() - 1` entries).
@@ -79,6 +83,8 @@ impl Default for JobSpec {
         // Matches the `dntt decompose` defaults.
         JobSpec {
             input: "synthetic".into(),
+            file: None,
+            budget_mb: 0,
             dims: vec![16, 16, 16, 16],
             true_ranks: vec![4, 4, 4],
             density: 0.01,
@@ -142,6 +148,12 @@ impl JobSpec {
         if let Some(l) = &self.label {
             f.push(("label", Json::Str(l.clone())));
         }
+        if let Some(p) = &self.file {
+            f.push(("file", Json::Str(p.to_string_lossy().into_owned())));
+        }
+        if self.budget_mb > 0 {
+            f.push(("budget_mb", Json::Num(self.budget_mb as f64)));
+        }
         Json::obj(f)
     }
 
@@ -200,8 +212,14 @@ impl JobSpec {
             Json::Null => None,
             v => Some(v.as_str().ok_or_else(|| bad("label"))?.to_string()),
         };
+        let file = match j.get("file") {
+            Json::Null => None,
+            v => Some(PathBuf::from(v.as_str().ok_or_else(|| bad("file"))?)),
+        };
         Ok(JobSpec {
             input: str_or("input", &d.input)?,
+            file,
+            budget_mb: num_or("budget_mb", 0.0)? as u64,
             dims: usize_arr("dims", &d.dims)?,
             true_ranks: usize_arr("true_ranks", &d.true_ranks)?,
             density: num_or("density", d.density)?,
@@ -255,9 +273,15 @@ impl JobSpec {
             }
             "faces" => InputSpec::Faces(FaceConfig::default()),
             "video" => InputSpec::Video(VideoConfig::default()),
+            "file" => {
+                let dir = self.file.as_ref().ok_or_else(|| {
+                    DnttError::config("job spec: input 'file' needs a 'file' chunk-set path")
+                })?;
+                InputSpec::from_chunks(dir)?
+            }
             other => {
                 return Err(DnttError::config(format!(
-                    "job spec: unknown input '{other}' (synthetic|sparse|faces|video)"
+                    "job spec: unknown input '{other}' (synthetic|sparse|faces|video|file)"
                 )))
             }
         };
@@ -284,6 +308,7 @@ impl JobSpec {
             trace: self.trace.then(crate::obs::TraceConfig::default),
             kernel: self.kernel.parse().map_err(DnttError::config)?,
             threads_per_rank: self.threads_per_rank.max(1),
+            budget: (self.budget_mb > 0).then(|| self.budget_mb * (1 << 20)),
             ..JobConfig::new(input, grid)
         })
     }

@@ -276,7 +276,9 @@ impl ChunkMeta {
 /// as the data actually reaching stable storage before the manifest
 /// rename — the size-only resume validation cannot detect a
 /// post-power-loss zero-filled page, so every snapshot file is synced.
-fn write_bytes_durable(path: &Path, bytes: &[u8]) -> Result<u64> {
+/// Shared with [`crate::serve::ResultCache`], whose commit protocol makes
+/// the same claim.
+pub(crate) fn write_bytes_durable(path: &Path, bytes: &[u8]) -> Result<u64> {
     use std::io::Write;
     let mut f = std::fs::File::create(path)?;
     f.write_all(bytes)?;
@@ -286,18 +288,14 @@ fn write_bytes_durable(path: &Path, bytes: &[u8]) -> Result<u64> {
 
 /// Best-effort directory fsync: makes the renames inside `dir` (manifest
 /// and replicated-file commits) durable too.
-fn sync_dir(dir: &Path) {
+pub(crate) fn sync_dir(dir: &Path) {
     if let Ok(d) = std::fs::File::open(dir) {
         let _ = d.sync_all();
     }
 }
 
 fn write_f64_file(path: &Path, data: &[f64]) -> Result<u64> {
-    let mut bytes = Vec::with_capacity(data.len() * 8);
-    for x in data {
-        bytes.extend_from_slice(&x.to_le_bytes());
-    }
-    write_bytes_durable(path, &bytes)
+    write_bytes_durable(path, &crate::tensor::io::f64s_to_le_bytes(data))
 }
 
 /// Write a replicated-output file (core / HT node matrix) via temp file +
@@ -366,15 +364,24 @@ fn read_f64_file(path: &Path, want_len: usize) -> Result<Vec<f64>> {
 pub fn write_block_file(path: &Path, block: &TensorBlock) -> Result<u64> {
     match block {
         TensorBlock::Dense(v) => write_f64_file(path, v),
-        TensorBlock::Sparse(s) => {
-            let nnz = s.nnz();
-            let mut bytes = Vec::with_capacity(8 * (1 + 2 * nnz));
-            bytes.extend_from_slice(&(nnz as u64).to_le_bytes());
-            for &i in s.idx() {
-                bytes.extend_from_slice(&(i as u64).to_le_bytes());
+        TensorBlock::Sparse(s) => write_bytes_durable(path, &s.to_spill_bytes()),
+        // Adopted chunk files are already in the spill format: snapshot by
+        // copying the bytes (size-validated), no decode needed.
+        TensorBlock::DiskDense { path: src, len } => {
+            let bytes = std::fs::read(src)?;
+            if bytes.len() != len * 8 {
+                return Err(DnttError::config(format!(
+                    "checkpoint: adopted chunk file {src:?} is truncated or corrupt"
+                )));
             }
-            for &v in s.vals() {
-                bytes.extend_from_slice(&v.to_le_bytes());
+            write_bytes_durable(path, &bytes)
+        }
+        TensorBlock::DiskSparse { path: src, len: _, nnz } => {
+            let bytes = std::fs::read(src)?;
+            if bytes.len() != 8 * (1 + 2 * nnz) {
+                return Err(DnttError::config(format!(
+                    "checkpoint: adopted sparse chunk file {src:?} is truncated or corrupt"
+                )));
             }
             write_bytes_durable(path, &bytes)
         }
@@ -392,29 +399,18 @@ pub fn read_block_file(path: &Path, meta: &ChunkMeta) -> Result<TensorBlock> {
                     "checkpoint: sparse snapshot file {path:?} is truncated or corrupt"
                 )));
             }
-            let stored = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
-            if stored != nnz {
-                return Err(DnttError::config(format!(
-                    "checkpoint: sparse snapshot file {path:?} nnz header disagrees with manifest"
-                )));
-            }
-            let idx: Vec<usize> = bytes[8..8 * (1 + nnz)]
-                .chunks_exact(8)
-                .map(|b| u64::from_le_bytes(b.try_into().unwrap()) as usize)
-                .collect();
-            let vals: Vec<f64> = bytes[8 * (1 + nnz)..]
-                .chunks_exact(8)
-                .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
-                .collect();
-            Ok(TensorBlock::Sparse(SparseChunk::new(meta.len, idx, vals)?))
+            // The shared spill codec validates the nnz header and record
+            // sizes (and SparseChunk::new re-validates the indices).
+            Ok(TensorBlock::Sparse(SparseChunk::from_spill_bytes(meta.len, &bytes)?))
         }
     }
 }
 
 fn block_nnz(b: &TensorBlock) -> Option<usize> {
     match b {
-        TensorBlock::Dense(_) => None,
+        TensorBlock::Dense(_) | TensorBlock::DiskDense { .. } => None,
         TensorBlock::Sparse(s) => Some(s.nnz()),
+        TensorBlock::DiskSparse { nnz, .. } => Some(*nnz),
     }
 }
 

@@ -54,6 +54,34 @@
 //! [`StoreView`], barriers again, and rank 0 drops the array from the
 //! store. `publish`/`view`/`remove` are also usable directly (the driver
 //! does so for the final core gather).
+//!
+//! # Out-of-core mode
+//!
+//! Three pieces make a larger-than-RAM tensor decomposable on one box
+//! (DESIGN.md §2.12):
+//!
+//! * **Chunk adoption** — [`TensorBlock::DiskDense`] /
+//!   [`TensorBlock::DiskSparse`] publish a chunk that already sits on
+//!   disk in the spill byte format (the `dntt-chunks-v1` ingest files of
+//!   [`crate::tensor::chunked`]). The store references the file in place:
+//!   nothing is copied to the heap and the file is never deleted by
+//!   `remove`/drop (the store does not own it).
+//! * **[`SpillMode::Mmap`]** — identical on-disk files and formats as
+//!   [`SpillMode::Disk`], but [`StoreView`] memory-maps dense chunk
+//!   files instead of materializing a `Vec<f64>` per chunk, so reads
+//!   page in on demand and mapped bytes never count as resident.
+//!   Sparse spill files are still parsed by copy (nnz-scaled).
+//! * **Budgeted assembly** — with [`SharedStore::set_budget`] set, the
+//!   dense assembly of [`dist_reshape_x`] loads source chunks in
+//!   bounded batches (evicting between batches) instead of caching the
+//!   whole array per view. Every element is copied exactly once from
+//!   the same source value regardless of the batch partition, so the
+//!   result is bitwise-identical to the unbudgeted path.
+//!
+//! [`MemStats`] is the shared gauge behind all of this: resident heap
+//! bytes the store pins (in-memory chunks + view caches of spill loads),
+//! its high-water mark, and live owned spill-file bytes. The peak feeds
+//! the `dntt-metrics-v1` envelope (`memory.peak_resident_bytes`).
 
 use crate::dist::comm::Comm;
 use crate::dist::topology::{BlockDim, Grid2d};
@@ -65,6 +93,7 @@ use crate::util::timer::Cat;
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -77,6 +106,24 @@ pub enum SpillMode {
     /// `f64` and dropped from memory — the out-of-core path. Reads are
     /// counted by [`StoreView::disk_bytes_read`].
     Disk(PathBuf),
+    /// Same on-disk files and byte formats as [`SpillMode::Disk`], but
+    /// views **memory-map** dense chunk files instead of reading them
+    /// into a `Vec<f64>`, so chunk data pages in on demand and never
+    /// counts against the resident budget. Sparse chunks are parsed by
+    /// copy (their heap cost is nnz-scaled). On targets without mmap
+    /// support (non-unix or big-endian) this degrades to the
+    /// [`SpillMode::Disk`] read path — same bytes, same results.
+    Mmap(PathBuf),
+}
+
+impl SpillMode {
+    /// The spill directory of an on-disk mode (`None` for memory).
+    pub fn dir(&self) -> Option<&std::path::Path> {
+        match self {
+            SpillMode::Memory => None,
+            SpillMode::Disk(d) | SpillMode::Mmap(d) => Some(d),
+        }
+    }
 }
 
 /// How a named array's chunks tile its logical row-major order.
@@ -274,6 +321,15 @@ pub enum TensorBlock {
     Dense(Vec<f64>),
     /// The chunk as a sorted sparse vector over the same row-major order.
     Sparse(SparseChunk),
+    /// A dense chunk **already on disk** as raw little-endian `f64`
+    /// (the spill byte format — what `dntt-chunks-v1` ingest files
+    /// hold). Publishing adopts the file in place: it is never read to
+    /// the heap at publish time and never deleted by the store.
+    DiskDense { path: PathBuf, len: usize },
+    /// A sparse chunk already on disk in the sparse spill record format
+    /// `[nnz: u64 | idx: u64 × nnz | vals: f64 × nnz]` (little-endian).
+    /// Adopted in place like [`TensorBlock::DiskDense`].
+    DiskSparse { path: PathBuf, len: usize, nnz: usize },
 }
 
 impl TensorBlock {
@@ -282,6 +338,7 @@ impl TensorBlock {
         match self {
             TensorBlock::Dense(v) => v.len(),
             TensorBlock::Sparse(s) => s.len(),
+            TensorBlock::DiskDense { len, .. } | TensorBlock::DiskSparse { len, .. } => *len,
         }
     }
 
@@ -291,12 +348,123 @@ impl TensorBlock {
     }
 }
 
-/// One published chunk.
+/// One published chunk. `owned: false` marks an adopted ingest file the
+/// store must never delete (see [`TensorBlock::DiskDense`]).
 enum ChunkData {
     Mem(Arc<Vec<f64>>),
-    Disk(PathBuf),
+    Disk { path: PathBuf, len: usize, owned: bool },
     MemSparse(Arc<SparseChunk>),
-    DiskSparse { path: PathBuf, len: usize, nnz: usize },
+    DiskSparse { path: PathBuf, len: usize, nnz: usize, owned: bool },
+}
+
+/// Heap bytes a resident dense buffer of `len` elements pins.
+fn dense_resident_cost(len: usize) -> u64 {
+    (len * 8) as u64
+}
+
+/// Heap bytes a resident [`SparseChunk`] of `nnz` stored entries pins
+/// (8-byte index + 8-byte value per entry; the fixed header is ignored).
+fn sparse_resident_cost(nnz: usize) -> u64 {
+    (nnz * 16) as u64
+}
+
+impl ChunkData {
+    /// Resident heap bytes this stored chunk pins while in the store.
+    fn resident_cost(&self) -> u64 {
+        match self {
+            ChunkData::Mem(d) => dense_resident_cost(d.len()),
+            ChunkData::MemSparse(s) => sparse_resident_cost(s.nnz()),
+            ChunkData::Disk { .. } | ChunkData::DiskSparse { .. } => 0,
+        }
+    }
+
+    /// Bytes of the spill file this chunk **owns** (0 for in-memory and
+    /// adopted chunks).
+    fn spill_cost(&self) -> u64 {
+        match self {
+            ChunkData::Disk { len, owned: true, .. } => (len * 8) as u64,
+            ChunkData::DiskSparse { nnz, owned: true, .. } => (8 * (1 + 2 * nnz)) as u64,
+            _ => 0,
+        }
+    }
+
+    /// The backing spill file, owned or adopted.
+    fn spill_path(&self) -> Option<&std::path::Path> {
+        match self {
+            ChunkData::Disk { path, .. } | ChunkData::DiskSparse { path, .. } => Some(path),
+            _ => None,
+        }
+    }
+
+    /// Delete the backing spill file if this chunk owns one.
+    fn delete_spill_file(&self) {
+        match self {
+            ChunkData::Disk { path, owned: true, .. }
+            | ChunkData::DiskSparse { path, owned: true, .. } => {
+                let _ = std::fs::remove_file(path);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Shared resident/spill byte gauges for one [`SharedStore`] and every
+/// [`StoreView`] opened from it.
+///
+/// `resident` counts heap bytes the store currently pins: in-memory
+/// chunks plus view caches of spill loads. Memory-mapped chunks are
+/// **not** resident — the OS pages them below the budget. Transient
+/// encode buffers inside `publish` (bounded by one chunk) and the
+/// caller-owned stage-matrix blocks are outside the gauge; DESIGN.md
+/// §2.12 states the full accounting contract.
+pub struct MemStats {
+    resident: AtomicU64,
+    peak: AtomicU64,
+    spill: AtomicU64,
+}
+
+impl MemStats {
+    fn new() -> Arc<MemStats> {
+        Arc::new(MemStats {
+            resident: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            spill: AtomicU64::new(0),
+        })
+    }
+
+    fn add_resident(&self, bytes: u64) {
+        let now = self.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn sub_resident(&self, bytes: u64) {
+        self.resident.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    fn add_spill(&self, bytes: u64) {
+        self.spill.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn sub_spill(&self, bytes: u64) {
+        self.spill.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Heap bytes the store currently pins.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`MemStats::resident_bytes`] over the store's
+    /// lifetime.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Bytes of live spill files the store owns (adopted ingest files
+    /// are excluded — the store neither wrote nor deletes them).
+    pub fn spill_file_bytes(&self) -> u64 {
+        self.spill.load(Ordering::Relaxed)
+    }
 }
 
 struct Entry {
@@ -316,7 +484,12 @@ pub struct SharedStore {
     spill: SpillMode,
     entries: Mutex<HashMap<String, Entry>>,
     /// When set, drop-time cleanup leaves spill files on disk.
-    keep_spill: std::sync::atomic::AtomicBool,
+    keep_spill: AtomicBool,
+    /// Resident/peak/spill gauges, shared with every view.
+    stats: Arc<MemStats>,
+    /// Soft memory budget in bytes (0 = unbudgeted). Governs the batch
+    /// size of [`dist_reshape_x`]'s dense assembly.
+    budget: AtomicU64,
 }
 
 impl SharedStore {
@@ -325,13 +498,42 @@ impl SharedStore {
         Arc::new(SharedStore {
             spill,
             entries: Mutex::new(HashMap::new()),
-            keep_spill: std::sync::atomic::AtomicBool::new(false),
+            keep_spill: AtomicBool::new(false),
+            stats: MemStats::new(),
+            budget: AtomicU64::new(0),
         })
     }
 
     /// The store's spill configuration.
     pub fn spill_mode(&self) -> &SpillMode {
         &self.spill
+    }
+
+    /// The store's shared byte gauges (resident / peak / owned spill).
+    pub fn stats(&self) -> &Arc<MemStats> {
+        &self.stats
+    }
+
+    /// Convenience accessor: the high-water mark of resident store
+    /// bytes — what `dntt-metrics-v1` reports as
+    /// `memory.peak_resident_bytes`.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.stats.peak_resident_bytes()
+    }
+
+    /// Set (or clear) the soft memory budget in bytes. A set budget
+    /// makes [`dist_reshape_x`] assemble dense blocks in bounded
+    /// batches sized to `budget / world_size` per rank.
+    pub fn set_budget(&self, budget: Option<u64>) {
+        self.budget.store(budget.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// The configured memory budget, if any.
+    pub fn budget(&self) -> Option<u64> {
+        match self.budget.load(Ordering::Relaxed) {
+            0 => None,
+            b => Some(b),
+        }
     }
 
     /// Escape hatch for drop-time cleanup: when `true`, spill files of
@@ -383,7 +585,9 @@ impl SharedStore {
     }
 
     /// Insert a stored chunk, handling the lost-race-with-conflicting-
-    /// first-publisher case (spill files of the loser are deleted).
+    /// first-publisher case (the loser's own spill file is deleted) and
+    /// re-publish accounting (the superseded chunk's bytes are released
+    /// and its spill file reclaimed before the replacement is counted).
     fn insert_chunk(
         &self,
         name: &str,
@@ -397,14 +601,32 @@ impl SharedStore {
             chunks: (0..layout.num_chunks()).map(|_| None).collect(),
         });
         if entry.layout != *layout {
-            match &stored {
-                ChunkData::Disk(path) | ChunkData::DiskSparse { path, .. } => {
-                    let _ = std::fs::remove_file(path);
-                }
-                _ => {}
+            // Dense and sparse spills share the `{name}.{chunk}.chunk`
+            // path, so a winner may already reference the very file the
+            // loser wrote — deleting it then would corrupt the stored
+            // array. Only delete when no chunk of the winning entry
+            // points at the same file.
+            let loser_path = stored.spill_path();
+            let clashes = loser_path.is_some()
+                && entry.chunks.iter().flatten().any(|c| c.spill_path() == loser_path);
+            if !clashes {
+                stored.delete_spill_file();
             }
             return Err(Self::layout_clash(name));
         }
+        if let Some(old) = entry.chunks[chunk].take() {
+            // Re-publish of an existing chunk: release the superseded
+            // bytes first so the gauges never double-count, and reclaim
+            // the old spill file unless the new chunk reuses its path
+            // (same name + index in disk mode overwrites in place).
+            self.stats.sub_resident(old.resident_cost());
+            self.stats.sub_spill(old.spill_cost());
+            if old.spill_path() != stored.spill_path() {
+                old.delete_spill_file();
+            }
+        }
+        self.stats.add_resident(stored.resident_cost());
+        self.stats.add_spill(stored.spill_cost());
         entry.chunks[chunk] = Some(stored);
         Ok(())
     }
@@ -428,15 +650,12 @@ impl SharedStore {
         let mut spill_bytes = 0u64;
         let stored = match &self.spill {
             SpillMode::Memory => ChunkData::Mem(Arc::new(data)),
-            SpillMode::Disk(dir) => {
+            SpillMode::Disk(dir) | SpillMode::Mmap(dir) => {
                 let path = self.spill_path(dir, name, chunk)?;
-                let mut bytes = Vec::with_capacity(data.len() * 8);
-                for x in &data {
-                    bytes.extend_from_slice(&x.to_le_bytes());
-                }
+                let bytes = crate::tensor::io::f64s_to_le_bytes(&data);
                 std::fs::write(&path, &bytes)?;
                 spill_bytes = bytes.len() as u64;
-                ChunkData::Disk(path)
+                ChunkData::Disk { path, len: data.len(), owned: true }
             }
         };
         crate::obs::end_store_write(span, logical_bytes, spill_bytes);
@@ -465,27 +684,25 @@ impl SharedStore {
         let mut spill_bytes = 0u64;
         let stored = match &self.spill {
             SpillMode::Memory => ChunkData::MemSparse(Arc::new(data)),
-            SpillMode::Disk(dir) => {
+            SpillMode::Disk(dir) | SpillMode::Mmap(dir) => {
                 let path = self.spill_path(dir, name, chunk)?;
                 let (len, nnz) = (data.len(), data.nnz());
-                let mut bytes = Vec::with_capacity(8 * (1 + 2 * nnz));
-                bytes.extend_from_slice(&(nnz as u64).to_le_bytes());
-                for &i in data.idx() {
-                    bytes.extend_from_slice(&(i as u64).to_le_bytes());
-                }
-                for &v in data.vals() {
-                    bytes.extend_from_slice(&v.to_le_bytes());
-                }
+                let bytes = data.to_spill_bytes();
                 std::fs::write(&path, &bytes)?;
                 spill_bytes = bytes.len() as u64;
-                ChunkData::DiskSparse { path, len, nnz }
+                ChunkData::DiskSparse { path, len, nnz, owned: true }
             }
         };
         crate::obs::end_store_write(span, logical_bytes, spill_bytes);
         self.insert_chunk(name, layout, chunk, stored)
     }
 
-    /// Publish either representation of a chunk (the driver-facing form).
+    /// Publish either representation of a chunk (the driver-facing
+    /// form). The on-disk variants are **adopted**: the store references
+    /// the existing file in place under any spill mode — no heap copy at
+    /// publish time, and the file survives `remove`/drop (the ingest
+    /// chunk set stays reusable). The file's size is validated against
+    /// the expected byte format before insertion.
     pub fn publish_block(
         &self,
         name: &str,
@@ -496,7 +713,42 @@ impl SharedStore {
         match data {
             TensorBlock::Dense(v) => self.publish(name, layout, chunk, v),
             TensorBlock::Sparse(s) => self.publish_sparse(name, layout, chunk, s),
+            TensorBlock::DiskDense { path, len } => {
+                self.adopt(name, layout, chunk, path, len, None)
+            }
+            TensorBlock::DiskSparse { path, len, nnz } => {
+                self.adopt(name, layout, chunk, path, len, Some(nnz))
+            }
         }
+    }
+
+    /// Adopt a chunk file already on disk in the spill byte format (see
+    /// [`TensorBlock::DiskDense`]).
+    fn adopt(
+        &self,
+        name: &str,
+        layout: &Layout,
+        chunk: usize,
+        path: PathBuf,
+        len: usize,
+        nnz: Option<usize>,
+    ) -> Result<()> {
+        self.check_publish(name, layout, chunk, len)?;
+        let want = match nnz {
+            None => 8 * len as u64,
+            Some(z) => 8 * (1 + 2 * z) as u64,
+        };
+        let got = std::fs::metadata(&path)?.len();
+        if got != want {
+            return Err(DnttError::Artifact(format!(
+                "publish {name}: adopted chunk file {path:?} is {got} bytes, format expects {want}"
+            )));
+        }
+        let stored = match nnz {
+            None => ChunkData::Disk { path, len, owned: false },
+            Some(z) => ChunkData::DiskSparse { path, len, nnz: z, owned: false },
+        };
+        self.insert_chunk(name, layout, chunk, stored)
     }
 
     /// Open a read view of array `name`. Errors if the array is unknown or
@@ -507,22 +759,37 @@ impl SharedStore {
         let entry = entries
             .get(name)
             .ok_or_else(|| DnttError::Comm(format!("store view: no array named '{name}'")))?;
+        let mapped = matches!(self.spill, SpillMode::Mmap(_));
         let mut slots = Vec::with_capacity(entry.chunks.len());
         for (c, chunk) in entry.chunks.iter().enumerate() {
             match chunk {
                 Some(ChunkData::Mem(data)) => slots.push(ViewSlot::Mem(Arc::clone(data))),
-                Some(ChunkData::Disk(path)) => {
-                    slots.push(ViewSlot::Disk { path: path.clone(), cache: RefCell::new(None) })
+                Some(ChunkData::Disk { path, len, .. }) => {
+                    if mapped {
+                        slots.push(ViewSlot::Mapped {
+                            path: path.clone(),
+                            len: *len,
+                            map: RefCell::new(None),
+                        })
+                    } else {
+                        slots.push(ViewSlot::Disk {
+                            path: path.clone(),
+                            len: *len,
+                            cache: RefCell::new(None),
+                        })
+                    }
                 }
                 Some(ChunkData::MemSparse(data)) => {
                     slots.push(ViewSlot::MemSparse(Arc::clone(data)))
                 }
-                Some(ChunkData::DiskSparse { path, len, nnz }) => slots.push(ViewSlot::DiskSparse {
-                    path: path.clone(),
-                    len: *len,
-                    nnz: *nnz,
-                    cache: RefCell::new(None),
-                }),
+                Some(ChunkData::DiskSparse { path, len, nnz, .. }) => {
+                    slots.push(ViewSlot::DiskSparse {
+                        path: path.clone(),
+                        len: *len,
+                        nnz: *nnz,
+                        cache: RefCell::new(None),
+                    })
+                }
                 None => {
                     return Err(DnttError::Comm(format!(
                         "store view: array '{name}' is missing chunk {c} (publish not complete?)"
@@ -530,7 +797,12 @@ impl SharedStore {
                 }
             }
         }
-        Ok(StoreView { layout: entry.layout.clone(), slots, bytes_read: Cell::new(0) })
+        Ok(StoreView {
+            layout: entry.layout.clone(),
+            slots,
+            bytes_read: Cell::new(0),
+            stats: Arc::clone(&self.stats),
+        })
     }
 
     /// Drop array `name` (and delete its spill files). Missing names are
@@ -541,22 +813,20 @@ impl SharedStore {
         let entry = self.entries.lock().unwrap().remove(name);
         if let Some(entry) = entry {
             for chunk in entry.chunks.into_iter().flatten() {
-                match chunk {
-                    ChunkData::Disk(path) | ChunkData::DiskSparse { path, .. } => {
-                        let _ = std::fs::remove_file(path);
-                    }
-                    _ => {}
-                }
+                self.stats.sub_resident(chunk.resident_cost());
+                self.stats.sub_spill(chunk.spill_cost());
+                chunk.delete_spill_file();
             }
         }
     }
 }
 
 impl Drop for SharedStore {
-    /// Delete the spill files of every array still stored — a crashed or
-    /// early-erroring job must not leave `.chunk` litter in the spill
-    /// directory (the happy path removes arrays as it consumes them, so
-    /// this is usually a no-op). [`SharedStore::set_keep_spill`] opts out.
+    /// Delete the owned spill files of every array still stored — a
+    /// crashed or early-erroring job must not leave `.chunk` litter in
+    /// the spill directory (the happy path removes arrays as it consumes
+    /// them, so this is usually a no-op). Adopted ingest files are never
+    /// deleted. [`SharedStore::set_keep_spill`] opts out.
     fn drop(&mut self) {
         if self.keep_spill() {
             return;
@@ -564,12 +834,7 @@ impl Drop for SharedStore {
         let entries = self.entries.get_mut().unwrap_or_else(|e| e.into_inner());
         for entry in entries.values() {
             for chunk in entry.chunks.iter().flatten() {
-                match chunk {
-                    ChunkData::Disk(path) | ChunkData::DiskSparse { path, .. } => {
-                        let _ = std::fs::remove_file(path);
-                    }
-                    _ => {}
-                }
+                chunk.delete_spill_file();
             }
         }
     }
@@ -577,9 +842,12 @@ impl Drop for SharedStore {
 
 enum ViewSlot {
     Mem(Arc<Vec<f64>>),
-    Disk { path: PathBuf, cache: RefCell<Option<Vec<f64>>> },
+    Disk { path: PathBuf, len: usize, cache: RefCell<Option<Vec<f64>>> },
     MemSparse(Arc<SparseChunk>),
     DiskSparse { path: PathBuf, len: usize, nnz: usize, cache: RefCell<Option<SparseChunk>> },
+    /// A dense spill chunk viewed under [`SpillMode::Mmap`]: mapped (or
+    /// fallback-read) lazily on first access.
+    Mapped { path: PathBuf, len: usize, map: RefCell<Option<mmap::DenseSource>> },
 }
 
 /// A chunk's contents as seen through [`StoreView::with_loaded`].
@@ -599,12 +867,18 @@ pub struct StoreView {
     layout: Layout,
     slots: Vec<ViewSlot>,
     bytes_read: Cell<u64>,
+    stats: Arc<MemStats>,
 }
 
 impl StoreView {
     /// Layout the array was published under.
     pub fn layout(&self) -> &Layout {
         &self.layout
+    }
+
+    /// Number of chunks in the viewed array.
+    pub fn num_chunks(&self) -> usize {
+        self.slots.len()
     }
 
     /// Total logical element count.
@@ -638,11 +912,116 @@ impl StoreView {
             .iter()
             .enumerate()
             .map(|(c, s)| match s {
-                ViewSlot::Mem(_) | ViewSlot::Disk { .. } => self.layout.chunk_len(c),
+                ViewSlot::Mem(_) | ViewSlot::Disk { .. } | ViewSlot::Mapped { .. } => {
+                    self.layout.chunk_len(c)
+                }
                 ViewSlot::MemSparse(d) => d.nnz(),
                 ViewSlot::DiskSparse { nnz, .. } => *nnz,
             })
             .sum()
+    }
+
+    /// Heap bytes loading chunk `c` would pin: 0 for chunks that are
+    /// shared in memory, already cached, or memory-mapped (mapped pages
+    /// are the OS's to reclaim); the decoded size for un-cached spill
+    /// chunks. The budgeted assembly of [`dist_reshape_x`] batches on
+    /// this.
+    pub fn load_cost(&self, c: usize) -> u64 {
+        match &self.slots[c] {
+            ViewSlot::Mem(_) | ViewSlot::MemSparse(_) => 0,
+            ViewSlot::Disk { len, cache, .. } => {
+                if cache.borrow().is_some() {
+                    0
+                } else {
+                    dense_resident_cost(*len)
+                }
+            }
+            ViewSlot::DiskSparse { nnz, cache, .. } => {
+                if cache.borrow().is_some() {
+                    0
+                } else {
+                    sparse_resident_cost(*nnz)
+                }
+            }
+            ViewSlot::Mapped { len, map, .. } => {
+                // Supported targets map at zero heap cost; the fallback
+                // read costs the decoded buffer like a Disk slot.
+                if mmap::SUPPORTED || map.borrow().is_some() {
+                    0
+                } else {
+                    dense_resident_cost(*len)
+                }
+            }
+        }
+    }
+
+    /// True when chunk `c` is currently backed by an actual memory
+    /// mapping (false before first access, for non-`Mmap` stores, and
+    /// on the fallback-read path).
+    pub fn chunk_is_mapped(&self, c: usize) -> bool {
+        match &self.slots[c] {
+            ViewSlot::Mapped { map, .. } => {
+                map.borrow().as_ref().map(mmap::DenseSource::is_mapped).unwrap_or(false)
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop chunk `c`'s cached load (no-op for in-memory chunks),
+    /// releasing its resident bytes — or unmapping it. The next access
+    /// re-loads; values are unchanged (spill files are immutable while
+    /// viewed).
+    pub fn evict(&self, c: usize) {
+        self.release_slot(&self.slots[c]);
+    }
+
+    fn release_slot(&self, slot: &ViewSlot) {
+        match slot {
+            ViewSlot::Disk { cache, .. } => {
+                if let Some(d) = cache.borrow_mut().take() {
+                    self.stats.sub_resident(dense_resident_cost(d.len()));
+                }
+            }
+            ViewSlot::DiskSparse { cache, .. } => {
+                if let Some(s) = cache.borrow_mut().take() {
+                    self.stats.sub_resident(sparse_resident_cost(s.nnz()));
+                }
+            }
+            ViewSlot::Mapped { map, .. } => {
+                if let Some(src) = map.borrow_mut().take() {
+                    self.stats.sub_resident(src.resident_cost());
+                }
+            }
+            ViewSlot::Mem(_) | ViewSlot::MemSparse(_) => {}
+        }
+    }
+
+    /// Partition the chunk indices into consecutive batches whose summed
+    /// [`StoreView::load_cost`] stays within `headroom` bytes — always
+    /// at least one chunk per batch so progress is made even when a
+    /// single chunk exceeds it. `None` yields one batch of everything.
+    pub fn plan_batches(&self, headroom: Option<u64>) -> Vec<Vec<usize>> {
+        let nc = self.slots.len();
+        let headroom = match headroom {
+            None => return vec![(0..nc).collect()],
+            Some(h) => h,
+        };
+        let mut batches = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cost = 0u64;
+        for c in 0..nc {
+            let lc = self.load_cost(c);
+            if !cur.is_empty() && cost + lc > headroom {
+                batches.push(std::mem::take(&mut cur));
+                cost = 0;
+            }
+            cur.push(c);
+            cost += lc;
+        }
+        if !cur.is_empty() {
+            batches.push(cur);
+        }
+        batches
     }
 
     /// Element at global linear index `lin` of the logical row-major
@@ -676,6 +1055,32 @@ impl StoreView {
                 }
                 Loaded::Sparse(s) => s.scatter_range(offset, &mut dst[done..done + take]),
             });
+            done += take;
+        }
+    }
+
+    /// [`StoreView::read_into`] restricted to source chunks marked in
+    /// `include` (indexed by chunk): runs owned by excluded chunks are
+    /// skipped — not loaded, not counted, `dst` untouched there. The
+    /// budgeted assembly of [`dist_reshape_x`] calls this once per
+    /// batch; the batches partition the chunks, so the union of passes
+    /// writes every element exactly once from the same source value —
+    /// bitwise-identical to one unrestricted [`StoreView::read_into`],
+    /// with the same total `StoreReadBytes`.
+    pub fn read_into_chunks(&self, lin: usize, dst: &mut [f64], include: &[bool]) {
+        let mut done = 0;
+        while done < dst.len() {
+            let (chunk, offset, run) = self.layout.locate_run(lin + done);
+            let take = run.min(dst.len() - done);
+            if include[chunk] {
+                crate::obs::count(crate::obs::Ctr::StoreReadBytes, (take * 8) as u64);
+                self.with_loaded(chunk, |data| match data {
+                    Loaded::Dense(d) => {
+                        dst[done..done + take].copy_from_slice(&d[offset..offset + take]);
+                    }
+                    Loaded::Sparse(s) => s.scatter_range(offset, &mut dst[done..done + take]),
+                });
+            }
             done += take;
         }
     }
@@ -739,18 +1144,18 @@ impl StoreView {
         match &self.slots[chunk] {
             ViewSlot::Mem(data) => f(Loaded::Dense(data.as_slice())),
             ViewSlot::MemSparse(data) => f(Loaded::Sparse(data.as_ref())),
-            ViewSlot::Disk { path, cache } => {
+            ViewSlot::Disk { path, len, cache } => {
                 let mut cache = cache.borrow_mut();
                 if cache.is_none() {
                     let bytes = self.load_bytes(path);
                     assert!(
-                        bytes.len() % 8 == 0,
-                        "chunk store: spill file {path:?} is not a whole number of f64s"
+                        bytes.len() == len * 8,
+                        "chunk store: spill file {path:?} is {} bytes, expected {}",
+                        bytes.len(),
+                        len * 8
                     );
-                    let data: Vec<f64> = bytes
-                        .chunks_exact(8)
-                        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
-                        .collect();
+                    let data = crate::tensor::io::le_bytes_to_f64s(&bytes);
+                    self.stats.add_resident(dense_resident_cost(data.len()));
                     *cache = Some(data);
                 }
                 f(Loaded::Dense(cache.as_ref().unwrap().as_slice()))
@@ -759,27 +1164,196 @@ impl StoreView {
                 let mut cache = cache.borrow_mut();
                 if cache.is_none() {
                     let bytes = self.load_bytes(path);
-                    assert!(
-                        bytes.len() == 8 * (1 + 2 * nnz),
-                        "chunk store: sparse spill file {path:?} has the wrong size"
-                    );
-                    let stored_nnz =
-                        u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
-                    assert_eq!(stored_nnz, *nnz, "chunk store: sparse spill nnz mismatch");
-                    let mut idx = Vec::with_capacity(*nnz);
-                    for b in bytes[8..8 * (1 + nnz)].chunks_exact(8) {
-                        idx.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
-                    }
-                    let mut vals = Vec::with_capacity(*nnz);
-                    for b in bytes[8 * (1 + nnz)..].chunks_exact(8) {
-                        vals.push(f64::from_le_bytes(b.try_into().unwrap()));
-                    }
-                    let data = SparseChunk::new(*len, idx, vals).unwrap_or_else(|e| {
+                    let data = SparseChunk::from_spill_bytes(*len, &bytes).unwrap_or_else(|e| {
                         panic!("chunk store: corrupt sparse spill file {path:?}: {e}")
                     });
+                    assert_eq!(data.nnz(), *nnz, "chunk store: sparse spill nnz mismatch");
+                    self.stats.add_resident(sparse_resident_cost(data.nnz()));
                     *cache = Some(data);
                 }
                 f(Loaded::Sparse(cache.as_ref().unwrap()))
+            }
+            ViewSlot::Mapped { path, len, map } => {
+                let mut map = map.borrow_mut();
+                if map.is_none() {
+                    let span = crate::obs::span_begin();
+                    let src = mmap::DenseSource::open(path, *len).unwrap_or_else(|e| {
+                        panic!("chunk store: failed to map spill file {path:?}: {e}")
+                    });
+                    let nbytes = (len * 8) as u64;
+                    // Mapped chunks count as spill reads (the pages do
+                    // come off disk) but pin no heap unless the mmap
+                    // fallback kicked in.
+                    self.bytes_read.set(self.bytes_read.get() + nbytes);
+                    crate::obs::count(crate::obs::Ctr::StoreMmapBytes, nbytes);
+                    self.stats.add_resident(src.resident_cost());
+                    crate::obs::end_store_read(span, nbytes);
+                    *map = Some(src);
+                }
+                f(Loaded::Dense(map.as_ref().unwrap().as_slice()))
+            }
+        }
+    }
+}
+
+impl Drop for StoreView {
+    /// Release the resident bytes of every cached spill load (and every
+    /// mapping) this view holds, so [`MemStats::resident_bytes`] only
+    /// ever counts live caches.
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            self.release_slot(slot);
+        }
+    }
+}
+
+/// Raw-libc memory mapping for [`SpillMode::Mmap`] — the build is
+/// offline (no `memmap2`), so the two syscalls are declared directly.
+/// Mappings are read-only and private; a chunk file must stay intact
+/// while mapped (the store's existing "spill dir outlives every view"
+/// rule). Unsupported targets (non-unix or big-endian, where the
+/// little-endian spill bytes cannot be reinterpreted in place) fall back
+/// to a buffered read with identical results.
+mod mmap {
+    use std::path::Path;
+
+    /// True when this target maps files in place.
+    #[cfg(all(unix, target_endian = "little"))]
+    pub const SUPPORTED: bool = true;
+    #[cfg(not(all(unix, target_endian = "little")))]
+    pub const SUPPORTED: bool = false;
+
+    #[cfg(all(unix, target_endian = "little"))]
+    mod sys {
+        use std::ffi::c_void;
+        use std::os::raw::c_int;
+
+        pub const PROT_READ: c_int = 1;
+        pub const MAP_PRIVATE: c_int = 2;
+
+        extern "C" {
+            pub fn mmap(
+                addr: *mut c_void,
+                len: usize,
+                prot: c_int,
+                flags: c_int,
+                fd: c_int,
+                offset: i64,
+            ) -> *mut c_void;
+            pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        }
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    pub struct Mapping {
+        ptr: *mut std::ffi::c_void,
+        bytes: usize,
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            // SAFETY: `ptr`/`bytes` came from a successful mmap and are
+            // unmapped exactly once.
+            unsafe {
+                sys::munmap(self.ptr, self.bytes);
+            }
+        }
+    }
+
+    /// A dense chunk's f64s: memory-mapped in place when the target
+    /// supports it, copied to the heap otherwise.
+    pub enum DenseSource {
+        #[cfg(all(unix, target_endian = "little"))]
+        Mapped(Mapping),
+        Copied(Vec<f64>),
+    }
+
+    impl DenseSource {
+        /// Map (or fallback-read) `path`, which must hold exactly `len`
+        /// little-endian f64s.
+        pub fn open(path: &Path, len: usize) -> std::io::Result<DenseSource> {
+            #[cfg(all(unix, target_endian = "little"))]
+            {
+                if len > 0 {
+                    if let Some(m) = Self::try_map(path, len)? {
+                        return Ok(DenseSource::Mapped(m));
+                    }
+                }
+            }
+            let bytes = std::fs::read(path)?;
+            if bytes.len() != len * 8 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("chunk file is {} bytes, expected {}", bytes.len(), len * 8),
+                ));
+            }
+            Ok(DenseSource::Copied(crate::tensor::io::le_bytes_to_f64s(&bytes)))
+        }
+
+        #[cfg(all(unix, target_endian = "little"))]
+        fn try_map(path: &Path, len: usize) -> std::io::Result<Option<Mapping>> {
+            use std::os::fd::AsRawFd;
+            let f = std::fs::File::open(path)?;
+            let actual = f.metadata()?.len();
+            let bytes = len * 8;
+            if actual != bytes as u64 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("chunk file is {actual} bytes, expected {bytes}"),
+                ));
+            }
+            // SAFETY: read-only private mapping of a regular file we
+            // just opened; length matches the file size. The mapping is
+            // page-aligned, which satisfies f64 alignment.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    bytes,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                // MAP_FAILED: report "not mappable" and let the caller
+                // fall back to a read rather than failing the job.
+                return Ok(None);
+            }
+            Ok(Some(Mapping { ptr, bytes }))
+        }
+
+        /// The chunk's elements (zero-copy when mapped).
+        pub fn as_slice(&self) -> &[f64] {
+            match self {
+                #[cfg(all(unix, target_endian = "little"))]
+                // SAFETY: the mapping is page-aligned, read-only, lives
+                // as long as `self`, and spans exactly `bytes` of
+                // little-endian f64 data on a little-endian target.
+                DenseSource::Mapped(m) => unsafe {
+                    std::slice::from_raw_parts(m.ptr as *const f64, m.bytes / 8)
+                },
+                DenseSource::Copied(v) => v.as_slice(),
+            }
+        }
+
+        /// Heap bytes this source pins (0 when mapped).
+        pub fn resident_cost(&self) -> u64 {
+            match self {
+                #[cfg(all(unix, target_endian = "little"))]
+                DenseSource::Mapped(_) => 0,
+                DenseSource::Copied(v) => (v.len() * 8) as u64,
+            }
+        }
+
+        /// True when backed by an actual mapping (tests assert the
+        /// supported path really maps).
+        pub fn is_mapped(&self) -> bool {
+            match self {
+                #[cfg(all(unix, target_endian = "little"))]
+                DenseSource::Mapped(_) => true,
+                DenseSource::Copied(_) => false,
             }
         }
     }
@@ -928,9 +1502,31 @@ pub fn dist_reshape_x(
             }
         }
     } else {
+        // Budgeted streaming assembly: cap this rank's cached spill
+        // loads at its share of the store budget and sweep the block
+        // once per chunk batch, evicting between batches. With no
+        // budget this is one batch over all chunks — the classic path.
+        // Either way every element is copied exactly once from the same
+        // source value, so the result is independent of the partition.
         let mut block = Mat::zeros(my_rows, width);
-        for li in 0..my_rows {
-            view.read_into((r0 + li) * n + c0, block.row_mut(li));
+        let headroom = store.budget().map(|b| (b / world.size() as u64).max(1));
+        let batches = view.plan_batches(headroom);
+        crate::obs::count(crate::obs::Ctr::ReshapeBatches, batches.len() as u64);
+        let multi = batches.len() > 1;
+        let mut include = vec![false; view.num_chunks()];
+        for batch in &batches {
+            for &c in batch {
+                include[c] = true;
+            }
+            for li in 0..my_rows {
+                view.read_into_chunks((r0 + li) * n + c0, block.row_mut(li), &include);
+            }
+            for &c in batch {
+                include[c] = false;
+                if multi {
+                    view.evict(c);
+                }
+            }
         }
         world.breakdown.add_bytes(Cat::Reshape, (block.len() * 8) as u64);
         DenseOrSparse::Dense(block)
@@ -1260,5 +1856,193 @@ mod tests {
             assert!(x.is_sparse() && !y.is_sparse());
             assert_eq!(x.to_dense().as_slice(), y.to_dense().as_slice());
         }
+    }
+
+    #[test]
+    fn mmap_reads_match_disk_and_memory_bitwise() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_mm_{}", std::process::id()));
+        let l = Layout::MatGrid { m: 4, n: 5, pr: 2, pc: 1 };
+        let data0: Vec<f64> = (0..10).map(|x| (x as f64).sin()).collect();
+        let data1: Vec<f64> = (0..10).map(|x| (x as f64).cos()).collect();
+        let mut outs = Vec::new();
+        for mode in [
+            SpillMode::Memory,
+            SpillMode::Disk(dir.join("d")),
+            SpillMode::Mmap(dir.join("m")),
+        ] {
+            let store = SharedStore::new(mode);
+            store.publish("x", &l, 0, data0.clone()).unwrap();
+            store.publish("x", &l, 1, data1.clone()).unwrap();
+            let view = store.view("x").unwrap();
+            let dense = view.to_dense();
+            assert_eq!(view.get(7).to_bits(), dense[7].to_bits());
+            let mut seen = Vec::new();
+            view.read_nonzeros(3, 9, |off, v| seen.push((off, v.to_bits())));
+            outs.push((dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(), seen));
+        }
+        for w in outs.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mmap_mode_maps_dense_chunks_at_zero_heap_cost() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_map_{}", std::process::id()));
+        let l = Layout::MatGrid { m: 1, n: 4, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Mmap(dir.clone()));
+        store.publish("x", &l, 0, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let view = store.view("x").unwrap();
+        assert!(!view.chunk_is_mapped(0)); // lazy: nothing mapped yet
+        assert_eq!(view.to_dense(), vec![1.0, 2.0, 3.0, 4.0]);
+        if cfg!(all(unix, target_endian = "little")) {
+            assert!(view.chunk_is_mapped(0));
+            // Mapped bytes pin no heap.
+            assert_eq!(store.stats().resident_bytes(), 0);
+            assert_eq!(view.load_cost(0), 0);
+        }
+        // Eviction unmaps; the next access remaps with the same values.
+        view.evict(0);
+        assert!(!view.chunk_is_mapped(0));
+        assert_eq!(view.get(2), 3.0);
+        drop(view);
+        store.remove("x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn republish_releases_superseded_bytes_memory_mode() {
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Memory);
+        let stats = Arc::clone(store.stats());
+        assert_eq!(stats.resident_bytes(), 0);
+        store.publish("x", &l, 0, vec![1.0; 4]).unwrap();
+        assert_eq!(stats.resident_bytes(), 32);
+        // Republish of the same chunk must not double-count.
+        store.publish("x", &l, 0, vec![2.0; 4]).unwrap();
+        assert_eq!(stats.resident_bytes(), 32);
+        // Sparse over dense: resident drops to the nnz-scaled cost.
+        let sp = SparseChunk::new(4, vec![1], vec![5.0]).unwrap();
+        store.publish_sparse("x", &l, 0, sp).unwrap();
+        assert_eq!(stats.resident_bytes(), 16);
+        store.remove("x");
+        assert_eq!(stats.resident_bytes(), 0);
+        assert!(stats.peak_resident_bytes() >= 32);
+    }
+
+    #[test]
+    fn republish_reclaims_superseded_spill_bytes_disk_mode() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_rep_{}", std::process::id()));
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+        let store = SharedStore::new(SpillMode::Disk(dir.clone()));
+        let stats = Arc::clone(store.stats());
+        store.publish("x", &l, 0, vec![1.0; 4]).unwrap();
+        assert_eq!(stats.spill_file_bytes(), 32);
+        // Dense → sparse republish rewrites the same path: the gauge
+        // follows the new record size, no orphan file is left behind.
+        let sp = SparseChunk::new(4, vec![0, 2], vec![3.0, 4.0]).unwrap();
+        store.publish_sparse("x", &l, 0, sp).unwrap();
+        assert_eq!(stats.spill_file_bytes(), 8 * 5);
+        assert_eq!(std::fs::metadata(dir.join("x.0.chunk")).unwrap().len(), 40);
+        let view = store.view("x").unwrap();
+        assert_eq!(view.to_dense(), vec![3.0, 0.0, 4.0, 0.0]);
+        drop(view);
+        store.remove("x");
+        assert_eq!(stats.spill_file_bytes(), 0);
+        assert!(!dir.join("x.0.chunk").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn view_caches_count_and_release_resident_bytes() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_gauge_{}", std::process::id()));
+        let store = SharedStore::new(SpillMode::Disk(dir.clone()));
+        let stats = Arc::clone(store.stats());
+        let l = Layout::MatGrid { m: 2, n: 3, pr: 2, pc: 1 };
+        store.publish("x", &l, 0, vec![1.0, 2.0, 3.0]).unwrap();
+        store.publish("x", &l, 1, vec![4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(stats.resident_bytes(), 0); // everything spilled
+        let view = store.view("x").unwrap();
+        assert_eq!(view.load_cost(0), 24);
+        let _ = view.get(0); // loads chunk 0
+        assert_eq!(stats.resident_bytes(), 24);
+        assert_eq!(view.load_cost(0), 0); // cached now
+        let _ = view.get(3); // loads chunk 1
+        assert_eq!(stats.resident_bytes(), 48);
+        view.evict(0);
+        assert_eq!(stats.resident_bytes(), 24);
+        drop(view); // view drop releases the remaining cache
+        assert_eq!(stats.resident_bytes(), 0);
+        assert_eq!(stats.peak_resident_bytes(), 48);
+        store.remove("x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adopted_chunk_files_survive_remove_and_drop() {
+        let dir = std::env::temp_dir().join(format!("dntt_cs_adopt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ingest.bin");
+        std::fs::write(&path, crate::tensor::io::f64s_to_le_bytes(&[1.0, 2.0, 3.0, 4.0]))
+            .unwrap();
+        let l = Layout::MatGrid { m: 2, n: 2, pr: 1, pc: 1 };
+        {
+            let store = SharedStore::new(SpillMode::Mmap(dir.join("spill")));
+            store
+                .publish_block("x", &l, 0, TensorBlock::DiskDense { path: path.clone(), len: 4 })
+                .unwrap();
+            // Adoption pins no heap and owns no spill bytes.
+            assert_eq!(store.stats().resident_bytes(), 0);
+            assert_eq!(store.stats().spill_file_bytes(), 0);
+            let view = store.view("x").unwrap();
+            assert_eq!(view.to_dense(), vec![1.0, 2.0, 3.0, 4.0]);
+            drop(view);
+            store.remove("x");
+            assert!(path.exists(), "adopted ingest file must survive remove");
+            // A file whose size disagrees with the format is rejected.
+            let l3 = Layout::MatGrid { m: 1, n: 3, pr: 1, pc: 1 };
+            assert!(store
+                .publish_block("y", &l3, 0, TensorBlock::DiskDense { path: path.clone(), len: 3 })
+                .is_err());
+        }
+        assert!(path.exists(), "adopted ingest file must survive store drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budgeted_reshape_is_bitwise_identical_and_bounded() {
+        use crate::dist::Grid2d;
+        // 8x8 array as four row blocks, reshaped onto a 1x4 column grid
+        // so every rank reads from every source chunk.
+        let layout = Layout::MatGrid { m: 8, n: 8, pr: 4, pc: 1 };
+        let grid = Grid2d::new(1, 4);
+        let run = |budget: Option<u64>| {
+            let layout = layout.clone();
+            let dir = std::env::temp_dir().join(format!(
+                "dntt_cs_bud_{}_{}",
+                std::process::id(),
+                budget.unwrap_or(0)
+            ));
+            let store = SharedStore::new(SpillMode::Disk(dir.clone()));
+            store.set_budget(budget);
+            let stats = Arc::clone(store.stats());
+            let blocks = Comm::run(4, move |mut world| {
+                let r = world.rank();
+                let mine: Vec<f64> = (0..16).map(|k| ((16 * r + k) as f64).sqrt()).collect();
+                dist_reshape(&mut world, &store, "b", &layout, mine, 8, 8, grid).unwrap()
+            });
+            let peak = stats.peak_resident_bytes();
+            let _ = std::fs::remove_dir_all(&dir);
+            (blocks, peak)
+        };
+        let (resident, _peak_free) = run(None);
+        // 512-byte budget → 128 bytes per rank → one chunk per batch.
+        let (streamed, peak_budget) = run(Some(512));
+        for (a, b) in resident.iter().zip(&streamed) {
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert!(peak_budget <= 512, "peak {peak_budget} exceeds the 512-byte budget");
     }
 }

@@ -19,6 +19,13 @@
 //! is an [`HtTensor`] identical on every rank, with per-tree-node stage
 //! records and the same critical-path cost breakdown the TT driver
 //! reports.
+//!
+//! Out-of-core jobs need no special handling here: every reshape above
+//! goes through [`dist_reshape_x`], which — when the [`SharedStore`]
+//! carries a memory budget — streams the source chunks in bounded
+//! batches and maps spilled chunks instead of loading them, bitwise
+//! identically to the resident path (DESIGN.md §2.12). The driver only
+//! ever sees the assembled stage matrix.
 
 use crate::dist::checkpoint::{self, CkptCtx};
 use crate::dist::{

@@ -42,6 +42,7 @@ fn main() {
     };
     let result = match cmd {
         "decompose" => cmd_decompose(&rest),
+        "datagen" => cmd_datagen(&rest),
         "submit" => cmd_submit(&rest),
         "serve" => cmd_serve(&rest),
         "jobs" => cmd_jobs(&rest),
@@ -67,7 +68,8 @@ fn top_usage() -> String {
     "dntt — distributed non-negative tensor-train decomposition\n\n\
      USAGE: dntt <COMMAND> [OPTIONS]\n\n\
      COMMANDS:\n\
-     \x20 decompose   decompose a tensor (synthetic | faces | video)\n\
+     \x20 decompose   decompose a tensor (synthetic | faces | video | file)\n\
+     \x20 datagen     write a synthetic tensor to disk as a dntt-chunks-v1 chunk set\n\
      \x20 submit      queue a decomposition job in the on-disk spool\n\
      \x20 serve       run queued jobs on a shared rank pool (result cache)\n\
      \x20 jobs        list spooled jobs and cached results\n\
@@ -103,11 +105,13 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 
 fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("dntt decompose", "run the distributed nTT/nHT on a tensor")
-        .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video")
+        .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video|file")
         .opt("decomp", "tt", "decomposition: tt (tensor train) | ht (hierarchical Tucker)")
         .opt("dims", "16,16,16,16", "tensor dims (synthetic|sparse)")
         .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
         .opt("density", "0.01", "nonzero fraction in (0,1] (sparse input)")
+        .opt("file", "", "dntt-chunks-v1 chunk-set directory (--input file; see `dntt datagen`)")
+        .opt("budget-mb", "0", "chunk-store memory budget in MiB (0 = unbounded; streams reshapes and maps chunks)")
         .opt("grid", "1x1x1x1", "processor grid, e.g. 2x2x2x2")
         .opt("eps", "0.01", "per-stage rank-selection threshold")
         .opt("ranks", "", "fixed ranks (skip SVD): d-1 for tt, 2(d-1) for ht")
@@ -116,6 +120,7 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         .opt("backend", "native", "compute backend: native|pjrt")
         .opt("artifacts", "artifacts", "artifact dir for --backend pjrt")
         .opt("spill", "", "spill chunks to this directory (out-of-core)")
+        .flag("mmap", "with --spill: mmap chunks on read instead of buffered loads")
         .opt("checkpoint-dir", "", "write dntt-ckpt-v1 snapshots into this directory")
         .opt("ckpt-stages", "1", "snapshot after every N completed stages (0 = off)")
         .opt("ckpt-iters", "0", "in-flight W/H snapshot every N NMF iterations (0 = off)")
@@ -158,6 +163,13 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
         }
         "faces" => InputSpec::Faces(FaceConfig::default()),
         "video" => InputSpec::Video(dntt::data::VideoConfig::default()),
+        "file" => {
+            if a.get("file").is_empty() {
+                return Err("--input file needs --file <chunk-set dir>".into());
+            }
+            InputSpec::from_chunks(std::path::Path::new(a.get("file")))
+                .map_err(|e| e.to_string())?
+        }
         other => return Err(format!("unknown input '{other}'")),
     };
     // --smoke: the fixed CI perf-smoke workload — small enough to finish
@@ -212,9 +224,20 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
             other => return Err(format!("unknown backend '{other}'")),
         },
         spill: if a.get("spill").is_empty() {
+            if a.flag("mmap") {
+                return Err("--mmap needs --spill <dir> (or just --budget-mb, which \
+                            picks a temp spill dir itself)"
+                    .into());
+            }
             SpillMode::Memory
+        } else if a.flag("mmap") {
+            SpillMode::Mmap(PathBuf::from(a.get("spill")))
         } else {
             SpillMode::Disk(PathBuf::from(a.get("spill")))
+        },
+        budget: {
+            let mb = a.usize("budget-mb")? as u64;
+            (mb > 0).then(|| mb << 20)
         },
         check_error: !a.flag("no-check"),
         checkpoint: if a.get("checkpoint-dir").is_empty() {
@@ -329,15 +352,83 @@ fn cmd_decompose(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_datagen(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "dntt datagen",
+        "write a synthetic tensor to disk as a dntt-chunks-v1 chunk set",
+    )
+    .opt("out", "chunks", "output chunk-set directory (must not already hold a manifest)")
+    .opt("input", "synthetic", "generator: synthetic|sparse")
+    .opt("dims", "16,16,16,16", "tensor dims")
+    .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
+    .opt("density", "0.01", "nonzero fraction in (0,1] (sparse)")
+    .opt("grid", "1x1x1x1", "chunk grid — must equal the consuming job's processor grid")
+    .opt("seed", "42", "random seed")
+    .flag("json", "emit the chunk-set summary as JSON");
+    let a = spec.parse(argv)?;
+    let dims = a.usize_list("dims")?;
+    let grid = parse_grid(a.get("grid"), dims.len())?;
+    let dir = PathBuf::from(a.get("out"));
+    let cs = match a.get("input") {
+        "synthetic" => {
+            let ranks = a.usize_list("true-ranks")?;
+            if ranks.len() + 1 != dims.len() {
+                return Err("--true-ranks must have dims-1 entries".into());
+            }
+            SyntheticTt::new(dims, ranks, a.usize("seed")? as u64).write_chunks(&dir, &grid)
+        }
+        "sparse" => {
+            let density = a.f64("density")?;
+            if !(density > 0.0 && density <= 1.0) {
+                return Err(format!("--density must be in (0, 1], got {density}"));
+            }
+            SyntheticSparse::new(dims, density, a.usize("seed")? as u64)
+                .write_chunks(&dir, &grid)
+        }
+        other => return Err(format!("unknown generator '{other}' (synthetic|sparse)")),
+    }
+    .map_err(|e| e.to_string())?;
+    if a.flag("json") {
+        use dntt::util::json::Json;
+        let j = Json::obj(vec![
+            ("dir", Json::Str(dir.to_string_lossy().into_owned())),
+            ("format", Json::Str("dntt-chunks-v1".into())),
+            ("dims", Json::arr_usize(cs.dims())),
+            ("grid", Json::arr_usize(cs.grid())),
+            ("chunks", Json::Num(cs.num_chunks() as f64)),
+            ("total_bytes", Json::Num(cs.total_bytes() as f64)),
+            ("identity", Json::Str(format!("{:016x}", cs.identity()))),
+        ]);
+        println!("{}", j.to_pretty());
+    } else {
+        println!(
+            "wrote {} chunk(s) to {dir:?}: dims {:?}, grid {:?}, {:.1} MiB, identity {:016x}",
+            cs.num_chunks(),
+            cs.dims(),
+            cs.grid(),
+            cs.total_bytes() as f64 / (1u64 << 20) as f64,
+            cs.identity()
+        );
+        println!(
+            "decompose it with: dntt decompose --input file --file {} --grid {} --budget-mb <N>",
+            dir.display(),
+            a.get("grid")
+        );
+    }
+    Ok(())
+}
+
 fn cmd_submit(argv: &[String]) -> Result<(), String> {
     use dntt::coordinator::{JobSpec, Spool};
     let spec_args = ArgSpec::new("dntt submit", "queue a decomposition job in the on-disk spool")
         .opt("spool", "spool", "spool directory (shared with `dntt serve`)")
-        .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video")
+        .opt("input", "synthetic", "input kind: synthetic|sparse|faces|video|file")
         .opt("decomp", "tt", "decomposition: tt (tensor train) | ht (hierarchical Tucker)")
         .opt("dims", "16,16,16,16", "tensor dims (synthetic|sparse)")
         .opt("true-ranks", "4,4,4", "generator TT ranks (synthetic)")
         .opt("density", "0.01", "nonzero fraction in (0,1] (sparse input)")
+        .opt("file", "", "dntt-chunks-v1 chunk-set directory (--input file)")
+        .opt("budget-mb", "0", "chunk-store memory budget in MiB (0 = unbounded)")
         .opt("grid", "1x1x1x1", "processor grid, e.g. 2x2x1x1")
         .opt("eps", "0.01", "per-stage rank-selection threshold")
         .opt("ranks", "", "fixed ranks (skip SVD): d-1 for tt, 2(d-1) for ht")
@@ -358,7 +449,18 @@ fn cmd_submit(argv: &[String]) -> Result<(), String> {
     let mut spec = if a.flag("smoke") {
         JobSpec::smoke(a.usize("seed")? as u64)
     } else {
-        let dims = a.usize_list("dims")?;
+        // For file inputs the chunk-set manifest is the source of truth for
+        // dims; the CLI --dims default would otherwise mis-size --grid.
+        let dims = if a.get("input") == "file" {
+            if a.get("file").is_empty() {
+                return Err("--input file needs --file <chunk-set dir>".into());
+            }
+            dntt::coordinator::InputSpec::from_chunks(std::path::Path::new(a.get("file")))
+                .map_err(|e| e.to_string())?
+                .dims()
+        } else {
+            a.usize_list("dims")?
+        };
         let d = dims.len();
         JobSpec {
             input: a.get("input").into(),
@@ -384,6 +486,8 @@ fn cmd_submit(argv: &[String]) -> Result<(), String> {
     spec.check_error = !a.flag("no-check");
     spec.kernel = a.get("kernel").into();
     spec.threads_per_rank = a.usize("threads-per-rank")?.max(1);
+    spec.file = (!a.get("file").is_empty()).then(|| PathBuf::from(a.get("file")));
+    spec.budget_mb = a.usize("budget-mb")? as u64;
     // Validate now (bad specs should fail at the submitter's terminal,
     // not inside the server) and surface the cache key.
     let job = spec.to_config().map_err(|e| e.to_string())?;

@@ -376,7 +376,10 @@ pub fn dist_nmf_sparse_ws(
 /// Per-chunk dispatch entry: run on whichever representation the reshape
 /// produced (see [`crate::dist::dist_reshape_x`]). This is what the TT
 /// and HT drivers call, so a sparse stage matrix flows through the same
-/// code path as a dense one.
+/// code path as a dense one. The stage matrix is caller-owned and fully
+/// resident by the time it lands here — budgeted out-of-core execution
+/// bounds the *reshape's* working set (DESIGN.md §2.12), not the NMF's,
+/// so the factorization itself is byte-for-byte budget-oblivious.
 #[allow(clippy::too_many_arguments)]
 pub fn dist_nmf_x_ws(
     x: &DenseOrSparse,

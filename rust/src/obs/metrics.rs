@@ -90,10 +90,17 @@ pub enum Ctr {
     FlopsAvx512,
     /// Flops executed on the NEON kernel path.
     FlopsNeon,
+    /// Bytes served out of mmap-backed view chunks (out-of-core mode;
+    /// counts the logical read like `StoreReadBytes`, but the pages are
+    /// kernel-cached rather than heap-resident).
+    StoreMmapBytes,
+    /// Budgeted reshape batches executed by `dist_reshape_x` (1 per call
+    /// when no memory budget is set; > calls means batching engaged).
+    ReshapeBatches,
 }
 
 /// Number of counter slots (length of the per-rank array).
-pub const NUM_CTRS: usize = Ctr::FlopsNeon as usize + 1;
+pub const NUM_CTRS: usize = Ctr::ReshapeBatches as usize + 1;
 
 /// Every counter, in array-layout order.
 pub const ALL_CTRS: [Ctr; NUM_CTRS] = [
@@ -126,6 +133,8 @@ pub const ALL_CTRS: [Ctr; NUM_CTRS] = [
     Ctr::FlopsAvx2,
     Ctr::FlopsAvx512,
     Ctr::FlopsNeon,
+    Ctr::StoreMmapBytes,
+    Ctr::ReshapeBatches,
 ];
 
 impl Ctr {
@@ -161,6 +170,8 @@ impl Ctr {
             Ctr::FlopsAvx2 => "flops_avx2",
             Ctr::FlopsAvx512 => "flops_avx512",
             Ctr::FlopsNeon => "flops_neon",
+            Ctr::StoreMmapBytes => "store_mmap_bytes",
+            Ctr::ReshapeBatches => "reshape_batches",
         }
     }
 

@@ -11,10 +11,16 @@
 //!     ckpt/           # dntt-ckpt-v1 snapshots while the job is in flight
 //! ```
 //!
-//! Both files are written atomically (tmp + rename), and `meta.json` is
-//! written only after the artifact rename succeeds, so the presence of a
-//! parseable `meta.json` *is* the commit point: [`ResultCache::lookup`]
-//! treats an entry without it (a crashed or in-flight job) as a miss.
+//! Both files are written atomically (tmp + rename + fsync, reusing the
+//! checkpoint durability helpers), and `meta.json` is written only after
+//! the artifact rename succeeds, so the presence of a parseable
+//! `meta.json` *is* the commit point: [`ResultCache::lookup`] treats an
+//! entry without it (a crashed or in-flight job) as a miss. Re-commits
+//! retract the old `meta.json` *before* touching the artifact — a crash
+//! between the new artifact landing and the new meta landing is a pure
+//! miss, never a stale-meta/new-artifact pairing — and `meta.json`
+//! records `artifact_bytes`, which `lookup` checks against the file so a
+//! torn artifact can never be served.
 //! An interrupted job leaves its `ckpt/` directory behind, which is how a
 //! resubmitted identical config resumes instead of starting over (the
 //! server points the job's [`CheckpointPolicy`](crate::dist::CheckpointPolicy)
@@ -24,6 +30,7 @@
 //! knobs deliberately *excluded* because they are output-neutral — are
 //! documented on `JobConfig::fingerprint` and in `DESIGN.md` §2.11.
 
+use crate::dist::checkpoint::{sync_dir, write_bytes_durable};
 use crate::error::{DnttError, Result};
 use crate::tensor::io::{load_artifact, save_artifact, Artifact};
 use crate::util::json::Json;
@@ -89,34 +96,53 @@ impl ResultCache {
 
     /// A committed entry for `fp`, if one exists. Entries whose
     /// `meta.json` is missing or unparseable (in-flight or torn) are
-    /// misses, never errors.
+    /// misses, never errors, and an artifact whose size disagrees with
+    /// the meta's `artifact_bytes` stamp (a tear the commit ordering
+    /// can't rule out for media-level truncation) is a miss too.
     pub fn lookup(&self, fp: u64) -> Option<CacheEntry> {
         let artifact = self.artifact_path(fp);
         let meta_path = self.meta_path(fp);
-        if !artifact.is_file() {
-            return None;
-        }
+        let art_len = fs::metadata(&artifact).ok()?.len();
         let meta = fs::read_to_string(&meta_path).ok()?;
         let meta = Json::parse(&meta).ok()?;
         if meta.get("format").as_str() != Some(CACHE_META_FORMAT) {
             return None;
+        }
+        match meta.get("artifact_bytes").as_usize() {
+            Some(want) if want as u64 != art_len => return None,
+            // Pre-stamp entries carry no size; keep serving them.
+            _ => {}
         }
         Some(CacheEntry { fingerprint: fp, dir: self.entry_dir(fp), artifact, meta })
     }
 
     /// Commit a finished decomposition under `fp`.
     ///
-    /// `meta` is the caller's descriptor object; the `format` and
-    /// `fingerprint` fields are stamped here. The artifact is renamed
-    /// into place first, `meta.json` second — a crash in between leaves a
-    /// harmless uncommitted entry that the next run overwrites.
+    /// `meta` is the caller's descriptor object; the `format`,
+    /// `fingerprint` and `artifact_bytes` fields are stamped here.
+    /// Commit protocol (crash-safe at every boundary):
+    ///
+    /// 1. retract any existing `meta.json` (re-puts decommit first, so a
+    ///    later crash can never pair stale meta with the new artifact);
+    /// 2. write + fsync the artifact to a tmp name, rename into place;
+    /// 3. write + fsync `meta.json` the same way — the commit point;
+    /// 4. fsync the entry directory so the renames are durable.
     pub fn put(&self, fp: u64, artifact: &Artifact, meta: Json) -> Result<CacheEntry> {
         let dir = self.entry_dir(fp);
         fs::create_dir_all(&dir)?;
+        let meta_path = self.meta_path(fp);
+        if meta_path.exists() {
+            fs::remove_file(&meta_path)?;
+            sync_dir(&dir);
+        }
         let art_path = self.artifact_path(fp);
         let art_tmp = dir.join("artifact.dntt.tmp");
         save_artifact(artifact, &art_tmp)?;
+        if let Ok(f) = fs::File::open(&art_tmp) {
+            f.sync_all()?;
+        }
         fs::rename(&art_tmp, &art_path)?;
+        let art_bytes = fs::metadata(&art_path)?.len();
         let mut fields = match meta {
             Json::Obj(m) => m,
             other => {
@@ -129,11 +155,12 @@ impl ResultCache {
         };
         fields.insert("format".to_string(), Json::Str(CACHE_META_FORMAT.into()));
         fields.insert("fingerprint".to_string(), Json::Str(format!("{fp:016x}")));
+        fields.insert("artifact_bytes".to_string(), Json::Num(art_bytes as f64));
         let meta = Json::Obj(fields);
-        let meta_path = self.meta_path(fp);
         let meta_tmp = dir.join("meta.json.tmp");
-        fs::write(&meta_tmp, meta.to_pretty())?;
+        write_bytes_durable(&meta_tmp, meta.to_pretty().as_bytes())?;
         fs::rename(&meta_tmp, &meta_path)?;
+        sync_dir(&dir);
         Ok(CacheEntry { fingerprint: fp, dir, artifact: art_path, meta })
     }
 
@@ -230,6 +257,32 @@ mod tests {
         // Committing over the torn entry repairs it.
         cache.put(fp, &tiny_artifact(1), Json::obj(vec![])).unwrap();
         assert!(cache.lookup(fp).is_some());
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn torn_commits_are_pure_misses() {
+        let cache = temp_cache("torn");
+        let fp = 0x51u64;
+        let committed = cache.put(fp, &tiny_artifact(1), Json::obj(vec![])).unwrap();
+        assert!(committed.meta.get("artifact_bytes").as_usize().is_some());
+        // Crash mid-re-put: the retract step removed meta.json and the
+        // new artifact landed, but the new meta never did.
+        fs::remove_file(cache.meta_path(fp)).unwrap();
+        save_artifact(&tiny_artifact(2), &cache.artifact_path(fp)).unwrap();
+        assert!(cache.lookup(fp).is_none(), "no meta means not committed");
+        assert!(cache.load(fp).is_err());
+        assert!(cache.entries().is_empty(), "orphan dirs are ignored in listings");
+        // Re-putting repairs the entry.
+        cache.put(fp, &tiny_artifact(2), Json::obj(vec![])).unwrap();
+        assert_eq!(cache.entries().len(), 1);
+        // Media-level tear: meta committed but the artifact truncated on
+        // disk afterwards — the artifact_bytes stamp catches it.
+        let art = cache.artifact_path(fp);
+        let bytes = fs::read(&art).unwrap();
+        fs::write(&art, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(cache.lookup(fp).is_none(), "size mismatch must not serve");
+        assert!(cache.entries().is_empty());
         let _ = fs::remove_dir_all(cache.dir());
     }
 

@@ -41,7 +41,10 @@ fn artifact_err(msg: impl Into<String>) -> DnttError {
 }
 
 /// Simple CRC-32 (IEEE, bitwise) — enough to catch truncation/corruption.
-fn crc32(data: &[u8]) -> u32 {
+/// Shared with the `dntt-chunks-v1` ingest manifest
+/// ([`crate::tensor::chunked`]), which stamps the same checksum per
+/// chunk file.
+pub(crate) fn crc32(data: &[u8]) -> u32 {
     let mut crc: u32 = 0xFFFF_FFFF;
     for &b in data {
         crc ^= b as u32;
@@ -51,6 +54,29 @@ fn crc32(data: &[u8]) -> u32 {
         }
     }
     !crc
+}
+
+/// Encode f64s as the dense spill/chunk byte format: raw little-endian,
+/// in order. One codec shared by the chunk store's spill files, the
+/// checkpoint block files, and `dntt-chunks-v1` ingest chunks — byte
+/// compatibility between the three is what lets spilled chunks be
+/// adopted and snapshotted without translation.
+pub(crate) fn f64s_to_le_bytes(data: &[f64]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 8);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+/// Decode the dense spill/chunk byte format. Trailing partial records
+/// are ignored by construction (`chunks_exact`); callers validate the
+/// total size against the expected element count.
+pub(crate) fn le_bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect()
 }
 
 struct Writer {

@@ -1,8 +1,11 @@
 //! Tensor containers: dense N-d tensors, sparse COO tensors with chunked
 //! views ([`sparse`]), the tensor-train format (the paper's output
 //! representation), the hierarchical Tucker format (the second pyDNTNK
-//! network, produced by `crate::ht`) and the Tucker format (baselines).
+//! network, produced by `crate::ht`), the Tucker format (baselines),
+//! and the on-disk chunked ingest format `dntt-chunks-v1` ([`chunked`])
+//! for tensors too large to materialize.
 
+pub mod chunked;
 pub mod dense;
 pub mod ht;
 pub mod tt;
@@ -10,6 +13,7 @@ pub mod io;
 pub mod sparse;
 pub mod tucker;
 
+pub use chunked::{ChunkKind, ChunkSet, ChunkWriter, CHUNKS_FORMAT};
 pub use dense::DenseTensor;
 pub use ht::{DimTree, HtNode, HtTensor};
 pub use sparse::{SparseChunk, SparseTensor};

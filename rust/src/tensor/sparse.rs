@@ -173,6 +173,49 @@ impl SparseChunk {
     pub fn into_parts(self) -> (usize, Vec<usize>, Vec<f64>) {
         (self.len, self.idx, self.vals)
     }
+
+    /// Encode as the sparse spill record
+    /// `[nnz: u64 | idx: u64 × nnz | vals: f64 × nnz]` (little-endian) —
+    /// the one byte format shared by chunk-store spill files, checkpoint
+    /// block files, and `dntt-chunks-v1` ingest chunks.
+    pub fn to_spill_bytes(&self) -> Vec<u8> {
+        let nnz = self.nnz();
+        let mut bytes = Vec::with_capacity(8 * (1 + 2 * nnz));
+        bytes.extend_from_slice(&(nnz as u64).to_le_bytes());
+        for &i in &self.idx {
+            bytes.extend_from_slice(&(i as u64).to_le_bytes());
+        }
+        for &v in &self.vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes
+    }
+
+    /// Decode a [`SparseChunk::to_spill_bytes`] record for a chunk of
+    /// `len` logical elements, re-validating the invariants (sorted,
+    /// in-range, duplicate-free indices) so a corrupt file surfaces as
+    /// an error instead of silently wrong data.
+    pub fn from_spill_bytes(len: usize, bytes: &[u8]) -> Result<SparseChunk> {
+        if bytes.len() < 8 {
+            return Err(DnttError::Artifact("sparse record shorter than its header".into()));
+        }
+        let nnz = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        if bytes.len() != 8 * (1 + 2 * nnz) {
+            return Err(DnttError::Artifact(format!(
+                "sparse record of {} bytes disagrees with nnz {nnz}",
+                bytes.len()
+            )));
+        }
+        let mut idx = Vec::with_capacity(nnz);
+        for b in bytes[8..8 * (1 + nnz)].chunks_exact(8) {
+            idx.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+        }
+        let mut vals = Vec::with_capacity(nnz);
+        for b in bytes[8 * (1 + nnz)..].chunks_exact(8) {
+            vals.push(f64::from_le_bytes(b.try_into().unwrap()));
+        }
+        SparseChunk::new(len, idx, vals)
+    }
 }
 
 /// An N-d sparse tensor in COO form, sorted by global row-major linear
@@ -377,6 +420,23 @@ mod tests {
         c.scatter_range(2, &mut dst);
         assert_eq!(dst, [0.0, 2.0, 3.0]);
         assert_eq!(c.fro_norm_sq(), 1.0 + 4.0 + 9.0);
+    }
+
+    #[test]
+    fn spill_record_roundtrips_and_validates() {
+        let c = SparseChunk::new(6, vec![1, 3, 5], vec![1.5, -2.0, 4.0]).unwrap();
+        let bytes = c.to_spill_bytes();
+        assert_eq!(bytes.len(), 8 * 7);
+        let back = SparseChunk::from_spill_bytes(6, &bytes).unwrap();
+        assert_eq!(back, c);
+        // Empty chunk: just the header.
+        let e = SparseChunk::empty(4);
+        assert_eq!(e.to_spill_bytes().len(), 8);
+        assert_eq!(SparseChunk::from_spill_bytes(4, &e.to_spill_bytes()).unwrap(), e);
+        // Corruption is detected: truncated, size/nnz mismatch, bad index.
+        assert!(SparseChunk::from_spill_bytes(6, &bytes[..bytes.len() - 8]).is_err());
+        assert!(SparseChunk::from_spill_bytes(6, &bytes[..4]).is_err());
+        assert!(SparseChunk::from_spill_bytes(4, &bytes).is_err()); // idx 5 out of range
     }
 
     #[test]

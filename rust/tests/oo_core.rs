@@ -1,0 +1,194 @@
+//! Out-of-core integration suite: a dense input **larger than the
+//! memory budget** must decompose successfully with the chunk-store's
+//! peak-resident gauge under the budget, and every out-of-core path —
+//! streamed Alg-1 reshapes, mmap-backed chunk reads, chunk-set file
+//! ingest — must be **bitwise identical** to the all-resident reference
+//! (DESIGN.md §2.12). Also: checkpoint/resume composes with
+//! mmap-backed, budget-streamed jobs.
+
+mod common;
+
+use common::{
+    assert_cores_bitwise, assert_ht_nodes_bitwise, ht_cfg_fixed, tt_cfg_fixed, unique_temp_dir,
+};
+use dntt::coordinator::{run_job, Decomposition, InputSpec, JobConfig, ResumeMode};
+use dntt::dist::checkpoint::CheckpointPolicy;
+use dntt::dist::chunkstore::{dist_reshape, Layout, SharedStore, SpillMode};
+use dntt::dist::{Comm, ProcGrid};
+use dntt::tensor::DenseTensor;
+use dntt::ttrain::driver::extract_block;
+use dntt::ttrain::SyntheticTt;
+use dntt::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// 48·32·32·16 = 786 432 elements = 6 MiB of dense f64 — deliberately
+/// larger than [`BUDGET`] so an all-resident run could not fit.
+const DIMS: [usize; 4] = [48, 32, 32, 16];
+/// The tiny out-of-core budget (4 MiB < the 6 MiB input).
+const BUDGET: u64 = 4 << 20;
+
+fn oo_grid() -> ProcGrid {
+    ProcGrid::new(vec![2, 2, 1, 1]).unwrap()
+}
+
+/// Write the synthetic ground-truth tensor to disk as a dntt-chunks-v1
+/// set (one chunk per rank of [`oo_grid`]) and return the directory.
+fn chunk_set(tag: &str) -> PathBuf {
+    let dir = unique_temp_dir(tag);
+    let truth = SyntheticTt::new(DIMS.to_vec(), vec![4, 4, 4], 7);
+    let cs = truth.write_chunks(&dir, &oo_grid()).unwrap();
+    assert_eq!(cs.total_bytes(), (DIMS.iter().product::<usize>() * 8) as u64);
+    dir
+}
+
+/// A fixed-rank TT job fed from an on-disk chunk set. `budget: None`
+/// is the all-resident reference; `Some(b)` streams reshapes and
+/// auto-upgrades the store to mmap-backed spill.
+fn file_tt_job(dir: &Path, budget: Option<u64>) -> JobConfig {
+    JobConfig {
+        tt: tt_cfg_fixed(3, vec![2, 2, 2]),
+        budget,
+        check_error: false,
+        ..JobConfig::new(InputSpec::from_chunks(dir).unwrap(), oo_grid())
+    }
+}
+
+fn file_ht_job(dir: &Path, budget: Option<u64>) -> JobConfig {
+    JobConfig {
+        decomp: Decomposition::Ht,
+        ht: ht_cfg_fixed(3, vec![2; 6]),
+        budget,
+        check_error: false,
+        ..JobConfig::new(InputSpec::from_chunks(dir).unwrap(), oo_grid())
+    }
+}
+
+/// The acceptance gate of the out-of-core milestone: a dense input
+/// larger than the budget completes, the report carries the
+/// peak-resident gauge, and the peak stayed under the budget (the
+/// store was auto-upgraded to mmap-backed spill, so published chunks
+/// page in on demand instead of pinning heap).
+#[test]
+fn budgeted_job_larger_than_budget_stays_under_budget() {
+    let dir = chunk_set("oo_budget");
+    let rep = run_job(&file_tt_job(&dir, Some(BUDGET))).unwrap();
+    assert_eq!(rep.budget_bytes, Some(BUDGET));
+    let peak = rep.peak_resident_bytes.expect("budgeted run must report its peak");
+    assert!(peak > 0, "gauge never moved — nothing was accounted");
+    assert!(
+        peak <= BUDGET,
+        "peak resident {peak} B exceeded the {BUDGET} B budget on a {} B input",
+        DIMS.iter().product::<usize>() * 8
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Streamed ≡ resident, TT: the budgeted, mmap-backed, batch-streamed
+/// run must reproduce the unbudgeted all-resident run bit for bit —
+/// out-of-core is an execution strategy, never a numerics change. The
+/// fingerprint ignores the budget for exactly this reason.
+#[test]
+fn streamed_tt_is_bitwise_identical_to_resident() {
+    let dir = chunk_set("oo_tt_eq");
+    let resident_job = file_tt_job(&dir, None);
+    let streamed_job = file_tt_job(&dir, Some(BUDGET));
+    assert_eq!(
+        resident_job.fingerprint(),
+        streamed_job.fingerprint(),
+        "budget must be excluded from the job fingerprint"
+    );
+    let resident = run_job(&resident_job).unwrap();
+    let streamed = run_job(&streamed_job).unwrap();
+    assert_cores_bitwise(
+        resident.output.tt().unwrap(),
+        streamed.output.tt().unwrap(),
+        "streamed vs resident TT",
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Streamed ≡ resident, HT: same proof through the hierarchical-Tucker
+/// driver (its reshapes ride the same budgeted `dist_reshape_x` path).
+#[test]
+fn streamed_ht_is_bitwise_identical_to_resident() {
+    let dir = chunk_set("oo_ht_eq");
+    let resident = run_job(&file_ht_job(&dir, None)).unwrap();
+    let streamed = run_job(&file_ht_job(&dir, Some(BUDGET))).unwrap();
+    assert_ht_nodes_bitwise(
+        resident.output.ht().unwrap(),
+        streamed.output.ht().unwrap(),
+        "streamed vs resident HT",
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The mmap read path itself: one distReshape through an
+/// `SpillMode::Mmap` store must hand every rank the same bits as the
+/// all-in-memory store. (Mapped reads are zero-copy *and* zero-cost on
+/// the resident gauge — the data had better be identical.)
+#[test]
+fn mmap_reshape_matches_memory_reshape_bitwise() {
+    let mut rng = Rng::new(23);
+    let dims = vec![6, 4, 4, 2];
+    let t = DenseTensor::<f64>::rand_uniform(&dims, &mut rng);
+    let grid = ProcGrid::new(vec![2, 2, 1, 1]).unwrap();
+    let g2 = grid.to_2d();
+    let (m, n) = (6, 32);
+
+    let run = |spill: SpillMode| {
+        let store = SharedStore::new(spill);
+        let stats = std::sync::Arc::clone(store.stats());
+        let (t, grid, dims) = (t.clone(), grid.clone(), dims.clone());
+        let blocks = Comm::run(4, move |mut world| {
+            let my = extract_block(&t, &grid, world.rank());
+            let layout = Layout::TensorGrid { dims: dims.clone(), grid: grid.dims().to_vec() };
+            dist_reshape(&mut world, &store, "x", &layout, my, m, n, g2).unwrap()
+        });
+        (blocks, stats)
+    };
+
+    let (mem_blocks, _) = run(SpillMode::Memory);
+    let dir = unique_temp_dir("oo_mmap");
+    let (map_blocks, map_stats) = run(SpillMode::Mmap(dir.clone()));
+    for (rank, (a, b)) in mem_blocks.iter().zip(&map_blocks).enumerate() {
+        assert_eq!(
+            a.as_slice(),
+            b.as_slice(),
+            "rank {rank}: mmap-backed reshape must be bitwise identical"
+        );
+    }
+    // Mapped publishes spill to disk: the mmap store's resident peak is
+    // strictly below the in-memory footprint of the published chunks.
+    let dense_bytes = (dims.iter().product::<usize>() * 8) as u64;
+    assert!(
+        map_stats.peak_resident_bytes() < dense_bytes,
+        "mmap store pinned {} B resident for a {} B tensor — nothing was spilled",
+        map_stats.peak_resident_bytes(),
+        dense_bytes
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoint/resume composes with out-of-core: a budgeted mmap-backed
+/// job snapshots stages like any other, and `--resume auto` replays it
+/// to the same bits. (The snapshot codec reads adopted chunk files
+/// through the same spill byte format the store writes.)
+#[test]
+fn checkpoint_resume_replays_budgeted_file_job_bitwise() {
+    let dir = chunk_set("oo_ckpt");
+    let ckpt = unique_temp_dir("oo_ckpt_snap");
+    let job = |resume| JobConfig {
+        checkpoint: Some(CheckpointPolicy::new(ckpt.clone())),
+        resume,
+        ..file_tt_job(&dir, Some(BUDGET))
+    };
+    let first = run_job(&job(ResumeMode::Off)).unwrap();
+    let replay = run_job(&job(ResumeMode::Auto)).unwrap();
+    assert_cores_bitwise(
+        first.output.tt().unwrap(),
+        replay.output.tt().unwrap(),
+        "resumed budgeted file job",
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
